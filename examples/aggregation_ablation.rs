@@ -1,0 +1,66 @@
+//! ABL-3: how the aggregation rule interacts with staleness.
+//!
+//! Fixes the scenario (K = 15, T = 15 s, ETA allocation so staleness is
+//! *present*) and trains with each aggregation rule: FedAvg (the paper),
+//! uniform, τ-weighted (gradient-count) and inverse-staleness [10].
+//!
+//! ```bash
+//! make artifacts
+//! cargo run --release --example aggregation_ablation -- [samples] [cycles]
+//! ```
+
+use asyncmel::aggregation::AggregationRule;
+use asyncmel::allocation::AllocatorKind;
+use asyncmel::config::ScenarioConfig;
+use asyncmel::coordinator::{Orchestrator, TrainOptions};
+use asyncmel::data::{synth, SynthConfig};
+use asyncmel::metrics::{fmt_f, Table};
+use asyncmel::runtime::{default_artifacts_dir, Runtime};
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let samples: usize = args.first().and_then(|s| s.parse().ok()).unwrap_or(12_000);
+    let cycles: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(8);
+
+    let runtime = Runtime::load(default_artifacts_dir())?;
+    let ds = synth::generate(&SynthConfig {
+        train: samples,
+        test: (samples / 6).max(512),
+        ..SynthConfig::default()
+    });
+
+    println!("ETA allocation (staleness present), K=15, T=15s, d={samples}\n");
+    let mut table = Table::new(&["aggregation", "cycle", "accuracy", "val_loss", "max_stale"]);
+    for rule in AggregationRule::all() {
+        let scenario = ScenarioConfig::paper_default()
+            .with_learners(15)
+            .with_cycle(15.0)
+            .with_total_samples(samples as u64)
+            .build();
+        let mut orch = Orchestrator::new(
+            scenario,
+            AllocatorKind::Eta,
+            rule,
+            &runtime,
+            ds.train.clone(),
+            ds.test.clone(),
+        )?;
+        let records = orch.run(&TrainOptions {
+            cycles,
+            lr: 0.02,
+            eval_every: 1,
+            reallocate_each_cycle: false,
+        })?;
+        for r in &records {
+            table.row(&[
+                rule.name().into(),
+                (r.cycle + 1).to_string(),
+                fmt_f(r.accuracy, 4),
+                fmt_f(r.val_loss, 4),
+                r.max_staleness.to_string(),
+            ]);
+        }
+    }
+    println!("{}", table.render());
+    Ok(())
+}

@@ -1,0 +1,111 @@
+//! Scenario example: **time-varying channels + faults** — what the
+//! orchestrator must handle beyond the paper's static snapshot.
+//!
+//! Evolves the shadowing as a Gauss–Markov block-fading process across
+//! global cycles and compares three orchestrator policies on allocation
+//! quality (no training needed — this is the pure L3 control plane):
+//!
+//!   * `static`  — solve once on cycle 0, never re-solve (stale costs);
+//!   * `resolve` — re-solve the SAI allocation every cycle;
+//!   * `eta`     — equal split every cycle (channel-oblivious anyway).
+//!
+//! Reports per-cycle max staleness and deadline violations of the
+//! *stale* allocation evaluated against the true (faded) channel, plus
+//! the energy audit of the final cycle.
+//!
+//! ```bash
+//! cargo run --release --example fading_reallocation -- [cycles] [rho]
+//! ```
+
+use asyncmel::allocation::{make_allocator, AllocatorKind};
+use asyncmel::channel::fading::FadingProcess;
+use asyncmel::config::ScenarioConfig;
+use asyncmel::costmodel::LearnerCost;
+use asyncmel::energy::{audit, summarize, EnergyParams};
+use asyncmel::metrics::{fmt_f, Table};
+use asyncmel::sim::Rng;
+
+fn deadline_misses(costs: &[LearnerCost], alloc: &asyncmel::allocation::Allocation, t: f64) -> usize {
+    alloc
+        .times(costs)
+        .iter()
+        .filter(|&&ti| ti > t * (1.0 + 1e-9))
+        .count()
+}
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let cycles: usize = args.first().and_then(|s| s.parse().ok()).unwrap_or(20);
+    let rho: f64 = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(0.9);
+
+    let cfg = ScenarioConfig::paper_default().with_learners(20).with_cycle(7.5);
+    let scenario = cfg.build();
+    let t = scenario.t_cycle();
+    let d = scenario.total_samples();
+    let sai = make_allocator(AllocatorKind::Sai);
+    let eta = make_allocator(AllocatorKind::Eta);
+
+    let mut fading = FadingProcess::new(
+        scenario.config.channel,
+        &scenario.links,
+        rho,
+        Rng::new(777),
+    );
+
+    // the static policy's allocation, solved on the cycle-0 channel
+    let static_alloc = sai.allocate(&scenario.costs, t, d, &scenario.bounds)?;
+
+    println!("K=20, T={t}s, shadowing coherence rho={rho}\n");
+    let mut table = Table::new(&[
+        "cycle", "static_stale", "static_misses", "resolve_stale", "resolve_ms", "eta_stale",
+    ]);
+    let mut last_costs = scenario.costs.clone();
+    for cycle in 0..cycles {
+        let costs = fading.step_costs(
+            &scenario.devices,
+            &scenario.config.task,
+            scenario.config.data_scenario,
+        );
+        // static policy: yesterday's allocation on today's channel
+        let misses = deadline_misses(&costs, &static_alloc, t);
+        // the static τ plan's staleness doesn't change, but its *times* do;
+        // re-derive what each node can actually do with the stale batching
+        let actual_tau: Vec<u64> = costs
+            .iter()
+            .zip(&static_alloc.d)
+            .map(|(c, &dk)| c.tau_max_int(dk, t).unwrap_or(0))
+            .collect();
+        let static_stale = actual_tau.iter().max().unwrap() - actual_tau.iter().min().unwrap();
+
+        // re-solving policy
+        let t0 = std::time::Instant::now();
+        let fresh = sai.allocate(&costs, t, d, &scenario.bounds)?;
+        let solve_ms = t0.elapsed().as_secs_f64() * 1e3;
+        let eta_alloc = eta.allocate(&costs, t, d, &scenario.bounds)?;
+
+        table.row(&[
+            (cycle + 1).to_string(),
+            static_stale.to_string(),
+            misses.to_string(),
+            fresh.max_staleness().to_string(),
+            fmt_f(solve_ms, 3),
+            eta_alloc.max_staleness().to_string(),
+        ]);
+        last_costs = costs;
+    }
+    println!("{}", table.render());
+
+    // energy audit of the final cycle's re-solved allocation
+    let fresh = sai.allocate(&last_costs, t, d, &scenario.bounds)?;
+    let mut s2 = scenario.clone();
+    s2.costs = last_costs;
+    let reports = audit(&s2, &fresh, &EnergyParams::default());
+    let sum = summarize(&reports);
+    println!(
+        "final-cycle energy: total {:.1} J, max-node {:.2} J, Jain fairness {:.3}",
+        sum.total_j, sum.max_j, sum.fairness
+    );
+    println!("\nnote: the re-solving orchestrator holds staleness at the per-cycle");
+    println!("optimum under fading; the static plan accumulates deadline misses.");
+    Ok(())
+}

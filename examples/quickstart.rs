@@ -1,0 +1,81 @@
+//! Quickstart: build the paper's §V-A scenario, solve one global cycle's
+//! task allocation with every scheme, and compare staleness.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+//!
+//! No artifacts needed — this exercises the pure L3 allocation layer.
+
+use asyncmel::allocation::{make_allocator, AllocatorKind};
+use asyncmel::config::ScenarioConfig;
+use asyncmel::metrics::{fmt_f, Table};
+
+fn main() -> anyhow::Result<()> {
+    // The paper's environment: 50 m indoor 802.11 cell, 60k samples,
+    // half laptops / half RPi-class nodes.
+    let config = ScenarioConfig::paper_default()
+        .with_learners(20)
+        .with_cycle(7.5);
+    let scenario = config.build();
+
+    println!(
+        "K = {} learners, T = {} s, d = {} samples, bounds [{}, {}]\n",
+        scenario.k(),
+        scenario.t_cycle(),
+        scenario.total_samples(),
+        scenario.bounds.d_lo,
+        scenario.bounds.d_hi
+    );
+
+    // Per-learner cost coefficients (eq. 5).
+    let mut costs = Table::new(&["learner", "class", "C2 (ms)", "C1 (ms)", "C0 (s)", "rate (Mbps)"]);
+    for (i, (c, (dev, link))) in scenario
+        .costs
+        .iter()
+        .zip(scenario.devices.iter().zip(&scenario.links))
+        .enumerate()
+    {
+        costs.row(&[
+            i.to_string(),
+            format!("{:?}", dev.class),
+            fmt_f(c.c2 * 1e3, 3),
+            fmt_f(c.c1 * 1e3, 4),
+            fmt_f(c.c0, 3),
+            fmt_f(link.rate_bps / 1e6, 1),
+        ]);
+    }
+    println!("{}", costs.render());
+
+    // Solve with every scheme.
+    let mut table = Table::new(&["scheme", "max_staleness", "avg_staleness", "utilization", "solve_ms"]);
+    for kind in AllocatorKind::all() {
+        let alloc = make_allocator(kind);
+        let t0 = std::time::Instant::now();
+        let a = alloc.allocate(
+            &scenario.costs,
+            scenario.t_cycle(),
+            scenario.total_samples(),
+            &scenario.bounds,
+        )?;
+        a.validate(
+            &scenario.costs,
+            scenario.t_cycle(),
+            scenario.total_samples(),
+            &scenario.bounds,
+        )
+        .map_err(|e| anyhow::anyhow!(e))?;
+        table.row(&[
+            kind.name().into(),
+            a.max_staleness().to_string(),
+            fmt_f(a.avg_staleness(), 3),
+            fmt_f(a.mean_utilization(&scenario.costs, scenario.t_cycle()), 3),
+            fmt_f(t0.elapsed().as_secs_f64() * 1e3, 3),
+        ]);
+    }
+    println!("{}", table.render());
+    println!("note: sync has zero staleness by construction but wastes fast-node time;");
+    println!("      eta is fully asynchronous but staleness-blind — the paper's scheme");
+    println!("      (relaxed / sai / exact) gets both: ~full utilization, ~zero staleness.");
+    Ok(())
+}

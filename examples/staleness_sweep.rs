@@ -1,0 +1,43 @@
+//! Reproduce **Fig. 2**: maximum and average staleness vs number of
+//! learners K, for T = 7.5 s and T = 15 s, across schemes.
+//!
+//! ```bash
+//! cargo run --release --example staleness_sweep [-- seeds] [csv_path]
+//! ```
+
+use asyncmel::experiments::fig2;
+use asyncmel::metrics::fmt_f;
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let seeds: usize = args.first().and_then(|s| s.parse().ok()).unwrap_or(5);
+    let csv = args.get(1).cloned();
+
+    let params = fig2::Fig2Params { seeds, ..Default::default() };
+    println!(
+        "Fig. 2 sweep: K in {:?}, T in {:?}, {} seeds per point\n",
+        params.ks, params.t_cycles, seeds
+    );
+    let rows = fig2::run(&params)?;
+    let table = fig2::table(&rows);
+    println!("{}", table.render());
+
+    if let Some((om, em, oa, ea)) = fig2::headline(&rows) {
+        println!("§V-B headline @ K=20, T=7.5s:");
+        println!(
+            "  max staleness: optimized {} vs ETA {}  (paper: 1 vs 4)",
+            fmt_f(om, 2),
+            fmt_f(em, 2)
+        );
+        println!(
+            "  avg staleness: optimized {} vs ETA {}  (paper: 0.5 vs 1.5)",
+            fmt_f(oa, 2),
+            fmt_f(ea, 2)
+        );
+    }
+    if let Some(path) = csv {
+        table.save_csv(&path)?;
+        println!("csv -> {path}");
+    }
+    Ok(())
+}

@@ -1,0 +1,70 @@
+//! **End-to-end driver** (Fig. 3 workload): train the paper's
+//! [784, 300, 124, 60, 10] DNN over K heterogeneous edge learners with
+//! real SGD numerics through the AOT-compiled L2/L1 artifacts, comparing
+//! the proposed asynchronous optimized allocation against the
+//! synchronous [9] and ETA-async [10] baselines.
+//!
+//! ```bash
+//! make artifacts
+//! cargo run --release --example train_e2e                  # default: 60k samples, 12 cycles
+//! cargo run --release --example train_e2e -- 12000 8 10    # samples cycles K
+//! ```
+//!
+//! Prints the accuracy-per-cycle series (the Fig. 3 curves) and the
+//! cycles-to-95%/97% summary (§V-C); the run is recorded in
+//! EXPERIMENTS.md.
+
+use asyncmel::allocation::AllocatorKind;
+use asyncmel::config::ScenarioConfig;
+use asyncmel::data::SynthConfig;
+use asyncmel::experiments::fig3;
+use asyncmel::runtime::{default_artifacts_dir, Runtime};
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let samples: usize = args.first().and_then(|s| s.parse().ok()).unwrap_or(60_000);
+    let cycles: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(12);
+    let k: usize = args.get(2).and_then(|s| s.parse().ok()).unwrap_or(10);
+
+    let runtime = Runtime::load(default_artifacts_dir())?;
+    println!(
+        "runtime: platform={} model={:?} (train batch {})",
+        runtime.platform(),
+        runtime.manifest.layer_dims,
+        runtime.manifest.train_batch
+    );
+    println!("workload: d={samples} samples, K={k}, T=15s, {cycles} global cycles\n");
+
+    let base = ScenarioConfig::paper_default()
+        .with_cycle(15.0)
+        .with_total_samples(samples as u64);
+    let params = fig3::Fig3Params {
+        base,
+        ks: vec![k],
+        schemes: vec![
+            AllocatorKind::Relaxed,
+            AllocatorKind::Sync,
+            AllocatorKind::Eta,
+        ],
+        cycles,
+        lr: 0.01,
+        data: SynthConfig {
+            train: samples,
+            test: (samples / 6).max(512),
+            ..SynthConfig::default()
+        },
+        ..Default::default()
+    };
+
+    let t0 = std::time::Instant::now();
+    let curves = fig3::run(&runtime, &params)?;
+    println!("{}", fig3::table(&curves).render());
+    println!("{}", fig3::summary_table(&curves, &[0.95, 0.97]).render());
+    println!(
+        "total host time: {:.1}s for {} curves x {} cycles",
+        t0.elapsed().as_secs_f64(),
+        curves.len(),
+        cycles
+    );
+    Ok(())
+}

@@ -1,0 +1,99 @@
+"""AOT bridge: lower the L2 train/eval steps to HLO *text* artifacts.
+
+HLO text — NOT `lowered.compile().serialize()` and NOT a serialized
+HloModuleProto — is the interchange format: jax >= 0.5 emits protos with
+64-bit instruction ids which xla_extension 0.5.1 (the version behind the
+rust `xla` 0.1.6 crate) rejects (`proto.id() <= INT_MAX`). The HLO text
+parser reassigns ids, so text round-trips cleanly. See
+/opt/xla-example/README.md.
+
+Outputs (under artifacts/):
+  train_step.hlo.txt   one masked SGD minibatch step
+  eval_step.hlo.txt    masked correct/loss reduction step
+  manifest.json        shapes + flattening convention, checked by
+                       rust/src/runtime/spec.rs at load time
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo MLIR -> XlaComputation -> HLO text (id-safe)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_entry(fn, example_args) -> str:
+    return to_hlo_text(jax.jit(fn).lower(*example_args))
+
+
+def build_manifest() -> dict:
+    def spec_list(specs):
+        return [{"shape": list(s.shape), "dtype": str(s.dtype)} for s in specs]
+
+    return {
+        "layer_dims": list(model.LAYER_DIMS),
+        "num_param_tensors": model.NUM_PARAM_TENSORS,
+        "train_batch": model.TRAIN_BATCH,
+        "eval_batch": model.EVAL_BATCH,
+        "model_size_bits": model.model_size_bits(),
+        "entries": {
+            "train_step": {
+                "file": "train_step.hlo.txt",
+                "inputs": spec_list(model.train_step_example_args()),
+                "num_outputs": model.NUM_PARAM_TENSORS + 1,
+            },
+            "eval_step": {
+                "file": "eval_step.hlo.txt",
+                "inputs": spec_list(model.eval_step_example_args()),
+                "num_outputs": 3,
+            },
+        },
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts",
+                    help="artifact output directory")
+    # kept for Makefile compatibility: --out <path of train hlo> implies dir
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+    out_dir = args.out_dir
+    if args.out is not None:
+        out_dir = os.path.dirname(args.out) or "."
+    os.makedirs(out_dir, exist_ok=True)
+
+    entries = {
+        "train_step.hlo.txt": (model.train_step,
+                               model.train_step_example_args()),
+        "eval_step.hlo.txt": (model.eval_step,
+                              model.eval_step_example_args()),
+    }
+    for fname, (fn, ex) in entries.items():
+        text = lower_entry(fn, ex)
+        path = os.path.join(out_dir, fname)
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"wrote {len(text):>10} chars -> {path}")
+
+    mpath = os.path.join(out_dir, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(build_manifest(), f, indent=2)
+    print(f"wrote manifest -> {mpath}")
+
+
+if __name__ == "__main__":
+    main()

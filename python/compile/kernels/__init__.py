@@ -1,0 +1,6 @@
+"""L1 — Pallas kernels for the MEL DNN hot path.
+
+NOTE: import the submodules (`compile.kernels.dense`, `compile.kernels.ref`)
+directly; nothing is re-exported here so the `dense` *module* is not
+shadowed by the `dense` *function* it defines.
+"""

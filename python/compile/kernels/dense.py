@@ -1,0 +1,183 @@
+"""L1 — Pallas kernels for the MEL DNN hot path.
+
+The paper's compute hot-spot is the forward+backward pass of the
+[784, 300, 124, 60, 10] dense network (it budgets 1,123,736 FLOPs per
+sample, §V-A). We implement the dense layer as a *fused* Pallas kernel
+(matmul + bias + activation in one VMEM-resident tile pass) plus a plain
+blocked matmul kernel used by the custom backward.
+
+TPU adaptation (DESIGN.md §Hardware-Adaptation): the schedule is a 2-D
+grid over (M/bm, N/bn) output tiles with the K dimension kept resident —
+the MXU-systolic-friendly layout — and block shapes chosen as divisors of
+the actual layer dims, padded toward the 8x128 TPU tile grain where the
+dims allow. On this image Pallas MUST run `interpret=True` (CPU PJRT has
+no Mosaic); the BlockSpec structure is still the real-TPU one, so the
+VMEM-footprint / MXU-utilization estimate in EXPERIMENTS.md §Perf reads
+straight off these shapes.
+
+Correctness oracle: `kernels.ref` (pure jnp), enforced by
+python/tests/test_kernel.py (hypothesis sweeps shapes/dtypes).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Everything on this image must interpret — real-TPU lowering emits a
+# Mosaic custom-call the CPU PJRT plugin cannot execute.
+INTERPRET = True
+
+# Preferred output-tile grains, in descending order of MXU friendliness.
+# On a real TPU the MXU is 128x128; the f32 VMEM tile grain is (8, 128).
+_PREFERRED_BLOCKS = (512, 256, 128, 64, 32)
+
+
+def _pick_block(dim: int, cap: int = 512) -> int:
+    """MXU-grain block that divides `dim`, else the whole dim.
+
+    Layer dims of the paper's model (784, 300, 124, 60, 10) are mostly
+    not multiples of the MXU grain. Falling back to narrow divisor tiles
+    (4-wide for 300) would shred the matmul into hundreds of sub-MXU
+    dots — catastrophic both for real-TPU utilization and for
+    interpret-mode wallclock (§Perf L1 iteration log). Instead, ragged
+    dims stay *unblocked*: one VMEM-resident tile per dim. The paper's
+    largest layer tile (128×784 x, 784×300 w, 128×300 out ≈ 1.5 MB f32)
+    sits comfortably in the ~16 MB VMEM budget; `block_plan` reports the
+    footprint so the estimate is auditable.
+    """
+    for b in _PREFERRED_BLOCKS:
+        if b <= cap and dim % b == 0:
+            return b
+    return dim
+
+
+def _dense_kernel(x_ref, w_ref, b_ref, o_ref, *, activation: str):
+    """One (bm, bn) output tile: o = act(x @ w + b). K is fully resident."""
+    x = x_ref[...]
+    w = w_ref[...]
+    acc = jnp.dot(x, w, preferred_element_type=jnp.float32)
+    acc = acc + b_ref[...][None, :]
+    if activation == "relu":
+        acc = jnp.maximum(acc, 0.0)
+    elif activation == "tanh":
+        acc = jnp.tanh(acc)
+    elif activation != "linear":
+        raise ValueError(f"unknown activation {activation!r}")
+    o_ref[...] = acc.astype(o_ref.dtype)
+
+
+def dense_fwd(x: jax.Array, w: jax.Array, b: jax.Array,
+              activation: str = "relu") -> jax.Array:
+    """Fused dense forward: act(x @ w + b) as a Pallas call.
+
+    x: (M, K) f32, w: (K, N) f32, b: (N,) f32 -> (M, N) f32.
+    """
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, (x.shape, w.shape)
+    assert b.shape == (n,), b.shape
+    bm = _pick_block(m)
+    bn = _pick_block(n)
+    grid = (m // bm, n // bn)
+    kernel = functools.partial(_dense_kernel, activation=activation)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, bn), lambda i, j: (0, j)),
+            pl.BlockSpec((bn,), lambda i, j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        interpret=INTERPRET,
+    )(x, w, b)
+
+
+def _matmul_kernel(a_ref, b_ref, o_ref):
+    o_ref[...] = jnp.dot(a_ref[...], b_ref[...],
+                         preferred_element_type=jnp.float32).astype(o_ref.dtype)
+
+
+def matmul(a: jax.Array, b: jax.Array) -> jax.Array:
+    """Blocked Pallas matmul, used by the dense backward (dx, dW)."""
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, (a.shape, b.shape)
+    bm = _pick_block(m)
+    bn = _pick_block(n)
+    grid = (m // bm, n // bn)
+    return pl.pallas_call(
+        _matmul_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, bn), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), a.dtype),
+        interpret=INTERPRET,
+    )(a, b)
+
+
+# ---------------------------------------------------------------------------
+# custom-VJP dense layer: forward AND backward both land on Pallas kernels,
+# so the whole train-step HLO is built from the L1 kernels.
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def dense(x: jax.Array, w: jax.Array, b: jax.Array,
+          activation: str = "relu") -> jax.Array:
+    return dense_fwd(x, w, b, activation)
+
+
+def _dense_vjp_fwd(x, w, b, activation):
+    y = dense_fwd(x, w, b, activation)
+    # Save y (post-activation) — enough to reconstruct act' for relu/linear
+    # without keeping the pre-activation around (rematerialization choice:
+    # saves one (M, N) buffer per layer; see DESIGN.md §Perf L2).
+    return y, (x, w, y)
+
+
+def _dense_vjp_bwd(activation, res, gy):
+    x, w, y = res
+    if activation == "relu":
+        g = gy * (y > 0).astype(gy.dtype)
+    elif activation == "tanh":
+        g = gy * (1.0 - y * y)
+    elif activation == "linear":
+        g = gy
+    else:  # pragma: no cover - guarded in dense_fwd
+        raise ValueError(activation)
+    dx = matmul(g, w.T)        # (M, N) @ (N, K)
+    dw = matmul(x.T, g)        # (K, M) @ (M, N)
+    db = jnp.sum(g, axis=0)
+    return dx, dw, db
+
+
+dense.defvjp(_dense_vjp_fwd, _dense_vjp_bwd)
+
+
+def available_activations() -> tuple[str, ...]:
+    return ("relu", "tanh", "linear")
+
+
+def block_plan(m: int, k: int, n: int) -> dict:
+    """Report the BlockSpec schedule for (m,k)x(k,n) — used by the §Perf
+    VMEM/MXU estimator and by tests asserting the plan stays MXU-aligned
+    where dims allow."""
+    bm, bn = _pick_block(m), _pick_block(n)
+    vmem_f32 = (bm * k + k * bn + bn + bm * bn) * 4
+    return {
+        "bm": bm,
+        "bn": bn,
+        "grid": (m // bm, n // bn),
+        "vmem_bytes": vmem_f32,
+        "mxu_m_util": min(bm, 128) / 128.0,
+        "mxu_n_util": min(bn, 128) / 128.0,
+    }

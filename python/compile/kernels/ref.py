@@ -1,0 +1,60 @@
+"""Pure-jnp oracle for the L1 Pallas kernels.
+
+This is the CORE correctness signal for the kernel layer: every Pallas
+kernel in `dense.py` must match these reference implementations to
+float32 tolerance across the shape/dtype sweep in tests/test_kernel.py.
+No Pallas imports allowed here.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def dense_ref(x: jax.Array, w: jax.Array, b: jax.Array,
+              activation: str = "relu") -> jax.Array:
+    """act(x @ w + b) with plain jnp ops."""
+    y = jnp.dot(x, w, preferred_element_type=jnp.float32) + b[None, :]
+    if activation == "relu":
+        return jnp.maximum(y, 0.0).astype(x.dtype)
+    if activation == "tanh":
+        return jnp.tanh(y).astype(x.dtype)
+    if activation == "linear":
+        return y.astype(x.dtype)
+    raise ValueError(f"unknown activation {activation!r}")
+
+
+def matmul_ref(a: jax.Array, b: jax.Array) -> jax.Array:
+    return jnp.dot(a, b, preferred_element_type=jnp.float32).astype(a.dtype)
+
+
+def softmax_xent_ref(logits, y_onehot, mask):
+    """Masked per-row softmax cross-entropy (oracle for kernels.softmax)."""
+    logz = jax.nn.logsumexp(logits, axis=-1, keepdims=True)
+    logp = logits - logz
+    return -jnp.sum(y_onehot * logp, axis=-1) * mask
+
+
+def softmax_xent_grad_ref(logits, y_onehot, mask):
+    """d Σ masked-CE / d logits (oracle for the fused backward)."""
+    p = jax.nn.softmax(logits, axis=-1)
+    return (p - y_onehot) * mask[:, None]
+
+
+def dense_grads_ref(x, w, b, gy, activation="relu"):
+    """Analytic VJP of dense_ref, for checking the custom backward."""
+    y = jnp.dot(x, w) + b[None, :]
+    if activation == "relu":
+        g = gy * (y > 0).astype(gy.dtype)
+    elif activation == "tanh":
+        t = jnp.tanh(y)
+        g = gy * (1.0 - t * t)
+    elif activation == "linear":
+        g = gy
+    else:
+        raise ValueError(activation)
+    dx = jnp.dot(g, w.T)
+    dw = jnp.dot(x.T, g)
+    db = jnp.sum(g, axis=0)
+    return dx, dw, db

@@ -1,0 +1,103 @@
+"""L1 — fused masked softmax-cross-entropy Pallas kernel.
+
+The loss head of the MEL DNN: for each row, numerically-stable
+log-softmax + one-hot cross-entropy, with the batch-padding mask applied
+in-kernel. Fusing the head keeps the logits tile VMEM-resident for the
+whole reduction instead of bouncing max / exp / sum through HBM — on a
+real TPU this is one VPU pass over a (bm, C) tile; C = 10 here, so the
+tile is tiny and the win is avoiding three kernel launches.
+
+Backward is analytic (`softmax(logits) − y`, masked, scaled), also as a
+Pallas kernel, exposed through a jax.custom_vjp so the AOT train-step
+HLO contains the fused pair.
+
+Oracle: `ref.softmax_xent_ref` (pure jnp); swept by tests/test_kernel.py.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from compile.kernels.dense import INTERPRET, _pick_block
+
+
+def _xent_fwd_kernel(logits_ref, y_ref, mask_ref, loss_ref):
+    """Per-row masked CE over one (bm, C) tile."""
+    logits = logits_ref[...]
+    y = y_ref[...]
+    mask = mask_ref[...]
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    shifted = logits - m
+    logz = jnp.log(jnp.sum(jnp.exp(shifted), axis=-1, keepdims=True))
+    logp = shifted - logz
+    per_row = -jnp.sum(y * logp, axis=-1)
+    loss_ref[...] = (per_row * mask).astype(loss_ref.dtype)
+
+
+def _xent_bwd_kernel(logits_ref, y_ref, mask_ref, g_ref):
+    """d(per-row masked CE)/d logits = (softmax − y) · mask."""
+    logits = logits_ref[...]
+    y = y_ref[...]
+    mask = mask_ref[...]
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    e = jnp.exp(logits - m)
+    p = e / jnp.sum(e, axis=-1, keepdims=True)
+    g_ref[...] = ((p - y) * mask[:, None]).astype(g_ref.dtype)
+
+
+def _rowwise_call(kernel, out_shape, logits, y, mask):
+    n, c = logits.shape
+    bm = _pick_block(n)
+    grid = (n // bm,)
+    row_block = (bm, c)
+    out_block = out_shape[1:] and (bm, c) or (bm,)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(row_block, lambda i: (i, 0)),
+            pl.BlockSpec(row_block, lambda i: (i, 0)),
+            pl.BlockSpec((bm,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec(out_block, lambda i: (i, 0) if len(out_block) == 2 else (i,)),
+        out_shape=jax.ShapeDtypeStruct(out_shape, logits.dtype),
+        interpret=INTERPRET,
+    )(logits, y, mask)
+
+
+def xent_per_row(logits: jax.Array, y_onehot: jax.Array,
+                 mask: jax.Array) -> jax.Array:
+    """Masked per-row cross-entropy, fused Pallas forward."""
+    n, c = logits.shape
+    assert y_onehot.shape == (n, c) and mask.shape == (n,)
+    return _rowwise_call(_xent_fwd_kernel, (n,), logits, y_onehot, mask)
+
+
+def xent_grad(logits: jax.Array, y_onehot: jax.Array,
+              mask: jax.Array) -> jax.Array:
+    """d Σ(per-row masked CE) / d logits, fused Pallas backward."""
+    n, c = logits.shape
+    return _rowwise_call(_xent_bwd_kernel, (n, c), logits, y_onehot, mask)
+
+
+@jax.custom_vjp
+def masked_xent_sum(logits: jax.Array, y_onehot: jax.Array,
+                    mask: jax.Array) -> jax.Array:
+    """Σ_rows mask·CE(logits, y) with fused fwd/bwd kernels."""
+    return jnp.sum(xent_per_row(logits, y_onehot, mask))
+
+
+def _vjp_fwd(logits, y_onehot, mask):
+    return masked_xent_sum(logits, y_onehot, mask), (logits, y_onehot, mask)
+
+
+def _vjp_bwd(res, g):
+    logits, y_onehot, mask = res
+    return g * xent_grad(logits, y_onehot, mask), None, None
+
+
+masked_xent_sum.defvjp(_vjp_fwd, _vjp_bwd)

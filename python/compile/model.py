@@ -1,0 +1,142 @@
+"""L2 — the paper's learning model as a JAX compute graph.
+
+The evaluation model of §V-A: a dense network [784, 300, 124, 60, 10]
+(ReLU hidden, linear logits, softmax cross-entropy), trained with plain
+SGD — exactly the `w = {w1,b1,...,w4,b4}` parameter set the paper sizes
+at 8,974,080 bits. Every dense layer (forward and backward) goes through
+the L1 Pallas kernels in `compile.kernels`, so the lowered HLO *is* the
+kernel schedule.
+
+Two jittable entry points are AOT-lowered by `compile.aot`:
+  * train_step: one SGD minibatch step (masked, so rust can pad the last
+    minibatch of a learner's d_k-sample shard);
+  * eval_step:  masked correct-count + loss over an eval minibatch.
+
+Flattening convention (shared with rust/src/runtime/spec.rs):
+  inputs  = [w1, b1, w2, b2, w3, b3, w4, b4, x, y_onehot, mask, lr]
+  outputs = (w1', b1', ..., w4', b4', mean_loss)          (train_step)
+  outputs = (correct_count, loss_sum, mask_sum)           (eval_step)
+"""
+
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import softmax
+from compile.kernels.dense import dense
+
+# The paper's architecture (§V-A).
+LAYER_DIMS: tuple[int, ...] = (784, 300, 124, 60, 10)
+NUM_LAYERS = len(LAYER_DIMS) - 1
+NUM_PARAM_TENSORS = 2 * NUM_LAYERS  # w and b per layer
+
+# Fixed AOT minibatch shapes. Shards whose size is not a multiple are
+# padded by the rust data layer and masked out here.
+TRAIN_BATCH = 128
+EVAL_BATCH = 512
+
+NUM_CLASSES = LAYER_DIMS[-1]
+NUM_FEATURES = LAYER_DIMS[0]
+
+
+def param_shapes() -> list[tuple[int, ...]]:
+    """Shapes of the flat parameter list [w1, b1, ..., w4, b4]."""
+    shapes: list[tuple[int, ...]] = []
+    for i in range(NUM_LAYERS):
+        shapes.append((LAYER_DIMS[i], LAYER_DIMS[i + 1]))
+        shapes.append((LAYER_DIMS[i + 1],))
+    return shapes
+
+
+def model_size_bits(precision_bits: int = 32, include_biases: bool = False) -> int:
+    """Parameter payload in bits — the paper's S_m.
+
+    §V-A quotes 8,974,080 bits, which is exactly the four weight matrices
+    (280,440 f32 values); the bias vectors (494 values) are excluded from
+    the paper's count, so `include_biases` defaults to False to match.
+    """
+    total = 0
+    for s in param_shapes():
+        if len(s) == 1 and not include_biases:
+            continue
+        n = 1
+        for dim in s:
+            n *= dim
+        total += n
+    return precision_bits * total
+
+
+def forward(params: Sequence[jax.Array], x: jax.Array) -> jax.Array:
+    """Logits for a batch x: every layer is the L1 Pallas dense kernel."""
+    assert len(params) == NUM_PARAM_TENSORS, len(params)
+    h = x
+    for i in range(NUM_LAYERS):
+        w, b = params[2 * i], params[2 * i + 1]
+        act = "linear" if i == NUM_LAYERS - 1 else "relu"
+        h = dense(h, w, b, act)
+    return h
+
+
+def _masked_ce(logits: jax.Array, y_onehot: jax.Array,
+               mask: jax.Array) -> jax.Array:
+    """Mean softmax cross-entropy over unmasked rows (fused L1 kernel)."""
+    denom = jnp.maximum(jnp.sum(mask), 1.0)
+    return softmax.masked_xent_sum(logits, y_onehot, mask) / denom
+
+
+def loss_fn(params: Sequence[jax.Array], x: jax.Array, y_onehot: jax.Array,
+            mask: jax.Array) -> jax.Array:
+    return _masked_ce(forward(params, x), y_onehot, mask)
+
+
+def train_step(*args: jax.Array):
+    """One masked SGD step. args = params..., x, y_onehot, mask, lr."""
+    params = list(args[:NUM_PARAM_TENSORS])
+    x, y_onehot, mask, lr = args[NUM_PARAM_TENSORS:]
+    loss, grads = jax.value_and_grad(loss_fn)(params, x, y_onehot, mask)
+    new_params = [p - lr * g for p, g in zip(params, grads)]
+    return tuple(new_params) + (loss,)
+
+
+def eval_step(*args: jax.Array):
+    """Masked eval. args = params..., x, y_onehot, mask.
+
+    Returns (correct_count, loss_sum, mask_sum) so rust can stream-reduce
+    over arbitrarily many eval minibatches.
+    """
+    params = list(args[:NUM_PARAM_TENSORS])
+    x, y_onehot, mask = args[NUM_PARAM_TENSORS:]
+    logits = forward(params, x)
+    pred = jnp.argmax(logits, axis=-1)
+    label = jnp.argmax(y_onehot, axis=-1)
+    correct = jnp.sum((pred == label).astype(jnp.float32) * mask)
+    logz = jax.nn.logsumexp(logits, axis=-1, keepdims=True)
+    per_row = -jnp.sum(y_onehot * (logits - logz), axis=-1)
+    loss_sum = jnp.sum(per_row * mask)
+    return correct, loss_sum, jnp.sum(mask)
+
+
+def train_step_example_args() -> list[jax.ShapeDtypeStruct]:
+    f32 = jnp.float32
+    args = [jax.ShapeDtypeStruct(s, f32) for s in param_shapes()]
+    args += [
+        jax.ShapeDtypeStruct((TRAIN_BATCH, NUM_FEATURES), f32),
+        jax.ShapeDtypeStruct((TRAIN_BATCH, NUM_CLASSES), f32),
+        jax.ShapeDtypeStruct((TRAIN_BATCH,), f32),
+        jax.ShapeDtypeStruct((), f32),
+    ]
+    return args
+
+
+def eval_step_example_args() -> list[jax.ShapeDtypeStruct]:
+    f32 = jnp.float32
+    args = [jax.ShapeDtypeStruct(s, f32) for s in param_shapes()]
+    args += [
+        jax.ShapeDtypeStruct((EVAL_BATCH, NUM_FEATURES), f32),
+        jax.ShapeDtypeStruct((EVAL_BATCH, NUM_CLASSES), f32),
+        jax.ShapeDtypeStruct((EVAL_BATCH,), f32),
+    ]
+    return args

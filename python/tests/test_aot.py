@@ -1,0 +1,54 @@
+"""AOT bridge: lowering produces parseable HLO text + a sane manifest."""
+
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+from compile import aot, model
+
+
+def test_lower_train_step_produces_hlo_text():
+    text = aot.lower_entry(model.train_step, model.train_step_example_args())
+    assert "HloModule" in text
+    # all 12 inputs appear as parameters
+    assert "parameter(11)" in text
+    # ROOT should be a tuple (return_tuple=True)
+    assert "ROOT" in text
+
+
+def test_lower_eval_step_produces_hlo_text():
+    text = aot.lower_entry(model.eval_step, model.eval_step_example_args())
+    assert "HloModule" in text
+    assert "parameter(10)" in text
+
+
+def test_manifest_structure():
+    m = aot.build_manifest()
+    assert m["layer_dims"] == list(model.LAYER_DIMS)
+    assert m["model_size_bits"] == 8_974_080
+    t = m["entries"]["train_step"]
+    assert t["num_outputs"] == model.NUM_PARAM_TENSORS + 1
+    assert len(t["inputs"]) == model.NUM_PARAM_TENSORS + 4
+    assert t["inputs"][model.NUM_PARAM_TENSORS]["shape"] == [
+        model.TRAIN_BATCH, model.NUM_FEATURES]
+    e = m["entries"]["eval_step"]
+    assert e["num_outputs"] == 3
+    assert len(e["inputs"]) == model.NUM_PARAM_TENSORS + 3
+
+
+@pytest.mark.slow
+def test_cli_writes_artifacts(tmp_path):
+    env = dict(os.environ)
+    out = tmp_path / "artifacts"
+    subprocess.run(
+        [sys.executable, "-m", "compile.aot", "--out-dir", str(out)],
+        check=True, env=env,
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+    )
+    for f in ("train_step.hlo.txt", "eval_step.hlo.txt", "manifest.json"):
+        assert (out / f).exists()
+    man = json.loads((out / "manifest.json").read_text())
+    assert man["train_batch"] == model.TRAIN_BATCH

@@ -1,0 +1,112 @@
+"""L2 correctness: model shapes, loss/grad sanity, masking semantics."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import model
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _init_params(seed=0, scale=0.1):
+    rng = np.random.default_rng(seed)
+    return [
+        jnp.asarray(rng.standard_normal(s) * scale, jnp.float32)
+        for s in model.param_shapes()
+    ]
+
+
+def _batch(rng, n):
+    x = jnp.asarray(rng.standard_normal((n, model.NUM_FEATURES)), jnp.float32)
+    labels = rng.integers(0, model.NUM_CLASSES, size=n)
+    y = jnp.asarray(np.eye(model.NUM_CLASSES, dtype=np.float32)[labels])
+    return x, y, labels
+
+
+def test_param_shapes_match_paper_model_size():
+    # §V-A: 8,974,080 bits at 32-bit precision.
+    assert model.model_size_bits(32) == 8_974_080
+    assert len(model.param_shapes()) == model.NUM_PARAM_TENSORS == 8
+
+
+def test_forward_shapes():
+    params = _init_params()
+    rng = np.random.default_rng(1)
+    x, _, _ = _batch(rng, 32)
+    logits = model.forward(params, x)
+    assert logits.shape == (32, model.NUM_CLASSES)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+def test_forward_matches_pure_ref_composition():
+    """Composing ref.dense_ref layers == model.forward (pallas path)."""
+    params = _init_params(seed=3)
+    rng = np.random.default_rng(4)
+    x, _, _ = _batch(rng, 16)
+    h = x
+    for i in range(model.NUM_LAYERS):
+        act = "linear" if i == model.NUM_LAYERS - 1 else "relu"
+        h = ref.dense_ref(h, params[2 * i], params[2 * i + 1], act)
+    np.testing.assert_allclose(model.forward(params, x), h,
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_train_step_reduces_loss_on_fixed_batch():
+    params = _init_params(seed=5)
+    rng = np.random.default_rng(6)
+    x, y, _ = _batch(rng, model.TRAIN_BATCH)
+    mask = jnp.ones((model.TRAIN_BATCH,), jnp.float32)
+    lr = jnp.float32(0.05)
+    loss0 = model.loss_fn(params, x, y, mask)
+    args = params + [x, y, mask, lr]
+    for _ in range(5):
+        out = model.train_step(*args)
+        args = list(out[:-1]) + [x, y, mask, lr]
+    loss5 = model.loss_fn(list(out[:-1]), x, y, mask)
+    assert float(loss5) < float(loss0)
+
+
+def test_train_step_mask_ignores_padding_rows():
+    """A padded batch (mask=0 rows) must give the same update as the
+    unpadded batch content — the contract the rust data layer relies on."""
+    params = _init_params(seed=7)
+    rng = np.random.default_rng(8)
+    x, y, _ = _batch(rng, model.TRAIN_BATCH)
+    lr = jnp.float32(0.1)
+
+    n_real = 50
+    mask = jnp.asarray(
+        np.concatenate([np.ones(n_real), np.zeros(model.TRAIN_BATCH - n_real)]),
+        jnp.float32)
+    # poison the padding rows — they must not matter
+    x_poison = x.at[n_real:].set(1e3)
+    y_poison = y.at[n_real:].set(0.0)
+
+    out_a = model.train_step(*(params + [x, y, mask, lr]))
+    out_b = model.train_step(*(params + [x_poison, y_poison, mask, lr]))
+    for a, b in zip(out_a[:-1], out_b[:-1]):
+        np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(out_a[-1], out_b[-1], rtol=1e-5, atol=1e-5)
+
+
+def test_eval_step_counts_correct_and_masks():
+    params = _init_params(seed=9)
+    rng = np.random.default_rng(10)
+    x, y, labels = _batch(rng, model.EVAL_BATCH)
+    mask = jnp.asarray(np.concatenate([np.ones(100),
+                                       np.zeros(model.EVAL_BATCH - 100)]),
+                       jnp.float32)
+    correct, loss_sum, mask_sum = model.eval_step(*(params + [x, y, mask]))
+    assert float(mask_sum) == 100.0
+    logits = model.forward(params, x)
+    pred = np.argmax(np.asarray(logits), axis=-1)
+    want = float(np.sum((pred[:100] == labels[:100])))
+    assert float(correct) == want
+    assert float(loss_sum) > 0.0
+
+
+def test_example_args_match_entry_arity():
+    assert len(model.train_step_example_args()) == model.NUM_PARAM_TENSORS + 4
+    assert len(model.eval_step_example_args()) == model.NUM_PARAM_TENSORS + 3

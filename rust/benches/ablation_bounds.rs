@@ -1,0 +1,39 @@
+//! ABL-1: batch-bounds sensitivity (regeneration harness + timing).
+//!
+//! Prints the staleness-vs-(d_l, d_u) table justifying the default
+//! (0.2, 2.5)·d/K box, and times the SAI allocator under the tightest
+//! and loosest boxes (box width changes the improve-loop work).
+
+use asyncmel::allocation::{make_allocator, AllocatorKind};
+use asyncmel::benchkit::{bench, group, BenchConfig};
+use asyncmel::config::ScenarioConfig;
+use asyncmel::experiments::ablation;
+
+fn main() {
+    let params = ablation::AblationParams::default();
+    let rows = ablation::run(&params).expect("ablation sweep");
+    println!("\n========= ABL-1 — staleness vs batch bounds (7f) =========");
+    println!("{}", ablation::table(&rows).render());
+    println!("==========================================================\n");
+
+    group("sai allocator by bounds width @ K=20");
+    let cfg = BenchConfig::default();
+    for (lo, hi) in [(0.9, 1.1), (0.2, 2.5), (0.05, 8.0)] {
+        let scenario = ScenarioConfig::paper_default()
+            .with_learners(20)
+            .with_cycle(7.5)
+            .with_bound_fracs(lo, hi)
+            .build();
+        let alloc = make_allocator(AllocatorKind::Sai);
+        bench(&format!("sai/bounds=({lo},{hi})"), &cfg, || {
+            alloc
+                .allocate(
+                    &scenario.costs,
+                    scenario.t_cycle(),
+                    scenario.total_samples(),
+                    &scenario.bounds,
+                )
+                .unwrap()
+        });
+    }
+}

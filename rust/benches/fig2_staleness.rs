@@ -1,0 +1,47 @@
+//! Bench + regeneration harness for **Fig. 2** (staleness vs K).
+//!
+//! `cargo bench --bench fig2_staleness` does two things:
+//! 1. prints the full figure table (the regeneration harness — the rows
+//!    the paper plots, recorded in EXPERIMENTS.md);
+//! 2. times the per-cycle allocation solve for each scheme at the
+//!    paper's largest operating point (K = 20) — the L3 hot path.
+
+use asyncmel::allocation::{make_allocator, AllocatorKind};
+use asyncmel::benchkit::{bench, group, BenchConfig};
+use asyncmel::config::ScenarioConfig;
+use asyncmel::experiments::fig2;
+
+fn print_figure_table() {
+    let params = fig2::Fig2Params { seeds: 5, ..Default::default() };
+    let rows = fig2::run(&params).expect("fig2 sweep");
+    println!("\n================ FIG 2 — staleness vs K ================");
+    println!("{}", fig2::table(&rows).render());
+    if let Some((om, em, oa, ea)) = fig2::headline(&rows) {
+        println!("§V-B headline @ K=20,T=7.5s: max {om:.2} vs ETA {em:.2} (paper 1 vs 4); avg {oa:.2} vs ETA {ea:.2} (paper 0.5 vs 1.5)");
+    }
+    println!("=========================================================\n");
+}
+
+fn main() {
+    print_figure_table();
+
+    group("allocate @ K=20, T=7.5s (per-cycle orchestrator hot path)");
+    let cfg = BenchConfig::default();
+    for kind in AllocatorKind::all() {
+        let scenario = ScenarioConfig::paper_default()
+            .with_learners(20)
+            .with_cycle(7.5)
+            .build();
+        let alloc = make_allocator(kind);
+        bench(&format!("allocate/{}", kind.name()), &cfg, || {
+            alloc
+                .allocate(
+                    &scenario.costs,
+                    scenario.t_cycle(),
+                    scenario.total_samples(),
+                    &scenario.bounds,
+                )
+                .unwrap()
+        });
+    }
+}

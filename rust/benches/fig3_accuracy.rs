@@ -1,0 +1,89 @@
+//! Bench + regeneration harness for **Fig. 3** (accuracy vs global cycle).
+//!
+//! Needs `make artifacts`. Two parts:
+//! 1. regeneration: runs a scaled-down Fig.-3 workload (12k samples,
+//!    K = 10, 8 cycles — CI-sized; the paper-scale run is
+//!    `examples/train_e2e.rs` / `asyncmel fig3`) and prints the
+//!    accuracy series + cycles-to-target summary;
+//! 2. timing: one full global cycle of the stack (allocation + dispatch
+//!    + τ_k SGD epochs through PJRT + aggregation + eval) — the
+//!    end-to-end hot path.
+
+use asyncmel::aggregation::AggregationRule;
+use asyncmel::allocation::AllocatorKind;
+use asyncmel::benchkit::{bench, group, BenchConfig};
+use asyncmel::config::ScenarioConfig;
+use asyncmel::coordinator::{Orchestrator, TrainOptions};
+use asyncmel::data::{synth, SynthConfig};
+use asyncmel::experiments::fig3;
+use asyncmel::runtime::{default_artifacts_dir, Runtime};
+
+const SAMPLES: usize = 12_000;
+
+fn print_figure_curves(rt: &Runtime) {
+    let base = ScenarioConfig::paper_default()
+        .with_cycle(15.0)
+        .with_total_samples(SAMPLES as u64);
+    let params = fig3::Fig3Params {
+        base,
+        ks: vec![10],
+        schemes: vec![
+            AllocatorKind::Relaxed,
+            AllocatorKind::Sync,
+            AllocatorKind::Eta,
+        ],
+        cycles: 8,
+        lr: 0.01,
+        data: SynthConfig { train: SAMPLES, test: 2_000, ..SynthConfig::default() },
+        ..Default::default()
+    };
+    let curves = fig3::run(rt, &params).expect("fig3 curves");
+    println!("\n=========== FIG 3 — accuracy vs global cycles ===========");
+    println!("{}", fig3::table(&curves).render());
+    println!("{}", fig3::summary_table(&curves, &[0.95, 0.97]).render());
+    println!("(scaled workload: d={SAMPLES}; paper-scale via examples/train_e2e.rs)");
+    println!("=========================================================\n");
+}
+
+fn main() {
+    let rt = match Runtime::load(default_artifacts_dir()) {
+        Ok(rt) => rt,
+        Err(e) => {
+            eprintln!(
+                "fig3 bench skipped: artifacts not available ({e:#}). Run `make artifacts`."
+            );
+            return;
+        }
+    };
+    print_figure_curves(&rt);
+
+    group("end-to-end global cycle");
+    let ds = synth::generate(&SynthConfig {
+        train: 6_000,
+        test: 1_024,
+        ..SynthConfig::default()
+    });
+    let scenario = ScenarioConfig::paper_default()
+        .with_learners(10)
+        .with_cycle(15.0)
+        .with_total_samples(6_000)
+        .build();
+    bench("global_cycle/k10_d6000", &BenchConfig::slow(), || {
+        let mut orch = Orchestrator::new(
+            scenario.clone(),
+            AllocatorKind::Relaxed,
+            AggregationRule::FedAvg,
+            &rt,
+            ds.train.clone(),
+            ds.test.clone(),
+        )
+        .unwrap();
+        orch.run(&TrainOptions {
+            cycles: 1,
+            lr: 0.01,
+            eval_every: 1,
+            reallocate_each_cycle: false,
+        })
+        .unwrap()
+    });
+}

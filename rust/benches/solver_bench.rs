@@ -1,0 +1,71 @@
+//! ABL-2: solver scaling + optimality-gap harness.
+//!
+//! Times each allocation scheme across fleet sizes K (the orchestrator
+//! pays this once per global cycle) and prints the staleness objective
+//! side by side with the exact optimum — the quantitative version of the
+//! paper's "the analytical approximation closely matched the solution of
+//! the numerical solvers" (§VI).
+
+use asyncmel::allocation::{make_allocator, AllocatorKind};
+use asyncmel::benchkit::{bench, group, BenchConfig};
+use asyncmel::config::ScenarioConfig;
+use asyncmel::metrics::{fmt_f, Table};
+
+fn print_gap_table() {
+    println!("\n============ ABL-2 — objective gap vs exact ============");
+    let mut t = Table::new(&["K", "T(s)", "exact", "relaxed", "sai", "eta"]);
+    for &t_cycle in &[7.5, 15.0] {
+        for k in [5usize, 10, 15, 20, 30] {
+            let scenario = ScenarioConfig::paper_default()
+                .with_learners(k)
+                .with_cycle(t_cycle)
+                .build();
+            let mut cells = vec![k.to_string(), fmt_f(t_cycle, 1)];
+            for kind in [
+                AllocatorKind::Exact,
+                AllocatorKind::Relaxed,
+                AllocatorKind::Sai,
+                AllocatorKind::Eta,
+            ] {
+                let a = make_allocator(kind)
+                    .allocate(
+                        &scenario.costs,
+                        scenario.t_cycle(),
+                        scenario.total_samples(),
+                        &scenario.bounds,
+                    )
+                    .expect("allocation");
+                cells.push(a.max_staleness().to_string());
+            }
+            t.row(&cells);
+        }
+    }
+    println!("{}", t.render());
+    println!("=========================================================\n");
+}
+
+fn main() {
+    print_gap_table();
+
+    let cfg = BenchConfig::default();
+    for kind in [AllocatorKind::Exact, AllocatorKind::Relaxed, AllocatorKind::Sai] {
+        group(&format!("solve scaling — {}", kind.name()));
+        for k in [5usize, 10, 20, 40] {
+            let scenario = ScenarioConfig::paper_default()
+                .with_learners(k)
+                .with_cycle(7.5)
+                .build();
+            let alloc = make_allocator(kind);
+            bench(&format!("{}/K={k}", kind.name()), &cfg, || {
+                alloc
+                    .allocate(
+                        &scenario.costs,
+                        scenario.t_cycle(),
+                        scenario.total_samples(),
+                        &scenario.bounds,
+                    )
+                    .unwrap()
+            });
+        }
+    }
+}

@@ -1,0 +1,185 @@
+//! Federated model aggregation rules.
+//!
+//! After each global cycle the orchestrator merges the `K` locally
+//! updated parameter sets `w̃_k` into the next global model `w` (§II,
+//! following [8]). The paper's pipeline uses batch-weighted FedAvg; we
+//! also implement the staleness-aware weighting of [10] and two
+//! ablation rules (exercised by `examples/aggregation_ablation.rs`).
+
+
+/// A flat parameter set: one `Vec<f32>` per tensor (the runtime's
+/// `[w1, b1, …, w4, b4]` order).
+pub type ParamSet = Vec<Vec<f32>>;
+
+/// Aggregation rule.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AggregationRule {
+    /// Batch-weighted FedAvg: `w = Σ (d_k / d) w̃_k` (the paper / [8]).
+    FedAvg,
+    /// Unweighted mean of the local models.
+    Uniform,
+    /// Weight by work done: `d_k · τ_k` (gradient-count weighting).
+    TauWeighted,
+    /// Staleness-aware [10]: FedAvg damped by `1 / (1 + s_k)` where
+    /// `s_k = max_l τ_l − τ_k` is learner k's lag behind the front.
+    InverseStaleness,
+}
+
+impl AggregationRule {
+    pub fn name(&self) -> &'static str {
+        match self {
+            AggregationRule::FedAvg => "fedavg",
+            AggregationRule::Uniform => "uniform",
+            AggregationRule::TauWeighted => "tau-weighted",
+            AggregationRule::InverseStaleness => "inv-staleness",
+        }
+    }
+
+    pub fn all() -> [AggregationRule; 4] {
+        [
+            AggregationRule::FedAvg,
+            AggregationRule::Uniform,
+            AggregationRule::TauWeighted,
+            AggregationRule::InverseStaleness,
+        ]
+    }
+
+    /// Parse from a CLI token.
+    pub fn parse(s: &str) -> Option<AggregationRule> {
+        AggregationRule::all()
+            .into_iter()
+            .find(|r| r.name().eq_ignore_ascii_case(s))
+    }
+}
+
+impl std::str::FromStr for AggregationRule {
+    type Err = std::io::Error;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        AggregationRule::parse(s).ok_or_else(|| {
+            std::io::Error::new(
+                std::io::ErrorKind::InvalidInput,
+                format!("unknown aggregation '{s}' (fedavg|uniform|tau-weighted|inv-staleness)"),
+            )
+        })
+    }
+}
+
+/// Per-learner aggregation weights for a rule.
+pub fn weights(rule: AggregationRule, d: &[u64], tau: &[u64]) -> Vec<f64> {
+    assert_eq!(d.len(), tau.len());
+    let k = d.len();
+    let raw: Vec<f64> = match rule {
+        AggregationRule::FedAvg => d.iter().map(|&di| di as f64).collect(),
+        AggregationRule::Uniform => vec![1.0; k],
+        AggregationRule::TauWeighted => d
+            .iter()
+            .zip(tau)
+            .map(|(&di, &ti)| (di as f64) * (ti.max(1) as f64))
+            .collect(),
+        AggregationRule::InverseStaleness => {
+            let front = tau.iter().copied().max().unwrap_or(0);
+            d.iter()
+                .zip(tau)
+                .map(|(&di, &ti)| di as f64 / (1.0 + (front - ti) as f64))
+                .collect()
+        }
+    };
+    let sum: f64 = raw.iter().sum();
+    assert!(sum > 0.0, "all aggregation weights zero");
+    raw.into_iter().map(|w| w / sum).collect()
+}
+
+/// Weighted aggregate of `K` parameter sets.
+///
+/// All sets must have identical shapes; learners with weight 0 are
+/// skipped (e.g. infeasible nodes with `τ_k = d_k = 0`).
+pub fn aggregate(rule: AggregationRule, locals: &[ParamSet], d: &[u64], tau: &[u64]) -> ParamSet {
+    assert!(!locals.is_empty());
+    let w = weights(rule, d, tau);
+    let n_tensors = locals[0].len();
+    let mut out: ParamSet = locals[0]
+        .iter()
+        .map(|t| vec![0.0f32; t.len()])
+        .collect();
+    for (set, &wk) in locals.iter().zip(&w) {
+        assert_eq!(set.len(), n_tensors, "tensor-count mismatch");
+        if wk == 0.0 {
+            continue;
+        }
+        let wk = wk as f32;
+        for (acc, src) in out.iter_mut().zip(set) {
+            assert_eq!(acc.len(), src.len(), "tensor-shape mismatch");
+            for (a, &s) in acc.iter_mut().zip(src) {
+                *a += wk * s;
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sets() -> Vec<ParamSet> {
+        vec![
+            vec![vec![1.0, 2.0], vec![10.0]],
+            vec![vec![3.0, 6.0], vec![30.0]],
+        ]
+    }
+
+    #[test]
+    fn fedavg_weights_by_batch() {
+        let out = aggregate(AggregationRule::FedAvg, &sets(), &[100, 300], &[2, 2]);
+        // weights 0.25 / 0.75
+        assert!((out[0][0] - 2.5).abs() < 1e-6);
+        assert!((out[0][1] - 5.0).abs() < 1e-6);
+        assert!((out[1][0] - 25.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn uniform_is_plain_mean() {
+        let out = aggregate(AggregationRule::Uniform, &sets(), &[100, 300], &[1, 9]);
+        assert!((out[0][0] - 2.0).abs() < 1e-6);
+        assert!((out[1][0] - 20.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn tau_weighted_counts_updates() {
+        let w = weights(AggregationRule::TauWeighted, &[100, 100], &[1, 3]);
+        assert!((w[0] - 0.25).abs() < 1e-12);
+        assert!((w[1] - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn inverse_staleness_damps_laggards() {
+        let w = weights(AggregationRule::InverseStaleness, &[100, 100], &[4, 1]);
+        // front = 4: learner 0 lag 0 -> 100; learner 1 lag 3 -> 25
+        assert!((w[0] - 0.8).abs() < 1e-12, "{w:?}");
+        assert!((w[1] - 0.2).abs() < 1e-12);
+    }
+
+    #[test]
+    fn zero_staleness_reduces_to_fedavg() {
+        let a = weights(AggregationRule::InverseStaleness, &[100, 300], &[5, 5]);
+        let b = weights(AggregationRule::FedAvg, &[100, 300], &[5, 5]);
+        for (x, y) in a.iter().zip(&b) {
+            assert!((x - y).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn weights_sum_to_one() {
+        for rule in AggregationRule::all() {
+            let w = weights(rule, &[10, 20, 30], &[1, 2, 3]);
+            assert!((w.iter().sum::<f64>() - 1.0).abs() < 1e-12, "{rule:?}");
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn mismatched_shapes_panic() {
+        let bad = vec![vec![vec![1.0]], vec![vec![1.0, 2.0]]];
+        aggregate(AggregationRule::Uniform, &bad, &[1, 1], &[1, 1]);
+    }
+}

@@ -1,0 +1,269 @@
+//! Shared integer machinery: flooring, residual redistribution, and the
+//! **improve** half of suggest-and-improve (§IV-A).
+//!
+//! Both the relaxed-numerical and the SAI-analytical paths end with a
+//! continuous suggestion that must be turned into a feasible *integer*
+//! point: floor τ, re-derive work-conserving τ from integer d, restore
+//! `Σ d_k = d` (7c) without leaving the box (7f), then locally improve
+//! staleness by moving samples between the extremal-τ learners.
+
+use crate::allocation::Allocation;
+use crate::costmodel::{Bounds, LearnerCost};
+
+/// Turn a continuous batch vector into integers inside the box with the
+/// exact total: floor, then hand the residual to the learners with the
+/// largest fractional parts (largest-remainder method), clamped to
+/// bounds; any remaining excess/deficit is fixed by ±1 sweeps.
+pub fn integerize_batches(
+    d_real: &[f64],
+    d_total: u64,
+    bounds: &Bounds,
+) -> Option<Vec<u64>> {
+    let k = d_real.len();
+    if (bounds.d_lo * k as u64) > d_total || (bounds.d_hi * k as u64) < d_total {
+        return None; // box makes the simplex empty
+    }
+    let mut d: Vec<u64> = d_real
+        .iter()
+        .map(|&v| bounds.clamp(v.floor().max(0.0) as u64))
+        .collect();
+
+    // largest-remainder pass
+    let mut order: Vec<usize> = (0..k).collect();
+    order.sort_by(|&a, &b| {
+        let fa = d_real[a] - d_real[a].floor();
+        let fb = d_real[b] - d_real[b].floor();
+        fb.partial_cmp(&fa).unwrap()
+    });
+    let mut sum: i64 = d.iter().map(|&v| v as i64).sum();
+    let target = d_total as i64;
+    for &i in &order {
+        if sum >= target {
+            break;
+        }
+        if d[i] < bounds.d_hi {
+            d[i] += 1;
+            sum += 1;
+        }
+    }
+    // final ±1 sweeps (handles clamping distortions)
+    let mut guard = 0usize;
+    while sum != target {
+        guard += 1;
+        if guard > 10 * k * (bounds.d_hi - bounds.d_lo + 1) as usize {
+            return None;
+        }
+        let mut moved = false;
+        for i in 0..k {
+            if sum < target && d[i] < bounds.d_hi {
+                d[i] += 1;
+                sum += 1;
+                moved = true;
+            } else if sum > target && d[i] > bounds.d_lo {
+                d[i] -= 1;
+                sum -= 1;
+                moved = true;
+            }
+            if sum == target {
+                break;
+            }
+        }
+        if !moved {
+            return None;
+        }
+    }
+    Some(d)
+}
+
+/// Work-conserving τ for integer batches: each learner runs as many
+/// epochs as fit in `T` (the integer realization of eq. 7b). Learners
+/// for whom even the model exchange misses `T` get τ = 0 — the paper's
+/// "MEL not feasible for learner k" marker.
+pub fn work_conserving_tau(costs: &[LearnerCost], d: &[u64], t_cycle: f64) -> Vec<u64> {
+    costs
+        .iter()
+        .zip(d)
+        .map(|(c, &di)| c.tau_max_int(di, t_cycle).unwrap_or(0))
+        .collect()
+}
+
+/// One *improve* descent: move samples from the min-τ learner (taking
+/// data raises its τ) to the max-τ learner (adding data lowers its τ),
+/// by the smallest amounts that change each extremal τ by one, while
+/// honoring bounds and `Σ d = d`. Returns `true` if staleness strictly
+/// improved (lexicographic on (max, avg)).
+fn improve_once(
+    costs: &[LearnerCost],
+    d: &mut Vec<u64>,
+    tau: &mut Vec<u64>,
+    t_cycle: f64,
+    bounds: &Bounds,
+) -> bool {
+    let k = costs.len();
+    let cur = Allocation { tau: tau.clone(), d: d.clone() };
+    let cur_key = (cur.max_staleness(), cur.avg_staleness());
+    if cur_key.0 == 0 {
+        return false;
+    }
+    let hi = (0..k).max_by_key(|&i| tau[i]).unwrap();
+    let lo = (0..k).min_by_key(|&i| tau[i]).unwrap();
+    if tau[hi] == tau[lo] {
+        return false;
+    }
+
+    // smallest extra data that drops τ_hi by one:
+    //   need d_hi' > d_max_int_for_tau(τ_hi)
+    let need_hi = costs[hi]
+        .d_max_int_for_tau(tau[hi], t_cycle)
+        .map(|dm| dm.saturating_add(1).saturating_sub(d[hi]))
+        .unwrap_or(u64::MAX);
+    // smallest data removal that raises τ_lo by one:
+    //   need d_lo' ≤ d_max_int_for_tau(τ_lo + 1)
+    let need_lo = costs[lo]
+        .d_max_int_for_tau(tau[lo] + 1, t_cycle)
+        .map(|dm| d[lo].saturating_sub(dm))
+        .unwrap_or(u64::MAX);
+
+    // capacity on each side
+    let room_hi = bounds.d_hi.saturating_sub(d[hi]);
+    let room_lo = d[lo].saturating_sub(bounds.d_lo);
+
+    // candidate transfer sizes, smallest effective first
+    let mut cands: Vec<u64> = Vec::new();
+    if need_hi > 0 && need_hi <= room_hi.min(room_lo) {
+        cands.push(need_hi);
+    }
+    if need_lo > 0 && need_lo <= room_hi.min(room_lo) {
+        cands.push(need_lo);
+    }
+    cands.sort_unstable();
+    cands.dedup();
+
+    for delta in cands {
+        let mut d2 = d.clone();
+        d2[lo] -= delta;
+        d2[hi] += delta;
+        let tau2 = work_conserving_tau(costs, &d2, t_cycle);
+        let a2 = Allocation { tau: tau2.clone(), d: d2.clone() };
+        let key2 = (a2.max_staleness(), a2.avg_staleness());
+        if key2 < cur_key {
+            *d = d2;
+            *tau = tau2;
+            return true;
+        }
+    }
+    false
+}
+
+/// The improve loop of SAI: repeat single-move descents to a local
+/// optimum (bounded rounds; each round strictly improves, and staleness
+/// is a nonnegative integer pair, so termination is guaranteed anyway).
+pub fn improve_to_local_optimum(
+    costs: &[LearnerCost],
+    d: &mut Vec<u64>,
+    t_cycle: f64,
+    bounds: &Bounds,
+    max_rounds: usize,
+) -> Allocation {
+    let mut tau = work_conserving_tau(costs, d, t_cycle);
+    for _ in 0..max_rounds {
+        if !improve_once(costs, d, &mut tau, t_cycle, bounds) {
+            break;
+        }
+    }
+    Allocation { tau, d: d.clone() }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn het_costs(k: usize) -> Vec<LearnerCost> {
+        (0..k)
+            .map(|i| {
+                let fast = i % 2 == 0;
+                let c2 = if fast { 4.5e-4 } else { 1.6e-3 };
+                LearnerCost::new(c2, 1.1e-4, 0.35)
+            })
+            .collect()
+    }
+
+    #[test]
+    fn integerize_preserves_total_and_bounds() {
+        let bounds = Bounds::new(100, 2000);
+        let d_real = [433.7, 1200.2, 999.9, 366.2];
+        let d = integerize_batches(&d_real, 3000, &bounds).unwrap();
+        assert_eq!(d.iter().sum::<u64>(), 3000);
+        for &v in &d {
+            assert!(bounds.contains(v));
+        }
+    }
+
+    #[test]
+    fn integerize_handles_heavy_clamping() {
+        let bounds = Bounds::new(500, 800);
+        // all suggestions below the box -> clamped up, then trimmed down
+        let d_real = [100.0, 100.0, 100.0, 100.0];
+        let d = integerize_batches(&d_real, 2400, &bounds).unwrap();
+        assert_eq!(d.iter().sum::<u64>(), 2400);
+        for &v in &d {
+            assert!(bounds.contains(v));
+        }
+    }
+
+    #[test]
+    fn integerize_rejects_empty_simplex() {
+        let bounds = Bounds::new(100, 200);
+        assert!(integerize_batches(&[150.0, 150.0], 1000, &bounds).is_none());
+        assert!(integerize_batches(&[150.0, 150.0], 100, &bounds).is_none());
+    }
+
+    #[test]
+    fn work_conserving_tau_is_maximal() {
+        let costs = het_costs(4);
+        let d = [1000u64, 1000, 1000, 1000];
+        let t_cycle = 7.5;
+        let tau = work_conserving_tau(&costs, &d, t_cycle);
+        for i in 0..4 {
+            let t_now = costs[i].time(tau[i] as f64, d[i] as f64);
+            let t_next = costs[i].time((tau[i] + 1) as f64, d[i] as f64);
+            assert!(t_now <= t_cycle && t_next > t_cycle);
+        }
+    }
+
+    #[test]
+    fn improve_reduces_staleness_from_equal_split() {
+        let costs = het_costs(10);
+        let t_cycle = 7.5;
+        let d_total = 30_000u64;
+        let bounds = Bounds::proportional(d_total, 10, 0.2, 2.5);
+        let mut d = vec![d_total / 10; 10];
+        let before =
+            Allocation { tau: work_conserving_tau(&costs, &d, t_cycle), d: d.clone() };
+        let after = improve_to_local_optimum(&costs, &mut d, t_cycle, &bounds, 200);
+        assert!(after.max_staleness() <= before.max_staleness());
+        assert!(
+            after.max_staleness() < before.max_staleness()
+                || after.avg_staleness() <= before.avg_staleness(),
+            "no progress: before={} after={}",
+            before.max_staleness(),
+            after.max_staleness()
+        );
+        after
+            .validate(&costs, t_cycle, d_total, &bounds)
+            .expect("improved allocation stays feasible");
+        assert!(after.is_work_conserving(&costs, t_cycle));
+    }
+
+    #[test]
+    fn improve_stops_at_zero_staleness() {
+        // homogeneous fleet: equal split is already optimal
+        let costs: Vec<LearnerCost> =
+            (0..6).map(|_| LearnerCost::new(1e-3, 1e-4, 0.3)).collect();
+        let bounds = Bounds::new(100, 10_000);
+        let mut d = vec![1000u64; 6];
+        let a = improve_to_local_optimum(&costs, &mut d, 15.0, &bounds, 50);
+        assert_eq!(a.max_staleness(), 0);
+        assert_eq!(d, vec![1000u64; 6]);
+    }
+}

@@ -1,0 +1,91 @@
+//! Asynchronous **Equal Task Allocation** baseline ([10], the scheme the
+//! paper's Fig. 2/3 compare against).
+//!
+//! Every learner gets the same batch `d/K` (remainder spread one sample
+//! at a time), then runs as many epochs as fit in the cycle clock. No
+//! staleness control whatsoever — fast laptops race ahead of RPi-class
+//! nodes, which is exactly the gap the paper's optimizer closes.
+
+use anyhow::{ensure, Result};
+
+use crate::allocation::{common, Allocation, TaskAllocator};
+use crate::costmodel::{Bounds, LearnerCost};
+
+/// Equal-task-allocation (asynchronous) baseline.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct EtaAllocator;
+
+impl TaskAllocator for EtaAllocator {
+    fn allocate(
+        &self,
+        costs: &[LearnerCost],
+        t_cycle: f64,
+        d_total: u64,
+        bounds: &Bounds,
+    ) -> Result<Allocation> {
+        let k = costs.len();
+        ensure!(k > 0, "no learners");
+        let base = d_total / k as u64;
+        let rem = (d_total % k as u64) as usize;
+        ensure!(
+            bounds.contains(base) && (rem == 0 || bounds.contains(base + 1)),
+            "equal share {base} falls outside bounds [{}, {}]",
+            bounds.d_lo,
+            bounds.d_hi
+        );
+        let d: Vec<u64> = (0..k)
+            .map(|i| if i < rem { base + 1 } else { base })
+            .collect();
+        let tau = common::work_conserving_tau(costs, &d, t_cycle);
+        Ok(Allocation { tau, d })
+    }
+
+    fn name(&self) -> &'static str {
+        "eta"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn het_costs(k: usize) -> Vec<LearnerCost> {
+        (0..k)
+            .map(|i| {
+                let c2 = if i % 2 == 0 { 4.5e-4 } else { 1.6e-3 };
+                LearnerCost::new(c2, 1.1e-4, 0.35)
+            })
+            .collect()
+    }
+
+    #[test]
+    fn equal_shares_sum_exactly() {
+        let costs = het_costs(7);
+        let bounds = Bounds::new(1, 100_000);
+        let a = EtaAllocator.allocate(&costs, 15.0, 60_001, &bounds).unwrap();
+        assert_eq!(a.d.iter().sum::<u64>(), 60_001);
+        let spread = a.d.iter().max().unwrap() - a.d.iter().min().unwrap();
+        assert!(spread <= 1);
+        a.validate(&costs, 15.0, 60_001, &bounds).unwrap();
+    }
+
+    #[test]
+    fn heterogeneous_fleet_gets_nonzero_staleness() {
+        let costs = het_costs(10);
+        let bounds = Bounds::new(1, 100_000);
+        let a = EtaAllocator.allocate(&costs, 7.5, 30_000, &bounds).unwrap();
+        assert!(
+            a.max_staleness() >= 2,
+            "fast/slow 3.5x c2 gap must show up: tau={:?}",
+            a.tau
+        );
+        assert!(a.is_work_conserving(&costs, 7.5));
+    }
+
+    #[test]
+    fn rejects_share_outside_bounds() {
+        let costs = het_costs(4);
+        let bounds = Bounds::new(500, 600);
+        assert!(EtaAllocator.allocate(&costs, 15.0, 10_000, &bounds).is_err());
+    }
+}

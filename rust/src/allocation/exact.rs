@@ -1,0 +1,295 @@
+//! Exact integer allocator — the optimality yardstick.
+//!
+//! Not in the paper (which stops at relax-and-round, leaving the
+//! max-constrained integer problem to future work); we add it because the
+//! full-duration equality (7b) *forces* `d_k` once `τ_k` is known, which
+//! collapses the IQCLP to a one-dimensional-per-learner structure:
+//!
+//! With integer batches and work-conserving epochs
+//! `τ_k(d) = ⌊(T − C⁰_k − C¹_k d)/(C²_k d)⌋` (non-increasing in `d`), an
+//! allocation with staleness `≤ z` and base `a` requires
+//! `τ_k(d_k) ∈ [a, a+z]`, i.e. `d_k` in the integer interval
+//!
+//! ```text
+//! lo_k(a, z) = max(d_l, d̄_k(a+z+1) + 1)      (τ_k ≤ a+z)
+//! hi_k(a)    = min(d_u, d̄_k(a))              (τ_k ≥ a)
+//! d̄_k(τ)    = ⌊(T − C⁰_k)/(C¹_k + C²_k τ)⌋   (max batch allowing τ epochs)
+//! ```
+//!
+//! Feasibility of `(a, z)` is the interval test
+//! `Σ lo_k ≤ d ≤ Σ hi_k`. Scanning `z = 0, 1, …` (outer) and all bases
+//! `a` (inner) finds the *provably minimal* max-staleness; among bases
+//! with minimal `z` we keep the assignment with the best average
+//! staleness (eq. 13) as a tiebreak.
+
+use anyhow::{anyhow, ensure, Result};
+
+use crate::allocation::{common, Allocation, TaskAllocator};
+use crate::costmodel::{Bounds, LearnerCost};
+
+/// Options for [`ExactAllocator`].
+#[derive(Debug, Clone, Copy)]
+pub struct ExactOptions {
+    /// Safety cap on the τ search space (guards tiny-`d_l` blowups).
+    pub tau_cap: u64,
+    /// `None`: minimize staleness first (the paper's objective 7a).
+    /// `Some(z)`: treat `z` as an acceptable staleness *budget* and
+    /// maximize learning work Σ τ_k d_k within it — the trade the
+    /// paper's own (non-convex, SAI-repaired) solutions land on in
+    /// Fig. 2, where max staleness hovers at ~1 rather than 0 and the
+    /// extra epochs on fast nodes buy the §V-C accuracy gain over sync.
+    pub staleness_budget: Option<u64>,
+}
+
+impl Default for ExactOptions {
+    fn default() -> Self {
+        Self { tau_cap: 100_000, staleness_budget: None }
+    }
+}
+
+/// Exact integer window-search allocator.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ExactAllocator {
+    pub opts: ExactOptions,
+}
+
+impl ExactAllocator {
+    /// Max integer batch that still permits `tau` epochs, clipped to the
+    /// box; `None` if not even `d_l` fits.
+    fn d_cap(cost: &LearnerCost, tau: u64, t_cycle: f64, d_hi: u64) -> Option<u64> {
+        let cap = cost.d_max_int_for_tau(tau, t_cycle)?;
+        Some(cap.min(d_hi))
+    }
+
+    /// Integer d interval for `τ_k(d) ∈ [a, a+z]`, or `None` if empty.
+    fn d_interval(
+        cost: &LearnerCost,
+        a: u64,
+        z: u64,
+        t_cycle: f64,
+        bounds: &Bounds,
+    ) -> Option<(u64, u64)> {
+        let hi = Self::d_cap(cost, a, t_cycle, bounds.d_hi)?;
+        if hi < bounds.d_lo {
+            return None;
+        }
+        let lo = match cost.d_max_int_for_tau(a + z + 1, t_cycle) {
+            Some(cap) => cap.saturating_add(1).max(bounds.d_lo),
+            // even d = 0 can't fit a+z+1 epochs -> any d keeps τ ≤ a+z
+            None => bounds.d_lo,
+        };
+        (lo <= hi).then_some((lo, hi))
+    }
+
+    /// Try base `a` with staleness budget `z`; returns a feasible
+    /// assignment (d at lo, residual filled greedily) if one exists.
+    fn try_window(
+        costs: &[LearnerCost],
+        a: u64,
+        z: u64,
+        t_cycle: f64,
+        d_total: u64,
+        bounds: &Bounds,
+    ) -> Option<Vec<u64>> {
+        let k = costs.len();
+        let mut lo = Vec::with_capacity(k);
+        let mut hi = Vec::with_capacity(k);
+        for c in costs {
+            let (l, h) = Self::d_interval(c, a, z, t_cycle, bounds)?;
+            lo.push(l);
+            hi.push(h);
+        }
+        let sum_lo: u64 = lo.iter().sum();
+        let sum_hi: u64 = hi.iter().sum();
+        if !(sum_lo <= d_total && d_total <= sum_hi) {
+            return None;
+        }
+        // fill from lo toward hi
+        let mut d = lo;
+        let mut rest = d_total - sum_lo;
+        for i in 0..k {
+            let take = rest.min(hi[i] - d[i]);
+            d[i] += take;
+            rest -= take;
+            if rest == 0 {
+                break;
+            }
+        }
+        debug_assert_eq!(rest, 0);
+        Some(d)
+    }
+}
+
+impl TaskAllocator for ExactAllocator {
+    fn allocate(
+        &self,
+        costs: &[LearnerCost],
+        t_cycle: f64,
+        d_total: u64,
+        bounds: &Bounds,
+    ) -> Result<Allocation> {
+        let k = costs.len();
+        ensure!(k > 0, "no learners");
+        ensure!(
+            bounds.d_lo * k as u64 <= d_total && d_total <= bounds.d_hi * k as u64,
+            "bounds make Σd = {d_total} unreachable for K = {k}"
+        );
+
+        // Highest achievable τ over the fleet (at the smallest batch).
+        let tau_top = costs
+            .iter()
+            .filter_map(|c| c.tau_max_int(bounds.d_lo, t_cycle))
+            .max()
+            .ok_or_else(|| anyhow!("no learner can exchange the model within T = {t_cycle}s"))?
+            .min(self.opts.tau_cap);
+
+        let z_iter: Vec<u64> = match self.opts.staleness_budget {
+            // budget mode: only windows up to the budget, best work wins
+            Some(budget) => vec![budget.min(tau_top)],
+            None => (0..=tau_top).collect(),
+        };
+        for z in z_iter {
+            // Among all bases with the minimal staleness budget z, pick
+            // the one doing the most learning work Σ τ_k d_k (the
+            // integer realization of the full-duration equality 7b —
+            // accuracy in MEL grows with updates, §III), tie-broken by
+            // the lower average staleness (eq. 13).
+            let mut best: Option<(u128, f64, Vec<u64>)> = None;
+            for a in 0..=(tau_top - z) {
+                if let Some(d) = Self::try_window(costs, a, z, t_cycle, d_total, bounds) {
+                    let tau = common::work_conserving_tau(costs, &d, t_cycle);
+                    let alloc = Allocation { tau, d };
+                    debug_assert!(alloc.max_staleness() <= z);
+                    let work: u128 = alloc
+                        .tau
+                        .iter()
+                        .zip(&alloc.d)
+                        .map(|(&t, &di)| t as u128 * di as u128)
+                        .sum();
+                    let avg = alloc.avg_staleness();
+                    let better = match &best {
+                        None => true,
+                        Some((bw, ba, _)) => work > *bw || (work == *bw && avg < *ba),
+                    };
+                    if better {
+                        best = Some((work, avg, alloc.d));
+                    }
+                }
+            }
+            if let Some((_, _, d)) = best {
+                let tau = common::work_conserving_tau(costs, &d, t_cycle);
+                return Ok(Allocation { tau, d });
+            }
+        }
+        Err(anyhow!("no feasible integer allocation up to z = {tau_top}"))
+    }
+
+    fn name(&self) -> &'static str {
+        "exact"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::allocation::eta::EtaAllocator;
+
+    fn het_costs(k: usize) -> Vec<LearnerCost> {
+        (0..k)
+            .map(|i| {
+                let c2 = if i % 2 == 0 { 4.5e-4 } else { 1.6e-3 };
+                LearnerCost::new(c2, 1.1e-4 + 1e-5 * (i % 4) as f64, 0.3 + 0.04 * (i % 3) as f64)
+            })
+            .collect()
+    }
+
+    #[test]
+    fn exact_is_feasible_and_work_conserving() {
+        let costs = het_costs(10);
+        let d_total = 30_000;
+        let bounds = Bounds::proportional(d_total, 10, 0.2, 2.5);
+        let a = ExactAllocator::default()
+            .allocate(&costs, 7.5, d_total, &bounds)
+            .unwrap();
+        a.validate(&costs, 7.5, d_total, &bounds).unwrap();
+        assert!(a.is_work_conserving(&costs, 7.5));
+    }
+
+    #[test]
+    fn exact_beats_or_matches_eta() {
+        for k in [4usize, 8, 10, 14] {
+            let costs = het_costs(k);
+            let d_total = 3_000 * k as u64;
+            let bounds = Bounds::proportional(d_total, k, 0.2, 2.5);
+            for t_cycle in [7.5, 15.0] {
+                let ex = ExactAllocator::default()
+                    .allocate(&costs, t_cycle, d_total, &bounds)
+                    .unwrap();
+                let eta = EtaAllocator
+                    .allocate(&costs, t_cycle, d_total, &bounds)
+                    .unwrap();
+                assert!(
+                    ex.max_staleness() <= eta.max_staleness(),
+                    "k={k} T={t_cycle}: exact {} > eta {}",
+                    ex.max_staleness(),
+                    eta.max_staleness()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn exact_gets_low_staleness_on_heterogeneous_fleet() {
+        let costs = het_costs(20);
+        let d_total = 60_000;
+        let bounds = Bounds::proportional(d_total, 20, 0.2, 2.5);
+        let a = ExactAllocator::default()
+            .allocate(&costs, 7.5, d_total, &bounds)
+            .unwrap();
+        // the paper's headline: optimized allocation keeps max staleness ~1
+        assert!(a.max_staleness() <= 1, "staleness {} tau={:?}", a.max_staleness(), a.tau);
+    }
+
+    #[test]
+    fn exact_is_optimal_vs_bruteforce_small() {
+        // K = 2, tiny universe: brute force all (d_0, d_1) splits
+        let costs = het_costs(2);
+        let d_total = 600u64;
+        let bounds = Bounds::new(100, 500);
+        let t_cycle = 2.0;
+        let mut brute_best = u64::MAX;
+        for d0 in bounds.d_lo..=bounds.d_hi.min(d_total - bounds.d_lo) {
+            let d1 = d_total - d0;
+            if !bounds.contains(d1) {
+                continue;
+            }
+            let tau = common::work_conserving_tau(&costs, &[d0, d1], t_cycle);
+            let s = tau.iter().max().unwrap() - tau.iter().min().unwrap();
+            brute_best = brute_best.min(s);
+        }
+        let a = ExactAllocator::default()
+            .allocate(&costs, t_cycle, d_total, &bounds)
+            .unwrap();
+        assert_eq!(a.max_staleness(), brute_best);
+    }
+
+    #[test]
+    fn single_learner_gets_everything() {
+        let costs = het_costs(1);
+        let bounds = Bounds::new(1, 10_000);
+        let a = ExactAllocator::default()
+            .allocate(&costs, 15.0, 5_000, &bounds)
+            .unwrap();
+        assert_eq!(a.d, vec![5_000]);
+        assert_eq!(a.max_staleness(), 0);
+    }
+
+    #[test]
+    fn errors_when_bounds_exclude_total() {
+        let costs = het_costs(3);
+        let bounds = Bounds::new(100, 200);
+        assert!(ExactAllocator::default()
+            .allocate(&costs, 15.0, 10_000, &bounds)
+            .is_err());
+    }
+}

@@ -1,0 +1,256 @@
+//! Max-constrained staleness minimization — the paper's stated future
+//! work (§III: "In the future work, we will look into finding an
+//! efficient solution for the max-constrained problem").
+//!
+//! Staleness-aware async-SGD [10] operates with a *preset maximum* of
+//! local updates: the aggregator waits until at least one learner has
+//! performed `τ_max` epochs. The max-constrained allocation problem is
+//! therefore: minimize `max |τ_k − τ_l|` subject to (7b)–(7f) **and**
+//! `max_k τ_k = τ_max`.
+//!
+//! The reduced-space structure solves this too: it is exactly the
+//! window search of [`super::exact`] with the window *anchored at the
+//! top* — `[τ_max − z, τ_max]` — plus the extra requirement that at
+//! least one learner actually sits at `τ_max`. Scanning `z` upward
+//! yields the provably minimal staleness for the preset.
+
+use anyhow::{anyhow, ensure, Result};
+
+use crate::allocation::{common, Allocation, TaskAllocator};
+use crate::costmodel::{Bounds, LearnerCost};
+
+/// Exact allocator for the max-constrained problem.
+#[derive(Debug, Clone, Copy)]
+pub struct MaxConstrainedAllocator {
+    /// The preset maximum updates `τ_max` (the [10]-style front).
+    pub tau_max: u64,
+}
+
+impl MaxConstrainedAllocator {
+    pub fn new(tau_max: u64) -> Self {
+        assert!(tau_max >= 1, "τ_max must be at least one update");
+        Self { tau_max }
+    }
+
+    /// Integer d range on learner `k` for `τ_k(d) ∈ [lo_tau, hi_tau]`
+    /// (reuses the exact allocator's interval algebra).
+    fn d_interval(
+        cost: &LearnerCost,
+        lo_tau: u64,
+        hi_tau: u64,
+        t_cycle: f64,
+        bounds: &Bounds,
+    ) -> Option<(u64, u64)> {
+        // τ ≥ lo_tau  ⟺  d ≤ d̄(lo_tau)
+        let hi = cost
+            .d_max_int_for_tau(lo_tau, t_cycle)?
+            .min(bounds.d_hi);
+        if hi < bounds.d_lo {
+            return None;
+        }
+        // τ ≤ hi_tau  ⟺  d ≥ d̄(hi_tau + 1) + 1
+        let lo = match cost.d_max_int_for_tau(hi_tau + 1, t_cycle) {
+            Some(cap) => cap.saturating_add(1).max(bounds.d_lo),
+            None => bounds.d_lo,
+        };
+        (lo <= hi).then_some((lo, hi))
+    }
+
+    /// d range forcing `τ_k(d) = tau` exactly.
+    fn d_interval_exact_tau(
+        cost: &LearnerCost,
+        tau: u64,
+        t_cycle: f64,
+        bounds: &Bounds,
+    ) -> Option<(u64, u64)> {
+        Self::d_interval(cost, tau, tau, t_cycle, bounds)
+    }
+}
+
+impl TaskAllocator for MaxConstrainedAllocator {
+    fn allocate(
+        &self,
+        costs: &[LearnerCost],
+        t_cycle: f64,
+        d_total: u64,
+        bounds: &Bounds,
+    ) -> Result<Allocation> {
+        let k = costs.len();
+        ensure!(k > 0, "no learners");
+        let tau_max = self.tau_max;
+
+        // learners that CAN hit τ_max within the box
+        let anchors: Vec<usize> = (0..k)
+            .filter(|&i| {
+                Self::d_interval_exact_tau(&costs[i], tau_max, t_cycle, bounds).is_some()
+            })
+            .collect();
+        ensure!(
+            !anchors.is_empty(),
+            "no learner can reach τ_max = {tau_max} within T = {t_cycle}s and the d-bounds"
+        );
+
+        for z in 0..=tau_max {
+            let lo_tau = tau_max - z;
+            // every learner needs τ ∈ [lo_tau, tau_max]
+            let intervals: Option<Vec<(u64, u64)>> = costs
+                .iter()
+                .map(|c| Self::d_interval(c, lo_tau, tau_max, t_cycle, bounds))
+                .collect();
+            let Some(intervals) = intervals else { continue };
+            let sum_lo: u64 = intervals.iter().map(|&(l, _)| l).sum();
+            let sum_hi: u64 = intervals.iter().map(|&(_, h)| h).sum();
+            if !(sum_lo <= d_total && d_total <= sum_hi) {
+                continue;
+            }
+
+            // anchor each candidate learner at τ_max in turn and check
+            // the residual mass still fits the other intervals
+            for &a in &anchors {
+                let Some((al, ah)) =
+                    Self::d_interval_exact_tau(&costs[a], tau_max, t_cycle, bounds)
+                else {
+                    continue;
+                };
+                let rest_lo: u64 = intervals
+                    .iter()
+                    .enumerate()
+                    .filter(|&(i, _)| i != a)
+                    .map(|(_, &(l, _))| l)
+                    .sum();
+                let rest_hi: u64 = intervals
+                    .iter()
+                    .enumerate()
+                    .filter(|&(i, _)| i != a)
+                    .map(|(_, &(_, h))| h)
+                    .sum();
+                // pick anchor batch: smallest that leaves a feasible rest
+                let need_lo = d_total.saturating_sub(rest_hi).max(al);
+                let need_hi = d_total.saturating_sub(rest_lo).min(ah);
+                if need_lo > need_hi {
+                    continue;
+                }
+                let anchor_d = need_lo;
+                // fill the rest from lo toward hi
+                let mut d: Vec<u64> = intervals.iter().map(|&(l, _)| l).collect();
+                d[a] = anchor_d;
+                let mut placed: u64 = d.iter().sum();
+                for i in 0..k {
+                    if i == a {
+                        continue;
+                    }
+                    let take = (d_total - placed).min(intervals[i].1 - d[i]);
+                    d[i] += take;
+                    placed += take;
+                    if placed == d_total {
+                        break;
+                    }
+                }
+                if placed != d_total {
+                    continue;
+                }
+                let tau = common::work_conserving_tau(costs, &d, t_cycle);
+                let alloc = Allocation { tau, d };
+                debug_assert_eq!(*alloc.tau.iter().max().unwrap(), tau_max);
+                debug_assert!(alloc.max_staleness() <= z);
+                return Ok(alloc);
+            }
+        }
+        Err(anyhow!(
+            "max-constrained problem infeasible for τ_max = {tau_max}"
+        ))
+    }
+
+    fn name(&self) -> &'static str {
+        "maxcon"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::allocation::exact::ExactAllocator;
+    use crate::config::ScenarioConfig;
+
+    fn scenario(k: usize, t: f64) -> crate::config::Scenario {
+        ScenarioConfig::paper_default()
+            .with_learners(k)
+            .with_cycle(t)
+            .build()
+    }
+
+    #[test]
+    fn front_learner_hits_tau_max_exactly() {
+        // presets anchored on the unconstrained optimum's front are
+        // always feasible (small τ_max can be genuinely infeasible:
+        // fast nodes cannot be held below ~3 epochs within d ≤ d_u)
+        let s = scenario(10, 15.0);
+        let free = ExactAllocator::default()
+            .allocate(&s.costs, 15.0, s.total_samples(), &s.bounds)
+            .unwrap();
+        let front = *free.tau.iter().max().unwrap();
+        for tau_max in [front, front + 1] {
+            let a = MaxConstrainedAllocator::new(tau_max)
+                .allocate(&s.costs, 15.0, s.total_samples(), &s.bounds)
+                .unwrap_or_else(|e| panic!("tau_max={tau_max}: {e}"));
+            assert_eq!(*a.tau.iter().max().unwrap(), tau_max);
+            a.validate(&s.costs, 15.0, s.total_samples(), &s.bounds)
+                .unwrap();
+            assert!(a.is_work_conserving(&s.costs, 15.0));
+        }
+    }
+
+    #[test]
+    fn staleness_is_minimal_for_the_preset() {
+        // for an achievable τ_max near the unconstrained optimum the
+        // staleness must match the unconstrained exact solution
+        let s = scenario(12, 15.0);
+        let free = ExactAllocator::default()
+            .allocate(&s.costs, 15.0, s.total_samples(), &s.bounds)
+            .unwrap();
+        let tau_front = *free.tau.iter().max().unwrap();
+        let anchored = MaxConstrainedAllocator::new(tau_front)
+            .allocate(&s.costs, 15.0, s.total_samples(), &s.bounds)
+            .unwrap();
+        assert!(anchored.max_staleness() <= free.max_staleness() + 1);
+    }
+
+    #[test]
+    fn unreachable_tau_max_errors() {
+        let s = scenario(6, 7.5);
+        assert!(MaxConstrainedAllocator::new(10_000)
+            .allocate(&s.costs, 7.5, s.total_samples(), &s.bounds)
+            .is_err());
+    }
+
+    #[test]
+    fn higher_preset_forces_more_staleness() {
+        // pushing the front far above what slow nodes can do must cost
+        // staleness monotonically (weakly)
+        let s = scenario(10, 15.0);
+        let mut prev = 0u64;
+        for tau_max in 1..=6u64 {
+            if let Ok(a) = MaxConstrainedAllocator::new(tau_max).allocate(
+                &s.costs,
+                15.0,
+                s.total_samples(),
+                &s.bounds,
+            ) {
+                let stale = a.max_staleness();
+                if tau_max >= 4 {
+                    assert!(
+                        stale >= prev || stale == 0,
+                        "tau_max={tau_max}: staleness {stale} < prev {prev}"
+                    );
+                }
+                prev = stale;
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn zero_tau_max_rejected() {
+        MaxConstrainedAllocator::new(0);
+    }
+}

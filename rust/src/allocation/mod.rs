@@ -1,0 +1,266 @@
+//! Task allocation — the paper's contribution and its baselines.
+//!
+//! Five allocators, all producing an [`Allocation`] of per-learner
+//! `(τ_k, d_k)`:
+//!
+//! | kind | paper role | module |
+//! |---|---|---|
+//! | [`AllocatorKind::Relaxed`] | "optimizer-based/numerical" curve: relaxed problem (8) via augmented Lagrangian, floored, SAI-repaired | [`relaxed`] |
+//! | [`AllocatorKind::Sai`] | "SAI" curve: KKT-structured suggest + suggest-and-improve (§IV) | [`sai`] |
+//! | [`AllocatorKind::Exact`] | optimality yardstick: exact integer window search over the reduced space (DESIGN.md) | [`exact`] |
+//! | [`AllocatorKind::Eta`] | asynchronous Equal Task Allocation baseline [10] | [`eta`] |
+//! | [`AllocatorKind::Sync`] | synchronous MEL of [9]: common τ, `t_k ≤ T` | [`sync`] |
+
+pub mod common;
+pub mod eta;
+pub mod exact;
+pub mod maxcon;
+pub mod relaxed;
+pub mod sai;
+pub mod sync;
+
+use anyhow::Result;
+
+pub use crate::costmodel::Bounds;
+use crate::costmodel::LearnerCost;
+use crate::staleness;
+
+/// A complete assignment for one global cycle.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Allocation {
+    /// Local updates per learner `τ_k`.
+    pub tau: Vec<u64>,
+    /// Batch sizes per learner `d_k`.
+    pub d: Vec<u64>,
+}
+
+impl Allocation {
+    pub fn k(&self) -> usize {
+        self.tau.len()
+    }
+
+    /// Maximum staleness (eq. 6).
+    pub fn max_staleness(&self) -> u64 {
+        staleness::max_staleness(&self.tau)
+    }
+
+    /// Average pairwise staleness (eq. 13).
+    pub fn avg_staleness(&self) -> f64 {
+        staleness::avg_staleness(&self.tau)
+    }
+
+    /// Cycle time of each learner under eq. (5).
+    pub fn times(&self, costs: &[LearnerCost]) -> Vec<f64> {
+        self.tau
+            .iter()
+            .zip(&self.d)
+            .zip(costs)
+            .map(|((&t, &d), c)| c.time(t as f64, d as f64))
+            .collect()
+    }
+
+    /// Mean fraction of the cycle clock each learner is busy.
+    pub fn mean_utilization(&self, costs: &[LearnerCost], t_cycle: f64) -> f64 {
+        let ts = self.times(costs);
+        ts.iter().map(|t| (t / t_cycle).min(1.0)).sum::<f64>() / ts.len().max(1) as f64
+    }
+
+    /// Hard-constraint check: deadlines (7b as `≤ T` after flooring),
+    /// total batch (7c), bounds (7f), positivity (7d/7e — τ may be 0 only
+    /// if even one epoch misses the deadline, the paper's infeasibility
+    /// marker).
+    pub fn validate(
+        &self,
+        costs: &[LearnerCost],
+        t_cycle: f64,
+        d_total: u64,
+        bounds: &Bounds,
+    ) -> Result<(), String> {
+        let k = self.k();
+        if self.d.len() != k || costs.len() != k {
+            return Err(format!(
+                "length mismatch: tau={} d={} costs={}",
+                k,
+                self.d.len(),
+                costs.len()
+            ));
+        }
+        let sum: u64 = self.d.iter().sum();
+        if sum != d_total {
+            return Err(format!("sum d = {sum} != total {d_total}"));
+        }
+        for i in 0..k {
+            if !bounds.contains(self.d[i]) {
+                return Err(format!(
+                    "d[{i}] = {} outside [{}, {}]",
+                    self.d[i], bounds.d_lo, bounds.d_hi
+                ));
+            }
+            let t = costs[i].time(self.tau[i] as f64, self.d[i] as f64);
+            if t > t_cycle * (1.0 + 1e-9) {
+                return Err(format!(
+                    "learner {i}: t = {t:.4}s exceeds T = {t_cycle}s (tau={}, d={})",
+                    self.tau[i], self.d[i]
+                ));
+            }
+        }
+        Ok(())
+    }
+
+    /// Work-conserving check for *asynchronous* allocations: each learner
+    /// does the most epochs that fit in `T` (one more would miss it) —
+    /// the integer realization of the full-duration equality (7b).
+    pub fn is_work_conserving(&self, costs: &[LearnerCost], t_cycle: f64) -> bool {
+        self.tau.iter().zip(&self.d).zip(costs).all(|((&t, &d), c)| {
+            c.time((t + 1) as f64, d as f64) > t_cycle * (1.0 - 1e-12)
+        })
+    }
+}
+
+/// Which allocation algorithm to run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AllocatorKind {
+    /// Exact integer window search (optimality yardstick).
+    Exact,
+    /// Relaxed problem (8) via augmented Lagrangian + floor + SAI repair.
+    Relaxed,
+    /// KKT-seeded suggest-and-improve (the paper's analytical path).
+    Sai,
+    /// Equal task allocation, asynchronous [10].
+    Eta,
+    /// Synchronous MEL [9]: common τ for all learners.
+    Sync,
+    /// Work-max within a staleness budget of 1 (exact search in budget
+    /// mode) — the paper's observed async operating point (Fig. 2).
+    WorkMax,
+}
+
+impl AllocatorKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            AllocatorKind::Exact => "exact",
+            AllocatorKind::Relaxed => "relaxed",
+            AllocatorKind::Sai => "sai",
+            AllocatorKind::Eta => "eta",
+            AllocatorKind::Sync => "sync",
+            AllocatorKind::WorkMax => "workmax",
+        }
+    }
+
+    /// Parse from a CLI token.
+    pub fn parse(s: &str) -> Option<AllocatorKind> {
+        AllocatorKind::all()
+            .into_iter()
+            .find(|k| k.name().eq_ignore_ascii_case(s))
+    }
+
+    /// All kinds, for sweeps.
+    pub fn all() -> [AllocatorKind; 6] {
+        [
+            AllocatorKind::Exact,
+            AllocatorKind::Relaxed,
+            AllocatorKind::Sai,
+            AllocatorKind::Eta,
+            AllocatorKind::Sync,
+            AllocatorKind::WorkMax,
+        ]
+    }
+}
+
+impl std::str::FromStr for AllocatorKind {
+    type Err = std::io::Error;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        AllocatorKind::parse(s).ok_or_else(|| {
+            std::io::Error::new(
+                std::io::ErrorKind::InvalidInput,
+                format!("unknown allocator '{s}' (exact|relaxed|sai|eta|sync|workmax)"),
+            )
+        })
+    }
+}
+
+/// Object-safe allocator interface.
+pub trait TaskAllocator {
+    /// Compute an allocation for one global cycle.
+    fn allocate(
+        &self,
+        costs: &[LearnerCost],
+        t_cycle: f64,
+        d_total: u64,
+        bounds: &Bounds,
+    ) -> Result<Allocation>;
+
+    /// Short name for reports.
+    fn name(&self) -> &'static str;
+}
+
+/// Instantiate an allocator by kind with default options.
+pub fn make_allocator(kind: AllocatorKind) -> Box<dyn TaskAllocator + Send + Sync> {
+    match kind {
+        AllocatorKind::Exact => Box::new(exact::ExactAllocator::default()),
+        AllocatorKind::Relaxed => Box::new(relaxed::RelaxedAllocator::default()),
+        AllocatorKind::Sai => Box::new(sai::SaiAllocator::default()),
+        AllocatorKind::Eta => Box::new(eta::EtaAllocator),
+        AllocatorKind::Sync => Box::new(sync::SyncAllocator::default()),
+        AllocatorKind::WorkMax => Box::new(exact::ExactAllocator {
+            opts: exact::ExactOptions { staleness_budget: Some(1), ..Default::default() },
+        }),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn costs2() -> Vec<LearnerCost> {
+        vec![
+            LearnerCost::new(4.5e-4, 1e-4, 0.3),
+            LearnerCost::new(1.6e-3, 1.2e-4, 0.4),
+        ]
+    }
+
+    #[test]
+    fn validate_catches_sum_mismatch() {
+        let a = Allocation { tau: vec![2, 2], d: vec![100, 100] };
+        let b = Bounds::new(50, 500);
+        let err = a.validate(&costs2(), 15.0, 300, &b).unwrap_err();
+        assert!(err.contains("sum"), "{err}");
+    }
+
+    #[test]
+    fn validate_catches_deadline_violation() {
+        let a = Allocation { tau: vec![1000, 2], d: vec![100, 100] };
+        let b = Bounds::new(50, 500);
+        let err = a.validate(&costs2(), 1.0, 200, &b).unwrap_err();
+        assert!(err.contains("exceeds"), "{err}");
+    }
+
+    #[test]
+    fn validate_catches_bounds() {
+        let a = Allocation { tau: vec![1, 1], d: vec![10, 390] };
+        let b = Bounds::new(50, 500);
+        let err = a.validate(&costs2(), 100.0, 400, &b).unwrap_err();
+        assert!(err.contains("outside"), "{err}");
+    }
+
+    #[test]
+    fn work_conserving_detects_slack() {
+        let costs = costs2();
+        let t_cycle = 15.0;
+        let d = 1000u64;
+        let tau_max = costs[0].tau_max_int(d, t_cycle).unwrap();
+        let good = Allocation { tau: vec![tau_max], d: vec![d] };
+        assert!(good.is_work_conserving(&costs[..1], t_cycle));
+        let lazy = Allocation { tau: vec![tau_max - 1], d: vec![d] };
+        assert!(!lazy.is_work_conserving(&costs[..1], t_cycle));
+    }
+
+    #[test]
+    fn kind_names_unique() {
+        let names: Vec<_> = AllocatorKind::all().iter().map(|k| k.name()).collect();
+        let mut dedup = names.clone();
+        dedup.dedup();
+        assert_eq!(names.len(), 6);
+        assert_eq!(dedup.len(), 6);
+    }
+}

@@ -1,0 +1,146 @@
+//! The paper's "optimizer-based/numerical" path: solve the relaxed
+//! non-convex QCLP (8) with the augmented-Lagrangian solver, floor the
+//! real solution back to integers, and repair with SAI steps — exactly
+//! the §IV-A pipeline ("relaxing the integer constraints … solving the
+//! relaxed problem, then flooring the obtained real results back into
+//! integers", with "constraint checks and … suggest-and-improve steps"
+//! when the non-convex solve lands infeasible).
+
+use anyhow::{anyhow, ensure, Result};
+
+use crate::allocation::sai::SaiAllocator;
+use crate::allocation::{common, Allocation, TaskAllocator};
+use crate::costmodel::{Bounds, LearnerCost};
+use crate::solver::{solve_relaxed, RelaxedOptions};
+
+/// Options for [`RelaxedAllocator`].
+#[derive(Debug, Clone, Copy)]
+pub struct RelaxedAllocatorOptions {
+    pub solver: RelaxedOptions,
+    /// Accept the numerical solution only below this constraint violation
+    /// (relative); otherwise fall back to the SAI suggestion (§IV-A).
+    pub max_violation: f64,
+    /// Improve-loop round cap.
+    pub improve_rounds: usize,
+}
+
+impl Default for RelaxedAllocatorOptions {
+    fn default() -> Self {
+        Self {
+            solver: RelaxedOptions::default(),
+            max_violation: 5e-2,
+            improve_rounds: 400,
+        }
+    }
+}
+
+/// Relax → numerical solve → floor → SAI repair.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct RelaxedAllocator {
+    pub opts: RelaxedAllocatorOptions,
+}
+
+impl TaskAllocator for RelaxedAllocator {
+    fn allocate(
+        &self,
+        costs: &[LearnerCost],
+        t_cycle: f64,
+        d_total: u64,
+        bounds: &Bounds,
+    ) -> Result<Allocation> {
+        ensure!(!costs.is_empty(), "no learners");
+        let sol = solve_relaxed(costs, t_cycle, d_total, bounds, &self.opts.solver);
+
+        // §IV-A: "in some situations, the approach … resulted in
+        // infeasible solutions. In that case, we performed constraint
+        // checks and then used the initial solution to carry out
+        // suggest-and-improve steps" — our constraint check is the
+        // relative violation; the fallback suggestion is the SAI one.
+        let d_real: Vec<f64> = if sol.feasibility <= self.opts.max_violation {
+            sol.d
+        } else {
+            SaiAllocator::default()
+                .suggest(costs, t_cycle, d_total, bounds)?
+                .d
+        };
+
+        let mut d = common::integerize_batches(&d_real, d_total, bounds)
+            .ok_or_else(|| anyhow!("bounds make Σd = {d_total} unreachable"))?;
+        let alloc = common::improve_to_local_optimum(
+            costs,
+            &mut d,
+            t_cycle,
+            bounds,
+            self.opts.improve_rounds,
+        );
+        debug_assert!(alloc.validate(costs, t_cycle, d_total, bounds).is_ok());
+        Ok(alloc)
+    }
+
+    fn name(&self) -> &'static str {
+        "relaxed"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::allocation::eta::EtaAllocator;
+    use crate::allocation::exact::ExactAllocator;
+
+    fn het_costs(k: usize) -> Vec<LearnerCost> {
+        (0..k)
+            .map(|i| {
+                let c2 = if i % 2 == 0 { 4.5e-4 } else { 1.6e-3 };
+                LearnerCost::new(c2, 1.1e-4 + 1e-5 * (i % 4) as f64, 0.3 + 0.04 * (i % 3) as f64)
+            })
+            .collect()
+    }
+
+    #[test]
+    fn relaxed_is_feasible_and_work_conserving() {
+        let costs = het_costs(10);
+        let d_total = 30_000u64;
+        let bounds = Bounds::proportional(d_total, 10, 0.2, 2.5);
+        let a = RelaxedAllocator::default()
+            .allocate(&costs, 7.5, d_total, &bounds)
+            .unwrap();
+        a.validate(&costs, 7.5, d_total, &bounds).unwrap();
+        assert!(a.is_work_conserving(&costs, 7.5));
+    }
+
+    #[test]
+    fn relaxed_close_to_exact_optimum() {
+        // the paper's observation: numerical and SAI curves nearly match;
+        // both should land within 1 of the exact optimum here
+        for k in [6usize, 10, 14] {
+            let costs = het_costs(k);
+            let d_total = 3_000 * k as u64;
+            let bounds = Bounds::proportional(d_total, k, 0.2, 2.5);
+            let rel = RelaxedAllocator::default()
+                .allocate(&costs, 15.0, d_total, &bounds)
+                .unwrap();
+            let ex = ExactAllocator::default()
+                .allocate(&costs, 15.0, d_total, &bounds)
+                .unwrap();
+            assert!(
+                rel.max_staleness() <= ex.max_staleness() + 1,
+                "k={k}: relaxed {} vs exact {}",
+                rel.max_staleness(),
+                ex.max_staleness()
+            );
+        }
+    }
+
+    #[test]
+    fn relaxed_beats_eta() {
+        let costs = het_costs(20);
+        let d_total = 60_000u64;
+        let bounds = Bounds::proportional(d_total, 20, 0.2, 2.5);
+        let rel = RelaxedAllocator::default()
+            .allocate(&costs, 7.5, d_total, &bounds)
+            .unwrap();
+        let eta = EtaAllocator.allocate(&costs, 7.5, d_total, &bounds).unwrap();
+        assert!(rel.max_staleness() < eta.max_staleness());
+    }
+}

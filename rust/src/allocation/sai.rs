@@ -1,0 +1,246 @@
+//! The paper's analytical path: KKT-structured **suggest** followed by
+//! **suggest-and-improve** to integer feasibility (§IV, Appendices A/B).
+//!
+//! Theorem 1 gives the stationary point structure of the relaxed
+//! problem: with the box multipliers `ν, ν'` inactive, eq. (11) reads
+//! `τ*_k = −(λ_k C¹_k + ω)/(λ_k C²_k)` with the pair multipliers `μ, μ'`
+//! (through `u, u'`, eqs. 19–24) pushing the `τ_k` *toward each other* —
+//! at the unconstrained optimum the interior learners share a **common
+//! τ̄**, and each `d_k` follows from the full-duration equality (8c).
+//! Learners whose forced batch `d_k(τ̄)` leaves the box [d_l, d_u] pin
+//! to the boundary (their `ν/ν'` activate) and deviate minimally.
+//!
+//! The **suggest** step therefore reduces to a one-dimensional root
+//! find: the largest τ̄ with `Σ_k clamp(d_k(τ̄), d_l, d_u) ≥ d` — a
+//! non-increasing function, handled by [`bisect_decreasing`]. The
+//! **improve** step is the shared integer local search in
+//! [`common::improve_to_local_optimum`].
+
+use anyhow::{anyhow, ensure, Result};
+
+use crate::allocation::{common, Allocation, TaskAllocator};
+use crate::costmodel::{Bounds, LearnerCost};
+use crate::solver::bisect_decreasing;
+
+/// Options for [`SaiAllocator`].
+#[derive(Debug, Clone, Copy)]
+pub struct SaiOptions {
+    /// Bisection tolerance on τ̄.
+    pub tau_tol: f64,
+    /// Improve-loop round cap.
+    pub improve_rounds: usize,
+}
+
+impl Default for SaiOptions {
+    fn default() -> Self {
+        Self { tau_tol: 1e-9, improve_rounds: 400 }
+    }
+}
+
+/// Continuous suggestion produced by the KKT-structured suggest step.
+#[derive(Debug, Clone)]
+pub struct Suggestion {
+    /// The common interior τ̄.
+    pub tau_bar: f64,
+    /// Clamped continuous batches at τ̄ (before sum correction).
+    pub d: Vec<f64>,
+    /// Which learners pinned to a box face (ν or ν' active).
+    pub clamped: Vec<bool>,
+}
+
+/// KKT-seeded suggest-and-improve allocator (the paper's "SAI" curve).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct SaiAllocator {
+    pub opts: SaiOptions,
+}
+
+impl SaiAllocator {
+    /// Total clamped batch demand at common τ (non-increasing in τ).
+    fn total_at_tau(costs: &[LearnerCost], tau: f64, t_cycle: f64, bounds: &Bounds) -> f64 {
+        costs
+            .iter()
+            .map(|c| {
+                c.d_of_tau(tau, t_cycle)
+                    .map(|d| d.clamp(bounds.d_lo as f64, bounds.d_hi as f64))
+                    .unwrap_or(0.0)
+            })
+            .sum()
+    }
+
+    /// The suggest step: common τ̄ + clamped batches.
+    pub fn suggest(
+        &self,
+        costs: &[LearnerCost],
+        t_cycle: f64,
+        d_total: u64,
+        bounds: &Bounds,
+    ) -> Result<Suggestion> {
+        // τ upper bracket: fastest learner at the smallest batch
+        let tau_ub = costs
+            .iter()
+            .filter_map(|c| c.tau_of_d(bounds.d_lo as f64, t_cycle))
+            .fold(f64::NAN, f64::max);
+        ensure!(
+            tau_ub.is_finite() && tau_ub >= 0.0,
+            "no learner can exchange the model within T = {t_cycle}s"
+        );
+        let target = d_total as f64;
+        let tau_bar = bisect_decreasing(0.0, tau_ub.max(1e-9), self.opts.tau_tol, target, |t| {
+            Self::total_at_tau(costs, t, t_cycle, bounds)
+        })
+        .ok_or_else(|| {
+            anyhow!(
+                "Σ clamp(d_k(0)) = {:.1} < d = {d_total}: infeasible even at τ = 0",
+                Self::total_at_tau(costs, 0.0, t_cycle, bounds)
+            )
+        })?;
+
+        let mut d = Vec::with_capacity(costs.len());
+        let mut clamped = Vec::with_capacity(costs.len());
+        for c in costs {
+            let raw = c.d_of_tau(tau_bar, t_cycle).unwrap_or(0.0);
+            let cl = raw.clamp(bounds.d_lo as f64, bounds.d_hi as f64);
+            clamped.push((cl - raw).abs() > 1e-9);
+            d.push(cl);
+        }
+        // shave any surplus off the *interior* learners proportionally so
+        // Σ d = d exactly (keeps clamped learners on their KKT face)
+        let sum: f64 = d.iter().sum();
+        let surplus = sum - target;
+        if surplus > 1e-9 {
+            let interior: f64 = d
+                .iter()
+                .zip(&clamped)
+                .filter(|(_, &cl)| !cl)
+                .map(|(&v, _)| v - bounds.d_lo as f64)
+                .sum();
+            if interior > surplus {
+                for (v, &cl) in d.iter_mut().zip(&clamped) {
+                    if !cl {
+                        *v -= surplus * (*v - bounds.d_lo as f64) / interior;
+                    }
+                }
+            }
+        }
+        Ok(Suggestion { tau_bar, d, clamped })
+    }
+}
+
+impl TaskAllocator for SaiAllocator {
+    fn allocate(
+        &self,
+        costs: &[LearnerCost],
+        t_cycle: f64,
+        d_total: u64,
+        bounds: &Bounds,
+    ) -> Result<Allocation> {
+        ensure!(!costs.is_empty(), "no learners");
+        let sug = self.suggest(costs, t_cycle, d_total, bounds)?;
+        let mut d = common::integerize_batches(&sug.d, d_total, bounds)
+            .ok_or_else(|| anyhow!("bounds make Σd = {d_total} unreachable"))?;
+        let alloc =
+            common::improve_to_local_optimum(costs, &mut d, t_cycle, bounds, self.opts.improve_rounds);
+        debug_assert!(alloc.validate(costs, t_cycle, d_total, bounds).is_ok());
+        Ok(alloc)
+    }
+
+    fn name(&self) -> &'static str {
+        "sai"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::allocation::eta::EtaAllocator;
+
+    fn het_costs(k: usize) -> Vec<LearnerCost> {
+        (0..k)
+            .map(|i| {
+                let c2 = if i % 2 == 0 { 4.5e-4 } else { 1.6e-3 };
+                LearnerCost::new(c2, 1.1e-4 + 1e-5 * (i % 4) as f64, 0.3 + 0.04 * (i % 3) as f64)
+            })
+            .collect()
+    }
+
+    #[test]
+    fn suggest_hits_total_exactly_when_interior() {
+        let costs = het_costs(8);
+        let d_total = 24_000u64;
+        let bounds = Bounds::proportional(d_total, 8, 0.2, 2.5);
+        let s = SaiAllocator::default()
+            .suggest(&costs, 15.0, d_total, &bounds)
+            .unwrap();
+        let sum: f64 = s.d.iter().sum();
+        assert!((sum - d_total as f64).abs() < 1.0, "sum={sum}");
+        assert!(s.tau_bar > 0.0);
+    }
+
+    #[test]
+    fn suggest_common_tau_for_unclamped_learners() {
+        let costs = het_costs(10);
+        let d_total = 30_000u64;
+        let bounds = Bounds::proportional(d_total, 10, 0.2, 2.5);
+        let t_cycle = 15.0;
+        let s = SaiAllocator::default()
+            .suggest(&costs, t_cycle, d_total, &bounds)
+            .unwrap();
+        for (i, (&di, &cl)) in s.d.iter().zip(&s.clamped).enumerate() {
+            if !cl {
+                // interior learners sit on the t = T manifold at τ̄ (before
+                // the proportional shave, which only moves them slightly)
+                let tau_i = costs[i].tau_of_d(di, t_cycle).unwrap();
+                assert!(
+                    (tau_i - s.tau_bar).abs() < 0.35,
+                    "learner {i}: τ={tau_i} vs τ̄={}",
+                    s.tau_bar
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn sai_feasible_work_conserving_and_beats_eta() {
+        for k in [6usize, 10, 16, 20] {
+            let costs = het_costs(k);
+            let d_total = 3_000 * k as u64;
+            let bounds = Bounds::proportional(d_total, k, 0.2, 2.5);
+            for t_cycle in [7.5, 15.0] {
+                let sai = SaiAllocator::default()
+                    .allocate(&costs, t_cycle, d_total, &bounds)
+                    .unwrap();
+                sai.validate(&costs, t_cycle, d_total, &bounds).unwrap();
+                assert!(sai.is_work_conserving(&costs, t_cycle));
+                let eta = EtaAllocator.allocate(&costs, t_cycle, d_total, &bounds).unwrap();
+                assert!(
+                    sai.max_staleness() <= eta.max_staleness(),
+                    "k={k} T={t_cycle}: sai {} > eta {}",
+                    sai.max_staleness(),
+                    eta.max_staleness()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn sai_near_zero_staleness_on_wide_bounds() {
+        // with a loose box the KKT point is interior -> staleness ≤ 1
+        let costs = het_costs(12);
+        let d_total = 36_000u64;
+        let bounds = Bounds::proportional(d_total, 12, 0.05, 4.0);
+        let a = SaiAllocator::default()
+            .allocate(&costs, 15.0, d_total, &bounds)
+            .unwrap();
+        assert!(a.max_staleness() <= 1, "tau={:?}", a.tau);
+    }
+
+    #[test]
+    fn errors_when_infeasible_at_tau_zero() {
+        // one slow link: even τ = 0 can't place d within bounds
+        let costs = vec![LearnerCost::new(1e-3, 0.5, 5.0)]; // 0.5 s per sample comms
+        let bounds = Bounds::new(1, 100_000);
+        assert!(SaiAllocator::default()
+            .allocate(&costs, 7.5, 50_000, &bounds)
+            .is_err());
+    }
+}

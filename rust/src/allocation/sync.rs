@@ -1,0 +1,212 @@
+//! Synchronous MEL baseline — the scheme of the companion paper [9].
+//!
+//! All learners perform the *same* number of updates `τ` per global
+//! cycle (zero staleness by construction) with `t_k ≤ T`; the batch
+//! split is optimized so the common `τ` is as large as possible
+//! (accuracy in synchronous MEL is maximized by maximizing τ, §III).
+//! The cost is idle time: fast nodes finish early and wait — the
+//! inefficiency the paper's asynchronous scheme removes.
+//!
+//! For a candidate τ each learner can absorb at most
+//! `d̄_k(τ) = ⌊(T − C⁰_k)/(C¹_k + C²_k·τ)⌋` samples (eq. 5 at equality),
+//! so τ is feasible iff `Σ min(d̄_k(τ), d_u) ≥ d` and `d̄_k(τ) ≥ d_l` for
+//! enough... precisely: the capacity interval `[d_l, min(d̄_k, d_u)]`
+//! must admit a point summing to `d`. Capacity is non-increasing in τ,
+//! so the largest feasible τ is found by descending search.
+
+use anyhow::{anyhow, ensure, Result};
+
+use crate::allocation::{Allocation, TaskAllocator};
+use crate::costmodel::{Bounds, LearnerCost};
+
+/// Synchronous allocator options.
+#[derive(Debug, Clone, Copy)]
+pub struct SyncOptions {
+    /// Safety cap on the τ search (far above anything reachable).
+    pub tau_cap: u64,
+}
+
+impl Default for SyncOptions {
+    fn default() -> Self {
+        Self { tau_cap: 1_000_000 }
+    }
+}
+
+/// Synchronous MEL baseline [9].
+#[derive(Debug, Clone, Copy, Default)]
+pub struct SyncAllocator {
+    pub opts: SyncOptions,
+}
+
+impl SyncAllocator {
+    /// Per-learner max batch at common τ, clipped to the box. `None` if
+    /// learner cannot make the deadline even at `d_l`.
+    fn capacity(cost: &LearnerCost, tau: u64, t_cycle: f64, bounds: &Bounds) -> Option<u64> {
+        let cap = cost.d_max_int_for_tau(tau, t_cycle)?;
+        if cap < bounds.d_lo {
+            return None;
+        }
+        Some(cap.min(bounds.d_hi))
+    }
+
+    /// Is common-τ feasible? If so return the per-learner caps.
+    fn feasible(
+        costs: &[LearnerCost],
+        tau: u64,
+        t_cycle: f64,
+        d_total: u64,
+        bounds: &Bounds,
+    ) -> Option<Vec<u64>> {
+        let caps: Option<Vec<u64>> = costs
+            .iter()
+            .map(|c| Self::capacity(c, tau, t_cycle, bounds))
+            .collect();
+        let caps = caps?;
+        let hi: u64 = caps.iter().sum();
+        let lo: u64 = bounds.d_lo * costs.len() as u64;
+        (lo <= d_total && d_total <= hi).then_some(caps)
+    }
+}
+
+impl TaskAllocator for SyncAllocator {
+    fn allocate(
+        &self,
+        costs: &[LearnerCost],
+        t_cycle: f64,
+        d_total: u64,
+        bounds: &Bounds,
+    ) -> Result<Allocation> {
+        let k = costs.len();
+        ensure!(k > 0, "no learners");
+
+        // Upper bound on τ: the fastest learner at the smallest batch.
+        let tau_ub = costs
+            .iter()
+            .filter_map(|c| c.tau_max_int(bounds.d_lo, t_cycle))
+            .max()
+            .ok_or_else(|| anyhow!("no learner can exchange the model within T"))?
+            .min(self.opts.tau_cap);
+
+        // Largest feasible common τ (capacity is monotone non-increasing
+        // in τ, so binary search applies).
+        let mut lo_t = 0u64;
+        let mut hi_t = tau_ub;
+        if Self::feasible(costs, hi_t, t_cycle, d_total, bounds).is_some() {
+            lo_t = hi_t;
+        } else {
+            ensure!(
+                Self::feasible(costs, 0, t_cycle, d_total, bounds).is_some(),
+                "synchronous MEL infeasible even at τ = 0 (d = {d_total})"
+            );
+            while hi_t - lo_t > 1 {
+                let mid = lo_t + (hi_t - lo_t) / 2;
+                if Self::feasible(costs, mid, t_cycle, d_total, bounds).is_some() {
+                    lo_t = mid;
+                } else {
+                    hi_t = mid;
+                }
+            }
+        }
+        let tau = lo_t;
+        let caps = Self::feasible(costs, tau, t_cycle, d_total, bounds)
+            .expect("binary search invariant");
+
+        // Distribute d: start everyone at d_l, hand out the rest by
+        // largest remaining capacity (water-filling keeps it inside caps).
+        let mut d: Vec<u64> = vec![bounds.d_lo; k];
+        let rest = d_total - bounds.d_lo * k as u64;
+        // proportional-to-headroom pass
+        let headroom: Vec<u64> = caps.iter().zip(&d).map(|(&c, &x)| c - x).collect();
+        let total_head: u64 = headroom.iter().sum();
+        ensure!(total_head >= rest, "capacity accounting violated");
+        for i in 0..k {
+            let give = ((headroom[i] as u128 * rest as u128) / total_head.max(1) as u128) as u64;
+            d[i] += give;
+        }
+        let mut placed: u64 = d.iter().sum();
+        // exact fix-up
+        let mut idx = 0usize;
+        while placed < d_total {
+            if d[idx] < caps[idx] {
+                d[idx] += 1;
+                placed += 1;
+            }
+            idx = (idx + 1) % k;
+        }
+
+        // all learners run exactly the common τ — idle slack is implicit
+        let alloc = Allocation { tau: vec![tau; k], d };
+        debug_assert!(alloc.validate(costs, t_cycle, d_total, bounds).is_ok());
+        Ok(alloc)
+    }
+
+    fn name(&self) -> &'static str {
+        "sync"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn het_costs(k: usize) -> Vec<LearnerCost> {
+        (0..k)
+            .map(|i| {
+                let c2 = if i % 2 == 0 { 4.5e-4 } else { 1.6e-3 };
+                LearnerCost::new(c2, 1.1e-4, 0.35)
+            })
+            .collect()
+    }
+
+    #[test]
+    fn staleness_is_zero_by_construction() {
+        let costs = het_costs(9);
+        let bounds = Bounds::proportional(27_000, 9, 0.2, 2.5);
+        let a = SyncAllocator::default()
+            .allocate(&costs, 15.0, 27_000, &bounds)
+            .unwrap();
+        assert_eq!(a.max_staleness(), 0);
+        a.validate(&costs, 15.0, 27_000, &bounds).unwrap();
+    }
+
+    #[test]
+    fn tau_is_maximal_common_value() {
+        let costs = het_costs(6);
+        let d_total = 18_000;
+        let bounds = Bounds::proportional(d_total, 6, 0.2, 2.5);
+        let t_cycle = 15.0;
+        let a = SyncAllocator::default()
+            .allocate(&costs, t_cycle, d_total, &bounds)
+            .unwrap();
+        let tau = a.tau[0];
+        // τ+1 must be infeasible
+        assert!(
+            SyncAllocator::feasible(&costs, tau + 1, t_cycle, d_total, &bounds).is_none(),
+            "τ={tau} should be maximal"
+        );
+    }
+
+    #[test]
+    fn sync_wastes_fast_node_time() {
+        // the motivating inefficiency: with sync, fast learners idle
+        let costs = het_costs(8);
+        let d_total = 24_000;
+        let bounds = Bounds::proportional(d_total, 8, 0.2, 2.5);
+        let t_cycle = 7.5;
+        let a = SyncAllocator::default()
+            .allocate(&costs, t_cycle, d_total, &bounds)
+            .unwrap();
+        let util = a.mean_utilization(&costs, t_cycle);
+        assert!(util < 0.999, "sync should not be fully work-conserving: {util}");
+    }
+
+    #[test]
+    fn infeasible_when_total_exceeds_capacity() {
+        let costs = het_costs(2);
+        let bounds = Bounds::new(1, 2_000);
+        // 2 learners × cap 2000 < 10_000
+        assert!(SyncAllocator::default()
+            .allocate(&costs, 7.5, 10_000, &bounds)
+            .is_err());
+    }
+}

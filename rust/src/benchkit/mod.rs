@@ -1,0 +1,168 @@
+//! Minimal benchmarking harness (the registry has no criterion — see
+//! Cargo.toml). Warmup + timed iterations, robust summary statistics,
+//! aligned reporting. All `rust/benches/*` targets use this with
+//! `harness = false`.
+
+use std::time::{Duration, Instant};
+
+/// Benchmark configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct BenchConfig {
+    /// Warmup wall-time budget.
+    pub warmup: Duration,
+    /// Measurement wall-time budget.
+    pub measure: Duration,
+    /// Hard cap on measured iterations (for very slow cases).
+    pub max_iters: usize,
+    /// Minimum measured iterations.
+    pub min_iters: usize,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        Self {
+            warmup: Duration::from_millis(300),
+            measure: Duration::from_secs(2),
+            max_iters: 10_000,
+            min_iters: 5,
+        }
+    }
+}
+
+impl BenchConfig {
+    /// Config for expensive end-to-end cases (seconds per iteration).
+    pub fn slow() -> Self {
+        Self {
+            warmup: Duration::from_millis(0),
+            measure: Duration::from_secs(10),
+            max_iters: 10,
+            min_iters: 2,
+        }
+    }
+}
+
+/// Summary statistics over per-iteration times (seconds).
+#[derive(Debug, Clone, Copy)]
+pub struct Stats {
+    pub iters: usize,
+    pub mean_s: f64,
+    pub median_s: f64,
+    pub p95_s: f64,
+    pub min_s: f64,
+    pub max_s: f64,
+}
+
+impl Stats {
+    fn from_samples(mut samples: Vec<f64>) -> Stats {
+        assert!(!samples.is_empty());
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = samples.len();
+        let pick = |q: f64| samples[((n as f64 - 1.0) * q).round() as usize];
+        Stats {
+            iters: n,
+            mean_s: samples.iter().sum::<f64>() / n as f64,
+            median_s: pick(0.5),
+            p95_s: pick(0.95),
+            min_s: samples[0],
+            max_s: samples[n - 1],
+        }
+    }
+}
+
+/// Human-friendly time formatting.
+pub fn fmt_time(s: f64) -> String {
+    if s < 1e-6 {
+        format!("{:.1} ns", s * 1e9)
+    } else if s < 1e-3 {
+        format!("{:.2} µs", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2} ms", s * 1e3)
+    } else {
+        format!("{:.2} s", s)
+    }
+}
+
+/// Run one benchmark case: warm up, then measure until the time budget
+/// or iteration cap is hit. The closure's return value is black-boxed.
+pub fn bench<T>(name: &str, cfg: &BenchConfig, mut f: impl FnMut() -> T) -> Stats {
+    // warmup
+    let t0 = Instant::now();
+    while t0.elapsed() < cfg.warmup {
+        std::hint::black_box(f());
+    }
+    // measure
+    let mut samples = Vec::new();
+    let t0 = Instant::now();
+    while (t0.elapsed() < cfg.measure && samples.len() < cfg.max_iters)
+        || samples.len() < cfg.min_iters
+    {
+        let it = Instant::now();
+        std::hint::black_box(f());
+        samples.push(it.elapsed().as_secs_f64());
+    }
+    let stats = Stats::from_samples(samples);
+    println!(
+        "{:<44} {:>10}/iter  (median {:>10}, p95 {:>10}, n={})",
+        name,
+        fmt_time(stats.mean_s),
+        fmt_time(stats.median_s),
+        fmt_time(stats.p95_s),
+        stats.iters
+    );
+    stats
+}
+
+/// Group header, criterion-style.
+pub fn group(title: &str) {
+    println!("\n--- {title} ---");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let cfg = BenchConfig {
+            warmup: Duration::from_millis(5),
+            measure: Duration::from_millis(30),
+            max_iters: 1000,
+            min_iters: 3,
+        };
+        let stats = bench("noop", &cfg, || 1 + 1);
+        assert!(stats.iters >= 3);
+        assert!(stats.mean_s >= 0.0);
+        assert!(stats.min_s <= stats.median_s && stats.median_s <= stats.max_s);
+    }
+
+    #[test]
+    fn min_iters_enforced_for_slow_cases() {
+        let cfg = BenchConfig {
+            warmup: Duration::from_millis(0),
+            measure: Duration::from_millis(1),
+            max_iters: 100,
+            min_iters: 4,
+        };
+        let stats = bench("sleepy", &cfg, || {
+            std::thread::sleep(Duration::from_millis(2))
+        });
+        assert!(stats.iters >= 4);
+    }
+
+    #[test]
+    fn fmt_time_scales() {
+        assert!(fmt_time(2.5e-9).contains("ns"));
+        assert!(fmt_time(2.5e-6).contains("µs"));
+        assert!(fmt_time(2.5e-3).contains("ms"));
+        assert!(fmt_time(2.5).contains(" s"));
+    }
+
+    #[test]
+    fn stats_quantiles_ordered() {
+        let s = Stats::from_samples(vec![5.0, 1.0, 3.0, 2.0, 4.0]);
+        assert_eq!(s.min_s, 1.0);
+        assert_eq!(s.max_s, 5.0);
+        assert_eq!(s.median_s, 3.0);
+        assert!(s.p95_s >= s.median_s);
+    }
+}

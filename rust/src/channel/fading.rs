@@ -1,0 +1,160 @@
+//! Cycle-to-cycle channel evolution (block fading).
+//!
+//! The paper solves one static snapshot; a deployed orchestrator
+//! re-solves the allocation every global cycle as channels drift. We
+//! model shadowing as a first-order Gauss–Markov process over cycles
+//! (standard for slow indoor fading):
+//!
+//! ```text
+//! S_{t+1} = ρ · S_t + sqrt(1 − ρ²) · N(0, σ²)      [dB]
+//! ```
+//!
+//! which keeps the marginal N(0, σ²) of the static model while giving a
+//! tunable coherence `ρ` across the `T`-second cycles. Positions are
+//! fixed (indoor nodes); only shadowing evolves. The fading experiment
+//! (`experiments::fading`-style loop in `examples/fading_reallocation`)
+//! shows the paper's scheme keeps staleness ≈ optimal *per cycle* as
+//! long as it re-solves — and how stale allocations degrade if it
+//! doesn't.
+
+use crate::channel::{pathloss_db, shannon_rate_bps, ChannelParams, Link};
+use crate::costmodel::{DataScenario, LearnerCost, TaskParams};
+use crate::device::Device;
+use crate::sim::Rng;
+
+/// Gauss–Markov shadowing evolution over a fixed fleet.
+#[derive(Debug, Clone)]
+pub struct FadingProcess {
+    params: ChannelParams,
+    /// Per-cycle shadowing correlation ρ ∈ [0, 1].
+    pub rho: f64,
+    /// Current shadowing state per learner (dB).
+    shadow_db: Vec<f64>,
+    /// Fixed node distances (m).
+    dist_m: Vec<f64>,
+    rng: Rng,
+}
+
+impl FadingProcess {
+    /// Start from the links' current state.
+    pub fn new(params: ChannelParams, links: &[Link], rho: f64, rng: Rng) -> Self {
+        assert!((0.0..=1.0).contains(&rho));
+        // recover the shadowing component from each link's gain
+        let shadow_db = links
+            .iter()
+            .map(|l| {
+                let loss_db = -10.0 * l.gain.log10();
+                loss_db - pathloss_db(&params, l.dist_m)
+            })
+            .collect();
+        let dist_m = links.iter().map(|l| l.dist_m).collect();
+        Self { params, rho, shadow_db, dist_m, rng }
+    }
+
+    /// Advance one global cycle; returns the new links.
+    pub fn step(&mut self, devices: &[Device]) -> Vec<Link> {
+        let sigma = self.params.shadowing_std_db;
+        let innov = (1.0 - self.rho * self.rho).sqrt();
+        self.shadow_db
+            .iter_mut()
+            .zip(&self.dist_m)
+            .zip(devices)
+            .map(|((s, &d), dev)| {
+                *s = self.rho * *s + innov * self.rng.normal_ms(0.0, sigma);
+                let loss_db = pathloss_db(&self.params, d) + *s;
+                let gain = 10f64.powf(-loss_db / 10.0);
+                let rate_bps = shannon_rate_bps(&self.params, dev.tx_power_w, gain);
+                Link { pos: (d, 0.0), dist_m: d, gain, rate_bps }
+            })
+            .collect()
+    }
+
+    /// Convenience: links → eq.-(5) costs for the new cycle.
+    pub fn step_costs(
+        &mut self,
+        devices: &[Device],
+        task: &TaskParams,
+        scenario: DataScenario,
+    ) -> Vec<LearnerCost> {
+        self.step(devices)
+            .iter()
+            .zip(devices)
+            .map(|(l, d)| LearnerCost::from_parts(d, l, task, scenario))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ScenarioConfig;
+
+    fn setup(rho: f64) -> (FadingProcess, Vec<Device>) {
+        let s = ScenarioConfig::paper_default().with_learners(8).build();
+        let proc = FadingProcess::new(s.config.channel, &s.links, rho, Rng::new(42));
+        (proc, s.devices)
+    }
+
+    #[test]
+    fn rho_one_freezes_the_channel() {
+        let (mut proc, devices) = setup(1.0);
+        let a = proc.step(&devices);
+        let b = proc.step(&devices);
+        for (x, y) in a.iter().zip(&b) {
+            assert!((x.rate_bps - y.rate_bps).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn rho_zero_is_iid_redraw() {
+        let (mut proc, devices) = setup(0.0);
+        let a = proc.step(&devices);
+        let b = proc.step(&devices);
+        let same = a
+            .iter()
+            .zip(&b)
+            .filter(|(x, y)| (x.rate_bps - y.rate_bps).abs() < 1.0)
+            .count();
+        assert!(same < a.len(), "iid redraw should change rates");
+    }
+
+    #[test]
+    fn marginal_variance_is_preserved() {
+        // after many steps the shadowing must still be ~N(0, σ²)
+        let (mut proc, devices) = setup(0.8);
+        let mut samples = Vec::new();
+        for _ in 0..800 {
+            proc.step(&devices);
+            samples.extend(proc.shadow_db.iter().copied());
+        }
+        let n = samples.len() as f64;
+        let mean = samples.iter().sum::<f64>() / n;
+        let var = samples.iter().map(|s| (s - mean) * (s - mean)).sum::<f64>() / n;
+        let sigma2 = proc.params.shadowing_std_db.powi(2);
+        assert!(mean.abs() < 1.0, "mean {mean}");
+        assert!((var / sigma2 - 1.0).abs() < 0.25, "var {var} vs σ² {sigma2}");
+    }
+
+    #[test]
+    fn step_costs_track_rate_changes() {
+        let (mut proc, devices) = setup(0.5);
+        let s = ScenarioConfig::paper_default().with_learners(8).build();
+        let c1 = proc.step_costs(&devices, &s.config.task, s.config.data_scenario);
+        let c2 = proc.step_costs(&devices, &s.config.task, s.config.data_scenario);
+        assert_eq!(c1.len(), 8);
+        // compute coefficient is channel-independent; comm coefficients move
+        for (a, b) in c1.iter().zip(&c2) {
+            assert_eq!(a.c2, b.c2);
+        }
+        assert!(c1.iter().zip(&c2).any(|(a, b)| a.c0 != b.c0));
+    }
+
+    #[test]
+    fn distances_stay_fixed() {
+        let (mut proc, devices) = setup(0.3);
+        let before = proc.dist_m.clone();
+        proc.step(&devices);
+        proc.step(&devices);
+        assert_eq!(before, proc.dist_m);
+    }
+}

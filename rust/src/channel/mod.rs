@@ -1,0 +1,170 @@
+//! 802.11-like indoor wireless link simulator.
+//!
+//! The paper (§V-A) emulates "802.11-type links between the edge nodes
+//! that are located within a radius of 50 m", with the channel model of
+//! Table 1 of its companion paper [9]: log-distance path loss with
+//! log-normal shadowing, and the achievable rate entering eq. (1)/(3) as
+//! `W · log2(1 + P_k h_k / N0)`.
+//!
+//! The optimization layer only ever sees the resulting per-learner rate,
+//! so any channel model with the same heterogeneity structure reproduces
+//! the paper's trade-offs (see DESIGN.md §Substitutions). Cycle-to-cycle
+//! evolution (block fading) lives in [`fading`].
+
+
+use crate::device::Device;
+use crate::sim::Rng;
+
+pub mod fading;
+
+/// Channel / PHY parameters (defaults follow Table 1 of [9]-style values).
+#[derive(Debug, Clone, Copy)]
+pub struct ChannelParams {
+    /// Cell radius in meters (paper: 50 m indoor).
+    pub radius_m: f64,
+    /// System bandwidth `W` in Hz.
+    pub bandwidth_hz: f64,
+    /// Noise power spectral density `N0` in dBm/Hz (thermal: −174).
+    pub noise_dbm_per_hz: f64,
+    /// Path loss at the 1 m reference distance, dB (2.4 GHz indoor ≈ 40).
+    pub pl0_db: f64,
+    /// Path-loss exponent (indoor office: ~3).
+    pub pathloss_exp: f64,
+    /// Log-normal shadowing std-dev, dB.
+    pub shadowing_std_db: f64,
+    /// Minimum orchestrator–node distance (avoids the r→0 singularity).
+    pub min_dist_m: f64,
+}
+
+impl Default for ChannelParams {
+    fn default() -> Self {
+        Self {
+            radius_m: 50.0,
+            bandwidth_hz: 5.0e6,
+            noise_dbm_per_hz: -174.0,
+            pl0_db: 40.0,
+            pathloss_exp: 3.0,
+            shadowing_std_db: 6.0,
+            min_dist_m: 1.0,
+        }
+    }
+}
+
+/// One learner's link to the orchestrator (reciprocal, §II).
+#[derive(Debug, Clone, Copy)]
+pub struct Link {
+    /// Node position relative to the orchestrator (m).
+    pub pos: (f64, f64),
+    /// Distance to the orchestrator (m).
+    pub dist_m: f64,
+    /// Linear power gain `h_k` (includes shadowing).
+    pub gain: f64,
+    /// Achievable rate `W log2(1 + P h / (N0 W))` in bit/s for this
+    /// node's TX power — cached because every eq.-(1)/(3) term uses it.
+    pub rate_bps: f64,
+}
+
+/// Log-distance path loss in dB at distance `d` (m).
+#[inline]
+pub fn pathloss_db(p: &ChannelParams, dist_m: f64) -> f64 {
+    let d = dist_m.max(p.min_dist_m);
+    p.pl0_db + 10.0 * p.pathloss_exp * d.log10()
+}
+
+/// Shannon rate in bit/s for TX power `p_w` over gain `gain`.
+#[inline]
+pub fn shannon_rate_bps(p: &ChannelParams, p_w: f64, gain: f64) -> f64 {
+    let n0_w_per_hz = 10f64.powf(p.noise_dbm_per_hz / 10.0) * 1e-3;
+    let noise_w = n0_w_per_hz * p.bandwidth_hz;
+    let snr = p_w * gain / noise_w;
+    p.bandwidth_hz * (1.0 + snr).log2()
+}
+
+/// Sample one link: uniform position in the disc, log-normal shadowing.
+pub fn sample_link(p: &ChannelParams, dev: &Device, rng: &mut Rng) -> Link {
+    let pos = rng.point_in_disc(p.radius_m);
+    let dist_m = (pos.0 * pos.0 + pos.1 * pos.1).sqrt().max(p.min_dist_m);
+    let shadow_db = rng.normal_ms(0.0, p.shadowing_std_db);
+    let loss_db = pathloss_db(p, dist_m) + shadow_db;
+    let gain = 10f64.powf(-loss_db / 10.0);
+    let rate_bps = shannon_rate_bps(p, dev.tx_power_w, gain);
+    Link { pos, dist_m, gain, rate_bps }
+}
+
+/// Sample links for a whole fleet.
+pub fn sample_links(p: &ChannelParams, devices: &[Device], rng: &mut Rng) -> Vec<Link> {
+    devices.iter().map(|d| sample_link(p, d, rng)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::{DeviceClass, DeviceRanges};
+
+    fn dev(rng: &mut Rng) -> Device {
+        Device::sample(DeviceClass::Laptop, &DeviceRanges::default(), rng)
+    }
+
+    #[test]
+    fn pathloss_monotone_in_distance() {
+        let p = ChannelParams::default();
+        let mut prev = f64::NEG_INFINITY;
+        for d in [1.0, 2.0, 5.0, 10.0, 25.0, 50.0] {
+            let pl = pathloss_db(&p, d);
+            assert!(pl > prev);
+            prev = pl;
+        }
+    }
+
+    #[test]
+    fn pathloss_clamps_below_min_dist() {
+        let p = ChannelParams::default();
+        assert_eq!(pathloss_db(&p, 0.0), pathloss_db(&p, 1.0));
+        assert_eq!(pathloss_db(&p, 1.0), p.pl0_db); // log10(1) = 0
+    }
+
+    #[test]
+    fn shannon_rate_increases_with_power_and_gain() {
+        let p = ChannelParams::default();
+        let r1 = shannon_rate_bps(&p, 0.1, 1e-8);
+        let r2 = shannon_rate_bps(&p, 0.2, 1e-8);
+        let r3 = shannon_rate_bps(&p, 0.1, 2e-8);
+        assert!(r2 > r1 && r3 > r1);
+        assert!((r2 - r3).abs() < 1e-6); // SNR depends on the product
+    }
+
+    #[test]
+    fn sampled_rates_are_plausible_wifi() {
+        // At 5 MHz / 23 dBm / ≤50 m indoor, rates should land between
+        // ~100 kbit/s (cell edge, deep shadow) and ~150 Mbit/s (near).
+        let p = ChannelParams::default();
+        let mut rng = Rng::new(21);
+        let d = dev(&mut rng);
+        let mut min = f64::INFINITY;
+        let mut max = 0.0f64;
+        for _ in 0..500 {
+            let l = sample_link(&p, &d, &mut rng);
+            assert!(l.dist_m <= p.radius_m + 1e-9);
+            assert!(l.rate_bps.is_finite() && l.rate_bps > 0.0);
+            min = min.min(l.rate_bps);
+            max = max.max(l.rate_bps);
+        }
+        assert!(min > 1e4, "min rate {min}");
+        assert!(max < 5e8, "max rate {max}");
+        // rate = W·log2(1+SNR) compresses the gain spread; a 50 m cell
+        // with 6 dB shadowing still gives a clear best/worst-link gap
+        assert!(max / min > 1.5, "expected heterogeneous rates ({max} / {min})");
+    }
+
+    #[test]
+    fn links_deterministic_per_seed() {
+        let p = ChannelParams::default();
+        let mut r1 = Rng::new(33);
+        let mut r2 = Rng::new(33);
+        let d1 = dev(&mut r1);
+        let d2 = dev(&mut r2);
+        let a = sample_link(&p, &d1, &mut r1);
+        let b = sample_link(&p, &d2, &mut r2);
+        assert_eq!(a.rate_bps, b.rate_bps);
+    }
+}

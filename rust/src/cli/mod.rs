@@ -1,0 +1,164 @@
+//! Minimal CLI argument parsing (no clap in this registry — Cargo.toml).
+//!
+//! Supports `subcommand --flag value --switch` style: the first
+//! non-flag token is the subcommand, `--key value` pairs become options,
+//! bare `--key` a boolean switch. Typed accessors with defaults and
+//! error messages that name the flag.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+/// Parsed command line.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    opts: BTreeMap<String, String>,
+    switches: Vec<String>,
+    /// Positional args after the subcommand.
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of tokens (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(tokens: I) -> Result<Args> {
+        let mut args = Args::default();
+        let mut it = tokens.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(name) = tok.strip_prefix("--") {
+                if name.is_empty() {
+                    bail!("bare '--' not supported");
+                }
+                // --key=value or --key value or --switch
+                if let Some((k, v)) = name.split_once('=') {
+                    args.opts.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    args.opts.insert(name.to_string(), v);
+                } else {
+                    args.switches.push(name.to_string());
+                }
+            } else if args.subcommand.is_none() {
+                args.subcommand = Some(tok);
+            } else {
+                args.positional.push(tok);
+            }
+        }
+        Ok(args)
+    }
+
+    /// Parse the process arguments.
+    pub fn from_env() -> Result<Args> {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn has(&self, switch: &str) -> bool {
+        self.switches.iter().any(|s| s == switch)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.opts.get(key).map(|s| s.as_str())
+    }
+
+    /// Typed option with default.
+    pub fn get_or<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T>
+    where
+        T::Err: std::error::Error + Send + Sync + 'static,
+    {
+        match self.opts.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse::<T>()
+                .with_context(|| format!("invalid value '{v}' for --{key}")),
+        }
+    }
+
+    /// Required typed option.
+    pub fn require<T: std::str::FromStr>(&self, key: &str) -> Result<T>
+    where
+        T::Err: std::error::Error + Send + Sync + 'static,
+    {
+        let v = self
+            .opts
+            .get(key)
+            .ok_or_else(|| anyhow!("missing required flag --{key}"))?;
+        v.parse::<T>()
+            .with_context(|| format!("invalid value '{v}' for --{key}"))
+    }
+
+    /// Comma-separated list option.
+    pub fn get_list_or<T: std::str::FromStr>(&self, key: &str, default: Vec<T>) -> Result<Vec<T>>
+    where
+        T::Err: std::error::Error + Send + Sync + 'static,
+    {
+        match self.opts.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .split(',')
+                .map(|s| {
+                    s.trim()
+                        .parse::<T>()
+                        .with_context(|| format!("invalid element '{s}' in --{key}"))
+                })
+                .collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(tokens: &[&str]) -> Args {
+        Args::parse(tokens.iter().map(|s| s.to_string())).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        let a = parse(&["solve", "--k", "20", "--t", "7.5", "--verbose"]);
+        assert_eq!(a.subcommand.as_deref(), Some("solve"));
+        assert_eq!(a.get_or("k", 0usize).unwrap(), 20);
+        assert_eq!(a.get_or("t", 0.0f64).unwrap(), 7.5);
+        assert!(a.has("verbose"));
+        assert!(!a.has("quiet"));
+    }
+
+    #[test]
+    fn equals_syntax() {
+        let a = parse(&["fig2", "--seeds=3", "--csv=/tmp/x.csv"]);
+        assert_eq!(a.get_or("seeds", 0usize).unwrap(), 3);
+        assert_eq!(a.get("csv"), Some("/tmp/x.csv"));
+    }
+
+    #[test]
+    fn defaults_and_required() {
+        let a = parse(&["train"]);
+        assert_eq!(a.get_or("cycles", 10usize).unwrap(), 10);
+        assert!(a.require::<usize>("k").is_err());
+    }
+
+    #[test]
+    fn list_parsing() {
+        let a = parse(&["fig3", "--ks", "10,15,20"]);
+        assert_eq!(a.get_list_or("ks", vec![1usize]).unwrap(), vec![10, 15, 20]);
+        let b = parse(&["fig3"]);
+        assert_eq!(b.get_list_or("ks", vec![1usize]).unwrap(), vec![1]);
+    }
+
+    #[test]
+    fn positional_after_subcommand() {
+        let a = parse(&["train", "12000", "8"]);
+        assert_eq!(a.positional, vec!["12000", "8"]);
+    }
+
+    #[test]
+    fn bad_typed_value_errors() {
+        let a = parse(&["solve", "--k", "twenty"]);
+        let err = a.get_or("k", 0usize).unwrap_err().to_string();
+        assert!(err.contains("--k"), "{err}");
+    }
+}

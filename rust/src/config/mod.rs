@@ -1,0 +1,363 @@
+//! Scenario configuration: the declarative layer every binary starts from.
+//!
+//! [`ScenarioConfig`] is pure data (JSON round-trippable via the in-tree
+//! [`crate::json`] substrate, CLI overridable); [`Scenario`] is the materialized instance — devices
+//! placed, channels drawn, eq.-(5) coefficients computed — everything the
+//! allocation layer and the coordinator consume. Presets reproduce the
+//! paper's §V-A environment.
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::channel::{sample_links, ChannelParams, Link};
+use crate::json::Value;
+use crate::costmodel::{Bounds, DataScenario, LearnerCost, TaskParams};
+use crate::device::{sample_fleet, Device, DeviceRanges};
+use crate::sim::Rng;
+
+/// Declarative experiment description.
+#[derive(Debug, Clone)]
+pub struct ScenarioConfig {
+    /// Master seed; forks every stochastic sub-stream.
+    pub seed: u64,
+    /// Number of learners `K`.
+    pub num_learners: usize,
+    /// Total dataset size `d` (paper: 60,000 MNIST train samples).
+    pub total_samples: u64,
+    /// Global cycle clock `T` in seconds (paper: 7.5 / 15).
+    pub t_cycle_s: f64,
+    /// Batch bounds as fractions of the equal share `d/K` (eq. 7f).
+    pub d_lo_frac: f64,
+    pub d_hi_frac: f64,
+    /// Task-parallelization vs distributed-dataset (footnotes 1–3).
+    pub data_scenario: DataScenario,
+    pub channel: ChannelParams,
+    pub devices: DeviceRanges,
+    pub task: TaskParams,
+}
+
+impl Default for ScenarioConfig {
+    fn default() -> Self {
+        Self::paper_default()
+    }
+}
+
+impl ScenarioConfig {
+    /// §V-A environment: 50 m indoor 802.11 cell, half laptops / half
+    /// RPi-class nodes, MNIST-sized task, K = 10, T = 15 s.
+    pub fn paper_default() -> Self {
+        Self {
+            seed: 0xA5F3_2019,
+            num_learners: 10,
+            total_samples: 60_000,
+            t_cycle_s: 15.0,
+            d_lo_frac: 0.2,
+            d_hi_frac: 2.5,
+            data_scenario: DataScenario::TaskParallelization,
+            channel: ChannelParams::default(),
+            devices: DeviceRanges::default(),
+            task: TaskParams::default(),
+        }
+    }
+
+    /// Builder-style overrides used throughout examples and benches.
+    pub fn with_learners(mut self, k: usize) -> Self {
+        self.num_learners = k;
+        self
+    }
+    pub fn with_cycle(mut self, t: f64) -> Self {
+        self.t_cycle_s = t;
+        self
+    }
+    pub fn with_seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+    pub fn with_total_samples(mut self, d: u64) -> Self {
+        self.total_samples = d;
+        self
+    }
+    pub fn with_bound_fracs(mut self, lo: f64, hi: f64) -> Self {
+        self.d_lo_frac = lo;
+        self.d_hi_frac = hi;
+        self
+    }
+
+    /// Serialize to a JSON value (own [`crate::json`] substrate).
+    pub fn to_json(&self) -> Value {
+        let mut ch = Value::obj();
+        ch.set("radius_m", self.channel.radius_m)
+            .set("bandwidth_hz", self.channel.bandwidth_hz)
+            .set("noise_dbm_per_hz", self.channel.noise_dbm_per_hz)
+            .set("pl0_db", self.channel.pl0_db)
+            .set("pathloss_exp", self.channel.pathloss_exp)
+            .set("shadowing_std_db", self.channel.shadowing_std_db)
+            .set("min_dist_m", self.channel.min_dist_m);
+        let mut dev = Value::obj();
+        dev.set("laptop_hz_lo", self.devices.laptop_hz.0)
+            .set("laptop_hz_hi", self.devices.laptop_hz.1)
+            .set("embedded_hz_lo", self.devices.embedded_hz.0)
+            .set("embedded_hz_hi", self.devices.embedded_hz.1)
+            .set("tx_power_dbm", self.devices.tx_power_dbm);
+        let mut task = Value::obj();
+        task.set("features", self.task.features)
+            .set("data_precision_bits", self.task.data_precision_bits)
+            .set("model_precision_bits", self.task.model_precision_bits)
+            .set("model_size_per_sample", self.task.model_size_per_sample)
+            .set("model_size_params", self.task.model_size_params)
+            .set("compute_cycles_per_sample", self.task.compute_cycles_per_sample);
+        let mut v = Value::obj();
+        v.set("seed", self.seed)
+            .set("num_learners", self.num_learners)
+            .set("total_samples", self.total_samples)
+            .set("t_cycle_s", self.t_cycle_s)
+            .set("d_lo_frac", self.d_lo_frac)
+            .set("d_hi_frac", self.d_hi_frac)
+            .set(
+                "data_scenario",
+                match self.data_scenario {
+                    DataScenario::TaskParallelization => "task_parallelization",
+                    DataScenario::DistributedDataset => "distributed_dataset",
+                },
+            )
+            .set("channel", ch)
+            .set("devices", dev)
+            .set("task", task);
+        v
+    }
+
+    /// Deserialize from a JSON value; absent fields fall back to the
+    /// paper defaults so configs can be sparse overrides.
+    pub fn from_json(v: &Value) -> Result<Self> {
+        let mut cfg = ScenarioConfig::paper_default();
+        if let Some(x) = v.get("seed") {
+            cfg.seed = x.as_u64()?;
+        }
+        if let Some(x) = v.get("num_learners") {
+            cfg.num_learners = x.as_usize()?;
+        }
+        if let Some(x) = v.get("total_samples") {
+            cfg.total_samples = x.as_u64()?;
+        }
+        if let Some(x) = v.get("t_cycle_s") {
+            cfg.t_cycle_s = x.as_f64()?;
+        }
+        if let Some(x) = v.get("d_lo_frac") {
+            cfg.d_lo_frac = x.as_f64()?;
+        }
+        if let Some(x) = v.get("d_hi_frac") {
+            cfg.d_hi_frac = x.as_f64()?;
+        }
+        if let Some(x) = v.get("data_scenario") {
+            cfg.data_scenario = match x.as_str()? {
+                "task_parallelization" => DataScenario::TaskParallelization,
+                "distributed_dataset" => DataScenario::DistributedDataset,
+                other => anyhow::bail!("unknown data_scenario '{other}'"),
+            };
+        }
+        if let Some(ch) = v.get("channel") {
+            if let Some(x) = ch.get("radius_m") {
+                cfg.channel.radius_m = x.as_f64()?;
+            }
+            if let Some(x) = ch.get("bandwidth_hz") {
+                cfg.channel.bandwidth_hz = x.as_f64()?;
+            }
+            if let Some(x) = ch.get("noise_dbm_per_hz") {
+                cfg.channel.noise_dbm_per_hz = x.as_f64()?;
+            }
+            if let Some(x) = ch.get("pl0_db") {
+                cfg.channel.pl0_db = x.as_f64()?;
+            }
+            if let Some(x) = ch.get("pathloss_exp") {
+                cfg.channel.pathloss_exp = x.as_f64()?;
+            }
+            if let Some(x) = ch.get("shadowing_std_db") {
+                cfg.channel.shadowing_std_db = x.as_f64()?;
+            }
+            if let Some(x) = ch.get("min_dist_m") {
+                cfg.channel.min_dist_m = x.as_f64()?;
+            }
+        }
+        if let Some(dv) = v.get("devices") {
+            if let Some(x) = dv.get("laptop_hz_lo") {
+                cfg.devices.laptop_hz.0 = x.as_f64()?;
+            }
+            if let Some(x) = dv.get("laptop_hz_hi") {
+                cfg.devices.laptop_hz.1 = x.as_f64()?;
+            }
+            if let Some(x) = dv.get("embedded_hz_lo") {
+                cfg.devices.embedded_hz.0 = x.as_f64()?;
+            }
+            if let Some(x) = dv.get("embedded_hz_hi") {
+                cfg.devices.embedded_hz.1 = x.as_f64()?;
+            }
+            if let Some(x) = dv.get("tx_power_dbm") {
+                cfg.devices.tx_power_dbm = x.as_f64()?;
+            }
+        }
+        if let Some(tk) = v.get("task") {
+            if let Some(x) = tk.get("features") {
+                cfg.task.features = x.as_u64()?;
+            }
+            if let Some(x) = tk.get("data_precision_bits") {
+                cfg.task.data_precision_bits = x.as_u64()?;
+            }
+            if let Some(x) = tk.get("model_precision_bits") {
+                cfg.task.model_precision_bits = x.as_u64()?;
+            }
+            if let Some(x) = tk.get("model_size_per_sample") {
+                cfg.task.model_size_per_sample = x.as_u64()?;
+            }
+            if let Some(x) = tk.get("model_size_params") {
+                cfg.task.model_size_params = x.as_u64()?;
+            }
+            if let Some(x) = tk.get("compute_cycles_per_sample") {
+                cfg.task.compute_cycles_per_sample = x.as_f64()?;
+            }
+        }
+        Ok(cfg)
+    }
+
+    /// Load from a JSON file.
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .with_context(|| format!("reading {}", path.as_ref().display()))?;
+        let v = crate::json::parse(&text).context("parsing scenario config JSON")?;
+        Self::from_json(&v)
+    }
+
+    /// Save to a JSON file (pretty).
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        std::fs::write(path.as_ref(), self.to_json().pretty())
+            .with_context(|| format!("writing {}", path.as_ref().display()))?;
+        Ok(())
+    }
+
+    /// Materialize: place nodes, draw channels, compute eq.-(5) costs.
+    pub fn build(&self) -> Scenario {
+        assert!(self.num_learners >= 1, "need at least one learner");
+        assert!(self.t_cycle_s > 0.0);
+        let mut root = Rng::new(self.seed);
+        let mut dev_rng = root.fork(0xDE1);
+        let mut chan_rng = root.fork(0xC4A);
+        let devices = sample_fleet(self.num_learners, &self.devices, &mut dev_rng);
+        let links = sample_links(&self.channel, &devices, &mut chan_rng);
+        let costs: Vec<LearnerCost> = devices
+            .iter()
+            .zip(&links)
+            .map(|(d, l)| LearnerCost::from_parts(d, l, &self.task, self.data_scenario))
+            .collect();
+        let bounds = Bounds::proportional(
+            self.total_samples,
+            self.num_learners,
+            self.d_lo_frac,
+            self.d_hi_frac,
+        );
+        Scenario {
+            config: self.clone(),
+            devices,
+            links,
+            costs,
+            bounds,
+            rng: root,
+        }
+    }
+}
+
+/// A materialized scenario: the world the orchestrator operates in.
+#[derive(Debug, Clone)]
+pub struct Scenario {
+    pub config: ScenarioConfig,
+    pub devices: Vec<Device>,
+    pub links: Vec<Link>,
+    /// eq.-(5) coefficients per learner.
+    pub costs: Vec<LearnerCost>,
+    /// eq.-(7f) batch bounds.
+    pub bounds: Bounds,
+    /// Remaining master RNG (forked for data synthesis / init).
+    pub rng: Rng,
+}
+
+impl Scenario {
+    pub fn k(&self) -> usize {
+        self.config.num_learners
+    }
+    pub fn t_cycle(&self) -> f64 {
+        self.config.t_cycle_s
+    }
+    pub fn total_samples(&self) -> u64 {
+        self.config.total_samples
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn build_produces_consistent_sizes() {
+        let s = ScenarioConfig::paper_default().with_learners(12).build();
+        assert_eq!(s.devices.len(), 12);
+        assert_eq!(s.links.len(), 12);
+        assert_eq!(s.costs.len(), 12);
+        assert_eq!(s.k(), 12);
+    }
+
+    #[test]
+    fn build_is_deterministic() {
+        let a = ScenarioConfig::paper_default().build();
+        let b = ScenarioConfig::paper_default().build();
+        for (x, y) in a.costs.iter().zip(&b.costs) {
+            assert_eq!(x.c2, y.c2);
+            assert_eq!(x.c1, y.c1);
+            assert_eq!(x.c0, y.c0);
+        }
+    }
+
+    #[test]
+    fn different_seed_different_world() {
+        let a = ScenarioConfig::paper_default().with_seed(1).build();
+        let b = ScenarioConfig::paper_default().with_seed(2).build();
+        assert!(a.costs.iter().zip(&b.costs).any(|(x, y)| x.c2 != y.c2));
+    }
+
+    #[test]
+    fn costs_are_heterogeneous_and_plausible() {
+        let s = ScenarioConfig::paper_default().with_learners(20).build();
+        let c2s: Vec<f64> = s.costs.iter().map(|c| c.c2).collect();
+        let hi = c2s.iter().cloned().fold(f64::MIN, f64::max);
+        let lo = c2s.iter().cloned().fold(f64::MAX, f64::min);
+        // laptop (≥2 GHz) vs embedded (≤0.9 GHz) must show up as >2x c2 gap
+        assert!(hi / lo > 2.0, "hi={hi} lo={lo}");
+        for c in &s.costs {
+            // per-sample-epoch compute between 0.1 ms and 3 ms
+            assert!(c.c2 > 1e-4 && c.c2 < 3e-3, "c2={}", c.c2);
+            // model exchange well under the cycle times we evaluate
+            assert!(c.c0 < 7.5, "c0={}", c.c0);
+        }
+    }
+
+    #[test]
+    fn json_round_trip() {
+        let cfg = ScenarioConfig::paper_default()
+            .with_learners(7)
+            .with_cycle(7.5);
+        let text = cfg.to_json().pretty();
+        let back = ScenarioConfig::from_json(&crate::json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.num_learners, 7);
+        assert_eq!(back.t_cycle_s, 7.5);
+        assert_eq!(back.seed, cfg.seed);
+    }
+
+    #[test]
+    fn save_load_round_trip() {
+        let dir = std::env::temp_dir().join("asyncmel_cfg_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("cfg.json");
+        let cfg = ScenarioConfig::paper_default().with_learners(9);
+        cfg.save(&path).unwrap();
+        let back = ScenarioConfig::load(&path).unwrap();
+        assert_eq!(back.num_learners, 9);
+    }
+}

@@ -1,0 +1,135 @@
+//! Failure injection: stragglers and dropouts.
+//!
+//! The paper assumes the eq.-(5) time model is exact; real edge nodes
+//! miss deadlines (thermal throttling, Wi-Fi retries, background load)
+//! or vanish entirely. This module perturbs each learner's *actual*
+//! execution time per cycle and the orchestrator's collection rule
+//! discards updates that miss the global clock — the model parameters
+//! still arrive next cycle (the node keeps the stale global model).
+//!
+//! Used by the fault-tolerance tests and `examples/fading_reallocation`
+//! to show the orchestrator degrades gracefully: a dropped learner
+//! costs its share of gradient work, never a crash or a poisoned
+//! aggregate.
+
+use crate::sim::Rng;
+
+/// Fault model parameters (all probabilities per learner per cycle).
+#[derive(Debug, Clone, Copy)]
+pub struct FaultModel {
+    /// P(node silently drops out for the cycle).
+    pub dropout_prob: f64,
+    /// P(node straggles).
+    pub straggle_prob: f64,
+    /// Execution-time multiplier when straggling (> 1).
+    pub straggle_factor: f64,
+}
+
+impl FaultModel {
+    pub fn none() -> Self {
+        Self { dropout_prob: 0.0, straggle_prob: 0.0, straggle_factor: 1.0 }
+    }
+
+    pub fn new(dropout_prob: f64, straggle_prob: f64, straggle_factor: f64) -> Self {
+        assert!((0.0..=1.0).contains(&dropout_prob));
+        assert!((0.0..=1.0).contains(&straggle_prob));
+        assert!(straggle_factor >= 1.0);
+        Self { dropout_prob, straggle_prob, straggle_factor }
+    }
+}
+
+/// What actually happened to a learner this cycle.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultOutcome {
+    /// Executed on time.
+    Ok,
+    /// Executed but slower by `straggle_factor` — may miss the deadline.
+    Straggled,
+    /// Never reported back this cycle.
+    Dropped,
+}
+
+/// Draw this cycle's fault outcomes for `k` learners.
+pub fn draw_outcomes(model: &FaultModel, k: usize, rng: &mut Rng) -> Vec<FaultOutcome> {
+    (0..k)
+        .map(|_| {
+            let u = rng.uniform();
+            if u < model.dropout_prob {
+                FaultOutcome::Dropped
+            } else if u < model.dropout_prob + model.straggle_prob {
+                FaultOutcome::Straggled
+            } else {
+                FaultOutcome::Ok
+            }
+        })
+        .collect()
+}
+
+/// Collection rule: does learner `k`'s update make the aggregation?
+///
+/// `planned_time` is the eq.-(5) `t_k`; straggling inflates it; the
+/// orchestrator only waits until the global clock `t_cycle`.
+pub fn update_arrives(
+    outcome: FaultOutcome,
+    planned_time: f64,
+    t_cycle: f64,
+    model: &FaultModel,
+) -> bool {
+    match outcome {
+        FaultOutcome::Dropped => false,
+        FaultOutcome::Ok => planned_time <= t_cycle * (1.0 + 1e-9),
+        FaultOutcome::Straggled => {
+            planned_time * model.straggle_factor <= t_cycle * (1.0 + 1e-9)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn no_faults_means_all_ok() {
+        let mut rng = Rng::new(1);
+        let outcomes = draw_outcomes(&FaultModel::none(), 50, &mut rng);
+        assert!(outcomes.iter().all(|&o| o == FaultOutcome::Ok));
+    }
+
+    #[test]
+    fn dropout_rate_is_respected() {
+        let mut rng = Rng::new(2);
+        let model = FaultModel::new(0.3, 0.0, 1.0);
+        let n = 20_000;
+        let dropped = (0..n / 50)
+            .flat_map(|_| draw_outcomes(&model, 50, &mut rng))
+            .filter(|&o| o == FaultOutcome::Dropped)
+            .count();
+        let rate = dropped as f64 / n as f64;
+        assert!((rate - 0.3).abs() < 0.02, "rate {rate}");
+    }
+
+    #[test]
+    fn straggler_misses_deadline_only_when_inflated_past_t() {
+        let model = FaultModel::new(0.0, 1.0, 2.0);
+        // planned 6 s of a 15 s cycle -> 12 s straggled: still arrives
+        assert!(update_arrives(FaultOutcome::Straggled, 6.0, 15.0, &model));
+        // planned 9 s -> 18 s straggled: missed
+        assert!(!update_arrives(FaultOutcome::Straggled, 9.0, 15.0, &model));
+        // a work-conserving allocation runs ~t_cycle: any straggle kills it
+        assert!(!update_arrives(FaultOutcome::Straggled, 14.9, 15.0, &model));
+    }
+
+    #[test]
+    fn dropped_never_arrives_ok_always_does_within_t() {
+        let model = FaultModel::none();
+        assert!(!update_arrives(FaultOutcome::Dropped, 1.0, 15.0, &model));
+        assert!(update_arrives(FaultOutcome::Ok, 15.0, 15.0, &model));
+        assert!(!update_arrives(FaultOutcome::Ok, 15.1, 15.0, &model));
+    }
+
+    #[test]
+    #[should_panic]
+    fn invalid_straggle_factor_rejected() {
+        FaultModel::new(0.0, 0.1, 0.5);
+    }
+}

@@ -1,0 +1,99 @@
+//! One edge learner: hardware + link + eq.-(5) cost, executing its
+//! assigned `(τ_k, d_k)` through the shared AOT runtime.
+
+use anyhow::Result;
+
+use crate::aggregation::ParamSet;
+use crate::channel::Link;
+use crate::costmodel::LearnerCost;
+use crate::data::Dataset;
+use crate::device::Device;
+use crate::runtime::Runtime;
+
+/// A learner node (the paper's learner `k ∈ κ`).
+#[derive(Debug, Clone)]
+pub struct Learner {
+    pub id: usize,
+    pub device: Device,
+    pub link: Link,
+    pub cost: LearnerCost,
+}
+
+/// What a learner hands back at collection time.
+#[derive(Debug)]
+pub struct LocalUpdate {
+    pub learner_id: usize,
+    pub params: ParamSet,
+    /// Mean training loss of the final local epoch.
+    pub train_loss: f32,
+    /// Virtual busy time `t_k` (eq. 5) for this cycle.
+    pub busy_s: f64,
+    /// Epochs actually performed (0 = MEL infeasible this cycle).
+    pub tau: u64,
+    pub d: u64,
+}
+
+impl Learner {
+    /// Execute one global cycle's assignment.
+    ///
+    /// `τ = 0` models the paper's infeasible-learner case: the node
+    /// returns the global model untouched (it still pays the model
+    /// exchange time — it had to receive/send to stay in the ring).
+    pub fn run_cycle(
+        &self,
+        runtime: &Runtime,
+        global: &ParamSet,
+        data: &Dataset,
+        shard: &[u32],
+        tau: u64,
+        lr: f32,
+    ) -> Result<LocalUpdate> {
+        let d = shard.len() as u64;
+        let busy_s = self.cost.time(tau as f64, d as f64);
+        if tau == 0 || shard.is_empty() {
+            return Ok(LocalUpdate {
+                learner_id: self.id,
+                params: global.clone(),
+                train_loss: f32::NAN,
+                busy_s: self.cost.c0, // model exchange only
+                tau: 0,
+                d,
+            });
+        }
+        let (params, train_loss) = runtime.train_epochs(global, data, shard, tau, lr)?;
+        Ok(LocalUpdate {
+            learner_id: self.id,
+            params,
+            train_loss,
+            busy_s,
+            tau,
+            d,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::channel::{sample_link, ChannelParams};
+    use crate::costmodel::{DataScenario, TaskParams};
+    use crate::device::{Device, DeviceClass, DeviceRanges};
+    use crate::sim::Rng;
+
+    #[test]
+    fn learner_carries_consistent_cost() {
+        let mut rng = Rng::new(4);
+        let dev = Device::sample(DeviceClass::Laptop, &DeviceRanges::default(), &mut rng);
+        let link = sample_link(&ChannelParams::default(), &dev, &mut rng);
+        let cost = LearnerCost::from_parts(
+            &dev,
+            &link,
+            &TaskParams::default(),
+            DataScenario::TaskParallelization,
+        );
+        let l = Learner { id: 3, device: dev, link, cost };
+        // busy time for (τ=2, d=100) follows eq. (5) exactly
+        let t = l.cost.time(2.0, 100.0);
+        assert!((t - (cost.c2 * 200.0 + cost.c1 * 100.0 + cost.c0)).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,25 @@
+//! The asynchronous-MEL orchestrator — the paper's system in motion.
+//!
+//! One [`Orchestrator`] owns the global model, the scenario (devices,
+//! channels, eq.-5 costs), the task allocator, and the PJRT runtime. Per
+//! global cycle (§II):
+//!
+//! 1. **allocate** `(τ_k, d_k)` for the cycle (the paper's contribution);
+//! 2. **dispatch**: deal a fresh random partition of the training set
+//!    with sizes `d_k` (task-parallelization) — in virtual time this
+//!    charges `t_k^S` per eq. (1);
+//! 3. **local learning**: each learner runs `τ_k` epochs of minibatch
+//!    SGD through the AOT train-step (real numerics, virtual `τ_k t_k^C`);
+//! 4. **collect + aggregate**: weighted merge of the local models
+//!    (eq.-3 charge `t_k^R`), then evaluate the new global model.
+//!
+//! All per-learner work is virtual-time accounted with eq. (5); the
+//! PJRT execution itself is the *numerics*, not the clock.
+
+pub mod faults;
+pub mod learner;
+pub mod orchestrator;
+
+pub use faults::{FaultModel, FaultOutcome};
+pub use learner::Learner;
+pub use orchestrator::{CycleRecord, Orchestrator, TrainOptions};

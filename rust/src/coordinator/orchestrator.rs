@@ -1,0 +1,243 @@
+//! The global-cycle loop.
+
+use anyhow::{anyhow, Result};
+
+use crate::aggregation::{aggregate, AggregationRule, ParamSet};
+use crate::allocation::{make_allocator, Allocation, AllocatorKind, TaskAllocator};
+use crate::config::Scenario;
+use crate::coordinator::faults::{draw_outcomes, update_arrives, FaultModel};
+use crate::coordinator::learner::Learner;
+use crate::data::{sample_shards, Dataset};
+use crate::runtime::Runtime;
+use crate::sim::{Rng, VirtualClock};
+
+/// Options for a training run.
+#[derive(Debug, Clone, Copy)]
+pub struct TrainOptions {
+    /// Global cycles to run.
+    pub cycles: usize,
+    /// SGD learning rate.
+    pub lr: f32,
+    /// Evaluate the global model every `eval_every` cycles (1 = always).
+    pub eval_every: usize,
+    /// Re-solve the allocation each cycle (static channels make this a
+    /// no-op beyond cycle 0, but it exercises the per-cycle solve cost
+    /// the paper's orchestrator pays).
+    pub reallocate_each_cycle: bool,
+}
+
+impl Default for TrainOptions {
+    fn default() -> Self {
+        Self {
+            cycles: 10,
+            lr: 0.05,
+            eval_every: 1,
+            reallocate_each_cycle: false,
+        }
+    }
+}
+
+/// Per-cycle record — one row of the paper's Fig.-3 series.
+#[derive(Debug, Clone, Copy)]
+pub struct CycleRecord {
+    pub cycle: usize,
+    /// Virtual wall time at the end of the cycle (s).
+    pub vtime_s: f64,
+    pub max_staleness: u64,
+    pub avg_staleness: f64,
+    /// Mean last-epoch training loss across learners.
+    pub train_loss: f32,
+    /// Validation accuracy of the aggregated model (NaN if not evaluated
+    /// this cycle).
+    pub accuracy: f64,
+    pub val_loss: f64,
+    /// Mean fraction of the cycle the learners were busy.
+    pub utilization: f64,
+    /// Updates that made it back before the global clock (K minus
+    /// dropouts and deadline-missing stragglers).
+    pub arrived: usize,
+    /// Time spent solving the allocation (ms, host wall-clock — the one
+    /// real-time cost the orchestrator adds).
+    pub solve_ms: f64,
+}
+
+/// The asynchronous-MEL orchestrator.
+pub struct Orchestrator<'rt> {
+    pub scenario: Scenario,
+    pub learners: Vec<Learner>,
+    pub allocator: Box<dyn TaskAllocator + Send + Sync>,
+    pub aggregation: AggregationRule,
+    runtime: &'rt Runtime,
+    train: Dataset,
+    test: Dataset,
+    rng: Rng,
+    /// Straggler/dropout injection (none by default).
+    pub faults: FaultModel,
+}
+
+impl<'rt> Orchestrator<'rt> {
+    /// Assemble the orchestrator; the dataset's training size must match
+    /// the scenario's `d` (eq. 7c couples them).
+    pub fn new(
+        scenario: Scenario,
+        kind: AllocatorKind,
+        aggregation: AggregationRule,
+        runtime: &'rt Runtime,
+        train: Dataset,
+        test: Dataset,
+    ) -> Result<Self> {
+        if train.len() as u64 != scenario.total_samples() {
+            return Err(anyhow!(
+                "dataset size {} != scenario d = {}",
+                train.len(),
+                scenario.total_samples()
+            ));
+        }
+        if train.features != runtime.manifest.num_features() {
+            return Err(anyhow!("feature mismatch vs artifact manifest"));
+        }
+        let learners: Vec<Learner> = (0..scenario.k())
+            .map(|i| Learner {
+                id: i,
+                device: scenario.devices[i],
+                link: scenario.links[i],
+                cost: scenario.costs[i],
+            })
+            .collect();
+        let mut rng = scenario.rng.clone();
+        let rng = rng.fork(0x0_0C);
+        Ok(Self {
+            scenario,
+            learners,
+            allocator: make_allocator(kind),
+            aggregation,
+            runtime,
+            train,
+            test,
+            rng,
+            faults: FaultModel::none(),
+        })
+    }
+
+    /// Enable fault injection for subsequent runs.
+    pub fn with_faults(mut self, faults: FaultModel) -> Self {
+        self.faults = faults;
+        self
+    }
+
+    /// Solve the allocation for the current scenario.
+    pub fn solve_allocation(&self) -> Result<Allocation> {
+        self.allocator.allocate(
+            &self.scenario.costs,
+            self.scenario.t_cycle(),
+            self.scenario.total_samples(),
+            &self.scenario.bounds,
+        )
+    }
+
+    /// Run `opts.cycles` global cycles from a fresh He-initialized model.
+    pub fn run(&mut self, opts: &TrainOptions) -> Result<Vec<CycleRecord>> {
+        let mut init_rng = self.rng.fork(0x1417);
+        let params = self.runtime.init_params(&mut init_rng);
+        self.run_from(params, opts).map(|(records, _)| records)
+    }
+
+    /// Run from given initial parameters; returns records + final model.
+    pub fn run_from(
+        &mut self,
+        mut global: ParamSet,
+        opts: &TrainOptions,
+    ) -> Result<(Vec<CycleRecord>, ParamSet)> {
+        let t_cycle = self.scenario.t_cycle();
+        let mut clock = VirtualClock::new(self.scenario.k());
+        let mut records = Vec::with_capacity(opts.cycles);
+
+        let t0 = std::time::Instant::now();
+        let mut allocation = self.solve_allocation()?;
+        let mut solve_ms = t0.elapsed().as_secs_f64() * 1e3;
+
+        for cycle in 0..opts.cycles {
+            if opts.reallocate_each_cycle && cycle > 0 {
+                let t = std::time::Instant::now();
+                allocation = self.solve_allocation()?;
+                solve_ms = t.elapsed().as_secs_f64() * 1e3;
+            }
+
+            // dispatch: fresh random partition with sizes d_k (eq. 7c)
+            let shards = sample_shards(
+                &mut self.rng,
+                self.train.len(),
+                &allocation.d,
+            );
+
+            // local learning (virtual-parallel: all within the cycle clock)
+            let outcomes = draw_outcomes(&self.faults, self.learners.len(), &mut self.rng);
+            let mut locals: Vec<ParamSet> = Vec::with_capacity(self.learners.len());
+            let mut agg_d: Vec<u64> = Vec::with_capacity(self.learners.len());
+            let mut agg_tau: Vec<u64> = Vec::with_capacity(self.learners.len());
+            let mut losses = Vec::with_capacity(self.learners.len());
+            let mut arrived = 0usize;
+            for (learner, shard) in self.learners.iter().zip(&shards) {
+                let planned = learner
+                    .cost
+                    .time(allocation.tau[learner.id] as f64, shard.len() as f64);
+                if !update_arrives(outcomes[learner.id], planned, t_cycle, &self.faults) {
+                    // dropped or deadline-missed: aggregate without it;
+                    // the node still burned its cycle.
+                    clock.record_busy(learner.id, planned.min(t_cycle));
+                    continue;
+                }
+                let upd = learner.run_cycle(
+                    self.runtime,
+                    &global,
+                    &self.train,
+                    shard,
+                    allocation.tau[learner.id],
+                    opts.lr,
+                )?;
+                clock.record_busy(learner.id, upd.busy_s.min(t_cycle));
+                if upd.train_loss.is_finite() {
+                    losses.push(upd.train_loss);
+                }
+                locals.push(upd.params);
+                agg_d.push(allocation.d[learner.id]);
+                agg_tau.push(allocation.tau[learner.id]);
+                arrived += 1;
+            }
+            clock.advance(t_cycle);
+
+            // collect + aggregate whatever made it back; if nothing did,
+            // the global model simply carries over to the next cycle.
+            if !locals.is_empty() {
+                global = aggregate(self.aggregation, &locals, &agg_d, &agg_tau);
+            }
+
+            let (accuracy, val_loss) = if cycle % opts.eval_every == 0
+                || cycle + 1 == opts.cycles
+            {
+                let ev = self.runtime.evaluate(&global, &self.test)?;
+                (ev.accuracy, ev.mean_loss)
+            } else {
+                (f64::NAN, f64::NAN)
+            };
+
+            records.push(CycleRecord {
+                cycle,
+                vtime_s: clock.now(),
+                max_staleness: allocation.max_staleness(),
+                avg_staleness: allocation.avg_staleness(),
+                train_loss: if losses.is_empty() {
+                    f32::NAN
+                } else {
+                    losses.iter().sum::<f32>() / losses.len() as f32
+                },
+                accuracy,
+                val_loss,
+                utilization: allocation.mean_utilization(&self.scenario.costs, t_cycle),
+                arrived,
+                solve_ms,
+            });
+        }
+        Ok((records, global))
+    }
+}

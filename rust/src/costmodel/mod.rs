@@ -1,0 +1,300 @@
+//! The paper's per-learner time model — equations (1)–(5).
+//!
+//! For learner `k` a global cycle consists of
+//!
+//! * `t_k^S` — orchestrator → node: batch (task-parallelization only)
+//!   plus global model, eq. (1);
+//! * `τ_k · t_k^C` — local learning, eq. (2);
+//! * `t_k^R` — node → orchestrator: updated model, eq. (3);
+//!
+//! collapsing (eq. 5) to the quadratic form
+//!
+//! ```text
+//! t_k = C²_k · τ_k · d_k  +  C¹_k · d_k  +  C⁰_k
+//! C²_k = C_m / f_k
+//! C¹_k = (F·P_d + 2·P_m·S_d) / R_k       (first term absent for
+//!                                          distributed datasets, fn.1–3)
+//! C⁰_k = 2·P_m·S_m / R_k
+//! ```
+//!
+//! with `R_k = W log2(1 + P_k h_k / N0 W)` the link rate. Everything the
+//! allocation layer needs is derived here: `t_k`, the forced batch size
+//! `d_k(τ_k)` under the full-duration constraint `t_k = T` (eq. 7b), its
+//! inverse, and integer feasibility helpers.
+
+
+use crate::channel::Link;
+use crate::device::Device;
+
+/// Which of the paper's two data scenarios is being run (§I, footnotes 1–3).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum DataScenario {
+    /// Orchestrator ships both model and the `d_k`-sample batch.
+    #[default]
+    TaskParallelization,
+    /// Data is already on the nodes; only the model moves.
+    DistributedDataset,
+}
+
+/// Learning-task constants (§V-A values as defaults).
+#[derive(Debug, Clone, Copy)]
+pub struct TaskParams {
+    /// Features per sample `F` (MNIST: 784).
+    pub features: u64,
+    /// Bits per feature `P_d` (8-bit grayscale pixels).
+    pub data_precision_bits: u64,
+    /// Bits per model parameter `P_m`.
+    pub model_precision_bits: u64,
+    /// Model parameters whose size scales with the batch, `S_d`
+    /// (0 for a fixed-topology DNN; nonzero for e.g. SVs in an SVM).
+    pub model_size_per_sample: u64,
+    /// Batch-independent model parameter count `S_m`
+    /// (the paper's DNN: 280,440 values = 8,974,080 bits at 32-bit).
+    pub model_size_params: u64,
+    /// Per-sample per-epoch compute `C_m` in clock cycles
+    /// (§V-A: 1,123,736 FLOPs for fwd+bwd of the DNN).
+    pub compute_cycles_per_sample: f64,
+}
+
+impl Default for TaskParams {
+    fn default() -> Self {
+        Self {
+            features: 784,
+            data_precision_bits: 8,
+            model_precision_bits: 32,
+            model_size_per_sample: 0,
+            model_size_params: 280_440,
+            compute_cycles_per_sample: 1_123_736.0,
+        }
+    }
+}
+
+impl TaskParams {
+    /// Total model payload in bits (the paper's `P_m · S_m` = 8,974,080).
+    pub fn model_bits(&self) -> u64 {
+        self.model_precision_bits * self.model_size_params
+    }
+}
+
+/// The eq.-(5) coefficients for one learner.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LearnerCost {
+    /// `C²_k = C_m / f_k` — seconds per (sample × epoch).
+    pub c2: f64,
+    /// `C¹_k` — seconds per sample of communication.
+    pub c1: f64,
+    /// `C⁰_k` — seconds of fixed model exchange.
+    pub c0: f64,
+}
+
+impl LearnerCost {
+    /// Build the coefficients from hardware, link, and task constants.
+    pub fn from_parts(
+        dev: &Device,
+        link: &Link,
+        task: &TaskParams,
+        scenario: DataScenario,
+    ) -> Self {
+        let rate = link.rate_bps;
+        assert!(rate > 0.0, "link rate must be positive");
+        let c2 = task.compute_cycles_per_sample / dev.cpu_hz;
+        let data_term = match scenario {
+            DataScenario::TaskParallelization => {
+                (task.features * task.data_precision_bits) as f64
+            }
+            DataScenario::DistributedDataset => 0.0,
+        };
+        let c1 = (data_term
+            + 2.0 * (task.model_precision_bits * task.model_size_per_sample) as f64)
+            / rate;
+        let c0 = 2.0 * task.model_bits() as f64 / rate;
+        Self { c2, c1, c0 }
+    }
+
+    /// Exact construction from raw coefficients (tests / synthetic sweeps).
+    pub fn new(c2: f64, c1: f64, c0: f64) -> Self {
+        assert!(c2 > 0.0 && c1 >= 0.0 && c0 >= 0.0);
+        Self { c2, c1, c0 }
+    }
+
+    /// Total cycle time, eq. (5): `t_k(τ, d)`.
+    #[inline]
+    pub fn time(&self, tau: f64, d: f64) -> f64 {
+        self.c2 * tau * d + self.c1 * d + self.c0
+    }
+
+    /// Continuous batch size forced by the full-duration constraint
+    /// `t_k = T` (eq. 7b/8c): `d(τ) = (T − C⁰) / (C¹ + C²·τ)`.
+    /// Returns `None` when even `d = 0` misses the deadline (`C⁰ > T`),
+    /// i.e. MEL is infeasible for this learner (§III remark).
+    #[inline]
+    pub fn d_of_tau(&self, tau: f64, t_cycle: f64) -> Option<f64> {
+        let num = t_cycle - self.c0;
+        if num <= 0.0 {
+            return None;
+        }
+        Some(num / (self.c1 + self.c2 * tau))
+    }
+
+    /// Continuous number of updates forced by `t_k = T` at batch `d`:
+    /// `τ(d) = (T − C⁰ − C¹·d) / (C²·d)`. `None` if `d` alone busts `T`.
+    #[inline]
+    pub fn tau_of_d(&self, d: f64, t_cycle: f64) -> Option<f64> {
+        if d <= 0.0 {
+            return None;
+        }
+        let num = t_cycle - self.c0 - self.c1 * d;
+        if num < 0.0 {
+            return None;
+        }
+        Some(num / (self.c2 * d))
+    }
+
+    /// Max whole updates learner `k` can fit in `T` with integer batch `d`
+    /// — the "work the full duration" operating point after flooring.
+    #[inline]
+    pub fn tau_max_int(&self, d: u64, t_cycle: f64) -> Option<u64> {
+        self.tau_of_d(d as f64, t_cycle).map(|t| t.floor() as u64)
+    }
+
+    /// Largest integer batch that still allows at least `tau` updates.
+    #[inline]
+    pub fn d_max_int_for_tau(&self, tau: u64, t_cycle: f64) -> Option<u64> {
+        self.d_of_tau(tau as f64, t_cycle).map(|d| d.floor() as u64)
+    }
+}
+
+/// Batch-size bounds `d_l ≤ d_k ≤ d_u` (eq. 7f).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Bounds {
+    pub d_lo: u64,
+    pub d_hi: u64,
+}
+
+impl Bounds {
+    pub fn new(d_lo: u64, d_hi: u64) -> Self {
+        assert!(d_lo >= 1, "d_l must be >= 1 (integer positivity, eq. 7e)");
+        assert!(d_hi >= d_lo, "need d_l <= d_u");
+        Self { d_lo, d_hi }
+    }
+
+    /// The paper's suggested scaling: bounds proportional to the equal
+    /// share `d/K` (§III justifies bounds as guarding against starving /
+    /// overloading single nodes).
+    pub fn proportional(d_total: u64, k: usize, lo_frac: f64, hi_frac: f64) -> Self {
+        assert!(k > 0 && d_total > 0);
+        assert!(lo_frac > 0.0 && hi_frac >= lo_frac);
+        let share = d_total as f64 / k as f64;
+        let d_lo = (share * lo_frac).floor().max(1.0) as u64;
+        let d_hi = (share * hi_frac).ceil() as u64;
+        Self::new(d_lo, d_hi.max(d_lo))
+    }
+
+    #[inline]
+    pub fn clamp(&self, d: u64) -> u64 {
+        d.clamp(self.d_lo, self.d_hi)
+    }
+
+    #[inline]
+    pub fn contains(&self, d: u64) -> bool {
+        (self.d_lo..=self.d_hi).contains(&d)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::channel::{sample_link, ChannelParams};
+    use crate::device::{sample_fleet, DeviceRanges};
+    use crate::sim::Rng;
+
+    fn cost() -> LearnerCost {
+        LearnerCost::new(1.6e-3, 1.2e-4, 0.35)
+    }
+
+    #[test]
+    fn time_matches_quadratic_form() {
+        let c = cost();
+        let t = c.time(3.0, 1000.0);
+        assert!((t - (1.6e-3 * 3.0 * 1000.0 + 1.2e-4 * 1000.0 + 0.35)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn d_of_tau_inverts_tau_of_d() {
+        let c = cost();
+        let t_cycle = 7.5;
+        for tau in [0.5, 1.0, 2.0, 5.0, 11.0] {
+            let d = c.d_of_tau(tau, t_cycle).unwrap();
+            let tau_back = c.tau_of_d(d, t_cycle).unwrap();
+            assert!((tau - tau_back).abs() < 1e-9, "tau={tau} back={tau_back}");
+            // and the point sits exactly on the t = T manifold
+            assert!((c.time(tau, d) - t_cycle).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn d_of_tau_decreasing_in_tau() {
+        let c = cost();
+        let mut prev = f64::INFINITY;
+        for tau in 0..20 {
+            let d = c.d_of_tau(tau as f64, 15.0).unwrap();
+            assert!(d < prev);
+            prev = d;
+        }
+    }
+
+    #[test]
+    fn infeasible_when_model_exchange_exceeds_cycle() {
+        let c = LearnerCost::new(1e-3, 1e-4, 10.0);
+        assert!(c.d_of_tau(1.0, 7.5).is_none());
+        assert!(c.tau_of_d(100.0, 7.5).is_none());
+    }
+
+    #[test]
+    fn tau_max_int_floors() {
+        let c = cost();
+        let d = 1000u64;
+        let tau = c.tau_of_d(d as f64, 7.5).unwrap();
+        let ti = c.tau_max_int(d, 7.5).unwrap();
+        assert_eq!(ti, tau.floor() as u64);
+        // the floored point respects the deadline...
+        assert!(c.time(ti as f64, d as f64) <= 7.5 + 1e-9);
+        // ...and one more epoch would bust it
+        assert!(c.time((ti + 1) as f64, d as f64) > 7.5);
+    }
+
+    #[test]
+    fn from_parts_scenario_difference_is_exactly_the_data_term() {
+        let mut rng = Rng::new(77);
+        let devs = sample_fleet(2, &DeviceRanges::default(), &mut rng);
+        let link = sample_link(&ChannelParams::default(), &devs[0], &mut rng);
+        let task = TaskParams::default();
+        let tp = LearnerCost::from_parts(&devs[0], &link, &task, DataScenario::TaskParallelization);
+        let dd = LearnerCost::from_parts(&devs[0], &link, &task, DataScenario::DistributedDataset);
+        assert_eq!(tp.c2, dd.c2);
+        assert_eq!(tp.c0, dd.c0);
+        let expect_delta = (task.features * task.data_precision_bits) as f64 / link.rate_bps;
+        assert!((tp.c1 - dd.c1 - expect_delta).abs() < 1e-15);
+    }
+
+    #[test]
+    fn paper_model_payload() {
+        assert_eq!(TaskParams::default().model_bits(), 8_974_080);
+    }
+
+    #[test]
+    fn bounds_proportional_and_clamp() {
+        let b = Bounds::proportional(60_000, 20, 0.2, 2.5);
+        assert_eq!(b.d_lo, 600);
+        assert_eq!(b.d_hi, 7_500);
+        assert_eq!(b.clamp(100), 600);
+        assert_eq!(b.clamp(9_999), 7_500);
+        assert!(b.contains(600) && b.contains(7_500) && !b.contains(599));
+    }
+
+    #[test]
+    #[should_panic]
+    fn bounds_reject_inverted() {
+        Bounds::new(10, 5);
+    }
+}

@@ -1,0 +1,191 @@
+//! Dataset substrate: synthetic MNIST-like data, sharding, minibatching.
+//!
+//! The paper evaluates on MNIST (60,000 × 784, 10 classes). This
+//! environment has no network access, so [`synth`] generates a
+//! deterministic stand-in with identical shapes: 10 Gaussian class
+//! clusters in 784-dim pixel space, clamped to [0, 1] (see DESIGN.md
+//! §Substitutions — the learning-curve *shape* across schemes depends on
+//! the staleness structure, not the image statistics).
+//!
+//! [`sample_shards`] implements the orchestrator's task-parallelization
+//! dispatch: each global cycle it deals a fresh random partition of the
+//! dataset with the allocator's batch sizes `d_k` (Σ d_k = d, eq. 7c).
+//! [`Minibatches`] cuts a shard into fixed-size AOT minibatches with a
+//! trailing padded+masked batch, matching the L2 contract.
+
+pub mod synth;
+
+use crate::sim::Rng;
+
+pub use synth::{SynthConfig, SynthDataset};
+
+/// A dense f32 dataset (row-major samples × features + integer labels).
+#[derive(Debug, Clone)]
+pub struct Dataset {
+    pub features: usize,
+    pub classes: usize,
+    /// `n × features`, row-major.
+    pub x: Vec<f32>,
+    /// `n` labels in `0..classes`.
+    pub y: Vec<u8>,
+}
+
+impl Dataset {
+    pub fn len(&self) -> usize {
+        self.y.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.y.is_empty()
+    }
+
+    /// Row view of sample `i`.
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.x[i * self.features..(i + 1) * self.features]
+    }
+}
+
+/// Deal a random partition of `0..n_total` into shards of sizes `d`
+/// (requires `Σ d = n_total`): one Fisher–Yates permutation, then split.
+pub fn sample_shards(rng: &mut Rng, n_total: usize, d: &[u64]) -> Vec<Vec<u32>> {
+    let sum: u64 = d.iter().sum();
+    assert_eq!(sum as usize, n_total, "shard sizes must partition the dataset");
+    let mut perm: Vec<u32> = (0..n_total as u32).collect();
+    rng.shuffle(&mut perm);
+    let mut shards = Vec::with_capacity(d.len());
+    let mut off = 0usize;
+    for &dk in d {
+        let next = off + dk as usize;
+        shards.push(perm[off..next].to_vec());
+        off = next;
+    }
+    shards
+}
+
+/// One AOT-shaped minibatch: features, one-hot labels, validity mask.
+#[derive(Debug, Clone)]
+pub struct Batch {
+    pub x: Vec<f32>,
+    pub y_onehot: Vec<f32>,
+    pub mask: Vec<f32>,
+    /// Number of real (unpadded) rows.
+    pub real: usize,
+}
+
+/// Iterator over fixed-size minibatches of a shard (indices into a
+/// dataset), padding the last batch with masked zero rows.
+pub struct Minibatches<'a> {
+    data: &'a Dataset,
+    indices: &'a [u32],
+    batch: usize,
+    pos: usize,
+}
+
+impl<'a> Minibatches<'a> {
+    pub fn new(data: &'a Dataset, indices: &'a [u32], batch: usize) -> Self {
+        assert!(batch > 0);
+        Self { data, indices, batch, pos: 0 }
+    }
+
+    /// Number of minibatches that will be produced.
+    pub fn count(&self) -> usize {
+        self.indices.len().div_ceil(self.batch)
+    }
+}
+
+impl<'a> Iterator for Minibatches<'a> {
+    type Item = Batch;
+
+    fn next(&mut self) -> Option<Batch> {
+        if self.pos >= self.indices.len() {
+            return None;
+        }
+        let f = self.data.features;
+        let c = self.data.classes;
+        let b = self.batch;
+        let end = (self.pos + b).min(self.indices.len());
+        let real = end - self.pos;
+
+        let mut x = vec![0.0f32; b * f];
+        let mut y = vec![0.0f32; b * c];
+        let mut mask = vec![0.0f32; b];
+        for (row, &idx) in self.indices[self.pos..end].iter().enumerate() {
+            x[row * f..(row + 1) * f].copy_from_slice(self.data.row(idx as usize));
+            y[row * c + self.data.y[idx as usize] as usize] = 1.0;
+            mask[row] = 1.0;
+        }
+        self.pos = end;
+        Some(Batch { x, y_onehot: y, mask, real })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> Dataset {
+        let cfg = SynthConfig { train: 97, test: 11, ..SynthConfig::default() };
+        synth::generate(&cfg).train
+    }
+
+    #[test]
+    fn shards_partition_without_overlap() {
+        let mut rng = Rng::new(3);
+        let d = [40u64, 30, 27];
+        let shards = sample_shards(&mut rng, 97, &d);
+        assert_eq!(shards.len(), 3);
+        let mut all: Vec<u32> = shards.concat();
+        assert_eq!(all.len(), 97);
+        all.sort_unstable();
+        all.dedup();
+        assert_eq!(all.len(), 97, "overlapping shards");
+        for (s, &dk) in shards.iter().zip(&d) {
+            assert_eq!(s.len(), dk as usize);
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn shards_must_cover_dataset() {
+        let mut rng = Rng::new(3);
+        sample_shards(&mut rng, 100, &[10, 10]);
+    }
+
+    #[test]
+    fn minibatches_pad_and_mask_last() {
+        let data = tiny();
+        let idx: Vec<u32> = (0..50).collect();
+        let batches: Vec<Batch> = Minibatches::new(&data, &idx, 32).collect();
+        assert_eq!(batches.len(), 2);
+        assert_eq!(batches[0].real, 32);
+        assert_eq!(batches[1].real, 18);
+        assert_eq!(batches[1].mask.iter().sum::<f32>(), 18.0);
+        // padded rows are zero
+        let f = data.features;
+        assert!(batches[1].x[18 * f..].iter().all(|&v| v == 0.0));
+        assert!(batches[1].y_onehot[18 * data.classes..].iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn minibatches_one_hot_matches_labels() {
+        let data = tiny();
+        let idx: Vec<u32> = (0..16).collect();
+        let b = Minibatches::new(&data, &idx, 16).next().unwrap();
+        for row in 0..16 {
+            let label = data.y[row] as usize;
+            for c in 0..data.classes {
+                let want = if c == label { 1.0 } else { 0.0 };
+                assert_eq!(b.y_onehot[row * data.classes + c], want);
+            }
+        }
+    }
+
+    #[test]
+    fn minibatch_count_matches_iteration() {
+        let data = tiny();
+        let idx: Vec<u32> = (0..97).collect();
+        let mb = Minibatches::new(&data, &idx, 32);
+        assert_eq!(mb.count(), 4);
+        assert_eq!(Minibatches::new(&data, &idx, 32).collect::<Vec<_>>().len(), 4);
+    }
+}

@@ -1,0 +1,150 @@
+//! Heterogeneous edge-device profiles.
+//!
+//! §V-A of the paper: "approximately half of the nodes have the
+//! processing capabilities of typical computing devices such as
+//! desktops/laptops and the other half consists of industrial
+//! micro-controller type nodes such as a Raspberry Pi". A device
+//! contributes its CPU frequency `f_k` (clock cycles per second, the
+//! denominator of eq. 2) and its transmit power `P_k` (the numerator of
+//! the SNR in eq. 1/3).
+
+
+use crate::sim::Rng;
+
+/// Device class with paper-plausible capability ranges.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DeviceClass {
+    /// Desktop/laptop-class node (§V-A): GHz-range CPU, full Wi-Fi power.
+    Laptop,
+    /// Raspberry-Pi-class industrial node: sub-GHz effective CPU.
+    Embedded,
+}
+
+/// A concrete edge device (one learner's hardware).
+#[derive(Debug, Clone, Copy)]
+pub struct Device {
+    pub class: DeviceClass,
+    /// Effective CPU frequency `f_k` in cycles/second.
+    pub cpu_hz: f64,
+    /// Uplink/downlink transmit power `P_k` in watts (reciprocity, §II).
+    pub tx_power_w: f64,
+}
+
+/// Capability ranges per class. Effective frequency is drawn uniformly to
+/// model load variance / thermal throttling across nominally identical
+/// devices — the heterogeneity driving the paper's staleness gap.
+#[derive(Debug, Clone, Copy)]
+pub struct DeviceRanges {
+    pub laptop_hz: (f64, f64),
+    pub embedded_hz: (f64, f64),
+    pub tx_power_dbm: f64,
+}
+
+impl Default for DeviceRanges {
+    fn default() -> Self {
+        Self {
+            // effective sustained clocks for DNN math: 2.0–3.0 GHz laptop,
+            // 0.5–0.9 GHz Raspberry-Pi-class
+            laptop_hz: (2.0e9, 3.0e9),
+            embedded_hz: (0.5e9, 0.9e9),
+            // 23 dBm ≈ 200 mW, the usual 802.11 handset budget
+            tx_power_dbm: 23.0,
+        }
+    }
+}
+
+/// dBm → watts.
+#[inline]
+pub fn dbm_to_watts(dbm: f64) -> f64 {
+    10f64.powf(dbm / 10.0) * 1e-3
+}
+
+/// watts → dBm.
+#[inline]
+pub fn watts_to_dbm(w: f64) -> f64 {
+    10.0 * (w / 1e-3).log10()
+}
+
+impl Device {
+    /// Sample a device of the given class.
+    pub fn sample(class: DeviceClass, ranges: &DeviceRanges, rng: &mut Rng) -> Self {
+        let (lo, hi) = match class {
+            DeviceClass::Laptop => ranges.laptop_hz,
+            DeviceClass::Embedded => ranges.embedded_hz,
+        };
+        Self {
+            class,
+            cpu_hz: rng.uniform_range(lo, hi),
+            tx_power_w: dbm_to_watts(ranges.tx_power_dbm),
+        }
+    }
+}
+
+/// Sample the paper's fleet: floor(K/2) laptops, the rest embedded,
+/// shuffled so that device class is not correlated with node index (and
+/// hence not with placement / channel draw order).
+pub fn sample_fleet(k: usize, ranges: &DeviceRanges, rng: &mut Rng) -> Vec<Device> {
+    let mut devices: Vec<Device> = (0..k)
+        .map(|i| {
+            let class = if i < k / 2 {
+                DeviceClass::Laptop
+            } else {
+                DeviceClass::Embedded
+            };
+            Device::sample(class, ranges, rng)
+        })
+        .collect();
+    rng.shuffle(&mut devices);
+    devices
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dbm_conversion_round_trips() {
+        for dbm in [-10.0, 0.0, 17.0, 23.0, 30.0] {
+            let w = dbm_to_watts(dbm);
+            assert!((watts_to_dbm(w) - dbm).abs() < 1e-9);
+        }
+        assert!((dbm_to_watts(23.0) - 0.19952623).abs() < 1e-6);
+    }
+
+    #[test]
+    fn sample_respects_class_ranges() {
+        let ranges = DeviceRanges::default();
+        let mut rng = Rng::new(3);
+        for _ in 0..100 {
+            let d = Device::sample(DeviceClass::Laptop, &ranges, &mut rng);
+            assert!(d.cpu_hz >= ranges.laptop_hz.0 && d.cpu_hz <= ranges.laptop_hz.1);
+            let e = Device::sample(DeviceClass::Embedded, &ranges, &mut rng);
+            assert!(e.cpu_hz >= ranges.embedded_hz.0 && e.cpu_hz <= ranges.embedded_hz.1);
+            assert!(e.cpu_hz < d.cpu_hz); // ranges are disjoint
+        }
+    }
+
+    #[test]
+    fn fleet_is_half_and_half() {
+        let mut rng = Rng::new(5);
+        for k in [2usize, 5, 10, 20, 21] {
+            let fleet = sample_fleet(k, &DeviceRanges::default(), &mut rng);
+            assert_eq!(fleet.len(), k);
+            let laptops = fleet
+                .iter()
+                .filter(|d| d.class == DeviceClass::Laptop)
+                .count();
+            assert_eq!(laptops, k / 2);
+        }
+    }
+
+    #[test]
+    fn fleet_is_deterministic_per_seed() {
+        let a = sample_fleet(8, &DeviceRanges::default(), &mut Rng::new(9));
+        let b = sample_fleet(8, &DeviceRanges::default(), &mut Rng::new(9));
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.cpu_hz, y.cpu_hz);
+            assert_eq!(x.class, y.class);
+        }
+    }
+}

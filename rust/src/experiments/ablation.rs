@@ -1,0 +1,140 @@
+//! ABL-1: sensitivity of the optimized staleness to the batch bounds
+//! (d_l, d_u) of eq. (7f).
+//!
+//! §III motivates the bounds ("a high-performing node … does not receive
+//! a very small dataset just to minimize staleness", underfitting
+//! guard). The tighter the box, the less freedom the optimizer has to
+//! equalize τ — this sweep quantifies that trade-off and justifies the
+//! default (0.2, 2.5)·d/K used everywhere else.
+
+use anyhow::Result;
+
+use crate::allocation::{make_allocator, AllocatorKind};
+use crate::config::ScenarioConfig;
+use crate::metrics::{fmt_f, Summary, Table};
+
+/// One bounds point.
+#[derive(Debug, Clone)]
+pub struct BoundsRow {
+    pub lo_frac: f64,
+    pub hi_frac: f64,
+    pub scheme: &'static str,
+    pub max_staleness: f64,
+    pub avg_staleness: f64,
+    /// Fraction of seeds where allocation failed (box infeasible).
+    pub infeasible: f64,
+}
+
+/// Sweep parameters.
+#[derive(Debug, Clone)]
+pub struct AblationParams {
+    pub base: ScenarioConfig,
+    /// (lo_frac, hi_frac) pairs to test.
+    pub bound_pairs: Vec<(f64, f64)>,
+    pub schemes: Vec<AllocatorKind>,
+    pub seeds: usize,
+}
+
+impl Default for AblationParams {
+    fn default() -> Self {
+        Self {
+            base: ScenarioConfig::paper_default()
+                .with_learners(20)
+                .with_cycle(7.5),
+            bound_pairs: vec![
+                (0.9, 1.1),
+                (0.75, 1.25),
+                (0.5, 1.5),
+                (0.2, 2.5),
+                (0.1, 4.0),
+                (0.05, 8.0),
+            ],
+            schemes: vec![AllocatorKind::Sai, AllocatorKind::Exact],
+            seeds: 5,
+        }
+    }
+}
+
+/// Run the bounds sweep.
+pub fn run(params: &AblationParams) -> Result<Vec<BoundsRow>> {
+    let mut rows = Vec::new();
+    for &(lo, hi) in &params.bound_pairs {
+        for &kind in &params.schemes {
+            let alloc = make_allocator(kind);
+            let mut s_max = Summary::default();
+            let mut s_avg = Summary::default();
+            let mut fails = 0usize;
+            for seed in 0..params.seeds {
+                let scenario = params
+                    .base
+                    .clone()
+                    .with_bound_fracs(lo, hi)
+                    .with_seed(params.base.seed.wrapping_add(seed as u64))
+                    .build();
+                match alloc.allocate(
+                    &scenario.costs,
+                    scenario.t_cycle(),
+                    scenario.total_samples(),
+                    &scenario.bounds,
+                ) {
+                    Ok(a) => {
+                        s_max.push(a.max_staleness() as f64);
+                        s_avg.push(a.avg_staleness());
+                    }
+                    Err(_) => fails += 1,
+                }
+            }
+            rows.push(BoundsRow {
+                lo_frac: lo,
+                hi_frac: hi,
+                scheme: kind.name(),
+                max_staleness: s_max.mean(),
+                avg_staleness: s_avg.mean(),
+                infeasible: fails as f64 / params.seeds as f64,
+            });
+        }
+    }
+    Ok(rows)
+}
+
+/// Render as a table.
+pub fn table(rows: &[BoundsRow]) -> Table {
+    let mut t = Table::new(&[
+        "d_lo/share", "d_hi/share", "scheme", "max_staleness", "avg_staleness", "infeasible",
+    ]);
+    for r in rows {
+        t.row(&[
+            fmt_f(r.lo_frac, 2),
+            fmt_f(r.hi_frac, 2),
+            r.scheme.to_string(),
+            fmt_f(r.max_staleness, 2),
+            fmt_f(r.avg_staleness, 2),
+            fmt_f(r.infeasible, 2),
+        ]);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn wider_bounds_do_not_hurt_staleness() {
+        let params = AblationParams {
+            bound_pairs: vec![(0.9, 1.1), (0.2, 2.5)],
+            schemes: vec![AllocatorKind::Sai],
+            seeds: 3,
+            ..Default::default()
+        };
+        let rows = run(&params).unwrap();
+        let tight = &rows[0];
+        let wide = &rows[1];
+        assert!(
+            wide.max_staleness <= tight.max_staleness + 1e-9,
+            "wide {} vs tight {}",
+            wide.max_staleness,
+            tight.max_staleness
+        );
+    }
+}

@@ -1,0 +1,192 @@
+//! Fig. 2 — staleness vs number of learners.
+//!
+//! The paper sweeps `K` for `T = 7.5 s` and `T = 15 s` and plots max and
+//! average staleness for the optimizer-based ("numerical"), SAI, and ETA
+//! schemes. We additionally run the exact integer optimum (yardstick)
+//! and average each point over independent scenario seeds (the paper
+//! shows a single realization; seed-averaging smooths the same trend).
+
+use anyhow::Result;
+
+use crate::allocation::{make_allocator, AllocatorKind};
+use crate::config::ScenarioConfig;
+use crate::metrics::{fmt_f, Summary, Table};
+
+/// One (scheme, K, T) point of the figure.
+#[derive(Debug, Clone)]
+pub struct Fig2Row {
+    pub scheme: &'static str,
+    pub k: usize,
+    pub t_cycle: f64,
+    pub max_staleness: f64,
+    pub avg_staleness: f64,
+    /// Mean allocation solve time (ms).
+    pub solve_ms: f64,
+    pub seeds: usize,
+}
+
+/// Sweep parameters.
+#[derive(Debug, Clone)]
+pub struct Fig2Params {
+    pub base: ScenarioConfig,
+    pub ks: Vec<usize>,
+    pub t_cycles: Vec<f64>,
+    pub schemes: Vec<AllocatorKind>,
+    pub seeds: usize,
+}
+
+impl Default for Fig2Params {
+    fn default() -> Self {
+        Self {
+            base: ScenarioConfig::paper_default(),
+            ks: (4..=20).step_by(2).collect(),
+            t_cycles: vec![7.5, 15.0],
+            schemes: vec![
+                AllocatorKind::Relaxed,
+                AllocatorKind::Sai,
+                AllocatorKind::Exact,
+                AllocatorKind::Eta,
+            ],
+            seeds: 5,
+        }
+    }
+}
+
+/// Run the sweep.
+pub fn run(params: &Fig2Params) -> Result<Vec<Fig2Row>> {
+    let mut rows = Vec::new();
+    for &t_cycle in &params.t_cycles {
+        for &k in &params.ks {
+            for &kind in &params.schemes {
+                let alloc = make_allocator(kind);
+                let mut s_max = Summary::default();
+                let mut s_avg = Summary::default();
+                let mut s_ms = Summary::default();
+                for seed in 0..params.seeds {
+                    let scenario = params
+                        .base
+                        .clone()
+                        .with_learners(k)
+                        .with_cycle(t_cycle)
+                        .with_seed(params.base.seed.wrapping_add(seed as u64))
+                        .build();
+                    let t0 = std::time::Instant::now();
+                    let a = alloc.allocate(
+                        &scenario.costs,
+                        t_cycle,
+                        scenario.total_samples(),
+                        &scenario.bounds,
+                    )?;
+                    s_ms.push(t0.elapsed().as_secs_f64() * 1e3);
+                    debug_assert!(a
+                        .validate(
+                            &scenario.costs,
+                            t_cycle,
+                            scenario.total_samples(),
+                            &scenario.bounds
+                        )
+                        .is_ok());
+                    s_max.push(a.max_staleness() as f64);
+                    s_avg.push(a.avg_staleness());
+                }
+                rows.push(Fig2Row {
+                    scheme: kind.name(),
+                    k,
+                    t_cycle,
+                    max_staleness: s_max.mean(),
+                    avg_staleness: s_avg.mean(),
+                    solve_ms: s_ms.mean(),
+                    seeds: params.seeds,
+                });
+            }
+        }
+    }
+    Ok(rows)
+}
+
+/// Render the sweep as the figure's data table.
+pub fn table(rows: &[Fig2Row]) -> Table {
+    let mut t = Table::new(&[
+        "T(s)", "K", "scheme", "max_staleness", "avg_staleness", "solve_ms",
+    ]);
+    for r in rows {
+        t.row(&[
+            fmt_f(r.t_cycle, 1),
+            r.k.to_string(),
+            r.scheme.to_string(),
+            fmt_f(r.max_staleness, 2),
+            fmt_f(r.avg_staleness, 2),
+            fmt_f(r.solve_ms, 3),
+        ]);
+    }
+    t
+}
+
+/// §V-B headline check (K = 20, T = 7.5 s): the paper quotes optimized
+/// max staleness ≈ 1 vs ETA ≈ 4, optimized avg ≈ 0.5 vs ETA ≈ 1.5.
+/// Returns (opt_max, eta_max, opt_avg, eta_avg) at that point.
+pub fn headline(rows: &[Fig2Row]) -> Option<(f64, f64, f64, f64)> {
+    let find = |scheme: &str| {
+        rows.iter()
+            .find(|r| r.scheme == scheme && r.k == 20 && (r.t_cycle - 7.5).abs() < 1e-9)
+    };
+    let opt = find("relaxed").or_else(|| find("sai")).or_else(|| find("exact"))?;
+    let eta = find("eta")?;
+    Some((
+        opt.max_staleness,
+        eta.max_staleness,
+        opt.avg_staleness,
+        eta.avg_staleness,
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_params() -> Fig2Params {
+        Fig2Params {
+            ks: vec![6, 10],
+            t_cycles: vec![7.5],
+            schemes: vec![AllocatorKind::Sai, AllocatorKind::Eta],
+            seeds: 2,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn sweep_produces_all_points() {
+        let rows = run(&tiny_params()).unwrap();
+        assert_eq!(rows.len(), 2 * 2); // 2 K x 2 schemes
+        let t = table(&rows);
+        assert_eq!(t.num_rows(), 4);
+    }
+
+    #[test]
+    fn optimized_staleness_below_eta_on_average() {
+        let params = Fig2Params {
+            ks: vec![10, 16, 20],
+            t_cycles: vec![7.5],
+            schemes: vec![AllocatorKind::Sai, AllocatorKind::Eta],
+            seeds: 3,
+            ..Default::default()
+        };
+        let rows = run(&params).unwrap();
+        for k in [10usize, 16, 20] {
+            let sai = rows
+                .iter()
+                .find(|r| r.scheme == "sai" && r.k == k)
+                .unwrap();
+            let eta = rows
+                .iter()
+                .find(|r| r.scheme == "eta" && r.k == k)
+                .unwrap();
+            assert!(
+                sai.max_staleness <= eta.max_staleness,
+                "k={k}: sai {} vs eta {}",
+                sai.max_staleness,
+                eta.max_staleness
+            );
+        }
+    }
+}

@@ -1,0 +1,151 @@
+//! Fig. 3 — learning-accuracy progression over global cycles.
+//!
+//! The paper trains the [784, 300, 124, 60, 10] DNN for `K ∈ {10,15,20}`
+//! learners at `T = 15 s` and plots validation accuracy per global
+//! cycle for (i) the proposed asynchronous optimized allocation,
+//! (ii) the synchronous scheme [9], (iii) asynchronous ETA [10]. This
+//! driver runs the full three-layer stack: allocations from the L3
+//! solvers, SGD numerics through the AOT L2/L1 artifacts.
+
+use anyhow::Result;
+
+use crate::aggregation::AggregationRule;
+use crate::allocation::AllocatorKind;
+use crate::config::ScenarioConfig;
+use crate::coordinator::{CycleRecord, Orchestrator, TrainOptions};
+use crate::data::{synth, SynthConfig};
+use crate::metrics::{fmt_f, Table};
+use crate::runtime::Runtime;
+
+/// One scheme's learning curve.
+#[derive(Debug, Clone)]
+pub struct Curve {
+    pub scheme: &'static str,
+    pub k: usize,
+    pub records: Vec<CycleRecord>,
+}
+
+impl Curve {
+    /// First cycle index (1-based, as the paper counts updates) whose
+    /// accuracy reaches `target`; `None` if never.
+    pub fn cycles_to_accuracy(&self, target: f64) -> Option<usize> {
+        self.records
+            .iter()
+            .find(|r| r.accuracy >= target)
+            .map(|r| r.cycle + 1)
+    }
+
+    pub fn final_accuracy(&self) -> f64 {
+        self.records
+            .iter()
+            .rev()
+            .find(|r| r.accuracy.is_finite())
+            .map(|r| r.accuracy)
+            .unwrap_or(f64::NAN)
+    }
+}
+
+/// Fig.-3 parameters.
+#[derive(Debug, Clone)]
+pub struct Fig3Params {
+    pub base: ScenarioConfig,
+    pub ks: Vec<usize>,
+    pub schemes: Vec<AllocatorKind>,
+    pub cycles: usize,
+    pub lr: f32,
+    /// Synthetic dataset config (train size must equal base.total_samples).
+    pub data: SynthConfig,
+    pub aggregation: AggregationRule,
+}
+
+impl Default for Fig3Params {
+    fn default() -> Self {
+        let base = ScenarioConfig::paper_default().with_cycle(15.0);
+        let data = SynthConfig {
+            train: base.total_samples as usize,
+            test: 10_000,
+            ..SynthConfig::default()
+        };
+        Self {
+            base,
+            ks: vec![10, 15, 20],
+            schemes: vec![AllocatorKind::Relaxed, AllocatorKind::Sync, AllocatorKind::Eta],
+            cycles: 12,
+            lr: 0.01,
+            data,
+            aggregation: AggregationRule::FedAvg,
+        }
+    }
+}
+
+/// Run the figure: one curve per (K, scheme).
+pub fn run(runtime: &Runtime, params: &Fig3Params) -> Result<Vec<Curve>> {
+    assert_eq!(
+        params.data.train as u64, params.base.total_samples,
+        "dataset size must equal the scenario's d (eq. 7c)"
+    );
+    let ds = synth::generate(&params.data);
+    let mut curves = Vec::new();
+    for &k in &params.ks {
+        for &scheme in &params.schemes {
+            let scenario = params.base.clone().with_learners(k).build();
+            let mut orch = Orchestrator::new(
+                scenario,
+                scheme,
+                params.aggregation,
+                runtime,
+                ds.train.clone(),
+                ds.test.clone(),
+            )?;
+            let records = orch.run(&TrainOptions {
+                cycles: params.cycles,
+                lr: params.lr,
+                eval_every: 1,
+                reallocate_each_cycle: false,
+            })?;
+            curves.push(Curve { scheme: scheme.name(), k, records });
+        }
+    }
+    Ok(curves)
+}
+
+/// Accuracy-per-cycle table (the figure's series).
+pub fn table(curves: &[Curve]) -> Table {
+    let mut t = Table::new(&[
+        "K", "scheme", "cycle", "vtime_s", "accuracy", "val_loss", "max_stale", "util",
+    ]);
+    for c in curves {
+        for r in &c.records {
+            t.row(&[
+                c.k.to_string(),
+                c.scheme.to_string(),
+                (r.cycle + 1).to_string(),
+                fmt_f(r.vtime_s, 1),
+                fmt_f(r.accuracy, 4),
+                fmt_f(r.val_loss, 4),
+                r.max_staleness.to_string(),
+                fmt_f(r.utilization, 3),
+            ]);
+        }
+    }
+    t
+}
+
+/// §V-C summary: cycles to reach each accuracy target per scheme.
+pub fn summary_table(curves: &[Curve], targets: &[f64]) -> Table {
+    let mut t = Table::new(&["K", "scheme", "target", "cycles", "final_acc"]);
+    for c in curves {
+        for &target in targets {
+            t.row(&[
+                c.k.to_string(),
+                c.scheme.to_string(),
+                fmt_f(target, 2),
+                c.cycles_to_accuracy(target)
+                    .map(|n| n.to_string())
+                    .unwrap_or_else(|| "-".into()),
+                fmt_f(c.final_accuracy(), 4),
+            ]);
+        }
+    }
+    t
+}

@@ -1,0 +1,14 @@
+//! Experiment drivers — one per paper figure/table (DESIGN.md index).
+//!
+//! * [`fig2`] — max & average staleness vs `K` for `T ∈ {7.5, 15}` s
+//!   across schemes (Fig. 2 + the §V-B quoted numbers);
+//! * [`fig3`] — validation accuracy vs global cycles for
+//!   `K ∈ {10, 15, 20}` at `T = 15` s (Fig. 3 + §V-C quoted gains);
+//! * [`ablation`] — the (d_l, d_u)-bounds sensitivity study (§III
+//!   motivates the bounds; ABL-1 in DESIGN.md).
+//!
+//! Benches and examples call these; the CLI exposes them as subcommands.
+
+pub mod ablation;
+pub mod fig2;
+pub mod fig3;

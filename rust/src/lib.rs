@@ -1,0 +1,73 @@
+//! # asyncmel — Asynchronous Federated Mobile Edge Learning
+//!
+//! Production-quality reproduction of *"Adaptive Task Allocation for
+//! Asynchronous Federated Mobile Edge Learning"* (Mohammad & Sorour, 2019).
+//!
+//! The paper's setting: an **orchestrator** distributes a learning task
+//! over `K` heterogeneous wireless edge learners. Within a global cycle
+//! clock `T`, learner `k` receives a batch of `d_k` samples plus the
+//! current global model, runs `τ_k` local SGD epochs, and sends the
+//! updated model back. The paper's contribution is choosing `(τ_k, d_k)`
+//! jointly so every learner works the *full* cycle (`t_k = T`, eq. 7b)
+//! while the **gradient staleness** `max |τ_k − τ_l|` is minimized
+//! (eq. 7a) — an NP-hard integer QCLP that is relaxed, solved
+//! numerically and analytically (KKT + suggest-and-improve), and shown
+//! to beat equal-task-allocation (ETA) async and synchronous MEL.
+//!
+//! ## Crate layout (L3 of the three-layer stack, see DESIGN.md)
+//!
+//! | module | role |
+//! |---|---|
+//! | [`sim`] | deterministic RNG + virtual clock substrate |
+//! | [`config`] | scenario configuration, presets, JSON I/O |
+//! | [`channel`] | 802.11-like indoor wireless link simulator |
+//! | [`device`] | heterogeneous edge-device profiles |
+//! | [`costmodel`] | eq. (1)–(5): per-learner time coefficients `C²,C¹,C⁰` |
+//! | [`solver`] | numeric substrate: projected gradient, augmented Lagrangian, KKT |
+//! | [`allocation`] | the paper's algorithms + baselines (relaxed, SAI, exact, ETA, sync) |
+//! | [`staleness`] | staleness metrics (eq. 6, 10, 13) |
+//! | [`aggregation`] | federated model aggregation rules |
+//! | [`data`] | synthetic MNIST-like dataset, sharding, minibatching |
+//! | [`runtime`] | PJRT executor for the AOT-compiled L2/L1 artifacts |
+//! | [`coordinator`] | the async-MEL orchestrator (global-cycle loop) |
+//! | [`metrics`] | CSV writers, table printers, run summaries |
+//! | [`experiments`] | drivers regenerating every paper figure/table |
+//!
+//! ## In-tree infrastructure substrates
+//!
+//! This build environment is fully offline with a registry that carries
+//! only the `xla` crate chain, so the usual ecosystem crates are
+//! reimplemented in-tree: [`json`] (serde_json stand-in), [`cli`]
+//! (clap stand-in), [`benchkit`] (criterion stand-in), [`testkit`]
+//! (proptest stand-in).
+
+pub mod aggregation;
+pub mod allocation;
+pub mod benchkit;
+pub mod channel;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod costmodel;
+pub mod data;
+pub mod device;
+pub mod energy;
+pub mod experiments;
+pub mod json;
+pub mod metrics;
+pub mod runtime;
+pub mod sim;
+pub mod solver;
+pub mod staleness;
+pub mod testkit;
+
+/// Convenience prelude for examples and benches.
+pub mod prelude {
+    pub use crate::allocation::{
+        make_allocator, Allocation, AllocatorKind, Bounds, TaskAllocator,
+    };
+    pub use crate::config::{Scenario, ScenarioConfig};
+    pub use crate::costmodel::LearnerCost;
+    pub use crate::sim::Rng;
+    pub use crate::staleness::{avg_staleness, max_staleness};
+}

@@ -1,0 +1,237 @@
+//! `asyncmel` — CLI launcher for the asynchronous-MEL orchestrator.
+//!
+//! Subcommands map 1:1 to the paper's experiments:
+//!
+//! ```text
+//! asyncmel info                          # environment + artifact status
+//! asyncmel solve --k 20 --t 7.5          # one allocation, all schemes side by side
+//! asyncmel fig2 [--seeds 5] [--csv f]    # staleness sweep (paper Fig. 2)
+//! asyncmel fig3 [--cycles 12] [--ks 10,15,20] [--samples 60000]
+//! asyncmel train --k 10 --scheme relaxed --cycles 10
+//! asyncmel ablation [--seeds 5]          # bounds sensitivity (ABL-1)
+//! ```
+//!
+//! Global flag: `--config <json>` loads a [`ScenarioConfig`] override
+//! file (sparse — absent fields keep the paper defaults).
+
+use anyhow::{bail, Result};
+
+use asyncmel::aggregation::AggregationRule;
+use asyncmel::allocation::{make_allocator, AllocatorKind};
+use asyncmel::cli::Args;
+use asyncmel::config::ScenarioConfig;
+use asyncmel::coordinator::{Orchestrator, TrainOptions};
+use asyncmel::data::{synth, SynthConfig};
+use asyncmel::experiments::{ablation, fig2, fig3};
+use asyncmel::metrics::{fmt_f, Table};
+use asyncmel::runtime::{default_artifacts_dir, Runtime};
+
+const USAGE: &str = "usage: asyncmel <info|solve|fig2|fig3|train|ablation> [flags]
+  info                               environment + artifact status
+  solve    --k N --t SECS            compare all allocation schemes
+  fig2     --seeds N --csv PATH      staleness vs K sweep (paper Fig. 2)
+  fig3     --cycles N --ks 10,15,20 --samples D --csv PATH
+  train    --k N --t SECS --scheme S --aggregation A --cycles N --lr F --samples D
+  ablation --seeds N --csv PATH      batch-bounds sensitivity (ABL-1)
+global: --config PATH (sparse scenario JSON override)";
+
+fn base_config(args: &Args) -> Result<ScenarioConfig> {
+    Ok(match args.get("config") {
+        Some(path) => ScenarioConfig::load(path)?,
+        None => ScenarioConfig::paper_default(),
+    })
+}
+
+fn cmd_info(base: &ScenarioConfig) {
+    println!("asyncmel {} — async federated MEL", env!("CARGO_PKG_VERSION"));
+    println!(
+        "scenario: K={} T={}s d={} bounds=({},{})·d/K",
+        base.num_learners, base.t_cycle_s, base.total_samples, base.d_lo_frac, base.d_hi_frac
+    );
+    let dir = default_artifacts_dir();
+    match Runtime::load(&dir) {
+        Ok(rt) => println!(
+            "artifacts: OK ({}), platform={}, model dims {:?}",
+            dir.display(),
+            rt.platform(),
+            rt.manifest.layer_dims
+        ),
+        Err(e) => println!("artifacts: NOT LOADED ({e:#}) — run `make artifacts`"),
+    }
+}
+
+fn cmd_solve(base: ScenarioConfig, args: &Args) -> Result<()> {
+    let k: usize = args.get_or("k", 10)?;
+    let t: f64 = args.get_or("t", 15.0)?;
+    let seed_offset: u64 = args.get_or("seed-offset", 0)?;
+    let scenario = base
+        .with_learners(k)
+        .with_cycle(t)
+        .with_seed(ScenarioConfig::paper_default().seed + seed_offset)
+        .build();
+    let mut table = Table::new(&["scheme", "max_stale", "avg_stale", "util", "solve_ms", "tau"]);
+    for kind in AllocatorKind::all() {
+        let alloc = make_allocator(kind);
+        let t0 = std::time::Instant::now();
+        match alloc.allocate(
+            &scenario.costs,
+            scenario.t_cycle(),
+            scenario.total_samples(),
+            &scenario.bounds,
+        ) {
+            Ok(a) => {
+                table.row(&[
+                    kind.name().into(),
+                    a.max_staleness().to_string(),
+                    fmt_f(a.avg_staleness(), 2),
+                    fmt_f(a.mean_utilization(&scenario.costs, t), 3),
+                    fmt_f(t0.elapsed().as_secs_f64() * 1e3, 3),
+                    format!("{:?}", a.tau),
+                ]);
+            }
+            Err(e) => {
+                table.row(&[
+                    kind.name().into(),
+                    "-".into(),
+                    "-".into(),
+                    "-".into(),
+                    "-".into(),
+                    format!("infeasible: {e}"),
+                ]);
+            }
+        }
+    }
+    println!("{}", table.render());
+    Ok(())
+}
+
+fn cmd_fig2(base: ScenarioConfig, args: &Args) -> Result<()> {
+    let seeds: usize = args.get_or("seeds", 5)?;
+    let params = fig2::Fig2Params { base, seeds, ..Default::default() };
+    let rows = fig2::run(&params)?;
+    let table = fig2::table(&rows);
+    println!("{}", table.render());
+    if let Some((om, em, oa, ea)) = fig2::headline(&rows) {
+        println!(
+            "§V-B headline (K=20, T=7.5s): opt max {om:.2} vs ETA {em:.2} | opt avg {oa:.2} vs ETA {ea:.2}"
+        );
+    }
+    if let Some(path) = args.get("csv") {
+        table.save_csv(path)?;
+        println!("csv -> {path}");
+    }
+    Ok(())
+}
+
+fn cmd_fig3(base: ScenarioConfig, args: &Args) -> Result<()> {
+    let cycles: usize = args.get_or("cycles", 12)?;
+    let ks: Vec<usize> = args.get_list_or("ks", vec![10, 15, 20])?;
+    let samples: u64 = args.get_or("samples", 60_000)?;
+    let schemes: Vec<AllocatorKind> = args.get_list_or(
+        "schemes",
+        vec![AllocatorKind::Relaxed, AllocatorKind::Sync, AllocatorKind::Eta],
+    )?;
+    let runtime = Runtime::load(default_artifacts_dir())?;
+    let base = base.with_total_samples(samples);
+    let params = fig3::Fig3Params {
+        data: SynthConfig {
+            train: samples as usize,
+            test: (samples as usize / 6).max(512),
+            ..SynthConfig::default()
+        },
+        ks,
+        cycles,
+        base,
+        schemes,
+        ..Default::default()
+    };
+    let curves = fig3::run(&runtime, &params)?;
+    println!("{}", fig3::table(&curves).render());
+    println!("{}", fig3::summary_table(&curves, &[0.95, 0.97]).render());
+    if let Some(path) = args.get("csv") {
+        fig3::table(&curves).save_csv(path)?;
+        println!("csv -> {path}");
+    }
+    Ok(())
+}
+
+fn cmd_train(base: ScenarioConfig, args: &Args) -> Result<()> {
+    let k: usize = args.get_or("k", 10)?;
+    let t: f64 = args.get_or("t", 15.0)?;
+    let scheme: AllocatorKind = args.get_or("scheme", AllocatorKind::Relaxed)?;
+    let aggregation: AggregationRule = args.get_or("aggregation", AggregationRule::FedAvg)?;
+    let cycles: usize = args.get_or("cycles", 10)?;
+    let lr: f32 = args.get_or("lr", 0.01)?;
+    let samples: u64 = args.get_or("samples", 60_000)?;
+
+    let runtime = Runtime::load(default_artifacts_dir())?;
+    let scenario = base
+        .with_learners(k)
+        .with_cycle(t)
+        .with_total_samples(samples)
+        .build();
+    let ds = synth::generate(&SynthConfig {
+        train: samples as usize,
+        test: (samples as usize / 6).max(512),
+        ..SynthConfig::default()
+    });
+    let mut orch =
+        Orchestrator::new(scenario, scheme, aggregation, &runtime, ds.train, ds.test)?;
+    let records = orch.run(&TrainOptions {
+        cycles,
+        lr,
+        eval_every: 1,
+        reallocate_each_cycle: false,
+    })?;
+    let mut table = Table::new(&["cycle", "vtime_s", "train_loss", "accuracy", "max_stale", "util"]);
+    for r in &records {
+        table.row(&[
+            (r.cycle + 1).to_string(),
+            fmt_f(r.vtime_s, 1),
+            fmt_f(r.train_loss as f64, 4),
+            fmt_f(r.accuracy, 4),
+            r.max_staleness.to_string(),
+            fmt_f(r.utilization, 3),
+        ]);
+    }
+    println!("{}", table.render());
+    Ok(())
+}
+
+fn cmd_ablation(base: ScenarioConfig, args: &Args) -> Result<()> {
+    let seeds: usize = args.get_or("seeds", 5)?;
+    let params = ablation::AblationParams {
+        base: base.with_learners(20).with_cycle(7.5),
+        seeds,
+        ..Default::default()
+    };
+    let rows = ablation::run(&params)?;
+    let table = ablation::table(&rows);
+    println!("{}", table.render());
+    if let Some(path) = args.get("csv") {
+        table.save_csv(path)?;
+        println!("csv -> {path}");
+    }
+    Ok(())
+}
+
+fn main() -> Result<()> {
+    let args = Args::from_env()?;
+    let base = base_config(&args)?;
+    match args.subcommand.as_deref() {
+        Some("info") => {
+            cmd_info(&base);
+            Ok(())
+        }
+        Some("solve") => cmd_solve(base, &args),
+        Some("fig2") => cmd_fig2(base, &args),
+        Some("fig3") => cmd_fig3(base, &args),
+        Some("train") => cmd_train(base, &args),
+        Some("ablation") => cmd_ablation(base, &args),
+        Some(other) => bail!("unknown subcommand '{other}'\n{USAGE}"),
+        None => {
+            println!("{USAGE}");
+            Ok(())
+        }
+    }
+}

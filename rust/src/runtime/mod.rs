@@ -1,0 +1,286 @@
+//! PJRT executor — the only place the AOT artifacts are touched.
+//!
+//! Load path (per /opt/xla-example/load_hlo): HLO **text** →
+//! `HloModuleProto::from_text_file` → `XlaComputation` →
+//! `PjRtClient::cpu().compile` — once, at startup. The hot path is
+//! [`Runtime::train_step`] / [`Runtime::eval_batch`]: build input
+//! literals, execute, unpack the output tuple. Python never runs here.
+
+pub mod spec;
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{ensure, Context, Result};
+
+use crate::aggregation::ParamSet;
+use crate::data::{Batch, Dataset, Minibatches};
+use crate::sim::Rng;
+pub use spec::Manifest;
+
+/// Compiled artifacts + PJRT client.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    train_exe: xla::PjRtLoadedExecutable,
+    eval_exe: xla::PjRtLoadedExecutable,
+    pub manifest: Manifest,
+    pub artifacts_dir: PathBuf,
+}
+
+impl std::fmt::Debug for Runtime {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Runtime")
+            .field("platform", &self.client.platform_name())
+            .field("artifacts_dir", &self.artifacts_dir)
+            .finish()
+    }
+}
+
+/// Result of an evaluation pass.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct EvalResult {
+    pub accuracy: f64,
+    pub mean_loss: f64,
+    pub samples: u64,
+}
+
+fn literal_from_f32(data: &[f32], shape: &[usize]) -> Result<xla::Literal> {
+    let n: usize = shape.iter().product::<usize>().max(1);
+    ensure!(n == data.len(), "literal data {} != shape {:?}", data.len(), shape);
+    if shape.is_empty() {
+        return Ok(xla::Literal::scalar(data[0]));
+    }
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    xla::Literal::vec1(data)
+        .reshape(&dims)
+        .context("reshaping literal")
+}
+
+impl Runtime {
+    /// Load and compile both entry points from `artifacts/`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest = Manifest::load(&dir)?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let load = |file: &str| -> Result<xla::PjRtLoadedExecutable> {
+            let path = dir.join(file);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().expect("utf-8 path"),
+            )
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            client
+                .compile(&comp)
+                .with_context(|| format!("compiling {}", path.display()))
+        };
+        let train_exe = load(&manifest.entries.train_step.file)?;
+        let eval_exe = load(&manifest.entries.eval_step.file)?;
+        Ok(Self { client, train_exe, eval_exe, manifest, artifacts_dir: dir })
+    }
+
+    /// PJRT platform string (diagnostics).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// He-initialized parameter set matching the manifest shapes.
+    pub fn init_params(&self, rng: &mut Rng) -> ParamSet {
+        self.manifest
+            .param_shapes()
+            .iter()
+            .map(|shape| {
+                let n: usize = shape.iter().product();
+                if shape.len() == 2 {
+                    // He-normal for ReLU stacks: std = sqrt(2 / fan_in)
+                    let std = (2.0 / shape[0] as f64).sqrt();
+                    (0..n).map(|_| rng.normal_ms(0.0, std) as f32).collect()
+                } else {
+                    vec![0.0f32; n] // biases at zero
+                }
+            })
+            .collect()
+    }
+
+    fn param_literals(&self, params: &ParamSet) -> Result<Vec<xla::Literal>> {
+        let shapes = self.manifest.param_shapes();
+        ensure!(params.len() == shapes.len(), "param tensor count mismatch");
+        params
+            .iter()
+            .zip(&shapes)
+            .map(|(p, s)| literal_from_f32(p, s))
+            .collect()
+    }
+
+    /// Upload host literals as *self-owned* device buffers and run the
+    /// executable via `execute_b`.
+    ///
+    /// NOTE: this deliberately avoids `PjRtLoadedExecutable::execute`
+    /// (literal-taking variant): xla 0.1.6's C shim leaks every input
+    /// buffer it creates there (`BufferFromHostLiteral(..).release()`
+    /// with no reclaim — ~2 MB per train step, hundreds of MB/s in the
+    /// training loop). With `execute_b` the inputs are `PjRtBuffer`s we
+    /// own, freed on drop. See EXPERIMENTS.md §Perf.
+    fn run_buffered(
+        &self,
+        exe: &xla::PjRtLoadedExecutable,
+        inputs: &[xla::Literal],
+    ) -> Result<xla::Literal> {
+        let bufs: Vec<xla::PjRtBuffer> = inputs
+            .iter()
+            .map(|lit| self.client.buffer_from_host_literal(None, lit))
+            .collect::<std::result::Result<_, _>>()
+            .context("uploading input buffers")?;
+        let out = exe
+            .execute_b::<xla::PjRtBuffer>(&bufs)
+            .context("executing artifact")?;
+        ensure!(
+            out.len() == 1 && out[0].len() == 1,
+            "expected a single replica with a single tuple output"
+        );
+        Ok(out[0][0].to_literal_sync()?)
+    }
+
+    /// One SGD minibatch step: returns the updated parameters + loss.
+    pub fn train_step(
+        &self,
+        params: &ParamSet,
+        batch: &Batch,
+        lr: f32,
+    ) -> Result<(ParamSet, f32)> {
+        let m = &self.manifest;
+        let b = m.train_batch;
+        let f = m.num_features();
+        let c = m.num_classes();
+        let mut inputs = self.param_literals(params)?;
+        inputs.push(literal_from_f32(&batch.x, &[b, f])?);
+        inputs.push(literal_from_f32(&batch.y_onehot, &[b, c])?);
+        inputs.push(literal_from_f32(&batch.mask, &[b])?);
+        inputs.push(xla::Literal::scalar(lr));
+
+        let result = self
+            .run_buffered(&self.train_exe, &inputs)
+            .context("executing train_step")?;
+        let outs = result.to_tuple().context("unpacking train_step tuple")?;
+        ensure!(
+            outs.len() == m.num_param_tensors + 1,
+            "train_step returned {} outputs",
+            outs.len()
+        );
+        let mut new_params: ParamSet = Vec::with_capacity(m.num_param_tensors);
+        for lit in &outs[..m.num_param_tensors] {
+            new_params.push(lit.to_vec::<f32>()?);
+        }
+        let loss = outs[m.num_param_tensors].to_vec::<f32>()?[0];
+        Ok((new_params, loss))
+    }
+
+    /// `tau` local epochs of minibatch SGD over a shard; returns the
+    /// final local parameters and the last epoch's mean loss.
+    pub fn train_epochs(
+        &self,
+        params: &ParamSet,
+        data: &Dataset,
+        shard: &[u32],
+        tau: u64,
+        lr: f32,
+    ) -> Result<(ParamSet, f32)> {
+        let mut local = params.clone();
+        let mut last_loss = f32::NAN;
+        for _epoch in 0..tau {
+            let mut loss_sum = 0.0f64;
+            let mut batches = 0usize;
+            for batch in Minibatches::new(data, shard, self.manifest.train_batch) {
+                let (next, loss) = self.train_step(&local, &batch, lr)?;
+                local = next;
+                loss_sum += loss as f64;
+                batches += 1;
+            }
+            if batches > 0 {
+                last_loss = (loss_sum / batches as f64) as f32;
+            }
+        }
+        Ok((local, last_loss))
+    }
+
+    /// One eval minibatch: (correct, loss_sum, mask_sum).
+    fn eval_batch_raw(&self, params: &ParamSet, batch: &Batch) -> Result<(f64, f64, f64)> {
+        let m = &self.manifest;
+        let b = m.eval_batch;
+        let f = m.num_features();
+        let c = m.num_classes();
+        let mut inputs = self.param_literals(params)?;
+        inputs.push(literal_from_f32(&batch.x, &[b, f])?);
+        inputs.push(literal_from_f32(&batch.y_onehot, &[b, c])?);
+        inputs.push(literal_from_f32(&batch.mask, &[b])?);
+        let result = self
+            .run_buffered(&self.eval_exe, &inputs)
+            .context("executing eval_step")?;
+        let outs = result.to_tuple()?;
+        ensure!(outs.len() == 3, "eval_step returned {} outputs", outs.len());
+        Ok((
+            outs[0].to_vec::<f32>()?[0] as f64,
+            outs[1].to_vec::<f32>()?[0] as f64,
+            outs[2].to_vec::<f32>()?[0] as f64,
+        ))
+    }
+
+    /// Streamed evaluation over a whole dataset.
+    pub fn evaluate(&self, params: &ParamSet, data: &Dataset) -> Result<EvalResult> {
+        let idx: Vec<u32> = (0..data.len() as u32).collect();
+        let mut correct = 0.0;
+        let mut loss = 0.0;
+        let mut n = 0.0;
+        for batch in Minibatches::new(data, &idx, self.manifest.eval_batch) {
+            let (c, l, m) = self.eval_batch_raw(params, &batch)?;
+            correct += c;
+            loss += l;
+            n += m;
+        }
+        ensure!(n > 0.0, "empty evaluation set");
+        Ok(EvalResult {
+            accuracy: correct / n,
+            mean_loss: loss / n,
+            samples: n as u64,
+        })
+    }
+}
+
+/// Default artifact directory: `$ASYNCMEL_ARTIFACTS` or `./artifacts`.
+pub fn default_artifacts_dir() -> PathBuf {
+    std::env::var_os("ASYNCMEL_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("artifacts"))
+}
+
+// NOTE: runtime tests that need the compiled artifacts live in
+// rust/tests/e2e_runtime.rs (they require `make artifacts` first);
+// unit tests here cover the pure helpers.
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_round_trips_shape() {
+        let lit = literal_from_f32(&[1.0, 2.0, 3.0, 4.0, 5.0, 6.0], &[2, 3]).unwrap();
+        assert_eq!(lit.element_count(), 6);
+        assert_eq!(lit.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+    }
+
+    #[test]
+    fn literal_scalar() {
+        let lit = literal_from_f32(&[7.5], &[]).unwrap();
+        assert_eq!(lit.to_vec::<f32>().unwrap(), vec![7.5]);
+    }
+
+    #[test]
+    fn literal_rejects_bad_length() {
+        assert!(literal_from_f32(&[1.0, 2.0], &[3]).is_err());
+    }
+
+    #[test]
+    fn default_dir_env_override() {
+        std::env::set_var("ASYNCMEL_ARTIFACTS", "/tmp/zzz");
+        assert_eq!(default_artifacts_dir(), PathBuf::from("/tmp/zzz"));
+        std::env::remove_var("ASYNCMEL_ARTIFACTS");
+        assert_eq!(default_artifacts_dir(), PathBuf::from("artifacts"));
+    }
+}

@@ -1,0 +1,235 @@
+//! Artifact manifest — the shape contract between `python/compile/aot.py`
+//! and the rust executor.
+//!
+//! `aot.py` writes `artifacts/manifest.json` alongside the HLO text; the
+//! runtime refuses to execute artifacts whose manifest disagrees with
+//! what the coordinator is about to feed them (wrong batch size, wrong
+//! parameter count, …) — shape bugs surface at load time, not as NaNs.
+
+use std::path::Path;
+
+use anyhow::{ensure, Context, Result};
+
+use crate::json::Value;
+
+/// Shape+dtype of one input tensor.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TensorSpec {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl TensorSpec {
+    pub fn num_elements(&self) -> usize {
+        self.shape.iter().product::<usize>().max(1)
+    }
+}
+
+/// One AOT entry point (train_step / eval_step).
+#[derive(Debug, Clone)]
+pub struct EntrySpec {
+    pub file: String,
+    pub inputs: Vec<TensorSpec>,
+    pub num_outputs: usize,
+}
+
+/// The manifest as written by `compile.aot.build_manifest`.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub layer_dims: Vec<usize>,
+    pub num_param_tensors: usize,
+    pub train_batch: usize,
+    pub eval_batch: usize,
+    pub model_size_bits: u64,
+    pub entries: Entries,
+}
+
+#[derive(Debug, Clone)]
+pub struct Entries {
+    pub train_step: EntrySpec,
+    pub eval_step: EntrySpec,
+}
+
+impl Manifest {
+    /// Load and sanity-check `manifest.json` from the artifact directory.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let path = dir.as_ref().join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} (run `make artifacts`)", path.display()))?;
+        let v = crate::json::parse(&text).context("parsing artifact manifest")?;
+        let m = Self::from_json(&v).context("decoding artifact manifest")?;
+        m.check()?;
+        Ok(m)
+    }
+
+    /// Decode from a JSON value (shape written by `compile.aot`).
+    pub fn from_json(v: &Value) -> Result<Self> {
+        let tensor = |t: &Value| -> Result<TensorSpec> {
+            let shape = t
+                .field("shape")?
+                .as_arr()?
+                .iter()
+                .map(|d| d.as_usize())
+                .collect::<Result<Vec<_>>>()?;
+            Ok(TensorSpec { shape, dtype: t.str_field("dtype")?.to_string() })
+        };
+        let entry = |e: &Value| -> Result<EntrySpec> {
+            Ok(EntrySpec {
+                file: e.str_field("file")?.to_string(),
+                inputs: e
+                    .field("inputs")?
+                    .as_arr()?
+                    .iter()
+                    .map(tensor)
+                    .collect::<Result<Vec<_>>>()?,
+                num_outputs: e.usize_field("num_outputs")?,
+            })
+        };
+        let entries = v.field("entries")?;
+        Ok(Manifest {
+            layer_dims: v
+                .field("layer_dims")?
+                .as_arr()?
+                .iter()
+                .map(|d| d.as_usize())
+                .collect::<Result<Vec<_>>>()?,
+            num_param_tensors: v.usize_field("num_param_tensors")?,
+            train_batch: v.usize_field("train_batch")?,
+            eval_batch: v.usize_field("eval_batch")?,
+            model_size_bits: v.u64_field("model_size_bits")?,
+            entries: Entries {
+                train_step: entry(entries.field("train_step")?)?,
+                eval_step: entry(entries.field("eval_step")?)?,
+            },
+        })
+    }
+
+    /// Internal consistency checks.
+    pub fn check(&self) -> Result<()> {
+        ensure!(self.layer_dims.len() >= 2, "model needs >= 2 layer dims");
+        ensure!(
+            self.num_param_tensors == 2 * (self.layer_dims.len() - 1),
+            "param tensor count {} != 2 x layers",
+            self.num_param_tensors
+        );
+        let t = &self.entries.train_step;
+        ensure!(
+            t.inputs.len() == self.num_param_tensors + 4,
+            "train_step arity {}",
+            t.inputs.len()
+        );
+        ensure!(t.num_outputs == self.num_param_tensors + 1);
+        let e = &self.entries.eval_step;
+        ensure!(e.inputs.len() == self.num_param_tensors + 3);
+        ensure!(e.num_outputs == 3);
+        // parameter shapes must follow the [w, b] x layers convention
+        for l in 0..self.layer_dims.len() - 1 {
+            let w = &t.inputs[2 * l];
+            let b = &t.inputs[2 * l + 1];
+            ensure!(
+                w.shape == vec![self.layer_dims[l], self.layer_dims[l + 1]],
+                "w{l} shape {:?}",
+                w.shape
+            );
+            ensure!(b.shape == vec![self.layer_dims[l + 1]], "b{l} shape {:?}", b.shape);
+        }
+        // batch rows
+        let x = &t.inputs[self.num_param_tensors];
+        ensure!(
+            x.shape == vec![self.train_batch, self.layer_dims[0]],
+            "train x shape {:?}",
+            x.shape
+        );
+        let xe = &e.inputs[self.num_param_tensors];
+        ensure!(xe.shape == vec![self.eval_batch, self.layer_dims[0]]);
+        Ok(())
+    }
+
+    /// Flat parameter-tensor shapes `[w1, b1, …]`.
+    pub fn param_shapes(&self) -> Vec<Vec<usize>> {
+        self.entries.train_step.inputs[..self.num_param_tensors]
+            .iter()
+            .map(|t| t.shape.clone())
+            .collect()
+    }
+
+    pub fn num_features(&self) -> usize {
+        self.layer_dims[0]
+    }
+
+    pub fn num_classes(&self) -> usize {
+        *self.layer_dims.last().unwrap()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Manifest {
+        let dims = [784usize, 300, 124, 60, 10];
+        let mut inputs = Vec::new();
+        for l in 0..4 {
+            inputs.push(TensorSpec { shape: vec![dims[l], dims[l + 1]], dtype: "float32".into() });
+            inputs.push(TensorSpec { shape: vec![dims[l + 1]], dtype: "float32".into() });
+        }
+        let mut train_inputs = inputs.clone();
+        train_inputs.push(TensorSpec { shape: vec![128, 784], dtype: "float32".into() });
+        train_inputs.push(TensorSpec { shape: vec![128, 10], dtype: "float32".into() });
+        train_inputs.push(TensorSpec { shape: vec![128], dtype: "float32".into() });
+        train_inputs.push(TensorSpec { shape: vec![], dtype: "float32".into() });
+        let mut eval_inputs = inputs;
+        eval_inputs.push(TensorSpec { shape: vec![512, 784], dtype: "float32".into() });
+        eval_inputs.push(TensorSpec { shape: vec![512, 10], dtype: "float32".into() });
+        eval_inputs.push(TensorSpec { shape: vec![512], dtype: "float32".into() });
+        Manifest {
+            layer_dims: dims.to_vec(),
+            num_param_tensors: 8,
+            train_batch: 128,
+            eval_batch: 512,
+            model_size_bits: 8_974_080,
+            entries: Entries {
+                train_step: EntrySpec {
+                    file: "train_step.hlo.txt".into(),
+                    inputs: train_inputs,
+                    num_outputs: 9,
+                },
+                eval_step: EntrySpec {
+                    file: "eval_step.hlo.txt".into(),
+                    inputs: eval_inputs,
+                    num_outputs: 3,
+                },
+            },
+        }
+    }
+
+    #[test]
+    fn valid_manifest_checks_out() {
+        sample().check().unwrap();
+        assert_eq!(sample().num_features(), 784);
+        assert_eq!(sample().num_classes(), 10);
+        assert_eq!(sample().param_shapes().len(), 8);
+    }
+
+    #[test]
+    fn wrong_batch_rejected() {
+        let mut m = sample();
+        m.train_batch = 64;
+        assert!(m.check().is_err());
+    }
+
+    #[test]
+    fn wrong_param_count_rejected() {
+        let mut m = sample();
+        m.num_param_tensors = 6;
+        assert!(m.check().is_err());
+    }
+
+    #[test]
+    fn tensor_spec_elements() {
+        let t = TensorSpec { shape: vec![3, 4], dtype: "float32".into() };
+        assert_eq!(t.num_elements(), 12);
+        let s = TensorSpec { shape: vec![], dtype: "float32".into() };
+        assert_eq!(s.num_elements(), 1);
+    }
+}

@@ -1,0 +1,94 @@
+//! Virtual clock for the event-driven MEL simulation.
+//!
+//! The paper's timing model is closed-form (eq. 5), so the coordinator
+//! never sleeps: each global cycle advances the clock by the cycle bound
+//! `T` (all learners work the full duration by construction, eq. 7b).
+//! The clock also records per-learner busy time so utilization — the
+//! quantity the asynchronous scheme improves over the synchronous one —
+//! can be reported.
+
+/// Monotonic virtual time in seconds plus per-learner utilization ledger.
+#[derive(Debug, Clone)]
+pub struct VirtualClock {
+    now: f64,
+    busy: Vec<f64>,
+}
+
+impl VirtualClock {
+    /// A clock for `k` learners, starting at t = 0.
+    pub fn new(num_learners: usize) -> Self {
+        Self { now: 0.0, busy: vec![0.0; num_learners] }
+    }
+
+    /// Current virtual time (s).
+    pub fn now(&self) -> f64 {
+        self.now
+    }
+
+    /// Advance global time by `dt` seconds (one global cycle = `T`).
+    pub fn advance(&mut self, dt: f64) {
+        assert!(dt >= 0.0, "time must not flow backwards (dt={dt})");
+        self.now += dt;
+    }
+
+    /// Record that learner `k` was busy for `dt` seconds this cycle.
+    pub fn record_busy(&mut self, k: usize, dt: f64) {
+        assert!(dt >= 0.0);
+        self.busy[k] += dt;
+    }
+
+    /// Fraction of elapsed time learner `k` spent busy (0 if t = 0).
+    pub fn utilization(&self, k: usize) -> f64 {
+        if self.now <= 0.0 {
+            0.0
+        } else {
+            self.busy[k] / self.now
+        }
+    }
+
+    /// Mean utilization across learners.
+    pub fn mean_utilization(&self) -> f64 {
+        if self.busy.is_empty() {
+            return 0.0;
+        }
+        let k = self.busy.len();
+        (0..k).map(|i| self.utilization(i)).sum::<f64>() / k as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn starts_at_zero() {
+        let c = VirtualClock::new(3);
+        assert_eq!(c.now(), 0.0);
+        assert_eq!(c.mean_utilization(), 0.0);
+    }
+
+    #[test]
+    fn advance_accumulates() {
+        let mut c = VirtualClock::new(1);
+        c.advance(7.5);
+        c.advance(7.5);
+        assert!((c.now() - 15.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn utilization_tracks_busy_fraction() {
+        let mut c = VirtualClock::new(2);
+        c.advance(10.0);
+        c.record_busy(0, 10.0);
+        c.record_busy(1, 5.0);
+        assert!((c.utilization(0) - 1.0).abs() < 1e-12);
+        assert!((c.utilization(1) - 0.5).abs() < 1e-12);
+        assert!((c.mean_utilization() - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    #[should_panic]
+    fn negative_advance_panics() {
+        VirtualClock::new(1).advance(-1.0);
+    }
+}

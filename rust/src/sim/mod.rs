@@ -1,0 +1,14 @@
+//! Simulation substrate: deterministic RNG and virtual clock.
+//!
+//! Everything stochastic in the reproduction (node placement, channel
+//! shadowing, dataset synthesis, parameter init) flows through
+//! [`rng::Rng`], a self-contained xoshiro256++ generator, so every
+//! experiment is bit-reproducible from a scenario seed. Wall-clock never
+//! enters the simulation: learner execution times are *virtual*, computed
+//! from the paper's eq. (5) and advanced on [`clock::VirtualClock`].
+
+pub mod clock;
+pub mod rng;
+
+pub use clock::VirtualClock;
+pub use rng::Rng;

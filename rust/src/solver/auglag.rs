@@ -1,0 +1,303 @@
+//! Augmented-Lagrangian solver for the relaxed problem (8).
+//!
+//! Plays the role of the paper's "numerical optimizer" (OPTI / fmincon /
+//! IPOPT). The relaxed program is
+//!
+//! ```text
+//! min  z = max_k τ_k − min_k τ_k            (8a/8b, slack eliminated)
+//! s.t. C²_k τ_k d_k + C¹_k d_k + C⁰_k = T   (8c, one per learner)
+//!      Σ_k d_k = d                          (8d)
+//!      τ_k ≥ 0                              (8e)
+//!      d_l ≤ d_k ≤ d_u                      (8f)
+//! ```
+//!
+//! The max-range objective is smoothed with a log-sum-exp softmax /
+//! softmin pair whose temperature is annealed across outer iterations;
+//! the two equality families are handled by augmented-Lagrangian
+//! multipliers; the box constraints by projection. Variables are scaled
+//! (`d` by the equal share, constraints by `T` / `d`) so one step size
+//! fits both blocks.
+//!
+//! The problem is non-convex (the paper notes the quadratic-constraint
+//! matrices are indefinite), so this returns a good stationary point,
+//! not a certificate — exactly the situation the paper's
+//! suggest-and-improve step exists for.
+
+use crate::costmodel::{Bounds, LearnerCost};
+use crate::solver::projgrad::{clamp_box, minimize_projected, ProjGradOptions};
+
+/// Options for [`solve_relaxed`].
+#[derive(Debug, Clone, Copy)]
+pub struct RelaxedOptions {
+    /// Outer AL iterations.
+    pub outer_iters: usize,
+    /// Inner projected-gradient options.
+    pub inner: ProjGradOptions,
+    /// Initial penalty weight.
+    pub rho0: f64,
+    /// Penalty growth when violation stalls.
+    pub rho_growth: f64,
+    /// Softmax temperature schedule (start, end), annealed geometrically.
+    pub beta_range: (f64, f64),
+    /// Constraint tolerance (relative) for declaring feasibility.
+    pub feas_tol: f64,
+}
+
+impl Default for RelaxedOptions {
+    fn default() -> Self {
+        Self {
+            outer_iters: 25,
+            inner: ProjGradOptions { max_iters: 300, ..Default::default() },
+            rho0: 10.0,
+            rho_growth: 2.0,
+            beta_range: (2.0, 64.0),
+            feas_tol: 1e-4,
+        }
+    }
+}
+
+/// Continuous solution of the relaxed problem.
+#[derive(Debug, Clone)]
+pub struct RelaxedSolution {
+    /// Continuous update counts τ_k.
+    pub tau: Vec<f64>,
+    /// Continuous batch sizes d_k.
+    pub d: Vec<f64>,
+    /// Smoothed objective at the solution (≈ max staleness).
+    pub objective: f64,
+    /// Max relative violation of (8c)/(8d) at the solution.
+    pub feasibility: f64,
+    /// Total inner iterations spent.
+    pub inner_iters: usize,
+}
+
+/// Smoothed range of τ: softmax_β(τ) − softmin_β(τ) and its gradient.
+fn smooth_range(tau: &[f64], beta: f64, grad: &mut [f64]) -> f64 {
+    let k = tau.len();
+    let hi = tau.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    let lo = tau.iter().cloned().fold(f64::INFINITY, f64::min);
+    // stable LSE
+    let mut zp = 0.0;
+    let mut zm = 0.0;
+    for &t in tau {
+        zp += ((t - hi) * beta).exp();
+        zm += ((lo - t) * beta).exp();
+    }
+    let smax = hi + zp.ln() / beta;
+    let smin = lo - zm.ln() / beta;
+    for i in 0..k {
+        let p = ((tau[i] - hi) * beta).exp() / zp;
+        let q = ((lo - tau[i]) * beta).exp() / zm;
+        grad[i] = p - q;
+    }
+    smax - smin
+}
+
+/// Solve the relaxed problem (8). `t_cycle` is `T`, `d_total` is `d`.
+pub fn solve_relaxed(
+    costs: &[LearnerCost],
+    t_cycle: f64,
+    d_total: u64,
+    bounds: &Bounds,
+    opts: &RelaxedOptions,
+) -> RelaxedSolution {
+    let k = costs.len();
+    assert!(k >= 1);
+    let d_scale = d_total as f64 / k as f64; // equal share, O(1) scaled d
+    let d_tot = d_total as f64;
+
+    // x = [τ_0..τ_{K-1}, δ_0..δ_{K-1}] with d_k = δ_k * d_scale.
+    let lo: Vec<f64> = (0..2 * k)
+        .map(|i| if i < k { 0.0 } else { bounds.d_lo as f64 / d_scale })
+        .collect();
+    let hi: Vec<f64> = (0..2 * k)
+        .map(|i| {
+            if i < k {
+                // generous τ cap: the most any learner can do at d_l
+                costs
+                    .iter()
+                    .filter_map(|c| c.tau_of_d(bounds.d_lo as f64, t_cycle))
+                    .fold(1.0, f64::max)
+                    * 1.5
+            } else {
+                bounds.d_hi as f64 / d_scale
+            }
+        })
+        .collect();
+
+    // init: equal share, τ from the t = T manifold
+    let mut x = vec![0.0; 2 * k];
+    for i in 0..k {
+        x[k + i] = 1.0f64.clamp(lo[k + i], hi[k + i]);
+        x[i] = costs[i]
+            .tau_of_d(x[k + i] * d_scale, t_cycle)
+            .unwrap_or(0.0)
+            .max(0.0);
+    }
+
+    let mut lambda = vec![0.0; k]; // multipliers for (8c), scaled by T
+    let mut omega = 0.0; // multiplier for (8d), scaled by d
+    let mut rho = opts.rho0;
+    let mut prev_viol = f64::INFINITY;
+    let mut inner_total = 0;
+
+    let mut beta = opts.beta_range.0;
+    let beta_mult = if opts.outer_iters > 1 {
+        (opts.beta_range.1 / opts.beta_range.0).powf(1.0 / (opts.outer_iters - 1) as f64)
+    } else {
+        1.0
+    };
+
+    let mut tau_grad = vec![0.0; k];
+    for _outer in 0..opts.outer_iters {
+        let f = |xv: &[f64], g: &mut [f64]| -> f64 {
+            let (tau, dd) = xv.split_at(k);
+            // smooth_range writes the τ-block gradient in place — no
+            // allocation in the inner-loop closure (§Perf)
+            let (g_tau, g_d) = g.split_at_mut(k);
+            let mut val = smooth_range(tau, beta, g_tau);
+            for gi in g_d.iter_mut() {
+                *gi = 0.0;
+            }
+            // (8c): h_k = (t_k - T)/T
+            for i in 0..k {
+                let d_i = dd[i] * d_scale;
+                let h = (costs[i].time(tau[i], d_i) - t_cycle) / t_cycle;
+                let dhdtau = costs[i].c2 * d_i / t_cycle;
+                let dhdd = (costs[i].c2 * tau[i] + costs[i].c1) * d_scale / t_cycle;
+                let w = lambda[i] + rho * h;
+                val += lambda[i] * h + 0.5 * rho * h * h;
+                g[i] += w * dhdtau;
+                g[k + i] += w * dhdd;
+            }
+            // (8d): g0 = (Σ d_k - d)/d
+            let sum_d: f64 = dd.iter().map(|&v| v * d_scale).sum();
+            let g0 = (sum_d - d_tot) / d_tot;
+            let w0 = omega + rho * g0;
+            val += omega * g0 + 0.5 * rho * g0 * g0;
+            for i in 0..k {
+                g[k + i] += w0 * d_scale / d_tot;
+            }
+            val
+        };
+        let res = minimize_projected(&x, &opts.inner, f, |xv| clamp_box(xv, &lo, &hi));
+        inner_total += res.iters;
+        x = res.x;
+
+        // multiplier + penalty update
+        let (tau, dd) = x.split_at(k);
+        let mut viol = 0.0f64;
+        for i in 0..k {
+            let h = (costs[i].time(tau[i], dd[i] * d_scale) - t_cycle) / t_cycle;
+            lambda[i] += rho * h;
+            viol = viol.max(h.abs());
+        }
+        let sum_d: f64 = dd.iter().map(|&v| v * d_scale).sum();
+        let g0 = (sum_d - d_tot) / d_tot;
+        omega += rho * g0;
+        viol = viol.max(g0.abs());
+
+        if viol > 0.5 * prev_viol {
+            rho *= opts.rho_growth;
+        }
+        prev_viol = viol;
+        beta *= beta_mult;
+        let _ = smooth_range(tau, beta, &mut tau_grad); // keep grad buffer warm
+
+        if viol < opts.feas_tol && _outer > 3 {
+            break;
+        }
+    }
+
+    let (tau, dd) = x.split_at(k);
+    let tau_v: Vec<f64> = tau.to_vec();
+    let d_v: Vec<f64> = dd.iter().map(|&v| v * d_scale).collect();
+    let mut viol = 0.0f64;
+    for i in 0..k {
+        viol = viol.max(((costs[i].time(tau_v[i], d_v[i]) - t_cycle) / t_cycle).abs());
+    }
+    let sum_d: f64 = d_v.iter().sum();
+    viol = viol.max(((sum_d - d_tot) / d_tot).abs());
+    let hi_t = tau_v.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    let lo_t = tau_v.iter().cloned().fold(f64::INFINITY, f64::min);
+
+    RelaxedSolution {
+        tau: tau_v,
+        d: d_v,
+        objective: hi_t - lo_t,
+        feasibility: viol,
+        inner_iters: inner_total,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn het_costs(k: usize) -> Vec<LearnerCost> {
+        // alternating fast/slow nodes with mild link spread
+        (0..k)
+            .map(|i| {
+                let fast = i % 2 == 0;
+                let c2 = if fast { 4.5e-4 } else { 1.6e-3 };
+                let c1 = 1.0e-4 * (1.0 + 0.3 * (i as f64 / k as f64));
+                let c0 = 0.3 + 0.05 * (i % 3) as f64;
+                LearnerCost::new(c2, c1, c0)
+            })
+            .collect()
+    }
+
+    #[test]
+    fn smooth_range_approaches_true_range() {
+        let tau = [1.0, 4.0, 2.5, 4.0, 0.5];
+        let mut g = vec![0.0; 5];
+        let r = smooth_range(&tau, 64.0, &mut g);
+        assert!((r - 3.5).abs() < 0.05, "r={r}");
+        // gradient sums to ~0 (softmax weights - softmin weights)
+        assert!(g.iter().sum::<f64>().abs() < 1e-9);
+    }
+
+    #[test]
+    fn relaxed_solution_is_nearly_feasible() {
+        let costs = het_costs(10);
+        let bounds = Bounds::proportional(60_000, 10, 0.2, 2.5);
+        let sol = solve_relaxed(&costs, 15.0, 60_000, &bounds, &RelaxedOptions::default());
+        assert!(sol.feasibility < 5e-3, "viol={}", sol.feasibility);
+        for (i, (&t, &d)) in sol.tau.iter().zip(&sol.d).enumerate() {
+            assert!(t >= -1e-9, "tau[{i}]={t}");
+            assert!(d >= bounds.d_lo as f64 - 1e-6 && d <= bounds.d_hi as f64 + 1e-6);
+        }
+    }
+
+    #[test]
+    fn relaxed_beats_equal_allocation_staleness() {
+        let costs = het_costs(12);
+        let bounds = Bounds::proportional(60_000, 12, 0.2, 2.5);
+        let t_cycle = 15.0;
+        let sol = solve_relaxed(&costs, t_cycle, 60_000, &bounds, &RelaxedOptions::default());
+        // ETA continuous staleness for comparison
+        let share = 60_000.0 / 12.0;
+        let taus_eta: Vec<f64> = costs
+            .iter()
+            .map(|c| c.tau_of_d(share, t_cycle).unwrap_or(0.0))
+            .collect();
+        let hi = taus_eta.iter().cloned().fold(f64::MIN, f64::max);
+        let lo = taus_eta.iter().cloned().fold(f64::MAX, f64::min);
+        let eta_range = hi - lo;
+        assert!(
+            sol.objective < eta_range * 0.6,
+            "opt {} vs eta {}",
+            sol.objective,
+            eta_range
+        );
+    }
+
+    #[test]
+    fn single_learner_trivially_zero_staleness() {
+        let costs = het_costs(1);
+        let bounds = Bounds::new(100, 100_000);
+        let sol = solve_relaxed(&costs, 7.5, 5_000, &bounds, &RelaxedOptions::default());
+        assert!(sol.objective.abs() < 1e-6);
+        assert!(sol.feasibility < 1e-2);
+    }
+}

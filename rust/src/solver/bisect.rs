@@ -1,0 +1,69 @@
+//! Guarded scalar bisection on monotone functions.
+//!
+//! Both the SAI suggest step (common-τ such that `Σ d_k(τ) = d`) and the
+//! synchronous baseline (max common τ with `Σ d_k^max(τ) ≥ d`) reduce to
+//! root finding on *decreasing* functions of one variable; this helper
+//! owns the bracketing and tolerance logic.
+
+/// Find `x ∈ [lo, hi]` with `f(x) ≈ target` for a non-increasing `f`.
+///
+/// Returns the largest `x` with `f(x) >= target` within tolerance `tol`
+/// (absolute, on x). If `f(lo) < target` (even the smallest x falls
+/// short) returns `None`; if `f(hi) >= target` returns `hi`.
+pub fn bisect_decreasing(
+    mut lo: f64,
+    mut hi: f64,
+    tol: f64,
+    target: f64,
+    f: impl Fn(f64) -> f64,
+) -> Option<f64> {
+    debug_assert!(lo <= hi && tol > 0.0);
+    if f(lo) < target {
+        return None;
+    }
+    if f(hi) >= target {
+        return Some(hi);
+    }
+    // invariant: f(lo) >= target > f(hi)
+    while hi - lo > tol {
+        let mid = 0.5 * (lo + hi);
+        if f(mid) >= target {
+            lo = mid;
+        } else {
+            hi = mid;
+        }
+    }
+    Some(lo)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn finds_root_of_linear() {
+        // f(x) = 10 - x, target 4 -> x = 6
+        let x = bisect_decreasing(0.0, 10.0, 1e-9, 4.0, |x| 10.0 - x).unwrap();
+        assert!((x - 6.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn returns_none_when_unreachable() {
+        assert!(bisect_decreasing(0.0, 10.0, 1e-9, 11.0, |x| 10.0 - x).is_none());
+    }
+
+    #[test]
+    fn returns_hi_when_target_still_met_at_hi() {
+        let x = bisect_decreasing(0.0, 10.0, 1e-9, -5.0, |x| 10.0 - x).unwrap();
+        assert_eq!(x, 10.0);
+    }
+
+    #[test]
+    fn handles_step_functions() {
+        // piecewise-constant decreasing (like Σ floor(d(τ)))
+        let f = |x: f64| (10.0 - x).floor();
+        let x = bisect_decreasing(0.0, 10.0, 1e-9, 4.0, f).unwrap();
+        assert!(f(x) >= 4.0);
+        assert!(f(x + 1e-3) < 4.0 || x >= 10.0 - 1e-6);
+    }
+}

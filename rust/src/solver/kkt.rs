@@ -1,0 +1,235 @@
+//! Appendix A/B machinery: Lagrangian stationarity and the pair-multiplier
+//! reductions `u`, `u'`.
+//!
+//! The paper decouples the staleness constraint (8b) into
+//! `−z + τ_k − τ_l ≤ 0` (multipliers `μ_n`) and `−z − τ_k + τ_l ≤ 0`
+//! (multipliers `μ'_n`) over the `N = C(K,2)` pairs of eq. (10), then
+//! collapses the per-learner gradient contributions into
+//!
+//! ```text
+//! u_k  =  Σ_{n : c_{n,1} = k} μ_n  −  Σ_{n : c_{n,2} = k} μ_n      (19/21)
+//! u'_k = −Σ_{n : c_{n,1} = k} μ'_n +  Σ_{n : c_{n,2} = k} μ'_n    (20/24)
+//! ```
+//!
+//! (eqs. 21–24 express the same sums through start/end indices `n_k`,
+//! `N_k` — eqs. 22/23; we implement both and test they agree). Theorem 1
+//! then gives the stationary values
+//!
+//! ```text
+//! τ*_k = −(λ_k C¹_k + ν_k + ν'_k + ω) / (λ_k C²_k)                 (11)
+//! d*_k = −(u_k + u'_k + α_k) / (λ_k C²_k)                          (12)
+//! ```
+//!
+//! These are *bounds generators*, not a standalone solver — the relaxed
+//! problem is non-convex, so the SAI allocator uses them to seed its
+//! suggest step and to sanity-check stationarity of candidate solutions.
+
+use crate::costmodel::LearnerCost;
+use crate::staleness::{num_pairs, pair_matrix};
+
+/// `u_k` per eq. (19)/(21): direct pair-sum form.
+pub fn u_from_mu(k: usize, mu: &[f64]) -> Vec<f64> {
+    assert_eq!(mu.len(), num_pairs(k), "need one μ per pair");
+    let mut u = vec![0.0; k];
+    for (n, &(a, b)) in pair_matrix(k).iter().enumerate() {
+        u[a] += mu[n]; // k appears as c_{n,1}
+        u[b] -= mu[n]; // k appears as c_{n,2}
+    }
+    u
+}
+
+/// `u'_k` per eq. (20)/(24): signs flipped relative to `u`.
+pub fn u_prime_from_mu(k: usize, mu_p: &[f64]) -> Vec<f64> {
+    assert_eq!(mu_p.len(), num_pairs(k));
+    let mut u = vec![0.0; k];
+    for (n, &(a, b)) in pair_matrix(k).iter().enumerate() {
+        u[a] -= mu_p[n];
+        u[b] += mu_p[n];
+    }
+    u
+}
+
+/// Start index `n_k` of eq. (22) (0-indexed): first pair row with
+/// `c_{n,1} = k`.
+pub fn block_start(k_total: usize, k: usize) -> usize {
+    // rows preceding block k: Σ_{m=0}^{k-1} (K-1-m)
+    (0..k).map(|m| k_total - 1 - m).sum()
+}
+
+/// End index `N_k` of eq. (23) (0-indexed, exclusive).
+pub fn block_end(k_total: usize, k: usize) -> usize {
+    block_start(k_total, k) + (k_total - 1 - k)
+}
+
+/// `u_k` via the paper's index formula (eq. 21): first summation over the
+/// block where learner k is the row-leader, second over the rows where k
+/// is the column (one per earlier block j, at offset k−j−1).
+pub fn u_from_mu_indexform(k_total: usize, k: usize, mu: &[f64]) -> f64 {
+    let mut s = 0.0;
+    for j in block_start(k_total, k)..block_end(k_total, k) {
+        s += mu[j];
+    }
+    for j in 0..k {
+        // row of pair (j, k) inside block j
+        let idx = block_start(k_total, j) + (k - j - 1);
+        s -= mu[idx];
+    }
+    s
+}
+
+/// Theorem 1, eq. (11): stationary `τ*_k`.
+///
+/// `lambda_k` must be nonzero (an active time constraint — it always is,
+/// since (8c) is an equality).
+pub fn tau_star(cost: &LearnerCost, lambda_k: f64, nu_k: f64, nu_p_k: f64, omega: f64) -> f64 {
+    assert!(lambda_k != 0.0, "λ_k = 0 would detach the time constraint");
+    -(lambda_k * cost.c1 + nu_k + nu_p_k + omega) / (lambda_k * cost.c2)
+}
+
+/// Theorem 1, eq. (12): stationary `d*_k`.
+pub fn d_star(cost: &LearnerCost, lambda_k: f64, u_k: f64, u_p_k: f64, alpha_k: f64) -> f64 {
+    assert!(lambda_k != 0.0);
+    -(u_k + u_p_k + alpha_k) / (lambda_k * cost.c2)
+}
+
+/// Stationarity residual of the (τ, d) block of ∇L at a candidate point
+/// — used to *verify* KKT at solutions produced by the other solvers.
+/// Returns (max |∂L/∂τ_k|, max |∂L/∂d_k|).
+#[allow(clippy::too_many_arguments)]
+pub fn stationarity_residual(
+    costs: &[LearnerCost],
+    tau: &[f64],
+    d: &[f64],
+    lambda: &[f64],
+    omega: f64,
+    mu: &[f64],
+    mu_p: &[f64],
+    alpha: &[f64],
+    nu: &[f64],
+    nu_p: &[f64],
+) -> (f64, f64) {
+    let k = costs.len();
+    let u = u_from_mu(k, mu);
+    let up = u_prime_from_mu(k, mu_p);
+    let mut rt = 0.0f64;
+    let mut rd = 0.0f64;
+    for i in 0..k {
+        // ∂L/∂τ_i = λ_i C²_i d_i − α_i + u_i + u'_i
+        let gt = lambda[i] * costs[i].c2 * d[i] - alpha[i] + u[i] + up[i];
+        // ∂L/∂d_i = λ_i (C²_i τ_i + C¹_i) + ω − ν_i + ν'_i
+        let gd = lambda[i] * (costs[i].c2 * tau[i] + costs[i].c1) + omega - nu[i] + nu_p[i];
+        rt = rt.max(gt.abs());
+        rd = rd.max(gd.abs());
+    }
+    (rt, rd)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::Rng;
+
+    #[test]
+    fn block_indices_match_pair_matrix() {
+        for k_total in [2usize, 3, 4, 7, 12] {
+            let pm = pair_matrix(k_total);
+            for k in 0..k_total {
+                let (s, e) = (block_start(k_total, k), block_end(k_total, k));
+                for (n, &(a, _)) in pm.iter().enumerate() {
+                    if a == k {
+                        assert!((s..e).contains(&n), "k={k} n={n} s={s} e={e}");
+                    }
+                }
+                assert_eq!(e - s, k_total - 1 - k);
+            }
+        }
+    }
+
+    #[test]
+    fn index_form_matches_direct_form() {
+        let mut rng = Rng::new(99);
+        for k_total in [2usize, 4, 5, 10] {
+            let mu: Vec<f64> = (0..num_pairs(k_total)).map(|_| rng.uniform()).collect();
+            let direct = u_from_mu(k_total, &mu);
+            for k in 0..k_total {
+                let idx = u_from_mu_indexform(k_total, k, &mu);
+                assert!(
+                    (direct[k] - idx).abs() < 1e-12,
+                    "k_total={k_total} k={k}: {} vs {idx}",
+                    direct[k]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn u_and_u_prime_are_antisymmetric_images() {
+        let mut rng = Rng::new(5);
+        let k = 6;
+        let mu: Vec<f64> = (0..num_pairs(k)).map(|_| rng.uniform()).collect();
+        let u = u_from_mu(k, &mu);
+        let up = u_prime_from_mu(k, &mu);
+        for i in 0..k {
+            assert!((u[i] + up[i]).abs() < 1e-12); // same μ -> exact negatives
+        }
+        // and each sums to zero over learners (pair contributions cancel)
+        assert!(u.iter().sum::<f64>().abs() < 1e-12);
+    }
+
+    #[test]
+    fn theorem1_recovers_tau_from_stationarity() {
+        // Build multipliers so that ∂L/∂τ = ∂L/∂d = 0 at a chosen point,
+        // then confirm eq. (11)/(12) reproduce the point.
+        let cost = LearnerCost::new(1e-3, 2e-4, 0.4);
+        let (tau, d) = (3.0, 2000.0);
+        let lambda = 0.7;
+        // choose ω to satisfy ∂L/∂d = 0 with ν = ν' = 0
+        let omega = -lambda * (cost.c2 * tau + cost.c1);
+        // choose u with u' = α = 0 to satisfy ∂L/∂τ = 0
+        let u = -lambda * cost.c2 * d;
+        let tau_hat = tau_star(&cost, lambda, 0.0, 0.0, omega);
+        let d_hat = d_star(&cost, lambda, u, 0.0, 0.0);
+        assert!((tau_hat - tau).abs() < 1e-9, "tau_hat={tau_hat}");
+        assert!((d_hat - d).abs() < 1e-6, "d_hat={d_hat}");
+    }
+
+    #[test]
+    fn stationarity_residual_zero_for_constructed_kkt_point() {
+        let costs = vec![
+            LearnerCost::new(1e-3, 2e-4, 0.4),
+            LearnerCost::new(5e-4, 1e-4, 0.3),
+        ];
+        let tau = [2.0, 2.0];
+        let d = [1500.0, 2500.0];
+        // one pair; zero staleness -> μ can be anything with μ = μ'
+        // (they cancel); pick zero for a clean stationarity check.
+        let mu = vec![0.0];
+        let mu_p = vec![0.0];
+        let lambda: Vec<f64> = costs
+            .iter()
+            .zip(&d)
+            .map(|(c, &di)| -1.0 / (c.c2 * di)) // makes ∂L/∂τ = 0 with u=α=0... scaled below
+            .collect();
+        // With μ = α = 0, ∂L/∂τ_i = λ_i C² d_i, which is zero only if λ_i = 0 —
+        // not allowed. So instead verify the residual formula itself: feed
+        // λ, ω, ν chosen to zero ∂L/∂d and check ∂L/∂τ equals λ C² d exactly.
+        let omega = 0.0;
+        let nu: Vec<f64> = costs
+            .iter()
+            .zip(&tau)
+            .zip(&lambda)
+            .map(|((c, &t), &l)| l * (c.c2 * t + c.c1) + omega)
+            .collect();
+        let (rt, rd) = stationarity_residual(
+            &costs, &tau, &d, &lambda, omega, &mu, &mu_p, &[0.0, 0.0], &nu, &[0.0, 0.0],
+        );
+        assert!(rd < 1e-12, "rd={rd}");
+        let expect_rt = lambda
+            .iter()
+            .zip(&costs)
+            .zip(&d)
+            .map(|((&l, c), &di)| (l * c.c2 * di).abs())
+            .fold(0.0f64, f64::max);
+        assert!((rt - expect_rt).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,25 @@
+//! Numeric substrate for the relaxed QCLP (problem 8).
+//!
+//! The paper solves the relaxed non-convex program with off-the-shelf
+//! interior-point solvers (OPTI / fmincon / IPOPT) and analytically via
+//! KKT/Lagrangian bounds. We build both paths from scratch:
+//!
+//! * [`projgrad`] — projected gradient descent with Armijo backtracking,
+//!   the inner loop of the augmented-Lagrangian method;
+//! * [`auglag`] — augmented Lagrangian for problem (8): smooth-max
+//!   staleness objective, quadratic-equality time constraints (8c),
+//!   total-batch equality (8d), box constraints by projection
+//!   (8e/8f) — this plays the role of the paper's "numerical optimizer";
+//! * [`kkt`] — Appendix A/B machinery: the pair-multiplier reductions
+//!   `u`, `u'` (eqs. 19–24) and the Theorem-1 stationarity expressions;
+//! * [`bisect`] — guarded scalar bisection used by the SAI and sync
+//!   allocators on monotone feasibility equations.
+
+pub mod auglag;
+pub mod bisect;
+pub mod kkt;
+pub mod projgrad;
+
+pub use auglag::{solve_relaxed, RelaxedOptions, RelaxedSolution};
+pub use bisect::bisect_decreasing;
+pub use projgrad::{minimize_projected, ProjGradOptions};

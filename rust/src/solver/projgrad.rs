@@ -1,0 +1,181 @@
+//! Projected gradient descent with Armijo backtracking.
+//!
+//! The inner loop of the augmented-Lagrangian solver: minimize a smooth
+//! function over a box (plus any projection the caller supplies).
+//! Deliberately dependency-free and allocation-light — it runs once per
+//! global cycle inside the coordinator hot path.
+
+/// Options for [`minimize_projected`].
+#[derive(Debug, Clone, Copy)]
+pub struct ProjGradOptions {
+    /// Max gradient iterations.
+    pub max_iters: usize,
+    /// Stop when the projected-gradient step norm falls below this.
+    pub tol: f64,
+    /// Initial step size (reset each iteration; grows on acceptance).
+    pub step0: f64,
+    /// Armijo sufficient-decrease constant.
+    pub armijo_c: f64,
+    /// Backtracking shrink factor.
+    pub shrink: f64,
+    /// Max backtracking halvings per iteration.
+    pub max_backtracks: usize,
+}
+
+impl Default for ProjGradOptions {
+    fn default() -> Self {
+        Self {
+            max_iters: 400,
+            tol: 1e-8,
+            step0: 1.0,
+            armijo_c: 1e-4,
+            shrink: 0.5,
+            max_backtracks: 40,
+        }
+    }
+}
+
+/// Result of a projected-gradient run.
+#[derive(Debug, Clone)]
+pub struct ProjGradResult {
+    pub x: Vec<f64>,
+    pub value: f64,
+    pub iters: usize,
+    pub converged: bool,
+}
+
+/// Minimize `f` (returning value, filling `grad`) subject to `project`.
+///
+/// `f(x, grad) -> value` must fill `grad` (same length as `x`).
+/// `project(x)` clamps `x` onto the feasible box in place.
+pub fn minimize_projected(
+    x0: &[f64],
+    opts: &ProjGradOptions,
+    mut f: impl FnMut(&[f64], &mut [f64]) -> f64,
+    project: impl Fn(&mut [f64]),
+) -> ProjGradResult {
+    let n = x0.len();
+    let mut x = x0.to_vec();
+    project(&mut x);
+    let mut grad = vec![0.0; n];
+    let mut trial = vec![0.0; n];
+    // scratch gradient reused across backtracking steps — this loop is
+    // the orchestrator's per-cycle solve hot path (EXPERIMENTS.md §Perf)
+    let mut gtrial = vec![0.0; n];
+    let mut value = f(&x, &mut grad);
+    let mut step = opts.step0;
+    let mut converged = false;
+    let mut iters = 0;
+
+    for it in 0..opts.max_iters {
+        iters = it + 1;
+        // trial point: x - step * grad, projected
+        let mut accepted = false;
+        let mut s = step;
+        for _ in 0..opts.max_backtracks {
+            for i in 0..n {
+                trial[i] = x[i] - s * grad[i];
+            }
+            project(&mut trial);
+            // Armijo on the projected step direction
+            let mut dir_dot_grad = 0.0;
+            let mut step_norm2 = 0.0;
+            for i in 0..n {
+                let d = trial[i] - x[i];
+                dir_dot_grad += d * grad[i];
+                step_norm2 += d * d;
+            }
+            if step_norm2.sqrt() < opts.tol {
+                converged = true;
+                break;
+            }
+            let vtrial = f(&trial, &mut gtrial);
+            if vtrial <= value + opts.armijo_c * dir_dot_grad {
+                x.copy_from_slice(&trial);
+                std::mem::swap(&mut grad, &mut gtrial);
+                value = vtrial;
+                accepted = true;
+                step = (s * 2.0).min(opts.step0 * 1e3); // mild step growth
+                break;
+            }
+            s *= opts.shrink;
+        }
+        if converged || !accepted {
+            if !accepted {
+                // no descent direction found at the smallest step —
+                // stationary for our purposes
+                converged = true;
+            }
+            break;
+        }
+    }
+
+    ProjGradResult { x, value, iters, converged }
+}
+
+/// Clamp helper for box projections.
+#[inline]
+pub fn clamp_box(x: &mut [f64], lo: &[f64], hi: &[f64]) {
+    for i in 0..x.len() {
+        x[i] = x[i].clamp(lo[i], hi[i]);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn minimizes_quadratic_bowl() {
+        let f = |x: &[f64], g: &mut [f64]| {
+            g[0] = 2.0 * (x[0] - 3.0);
+            g[1] = 2.0 * (x[1] + 1.0);
+            (x[0] - 3.0).powi(2) + (x[1] + 1.0).powi(2)
+        };
+        let r = minimize_projected(&[0.0, 0.0], &ProjGradOptions::default(), f, |_| {});
+        assert!(r.converged);
+        assert!((r.x[0] - 3.0).abs() < 1e-4, "{:?}", r.x);
+        assert!((r.x[1] + 1.0).abs() < 1e-4, "{:?}", r.x);
+    }
+
+    #[test]
+    fn respects_box_constraint() {
+        let f = |x: &[f64], g: &mut [f64]| {
+            g[0] = 2.0 * (x[0] - 10.0);
+            (x[0] - 10.0).powi(2)
+        };
+        let r = minimize_projected(
+            &[0.0],
+            &ProjGradOptions::default(),
+            f,
+            |x| clamp_box(x, &[0.0], &[2.0]),
+        );
+        assert!((r.x[0] - 2.0).abs() < 1e-8, "{:?}", r.x);
+    }
+
+    #[test]
+    fn handles_rosenbrock_reasonably() {
+        // not expected to fully converge in 400 iters, but must descend a lot
+        let f = |x: &[f64], g: &mut [f64]| {
+            let (a, b) = (x[0], x[1]);
+            g[0] = -2.0 * (1.0 - a) - 400.0 * a * (b - a * a);
+            g[1] = 200.0 * (b - a * a);
+            (1.0 - a).powi(2) + 100.0 * (b - a * a).powi(2)
+        };
+        let mut g0 = vec![0.0; 2];
+        let v0 = f(&[-1.2, 1.0], &mut g0);
+        let r = minimize_projected(&[-1.2, 1.0], &ProjGradOptions::default(), f, |_| {});
+        assert!(r.value < v0 * 0.05, "v0={v0} v={}", r.value);
+    }
+
+    #[test]
+    fn zero_gradient_converges_immediately() {
+        let f = |_x: &[f64], g: &mut [f64]| {
+            g[0] = 0.0;
+            7.0
+        };
+        let r = minimize_projected(&[1.0], &ProjGradOptions::default(), f, |_| {});
+        assert!(r.converged);
+        assert_eq!(r.value, 7.0);
+    }
+}

@@ -1,0 +1,154 @@
+//! Gradient-staleness metrics — equations (6), (10), (13).
+//!
+//! Staleness between learners `k` and `l` is `|τ_k − τ_l|`. The paper
+//! optimizes the **maximum** over all `N = K(K−1)/2` pairs (eq. 6) and
+//! also reports the **average** over pairs (eq. 13). The pair index
+//! matrix `c ∈ N×2` (eq. 10) is materialized for the Lagrangian/KKT code
+//! in [`crate::solver::kkt`], which addresses multipliers by pair row.
+
+/// Number of learner pairs, `N = C(K, 2)`.
+#[inline]
+pub fn num_pairs(k: usize) -> usize {
+    k * k.saturating_sub(1) / 2
+}
+
+/// The pair matrix `c` of eq. (10): rows `(k, l)` with `k < l`, in the
+/// paper's row-major order (for K=4: 12,13,14,23,24,34), 0-indexed.
+pub fn pair_matrix(k: usize) -> Vec<(usize, usize)> {
+    let mut out = Vec::with_capacity(num_pairs(k));
+    for a in 0..k {
+        for b in (a + 1)..k {
+            out.push((a, b));
+        }
+    }
+    out
+}
+
+/// Row index of pair `(a, b)` (a < b) in [`pair_matrix`] order.
+/// `n_a = a·K − a(a+1)/2` rows precede block `a`; then offset `b − a − 1`.
+#[inline]
+pub fn pair_index(k: usize, a: usize, b: usize) -> usize {
+    debug_assert!(a < b && b < k);
+    a * k - a * (a + 1) / 2 + (b - a - 1)
+}
+
+/// Maximum staleness (eq. 6): `max_{k<l} |τ_k − τ_l|` = range of τ.
+pub fn max_staleness(taus: &[u64]) -> u64 {
+    match (taus.iter().max(), taus.iter().min()) {
+        (Some(hi), Some(lo)) => hi - lo,
+        _ => 0,
+    }
+}
+
+/// Average pairwise staleness (eq. 13): `(1/N) Σ_n |τ_{c_n,1} − τ_{c_n,2}|`.
+pub fn avg_staleness(taus: &[u64]) -> f64 {
+    let k = taus.len();
+    if k < 2 {
+        return 0.0;
+    }
+    // O(K log K) instead of the naive O(K²) pair loop: sort, then each
+    // element contributes (i·τ_i − prefix_sum_i) to Σ|τ_a − τ_b|.
+    let mut sorted: Vec<u64> = taus.to_vec();
+    sorted.sort_unstable();
+    let mut total: u128 = 0;
+    let mut prefix: u128 = 0;
+    for (i, &t) in sorted.iter().enumerate() {
+        total += (i as u128) * (t as u128) - prefix;
+        prefix += t as u128;
+    }
+    total as f64 / num_pairs(k) as f64
+}
+
+/// Continuous variants (used on relaxed solutions before flooring).
+pub fn max_staleness_f(taus: &[f64]) -> f64 {
+    let hi = taus.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    let lo = taus.iter().cloned().fold(f64::INFINITY, f64::min);
+    if taus.is_empty() {
+        0.0
+    } else {
+        hi - lo
+    }
+}
+
+/// Average pairwise |τ_a − τ_b| on reals (naive O(K²), K ≤ a few dozen).
+pub fn avg_staleness_f(taus: &[f64]) -> f64 {
+    let k = taus.len();
+    if k < 2 {
+        return 0.0;
+    }
+    let mut total = 0.0;
+    for a in 0..k {
+        for b in (a + 1)..k {
+            total += (taus[a] - taus[b]).abs();
+        }
+    }
+    total / num_pairs(k) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pair_matrix_matches_paper_example_k4() {
+        // eq. (10), 1-indexed in the paper: 12,13,14,23,24,34
+        assert_eq!(
+            pair_matrix(4),
+            vec![(0, 1), (0, 2), (0, 3), (1, 2), (1, 3), (2, 3)]
+        );
+        assert_eq!(num_pairs(4), 6);
+    }
+
+    #[test]
+    fn pair_index_agrees_with_matrix_order() {
+        for k in [2usize, 3, 4, 7, 20] {
+            for (row, &(a, b)) in pair_matrix(k).iter().enumerate() {
+                assert_eq!(pair_index(k, a, b), row, "k={k} pair=({a},{b})");
+            }
+        }
+    }
+
+    #[test]
+    fn max_staleness_is_range() {
+        assert_eq!(max_staleness(&[3, 5, 4, 9, 3]), 6);
+        assert_eq!(max_staleness(&[7]), 0);
+        assert_eq!(max_staleness(&[]), 0);
+        assert_eq!(max_staleness(&[2, 2, 2]), 0);
+    }
+
+    #[test]
+    fn avg_staleness_matches_naive_pairs() {
+        let taus = [3u64, 5, 4, 9, 3, 1, 12];
+        let naive: f64 = {
+            let mut s = 0.0;
+            for a in 0..taus.len() {
+                for b in (a + 1)..taus.len() {
+                    s += (taus[a] as f64 - taus[b] as f64).abs();
+                }
+            }
+            s / num_pairs(taus.len()) as f64
+        };
+        assert!((avg_staleness(&taus) - naive).abs() < 1e-12);
+    }
+
+    #[test]
+    fn avg_staleness_example_from_text() {
+        // K=2, τ = {1, 5}: single pair, avg = max = 4
+        assert_eq!(max_staleness(&[1, 5]), 4);
+        assert!((avg_staleness(&[1, 5]) - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn continuous_variants_agree_with_integer_on_integers() {
+        let ti = [3u64, 5, 4, 9];
+        let tf: Vec<f64> = ti.iter().map(|&t| t as f64).collect();
+        assert_eq!(max_staleness(&ti) as f64, max_staleness_f(&tf));
+        assert!((avg_staleness(&ti) - avg_staleness_f(&tf)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn avg_bounded_by_max() {
+        let taus = [2u64, 8, 5, 5, 3, 7];
+        assert!(avg_staleness(&taus) <= max_staleness(&taus) as f64);
+    }
+}

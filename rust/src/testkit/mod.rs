@@ -1,0 +1,130 @@
+//! Tiny property-testing harness (no proptest in this registry).
+//!
+//! [`forall`] runs a property over `cases` pseudo-random inputs drawn
+//! through [`Gen`]; on failure it panics with the case index and the
+//! seed that reproduces it. No shrinking — failures print their full
+//! generated input via the property's own panic message instead.
+
+use crate::sim::Rng;
+
+/// Random input generator handed to properties.
+pub struct Gen {
+    rng: Rng,
+}
+
+impl Gen {
+    pub fn new(seed: u64) -> Self {
+        Self { rng: Rng::new(seed) }
+    }
+
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        self.rng.uniform_range(lo, hi)
+    }
+
+    pub fn u64_in(&mut self, lo: u64, hi: u64) -> u64 {
+        debug_assert!(hi >= lo);
+        lo + self.rng.below(hi - lo + 1)
+    }
+
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        self.u64_in(lo as u64, hi as u64) as usize
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.below(2) == 1
+    }
+
+    /// Vector of `len` draws from `f`.
+    pub fn vec<T>(&mut self, len: usize, mut f: impl FnMut(&mut Gen) -> T) -> Vec<T> {
+        (0..len).map(|_| f(self)).collect()
+    }
+
+    /// Access the raw RNG (for shuffles etc.).
+    pub fn rng(&mut self) -> &mut Rng {
+        &mut self.rng
+    }
+}
+
+/// Run `prop` over `cases` generated inputs. The property panics (via
+/// assert!) to signal failure; we re-panic with reproduction info.
+pub fn forall(name: &str, cases: usize, mut prop: impl FnMut(&mut Gen)) {
+    let base_seed = 0xF0A11u64 ^ (name.len() as u64) << 32 ^ fxhash(name);
+    for case in 0..cases {
+        let seed = base_seed.wrapping_add(case as u64 * 0x9E37_79B9_7F4A_7C15);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let mut g = Gen::new(seed);
+            prop(&mut g);
+        }));
+        if let Err(payload) = result {
+            let msg = payload
+                .downcast_ref::<String>()
+                .map(|s| s.as_str())
+                .or_else(|| payload.downcast_ref::<&str>().copied())
+                .unwrap_or("<non-string panic>");
+            panic!(
+                "property '{name}' failed at case {case}/{cases} (seed {seed:#x}): {msg}"
+            );
+        }
+    }
+}
+
+/// Stable tiny string hash for per-property seed derivation.
+fn fxhash(s: &str) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for b in s.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x1000_0000_01b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forall_passes_true_property() {
+        forall("sum-commutes", 50, |g| {
+            let a = g.u64_in(0, 1000);
+            let b = g.u64_in(0, 1000);
+            assert_eq!(a + b, b + a);
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-fails'")]
+    fn forall_reports_failures_with_seed() {
+        forall("always-fails", 10, |g| {
+            let v = g.u64_in(0, 10);
+            assert!(v > 100, "v was {v}");
+        });
+    }
+
+    #[test]
+    fn gen_ranges_are_respected() {
+        let mut g = Gen::new(1);
+        for _ in 0..1000 {
+            let v = g.u64_in(5, 9);
+            assert!((5..=9).contains(&v));
+            let f = g.f64_in(-1.0, 1.0);
+            assert!((-1.0..1.0).contains(&f));
+        }
+        assert_eq!(g.u64_in(7, 7), 7);
+    }
+
+    #[test]
+    fn gen_vec_has_len() {
+        let mut g = Gen::new(2);
+        let v = g.vec(17, |g| g.bool());
+        assert_eq!(v.len(), 17);
+    }
+
+    #[test]
+    fn same_seed_same_stream() {
+        let mut a = Gen::new(42);
+        let mut b = Gen::new(42);
+        for _ in 0..10 {
+            assert_eq!(a.u64_in(0, 1_000_000), b.u64_in(0, 1_000_000));
+        }
+    }
+}

@@ -1,0 +1,234 @@
+//! Cross-module integration tests (no artifacts required).
+//!
+//! These exercise scenario building → cost model → every allocator →
+//! staleness/validation as one pipeline, plus the experiment drivers.
+
+use asyncmel::aggregation::{aggregate, AggregationRule};
+use asyncmel::allocation::{make_allocator, AllocatorKind};
+use asyncmel::config::ScenarioConfig;
+use asyncmel::costmodel::DataScenario;
+use asyncmel::data::{sample_shards, synth, SynthConfig};
+use asyncmel::experiments::{ablation, fig2};
+use asyncmel::sim::Rng;
+
+fn paper_scenario(k: usize, t: f64) -> asyncmel::config::Scenario {
+    ScenarioConfig::paper_default()
+        .with_learners(k)
+        .with_cycle(t)
+        .build()
+}
+
+#[test]
+fn every_allocator_is_feasible_across_the_paper_grid() {
+    for k in [4usize, 10, 15, 20] {
+        for t in [7.5f64, 15.0] {
+            let s = paper_scenario(k, t);
+            for kind in AllocatorKind::all() {
+                let a = make_allocator(kind)
+                    .allocate(&s.costs, t, s.total_samples(), &s.bounds)
+                    .unwrap_or_else(|e| panic!("{} k={k} t={t}: {e}", kind.name()));
+                a.validate(&s.costs, t, s.total_samples(), &s.bounds)
+                    .unwrap_or_else(|e| panic!("{} k={k} t={t}: {e}", kind.name()));
+            }
+        }
+    }
+}
+
+#[test]
+fn paper_ordering_holds_exact_le_opt_le_eta() {
+    // the paper's central claim, checked across the whole grid:
+    // exact ≤ {relaxed, sai} ≤ ETA in max staleness; sync = 0.
+    for k in [6usize, 10, 14, 20] {
+        for t in [7.5f64, 15.0] {
+            let s = paper_scenario(k, t);
+            let get = |kind: AllocatorKind| {
+                make_allocator(kind)
+                    .allocate(&s.costs, t, s.total_samples(), &s.bounds)
+                    .unwrap()
+                    .max_staleness()
+            };
+            let exact = get(AllocatorKind::Exact);
+            let relaxed = get(AllocatorKind::Relaxed);
+            let sai = get(AllocatorKind::Sai);
+            let eta = get(AllocatorKind::Eta);
+            let sync = get(AllocatorKind::Sync);
+            assert_eq!(sync, 0, "sync must be staleness-free");
+            assert!(exact <= relaxed, "k={k} t={t}: exact {exact} > relaxed {relaxed}");
+            assert!(exact <= sai, "k={k} t={t}: exact {exact} > sai {sai}");
+            assert!(relaxed <= eta, "k={k} t={t}: relaxed {relaxed} > eta {eta}");
+            assert!(sai <= eta, "k={k} t={t}: sai {sai} > eta {eta}");
+        }
+    }
+}
+
+#[test]
+fn async_optimized_beats_sync_on_work_done() {
+    // asynchrony's purpose: at least as many total sample-epochs per
+    // cycle as sync (Σ τ_k d_k, the gradient-compute budget), with
+    // staleness still bounded. When a zero-staleness work-conserving
+    // point exists, exact and sync legitimately coincide (the paper
+    // itself calls the sync gap "marginal" as K grows, §V-C); the
+    // asynchronous win is strict when the integer τ ceiling forces a
+    // staleness/work trade (and vs ETA, which strands slow learners).
+    for (k, t, strict) in [(10usize, 7.5, false), (20, 7.5, false), (10, 15.0, false), (20, 15.0, false)] {
+        let s = paper_scenario(k, t);
+        let work = |kind: AllocatorKind| -> u128 {
+            let a = make_allocator(kind)
+                .allocate(&s.costs, t, s.total_samples(), &s.bounds)
+                .unwrap();
+            a.tau
+                .iter()
+                .zip(&a.d)
+                .map(|(&tau, &d)| tau as u128 * d as u128)
+                .sum()
+        };
+        let async_work = work(AllocatorKind::Exact);
+        let sync_work = work(AllocatorKind::Sync);
+        assert!(
+            async_work >= sync_work,
+            "k={k} t={t}: async {async_work} < sync {sync_work}"
+        );
+        if strict {
+            assert!(
+                async_work > sync_work,
+                "k={k} t={t}: async {async_work} <= sync {sync_work}"
+            );
+        }
+    }
+}
+
+#[test]
+fn eta_staleness_grows_with_k_while_optimized_stays_flat() {
+    // the paper's Fig.-2 trend: ETA staleness rises with K at fixed T,
+    // optimized stays ~1. Seed-averaged to be robust.
+    let params = fig2::Fig2Params {
+        ks: vec![6, 20],
+        t_cycles: vec![7.5],
+        schemes: vec![AllocatorKind::Exact, AllocatorKind::Eta],
+        seeds: 5,
+        ..Default::default()
+    };
+    let rows = fig2::run(&params).unwrap();
+    let get = |scheme: &str, k: usize| {
+        rows.iter()
+            .find(|r| r.scheme == scheme && r.k == k)
+            .unwrap()
+            .max_staleness
+    };
+    assert!(
+        get("eta", 20) >= get("eta", 6),
+        "eta: {} vs {}",
+        get("eta", 20),
+        get("eta", 6)
+    );
+    assert!(get("exact", 20) <= 1.5, "optimized stays low: {}", get("exact", 20));
+    assert!(
+        get("eta", 20) >= 2.0 * get("exact", 20).max(0.5),
+        "gap at K=20: eta {} vs exact {}",
+        get("eta", 20),
+        get("exact", 20)
+    );
+}
+
+#[test]
+fn distributed_dataset_scenario_allocates_too() {
+    let mut cfg = ScenarioConfig::paper_default().with_learners(12);
+    cfg.data_scenario = DataScenario::DistributedDataset;
+    let s = cfg.build();
+    for kind in [AllocatorKind::Exact, AllocatorKind::Sai, AllocatorKind::Eta] {
+        let a = make_allocator(kind)
+            .allocate(&s.costs, 15.0, s.total_samples(), &s.bounds)
+            .unwrap();
+        a.validate(&s.costs, 15.0, s.total_samples(), &s.bounds).unwrap();
+    }
+    // distributed-dataset drops the batch-shipping term -> each sample is
+    // cheaper to "move" -> τ should not be lower than task-parallelization
+    let s_tp = ScenarioConfig::paper_default().with_learners(12).build();
+    let tau_dd: u64 = make_allocator(AllocatorKind::Eta)
+        .allocate(&s.costs, 15.0, s.total_samples(), &s.bounds)
+        .unwrap()
+        .tau
+        .iter()
+        .sum();
+    let tau_tp: u64 = make_allocator(AllocatorKind::Eta)
+        .allocate(&s_tp.costs, 15.0, s_tp.total_samples(), &s_tp.bounds)
+        .unwrap()
+        .tau
+        .iter()
+        .sum();
+    assert!(tau_dd >= tau_tp, "dd {tau_dd} < tp {tau_tp}");
+}
+
+#[test]
+fn shards_respect_allocation_and_feed_aggregation() {
+    // allocation -> sharding -> fake local updates -> aggregation plumbing
+    let s = paper_scenario(8, 15.0);
+    let a = make_allocator(AllocatorKind::Sai)
+        .allocate(&s.costs, 15.0, s.total_samples(), &s.bounds)
+        .unwrap();
+    let mut rng = Rng::new(7);
+    let shards = sample_shards(&mut rng, s.total_samples() as usize, &a.d);
+    assert_eq!(shards.len(), 8);
+    for (shard, &dk) in shards.iter().zip(&a.d) {
+        assert_eq!(shard.len() as u64, dk);
+    }
+    // one scalar "model" per learner: aggregate must be the d-weighted mean
+    let locals: Vec<Vec<Vec<f32>>> =
+        (0..8).map(|i| vec![vec![i as f32]]).collect();
+    let agg = aggregate(AggregationRule::FedAvg, &locals, &a.d, &a.tau);
+    let want: f64 = a
+        .d
+        .iter()
+        .enumerate()
+        .map(|(i, &dk)| i as f64 * dk as f64)
+        .sum::<f64>()
+        / s.total_samples() as f64;
+    assert!((agg[0][0] as f64 - want).abs() < 1e-3);
+}
+
+#[test]
+fn bounds_ablation_runs_and_tight_box_hurts() {
+    let params = ablation::AblationParams {
+        bound_pairs: vec![(0.95, 1.05), (0.2, 2.5)],
+        schemes: vec![AllocatorKind::Exact],
+        seeds: 4,
+        ..Default::default()
+    };
+    let rows = ablation::run(&params).unwrap();
+    assert_eq!(rows.len(), 2);
+    // a ~degenerate box pins everyone to d/K: it can't beat the wide box
+    assert!(rows[1].max_staleness <= rows[0].max_staleness + 1e-9);
+}
+
+#[test]
+fn synthetic_dataset_composes_with_scenario_sizes() {
+    let cfg = SynthConfig { train: 2_000, test: 400, ..SynthConfig::default() };
+    let ds = synth::generate(&cfg);
+    let s = ScenarioConfig::paper_default()
+        .with_learners(5)
+        .with_total_samples(2_000)
+        .build();
+    let a = make_allocator(AllocatorKind::Eta)
+        .allocate(&s.costs, 15.0, 2_000, &s.bounds)
+        .unwrap();
+    let mut rng = Rng::new(1);
+    let shards = sample_shards(&mut rng, ds.train.len(), &a.d);
+    let total: usize = shards.iter().map(|x| x.len()).sum();
+    assert_eq!(total, 2_000);
+}
+
+#[test]
+fn fig2_solve_times_are_interactive() {
+    // the orchestrator solves once per cycle; all schemes must be far
+    // below the cycle clock (paper T >= 7.5 s; we demand < 250 ms here)
+    let s = paper_scenario(20, 7.5);
+    for kind in AllocatorKind::all() {
+        let alloc = make_allocator(kind);
+        let t0 = std::time::Instant::now();
+        alloc
+            .allocate(&s.costs, 7.5, s.total_samples(), &s.bounds)
+            .unwrap();
+        let ms = t0.elapsed().as_secs_f64() * 1e3;
+        assert!(ms < 250.0, "{} took {ms:.1} ms", kind.name());
+    }
+}

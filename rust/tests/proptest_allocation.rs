@@ -1,0 +1,213 @@
+//! Property-based tests on the coordinator invariants (via the in-tree
+//! [`asyncmel::testkit`] harness — no proptest in this registry): any
+//! random heterogeneous fleet + feasible box must yield valid,
+//! work-conserving allocations whose staleness respects the scheme
+//! ordering.
+
+use asyncmel::allocation::common::{integerize_batches, work_conserving_tau};
+use asyncmel::allocation::{make_allocator, AllocatorKind, Bounds};
+use asyncmel::costmodel::LearnerCost;
+use asyncmel::staleness::{avg_staleness, max_staleness, num_pairs, pair_index, pair_matrix};
+use asyncmel::testkit::{forall, Gen};
+
+/// Random but physically plausible per-learner cost.
+fn gen_cost(g: &mut Gen) -> LearnerCost {
+    LearnerCost::new(
+        g.f64_in(1e-4, 3e-3),  // c2: 0.1–3 ms per sample-epoch
+        g.f64_in(1e-5, 5e-4),  // c1: comms per sample
+        g.f64_in(0.05, 1.5),   // c0: model exchange
+    )
+}
+
+fn gen_fleet(g: &mut Gen) -> Vec<LearnerCost> {
+    let k = g.usize_in(2, 15);
+    g.vec(k, gen_cost)
+}
+
+#[test]
+fn prop_allocators_uphold_hard_constraints() {
+    forall("allocators-hard-constraints", 64, |g| {
+        let costs = gen_fleet(g);
+        let t_cycle = g.f64_in(5.0, 20.0);
+        let share = g.u64_in(500, 4000);
+        let k = costs.len();
+        let d_total = share * k as u64;
+        let bounds = Bounds::proportional(d_total, k, 0.2, 2.5);
+        for kind in [
+            AllocatorKind::Exact,
+            AllocatorKind::Relaxed,
+            AllocatorKind::Sai,
+            AllocatorKind::Eta,
+        ] {
+            if let Ok(a) = make_allocator(kind).allocate(&costs, t_cycle, d_total, &bounds) {
+                assert!(
+                    a.validate(&costs, t_cycle, d_total, &bounds).is_ok(),
+                    "{}: invalid allocation",
+                    kind.name()
+                );
+                assert!(
+                    a.is_work_conserving(&costs, t_cycle),
+                    "{}: not work conserving",
+                    kind.name()
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_exact_never_loses_to_heuristics() {
+    forall("exact-dominates", 48, |g| {
+        let costs = gen_fleet(g);
+        let t_cycle = g.f64_in(5.0, 20.0);
+        let share = g.u64_in(500, 4000);
+        let k = costs.len();
+        let d_total = share * k as u64;
+        let bounds = Bounds::proportional(d_total, k, 0.2, 2.5);
+        if let Ok(ex) = make_allocator(AllocatorKind::Exact)
+            .allocate(&costs, t_cycle, d_total, &bounds)
+        {
+            for kind in [AllocatorKind::Relaxed, AllocatorKind::Sai, AllocatorKind::Eta] {
+                if let Ok(a) =
+                    make_allocator(kind).allocate(&costs, t_cycle, d_total, &bounds)
+                {
+                    assert!(
+                        ex.max_staleness() <= a.max_staleness(),
+                        "exact {} > {} {}",
+                        ex.max_staleness(),
+                        kind.name(),
+                        a.max_staleness()
+                    );
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_sync_is_always_staleness_free() {
+    forall("sync-zero-staleness", 48, |g| {
+        let costs = gen_fleet(g);
+        let t_cycle = g.f64_in(5.0, 20.0);
+        let share = g.u64_in(500, 4000);
+        let k = costs.len();
+        let d_total = share * k as u64;
+        let bounds = Bounds::proportional(d_total, k, 0.2, 2.5);
+        if let Ok(a) = make_allocator(AllocatorKind::Sync)
+            .allocate(&costs, t_cycle, d_total, &bounds)
+        {
+            assert_eq!(a.max_staleness(), 0);
+            assert!(a.validate(&costs, t_cycle, d_total, &bounds).is_ok());
+        }
+    });
+}
+
+#[test]
+fn prop_integerize_total_and_box() {
+    forall("integerize-invariants", 96, |g| {
+        let k = g.usize_in(2, 20);
+        let d_real = g.vec(k, |g| g.f64_in(0.0, 5000.0));
+        let lo = g.u64_in(1, 200);
+        let width = g.u64_in(1, 5000);
+        let bounds = Bounds::new(lo, lo + width);
+        let d_total = lo * k as u64 + (width * k as u64) / 2;
+        match integerize_batches(&d_real, d_total, &bounds) {
+            Some(d) => {
+                assert_eq!(d.iter().sum::<u64>(), d_total);
+                for &v in &d {
+                    assert!(bounds.contains(v), "d={v} outside box");
+                }
+            }
+            None => {
+                // may only fail when the box excludes the total
+                let (lo_sum, hi_sum) = (lo * k as u64, (lo + width) * k as u64);
+                assert!(
+                    lo_sum > d_total || hi_sum < d_total,
+                    "spurious integerize failure"
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_work_conserving_tau_is_tight() {
+    forall("tau-tightness", 96, |g| {
+        let costs = gen_fleet(g);
+        let t_cycle = g.f64_in(5.0, 20.0);
+        let d = g.vec(costs.len(), |g| g.u64_in(100, 5000));
+        let tau = work_conserving_tau(&costs, &d, t_cycle);
+        for i in 0..costs.len() {
+            let t_now = costs[i].time(tau[i] as f64, d[i] as f64);
+            assert!(t_now <= t_cycle * (1.0 + 1e-9), "over deadline");
+            let t_next = costs[i].time((tau[i] + 1) as f64, d[i] as f64);
+            assert!(t_next > t_cycle * (1.0 - 1e-12), "slack epoch left");
+        }
+    });
+}
+
+#[test]
+fn prop_staleness_metric_invariants() {
+    forall("staleness-invariants", 128, |g| {
+        let n = g.usize_in(1, 40);
+        let taus = g.vec(n, |g| g.u64_in(0, 500));
+        let max = max_staleness(&taus);
+        let avg = avg_staleness(&taus);
+        assert!(avg >= 0.0 && avg <= max as f64 + 1e-9, "avg {avg} max {max}");
+        let all_equal = taus.iter().all(|&t| t == taus[0]);
+        assert_eq!(max == 0, all_equal);
+        // shift invariance
+        let shifted: Vec<u64> = taus.iter().map(|&t| t + 17).collect();
+        assert_eq!(max_staleness(&shifted), max);
+        assert!((avg_staleness(&shifted) - avg).abs() < 1e-9);
+    });
+}
+
+#[test]
+fn prop_pair_indexing_is_a_bijection() {
+    forall("pair-bijection", 24, |g| {
+        let k = g.usize_in(2, 25);
+        let pm = pair_matrix(k);
+        assert_eq!(pm.len(), num_pairs(k));
+        for (n, &(a, b)) in pm.iter().enumerate() {
+            assert!(a < b && b < k);
+            assert_eq!(pair_index(k, a, b), n);
+        }
+    });
+}
+
+#[test]
+fn prop_d_of_tau_and_tau_of_d_are_inverse() {
+    forall("cost-manifold-inverse", 128, |g| {
+        let cost = gen_cost(g);
+        let t_cycle = g.f64_in(5.0, 20.0);
+        let tau = g.f64_in(0.0, 50.0);
+        if let Some(d) = cost.d_of_tau(tau, t_cycle) {
+            if d > 1e-9 {
+                let back = cost.tau_of_d(d, t_cycle).unwrap();
+                assert!((back - tau).abs() < 1e-6, "tau {tau} -> d {d} -> {back}");
+                assert!((cost.time(tau, d) - t_cycle).abs() < 1e-6);
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_improved_allocations_never_regress_eta() {
+    // the improve loop starting FROM the eta split can never be worse
+    forall("improve-monotone", 32, |g| {
+        let costs = gen_fleet(g);
+        let k = costs.len();
+        let t_cycle = g.f64_in(5.0, 20.0);
+        let share = g.u64_in(500, 4000);
+        let d_total = share * k as u64;
+        let bounds = Bounds::proportional(d_total, k, 0.2, 2.5);
+        let mut d: Vec<u64> = vec![share; k];
+        let before = max_staleness(&work_conserving_tau(&costs, &d, t_cycle));
+        let after = asyncmel::allocation::common::improve_to_local_optimum(
+            &costs, &mut d, t_cycle, &bounds, 200,
+        );
+        assert!(after.max_staleness() <= before);
+        assert!(after.validate(&costs, t_cycle, d_total, &bounds).is_ok());
+    });
+}
