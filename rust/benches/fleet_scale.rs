@@ -1,0 +1,64 @@
+//! Bench + regeneration harness for the **fleet-scale** event engine.
+//!
+//! `cargo bench --bench fleet_scale` does two things:
+//! 1. prints the fleet-scale sweep table: K ∈ {10, 100, 1000, 5000}
+//!    learners with Poisson join / exponential-lifetime churn, phantom
+//!    numerics — the ROADMAP scaling story;
+//! 2. times one full engine run at K = 1000 (event-queue + allocator
+//!    hot path) and the per-event cost of the queue itself.
+
+use asyncmel::benchkit::{bench, group, BenchConfig};
+use asyncmel::config::{ChurnConfig, ScenarioConfig};
+use asyncmel::coordinator::{EngineOptions, EventEngine, ExecMode, TrainOptions};
+use asyncmel::experiments::fleet_scale;
+use asyncmel::sim::EventQueue;
+
+fn print_sweep() {
+    let params = fleet_scale::FleetScaleParams::default();
+    let rows = fleet_scale::run(&params).expect("fleet sweep");
+    println!("\n========== FLEET SCALE — event engine with churn ==========");
+    println!("{}", fleet_scale::table(&rows).render());
+    println!("===========================================================\n");
+}
+
+fn main() {
+    print_sweep();
+
+    group("event engine @ K=1000, 8 cycles, churn (phantom numerics)");
+    let cfg = BenchConfig {
+        measure: std::time::Duration::from_secs(5),
+        max_iters: 50,
+        ..Default::default()
+    };
+    bench("engine/run_k1000", &cfg, || {
+        let scenario = ScenarioConfig::paper_default()
+            .with_learners(1000)
+            .with_churn(ChurnConfig::new(1.0, 120.0))
+            .build();
+        let mut engine = EventEngine::new(
+            scenario,
+            asyncmel::allocation::AllocatorKind::Eta,
+            asyncmel::aggregation::AggregationRule::FedAvg,
+            ExecMode::Phantom,
+        )
+        .unwrap();
+        let opts = EngineOptions {
+            train: TrainOptions { cycles: 8, ..Default::default() },
+            ..Default::default()
+        };
+        engine.run(&opts).unwrap()
+    });
+
+    group("event queue push+pop (10k events)");
+    bench("queue/churn_10k", &BenchConfig::default(), || {
+        let mut q = EventQueue::new();
+        let mut acc = 0.0f64;
+        for i in 0..10_000u64 {
+            q.push((i % 97) as f64 * 0.5, i);
+        }
+        while let Some((t, _)) = q.pop() {
+            acc += t;
+        }
+        acc
+    });
+}

@@ -117,6 +117,75 @@ pub fn aggregate(rule: AggregationRule, locals: &[ParamSet], d: &[u64], tau: &[u
     out
 }
 
+/// How the server mixing weight decays with staleness in
+/// [`AsyncAggregator`] (the `s(t − τ)` functions of Xie et al.,
+/// *Asynchronous Federated Optimization*, arXiv:1903.03934 §5).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum StalenessDecay {
+    /// Constant: `α_s = α` regardless of staleness.
+    Constant,
+    /// Polynomial: `α_s = α · (1 + s)^(−a)`.
+    Polynomial { a: f64 },
+    /// Hinge: full weight up to `b` cycles of staleness, then
+    /// `α / (1 + a·(s − b))`.
+    Hinge { a: f64, b: u64 },
+}
+
+/// Server-side rule for the event engine's asynchronous mode: on every
+/// arrival the global model moves toward the local one,
+/// `w ← (1 − α_s)·w + α_s·w̃_k`, with `α_s` decayed by how many server
+/// updates (staleness `s`, the event-time analogue of eq. 6's epoch
+/// lag) happened since the learner snapshotted the model.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct AsyncAggregator {
+    /// Base mixing rate `α ∈ (0, 1]`.
+    pub alpha: f64,
+    pub decay: StalenessDecay,
+}
+
+impl Default for AsyncAggregator {
+    fn default() -> Self {
+        // Xie et al.'s recommended setting: polynomial decay, a = 0.5.
+        Self { alpha: 0.6, decay: StalenessDecay::Polynomial { a: 0.5 } }
+    }
+}
+
+impl AsyncAggregator {
+    pub fn new(alpha: f64, decay: StalenessDecay) -> Self {
+        assert!(alpha > 0.0 && alpha <= 1.0, "alpha must be in (0, 1]");
+        Self { alpha, decay }
+    }
+
+    /// Effective mixing weight for an update that is `staleness` server
+    /// versions old.
+    pub fn weight(&self, staleness: u64) -> f64 {
+        let s = staleness as f64;
+        match self.decay {
+            StalenessDecay::Constant => self.alpha,
+            StalenessDecay::Polynomial { a } => self.alpha * (1.0 + s).powf(-a),
+            StalenessDecay::Hinge { a, b } => {
+                if staleness <= b {
+                    self.alpha
+                } else {
+                    self.alpha / (1.0 + a * (s - b as f64))
+                }
+            }
+        }
+    }
+
+    /// In-place server update: `global ← (1 − α_s)·global + α_s·local`.
+    pub fn mix(&self, global: &mut ParamSet, local: &ParamSet, staleness: u64) {
+        assert_eq!(global.len(), local.len(), "tensor-count mismatch");
+        let w = self.weight(staleness) as f32;
+        for (g, l) in global.iter_mut().zip(local) {
+            assert_eq!(g.len(), l.len(), "tensor-shape mismatch");
+            for (gv, &lv) in g.iter_mut().zip(l) {
+                *gv += w * (lv - *gv);
+            }
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -181,5 +250,47 @@ mod tests {
     fn mismatched_shapes_panic() {
         let bad = vec![vec![vec![1.0]], vec![vec![1.0, 2.0]]];
         aggregate(AggregationRule::Uniform, &bad, &[1, 1], &[1, 1]);
+    }
+
+    #[test]
+    fn async_weight_decays_with_staleness() {
+        let agg = AsyncAggregator::default();
+        let w0 = agg.weight(0);
+        let w1 = agg.weight(1);
+        let w8 = agg.weight(8);
+        assert!((w0 - 0.6).abs() < 1e-12);
+        assert!(w0 > w1 && w1 > w8, "{w0} {w1} {w8}");
+        assert!(w8 > 0.0);
+
+        let flat = AsyncAggregator::new(0.5, StalenessDecay::Constant);
+        assert_eq!(flat.weight(0), flat.weight(100));
+
+        let hinge = AsyncAggregator::new(0.5, StalenessDecay::Hinge { a: 1.0, b: 2 });
+        assert_eq!(hinge.weight(0), hinge.weight(2));
+        assert!((hinge.weight(4) - 0.5 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn async_mix_moves_global_toward_local() {
+        let agg = AsyncAggregator::new(0.5, StalenessDecay::Constant);
+        let mut global: ParamSet = vec![vec![0.0, 2.0]];
+        let local: ParamSet = vec![vec![1.0, 0.0]];
+        agg.mix(&mut global, &local, 0);
+        assert_eq!(global, vec![vec![0.5, 1.0]]);
+    }
+
+    #[test]
+    fn fully_stale_update_barely_moves_the_model() {
+        let agg = AsyncAggregator::default();
+        let mut global: ParamSet = vec![vec![0.0]];
+        let local: ParamSet = vec![vec![1.0]];
+        agg.mix(&mut global, &local, 10_000);
+        assert!(global[0][0] < 0.01, "{}", global[0][0]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn async_alpha_out_of_range_rejected() {
+        AsyncAggregator::new(1.5, StalenessDecay::Constant);
     }
 }

@@ -16,6 +16,85 @@ use crate::costmodel::{Bounds, DataScenario, LearnerCost, TaskParams};
 use crate::device::{sample_fleet, Device, DeviceRanges};
 use crate::sim::Rng;
 
+/// Which coordinator engine executes the run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum EngineKind {
+    /// The original global-cycle loop (`coordinator::Orchestrator`).
+    #[default]
+    Lockstep,
+    /// The event-driven simulation engine (`coordinator::EventEngine`):
+    /// dispatch, upload arrival, churn and aggregation as timestamped
+    /// events on the virtual clock.
+    Event,
+}
+
+impl EngineKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            EngineKind::Lockstep => "lockstep",
+            EngineKind::Event => "event",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<EngineKind> {
+        match s.to_ascii_lowercase().as_str() {
+            "lockstep" => Some(EngineKind::Lockstep),
+            "event" => Some(EngineKind::Event),
+            _ => None,
+        }
+    }
+}
+
+impl std::str::FromStr for EngineKind {
+    type Err = std::io::Error;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        EngineKind::parse(s).ok_or_else(|| {
+            std::io::Error::new(
+                std::io::ErrorKind::InvalidInput,
+                format!("unknown engine '{s}' (lockstep|event)"),
+            )
+        })
+    }
+}
+
+/// Learner churn model for the event engine: Poisson joins, exponential
+/// lifetimes. All-zero rates disable churn (the default), which keeps
+/// the event engine byte-identical to the lockstep oracle.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ChurnConfig {
+    /// Poisson arrival rate of new learners (joins per virtual second).
+    pub join_rate_per_s: f64,
+    /// Mean exponential lifetime of a learner after joining (seconds);
+    /// also applied to the initial fleet. 0 disables departures.
+    pub mean_lifetime_s: f64,
+    /// Hard cap on concurrently alive learners (0 = 4 × the initial K).
+    pub max_learners: usize,
+    /// Floor below which departures are ignored (the orchestrator never
+    /// lets the fleet die out entirely).
+    pub min_learners: usize,
+}
+
+impl ChurnConfig {
+    pub fn disabled() -> Self {
+        Self { join_rate_per_s: 0.0, mean_lifetime_s: 0.0, max_learners: 0, min_learners: 1 }
+    }
+
+    pub fn new(join_rate_per_s: f64, mean_lifetime_s: f64) -> Self {
+        assert!(join_rate_per_s >= 0.0 && mean_lifetime_s >= 0.0);
+        Self { join_rate_per_s, mean_lifetime_s, ..Self::disabled() }
+    }
+
+    pub fn is_enabled(&self) -> bool {
+        self.join_rate_per_s > 0.0 || self.mean_lifetime_s > 0.0
+    }
+}
+
+impl Default for ChurnConfig {
+    fn default() -> Self {
+        Self::disabled()
+    }
+}
+
 /// Declarative experiment description.
 #[derive(Debug, Clone)]
 pub struct ScenarioConfig {
@@ -35,6 +114,10 @@ pub struct ScenarioConfig {
     pub channel: ChannelParams,
     pub devices: DeviceRanges,
     pub task: TaskParams,
+    /// Which coordinator engine runs the scenario.
+    pub engine: EngineKind,
+    /// Learner churn (event engine only; disabled by default).
+    pub churn: ChurnConfig,
 }
 
 impl Default for ScenarioConfig {
@@ -58,6 +141,8 @@ impl ScenarioConfig {
             channel: ChannelParams::default(),
             devices: DeviceRanges::default(),
             task: TaskParams::default(),
+            engine: EngineKind::Lockstep,
+            churn: ChurnConfig::disabled(),
         }
     }
 
@@ -81,6 +166,14 @@ impl ScenarioConfig {
     pub fn with_bound_fracs(mut self, lo: f64, hi: f64) -> Self {
         self.d_lo_frac = lo;
         self.d_hi_frac = hi;
+        self
+    }
+    pub fn with_engine(mut self, engine: EngineKind) -> Self {
+        self.engine = engine;
+        self
+    }
+    pub fn with_churn(mut self, churn: ChurnConfig) -> Self {
+        self.churn = churn;
         self
     }
 
@@ -107,6 +200,12 @@ impl ScenarioConfig {
             .set("model_size_per_sample", self.task.model_size_per_sample)
             .set("model_size_params", self.task.model_size_params)
             .set("compute_cycles_per_sample", self.task.compute_cycles_per_sample);
+        let mut churn = Value::obj();
+        churn
+            .set("join_rate_per_s", self.churn.join_rate_per_s)
+            .set("mean_lifetime_s", self.churn.mean_lifetime_s)
+            .set("max_learners", self.churn.max_learners)
+            .set("min_learners", self.churn.min_learners);
         let mut v = Value::obj();
         v.set("seed", self.seed)
             .set("num_learners", self.num_learners)
@@ -121,9 +220,11 @@ impl ScenarioConfig {
                     DataScenario::DistributedDataset => "distributed_dataset",
                 },
             )
+            .set("engine", self.engine.name())
             .set("channel", ch)
             .set("devices", dev)
-            .set("task", task);
+            .set("task", task)
+            .set("churn", churn);
         v
     }
 
@@ -155,6 +256,25 @@ impl ScenarioConfig {
                 "distributed_dataset" => DataScenario::DistributedDataset,
                 other => anyhow::bail!("unknown data_scenario '{other}'"),
             };
+        }
+        if let Some(x) = v.get("engine") {
+            let s = x.as_str()?;
+            cfg.engine = EngineKind::parse(s)
+                .ok_or_else(|| anyhow::anyhow!("unknown engine '{s}' (lockstep|event)"))?;
+        }
+        if let Some(cu) = v.get("churn") {
+            if let Some(x) = cu.get("join_rate_per_s") {
+                cfg.churn.join_rate_per_s = x.as_f64()?;
+            }
+            if let Some(x) = cu.get("mean_lifetime_s") {
+                cfg.churn.mean_lifetime_s = x.as_f64()?;
+            }
+            if let Some(x) = cu.get("max_learners") {
+                cfg.churn.max_learners = x.as_usize()?;
+            }
+            if let Some(x) = cu.get("min_learners") {
+                cfg.churn.min_learners = x.as_usize()?;
+            }
         }
         if let Some(ch) = v.get("channel") {
             if let Some(x) = ch.get("radius_m") {
@@ -348,6 +468,34 @@ mod tests {
         assert_eq!(back.num_learners, 7);
         assert_eq!(back.t_cycle_s, 7.5);
         assert_eq!(back.seed, cfg.seed);
+    }
+
+    #[test]
+    fn engine_and_churn_round_trip() {
+        let cfg = ScenarioConfig::paper_default()
+            .with_engine(EngineKind::Event)
+            .with_churn(ChurnConfig::new(0.5, 120.0));
+        let text = cfg.to_json().pretty();
+        let back = ScenarioConfig::from_json(&crate::json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.engine, EngineKind::Event);
+        assert!(back.churn.is_enabled());
+        assert_eq!(back.churn.join_rate_per_s, 0.5);
+        assert_eq!(back.churn.mean_lifetime_s, 120.0);
+        assert_eq!(back.churn.min_learners, 1);
+
+        // sparse configs keep the defaults
+        let sparse = ScenarioConfig::from_json(&crate::json::parse("{}").unwrap()).unwrap();
+        assert_eq!(sparse.engine, EngineKind::Lockstep);
+        assert!(!sparse.churn.is_enabled());
+    }
+
+    #[test]
+    fn engine_kind_parses() {
+        assert_eq!(EngineKind::parse("event"), Some(EngineKind::Event));
+        assert_eq!(EngineKind::parse("LOCKSTEP"), Some(EngineKind::Lockstep));
+        assert_eq!(EngineKind::parse("warp"), None);
+        assert_eq!("event".parse::<EngineKind>().unwrap(), EngineKind::Event);
+        assert!("nope".parse::<EngineKind>().is_err());
     }
 
     #[test]

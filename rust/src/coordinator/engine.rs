@@ -1,0 +1,767 @@
+//! Event-driven fleet simulation engine.
+//!
+//! The lock-step loop in [`crate::coordinator::orchestrator`] advances
+//! the world one global cycle `T` at a time, which caps both scale and
+//! scenario diversity. This engine instead timestamps *everything* —
+//! learner dispatch, local-epoch completion / upload arrival, learner
+//! churn (join/leave mid-run), aggregation — as events on a
+//! deterministic [`EventQueue`] over the virtual clock, so thousands of
+//! heterogeneous learners can be simulated with churn while staying
+//! bit-reproducible from the scenario seed.
+//!
+//! Two aggregation policies:
+//!
+//! * [`EnginePolicy::Barrier`] — arrivals buffer until the cycle
+//!   boundary, then aggregate exactly like the lock-step orchestrator.
+//!   On churn-free scenarios this path consumes the RNG streams in the
+//!   same order as [`Orchestrator::run_from`] and therefore produces an
+//!   **identical [`CycleRecord`] stream** — the lock-step loop doubles
+//!   as a differential-testing oracle (see
+//!   `rust/tests/engine_determinism.rs`).
+//! * [`EnginePolicy::Async`] — truly asynchronous federated
+//!   optimization in the spirit of Xie et al. (arXiv:1903.03934): the
+//!   server mixes each update into the global model *on arrival* with a
+//!   staleness-decayed weight ([`AsyncAggregator`]), and the learner is
+//!   immediately re-dispatched with the fresh model. Staleness is
+//!   measured in server versions, the event-time analogue of eq. (6).
+//!   Note: in `Real` exec mode this policy samples each learner's
+//!   batch i.i.d. with replacement rather than dealing an exact
+//!   partition — eq. (7c)'s disjointness is a barrier-cycle concept
+//!   with no analogue in a free-running arrival stream.
+//!
+//! The existing allocators plug in unchanged: the engine re-solves the
+//! `(τ_k, d_k)` program lazily whenever the fleet composition changed
+//! (join/leave), i.e. incrementally at the next dispatch/boundary
+//! rather than per lock-step cycle.
+//!
+//! [`Orchestrator::run_from`]: crate::coordinator::Orchestrator::run_from
+
+use std::time::Instant;
+
+use anyhow::{anyhow, ensure, Result};
+
+use crate::aggregation::{aggregate, AggregationRule, AsyncAggregator, ParamSet};
+use crate::allocation::{make_allocator, Allocation, AllocatorKind, TaskAllocator};
+use crate::channel::sample_link;
+use crate::config::{ChurnConfig, Scenario};
+use crate::coordinator::faults::{draw_outcomes, update_arrives, FaultModel, FaultOutcome};
+use crate::coordinator::learner::Learner;
+use crate::coordinator::orchestrator::{CycleRecord, TrainOptions};
+use crate::costmodel::{Bounds, LearnerCost};
+use crate::data::{sample_shards, Dataset};
+use crate::device::{Device, DeviceClass};
+use crate::runtime::Runtime;
+use crate::sim::{EventQueue, Rng};
+
+/// How the engine folds arrivals into the global model.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum EnginePolicy {
+    /// Aggregate at each cycle boundary (lock-step semantics; the
+    /// differential oracle mode).
+    Barrier,
+    /// Staleness-weighted per-arrival server updates + immediate
+    /// re-dispatch.
+    Async(AsyncAggregator),
+}
+
+/// Options for an engine run.
+#[derive(Debug, Clone, Copy)]
+pub struct EngineOptions {
+    pub train: TrainOptions,
+    pub policy: EnginePolicy,
+}
+
+impl Default for EngineOptions {
+    fn default() -> Self {
+        Self { train: TrainOptions::default(), policy: EnginePolicy::Barrier }
+    }
+}
+
+/// What the engine executes per learner cycle.
+pub enum ExecMode<'rt> {
+    /// Real SGD numerics through the runtime (native or PJRT backend).
+    Real { runtime: &'rt Runtime, train: Dataset, test: Dataset },
+    /// Timing/staleness bookkeeping only — no model, no dataset. This
+    /// is what lets K = 5000 fleets run in milliseconds.
+    Phantom,
+}
+
+/// Run counters (diagnostics + fleet-scale reporting).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct EngineStats {
+    /// Events processed (popped off the queue).
+    pub events: u64,
+    pub joins: usize,
+    pub leaves: usize,
+    /// Work dispatches attempted (including ones lost to dropout or
+    /// missed deadlines).
+    pub dispatched: usize,
+    /// Updates that reached the server.
+    pub arrivals: usize,
+    /// Allocation (re-)solves.
+    pub resolves: usize,
+    pub final_alive: usize,
+}
+
+#[derive(Debug, Clone)]
+struct Slot {
+    learner: Learner,
+    alive: bool,
+}
+
+/// An update travelling from a learner to the server.
+struct ArrivalMsg {
+    slot: usize,
+    version_at_dispatch: u64,
+    tau: u64,
+    d: u64,
+    params: Option<ParamSet>,
+    train_loss: f32,
+}
+
+enum Event {
+    /// End of global cycle: aggregate (barrier), evaluate, record,
+    /// re-dispatch.
+    Boundary,
+    /// A learner's upload reached the orchestrator.
+    Arrival(ArrivalMsg),
+    /// Re-arm a learner whose previous round produced no upload
+    /// (dropout / infeasible τ) — async mode only.
+    Redispatch { slot: usize },
+    /// Poisson learner join.
+    Join,
+    /// Scheduled departure of a learner.
+    Leave { slot: usize },
+}
+
+/// The event-driven orchestrator.
+pub struct EventEngine<'rt> {
+    pub scenario: Scenario,
+    slots: Vec<Slot>,
+    allocator: Box<dyn TaskAllocator + Send + Sync>,
+    pub aggregation: AggregationRule,
+    exec: ExecMode<'rt>,
+    pub faults: FaultModel,
+    churn: ChurnConfig,
+    rng: Rng,
+    churn_rng: Rng,
+    /// Current allocation over the alive fleet (+ parallel cost/slot
+    /// vectors in allocation order).
+    alloc: Option<Allocation>,
+    alloc_costs: Vec<LearnerCost>,
+    alloc_slots: Vec<usize>,
+    dirty: bool,
+    initial_k: usize,
+    /// Host wall-clock of the most recent allocation solve (ms).
+    last_solve_ms: f64,
+    pub stats: EngineStats,
+}
+
+fn exp_sample(rng: &mut Rng, mean: f64) -> f64 {
+    debug_assert!(mean > 0.0);
+    let u = 1.0 - rng.uniform(); // (0, 1]
+    -mean * u.ln()
+}
+
+impl<'rt> EventEngine<'rt> {
+    /// Assemble the engine. Mirrors [`crate::coordinator::Orchestrator::new`]
+    /// exactly (including RNG stream derivation) so that the barrier
+    /// policy on churn-free scenarios is byte-identical to lock-step.
+    pub fn new(
+        scenario: Scenario,
+        kind: AllocatorKind,
+        aggregation: AggregationRule,
+        exec: ExecMode<'rt>,
+    ) -> Result<Self> {
+        if let ExecMode::Real { runtime, train, .. } = &exec {
+            ensure!(
+                train.len() as u64 == scenario.total_samples(),
+                "dataset size {} != scenario d = {}",
+                train.len(),
+                scenario.total_samples()
+            );
+            ensure!(
+                train.features == runtime.manifest.num_features(),
+                "feature mismatch vs artifact manifest"
+            );
+        }
+        let slots: Vec<Slot> = (0..scenario.k())
+            .map(|i| Slot {
+                learner: Learner {
+                    id: i,
+                    device: scenario.devices[i],
+                    link: scenario.links[i],
+                    cost: scenario.costs[i],
+                },
+                alive: true,
+            })
+            .collect();
+        // Same derivation as the lock-step orchestrator…
+        let mut rng = scenario.rng.clone();
+        let rng = rng.fork(0x0_0C);
+        // …plus an independent stream for churn, derived without
+        // disturbing the shared one (churn-free runs never touch it).
+        let mut tmp = scenario.rng.clone();
+        let churn_rng = Rng::new(tmp.next_u64() ^ 0xC41C_77AA_D15C_0DEA_u64);
+        let churn = scenario.config.churn;
+        let initial_k = scenario.k();
+        Ok(Self {
+            scenario,
+            slots,
+            allocator: make_allocator(kind),
+            aggregation,
+            exec,
+            faults: FaultModel::none(),
+            churn,
+            rng,
+            churn_rng,
+            alloc: None,
+            alloc_costs: Vec::new(),
+            alloc_slots: Vec::new(),
+            dirty: true,
+            initial_k,
+            last_solve_ms: 0.0,
+            stats: EngineStats::default(),
+        })
+    }
+
+    /// Enable fault injection for subsequent runs.
+    pub fn with_faults(mut self, faults: FaultModel) -> Self {
+        self.faults = faults;
+        self
+    }
+
+    /// Override the churn model from the scenario config.
+    pub fn with_churn(mut self, churn: ChurnConfig) -> Self {
+        self.churn = churn;
+        self
+    }
+
+    fn alive_count(&self) -> usize {
+        self.slots.iter().filter(|s| s.alive).count()
+    }
+
+    fn max_learners(&self) -> usize {
+        if self.churn.max_learners == 0 {
+            4 * self.initial_k
+        } else {
+            self.churn.max_learners
+        }
+    }
+
+    fn min_learners(&self) -> usize {
+        self.churn.min_learners.max(1)
+    }
+
+    /// (Re-)solve the allocation over the currently alive fleet. Called
+    /// lazily whenever `dirty` (fleet changed) — the "incremental
+    /// per-arrival re-solve" path: existing allocators run unchanged on
+    /// the new fleet composition.
+    fn resolve(&mut self) -> Result<()> {
+        let t0 = Instant::now();
+        let alive: Vec<usize> = (0..self.slots.len()).filter(|&i| self.slots[i].alive).collect();
+        ensure!(!alive.is_empty(), "no alive learners to allocate to");
+        let costs: Vec<LearnerCost> =
+            alive.iter().map(|&i| self.slots[i].learner.cost).collect();
+        let cfg = &self.scenario.config;
+        let bounds =
+            Bounds::proportional(cfg.total_samples, alive.len(), cfg.d_lo_frac, cfg.d_hi_frac);
+        let alloc =
+            self.allocator
+                .allocate(&costs, cfg.t_cycle_s, cfg.total_samples, &bounds)?;
+        self.alloc_costs = costs;
+        self.alloc_slots = alive;
+        self.alloc = Some(alloc);
+        self.dirty = false;
+        self.last_solve_ms = t0.elapsed().as_secs_f64() * 1e3;
+        self.stats.resolves += 1;
+        Ok(())
+    }
+
+    /// Assignment of a slot in the current allocation, if it has one.
+    fn assignment(&self, slot: usize) -> Option<(u64, u64)> {
+        let pos = self.alloc_slots.iter().position(|&s| s == slot)?;
+        let alloc = self.alloc.as_ref()?;
+        Some((alloc.tau[pos], alloc.d[pos]))
+    }
+
+    /// Barrier-mode dispatch of one full cycle — consumes `self.rng` in
+    /// exactly the lock-step order: `sample_shards`, `draw_outcomes`,
+    /// then per-learner training in allocation order.
+    fn dispatch_cycle(
+        &mut self,
+        q: &mut EventQueue<Event>,
+        now: f64,
+        global: &Option<ParamSet>,
+        opts: &TrainOptions,
+    ) -> Result<()> {
+        let t_cycle = self.scenario.t_cycle();
+        let alloc = self.alloc.clone().expect("allocation solved before dispatch");
+        let alive = self.alloc_slots.clone();
+        let shards: Option<Vec<Vec<u32>>> = match &self.exec {
+            ExecMode::Real { train, .. } => {
+                Some(sample_shards(&mut self.rng, train.len(), &alloc.d))
+            }
+            ExecMode::Phantom => None,
+        };
+        let outcomes = draw_outcomes(&self.faults, alive.len(), &mut self.rng);
+        self.stats.dispatched += alive.len();
+        for (pos, &si) in alive.iter().enumerate() {
+            let tau = alloc.tau[pos];
+            let d = alloc.d[pos];
+            let planned = self.slots[si].learner.cost.time(tau as f64, d as f64);
+            if !update_arrives(outcomes[pos], planned, t_cycle, &self.faults) {
+                // dropped or deadline-missed: the node burned its cycle
+                // but nothing arrives.
+                continue;
+            }
+            // actual completion time (a surviving straggler runs slower
+            // but still makes the deadline, per update_arrives)
+            let effective = if outcomes[pos] == FaultOutcome::Straggled {
+                planned * self.faults.straggle_factor
+            } else {
+                planned
+            };
+            let (params, train_loss) = match (&self.exec, global) {
+                (ExecMode::Real { runtime, train, .. }, Some(g)) => {
+                    let shard = &shards.as_ref().expect("real mode has shards")[pos];
+                    let upd = self.slots[si].learner.run_cycle(
+                        runtime, g, train, shard, tau, opts.lr,
+                    )?;
+                    (Some(upd.params), upd.train_loss)
+                }
+                _ => (None, f32::NAN),
+            };
+            q.push(
+                now + effective.min(t_cycle),
+                Event::Arrival(ArrivalMsg {
+                    slot: si,
+                    version_at_dispatch: 0,
+                    tau,
+                    d,
+                    params,
+                    train_loss,
+                }),
+            );
+        }
+        Ok(())
+    }
+
+    /// Async-mode dispatch of a single learner from the current global
+    /// model snapshot.
+    fn dispatch_one(
+        &mut self,
+        q: &mut EventQueue<Event>,
+        now: f64,
+        slot: usize,
+        global: &Option<ParamSet>,
+        opts: &TrainOptions,
+        version: u64,
+    ) -> Result<()> {
+        if self.dirty {
+            self.resolve()?;
+        }
+        if !self.slots[slot].alive {
+            return Ok(());
+        }
+        let t_cycle = self.scenario.t_cycle();
+        let Some((tau, d)) = self.assignment(slot) else {
+            // fleet changed between resolve and dispatch; try next cycle
+            q.push(now + t_cycle, Event::Redispatch { slot });
+            return Ok(());
+        };
+        if tau == 0 {
+            // MEL infeasible for this node right now — idle one cycle.
+            q.push(now + t_cycle, Event::Redispatch { slot });
+            return Ok(());
+        }
+        self.stats.dispatched += 1;
+        let outcome = draw_outcomes(&self.faults, 1, &mut self.rng)[0];
+        if outcome == FaultOutcome::Dropped {
+            q.push(now + t_cycle, Event::Redispatch { slot });
+            return Ok(());
+        }
+        let mut busy = self.slots[slot].learner.cost.time(tau as f64, d as f64);
+        if outcome == FaultOutcome::Straggled {
+            busy *= self.faults.straggle_factor;
+        }
+        debug_assert!(busy > 0.0);
+        let (params, train_loss) = match (&self.exec, global) {
+            (ExecMode::Real { runtime, train, .. }, Some(g)) => {
+                // Async mode samples the learner's batch i.i.d. WITH
+                // replacement: eq. (7c)'s exact dataset partition is a
+                // per-cycle barrier concept and has no analogue in a
+                // free-running arrival stream (each learner starts its
+                // round at a different time). Σ d_k = D still governs
+                // the *rate* via the allocation; only the disjointness
+                // is relaxed.
+                let n = train.len() as u64;
+                let shard: Vec<u32> =
+                    (0..d).map(|_| self.rng.below(n) as u32).collect();
+                let upd = self.slots[slot].learner.run_cycle(
+                    runtime, g, train, &shard, tau, opts.lr,
+                )?;
+                (Some(upd.params), upd.train_loss)
+            }
+            _ => (None, f32::NAN),
+        };
+        q.push(
+            now + busy,
+            Event::Arrival(ArrivalMsg {
+                slot,
+                version_at_dispatch: version,
+                tau,
+                d,
+                params,
+                train_loss,
+            }),
+        );
+        Ok(())
+    }
+
+    /// Admit a new learner sampled from the scenario's device/channel
+    /// distributions.
+    fn join(&mut self, q: &mut EventQueue<Event>, now: f64) -> Option<usize> {
+        if self.alive_count() >= self.max_learners() {
+            return None;
+        }
+        let cfg = &self.scenario.config;
+        let class = if self.churn_rng.below(2) == 0 {
+            DeviceClass::Laptop
+        } else {
+            DeviceClass::Embedded
+        };
+        let device = Device::sample(class, &cfg.devices, &mut self.churn_rng);
+        let link = sample_link(&cfg.channel, &device, &mut self.churn_rng);
+        let cost =
+            LearnerCost::from_parts(&device, &link, &cfg.task, cfg.data_scenario);
+        let id = self.slots.len();
+        self.slots.push(Slot {
+            learner: Learner { id, device, link, cost },
+            alive: true,
+        });
+        self.dirty = true;
+        self.stats.joins += 1;
+        if self.churn.mean_lifetime_s > 0.0 {
+            let life = exp_sample(&mut self.churn_rng, self.churn.mean_lifetime_s);
+            q.push(now + life, Event::Leave { slot: id });
+        }
+        Some(id)
+    }
+
+    /// Run `opts.train.cycles` global cycles; returns one
+    /// [`CycleRecord`] per cycle boundary.
+    pub fn run(&mut self, opts: &EngineOptions) -> Result<Vec<CycleRecord>> {
+        let t_cycle = self.scenario.t_cycle();
+        let cycles = opts.train.cycles;
+        self.stats = EngineStats::default();
+
+        let mut global: Option<ParamSet> = match &self.exec {
+            ExecMode::Real { runtime, .. } => {
+                let mut init_rng = self.rng.fork(0x1417);
+                Some(runtime.init_params(&mut init_rng))
+            }
+            ExecMode::Phantom => None,
+        };
+
+        self.resolve()?; // times itself into last_solve_ms
+
+        let mut q: EventQueue<Event> = EventQueue::new();
+        let mut now = 0.0f64;
+
+        // churn arming
+        if self.churn.join_rate_per_s > 0.0 {
+            let dt = exp_sample(&mut self.churn_rng, 1.0 / self.churn.join_rate_per_s);
+            q.push(now + dt, Event::Join);
+        }
+        if self.churn.mean_lifetime_s > 0.0 {
+            for slot in 0..self.slots.len() {
+                let life = exp_sample(&mut self.churn_rng, self.churn.mean_lifetime_s);
+                q.push(now + life, Event::Leave { slot });
+            }
+        }
+
+        // initial dispatch
+        match opts.policy {
+            EnginePolicy::Barrier => self.dispatch_cycle(&mut q, now, &global, &opts.train)?,
+            EnginePolicy::Async(_) => {
+                let slots: Vec<usize> = self.alloc_slots.clone();
+                for slot in slots {
+                    self.dispatch_one(&mut q, now, slot, &global, &opts.train, 0)?;
+                }
+            }
+        }
+        q.push(now + t_cycle, Event::Boundary);
+
+        let mut records: Vec<CycleRecord> = Vec::with_capacity(cycles);
+        let mut barrier_buf: Vec<ArrivalMsg> = Vec::new();
+        // async per-cycle telemetry window
+        let mut window_s: Vec<u64> = Vec::new();
+        let mut window_losses: Vec<f32> = Vec::new();
+        let mut version: u64 = 0;
+
+        while records.len() < cycles {
+            let (t, ev) = q
+                .pop()
+                .ok_or_else(|| anyhow!("event queue drained after {} cycles", records.len()))?;
+            debug_assert!(t >= now - 1e-9, "time went backwards: {t} < {now}");
+            now = t;
+            self.stats.events += 1;
+            match ev {
+                Event::Arrival(msg) => {
+                    if !self.slots[msg.slot].alive {
+                        continue; // left while the upload was in flight
+                    }
+                    match opts.policy {
+                        EnginePolicy::Barrier => barrier_buf.push(msg),
+                        EnginePolicy::Async(agg) => {
+                            let s = version - msg.version_at_dispatch;
+                            if let (Some(g), Some(p)) = (global.as_mut(), msg.params.as_ref()) {
+                                agg.mix(g, p, s);
+                            }
+                            version += 1;
+                            self.stats.arrivals += 1;
+                            window_s.push(s);
+                            if msg.train_loss.is_finite() {
+                                window_losses.push(msg.train_loss);
+                            }
+                            self.dispatch_one(&mut q, now, msg.slot, &global, &opts.train, version)?;
+                        }
+                    }
+                }
+                Event::Redispatch { slot } => {
+                    if let EnginePolicy::Async(_) = opts.policy {
+                        self.dispatch_one(&mut q, now, slot, &global, &opts.train, version)?;
+                    }
+                }
+                Event::Join => {
+                    let joined = self.join(&mut q, now);
+                    if let (Some(slot), EnginePolicy::Async(_)) = (joined, opts.policy) {
+                        self.dispatch_one(&mut q, now, slot, &global, &opts.train, version)?;
+                    }
+                    // barrier mode: the newcomer enters at the next
+                    // boundary re-solve/dispatch.
+                    if self.churn.join_rate_per_s > 0.0 {
+                        let dt =
+                            exp_sample(&mut self.churn_rng, 1.0 / self.churn.join_rate_per_s);
+                        q.push(now + dt, Event::Join);
+                    }
+                }
+                Event::Leave { slot } => {
+                    if self.slots[slot].alive && self.alive_count() > self.min_learners() {
+                        self.slots[slot].alive = false;
+                        self.dirty = true;
+                        self.stats.leaves += 1;
+                    }
+                }
+                Event::Boundary => {
+                    let cycle = records.len();
+                    let arrived: usize;
+                    let train_loss: f32;
+                    let max_s: u64;
+                    let avg_s: f64;
+                    match opts.policy {
+                        EnginePolicy::Barrier => {
+                            // arrivals popped in time order; the
+                            // lock-step oracle aggregates in learner
+                            // order — restore it for bit-parity.
+                            barrier_buf.sort_by_key(|m| m.slot);
+                            let mut locals: Vec<ParamSet> = Vec::new();
+                            let mut agg_d: Vec<u64> = Vec::new();
+                            let mut agg_tau: Vec<u64> = Vec::new();
+                            let mut losses: Vec<f32> = Vec::new();
+                            let mut n_arrived = 0usize;
+                            for msg in barrier_buf.drain(..) {
+                                if !self.slots[msg.slot].alive {
+                                    continue;
+                                }
+                                n_arrived += 1;
+                                if msg.train_loss.is_finite() {
+                                    losses.push(msg.train_loss);
+                                }
+                                if let Some(p) = msg.params {
+                                    locals.push(p);
+                                    agg_d.push(msg.d);
+                                    agg_tau.push(msg.tau);
+                                }
+                            }
+                            self.stats.arrivals += n_arrived;
+                            if let Some(g) = global.as_mut() {
+                                if !locals.is_empty() {
+                                    *g = aggregate(self.aggregation, &locals, &agg_d, &agg_tau);
+                                }
+                            }
+                            arrived = n_arrived;
+                            train_loss = if losses.is_empty() {
+                                f32::NAN
+                            } else {
+                                losses.iter().sum::<f32>() / losses.len() as f32
+                            };
+                            let alloc = self.alloc.as_ref().expect("allocation solved");
+                            max_s = alloc.max_staleness();
+                            avg_s = alloc.avg_staleness();
+                        }
+                        EnginePolicy::Async(_) => {
+                            arrived = window_s.len();
+                            train_loss = if window_losses.is_empty() {
+                                f32::NAN
+                            } else {
+                                window_losses.iter().sum::<f32>() / window_losses.len() as f32
+                            };
+                            // event-time staleness of this window's
+                            // arrivals (server-version lag, not τ-lag)
+                            max_s = window_s.iter().copied().max().unwrap_or(0);
+                            avg_s = if window_s.is_empty() {
+                                0.0
+                            } else {
+                                window_s.iter().sum::<u64>() as f64 / window_s.len() as f64
+                            };
+                            window_s.clear();
+                            window_losses.clear();
+                        }
+                    }
+
+                    let (accuracy, val_loss) = if cycle % opts.train.eval_every == 0
+                        || cycle + 1 == cycles
+                    {
+                        match (&self.exec, global.as_ref()) {
+                            (ExecMode::Real { runtime, test, .. }, Some(g)) => {
+                                let ev = runtime.evaluate(g, test)?;
+                                (ev.accuracy, ev.mean_loss)
+                            }
+                            _ => (f64::NAN, f64::NAN),
+                        }
+                    } else {
+                        (f64::NAN, f64::NAN)
+                    };
+
+                    let alloc = self.alloc.as_ref().expect("allocation solved");
+                    records.push(CycleRecord {
+                        cycle,
+                        vtime_s: now,
+                        max_staleness: max_s,
+                        avg_staleness: avg_s,
+                        train_loss,
+                        accuracy,
+                        val_loss,
+                        utilization: alloc.mean_utilization(&self.alloc_costs, t_cycle),
+                        arrived,
+                        solve_ms: self.last_solve_ms,
+                    });
+                    if records.len() == cycles {
+                        break;
+                    }
+
+                    if let EnginePolicy::Barrier = opts.policy {
+                        if self.dirty || opts.train.reallocate_each_cycle {
+                            self.resolve()?;
+                        }
+                        self.dispatch_cycle(&mut q, now, &global, &opts.train)?;
+                    }
+                    q.push(now + t_cycle, Event::Boundary);
+                }
+            }
+        }
+        self.stats.final_alive = self.alive_count();
+        Ok(records)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ChurnConfig, ScenarioConfig};
+    use crate::coordinator::record_digest;
+
+    fn phantom_engine(k: usize, churn: ChurnConfig) -> EventEngine<'static> {
+        let scenario = ScenarioConfig::paper_default()
+            .with_learners(k)
+            .with_churn(churn)
+            .build();
+        EventEngine::new(
+            scenario,
+            AllocatorKind::Eta,
+            AggregationRule::FedAvg,
+            ExecMode::Phantom,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn phantom_barrier_produces_one_record_per_cycle() {
+        let mut engine = phantom_engine(8, ChurnConfig::disabled());
+        let opts = EngineOptions {
+            train: TrainOptions { cycles: 5, ..Default::default() },
+            ..Default::default()
+        };
+        let records = engine.run(&opts).unwrap();
+        assert_eq!(records.len(), 5);
+        for (c, r) in records.iter().enumerate() {
+            assert_eq!(r.cycle, c);
+            assert_eq!(r.arrived, 8);
+            assert!((r.vtime_s - 15.0 * (c + 1) as f64).abs() < 1e-9);
+        }
+        assert_eq!(engine.stats.arrivals, 40);
+        assert_eq!(engine.stats.joins, 0);
+        assert_eq!(engine.stats.final_alive, 8);
+    }
+
+    #[test]
+    fn churn_changes_the_fleet_and_stays_deterministic() {
+        let churn = ChurnConfig::new(0.2, 60.0);
+        let run = || {
+            let mut engine = phantom_engine(10, churn);
+            let opts = EngineOptions {
+                train: TrainOptions { cycles: 8, ..Default::default() },
+                ..Default::default()
+            };
+            let records = engine.run(&opts).unwrap();
+            (record_digest(&records), engine.stats)
+        };
+        let (da, sa) = run();
+        let (db, sb) = run();
+        assert_eq!(da, db, "churny run must be deterministic");
+        assert_eq!(sa, sb);
+        assert!(sa.joins > 0 || sa.leaves > 0, "churn produced no events: {sa:?}");
+        assert!(sa.resolves > 1, "fleet changes must trigger re-solves");
+    }
+
+    #[test]
+    fn async_policy_mixes_on_arrival() {
+        let scenario = ScenarioConfig::paper_default()
+            .with_learners(6)
+            .build();
+        let mut engine = EventEngine::new(
+            scenario,
+            AllocatorKind::Eta,
+            AggregationRule::FedAvg,
+            ExecMode::Phantom,
+        )
+        .unwrap();
+        let opts = EngineOptions {
+            train: TrainOptions { cycles: 4, ..Default::default() },
+            policy: EnginePolicy::Async(AsyncAggregator::default()),
+        };
+        let records = engine.run(&opts).unwrap();
+        assert_eq!(records.len(), 4);
+        // every learner keeps cycling: arrivals exceed one bare round
+        assert!(engine.stats.arrivals >= 6, "{:?}", engine.stats);
+        let total_arrived: usize = records.iter().map(|r| r.arrived).sum();
+        assert_eq!(total_arrived, engine.stats.arrivals);
+    }
+
+    #[test]
+    fn min_learners_floor_is_respected() {
+        // brutal churn: everyone tries to leave almost immediately
+        let churn = ChurnConfig { mean_lifetime_s: 0.5, ..ChurnConfig::disabled() };
+        let mut engine = phantom_engine(5, churn);
+        let opts = EngineOptions {
+            train: TrainOptions { cycles: 3, ..Default::default() },
+            ..Default::default()
+        };
+        let records = engine.run(&opts).unwrap();
+        assert_eq!(records.len(), 3);
+        assert!(engine.stats.final_alive >= 1);
+        assert_eq!(engine.stats.final_alive, 1, "everyone but the floor should leave");
+    }
+}

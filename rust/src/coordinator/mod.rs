@@ -14,12 +14,24 @@
 //!    (eq.-3 charge `t_k^R`), then evaluate the new global model.
 //!
 //! All per-learner work is virtual-time accounted with eq. (5); the
-//! PJRT execution itself is the *numerics*, not the clock.
+//! runtime execution itself is the *numerics*, not the clock.
+//!
+//! Two engines drive the loop:
+//!
+//! * [`orchestrator::Orchestrator`] — the original lock-step
+//!   global-cycle loop (and the differential-testing oracle);
+//! * [`engine::EventEngine`] — the event-driven simulation engine:
+//!   dispatch, upload arrival, churn (join/leave) and aggregation as
+//!   timestamped events on [`crate::sim::EventQueue`], scaling to
+//!   thousands of learners with optional per-arrival
+//!   staleness-weighted asynchronous aggregation.
 
+pub mod engine;
 pub mod faults;
 pub mod learner;
 pub mod orchestrator;
 
+pub use engine::{EngineOptions, EnginePolicy, EngineStats, EventEngine, ExecMode};
 pub use faults::{FaultModel, FaultOutcome};
 pub use learner::Learner;
-pub use orchestrator::{CycleRecord, Orchestrator, TrainOptions};
+pub use orchestrator::{record_digest, CycleRecord, Orchestrator, TrainOptions};

@@ -61,6 +61,31 @@ pub struct CycleRecord {
     pub solve_ms: f64,
 }
 
+/// Canonical text form of a [`CycleRecord`] stream for differential /
+/// determinism testing. Every simulation-derived field participates;
+/// `solve_ms` is excluded because it is host wall-clock, the one field
+/// that legitimately varies between identical runs. Floats are printed
+/// with `{:?}` (shortest round-trip representation), so two digests are
+/// equal iff the streams are bit-identical.
+pub fn record_digest(records: &[CycleRecord]) -> String {
+    let mut out = String::new();
+    for r in records {
+        out.push_str(&format!(
+            "cycle={} vtime={:?} max_s={} avg_s={:?} loss={:?} acc={:?} vloss={:?} util={:?} arrived={}\n",
+            r.cycle,
+            r.vtime_s,
+            r.max_staleness,
+            r.avg_staleness,
+            r.train_loss,
+            r.accuracy,
+            r.val_loss,
+            r.utilization,
+            r.arrived,
+        ));
+    }
+    out
+}
+
 /// The asynchronous-MEL orchestrator.
 pub struct Orchestrator<'rt> {
     pub scenario: Scenario,

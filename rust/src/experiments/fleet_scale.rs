@@ -1,0 +1,171 @@
+//! Fleet-scale sweep — the event engine under load.
+//!
+//! Runs the event-driven engine in phantom (timing/staleness-only) mode
+//! across fleet sizes K ∈ {10, 100, 1000, 5000, …} with learner churn,
+//! reporting event throughput, churn volume and staleness per point.
+//! This is the scaling story the lock-step loop cannot tell: its cost
+//! per cycle is O(K · training), while the engine's bookkeeping is
+//! O(events · log K) and runs a 5000-node churny fleet in milliseconds.
+
+use anyhow::Result;
+
+use crate::allocation::AllocatorKind;
+use crate::config::{ChurnConfig, ScenarioConfig};
+use crate::coordinator::{EngineOptions, EventEngine, ExecMode, TrainOptions};
+use crate::metrics::{fmt_f, Table};
+
+/// One (K) point of the sweep.
+#[derive(Debug, Clone)]
+pub struct FleetRow {
+    pub k: usize,
+    pub cycles: usize,
+    pub events: u64,
+    pub joins: usize,
+    pub leaves: usize,
+    pub arrivals: usize,
+    pub resolves: usize,
+    pub final_alive: usize,
+    /// Mean per-cycle max staleness across the run.
+    pub max_staleness: f64,
+    /// Fraction of dispatch attempts whose update reached the server
+    /// (`stats.arrivals / stats.dispatched`; < 1 under churn/faults).
+    pub arrival_ratio: f64,
+    /// Host wall-clock for the whole run (ms).
+    pub wall_ms: f64,
+    /// Events processed per wall-clock second.
+    pub events_per_s: f64,
+}
+
+/// Sweep parameters.
+#[derive(Debug, Clone)]
+pub struct FleetScaleParams {
+    pub base: ScenarioConfig,
+    pub ks: Vec<usize>,
+    pub cycles: usize,
+    pub scheme: AllocatorKind,
+    pub churn: ChurnConfig,
+}
+
+impl Default for FleetScaleParams {
+    fn default() -> Self {
+        Self {
+            base: ScenarioConfig::paper_default(),
+            ks: vec![10, 100, 1000, 5000],
+            cycles: 8,
+            // ETA scales O(K) per solve; the adaptive allocators are
+            // exercised at the smaller K by the experiment callers.
+            scheme: AllocatorKind::Eta,
+            churn: ChurnConfig::new(1.0, 120.0),
+        }
+    }
+}
+
+/// Run the sweep.
+pub fn run(params: &FleetScaleParams) -> Result<Vec<FleetRow>> {
+    let mut rows = Vec::new();
+    for &k in &params.ks {
+        let scenario = params
+            .base
+            .clone()
+            .with_learners(k)
+            .with_churn(params.churn)
+            .build();
+        let mut engine = EventEngine::new(
+            scenario,
+            params.scheme,
+            crate::aggregation::AggregationRule::FedAvg,
+            ExecMode::Phantom,
+        )?;
+        let opts = EngineOptions {
+            train: TrainOptions { cycles: params.cycles, ..Default::default() },
+            ..Default::default()
+        };
+        let t0 = std::time::Instant::now();
+        let records = engine.run(&opts)?;
+        let wall = t0.elapsed().as_secs_f64();
+        let stats = engine.stats;
+        let max_staleness = records
+            .iter()
+            .map(|r| r.max_staleness as f64)
+            .sum::<f64>()
+            / records.len().max(1) as f64;
+        rows.push(FleetRow {
+            k,
+            cycles: records.len(),
+            events: stats.events,
+            joins: stats.joins,
+            leaves: stats.leaves,
+            arrivals: stats.arrivals,
+            resolves: stats.resolves,
+            final_alive: stats.final_alive,
+            max_staleness,
+            arrival_ratio: stats.arrivals as f64 / stats.dispatched.max(1) as f64,
+            wall_ms: wall * 1e3,
+            events_per_s: stats.events as f64 / wall.max(1e-9),
+        });
+    }
+    Ok(rows)
+}
+
+/// Render as a table.
+pub fn table(rows: &[FleetRow]) -> Table {
+    let mut t = Table::new(&[
+        "K", "cycles", "events", "joins", "leaves", "arrivals", "arrive_ratio", "resolves",
+        "alive", "max_stale", "wall_ms", "events/s",
+    ]);
+    for r in rows {
+        t.row(&[
+            r.k.to_string(),
+            r.cycles.to_string(),
+            r.events.to_string(),
+            r.joins.to_string(),
+            r.leaves.to_string(),
+            r.arrivals.to_string(),
+            fmt_f(r.arrival_ratio, 3),
+            r.resolves.to_string(),
+            r.final_alive.to_string(),
+            fmt_f(r.max_staleness, 2),
+            fmt_f(r.wall_ms, 1),
+            fmt_f(r.events_per_s, 0),
+        ]);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn small_sweep_produces_rows() {
+        let params = FleetScaleParams {
+            ks: vec![5, 20],
+            cycles: 3,
+            churn: ChurnConfig::new(0.5, 90.0),
+            ..Default::default()
+        };
+        let rows = run(&params).unwrap();
+        assert_eq!(rows.len(), 2);
+        for r in &rows {
+            assert_eq!(r.cycles, 3);
+            assert!(r.events > 0);
+            assert!(r.final_alive >= 1);
+        }
+        assert_eq!(table(&rows).num_rows(), 2);
+    }
+
+    #[test]
+    fn bigger_fleets_process_more_events() {
+        let params = FleetScaleParams {
+            ks: vec![10, 200],
+            cycles: 2,
+            churn: ChurnConfig::disabled(),
+            ..Default::default()
+        };
+        let rows = run(&params).unwrap();
+        assert!(rows[1].events > rows[0].events);
+        // no churn: every dispatched update arrives
+        assert_eq!(rows[0].arrivals, 2 * 10);
+        assert_eq!(rows[1].arrivals, 2 * 200);
+    }
+}

@@ -5,10 +5,14 @@
 //! * [`fig3`] — validation accuracy vs global cycles for
 //!   `K ∈ {10, 15, 20}` at `T = 15` s (Fig. 3 + §V-C quoted gains);
 //! * [`ablation`] — the (d_l, d_u)-bounds sensitivity study (§III
-//!   motivates the bounds; ABL-1 in DESIGN.md).
+//!   motivates the bounds; ABL-1 in DESIGN.md);
+//! * [`fleet_scale`] — event-engine scaling sweep: K ∈ {10…5000}
+//!   learners with churn, phantom numerics (beyond the paper — the
+//!   ROADMAP's fleet-scale direction).
 //!
 //! Benches and examples call these; the CLI exposes them as subcommands.
 
 pub mod ablation;
 pub mod fig2;
 pub mod fig3;
+pub mod fleet_scale;

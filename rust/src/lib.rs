@@ -18,28 +18,44 @@
 //!
 //! | module | role |
 //! |---|---|
-//! | [`sim`] | deterministic RNG + virtual clock substrate |
-//! | [`config`] | scenario configuration, presets, JSON I/O |
+//! | [`sim`] | deterministic RNG, virtual clock, stable-order event queue |
+//! | [`config`] | scenario configuration (incl. engine + churn knobs), presets, JSON I/O |
 //! | [`channel`] | 802.11-like indoor wireless link simulator |
 //! | [`device`] | heterogeneous edge-device profiles |
 //! | [`costmodel`] | eq. (1)–(5): per-learner time coefficients `C²,C¹,C⁰` |
 //! | [`solver`] | numeric substrate: projected gradient, augmented Lagrangian, KKT |
 //! | [`allocation`] | the paper's algorithms + baselines (relaxed, SAI, exact, ETA, sync) |
 //! | [`staleness`] | staleness metrics (eq. 6, 10, 13) |
-//! | [`aggregation`] | federated model aggregation rules |
+//! | [`aggregation`] | cycle aggregation rules + staleness-weighted async server updates |
 //! | [`data`] | synthetic MNIST-like dataset, sharding, minibatching |
-//! | [`runtime`] | PJRT executor for the AOT-compiled L2/L1 artifacts |
-//! | [`coordinator`] | the async-MEL orchestrator (global-cycle loop) |
+//! | [`runtime`] | model executor: native pure-Rust backend (default) or PJRT (`pjrt` feature) |
+//! | [`coordinator`] | lock-step orchestrator **and** the event-driven fleet engine |
 //! | [`metrics`] | CSV writers, table printers, run summaries |
-//! | [`experiments`] | drivers regenerating every paper figure/table |
+//! | [`experiments`] | paper figures/tables + the fleet-scale engine sweep |
+//!
+//! ## The two coordinator engines
+//!
+//! [`coordinator::Orchestrator`] is the paper-faithful lock-step loop:
+//! one global cycle `T` per iteration, all learners aggregated at the
+//! barrier. [`coordinator::EventEngine`] rebuilds the same semantics on
+//! a deterministic event queue — dispatch, upload arrival, churn
+//! (join/leave mid-run) and aggregation are timestamped events — which
+//! unlocks thousands-of-learners fleets and per-arrival
+//! staleness-weighted asynchronous aggregation
+//! ([`aggregation::AsyncAggregator`], after Xie et al. 1903.03934).
+//! On churn-free scenarios the barrier policy reproduces the lock-step
+//! `CycleRecord` stream byte-for-byte, so the old loop doubles as a
+//! differential-testing oracle (`rust/tests/engine_determinism.rs`).
 //!
 //! ## In-tree infrastructure substrates
 //!
-//! This build environment is fully offline with a registry that carries
-//! only the `xla` crate chain, so the usual ecosystem crates are
-//! reimplemented in-tree: [`json`] (serde_json stand-in), [`cli`]
-//! (clap stand-in), [`benchkit`] (criterion stand-in), [`testkit`]
-//! (proptest stand-in).
+//! This build environment is fully offline, so the usual ecosystem
+//! crates are reimplemented in-tree: `anyhow` (vendor/anyhow workspace
+//! crate), [`json`] (serde_json stand-in), [`cli`] (clap stand-in),
+//! [`benchkit`] (criterion stand-in), [`testkit`] (proptest stand-in).
+//! The `xla`-backed PJRT executor is gated behind the off-by-default
+//! `pjrt` cargo feature; the default build uses the pure-Rust
+//! [`runtime::native`] backend with identical semantics.
 
 pub mod aggregation;
 pub mod allocation;

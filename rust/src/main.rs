@@ -8,6 +8,8 @@
 //! asyncmel fig2 [--seeds 5] [--csv f]    # staleness sweep (paper Fig. 2)
 //! asyncmel fig3 [--cycles 12] [--ks 10,15,20] [--samples 60000]
 //! asyncmel train --k 10 --scheme relaxed --cycles 10
+//! asyncmel train --engine event --async --churn-join 0.5 --churn-life 120
+//! asyncmel fleet --ks 10,100,1000,5000   # event-engine scaling sweep
 //! asyncmel ablation [--seeds 5]          # bounds sensitivity (ABL-1)
 //! ```
 //!
@@ -16,24 +18,63 @@
 
 use anyhow::{bail, Result};
 
-use asyncmel::aggregation::AggregationRule;
+use asyncmel::aggregation::{AggregationRule, AsyncAggregator, StalenessDecay};
 use asyncmel::allocation::{make_allocator, AllocatorKind};
 use asyncmel::cli::Args;
-use asyncmel::config::ScenarioConfig;
-use asyncmel::coordinator::{Orchestrator, TrainOptions};
+use asyncmel::config::{ChurnConfig, EngineKind, ScenarioConfig};
+use asyncmel::coordinator::{
+    EngineOptions, EnginePolicy, EventEngine, ExecMode, Orchestrator, TrainOptions,
+};
 use asyncmel::data::{synth, SynthConfig};
-use asyncmel::experiments::{ablation, fig2, fig3};
+use asyncmel::experiments::{ablation, fig2, fig3, fleet_scale};
 use asyncmel::metrics::{fmt_f, Table};
 use asyncmel::runtime::{default_artifacts_dir, Runtime};
 
-const USAGE: &str = "usage: asyncmel <info|solve|fig2|fig3|train|ablation> [flags]
+const USAGE: &str = "usage: asyncmel <info|solve|fig2|fig3|train|fleet|ablation> [flags]
   info                               environment + artifact status
   solve    --k N --t SECS            compare all allocation schemes
   fig2     --seeds N --csv PATH      staleness vs K sweep (paper Fig. 2)
   fig3     --cycles N --ks 10,15,20 --samples D --csv PATH
   train    --k N --t SECS --scheme S --aggregation A --cycles N --lr F --samples D
+           --engine lockstep|event   coordinator engine (default: config)
+           --async [--alpha F]       event engine: staleness-weighted async aggregation
+           --churn-join R --churn-life S   event engine: joins/s + mean lifetime (s)
+  fleet    --ks 10,100,1000,5000 --cycles N --scheme S
+           --churn-join R --churn-life S --csv PATH
+                                     event-engine scaling sweep (phantom numerics)
   ablation --seeds N --csv PATH      batch-bounds sensitivity (ABL-1)
 global: --config PATH (sparse scenario JSON override)";
+
+/// Paper model stack for artifact-free runs.
+const PAPER_DIMS: [usize; 5] = [784, 300, 124, 60, 10];
+
+/// Load the compiled artifacts if present, otherwise fall back to the
+/// hermetic native executor on the paper's model stack.
+fn load_runtime() -> Runtime {
+    match Runtime::load(default_artifacts_dir()) {
+        Ok(rt) => rt,
+        Err(e) => {
+            eprintln!("note: artifacts not loaded ({e:#}); using the native executor");
+            Runtime::native(&PAPER_DIMS, 128, 512)
+        }
+    }
+}
+
+/// Churn overrides from the CLI on top of the scenario config.
+fn churn_from_args(base: ChurnConfig, args: &Args) -> Result<ChurnConfig> {
+    let mut churn = base;
+    churn.join_rate_per_s = args.get_or("churn-join", churn.join_rate_per_s)?;
+    churn.mean_lifetime_s = args.get_or("churn-life", churn.mean_lifetime_s)?;
+    churn.max_learners = args.get_or("churn-max", churn.max_learners)?;
+    churn.min_learners = args.get_or("churn-min", churn.min_learners)?;
+    if churn.join_rate_per_s < 0.0 {
+        bail!("--churn-join must be >= 0 (joins per second)");
+    }
+    if churn.mean_lifetime_s < 0.0 {
+        bail!("--churn-life must be >= 0 (seconds)");
+    }
+    Ok(churn)
+}
 
 fn base_config(args: &Args) -> Result<ScenarioConfig> {
     Ok(match args.get("config") {
@@ -131,7 +172,7 @@ fn cmd_fig3(base: ScenarioConfig, args: &Args) -> Result<()> {
         "schemes",
         vec![AllocatorKind::Relaxed, AllocatorKind::Sync, AllocatorKind::Eta],
     )?;
-    let runtime = Runtime::load(default_artifacts_dir())?;
+    let runtime = load_runtime();
     let base = base.with_total_samples(samples);
     let params = fig3::Fig3Params {
         data: SynthConfig {
@@ -163,26 +204,76 @@ fn cmd_train(base: ScenarioConfig, args: &Args) -> Result<()> {
     let cycles: usize = args.get_or("cycles", 10)?;
     let lr: f32 = args.get_or("lr", 0.01)?;
     let samples: u64 = args.get_or("samples", 60_000)?;
+    let mut engine: EngineKind = args.get_or("engine", base.engine)?;
+    if args.has("async") && engine == EngineKind::Lockstep {
+        // --async only exists on the event engine; asking for it implies it
+        eprintln!("note: --async implies --engine event");
+        engine = EngineKind::Event;
+    }
+    let churn = churn_from_args(base.churn, args)?;
+    let churn_flags_given = ["churn-join", "churn-life", "churn-max", "churn-min"]
+        .iter()
+        .any(|k| args.get(k).is_some());
+    if churn_flags_given && engine == EngineKind::Lockstep {
+        bail!("churn flags require --engine event (the lock-step orchestrator has no churn model)");
+    }
 
-    let runtime = Runtime::load(default_artifacts_dir())?;
+    let runtime = load_runtime();
     let scenario = base
         .with_learners(k)
         .with_cycle(t)
         .with_total_samples(samples)
+        .with_churn(churn)
         .build();
     let ds = synth::generate(&SynthConfig {
         train: samples as usize,
         test: (samples as usize / 6).max(512),
         ..SynthConfig::default()
     });
-    let mut orch =
-        Orchestrator::new(scenario, scheme, aggregation, &runtime, ds.train, ds.test)?;
-    let records = orch.run(&TrainOptions {
+    let train_opts = TrainOptions {
         cycles,
         lr,
         eval_every: 1,
         reallocate_each_cycle: false,
-    })?;
+    };
+    let records = match engine {
+        EngineKind::Lockstep => {
+            let mut orch =
+                Orchestrator::new(scenario, scheme, aggregation, &runtime, ds.train, ds.test)?;
+            orch.run(&train_opts)?
+        }
+        EngineKind::Event => {
+            let policy = if args.has("async") {
+                let alpha: f64 = args.get_or("alpha", 0.6)?;
+                if !(alpha > 0.0 && alpha <= 1.0) {
+                    bail!("--alpha must be in (0, 1], got {alpha}");
+                }
+                EnginePolicy::Async(AsyncAggregator::new(
+                    alpha,
+                    StalenessDecay::Polynomial { a: 0.5 },
+                ))
+            } else {
+                EnginePolicy::Barrier
+            };
+            let mut eng = EventEngine::new(
+                scenario,
+                scheme,
+                aggregation,
+                ExecMode::Real { runtime: &runtime, train: ds.train, test: ds.test },
+            )?;
+            let recs = eng.run(&EngineOptions { train: train_opts, policy })?;
+            eprintln!(
+                "engine stats: {} events, {} arrivals, {} joins, {} leaves, {} re-solves, {} alive",
+                eng.stats.events,
+                eng.stats.arrivals,
+                eng.stats.joins,
+                eng.stats.leaves,
+                eng.stats.resolves,
+                eng.stats.final_alive
+            );
+            recs
+        }
+    };
     let mut table = Table::new(&["cycle", "vtime_s", "train_loss", "accuracy", "max_stale", "util"]);
     for r in &records {
         table.row(&[
@@ -195,6 +286,25 @@ fn cmd_train(base: ScenarioConfig, args: &Args) -> Result<()> {
         ]);
     }
     println!("{}", table.render());
+    Ok(())
+}
+
+fn cmd_fleet(base: ScenarioConfig, args: &Args) -> Result<()> {
+    let ks: Vec<usize> = args.get_list_or("ks", vec![10, 100, 1000, 5000])?;
+    let cycles: usize = args.get_or("cycles", 8)?;
+    let scheme: AllocatorKind = args.get_or("scheme", AllocatorKind::Eta)?;
+    // honor churn from --config when present; otherwise default to a
+    // visibly churny fleet (the point of the sweep)
+    let churn_base = if base.churn.is_enabled() { base.churn } else { ChurnConfig::new(1.0, 120.0) };
+    let churn = churn_from_args(churn_base, args)?;
+    let params = fleet_scale::FleetScaleParams { base, ks, cycles, scheme, churn };
+    let rows = fleet_scale::run(&params)?;
+    let table = fleet_scale::table(&rows);
+    println!("{}", table.render());
+    if let Some(path) = args.get("csv") {
+        table.save_csv(path)?;
+        println!("csv -> {path}");
+    }
     Ok(())
 }
 
@@ -227,6 +337,7 @@ fn main() -> Result<()> {
         Some("fig2") => cmd_fig2(base, &args),
         Some("fig3") => cmd_fig3(base, &args),
         Some("train") => cmd_train(base, &args),
+        Some("fleet") => cmd_fleet(base, &args),
         Some("ablation") => cmd_ablation(base, &args),
         Some(other) => bail!("unknown subcommand '{other}'\n{USAGE}"),
         None => {

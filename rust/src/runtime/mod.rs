@@ -1,35 +1,50 @@
-//! PJRT executor — the only place the AOT artifacts are touched.
+//! Model executor — dual-backend: pure-Rust native (default) or PJRT.
 //!
-//! Load path (per /opt/xla-example/load_hlo): HLO **text** →
-//! `HloModuleProto::from_text_file` → `XlaComputation` →
-//! `PjRtClient::cpu().compile` — once, at startup. The hot path is
-//! [`Runtime::train_step`] / [`Runtime::eval_batch`]: build input
-//! literals, execute, unpack the output tuple. Python never runs here.
+//! The hot path is [`Runtime::train_step`] / [`Runtime::evaluate`],
+//! consumed by the coordinator layer. Two interchangeable backends:
+//!
+//! * **native** (default): [`native::NativeExecutor`], an in-process
+//!   f32 implementation of the same ReLU-MLP + softmax-CE train/eval
+//!   steps the AOT artifacts encode. Hermetic — no registry, no
+//!   artifact files. Construct directly with [`Runtime::native`], or
+//!   let [`Runtime::load`] build it from an artifact `manifest.json`.
+//! * **pjrt** (`--features pjrt`, requires the external `xla = "0.1.6"`
+//!   crate): the original compiled-HLO path (per /opt/xla-example/
+//!   load_hlo): HLO **text** → `HloModuleProto::from_text_file` →
+//!   `XlaComputation` → `PjRtClient::cpu().compile` — once, at startup.
+//!   Python never runs here.
 
+pub mod native;
 pub mod spec;
 
 use std::path::{Path, PathBuf};
 
-use anyhow::{ensure, Context, Result};
+use anyhow::{ensure, Result};
+#[cfg(feature = "pjrt")]
+use anyhow::Context;
 
 use crate::aggregation::ParamSet;
 use crate::data::{Batch, Dataset, Minibatches};
 use crate::sim::Rng;
 pub use spec::Manifest;
 
-/// Compiled artifacts + PJRT client.
+/// Compiled artifacts (or the native engine) behind one interface.
 pub struct Runtime {
-    client: xla::PjRtClient,
-    train_exe: xla::PjRtLoadedExecutable,
-    eval_exe: xla::PjRtLoadedExecutable,
+    backend: Backend,
     pub manifest: Manifest,
     pub artifacts_dir: PathBuf,
+}
+
+enum Backend {
+    Native(native::NativeExecutor),
+    #[cfg(feature = "pjrt")]
+    Pjrt(PjrtBackend),
 }
 
 impl std::fmt::Debug for Runtime {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         f.debug_struct("Runtime")
-            .field("platform", &self.client.platform_name())
+            .field("platform", &self.platform())
             .field("artifacts_dir", &self.artifacts_dir)
             .finish()
     }
@@ -43,43 +58,39 @@ pub struct EvalResult {
     pub samples: u64,
 }
 
-fn literal_from_f32(data: &[f32], shape: &[usize]) -> Result<xla::Literal> {
-    let n: usize = shape.iter().product::<usize>().max(1);
-    ensure!(n == data.len(), "literal data {} != shape {:?}", data.len(), shape);
-    if shape.is_empty() {
-        return Ok(xla::Literal::scalar(data[0]));
-    }
-    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
-    xla::Literal::vec1(data)
-        .reshape(&dims)
-        .context("reshaping literal")
-}
-
 impl Runtime {
-    /// Load and compile both entry points from `artifacts/`.
+    /// Load artifacts from `dir`: the manifest always; under the `pjrt`
+    /// feature also the compiled HLO entry points. The default build
+    /// runs the native executor on the manifest's `layer_dims`.
     pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
         let dir = dir.as_ref().to_path_buf();
         let manifest = Manifest::load(&dir)?;
-        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
-        let load = |file: &str| -> Result<xla::PjRtLoadedExecutable> {
-            let path = dir.join(file);
-            let proto = xla::HloModuleProto::from_text_file(
-                path.to_str().expect("utf-8 path"),
-            )
-            .with_context(|| format!("parsing HLO text {}", path.display()))?;
-            let comp = xla::XlaComputation::from_proto(&proto);
-            client
-                .compile(&comp)
-                .with_context(|| format!("compiling {}", path.display()))
-        };
-        let train_exe = load(&manifest.entries.train_step.file)?;
-        let eval_exe = load(&manifest.entries.eval_step.file)?;
-        Ok(Self { client, train_exe, eval_exe, manifest, artifacts_dir: dir })
+        #[cfg(feature = "pjrt")]
+        let backend = Backend::Pjrt(PjrtBackend::load(&dir, &manifest)?);
+        #[cfg(not(feature = "pjrt"))]
+        let backend = Backend::Native(native::NativeExecutor::new(&manifest.layer_dims));
+        Ok(Self { backend, manifest, artifacts_dir: dir })
     }
 
-    /// PJRT platform string (diagnostics).
+    /// Build an artifact-free native runtime for the given model stack —
+    /// the path tests and the event engine use to run real numerics
+    /// without `make artifacts`.
+    pub fn native(layer_dims: &[usize], train_batch: usize, eval_batch: usize) -> Self {
+        let manifest = Manifest::native(layer_dims, train_batch, eval_batch);
+        Self {
+            backend: Backend::Native(native::NativeExecutor::new(layer_dims)),
+            manifest,
+            artifacts_dir: PathBuf::from("<native>"),
+        }
+    }
+
+    /// Backend platform string (diagnostics).
     pub fn platform(&self) -> String {
-        self.client.platform_name()
+        match &self.backend {
+            Backend::Native(_) => "native-cpu".to_string(),
+            #[cfg(feature = "pjrt")]
+            Backend::Pjrt(p) => p.client.platform_name(),
+        }
     }
 
     /// He-initialized parameter set matching the manifest shapes.
@@ -100,8 +111,122 @@ impl Runtime {
             .collect()
     }
 
-    fn param_literals(&self, params: &ParamSet) -> Result<Vec<xla::Literal>> {
-        let shapes = self.manifest.param_shapes();
+    /// One SGD minibatch step: returns the updated parameters + loss.
+    pub fn train_step(
+        &self,
+        params: &ParamSet,
+        batch: &Batch,
+        lr: f32,
+    ) -> Result<(ParamSet, f32)> {
+        match &self.backend {
+            Backend::Native(exec) => Ok(exec.train_step(params, batch, lr)),
+            #[cfg(feature = "pjrt")]
+            Backend::Pjrt(p) => p.train_step(&self.manifest, params, batch, lr),
+        }
+    }
+
+    /// `tau` local epochs of minibatch SGD over a shard; returns the
+    /// final local parameters and the last epoch's mean loss.
+    pub fn train_epochs(
+        &self,
+        params: &ParamSet,
+        data: &Dataset,
+        shard: &[u32],
+        tau: u64,
+        lr: f32,
+    ) -> Result<(ParamSet, f32)> {
+        let mut local = params.clone();
+        let mut last_loss = f32::NAN;
+        for _epoch in 0..tau {
+            let mut loss_sum = 0.0f64;
+            let mut batches = 0usize;
+            for batch in Minibatches::new(data, shard, self.manifest.train_batch) {
+                let (next, loss) = self.train_step(&local, &batch, lr)?;
+                local = next;
+                loss_sum += loss as f64;
+                batches += 1;
+            }
+            if batches > 0 {
+                last_loss = (loss_sum / batches as f64) as f32;
+            }
+        }
+        Ok((local, last_loss))
+    }
+
+    /// One eval minibatch: (correct, loss_sum, mask_sum).
+    fn eval_batch_raw(&self, params: &ParamSet, batch: &Batch) -> Result<(f64, f64, f64)> {
+        match &self.backend {
+            Backend::Native(exec) => Ok(exec.eval_batch(params, batch)),
+            #[cfg(feature = "pjrt")]
+            Backend::Pjrt(p) => p.eval_batch(&self.manifest, params, batch),
+        }
+    }
+
+    /// Streamed evaluation over a whole dataset.
+    pub fn evaluate(&self, params: &ParamSet, data: &Dataset) -> Result<EvalResult> {
+        let idx: Vec<u32> = (0..data.len() as u32).collect();
+        let mut correct = 0.0;
+        let mut loss = 0.0;
+        let mut n = 0.0;
+        for batch in Minibatches::new(data, &idx, self.manifest.eval_batch) {
+            let (c, l, m) = self.eval_batch_raw(params, &batch)?;
+            correct += c;
+            loss += l;
+            n += m;
+        }
+        ensure!(n > 0.0, "empty evaluation set");
+        Ok(EvalResult {
+            accuracy: correct / n,
+            mean_loss: loss / n,
+            samples: n as u64,
+        })
+    }
+}
+
+/// The compiled-HLO PJRT backend (original execution path).
+#[cfg(feature = "pjrt")]
+struct PjrtBackend {
+    client: xla::PjRtClient,
+    train_exe: xla::PjRtLoadedExecutable,
+    eval_exe: xla::PjRtLoadedExecutable,
+}
+
+#[cfg(feature = "pjrt")]
+fn literal_from_f32(data: &[f32], shape: &[usize]) -> Result<xla::Literal> {
+    let n: usize = shape.iter().product::<usize>().max(1);
+    ensure!(n == data.len(), "literal data {} != shape {:?}", data.len(), shape);
+    if shape.is_empty() {
+        return Ok(xla::Literal::scalar(data[0]));
+    }
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    xla::Literal::vec1(data)
+        .reshape(&dims)
+        .context("reshaping literal")
+}
+
+#[cfg(feature = "pjrt")]
+impl PjrtBackend {
+    /// Load and compile both entry points from the artifact dir.
+    fn load(dir: &Path, manifest: &Manifest) -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let load = |file: &str| -> Result<xla::PjRtLoadedExecutable> {
+            let path = dir.join(file);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().expect("utf-8 path"),
+            )
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            client
+                .compile(&comp)
+                .with_context(|| format!("compiling {}", path.display()))
+        };
+        let train_exe = load(&manifest.entries.train_step.file)?;
+        let eval_exe = load(&manifest.entries.eval_step.file)?;
+        Ok(Self { client, train_exe, eval_exe })
+    }
+
+    fn param_literals(&self, manifest: &Manifest, params: &ParamSet) -> Result<Vec<xla::Literal>> {
+        let shapes = manifest.param_shapes();
         ensure!(params.len() == shapes.len(), "param tensor count mismatch");
         params
             .iter()
@@ -139,18 +264,17 @@ impl Runtime {
         Ok(out[0][0].to_literal_sync()?)
     }
 
-    /// One SGD minibatch step: returns the updated parameters + loss.
-    pub fn train_step(
+    fn train_step(
         &self,
+        manifest: &Manifest,
         params: &ParamSet,
         batch: &Batch,
         lr: f32,
     ) -> Result<(ParamSet, f32)> {
-        let m = &self.manifest;
-        let b = m.train_batch;
-        let f = m.num_features();
-        let c = m.num_classes();
-        let mut inputs = self.param_literals(params)?;
+        let b = manifest.train_batch;
+        let f = manifest.num_features();
+        let c = manifest.num_classes();
+        let mut inputs = self.param_literals(manifest, params)?;
         inputs.push(literal_from_f32(&batch.x, &[b, f])?);
         inputs.push(literal_from_f32(&batch.y_onehot, &[b, c])?);
         inputs.push(literal_from_f32(&batch.mask, &[b])?);
@@ -161,53 +285,28 @@ impl Runtime {
             .context("executing train_step")?;
         let outs = result.to_tuple().context("unpacking train_step tuple")?;
         ensure!(
-            outs.len() == m.num_param_tensors + 1,
+            outs.len() == manifest.num_param_tensors + 1,
             "train_step returned {} outputs",
             outs.len()
         );
-        let mut new_params: ParamSet = Vec::with_capacity(m.num_param_tensors);
-        for lit in &outs[..m.num_param_tensors] {
+        let mut new_params: ParamSet = Vec::with_capacity(manifest.num_param_tensors);
+        for lit in &outs[..manifest.num_param_tensors] {
             new_params.push(lit.to_vec::<f32>()?);
         }
-        let loss = outs[m.num_param_tensors].to_vec::<f32>()?[0];
+        let loss = outs[manifest.num_param_tensors].to_vec::<f32>()?[0];
         Ok((new_params, loss))
     }
 
-    /// `tau` local epochs of minibatch SGD over a shard; returns the
-    /// final local parameters and the last epoch's mean loss.
-    pub fn train_epochs(
+    fn eval_batch(
         &self,
+        manifest: &Manifest,
         params: &ParamSet,
-        data: &Dataset,
-        shard: &[u32],
-        tau: u64,
-        lr: f32,
-    ) -> Result<(ParamSet, f32)> {
-        let mut local = params.clone();
-        let mut last_loss = f32::NAN;
-        for _epoch in 0..tau {
-            let mut loss_sum = 0.0f64;
-            let mut batches = 0usize;
-            for batch in Minibatches::new(data, shard, self.manifest.train_batch) {
-                let (next, loss) = self.train_step(&local, &batch, lr)?;
-                local = next;
-                loss_sum += loss as f64;
-                batches += 1;
-            }
-            if batches > 0 {
-                last_loss = (loss_sum / batches as f64) as f32;
-            }
-        }
-        Ok((local, last_loss))
-    }
-
-    /// One eval minibatch: (correct, loss_sum, mask_sum).
-    fn eval_batch_raw(&self, params: &ParamSet, batch: &Batch) -> Result<(f64, f64, f64)> {
-        let m = &self.manifest;
-        let b = m.eval_batch;
-        let f = m.num_features();
-        let c = m.num_classes();
-        let mut inputs = self.param_literals(params)?;
+        batch: &Batch,
+    ) -> Result<(f64, f64, f64)> {
+        let b = manifest.eval_batch;
+        let f = manifest.num_features();
+        let c = manifest.num_classes();
+        let mut inputs = self.param_literals(manifest, params)?;
         inputs.push(literal_from_f32(&batch.x, &[b, f])?);
         inputs.push(literal_from_f32(&batch.y_onehot, &[b, c])?);
         inputs.push(literal_from_f32(&batch.mask, &[b])?);
@@ -222,26 +321,6 @@ impl Runtime {
             outs[2].to_vec::<f32>()?[0] as f64,
         ))
     }
-
-    /// Streamed evaluation over a whole dataset.
-    pub fn evaluate(&self, params: &ParamSet, data: &Dataset) -> Result<EvalResult> {
-        let idx: Vec<u32> = (0..data.len() as u32).collect();
-        let mut correct = 0.0;
-        let mut loss = 0.0;
-        let mut n = 0.0;
-        for batch in Minibatches::new(data, &idx, self.manifest.eval_batch) {
-            let (c, l, m) = self.eval_batch_raw(params, &batch)?;
-            correct += c;
-            loss += l;
-            n += m;
-        }
-        ensure!(n > 0.0, "empty evaluation set");
-        Ok(EvalResult {
-            accuracy: correct / n,
-            mean_loss: loss / n,
-            samples: n as u64,
-        })
-    }
 }
 
 /// Default artifact directory: `$ASYNCMEL_ARTIFACTS` or `./artifacts`.
@@ -251,30 +330,13 @@ pub fn default_artifacts_dir() -> PathBuf {
         .unwrap_or_else(|| PathBuf::from("artifacts"))
 }
 
-// NOTE: runtime tests that need the compiled artifacts live in
-// rust/tests/e2e_runtime.rs (they require `make artifacts` first);
-// unit tests here cover the pure helpers.
+// NOTE: tests that need the compiled PJRT artifacts live in
+// rust/tests/e2e_runtime.rs (they require `make artifacts` first and
+// skip loudly otherwise); the native backend's numerics are unit-tested
+// in [`native`].
 #[cfg(test)]
 mod tests {
     use super::*;
-
-    #[test]
-    fn literal_round_trips_shape() {
-        let lit = literal_from_f32(&[1.0, 2.0, 3.0, 4.0, 5.0, 6.0], &[2, 3]).unwrap();
-        assert_eq!(lit.element_count(), 6);
-        assert_eq!(lit.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
-    }
-
-    #[test]
-    fn literal_scalar() {
-        let lit = literal_from_f32(&[7.5], &[]).unwrap();
-        assert_eq!(lit.to_vec::<f32>().unwrap(), vec![7.5]);
-    }
-
-    #[test]
-    fn literal_rejects_bad_length() {
-        assert!(literal_from_f32(&[1.0, 2.0], &[3]).is_err());
-    }
 
     #[test]
     fn default_dir_env_override() {
@@ -282,5 +344,52 @@ mod tests {
         assert_eq!(default_artifacts_dir(), PathBuf::from("/tmp/zzz"));
         std::env::remove_var("ASYNCMEL_ARTIFACTS");
         assert_eq!(default_artifacts_dir(), PathBuf::from("artifacts"));
+    }
+
+    #[test]
+    fn native_runtime_round_trips_init_and_eval() {
+        let rt = Runtime::native(&[36, 16, 4], 32, 64);
+        assert_eq!(rt.platform(), "native-cpu");
+        rt.manifest.check().unwrap();
+        let mut rng = Rng::new(3);
+        let params = rt.init_params(&mut rng);
+        let shapes = rt.manifest.param_shapes();
+        assert_eq!(params.len(), shapes.len());
+        for (p, s) in params.iter().zip(&shapes) {
+            assert_eq!(p.len(), s.iter().product::<usize>());
+        }
+        // biases zero, weights non-degenerate
+        assert!(params[1].iter().all(|&v| v == 0.0));
+        assert!(params[0].iter().any(|&v| v != 0.0));
+    }
+
+    #[test]
+    fn load_without_artifacts_errors() {
+        let err = Runtime::load("/definitely/not/a/dir").unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("manifest.json"), "{msg}");
+    }
+
+    #[cfg(feature = "pjrt")]
+    mod pjrt_literals {
+        use super::super::*;
+
+        #[test]
+        fn literal_round_trips_shape() {
+            let lit = literal_from_f32(&[1.0, 2.0, 3.0, 4.0, 5.0, 6.0], &[2, 3]).unwrap();
+            assert_eq!(lit.element_count(), 6);
+            assert_eq!(lit.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        }
+
+        #[test]
+        fn literal_scalar() {
+            let lit = literal_from_f32(&[7.5], &[]).unwrap();
+            assert_eq!(lit.to_vec::<f32>().unwrap(), vec![7.5]);
+        }
+
+        #[test]
+        fn literal_rejects_bad_length() {
+            assert!(literal_from_f32(&[1.0, 2.0], &[3]).is_err());
+        }
     }
 }

@@ -1,0 +1,395 @@
+//! Pure-Rust executor for the paper's ReLU-MLP — the hermetic default
+//! backend of [`crate::runtime::Runtime`].
+//!
+//! Implements exactly the two entry points the AOT artifacts expose
+//! (`train_step`, `eval_step`) for an arbitrary `layer_dims` stack:
+//! dense → ReLU hidden layers, softmax cross-entropy on the logits,
+//! masked padded rows, plain SGD. The offline registry cannot always
+//! provide the `xla` crate chain, so this backend keeps
+//! `cargo build && cargo test` self-contained; the `pjrt` feature swaps
+//! in the compiled-HLO path with identical semantics.
+
+use crate::aggregation::ParamSet;
+use crate::data::Batch;
+
+/// In-process MLP forward/backward engine.
+#[derive(Debug, Clone)]
+pub struct NativeExecutor {
+    /// `[features, hidden…, classes]`.
+    pub dims: Vec<usize>,
+}
+
+/// `x[rows, in] @ w[in, out] + b[out]`.
+fn matmul_bias(x: &[f32], w: &[f32], b: &[f32], rows: usize, in_d: usize, out_d: usize) -> Vec<f32> {
+    debug_assert_eq!(x.len(), rows * in_d);
+    debug_assert_eq!(w.len(), in_d * out_d);
+    debug_assert_eq!(b.len(), out_d);
+    let mut out = vec![0.0f32; rows * out_d];
+    for r in 0..rows {
+        let xr = &x[r * in_d..(r + 1) * in_d];
+        let or = &mut out[r * out_d..(r + 1) * out_d];
+        or.copy_from_slice(b);
+        for (i, &xi) in xr.iter().enumerate() {
+            if xi == 0.0 {
+                continue;
+            }
+            let wrow = &w[i * out_d..(i + 1) * out_d];
+            for (o, &wij) in or.iter_mut().zip(wrow) {
+                *o += xi * wij;
+            }
+        }
+    }
+    out
+}
+
+impl NativeExecutor {
+    pub fn new(dims: &[usize]) -> Self {
+        assert!(dims.len() >= 2, "need at least input and output dims");
+        Self { dims: dims.to_vec() }
+    }
+
+    fn layers(&self) -> usize {
+        self.dims.len() - 1
+    }
+
+    fn check_params(&self, params: &ParamSet) {
+        assert_eq!(params.len(), 2 * self.layers(), "param tensor count");
+        for l in 0..self.layers() {
+            assert_eq!(params[2 * l].len(), self.dims[l] * self.dims[l + 1], "w{l} size");
+            assert_eq!(params[2 * l + 1].len(), self.dims[l + 1], "b{l} size");
+        }
+    }
+
+    /// Forward pass keeping every activation (`acts[0]` = input,
+    /// `acts[L]` = logits; hidden activations are post-ReLU).
+    fn forward(&self, params: &ParamSet, x: &[f32], rows: usize) -> Vec<Vec<f32>> {
+        let l_count = self.layers();
+        let mut acts: Vec<Vec<f32>> = Vec::with_capacity(l_count + 1);
+        acts.push(x.to_vec());
+        for l in 0..l_count {
+            let mut z = matmul_bias(
+                &acts[l],
+                &params[2 * l],
+                &params[2 * l + 1],
+                rows,
+                self.dims[l],
+                self.dims[l + 1],
+            );
+            if l + 1 < l_count {
+                for v in &mut z {
+                    if *v < 0.0 {
+                        *v = 0.0;
+                    }
+                }
+            }
+            acts.push(z);
+        }
+        acts
+    }
+
+    /// Per-row softmax cross-entropy: fills `probs` (softmax of the row)
+    /// and returns the loss `-ln p[label]`.
+    fn row_loss(logits: &[f32], label: usize, probs: &mut [f32]) -> f32 {
+        let m = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let mut sum = 0.0f32;
+        for (p, &z) in probs.iter_mut().zip(logits) {
+            *p = (z - m).exp();
+            sum += *p;
+        }
+        for p in probs.iter_mut() {
+            *p /= sum;
+        }
+        sum.ln() + m - logits[label]
+    }
+
+    /// One SGD minibatch step; mirrors the AOT `train_step` contract:
+    /// returns the updated parameters and the masked mean loss.
+    pub fn train_step(&self, params: &ParamSet, batch: &Batch, lr: f32) -> (ParamSet, f32) {
+        self.check_params(params);
+        let rows = batch.mask.len();
+        let c = *self.dims.last().unwrap();
+        assert_eq!(batch.x.len(), rows * self.dims[0], "batch x shape");
+        assert_eq!(batch.y_onehot.len(), rows * c, "batch y shape");
+
+        let l_count = self.layers();
+        let acts = self.forward(params, &batch.x, rows);
+        let logits = &acts[l_count];
+
+        let mask_sum: f32 = batch.mask.iter().sum();
+        debug_assert!(mask_sum > 0.0, "all-padded batch");
+        let inv = 1.0 / mask_sum;
+
+        // dL/dlogits = (softmax − y) / Σmask on real rows, 0 on padding.
+        let mut delta = vec![0.0f32; rows * c];
+        let mut probs = vec![0.0f32; c];
+        let mut loss = 0.0f64;
+        for r in 0..rows {
+            if batch.mask[r] == 0.0 {
+                continue;
+            }
+            let yr = &batch.y_onehot[r * c..(r + 1) * c];
+            let label = yr
+                .iter()
+                .position(|&v| v == 1.0)
+                .expect("one-hot row without a label");
+            loss += Self::row_loss(&logits[r * c..(r + 1) * c], label, &mut probs) as f64;
+            let dr = &mut delta[r * c..(r + 1) * c];
+            for j in 0..c {
+                dr[j] = (probs[j] - yr[j]) * inv;
+            }
+        }
+        let loss = (loss * inv as f64) as f32;
+
+        // Backward + SGD, layer by layer from the top.
+        let mut new_params = params.clone();
+        for l in (0..l_count).rev() {
+            let (in_d, out_d) = (self.dims[l], self.dims[l + 1]);
+            let a_in = &acts[l];
+            let w = &params[2 * l];
+
+            // gw = a_inᵀ @ delta, gb = Σ_rows delta
+            let mut gw = vec![0.0f32; in_d * out_d];
+            let mut gb = vec![0.0f32; out_d];
+            for r in 0..rows {
+                let dr = &delta[r * out_d..(r + 1) * out_d];
+                let ar = &a_in[r * in_d..(r + 1) * in_d];
+                for (g, &d) in gb.iter_mut().zip(dr) {
+                    *g += d;
+                }
+                for (i, &ai) in ar.iter().enumerate() {
+                    if ai == 0.0 {
+                        continue;
+                    }
+                    let grow = &mut gw[i * out_d..(i + 1) * out_d];
+                    for (g, &d) in grow.iter_mut().zip(dr) {
+                        *g += ai * d;
+                    }
+                }
+            }
+
+            // delta ← (delta @ wᵀ) ⊙ relu'(a_in) for the layer below
+            if l > 0 {
+                let mut prev = vec![0.0f32; rows * in_d];
+                for r in 0..rows {
+                    let dr = &delta[r * out_d..(r + 1) * out_d];
+                    let ar = &a_in[r * in_d..(r + 1) * in_d];
+                    let pr = &mut prev[r * in_d..(r + 1) * in_d];
+                    for i in 0..in_d {
+                        if ar[i] <= 0.0 {
+                            continue; // ReLU gate closed
+                        }
+                        let wrow = &w[i * out_d..(i + 1) * out_d];
+                        let mut s = 0.0f32;
+                        for (wj, &dj) in wrow.iter().zip(dr) {
+                            s += wj * dj;
+                        }
+                        pr[i] = s;
+                    }
+                }
+                delta = prev;
+            }
+
+            for (p, &g) in new_params[2 * l].iter_mut().zip(&gw) {
+                *p -= lr * g;
+            }
+            for (p, &g) in new_params[2 * l + 1].iter_mut().zip(&gb) {
+                *p -= lr * g;
+            }
+        }
+        (new_params, loss)
+    }
+
+    /// One eval minibatch; mirrors the AOT `eval_step` contract:
+    /// `(correct, loss_sum, mask_sum)` over the real rows.
+    pub fn eval_batch(&self, params: &ParamSet, batch: &Batch) -> (f64, f64, f64) {
+        self.check_params(params);
+        let rows = batch.mask.len();
+        let c = *self.dims.last().unwrap();
+        let acts = self.forward(params, &batch.x, rows);
+        let logits = &acts[self.layers()];
+        let mut probs = vec![0.0f32; c];
+        let (mut correct, mut loss_sum, mut mask_sum) = (0.0f64, 0.0f64, 0.0f64);
+        for r in 0..rows {
+            if batch.mask[r] == 0.0 {
+                continue;
+            }
+            let yr = &batch.y_onehot[r * c..(r + 1) * c];
+            let label = yr
+                .iter()
+                .position(|&v| v == 1.0)
+                .expect("one-hot row without a label");
+            let zr = &logits[r * c..(r + 1) * c];
+            loss_sum += Self::row_loss(zr, label, &mut probs) as f64;
+            let pred = zr
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .map(|(j, _)| j)
+                .unwrap();
+            if pred == label {
+                correct += 1.0;
+            }
+            mask_sum += 1.0;
+        }
+        (correct, loss_sum, mask_sum)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{synth, Minibatches, SynthConfig};
+    use crate::sim::Rng;
+
+    fn tiny_dims() -> Vec<usize> {
+        vec![36, 16, 4]
+    }
+
+    fn he_params(dims: &[usize], rng: &mut Rng) -> ParamSet {
+        let mut out = Vec::new();
+        for l in 0..dims.len() - 1 {
+            let std = (2.0 / dims[l] as f64).sqrt();
+            out.push(
+                (0..dims[l] * dims[l + 1])
+                    .map(|_| rng.normal_ms(0.0, std) as f32)
+                    .collect(),
+            );
+            out.push(vec![0.0f32; dims[l + 1]]);
+        }
+        out
+    }
+
+    fn tiny_data() -> crate::data::SynthDataset {
+        synth::generate(&SynthConfig {
+            side: 6,
+            classes: 4,
+            train: 128,
+            test: 64,
+            noise_std: 0.4,
+            ..SynthConfig::default()
+        })
+    }
+
+    #[test]
+    fn train_step_reduces_loss_on_fixed_batch() {
+        let dims = tiny_dims();
+        let exec = NativeExecutor::new(&dims);
+        let ds = tiny_data();
+        let mut rng = Rng::new(11);
+        let mut params = he_params(&dims, &mut rng);
+        let idx: Vec<u32> = (0..64).collect();
+        let batch = Minibatches::new(&ds.train, &idx, 64).next().unwrap();
+        let (_, loss0) = exec.train_step(&params, &batch, 0.2);
+        let mut last = loss0;
+        for _ in 0..30 {
+            let (next, loss) = exec.train_step(&params, &batch, 0.2);
+            params = next;
+            last = loss;
+        }
+        assert!(last < loss0 * 0.7, "loss did not drop: {loss0} -> {last}");
+        for t in &params {
+            assert!(t.iter().all(|v| v.is_finite()), "NaN/Inf in params");
+        }
+    }
+
+    #[test]
+    fn untrained_eval_is_chance_level_and_counts_mask() {
+        let dims = tiny_dims();
+        let exec = NativeExecutor::new(&dims);
+        let ds = tiny_data();
+        let mut rng = Rng::new(5);
+        let params = he_params(&dims, &mut rng);
+        let idx: Vec<u32> = (0..64).collect();
+        let mut correct = 0.0;
+        let mut n = 0.0;
+        for batch in Minibatches::new(&ds.test, &idx, 48) {
+            let (c, l, m) = exec.eval_batch(&params, &batch);
+            assert!(l.is_finite() && l > 0.0);
+            correct += c;
+            n += m;
+        }
+        assert_eq!(n, 64.0, "mask sum must count only real rows");
+        let acc = correct / n;
+        assert!((0.0..0.8).contains(&acc), "untrained accuracy {acc}");
+    }
+
+    #[test]
+    fn padded_rows_do_not_contribute_gradient() {
+        let dims = tiny_dims();
+        let exec = NativeExecutor::new(&dims);
+        let ds = tiny_data();
+        let mut rng = Rng::new(7);
+        let params = he_params(&dims, &mut rng);
+        // 10 real rows padded to 32 vs exactly 10 rows: identical update
+        let idx: Vec<u32> = (0..10).collect();
+        let padded = Minibatches::new(&ds.train, &idx, 32).next().unwrap();
+        let tight = Minibatches::new(&ds.train, &idx, 10).next().unwrap();
+        let (p_pad, l_pad) = exec.train_step(&params, &padded, 0.1);
+        let (p_tight, l_tight) = exec.train_step(&params, &tight, 0.1);
+        assert_eq!(l_pad, l_tight);
+        for (a, b) in p_pad.iter().zip(&p_tight) {
+            assert_eq!(a, b, "padding changed the update");
+        }
+    }
+
+    #[test]
+    fn gradient_matches_finite_difference() {
+        // spot-check dL/dw on a few coordinates via central differences
+        let dims = vec![6, 5, 3];
+        let exec = NativeExecutor::new(&dims);
+        let mut rng = Rng::new(3);
+        let params = he_params(&dims, &mut rng);
+        let rows = 4usize;
+        let x: Vec<f32> = (0..rows * 6).map(|_| rng.normal() as f32).collect();
+        let mut y = vec![0.0f32; rows * 3];
+        for r in 0..rows {
+            y[r * 3 + r % 3] = 1.0;
+        }
+        let batch = Batch { x, y_onehot: y, mask: vec![1.0; rows], real: rows };
+
+        let loss_at = |p: &ParamSet| -> f64 {
+            let (_, loss_sum, mask_sum) = exec.eval_batch(p, &batch);
+            loss_sum / mask_sum
+        };
+        let lr = 1.0f32; // step == gradient, so (params - new) = grad
+        let (stepped, _) = exec.train_step(&params, &batch, lr);
+        let eps = 1e-3f32;
+        for (ti, vi) in [(0usize, 1usize), (1, 2), (2, 4), (3, 0)] {
+            let analytic = params[ti][vi] - stepped[ti][vi];
+            let mut plus = params.clone();
+            plus[ti][vi] += eps;
+            let mut minus = params.clone();
+            minus[ti][vi] -= eps;
+            let numeric = ((loss_at(&plus) - loss_at(&minus)) / (2.0 * eps as f64)) as f32;
+            assert!(
+                (analytic - numeric).abs() < 2e-2_f32.max(0.2 * numeric.abs()),
+                "tensor {ti}[{vi}]: analytic {analytic} vs numeric {numeric}"
+            );
+        }
+    }
+
+    #[test]
+    fn training_learns_separable_clusters() {
+        let dims = tiny_dims();
+        let exec = NativeExecutor::new(&dims);
+        let ds = tiny_data();
+        let mut rng = Rng::new(19);
+        let mut params = he_params(&dims, &mut rng);
+        let idx: Vec<u32> = (0..ds.train.len() as u32).collect();
+        for _epoch in 0..20 {
+            for batch in Minibatches::new(&ds.train, &idx, 32) {
+                let (next, _) = exec.train_step(&params, &batch, 0.2);
+                params = next;
+            }
+        }
+        let test_idx: Vec<u32> = (0..ds.test.len() as u32).collect();
+        let (mut correct, mut n) = (0.0, 0.0);
+        for batch in Minibatches::new(&ds.test, &test_idx, 32) {
+            let (c, _, m) = exec.eval_batch(&params, &batch);
+            correct += c;
+            n += m;
+        }
+        let acc = correct / n;
+        assert!(acc > 0.6, "trained accuracy {acc} (chance 0.25)");
+    }
+}

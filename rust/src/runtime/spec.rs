@@ -104,6 +104,60 @@ impl Manifest {
         })
     }
 
+    /// Synthesize a manifest for the in-process native executor — no
+    /// artifact files involved. Shapes follow the same `[w, b] × layers`
+    /// convention `compile.aot` writes, so [`Manifest::check`] holds by
+    /// construction.
+    pub fn native(layer_dims: &[usize], train_batch: usize, eval_batch: usize) -> Manifest {
+        assert!(layer_dims.len() >= 2, "model needs >= 2 layer dims");
+        assert!(train_batch > 0 && eval_batch > 0);
+        let f32s = |shape: Vec<usize>| TensorSpec { shape, dtype: "float32".to_string() };
+        let mut params = Vec::new();
+        // The paper's S_m counts the weight matrices only (§V-A quotes
+        // 8,974,080 bits = 280,440 f32 weights; biases excluded) — match
+        // the convention `compile.model.model_size_bits` uses.
+        let mut n_weights = 0usize;
+        for l in 0..layer_dims.len() - 1 {
+            params.push(f32s(vec![layer_dims[l], layer_dims[l + 1]]));
+            params.push(f32s(vec![layer_dims[l + 1]]));
+            n_weights += layer_dims[l] * layer_dims[l + 1];
+        }
+        let num_param_tensors = params.len();
+        let features = layer_dims[0];
+        let classes = *layer_dims.last().unwrap();
+        let batch_inputs = |b: usize| {
+            vec![
+                f32s(vec![b, features]),
+                f32s(vec![b, classes]),
+                f32s(vec![b]),
+            ]
+        };
+        let mut train_inputs = params.clone();
+        train_inputs.extend(batch_inputs(train_batch));
+        train_inputs.push(f32s(vec![])); // lr scalar
+        let mut eval_inputs = params;
+        eval_inputs.extend(batch_inputs(eval_batch));
+        Manifest {
+            layer_dims: layer_dims.to_vec(),
+            num_param_tensors,
+            train_batch,
+            eval_batch,
+            model_size_bits: 32 * n_weights as u64,
+            entries: Entries {
+                train_step: EntrySpec {
+                    file: "<native>".to_string(),
+                    inputs: train_inputs,
+                    num_outputs: num_param_tensors + 1,
+                },
+                eval_step: EntrySpec {
+                    file: "<native>".to_string(),
+                    inputs: eval_inputs,
+                    num_outputs: 3,
+                },
+            },
+        }
+    }
+
     /// Internal consistency checks.
     pub fn check(&self) -> Result<()> {
         ensure!(self.layer_dims.len() >= 2, "model needs >= 2 layer dims");
@@ -223,6 +277,19 @@ mod tests {
         let mut m = sample();
         m.num_param_tensors = 6;
         assert!(m.check().is_err());
+    }
+
+    #[test]
+    fn native_manifest_checks_out() {
+        let m = Manifest::native(&[784, 300, 124, 60, 10], 128, 512);
+        m.check().unwrap();
+        assert_eq!(m.num_param_tensors, 8);
+        assert_eq!(m.model_size_bits, 8_974_080);
+        assert_eq!(m.num_features(), 784);
+        assert_eq!(m.num_classes(), 10);
+        let tiny = Manifest::native(&[36, 16, 4], 32, 64);
+        tiny.check().unwrap();
+        assert_eq!(tiny.param_shapes(), vec![vec![36, 16], vec![16], vec![16, 4], vec![4]]);
     }
 
     #[test]

@@ -1,14 +1,19 @@
-//! Simulation substrate: deterministic RNG and virtual clock.
+//! Simulation substrate: deterministic RNG, virtual clock, event queue.
 //!
 //! Everything stochastic in the reproduction (node placement, channel
 //! shadowing, dataset synthesis, parameter init) flows through
 //! [`rng::Rng`], a self-contained xoshiro256++ generator, so every
 //! experiment is bit-reproducible from a scenario seed. Wall-clock never
 //! enters the simulation: learner execution times are *virtual*, computed
-//! from the paper's eq. (5) and advanced on [`clock::VirtualClock`].
+//! from the paper's eq. (5) and advanced on [`clock::VirtualClock`]. The
+//! event-driven engine schedules dispatch/arrival/churn on
+//! [`event::EventQueue`], a binary heap with stable `(time, seq)`
+//! ordering so fleet-scale runs stay deterministic.
 
 pub mod clock;
+pub mod event;
 pub mod rng;
 
 pub use clock::VirtualClock;
+pub use event::EventQueue;
 pub use rng::Rng;

@@ -1,0 +1,213 @@
+//! Determinism + differential tests for the event-driven engine.
+//!
+//! Three layers of guarantees:
+//! 1. the [`EventQueue`] pops in a pure function of its pushes;
+//! 2. the engine is bit-reproducible: same seed ⇒ identical event
+//!    counts and an identical `CycleRecord` stream (via
+//!    [`record_digest`], which covers every simulation-derived field);
+//! 3. **differential oracle**: on churn-free scenarios the event
+//!    engine's barrier policy must reproduce the lock-step
+//!    orchestrator's `CycleRecord` stream byte-for-byte — real SGD
+//!    numerics included (native runtime backend).
+
+use asyncmel::aggregation::{AggregationRule, AsyncAggregator};
+use asyncmel::allocation::AllocatorKind;
+use asyncmel::config::{ChurnConfig, Scenario, ScenarioConfig};
+use asyncmel::coordinator::{
+    record_digest, CycleRecord, EngineOptions, EnginePolicy, EventEngine, ExecMode, FaultModel,
+    Orchestrator, TrainOptions,
+};
+use asyncmel::data::{synth, SynthConfig, SynthDataset};
+use asyncmel::runtime::Runtime;
+use asyncmel::sim::{EventQueue, Rng};
+
+/// Tiny model so real-numerics runs stay fast in debug builds.
+const DIMS: [usize; 3] = [36, 16, 4];
+const SAMPLES: usize = 400;
+
+fn tiny_world(k: usize) -> (Scenario, SynthDataset) {
+    let mut cfg = ScenarioConfig::paper_default()
+        .with_learners(k)
+        .with_cycle(15.0)
+        .with_total_samples(SAMPLES as u64);
+    // match the model input width and scale per-sample compute up so
+    // τ stays single-digit (debug-mode friendly)
+    cfg.task.features = DIMS[0] as u64;
+    cfg.task.compute_cycles_per_sample = 1.0e8;
+    let ds = synth::generate(&SynthConfig {
+        side: 6,
+        classes: 4,
+        train: SAMPLES,
+        test: 96,
+        noise_std: 0.5,
+        ..SynthConfig::default()
+    });
+    (cfg.build(), ds)
+}
+
+fn tiny_opts() -> TrainOptions {
+    TrainOptions { cycles: 4, lr: 0.1, eval_every: 1, reallocate_each_cycle: false }
+}
+
+fn run_lockstep(scheme: AllocatorKind, faults: Option<FaultModel>) -> Vec<CycleRecord> {
+    let rt = Runtime::native(&DIMS, 32, 48);
+    let (scenario, ds) = tiny_world(5);
+    let mut orch = Orchestrator::new(
+        scenario,
+        scheme,
+        AggregationRule::FedAvg,
+        &rt,
+        ds.train,
+        ds.test,
+    )
+    .unwrap();
+    if let Some(f) = faults {
+        orch = orch.with_faults(f);
+    }
+    orch.run(&tiny_opts()).unwrap()
+}
+
+fn run_event(scheme: AllocatorKind, faults: Option<FaultModel>) -> Vec<CycleRecord> {
+    let rt = Runtime::native(&DIMS, 32, 48);
+    let (scenario, ds) = tiny_world(5);
+    let mut engine = EventEngine::new(
+        scenario,
+        scheme,
+        AggregationRule::FedAvg,
+        ExecMode::Real { runtime: &rt, train: ds.train, test: ds.test },
+    )
+    .unwrap();
+    if let Some(f) = faults {
+        engine = engine.with_faults(f);
+    }
+    engine
+        .run(&EngineOptions { train: tiny_opts(), policy: EnginePolicy::Barrier })
+        .unwrap()
+}
+
+#[test]
+fn event_queue_order_is_a_pure_function_of_pushes() {
+    let run = |seed: u64| -> Vec<(f64, u64)> {
+        let mut rng = Rng::new(seed);
+        let mut q = EventQueue::new();
+        // interleave pushes and pops the way the engine does
+        let mut popped = Vec::new();
+        for i in 0..2_000u64 {
+            q.push(rng.below(40) as f64 * 0.25, i);
+            if rng.below(3) == 0 {
+                if let Some(e) = q.pop() {
+                    popped.push(e);
+                }
+            }
+        }
+        while let Some(e) = q.pop() {
+            popped.push(e);
+        }
+        popped
+    };
+    assert_eq!(run(7), run(7));
+    assert_ne!(run(7), run(8));
+}
+
+#[test]
+fn lockstep_and_event_engine_agree_on_churn_free_scenarios() {
+    // the acceptance gate: both engines must produce identical
+    // CycleRecord streams (everything except host wall-clock solve_ms)
+    for scheme in [AllocatorKind::Sai, AllocatorKind::Eta, AllocatorKind::Sync] {
+        let lock = run_lockstep(scheme, None);
+        let event = run_event(scheme, None);
+        assert_eq!(lock.len(), event.len());
+        assert_eq!(
+            record_digest(&lock),
+            record_digest(&event),
+            "scheme {scheme:?} diverged"
+        );
+    }
+}
+
+#[test]
+fn differential_holds_under_fault_injection_too() {
+    // dropouts + stragglers consume the same RNG stream in both
+    // engines, so even faulty (but churn-free) runs must agree
+    let faults = FaultModel::new(0.3, 0.2, 1.5);
+    let lock = run_lockstep(AllocatorKind::Eta, Some(faults));
+    let event = run_event(AllocatorKind::Eta, Some(faults));
+    assert_eq!(record_digest(&lock), record_digest(&event));
+    // and the faults must actually have dropped something across cycles
+    let arrived: usize = lock.iter().map(|r| r.arrived).sum();
+    assert!(arrived < 4 * 5, "fault injection had no effect");
+}
+
+#[test]
+fn event_engine_runs_are_byte_identical_across_repeats() {
+    let a = run_event(AllocatorKind::Sai, None);
+    let b = run_event(AllocatorKind::Sai, None);
+    assert_eq!(record_digest(&a), record_digest(&b));
+    // and training actually happened
+    assert!(a.iter().all(|r| r.accuracy.is_finite()));
+    assert!(a.last().unwrap().accuracy > 0.2, "no learning signal");
+}
+
+#[test]
+fn async_policy_is_deterministic_but_diverges_from_barrier() {
+    let run_async = || {
+        let rt = Runtime::native(&DIMS, 32, 48);
+        let (scenario, ds) = tiny_world(5);
+        let mut engine = EventEngine::new(
+            scenario,
+            AllocatorKind::Eta,
+            AggregationRule::FedAvg,
+            ExecMode::Real { runtime: &rt, train: ds.train, test: ds.test },
+        )
+        .unwrap();
+        engine
+            .run(&EngineOptions {
+                train: tiny_opts(),
+                policy: EnginePolicy::Async(AsyncAggregator::default()),
+            })
+            .unwrap()
+    };
+    let a = run_async();
+    let b = run_async();
+    assert_eq!(record_digest(&a), record_digest(&b));
+    // per-arrival aggregation is a genuinely different algorithm
+    let barrier = run_event(AllocatorKind::Eta, None);
+    assert_ne!(record_digest(&a), record_digest(&barrier));
+    assert!(a.iter().all(|r| r.accuracy.is_finite()));
+}
+
+#[test]
+fn fleet_of_5000_learners_with_churn_completes_deterministically() {
+    // the ISSUE acceptance criterion, phantom numerics: K = 5000 with
+    // Poisson joins and exponential lifetimes, to completion, twice,
+    // byte-identical.
+    let run = || {
+        let scenario = ScenarioConfig::paper_default()
+            .with_learners(5000)
+            .with_churn(ChurnConfig::new(2.0, 180.0))
+            .build();
+        let mut engine = EventEngine::new(
+            scenario,
+            AllocatorKind::Eta,
+            AggregationRule::FedAvg,
+            ExecMode::Phantom,
+        )
+        .unwrap();
+        let records = engine
+            .run(&EngineOptions {
+                train: TrainOptions { cycles: 5, ..Default::default() },
+                ..Default::default()
+            })
+            .unwrap();
+        (record_digest(&records), engine.stats)
+    };
+    let (da, sa) = run();
+    let (db, sb) = run();
+    assert_eq!(da, db, "5000-learner churny run must be reproducible");
+    assert_eq!(sa, sb);
+    assert!(sa.joins > 0, "no joins over 75 virtual seconds: {sa:?}");
+    assert!(sa.leaves > 0, "no departures: {sa:?}");
+    assert!(sa.final_alive >= 1 && sa.final_alive <= 20_000);
+    assert!(sa.arrivals > 4 * 4000, "fleet mostly idle: {sa:?}");
+    assert!(da.lines().count() == 5);
+}

@@ -1,0 +1,170 @@
+//! Golden regression tests for the experiment drivers (fixed seeds).
+//!
+//! Everything stochastic flows through the scenario seed, so a fixed
+//! configuration must reproduce the *same numbers* run-to-run — these
+//! tests snapshot row counts, assert the §V-B headline band, and pin
+//! determinism by running each driver twice and comparing every
+//! simulation-derived cell (host wall-clock columns excluded).
+
+use asyncmel::aggregation::AggregationRule;
+use asyncmel::allocation::AllocatorKind;
+use asyncmel::config::ScenarioConfig;
+use asyncmel::coordinator::record_digest;
+use asyncmel::data::SynthConfig;
+use asyncmel::experiments::{ablation, fig2, fig3};
+use asyncmel::runtime::Runtime;
+
+fn fig2_params() -> fig2::Fig2Params {
+    fig2::Fig2Params {
+        ks: vec![6, 20],
+        t_cycles: vec![7.5],
+        schemes: vec![AllocatorKind::Exact, AllocatorKind::Eta],
+        seeds: 3,
+        ..Default::default()
+    }
+}
+
+/// The deterministic projection of a Fig-2 row (drops solve_ms, which
+/// is host wall-clock).
+fn fig2_key(rows: &[fig2::Fig2Row]) -> Vec<(String, usize, String, String)> {
+    rows.iter()
+        .map(|r| {
+            (
+                r.scheme.to_string(),
+                r.k,
+                format!("{:?}", r.max_staleness),
+                format!("{:?}", r.avg_staleness),
+            )
+        })
+        .collect()
+}
+
+#[test]
+fn fig2_fixed_seed_is_reproducible_with_snapshotted_shape() {
+    let a = fig2::run(&fig2_params()).unwrap();
+    let b = fig2::run(&fig2_params()).unwrap();
+    // shape snapshot: |ks| × |schemes| × |t_cycles|
+    assert_eq!(a.len(), 4);
+    assert_eq!(fig2::table(&a).num_rows(), 4);
+    // bitwise identical staleness numbers across runs
+    assert_eq!(fig2_key(&a), fig2_key(&b));
+    // CSV column contract (downstream plotting scripts key on these)
+    let csv = fig2::table(&a).to_csv();
+    assert!(csv.starts_with("T(s),K,scheme,max_staleness,avg_staleness,solve_ms\n"));
+    assert_eq!(csv.lines().count(), 5);
+}
+
+#[test]
+fn fig2_headline_band_matches_the_paper_claim() {
+    // §V-B: at K = 20, T = 7.5 s the optimized allocation holds max
+    // staleness ≈ 1 while ETA drifts to ≈ 4. Exact integer optimum is
+    // our "optimized" curve here; assert the band, not the point.
+    let rows = fig2::run(&fig2_params()).unwrap();
+    let (opt_max, eta_max, opt_avg, _eta_avg) = fig2::headline(&rows).expect("headline point");
+    assert!(opt_max <= 2.0, "optimized max staleness {opt_max} out of band");
+    assert!(eta_max >= 1.0, "ETA max staleness {eta_max} suspiciously low");
+    assert!(eta_max >= opt_max, "ordering violated: eta {eta_max} < opt {opt_max}");
+    assert!(opt_avg >= 0.0 && opt_avg <= opt_max + 1e-9);
+    // the paper's gap is ~4x; demand at least a visible gap
+    assert!(
+        eta_max >= opt_max.max(0.5) * 1.5,
+        "no staleness gap: eta {eta_max} vs opt {opt_max}"
+    );
+}
+
+#[test]
+fn fig2_staleness_grows_with_k_for_eta_only() {
+    let rows = fig2::run(&fig2_params()).unwrap();
+    let get = |scheme: &str, k: usize| {
+        rows.iter()
+            .find(|r| r.scheme == scheme && r.k == k)
+            .unwrap()
+            .max_staleness
+    };
+    assert!(get("eta", 20) >= get("eta", 6));
+    assert!(get("exact", 20) <= 2.0);
+}
+
+/// Tiny world for artifact-free fig-3 runs (native backend, τ kept
+/// single-digit so debug builds stay fast).
+fn tiny_fig3() -> (Runtime, fig3::Fig3Params) {
+    let samples = 400usize;
+    let mut base = ScenarioConfig::paper_default()
+        .with_cycle(15.0)
+        .with_total_samples(samples as u64);
+    base.task.features = 36;
+    base.task.compute_cycles_per_sample = 1.0e8;
+    let rt = Runtime::native(&[36, 16, 4], 32, 48);
+    let params = fig3::Fig3Params {
+        base,
+        ks: vec![4],
+        schemes: vec![AllocatorKind::Relaxed, AllocatorKind::Eta],
+        cycles: 3,
+        lr: 0.1,
+        data: SynthConfig {
+            side: 6,
+            classes: 4,
+            train: samples,
+            test: 96,
+            noise_std: 0.5,
+            ..SynthConfig::default()
+        },
+        aggregation: AggregationRule::FedAvg,
+    };
+    (rt, params)
+}
+
+#[test]
+fn fig3_fixed_seed_learning_curves_are_reproducible() {
+    let (rt, params) = tiny_fig3();
+    let a = fig3::run(&rt, &params).unwrap();
+    let b = fig3::run(&rt, &params).unwrap();
+    assert_eq!(a.len(), 2, "one curve per (K, scheme)");
+    for (ca, cb) in a.iter().zip(&b) {
+        assert_eq!(ca.records.len(), 3);
+        assert_eq!(
+            record_digest(&ca.records),
+            record_digest(&cb.records),
+            "curve {}/{} not reproducible",
+            ca.scheme,
+            ca.k
+        );
+    }
+    // snapshot the table shape: curves × cycles rows
+    assert_eq!(fig3::table(&a).num_rows(), 6);
+    assert_eq!(fig3::summary_table(&a, &[0.5, 0.9]).num_rows(), 4);
+}
+
+#[test]
+fn fig3_accuracy_is_sane_and_training_signal_exists() {
+    let (rt, params) = tiny_fig3();
+    let curves = fig3::run(&rt, &params).unwrap();
+    for c in &curves {
+        for r in &c.records {
+            assert!(r.accuracy.is_finite(), "{}/{}: NaN accuracy", c.scheme, c.k);
+            assert!((0.0..=1.0).contains(&r.accuracy));
+            assert!(r.vtime_s > 0.0);
+        }
+        let last = c.final_accuracy();
+        assert!(last > 0.2, "{}/{}: accuracy {last} below chance band", c.scheme, c.k);
+    }
+}
+
+#[test]
+fn ablation_fixed_seed_snapshot() {
+    let params = ablation::AblationParams {
+        bound_pairs: vec![(0.9, 1.1), (0.2, 2.5)],
+        schemes: vec![AllocatorKind::Sai],
+        seeds: 2,
+        ..Default::default()
+    };
+    let a = ablation::run(&params).unwrap();
+    let b = ablation::run(&params).unwrap();
+    assert_eq!(a.len(), 2);
+    for (ra, rb) in a.iter().zip(&b) {
+        assert_eq!(format!("{:?}", ra.max_staleness), format!("{:?}", rb.max_staleness));
+        assert_eq!(format!("{:?}", ra.avg_staleness), format!("{:?}", rb.avg_staleness));
+        assert_eq!(ra.infeasible, rb.infeasible);
+    }
+    assert_eq!(ablation::table(&a).num_rows(), 2);
+}

@@ -193,6 +193,120 @@ fn prop_d_of_tau_and_tau_of_d_are_inverse() {
 }
 
 #[test]
+fn prop_every_allocator_kind_partitions_d_and_respects_the_deadline() {
+    // Σ d_k = D (7c), box (7f), deadline slack ≥ 0 (7b after flooring),
+    // for every allocator kind on random heterogeneous fleets.
+    forall("all-kinds-hard-constraints", 48, |g| {
+        let costs = gen_fleet(g);
+        let t_cycle = g.f64_in(5.0, 20.0);
+        let share = g.u64_in(500, 4000);
+        let k = costs.len();
+        let d_total = share * k as u64;
+        let bounds = Bounds::proportional(d_total, k, 0.2, 2.5);
+        for kind in AllocatorKind::all() {
+            if let Ok(a) = make_allocator(kind).allocate(&costs, t_cycle, d_total, &bounds) {
+                assert_eq!(
+                    a.d.iter().sum::<u64>(),
+                    d_total,
+                    "{}: batches do not partition D",
+                    kind.name()
+                );
+                for i in 0..k {
+                    assert!(bounds.contains(a.d[i]), "{}: d[{i}] outside box", kind.name());
+                    let slack = t_cycle - costs[i].time(a.tau[i] as f64, a.d[i] as f64);
+                    assert!(
+                        slack >= -1e-9 * t_cycle,
+                        "{}: learner {i} misses the deadline by {slack}",
+                        kind.name()
+                    );
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_work_conserving_kinds_give_every_feasible_learner_an_epoch() {
+    // τ_k ≥ 1 whenever a single epoch fits at the assigned batch — the
+    // integer positivity constraint (7d) for every async scheme that
+    // floors onto the work-conserving manifold. (Sync is excluded: its
+    // *common* τ legitimately drops to 0 when any one learner cannot
+    // fit an epoch.)
+    forall("tau-positivity", 48, |g| {
+        let costs = gen_fleet(g);
+        let t_cycle = g.f64_in(5.0, 20.0);
+        let share = g.u64_in(500, 4000);
+        let k = costs.len();
+        let d_total = share * k as u64;
+        let bounds = Bounds::proportional(d_total, k, 0.2, 2.5);
+        for kind in [
+            AllocatorKind::Exact,
+            AllocatorKind::Relaxed,
+            AllocatorKind::Sai,
+            AllocatorKind::Eta,
+            AllocatorKind::WorkMax,
+        ] {
+            if let Ok(a) = make_allocator(kind).allocate(&costs, t_cycle, d_total, &bounds) {
+                for i in 0..k {
+                    if costs[i].time(1.0, a.d[i] as f64) <= t_cycle {
+                        assert!(
+                            a.tau[i] >= 1,
+                            "{}: learner {i} idles despite a feasible epoch (d={})",
+                            kind.name(),
+                            a.d[i]
+                        );
+                    }
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_adaptive_staleness_never_worse_than_eta() {
+    // The paper's ordering on random heterogeneous fleets: the exact
+    // adaptive optimum is ≤ every heuristic, and in particular ≤ ETA
+    // (ETA's allocation is a feasible point of the exact search space,
+    // so this is a theorem, not a tendency).
+    forall("adaptive-le-eta", 48, |g| {
+        let costs = gen_fleet(g);
+        let t_cycle = g.f64_in(5.0, 20.0);
+        let share = g.u64_in(500, 4000);
+        let k = costs.len();
+        let d_total = share * k as u64;
+        let bounds = Bounds::proportional(d_total, k, 0.2, 2.5);
+        let eta = match make_allocator(AllocatorKind::Eta).allocate(&costs, t_cycle, d_total, &bounds)
+        {
+            Ok(a) => a,
+            Err(_) => return,
+        };
+        if let Ok(exact) =
+            make_allocator(AllocatorKind::Exact).allocate(&costs, t_cycle, d_total, &bounds)
+        {
+            assert!(
+                exact.max_staleness() <= eta.max_staleness(),
+                "exact {} > eta {}",
+                exact.max_staleness(),
+                eta.max_staleness()
+            );
+        }
+        for kind in [AllocatorKind::Sai, AllocatorKind::Relaxed] {
+            if let Ok(a) = make_allocator(kind).allocate(&costs, t_cycle, d_total, &bounds) {
+                // the improve loop is a local search — allow one integer
+                // step of slack vs the ETA split on adversarial fleets
+                assert!(
+                    a.max_staleness() <= eta.max_staleness() + 1,
+                    "{}: {} far above eta {}",
+                    kind.name(),
+                    a.max_staleness(),
+                    eta.max_staleness()
+                );
+            }
+        }
+    });
+}
+
+#[test]
 fn prop_improved_allocations_never_regress_eta() {
     // the improve loop starting FROM the eta split can never be worse
     forall("improve-monotone", 32, |g| {

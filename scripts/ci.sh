@@ -1,0 +1,29 @@
+#!/usr/bin/env bash
+# Tier-1 verification + python tests, tolerant of partially-provisioned
+# environments (offline registry, missing optional python deps).
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+echo "=== tier-1: cargo build --release ==="
+cargo build --release
+
+echo "=== tier-1: cargo test -q ==="
+cargo test -q
+
+echo "=== python tests ==="
+if command -v python3 >/dev/null 2>&1; then
+  if python3 -c "import jax, pytest" >/dev/null 2>&1; then
+    PYTEST_TARGETS="tests"
+    if ! python3 -c "import hypothesis" >/dev/null 2>&1; then
+      echo "note: 'hypothesis' not installed — skipping kernel property tests"
+      PYTEST_TARGETS="tests/test_aot.py tests/test_model.py"
+    fi
+    (cd python && python3 -m pytest ${PYTEST_TARGETS} -q)
+  else
+    echo "note: jax/pytest unavailable — skipping python tests"
+  fi
+else
+  echo "note: python3 unavailable — skipping python tests"
+fi
+
+echo "CI OK"
