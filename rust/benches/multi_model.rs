@@ -1,0 +1,67 @@
+//! Bench + regeneration harness for the **multi-model** subsystem.
+//!
+//! `cargo bench --bench multi_model` does three things:
+//! 1. prints the multi-tenancy sweep table: M ∈ {1, 2, 4, 8} concurrent
+//!    models over K ∈ {100, 1000} churny learners, buffered async
+//!    aggregation, staleness-greedy routing, phantom numerics;
+//! 2. proves the ISSUE acceptance point: an M = 8, K = 1000 run with
+//!    churn completes and is byte-reproducible (report digests equal
+//!    across two runs);
+//! 3. times one full M = 8, K = 1000 engine run (scheduler + buffered
+//!    aggregation + per-model sub-fleet solve hot path).
+
+use asyncmel::aggregation::AggregationRule;
+use asyncmel::allocation::AllocatorKind;
+use asyncmel::benchkit::{bench, group, BenchConfig};
+use asyncmel::config::{ChurnConfig, ScenarioConfig};
+use asyncmel::coordinator::{EventEngine, ExecMode, TrainOptions};
+use asyncmel::experiments::multi_model;
+use asyncmel::multimodel::{
+    report_digest, MultiModelConfig, MultiModelOptions, MultiModelReport, SchedulerKind,
+};
+
+fn print_sweep() {
+    let params = multi_model::MultiModelParams::default();
+    let rows = multi_model::run(&params).expect("multi-model sweep");
+    println!("\n========== MULTI-MODEL — M concurrent models, shared churny fleet ==========");
+    println!("{}", multi_model::table(&rows).render());
+    println!("=============================================================================\n");
+}
+
+fn run_k1000_m8() -> MultiModelReport {
+    let scenario = ScenarioConfig::paper_default()
+        .with_learners(1000)
+        .with_churn(ChurnConfig::new(1.0, 120.0))
+        .build();
+    let mut engine = EventEngine::new(
+        scenario,
+        AllocatorKind::Eta,
+        AggregationRule::FedAvg,
+        ExecMode::Phantom,
+    )
+    .expect("engine");
+    let opts = MultiModelOptions {
+        train: TrainOptions { cycles: 8, ..Default::default() },
+        multi: MultiModelConfig::new(8, 4, SchedulerKind::StalenessGreedy),
+        ..Default::default()
+    };
+    engine.run_multi(&opts).expect("run_multi")
+}
+
+fn main() {
+    print_sweep();
+
+    // ISSUE acceptance: M = 8, K = 1000 with churn, deterministically.
+    let a = report_digest(&run_k1000_m8());
+    let b = report_digest(&run_k1000_m8());
+    assert_eq!(a, b, "M=8 K=1000 churny multi-model run must be byte-reproducible");
+    println!("determinism: M=8, K=1000 with churn reproduces byte-for-byte OK\n");
+
+    group("multi-model engine @ K=1000, M=8, B=4, churn (phantom numerics)");
+    let cfg = BenchConfig {
+        measure: std::time::Duration::from_secs(5),
+        max_iters: 50,
+        ..Default::default()
+    };
+    bench("multimodel/run_k1000_m8", &cfg, run_k1000_m8);
+}

@@ -51,6 +51,25 @@ impl FadingProcess {
         Self { params, rho, shadow_db, dist_m, rng }
     }
 
+    /// Register a newly joined learner (event-engine churn): recover
+    /// its shadowing state from the sampled link and evolve it along
+    /// with the rest of the fleet from the next [`Self::step`] on.
+    pub fn add_link(&mut self, link: &Link) {
+        let loss_db = -10.0 * link.gain.log10();
+        self.shadow_db
+            .push(loss_db - pathloss_db(&self.params, link.dist_m));
+        self.dist_m.push(link.dist_m);
+    }
+
+    /// Number of learners tracked by the process.
+    pub fn len(&self) -> usize {
+        self.shadow_db.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.shadow_db.is_empty()
+    }
+
     /// Advance one global cycle; returns the new links.
     pub fn step(&mut self, devices: &[Device]) -> Vec<Link> {
         let sigma = self.params.shadowing_std_db;
@@ -147,6 +166,29 @@ mod tests {
             assert_eq!(a.c2, b.c2);
         }
         assert!(c1.iter().zip(&c2).any(|(a, b)| a.c0 != b.c0));
+    }
+
+    #[test]
+    fn add_link_grows_the_process_and_round_trips_shadowing() {
+        let (mut proc, devices) = setup(1.0);
+        assert_eq!(proc.len(), 8);
+        assert!(!proc.is_empty());
+        let s = ScenarioConfig::paper_default().with_learners(9).build();
+        let newcomer = s.links[8];
+        proc.add_link(&newcomer);
+        assert_eq!(proc.len(), 9);
+        // ρ = 1 freezes shadowing, so the recovered state must
+        // reproduce the newcomer's rate exactly
+        let mut devs = devices.clone();
+        devs.push(s.devices[8]);
+        let links = proc.step(&devs);
+        assert_eq!(links.len(), 9);
+        assert!(
+            (links[8].rate_bps - newcomer.rate_bps).abs() < 1e-3,
+            "{} vs {}",
+            links[8].rate_bps,
+            newcomer.rate_bps
+        );
     }
 
     #[test]

@@ -14,6 +14,7 @@ use crate::channel::{sample_links, ChannelParams, Link};
 use crate::json::Value;
 use crate::costmodel::{Bounds, DataScenario, LearnerCost, TaskParams};
 use crate::device::{sample_fleet, Device, DeviceRanges};
+use crate::multimodel::{MultiModelConfig, SchedulerKind};
 use crate::sim::Rng;
 
 /// Which coordinator engine executes the run.
@@ -118,6 +119,12 @@ pub struct ScenarioConfig {
     pub engine: EngineKind,
     /// Learner churn (event engine only; disabled by default).
     pub churn: ChurnConfig,
+    /// Multi-model concurrency (event engine only; single-tenant by
+    /// default — see [`crate::multimodel`]).
+    pub multimodel: MultiModelConfig,
+    /// Gauss–Markov block-fading coherence ρ per cycle (event engine
+    /// only; None = static channels).
+    pub fading_rho: Option<f64>,
 }
 
 impl Default for ScenarioConfig {
@@ -143,6 +150,8 @@ impl ScenarioConfig {
             task: TaskParams::default(),
             engine: EngineKind::Lockstep,
             churn: ChurnConfig::disabled(),
+            multimodel: MultiModelConfig::single(),
+            fading_rho: None,
         }
     }
 
@@ -176,6 +185,15 @@ impl ScenarioConfig {
         self.churn = churn;
         self
     }
+    pub fn with_multimodel(mut self, multimodel: MultiModelConfig) -> Self {
+        self.multimodel = multimodel;
+        self
+    }
+    pub fn with_fading_rho(mut self, rho: f64) -> Self {
+        assert!((0.0..=1.0).contains(&rho), "fading ρ must be in [0, 1]");
+        self.fading_rho = Some(rho);
+        self
+    }
 
     /// Serialize to a JSON value (own [`crate::json`] substrate).
     pub fn to_json(&self) -> Value {
@@ -206,6 +224,14 @@ impl ScenarioConfig {
             .set("mean_lifetime_s", self.churn.mean_lifetime_s)
             .set("max_learners", self.churn.max_learners)
             .set("min_learners", self.churn.min_learners);
+        let mut mm = Value::obj();
+        mm.set("num_models", self.multimodel.num_models)
+            .set("buffer_size", self.multimodel.buffer_size)
+            .set("scheduler", self.multimodel.scheduler.name())
+            .set(
+                "weights",
+                Value::Arr(self.multimodel.weights.iter().map(|&w| Value::Num(w)).collect()),
+            );
         let mut v = Value::obj();
         v.set("seed", self.seed)
             .set("num_learners", self.num_learners)
@@ -224,7 +250,11 @@ impl ScenarioConfig {
             .set("channel", ch)
             .set("devices", dev)
             .set("task", task)
-            .set("churn", churn);
+            .set("churn", churn)
+            .set("multimodel", mm);
+        if let Some(rho) = self.fading_rho {
+            v.set("fading_rho", rho);
+        }
         v
     }
 
@@ -275,6 +305,45 @@ impl ScenarioConfig {
             if let Some(x) = cu.get("min_learners") {
                 cfg.churn.min_learners = x.as_usize()?;
             }
+        }
+        if let Some(mm) = v.get("multimodel") {
+            if let Some(x) = mm.get("num_models") {
+                cfg.multimodel.num_models = x.as_usize()?;
+                anyhow::ensure!(cfg.multimodel.num_models >= 1, "num_models must be >= 1");
+            }
+            if let Some(x) = mm.get("buffer_size") {
+                cfg.multimodel.buffer_size = x.as_usize()?;
+                anyhow::ensure!(cfg.multimodel.buffer_size >= 1, "buffer_size must be >= 1");
+            }
+            if let Some(x) = mm.get("scheduler") {
+                let s = x.as_str()?;
+                cfg.multimodel.scheduler = SchedulerKind::parse(s).ok_or_else(|| {
+                    anyhow::anyhow!("unknown scheduler '{s}' (static|round-robin|staleness-greedy)")
+                })?;
+            }
+            if let Some(x) = mm.get("weights") {
+                let w = x
+                    .as_arr()?
+                    .iter()
+                    .map(|w| w.as_f64())
+                    .collect::<Result<Vec<f64>>>()?;
+                anyhow::ensure!(
+                    w.is_empty() || w.len() == cfg.multimodel.num_models,
+                    "multimodel.weights needs one weight per model ({} != {})",
+                    w.len(),
+                    cfg.multimodel.num_models
+                );
+                anyhow::ensure!(
+                    w.iter().all(|&x| x.is_finite() && x > 0.0),
+                    "multimodel.weights must be positive and finite"
+                );
+                cfg.multimodel.weights = w;
+            }
+        }
+        if let Some(x) = v.get("fading_rho") {
+            let rho = x.as_f64()?;
+            anyhow::ensure!((0.0..=1.0).contains(&rho), "fading_rho must be in [0, 1]");
+            cfg.fading_rho = Some(rho);
         }
         if let Some(ch) = v.get("channel") {
             if let Some(x) = ch.get("radius_m") {
@@ -487,6 +556,46 @@ mod tests {
         let sparse = ScenarioConfig::from_json(&crate::json::parse("{}").unwrap()).unwrap();
         assert_eq!(sparse.engine, EngineKind::Lockstep);
         assert!(!sparse.churn.is_enabled());
+    }
+
+    #[test]
+    fn multimodel_and_fading_round_trip() {
+        let cfg = ScenarioConfig::paper_default()
+            .with_multimodel(
+                MultiModelConfig::new(4, 3, SchedulerKind::StalenessGreedy)
+                    .with_weights(vec![1.0, 2.0, 3.0, 4.0]),
+            )
+            .with_fading_rho(0.85);
+        let text = cfg.to_json().pretty();
+        let back = ScenarioConfig::from_json(&crate::json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.multimodel.num_models, 4);
+        assert_eq!(back.multimodel.buffer_size, 3);
+        assert_eq!(back.multimodel.scheduler, SchedulerKind::StalenessGreedy);
+        assert_eq!(back.multimodel.weights, vec![1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(back.fading_rho, Some(0.85));
+
+        // sparse configs keep the single-tenant defaults
+        let sparse = ScenarioConfig::from_json(&crate::json::parse("{}").unwrap()).unwrap();
+        assert_eq!(sparse.multimodel, MultiModelConfig::single());
+        assert!(!sparse.multimodel.is_multi());
+        assert_eq!(sparse.fading_rho, None);
+
+        // invalid knobs are rejected
+        let bad = crate::json::parse(r#"{"multimodel": {"num_models": 0}}"#).unwrap();
+        assert!(ScenarioConfig::from_json(&bad).is_err());
+        let bad = crate::json::parse(r#"{"fading_rho": 1.5}"#).unwrap();
+        assert!(ScenarioConfig::from_json(&bad).is_err());
+        // weights must be positive and match the model count
+        let bad = crate::json::parse(
+            r#"{"multimodel": {"num_models": 2, "weights": [1.0, 0.0]}}"#,
+        )
+        .unwrap();
+        assert!(ScenarioConfig::from_json(&bad).is_err());
+        let bad = crate::json::parse(
+            r#"{"multimodel": {"num_models": 2, "weights": [1.0, 2.0, 3.0]}}"#,
+        )
+        .unwrap();
+        assert!(ScenarioConfig::from_json(&bad).is_err());
     }
 
     #[test]

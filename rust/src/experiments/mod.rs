@@ -8,7 +8,10 @@
 //!   motivates the bounds; ABL-1 in DESIGN.md);
 //! * [`fleet_scale`] — event-engine scaling sweep: K ∈ {10…5000}
 //!   learners with churn, phantom numerics (beyond the paper — the
-//!   ROADMAP's fleet-scale direction).
+//!   ROADMAP's fleet-scale direction);
+//! * [`multi_model`] — FedAST-style multi-tenancy sweep: M ∈ {1…8}
+//!   concurrent models over one shared churny fleet, buffered async
+//!   aggregation, per-model staleness / rounds-to-target / utilization.
 //!
 //! Benches and examples call these; the CLI exposes them as subcommands.
 
@@ -16,3 +19,4 @@ pub mod ablation;
 pub mod fig2;
 pub mod fig3;
 pub mod fleet_scale;
+pub mod multi_model;

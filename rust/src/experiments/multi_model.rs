@@ -1,0 +1,256 @@
+//! Multi-model concurrency sweep — FedAST-style multi-tenancy under load.
+//!
+//! Runs [`crate::coordinator::EventEngine::run_multi`] in phantom mode
+//! across fleet sizes K and model counts M with learner churn,
+//! reporting per-model staleness, rounds-to-target (cycles until each
+//! model's applied-update budget is met) and fleet utilization. This is
+//! the multi-tenant scaling story: one shared fleet amortized over M
+//! concurrent workloads, freed learners routed by the configured
+//! scheduler, per-model sub-fleet re-solves.
+
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::aggregation::AsyncAggregator;
+use crate::allocation::AllocatorKind;
+use crate::config::{ChurnConfig, ScenarioConfig};
+use crate::coordinator::{EventEngine, ExecMode, TrainOptions};
+use crate::metrics::{fmt_f, fmt_opt_f, Table};
+use crate::multimodel::{MultiModelConfig, MultiModelOptions, SchedulerKind};
+
+/// One (K, M) point of the sweep.
+#[derive(Debug, Clone)]
+pub struct MultiModelRow {
+    pub k: usize,
+    pub m: usize,
+    pub buffer: usize,
+    pub scheduler: SchedulerKind,
+    pub cycles: usize,
+    pub events: u64,
+    /// Fleet-wide updates that reached a server.
+    pub arrivals: usize,
+    /// Applied server updates summed over models.
+    pub applied: u64,
+    /// Allocation (re-)solves across all sub-fleets.
+    pub resolves: usize,
+    /// Mean over models and cycles of the per-cycle average staleness.
+    pub avg_staleness: f64,
+    /// Worst per-cycle max staleness over all models.
+    pub max_staleness: u64,
+    /// Mean over models and cycles of the sub-fleet utilization.
+    pub utilization: f64,
+    /// Mean over models of the cycle at which the round budget was met
+    /// (None if any model never got there, or no budget was set).
+    pub rounds_to_budget: Option<f64>,
+    /// Host wall-clock for the whole run (ms).
+    pub wall_ms: f64,
+}
+
+/// Sweep parameters.
+#[derive(Debug, Clone)]
+pub struct MultiModelParams {
+    pub base: ScenarioConfig,
+    pub ks: Vec<usize>,
+    pub ms: Vec<usize>,
+    pub buffer: usize,
+    pub scheduler: SchedulerKind,
+    pub cycles: usize,
+    pub scheme: AllocatorKind,
+    pub churn: ChurnConfig,
+    pub aggregator: AsyncAggregator,
+    /// Applied-update budget per model (drives the rounds-to-target
+    /// column; None = unbounded).
+    pub round_budget: Option<u64>,
+}
+
+impl Default for MultiModelParams {
+    fn default() -> Self {
+        Self {
+            base: ScenarioConfig::paper_default(),
+            ks: vec![100, 1000],
+            ms: vec![1, 2, 4, 8],
+            buffer: 4,
+            scheduler: SchedulerKind::StalenessGreedy,
+            cycles: 6,
+            // ETA scales O(K) per solve, matching the fleet-scale sweep.
+            scheme: AllocatorKind::Eta,
+            churn: ChurnConfig::new(1.0, 120.0),
+            aggregator: AsyncAggregator::default(),
+            round_budget: Some(64),
+        }
+    }
+}
+
+/// Run the sweep.
+pub fn run(params: &MultiModelParams) -> Result<Vec<MultiModelRow>> {
+    let mut rows = Vec::new();
+    for &k in &params.ks {
+        for &m in &params.ms {
+            let scenario = params
+                .base
+                .clone()
+                .with_learners(k)
+                .with_churn(params.churn)
+                .build();
+            let mut engine = EventEngine::new(
+                scenario,
+                params.scheme,
+                crate::aggregation::AggregationRule::FedAvg,
+                ExecMode::Phantom,
+            )?;
+            let opts = MultiModelOptions {
+                train: TrainOptions { cycles: params.cycles, ..Default::default() },
+                aggregator: params.aggregator,
+                multi: MultiModelConfig::new(m, params.buffer, params.scheduler),
+                round_budgets: vec![params.round_budget; m],
+                target_accuracies: Vec::new(),
+            };
+            let t0 = Instant::now();
+            let report = engine.run_multi(&opts)?;
+            let wall = t0.elapsed().as_secs_f64();
+
+            let mut stale_sum = 0.0;
+            let mut stale_n = 0usize;
+            let mut util_sum = 0.0;
+            let mut util_n = 0usize;
+            let mut max_staleness = 0u64;
+            for recs in &report.records {
+                for r in recs {
+                    stale_sum += r.avg_staleness;
+                    stale_n += 1;
+                    util_sum += r.utilization;
+                    util_n += 1;
+                    max_staleness = max_staleness.max(r.max_staleness);
+                }
+            }
+            let budget_cycles: Vec<Option<usize>> =
+                report.stats.iter().map(|s| s.budget_cycle).collect();
+            let rounds_to_budget = if budget_cycles.iter().all(|c| c.is_some()) {
+                Some(
+                    budget_cycles.iter().map(|c| c.unwrap() as f64).sum::<f64>()
+                        / budget_cycles.len().max(1) as f64,
+                )
+            } else {
+                None
+            };
+            rows.push(MultiModelRow {
+                k,
+                m,
+                buffer: params.buffer,
+                scheduler: params.scheduler,
+                cycles: params.cycles,
+                events: engine.stats.events,
+                arrivals: engine.stats.arrivals,
+                applied: report.stats.iter().map(|s| s.applied).sum(),
+                resolves: engine.stats.resolves,
+                avg_staleness: stale_sum / stale_n.max(1) as f64,
+                max_staleness,
+                utilization: util_sum / util_n.max(1) as f64,
+                rounds_to_budget,
+                wall_ms: wall * 1e3,
+            });
+        }
+    }
+    Ok(rows)
+}
+
+/// Render as a table.
+pub fn table(rows: &[MultiModelRow]) -> Table {
+    let mut t = Table::new(&[
+        "K", "M", "B", "sched", "cycles", "events", "arrivals", "applied", "resolves",
+        "avg_stale", "max_stale", "util", "rounds_to_budget", "wall_ms",
+    ]);
+    for r in rows {
+        t.row(&[
+            r.k.to_string(),
+            r.m.to_string(),
+            r.buffer.to_string(),
+            r.scheduler.name().to_string(),
+            r.cycles.to_string(),
+            r.events.to_string(),
+            r.arrivals.to_string(),
+            r.applied.to_string(),
+            r.resolves.to_string(),
+            fmt_f(r.avg_staleness, 3),
+            r.max_staleness.to_string(),
+            fmt_f(r.utilization, 3),
+            fmt_opt_f(r.rounds_to_budget, 1),
+            fmt_f(r.wall_ms, 1),
+        ]);
+    }
+    t
+}
+
+/// Deterministic projection of the rows (everything except host
+/// wall-clock) for golden/regression comparisons.
+pub fn row_keys(rows: &[MultiModelRow]) -> Vec<String> {
+    rows.iter()
+        .map(|r| {
+            format!(
+                "K={} M={} B={} sched={} events={} arrivals={} applied={} resolves={} avg_s={:?} max_s={} util={:?} rtb={:?}",
+                r.k,
+                r.m,
+                r.buffer,
+                r.scheduler.name(),
+                r.events,
+                r.arrivals,
+                r.applied,
+                r.resolves,
+                r.avg_staleness,
+                r.max_staleness,
+                r.utilization,
+                r.rounds_to_budget,
+            )
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_params() -> MultiModelParams {
+        MultiModelParams {
+            ks: vec![12, 30],
+            ms: vec![1, 3],
+            cycles: 4,
+            churn: ChurnConfig::new(0.3, 90.0),
+            round_budget: Some(8),
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn sweep_produces_one_row_per_point() {
+        let rows = run(&tiny_params()).unwrap();
+        assert_eq!(rows.len(), 4);
+        for r in &rows {
+            assert_eq!(r.cycles, 4);
+            assert!(r.events > 0);
+            assert!(r.arrivals > 0);
+            assert!(r.applied > 0);
+            assert!(r.utilization > 0.0);
+        }
+        assert_eq!(table(&rows).num_rows(), 4);
+        assert_eq!(row_keys(&rows).len(), 4);
+    }
+
+    #[test]
+    fn more_models_spread_the_same_fleet() {
+        let mut params = tiny_params();
+        params.churn = ChurnConfig::disabled();
+        let rows = run(&params).unwrap();
+        // same K: the fleet's arrival stream is shared, not multiplied
+        let single = rows.iter().find(|r| r.k == 30 && r.m == 1).unwrap();
+        let multi = rows.iter().find(|r| r.k == 30 && r.m == 3).unwrap();
+        let lo = single.arrivals as f64 * 0.5;
+        let hi = single.arrivals as f64 * 2.0;
+        assert!(
+            (multi.arrivals as f64) > lo && (multi.arrivals as f64) < hi,
+            "M=3 arrivals {} vs M=1 {}",
+            multi.arrivals,
+            single.arrivals
+        );
+    }
+}

@@ -27,11 +27,12 @@
 //! | [`allocation`] | the paper's algorithms + baselines (relaxed, SAI, exact, ETA, sync) |
 //! | [`staleness`] | staleness metrics (eq. 6, 10, 13) |
 //! | [`aggregation`] | cycle aggregation rules + staleness-weighted async server updates |
+//! | [`multimodel`] | FedAST-style multi-tenant layer: model registry, buffered aggregation, freed-slot schedulers |
 //! | [`data`] | synthetic MNIST-like dataset, sharding, minibatching |
 //! | [`runtime`] | model executor: native pure-Rust backend (default) or PJRT (`pjrt` feature) |
 //! | [`coordinator`] | lock-step orchestrator **and** the event-driven fleet engine |
 //! | [`metrics`] | CSV writers, table printers, run summaries |
-//! | [`experiments`] | paper figures/tables + the fleet-scale engine sweep |
+//! | [`experiments`] | paper figures/tables + fleet-scale and multi-model engine sweeps |
 //!
 //! ## The two coordinator engines
 //!
@@ -46,6 +47,22 @@
 //! On churn-free scenarios the barrier policy reproduces the lock-step
 //! `CycleRecord` stream byte-for-byte, so the old loop doubles as a
 //! differential-testing oracle (`rust/tests/engine_determinism.rs`).
+//!
+//! On top of the async policy sits the **multi-model subsystem**
+//! ([`multimodel`], after FedAST 2406.00302):
+//! [`coordinator::EventEngine::run_multi`] trains `M` model instances
+//! concurrently over one shared fleet. Each model owns its parameters,
+//! staleness tracker and a **buffered aggregator** (server update every
+//! `B` client updates); freed learners are routed between models by a
+//! pluggable [`multimodel::ModelScheduler`] (static split, weighted
+//! round-robin, or staleness-greedy), and every model re-solves the
+//! paper's `(τ_k, d_k)` program lazily over its own sub-fleet
+//! (per-model Σ d_k = D). With `M = 1, B = 1` the multi-model path
+//! reproduces the single-model async `CycleRecord` stream
+//! byte-for-byte (`rust/tests/multimodel.rs`) — the degenerate case is
+//! the differential oracle. Optional per-cycle Gauss–Markov link
+//! fading ([`channel::fading`], `ScenarioConfig.fading_rho`) drives
+//! time-varying re-allocation under churn in both engines.
 //!
 //! ## In-tree infrastructure substrates
 //!
@@ -71,6 +88,7 @@ pub mod energy;
 pub mod experiments;
 pub mod json;
 pub mod metrics;
+pub mod multimodel;
 pub mod runtime;
 pub mod sim;
 pub mod solver;

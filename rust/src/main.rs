@@ -21,16 +21,17 @@ use anyhow::{bail, Result};
 use asyncmel::aggregation::{AggregationRule, AsyncAggregator, StalenessDecay};
 use asyncmel::allocation::{make_allocator, AllocatorKind};
 use asyncmel::cli::Args;
-use asyncmel::config::{ChurnConfig, EngineKind, ScenarioConfig};
+use asyncmel::config::{ChurnConfig, EngineKind, Scenario, ScenarioConfig};
 use asyncmel::coordinator::{
     EngineOptions, EnginePolicy, EventEngine, ExecMode, Orchestrator, TrainOptions,
 };
-use asyncmel::data::{synth, SynthConfig};
-use asyncmel::experiments::{ablation, fig2, fig3, fleet_scale};
-use asyncmel::metrics::{fmt_f, Table};
+use asyncmel::data::{synth, SynthConfig, SynthDataset};
+use asyncmel::experiments::{ablation, fig2, fig3, fleet_scale, multi_model};
+use asyncmel::metrics::{fmt_f, fmt_opt_u, Table};
+use asyncmel::multimodel::{MultiModelConfig, MultiModelOptions, SchedulerKind};
 use asyncmel::runtime::{default_artifacts_dir, Runtime};
 
-const USAGE: &str = "usage: asyncmel <info|solve|fig2|fig3|train|fleet|ablation> [flags]
+const USAGE: &str = "usage: asyncmel <info|solve|fig2|fig3|train|fleet|multi|ablation> [flags]
   info                               environment + artifact status
   solve    --k N --t SECS            compare all allocation schemes
   fig2     --seeds N --csv PATH      staleness vs K sweep (paper Fig. 2)
@@ -39,9 +40,15 @@ const USAGE: &str = "usage: asyncmel <info|solve|fig2|fig3|train|fleet|ablation>
            --engine lockstep|event   coordinator engine (default: config)
            --async [--alpha F]       event engine: staleness-weighted async aggregation
            --churn-join R --churn-life S   event engine: joins/s + mean lifetime (s)
+           --models M --buffer B --scheduler static|round-robin|staleness-greedy
+                                     event engine: concurrent multi-model training
+           --fading-rho RHO          event engine: per-cycle Gauss-Markov link fading
   fleet    --ks 10,100,1000,5000 --cycles N --scheme S
            --churn-join R --churn-life S --csv PATH
                                      event-engine scaling sweep (phantom numerics)
+  multi    --ks 100,1000 --ms 1,2,4,8 --buffer B --scheduler S --budget N
+           --cycles N --scheme S --churn-join R --churn-life S --csv PATH
+                                     multi-model concurrency sweep (phantom numerics)
   ablation --seeds N --csv PATH      batch-bounds sensitivity (ABL-1)
 global: --config PATH (sparse scenario JSON override)";
 
@@ -196,7 +203,7 @@ fn cmd_fig3(base: ScenarioConfig, args: &Args) -> Result<()> {
     Ok(())
 }
 
-fn cmd_train(base: ScenarioConfig, args: &Args) -> Result<()> {
+fn cmd_train(mut base: ScenarioConfig, args: &Args) -> Result<()> {
     let k: usize = args.get_or("k", 10)?;
     let t: f64 = args.get_or("t", 15.0)?;
     let scheme: AllocatorKind = args.get_or("scheme", AllocatorKind::Relaxed)?;
@@ -205,9 +212,24 @@ fn cmd_train(base: ScenarioConfig, args: &Args) -> Result<()> {
     let lr: f32 = args.get_or("lr", 0.01)?;
     let samples: u64 = args.get_or("samples", 60_000)?;
     let mut engine: EngineKind = args.get_or("engine", base.engine)?;
-    if args.has("async") && engine == EngineKind::Lockstep {
-        // --async only exists on the event engine; asking for it implies it
-        eprintln!("note: --async implies --engine event");
+    let multi_flags_given = ["models", "buffer", "scheduler"]
+        .iter()
+        .any(|k| args.get(k).is_some());
+    let multi_requested = multi_flags_given || base.multimodel.is_multi();
+    if (args.has("async") || multi_requested) && engine == EngineKind::Lockstep {
+        if args.get("engine").is_some() && !multi_flags_given && !args.has("async") {
+            // an explicit --engine lockstep must not lose silently to a
+            // config-file multimodel section
+            bail!(
+                "the config requests multi-model training but --engine lockstep was given; \
+                 drop --engine lockstep or set multimodel.num_models = 1"
+            );
+        }
+        // these knobs only exist on the event engine; asking for them
+        // (on the CLI or via a multimodel config section) implies it
+        eprintln!(
+            "note: --async/--models/--buffer/--scheduler (or a multimodel config) imply --engine event"
+        );
         engine = EngineKind::Event;
     }
     let churn = churn_from_args(base.churn, args)?;
@@ -217,6 +239,29 @@ fn cmd_train(base: ScenarioConfig, args: &Args) -> Result<()> {
     if churn_flags_given && engine == EngineKind::Lockstep {
         bail!("churn flags require --engine event (the lock-step orchestrator has no churn model)");
     }
+    if args.get("fading-rho").is_some() {
+        let rho: f64 = args.require("fading-rho")?;
+        if !(0.0..=1.0).contains(&rho) {
+            bail!("--fading-rho must be in [0, 1], got {rho}");
+        }
+        if engine == EngineKind::Lockstep {
+            bail!("--fading-rho requires --engine event (per-cycle link evolution)");
+        }
+        base.fading_rho = Some(rho);
+    }
+    let models: usize = args.get_or("models", base.multimodel.num_models)?;
+    let buffer: usize = args.get_or("buffer", base.multimodel.buffer_size)?;
+    let scheduler: SchedulerKind = args.get_or("scheduler", base.multimodel.scheduler)?;
+    if models == 0 || buffer == 0 {
+        bail!("--models and --buffer must be >= 1");
+    }
+    // config weights carry over only when they still match the model count
+    let weights = if base.multimodel.weights.len() == models {
+        base.multimodel.weights.clone()
+    } else {
+        Vec::new()
+    };
+    let mm_cfg = MultiModelConfig::new(models, buffer, scheduler).with_weights(weights);
 
     let runtime = load_runtime();
     let scenario = base
@@ -236,6 +281,13 @@ fn cmd_train(base: ScenarioConfig, args: &Args) -> Result<()> {
         eval_every: 1,
         reallocate_each_cycle: false,
     };
+    if engine == EngineKind::Event && (mm_cfg.is_multi() || multi_flags_given) {
+        let alpha: f64 = args.get_or("alpha", 0.6)?;
+        if !(alpha > 0.0 && alpha <= 1.0) {
+            bail!("--alpha must be in (0, 1], got {alpha}");
+        }
+        return train_multi(scenario, scheme, aggregation, &runtime, ds, train_opts, mm_cfg, alpha);
+    }
     let records = match engine {
         EngineKind::Lockstep => {
             let mut orch =
@@ -289,6 +341,105 @@ fn cmd_train(base: ScenarioConfig, args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Multi-model training through the event engine (real numerics): one
+/// table row per (model, cycle) plus a per-model summary.
+#[allow(clippy::too_many_arguments)]
+fn train_multi(
+    scenario: Scenario,
+    scheme: AllocatorKind,
+    aggregation: AggregationRule,
+    runtime: &Runtime,
+    ds: SynthDataset,
+    train_opts: TrainOptions,
+    mm_cfg: MultiModelConfig,
+    alpha: f64,
+) -> Result<()> {
+    let mut eng = EventEngine::new(
+        scenario,
+        scheme,
+        aggregation,
+        ExecMode::Real { runtime, train: ds.train, test: ds.test },
+    )?;
+    let opts = MultiModelOptions {
+        train: train_opts,
+        aggregator: AsyncAggregator::new(alpha, StalenessDecay::Polynomial { a: 0.5 }),
+        multi: mm_cfg,
+        ..Default::default()
+    };
+    let report = eng.run_multi(&opts)?;
+    eprintln!(
+        "engine stats: {} events, {} arrivals, {} joins, {} leaves, {} re-solves, {} alive",
+        eng.stats.events,
+        eng.stats.arrivals,
+        eng.stats.joins,
+        eng.stats.leaves,
+        eng.stats.resolves,
+        eng.stats.final_alive
+    );
+    let mut table = Table::new(&[
+        "model", "cycle", "vtime_s", "train_loss", "accuracy", "max_stale", "util",
+    ]);
+    for (m, records) in report.records.iter().enumerate() {
+        for r in records {
+            table.row(&[
+                m.to_string(),
+                (r.cycle + 1).to_string(),
+                fmt_f(r.vtime_s, 1),
+                fmt_f(r.train_loss as f64, 4),
+                fmt_f(r.accuracy, 4),
+                r.max_staleness.to_string(),
+                fmt_f(r.utilization, 3),
+            ]);
+        }
+    }
+    println!("{}", table.render());
+    let mut summary = Table::new(&["model", "weight", "arrivals", "applied", "slots", "sum_d"]);
+    for s in &report.stats {
+        summary.row(&[
+            s.model.to_string(),
+            fmt_f(s.weight, 3),
+            s.arrivals.to_string(),
+            s.applied.to_string(),
+            s.assigned_slots.to_string(),
+            fmt_opt_u(s.final_sum_d),
+        ]);
+    }
+    println!("{}", summary.render());
+    Ok(())
+}
+
+fn cmd_multi(base: ScenarioConfig, args: &Args) -> Result<()> {
+    let ks: Vec<usize> = args.get_list_or("ks", vec![100, 1000])?;
+    let ms: Vec<usize> = args.get_list_or("ms", vec![1, 2, 4, 8])?;
+    let buffer: usize = args.get_or("buffer", 4)?;
+    let scheduler: SchedulerKind = args.get_or("scheduler", SchedulerKind::StalenessGreedy)?;
+    let cycles: usize = args.get_or("cycles", 6)?;
+    let scheme: AllocatorKind = args.get_or("scheme", AllocatorKind::Eta)?;
+    let budget: u64 = args.get_or("budget", 64)?;
+    let churn_base = if base.churn.is_enabled() { base.churn } else { ChurnConfig::new(1.0, 120.0) };
+    let churn = churn_from_args(churn_base, args)?;
+    let params = multi_model::MultiModelParams {
+        base,
+        ks,
+        ms,
+        buffer,
+        scheduler,
+        cycles,
+        scheme,
+        churn,
+        aggregator: AsyncAggregator::default(),
+        round_budget: if budget == 0 { None } else { Some(budget) },
+    };
+    let rows = multi_model::run(&params)?;
+    let table = multi_model::table(&rows);
+    println!("{}", table.render());
+    if let Some(path) = args.get("csv") {
+        table.save_csv(path)?;
+        println!("csv -> {path}");
+    }
+    Ok(())
+}
+
 fn cmd_fleet(base: ScenarioConfig, args: &Args) -> Result<()> {
     let ks: Vec<usize> = args.get_list_or("ks", vec![10, 100, 1000, 5000])?;
     let cycles: usize = args.get_or("cycles", 8)?;
@@ -338,6 +489,7 @@ fn main() -> Result<()> {
         Some("fig3") => cmd_fig3(base, &args),
         Some("train") => cmd_train(base, &args),
         Some("fleet") => cmd_fleet(base, &args),
+        Some("multi") => cmd_multi(base, &args),
         Some("ablation") => cmd_ablation(base, &args),
         Some(other) => bail!("unknown subcommand '{other}'\n{USAGE}"),
         None => {

@@ -94,6 +94,23 @@ pub fn fmt_f(v: f64, prec: usize) -> String {
     }
 }
 
+/// Format an optional float ("-" when absent) — sweep columns that only
+/// apply to some rows, e.g. rounds-to-target.
+pub fn fmt_opt_f(v: Option<f64>, prec: usize) -> String {
+    match v {
+        Some(x) => fmt_f(x, prec),
+        None => "-".to_string(),
+    }
+}
+
+/// Format an optional integer ("-" when absent).
+pub fn fmt_opt_u(v: Option<u64>) -> String {
+    match v {
+        Some(x) => x.to_string(),
+        None => "-".to_string(),
+    }
+}
+
 /// Online mean/min/max accumulator for sweep summaries.
 #[derive(Debug, Clone, Copy, Default)]
 pub struct Summary {
@@ -139,6 +156,14 @@ mod tests {
         assert_eq!(lines.len(), 4);
         assert!(lines[0].contains("scheme"));
         assert!(lines[2].starts_with("sai"));
+    }
+
+    #[test]
+    fn optional_formatters_render_dash() {
+        assert_eq!(fmt_opt_f(Some(1.25), 2), "1.25");
+        assert_eq!(fmt_opt_f(None, 2), "-");
+        assert_eq!(fmt_opt_u(Some(7)), "7");
+        assert_eq!(fmt_opt_u(None), "-");
     }
 
     #[test]

@@ -1,0 +1,850 @@
+//! Multi-model concurrent training — FedAST-style buffered async.
+//!
+//! The paper's orchestrator trains *one* global model. This subsystem
+//! turns the event engine into a multi-tenant simulator in the spirit
+//! of FedAST (arXiv:2406.00302): `M` model instances train
+//! concurrently over one shared fleet, each with its own parameters,
+//! [`AsyncAggregator`], staleness tracker and round budget. Three
+//! pieces:
+//!
+//! * [`ModelRegistry`] — the `M` concurrent [`ModelInstance`]s. Each
+//!   instance owns a **buffered aggregator**: client updates accumulate
+//!   in an update buffer and the server applies them (staleness-decayed
+//!   mixing, one server version bump per update) only once `B =
+//!   buffer_size` of them have arrived. `B = 1` degenerates to the
+//!   per-arrival [`crate::coordinator::EnginePolicy::Async`] behaviour
+//!   **byte-for-byte** — the single-model async path doubles as a
+//!   differential-testing oracle (`rust/tests/multimodel.rs`).
+//! * [`ModelScheduler`] — routes a freed learner (one whose upload just
+//!   arrived, or a newly joined node) to its next model.
+//!   [`SchedulerKind::Static`] pins each slot to a weighted static
+//!   split, [`SchedulerKind::RoundRobin`] cycles freed slots through
+//!   the models by weighted deficit, and
+//!   [`SchedulerKind::StalenessGreedy`] assigns the slot to the model
+//!   whose **oldest in-flight update is stalest** (a model with no
+//!   in-flight work at all is treated as infinitely starved).
+//! * [`SubFleetAlloc`] — the per-model allocation state: each model
+//!   solves the paper's `(τ_k, d_k)` program lazily over *its own*
+//!   assigned sub-fleet (Σ d_k = D per model), re-solving only when
+//!   that sub-fleet's composition changes. Slot→position lookups are
+//!   O(1) via an index maintained on re-solve.
+//!
+//! The event loop itself lives in
+//! [`crate::coordinator::EventEngine::run_multi`]; this module is the
+//! bookkeeping layer it drives. Staleness here is measured in *server
+//! versions of the owning model* (the event-time analogue of eq. 6),
+//! so buffering directly shows up as extra staleness — the FedAST
+//! trade-off the `experiments::multi_model` sweep quantifies.
+
+use std::collections::BTreeMap;
+
+use crate::aggregation::{AsyncAggregator, ParamSet};
+use crate::allocation::Allocation;
+use crate::coordinator::{record_digest, CycleRecord, TrainOptions};
+use crate::costmodel::LearnerCost;
+
+/// Which freed-slot routing policy the engine uses.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum SchedulerKind {
+    /// Weighted static split: every slot has a fixed home model.
+    #[default]
+    Static,
+    /// Weighted deficit round-robin over the active models.
+    RoundRobin,
+    /// Route to the model whose oldest in-flight update is stalest.
+    StalenessGreedy,
+}
+
+impl SchedulerKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            SchedulerKind::Static => "static",
+            SchedulerKind::RoundRobin => "round-robin",
+            SchedulerKind::StalenessGreedy => "staleness-greedy",
+        }
+    }
+
+    pub fn all() -> [SchedulerKind; 3] {
+        [
+            SchedulerKind::Static,
+            SchedulerKind::RoundRobin,
+            SchedulerKind::StalenessGreedy,
+        ]
+    }
+
+    /// Parse from a CLI/JSON token.
+    pub fn parse(s: &str) -> Option<SchedulerKind> {
+        SchedulerKind::all()
+            .into_iter()
+            .find(|k| k.name().eq_ignore_ascii_case(s))
+    }
+}
+
+impl std::str::FromStr for SchedulerKind {
+    type Err = std::io::Error;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        SchedulerKind::parse(s).ok_or_else(|| {
+            std::io::Error::new(
+                std::io::ErrorKind::InvalidInput,
+                format!("unknown scheduler '{s}' (static|round-robin|staleness-greedy)"),
+            )
+        })
+    }
+}
+
+/// Declarative multi-model knobs ([`crate::config::ScenarioConfig`]).
+#[derive(Debug, Clone, PartialEq)]
+pub struct MultiModelConfig {
+    /// Number of concurrent model instances `M` (1 = single-tenant).
+    pub num_models: usize,
+    /// Buffered-aggregation size `B`: apply server updates only after
+    /// `B` client updates accumulate. `B = 1` reproduces the
+    /// per-arrival async path byte-for-byte.
+    pub buffer_size: usize,
+    /// Freed-slot routing policy.
+    pub scheduler: SchedulerKind,
+    /// Per-model scheduling weights (empty = uniform). Used by the
+    /// static and round-robin schedulers; staleness-greedy ignores
+    /// them.
+    pub weights: Vec<f64>,
+}
+
+impl MultiModelConfig {
+    /// The single-tenant degenerate case (`M = 1`, `B = 1`, static).
+    pub fn single() -> Self {
+        Self {
+            num_models: 1,
+            buffer_size: 1,
+            scheduler: SchedulerKind::Static,
+            weights: Vec::new(),
+        }
+    }
+
+    pub fn new(num_models: usize, buffer_size: usize, scheduler: SchedulerKind) -> Self {
+        assert!(num_models >= 1, "need at least one model");
+        assert!(buffer_size >= 1, "buffer size must be >= 1");
+        Self { num_models, buffer_size, scheduler, weights: Vec::new() }
+    }
+
+    pub fn with_weights(mut self, weights: Vec<f64>) -> Self {
+        self.weights = weights;
+        self
+    }
+
+    /// Anything beyond the plain per-arrival single-model async path?
+    pub fn is_multi(&self) -> bool {
+        self.num_models > 1 || self.buffer_size > 1
+    }
+
+    /// Scheduling weights normalized to sum 1 (uniform when unset).
+    pub fn normalized_weights(&self) -> Vec<f64> {
+        let m = self.num_models;
+        if self.weights.is_empty() {
+            return vec![1.0 / m as f64; m];
+        }
+        assert_eq!(self.weights.len(), m, "need one weight per model");
+        assert!(self.weights.iter().all(|&w| w > 0.0), "weights must be > 0");
+        let sum: f64 = self.weights.iter().sum();
+        self.weights.iter().map(|w| w / sum).collect()
+    }
+}
+
+impl Default for MultiModelConfig {
+    fn default() -> Self {
+        Self::single()
+    }
+}
+
+/// One client update parked in a model's aggregation buffer.
+#[derive(Debug, Clone)]
+pub struct BufferedUpdate {
+    /// Local parameters (None in phantom exec mode).
+    pub params: Option<ParamSet>,
+    /// Server-version staleness measured at arrival.
+    pub staleness: u64,
+    pub train_loss: f32,
+}
+
+/// One of the `M` concurrently trained models.
+#[derive(Debug, Clone)]
+pub struct ModelInstance {
+    pub id: usize,
+    /// Normalized scheduling weight.
+    pub weight: f64,
+    pub aggregator: AsyncAggregator,
+    /// Buffered-aggregation size `B`.
+    pub buffer_size: usize,
+    /// Server version = applied updates so far.
+    pub version: u64,
+    /// Client updates that reached this model's server.
+    pub arrivals: u64,
+    /// Stop scheduling work for this model once `version` reaches the
+    /// budget (None = unbounded).
+    pub round_budget: Option<u64>,
+    /// Stop-condition accuracy (Real exec mode only).
+    pub target_accuracy: Option<f64>,
+    /// Cycle index at which the round budget was first met.
+    pub budget_cycle: Option<usize>,
+    /// Cycle index at which the accuracy target was first met.
+    pub target_cycle: Option<usize>,
+    buffer: Vec<BufferedUpdate>,
+    /// In-flight dispatches: model version at dispatch → count. The
+    /// BTreeMap keeps the oldest (stalest) version at `keys().next()`,
+    /// so the staleness-greedy scheduler reads it in O(log n).
+    in_flight: BTreeMap<u64, usize>,
+    /// Per-cycle telemetry window (staleness of this window's arrivals).
+    window_s: Vec<u64>,
+    window_losses: Vec<f32>,
+}
+
+impl ModelInstance {
+    fn new(id: usize, weight: f64, aggregator: AsyncAggregator, buffer_size: usize) -> Self {
+        assert!(buffer_size >= 1);
+        Self {
+            id,
+            weight,
+            aggregator,
+            buffer_size,
+            version: 0,
+            arrivals: 0,
+            round_budget: None,
+            target_accuracy: None,
+            budget_cycle: None,
+            target_cycle: None,
+            buffer: Vec::new(),
+            in_flight: BTreeMap::new(),
+            window_s: Vec::new(),
+            window_losses: Vec::new(),
+        }
+    }
+
+    /// Has this model consumed its round budget?
+    pub fn budget_exhausted(&self) -> bool {
+        self.round_budget.map(|b| self.version >= b).unwrap_or(false)
+    }
+
+    /// Staleness (in this model's server versions) of an update
+    /// dispatched at `version_at_dispatch`.
+    pub fn staleness_of(&self, version_at_dispatch: u64) -> u64 {
+        self.version.saturating_sub(version_at_dispatch)
+    }
+
+    /// Register a dispatched round that will produce an upload.
+    pub fn record_dispatch(&mut self, version_at_dispatch: u64) {
+        *self.in_flight.entry(version_at_dispatch).or_insert(0) += 1;
+    }
+
+    /// Retire an in-flight round (its upload arrived — or was lost to a
+    /// mid-flight departure).
+    pub fn complete_dispatch(&mut self, version_at_dispatch: u64) {
+        if let Some(n) = self.in_flight.get_mut(&version_at_dispatch) {
+            *n -= 1;
+            if *n == 0 {
+                self.in_flight.remove(&version_at_dispatch);
+            }
+        }
+    }
+
+    /// Staleness of the oldest in-flight round (None = nothing in
+    /// flight).
+    pub fn oldest_inflight_staleness(&self) -> Option<u64> {
+        self.in_flight
+            .keys()
+            .next()
+            .map(|&v| self.version.saturating_sub(v))
+    }
+
+    /// Ingest an arrived client update: telemetry, buffer, and — once
+    /// `B` updates are parked — the buffered server flush (each update
+    /// mixed with its *own* arrival-time staleness weight, one version
+    /// bump per update, in arrival order). Returns how many updates
+    /// were applied (0 while the buffer is still filling).
+    pub fn absorb(&mut self, global: &mut Option<ParamSet>, upd: BufferedUpdate) -> usize {
+        self.arrivals += 1;
+        self.window_s.push(upd.staleness);
+        if upd.train_loss.is_finite() {
+            self.window_losses.push(upd.train_loss);
+        }
+        self.buffer.push(upd);
+        if self.buffer.len() < self.buffer_size {
+            return 0;
+        }
+        let applied = self.buffer.len();
+        for u in std::mem::take(&mut self.buffer) {
+            if let (Some(g), Some(p)) = (global.as_mut(), u.params.as_ref()) {
+                self.aggregator.mix(g, p, u.staleness);
+            }
+            self.version += 1;
+        }
+        applied
+    }
+
+    /// Drain the per-cycle telemetry window:
+    /// `(arrived, mean_train_loss, max_staleness, avg_staleness)`.
+    pub fn take_window(&mut self) -> (usize, f32, u64, f64) {
+        let arrived = self.window_s.len();
+        let train_loss = if self.window_losses.is_empty() {
+            f32::NAN
+        } else {
+            self.window_losses.iter().sum::<f32>() / self.window_losses.len() as f32
+        };
+        let max_s = self.window_s.iter().copied().max().unwrap_or(0);
+        let avg_s = if self.window_s.is_empty() {
+            0.0
+        } else {
+            self.window_s.iter().sum::<u64>() as f64 / self.window_s.len() as f64
+        };
+        self.window_s.clear();
+        self.window_losses.clear();
+        (arrived, train_loss, max_s, avg_s)
+    }
+}
+
+/// The `M` concurrent model instances.
+#[derive(Debug, Clone)]
+pub struct ModelRegistry {
+    pub models: Vec<ModelInstance>,
+}
+
+impl ModelRegistry {
+    pub fn new(cfg: &MultiModelConfig, aggregator: AsyncAggregator) -> Self {
+        let weights = cfg.normalized_weights();
+        let models = (0..cfg.num_models)
+            .map(|id| ModelInstance::new(id, weights[id], aggregator, cfg.buffer_size))
+            .collect();
+        Self { models }
+    }
+
+    pub fn len(&self) -> usize {
+        self.models.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.models.is_empty()
+    }
+
+    /// Models still eligible for new work, ascending by id.
+    pub fn active_ids(&self) -> Vec<usize> {
+        self.models
+            .iter()
+            .filter(|m| !m.budget_exhausted())
+            .map(|m| m.id)
+            .collect()
+    }
+}
+
+/// Object-safe freed-slot routing policy.
+pub trait ModelScheduler {
+    fn name(&self) -> &'static str;
+
+    /// Route a freed (or newly joined) learner `slot` to a model.
+    /// `active` is the ascending list of schedulable model ids; callers
+    /// guarantee it is non-empty, and the pick must come from it.
+    fn pick(&mut self, slot: usize, registry: &ModelRegistry, active: &[usize]) -> usize;
+}
+
+/// Weighted deficit pick: the model with the largest `w_m·(n+1) −
+/// served_m` credit, ties to the lowest id. Uniform weights degrade to
+/// plain round-robin.
+fn deficit_pick(weights: &[f64], served: &[u64], total: u64, candidates: &[usize]) -> usize {
+    let mut best = candidates[0];
+    let mut best_credit = f64::NEG_INFINITY;
+    for &m in candidates {
+        let credit = weights[m] * (total + 1) as f64 - served[m] as f64;
+        if credit > best_credit + 1e-12 {
+            best = m;
+            best_credit = credit;
+        }
+    }
+    best
+}
+
+/// Pin each slot to a fixed home model (weighted split of the fleet);
+/// freed slots always return home. If the home model's budget is
+/// exhausted, the slot falls back to the cyclically-next active model
+/// without moving house.
+pub struct StaticSplit {
+    weights: Vec<f64>,
+    /// slot → home model + 1 (0 = not yet assigned).
+    home: Vec<usize>,
+    served: Vec<u64>,
+    total: u64,
+}
+
+impl StaticSplit {
+    pub fn new(weights: Vec<f64>) -> Self {
+        let m = weights.len();
+        Self { weights, home: Vec::new(), served: vec![0; m], total: 0 }
+    }
+}
+
+impl ModelScheduler for StaticSplit {
+    fn name(&self) -> &'static str {
+        "static"
+    }
+
+    fn pick(&mut self, slot: usize, _registry: &ModelRegistry, active: &[usize]) -> usize {
+        if self.home.len() <= slot {
+            self.home.resize(slot + 1, 0);
+        }
+        if self.home[slot] == 0 {
+            let all: Vec<usize> = (0..self.weights.len()).collect();
+            let m = deficit_pick(&self.weights, &self.served, self.total, &all);
+            self.served[m] += 1;
+            self.total += 1;
+            self.home[slot] = m + 1;
+        }
+        let home = self.home[slot] - 1;
+        if active.contains(&home) {
+            return home;
+        }
+        // budget-exhausted home: borrow the cyclically-next active model
+        *active.iter().find(|&&m| m > home).unwrap_or(&active[0])
+    }
+}
+
+/// Weighted deficit round-robin over the active models; every freed
+/// slot re-picks, so learners migrate freely between models.
+pub struct RoundRobin {
+    weights: Vec<f64>,
+    served: Vec<u64>,
+    total: u64,
+}
+
+impl RoundRobin {
+    pub fn new(weights: Vec<f64>) -> Self {
+        let m = weights.len();
+        Self { weights, served: vec![0; m], total: 0 }
+    }
+}
+
+impl ModelScheduler for RoundRobin {
+    fn name(&self) -> &'static str {
+        "round-robin"
+    }
+
+    fn pick(&mut self, _slot: usize, _registry: &ModelRegistry, active: &[usize]) -> usize {
+        let m = deficit_pick(&self.weights, &self.served, self.total, active);
+        self.served[m] += 1;
+        self.total += 1;
+        m
+    }
+}
+
+/// FedAST-style greedy: route the freed slot to the model whose oldest
+/// in-flight update is stalest (a model with nothing in flight is
+/// treated as infinitely starved). Ties break toward the model this
+/// scheduler has fed least, then the lowest id — which also spreads the
+/// initial cold-start assignment evenly.
+pub struct StalenessGreedy {
+    served: Vec<u64>,
+}
+
+impl StalenessGreedy {
+    pub fn new(num_models: usize) -> Self {
+        Self { served: vec![0; num_models] }
+    }
+}
+
+impl ModelScheduler for StalenessGreedy {
+    fn name(&self) -> &'static str {
+        "staleness-greedy"
+    }
+
+    fn pick(&mut self, _slot: usize, registry: &ModelRegistry, active: &[usize]) -> usize {
+        let mut best = active[0];
+        let mut best_key = (0u64, u64::MAX);
+        let mut first = true;
+        for &m in active {
+            let stale = registry.models[m]
+                .oldest_inflight_staleness()
+                .unwrap_or(u64::MAX);
+            // maximize staleness, then minimize how often we fed it
+            let key = (stale, u64::MAX - self.served[m]);
+            if first || key > best_key {
+                best = m;
+                best_key = key;
+                first = false;
+            }
+        }
+        self.served[best] += 1;
+        best
+    }
+}
+
+/// Instantiate the configured scheduler.
+pub fn make_scheduler(cfg: &MultiModelConfig) -> Box<dyn ModelScheduler + Send + Sync> {
+    let weights = cfg.normalized_weights();
+    match cfg.scheduler {
+        SchedulerKind::Static => Box::new(StaticSplit::new(weights)),
+        SchedulerKind::RoundRobin => Box::new(RoundRobin::new(weights)),
+        SchedulerKind::StalenessGreedy => Box::new(StalenessGreedy::new(cfg.num_models)),
+    }
+}
+
+/// Per-model allocation over the model's assigned sub-fleet, with an
+/// O(1) slot→position index maintained on re-solve (the event engine's
+/// per-arrival hot path).
+#[derive(Debug, Clone, Default)]
+pub struct SubFleetAlloc {
+    pub alloc: Option<Allocation>,
+    /// Costs of the sub-fleet, in allocation order.
+    pub costs: Vec<LearnerCost>,
+    /// Slot ids of the sub-fleet, in allocation order.
+    pub slots: Vec<usize>,
+    /// slot → allocation position + 1 (0 = not in this sub-fleet).
+    slot_pos: Vec<usize>,
+    /// Sub-fleet composition changed since the last solve.
+    pub dirty: bool,
+    /// Host wall-clock of this model's most recent solve (ms).
+    pub last_solve_ms: f64,
+}
+
+impl SubFleetAlloc {
+    pub fn new() -> Self {
+        Self { dirty: true, ..Default::default() }
+    }
+
+    /// Install a fresh solve over `slots` (allocation order), rebuilding
+    /// the O(1) index. `n_slots_total` sizes the index (all slot ids
+    /// ever created, alive or not).
+    pub fn install(
+        &mut self,
+        alloc: Allocation,
+        costs: Vec<LearnerCost>,
+        slots: Vec<usize>,
+        n_slots_total: usize,
+    ) {
+        self.slot_pos.clear();
+        self.slot_pos.resize(n_slots_total, 0);
+        for (pos, &s) in slots.iter().enumerate() {
+            self.slot_pos[s] = pos + 1;
+        }
+        self.costs = costs;
+        self.slots = slots;
+        self.alloc = Some(alloc);
+        self.dirty = false;
+    }
+
+    /// Mark the sub-fleet empty (no members → nothing to solve).
+    pub fn clear(&mut self, n_slots_total: usize) {
+        self.alloc = None;
+        self.costs.clear();
+        self.slots.clear();
+        self.slot_pos.clear();
+        self.slot_pos.resize(n_slots_total, 0);
+        self.dirty = false;
+        self.last_solve_ms = 0.0;
+    }
+
+    /// O(1) assignment lookup for a slot, if it is in this sub-fleet.
+    pub fn assignment(&self, slot: usize) -> Option<(u64, u64)> {
+        let pos = *self.slot_pos.get(slot)?;
+        if pos == 0 {
+            return None;
+        }
+        let alloc = self.alloc.as_ref()?;
+        Some((alloc.tau[pos - 1], alloc.d[pos - 1]))
+    }
+
+    /// Σ d over the current allocation (None when the sub-fleet is
+    /// empty). A valid per-model solve distributes the full dataset.
+    pub fn sum_d(&self) -> Option<u64> {
+        self.alloc.as_ref().map(|a| a.d.iter().sum())
+    }
+}
+
+/// Options for [`crate::coordinator::EventEngine::run_multi`].
+#[derive(Debug, Clone, Default)]
+pub struct MultiModelOptions {
+    pub train: TrainOptions,
+    /// Server mixing rule shared by all model instances.
+    pub aggregator: AsyncAggregator,
+    pub multi: MultiModelConfig,
+    /// Per-model applied-update budgets (empty = unbounded).
+    pub round_budgets: Vec<Option<u64>>,
+    /// Per-model target accuracies (Real exec mode only; empty = none).
+    pub target_accuracies: Vec<Option<f64>>,
+}
+
+/// End-of-run summary for one model instance.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ModelStats {
+    pub model: usize,
+    pub weight: f64,
+    /// Client updates that reached this model.
+    pub arrivals: u64,
+    /// Applied server updates (= final server version).
+    pub applied: u64,
+    /// Alive slots assigned to this model at run end.
+    pub assigned_slots: usize,
+    /// Σ d of the model's final sub-fleet allocation (None = the model
+    /// never had learners).
+    pub final_sum_d: Option<u64>,
+    /// Cycle at which the round budget was met (None = never / unset).
+    pub budget_cycle: Option<usize>,
+    /// Cycle at which the accuracy target was met (None = never / unset).
+    pub target_cycle: Option<usize>,
+}
+
+/// What [`crate::coordinator::EventEngine::run_multi`] returns.
+#[derive(Debug, Clone)]
+pub struct MultiModelReport {
+    /// One [`CycleRecord`] stream per model (`records[m][cycle]`).
+    pub records: Vec<Vec<CycleRecord>>,
+    pub stats: Vec<ModelStats>,
+}
+
+impl MultiModelReport {
+    pub fn num_models(&self) -> usize {
+        self.records.len()
+    }
+}
+
+/// Canonical text form of a multi-model run for determinism tests:
+/// every model's [`record_digest`] plus its deterministic stats (host
+/// wall-clock excluded, as in the single-model digest).
+pub fn report_digest(report: &MultiModelReport) -> String {
+    let mut out = String::new();
+    for (m, records) in report.records.iter().enumerate() {
+        let s = &report.stats[m];
+        out.push_str(&format!(
+            "model={m} arrivals={} applied={} assigned={} sum_d={:?} budget_cycle={:?}\n",
+            s.arrivals, s.applied, s.assigned_slots, s.final_sum_d, s.budget_cycle,
+        ));
+        out.push_str(&record_digest(records));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::aggregation::StalenessDecay;
+
+    fn registry(m: usize, b: usize) -> ModelRegistry {
+        let cfg = MultiModelConfig::new(m, b, SchedulerKind::Static);
+        ModelRegistry::new(&cfg, AsyncAggregator::default())
+    }
+
+    #[test]
+    fn scheduler_kind_parses() {
+        assert_eq!(SchedulerKind::parse("static"), Some(SchedulerKind::Static));
+        assert_eq!(
+            SchedulerKind::parse("ROUND-ROBIN"),
+            Some(SchedulerKind::RoundRobin)
+        );
+        assert_eq!(
+            "staleness-greedy".parse::<SchedulerKind>().unwrap(),
+            SchedulerKind::StalenessGreedy
+        );
+        assert!(SchedulerKind::parse("fifo").is_none());
+        assert!("fifo".parse::<SchedulerKind>().is_err());
+    }
+
+    #[test]
+    fn normalized_weights_default_to_uniform() {
+        let cfg = MultiModelConfig::new(4, 1, SchedulerKind::Static);
+        let w = cfg.normalized_weights();
+        assert_eq!(w.len(), 4);
+        for x in &w {
+            assert!((x - 0.25).abs() < 1e-12);
+        }
+        let cfg = cfg.with_weights(vec![1.0, 1.0, 2.0, 4.0]);
+        let w = cfg.normalized_weights();
+        assert!((w.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+        assert!((w[3] - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    #[should_panic]
+    fn weight_count_mismatch_rejected() {
+        MultiModelConfig::new(3, 1, SchedulerKind::Static)
+            .with_weights(vec![1.0, 2.0])
+            .normalized_weights();
+    }
+
+    #[test]
+    fn buffered_absorb_flushes_at_b() {
+        let cfg = MultiModelConfig::new(1, 3, SchedulerKind::Static);
+        let mut reg = ModelRegistry::new(
+            &cfg,
+            AsyncAggregator::new(0.5, StalenessDecay::Constant),
+        );
+        let mi = &mut reg.models[0];
+        let mut global: Option<ParamSet> = Some(vec![vec![0.0]]);
+        let upd = |s| BufferedUpdate {
+            params: Some(vec![vec![1.0]]),
+            staleness: s,
+            train_loss: 0.5,
+        };
+        assert_eq!(mi.absorb(&mut global, upd(0)), 0);
+        assert_eq!(mi.absorb(&mut global, upd(0)), 0);
+        assert_eq!(mi.version, 0, "no server update before the buffer fills");
+        assert_eq!(global.as_ref().unwrap()[0][0], 0.0);
+        assert_eq!(mi.absorb(&mut global, upd(0)), 3);
+        assert_eq!(mi.version, 3, "one version bump per applied update");
+        // three sequential α=0.5 mixes toward 1.0: 0.5, 0.75, 0.875
+        assert!((global.as_ref().unwrap()[0][0] - 0.875).abs() < 1e-6);
+        assert_eq!(mi.arrivals, 3);
+    }
+
+    #[test]
+    fn b1_absorb_is_per_arrival() {
+        let mut reg = registry(1, 1);
+        let mut global: Option<ParamSet> = None;
+        let mi = &mut reg.models[0];
+        for i in 0..5u64 {
+            let applied = mi.absorb(
+                &mut global,
+                BufferedUpdate { params: None, staleness: 0, train_loss: f32::NAN },
+            );
+            assert_eq!(applied, 1);
+            assert_eq!(mi.version, i + 1);
+        }
+    }
+
+    #[test]
+    fn in_flight_tracking_finds_the_oldest() {
+        let mut reg = registry(1, 1);
+        let mi = &mut reg.models[0];
+        assert_eq!(mi.oldest_inflight_staleness(), None);
+        mi.record_dispatch(0);
+        mi.record_dispatch(0);
+        mi.record_dispatch(2);
+        mi.version = 5;
+        assert_eq!(mi.oldest_inflight_staleness(), Some(5));
+        mi.complete_dispatch(0);
+        assert_eq!(mi.oldest_inflight_staleness(), Some(5), "still one v0 in flight");
+        mi.complete_dispatch(0);
+        assert_eq!(mi.oldest_inflight_staleness(), Some(3));
+        mi.complete_dispatch(2);
+        assert_eq!(mi.oldest_inflight_staleness(), None);
+    }
+
+    #[test]
+    fn take_window_summarizes_and_clears() {
+        let mut reg = registry(1, 1);
+        let mut global: Option<ParamSet> = None;
+        let mi = &mut reg.models[0];
+        for s in [1u64, 3, 2] {
+            mi.absorb(
+                &mut global,
+                BufferedUpdate { params: None, staleness: s, train_loss: 0.25 },
+            );
+        }
+        let (arrived, loss, max_s, avg_s) = mi.take_window();
+        assert_eq!(arrived, 3);
+        assert!((loss - 0.25).abs() < 1e-6);
+        assert_eq!(max_s, 3);
+        assert!((avg_s - 2.0).abs() < 1e-12);
+        let (arrived, loss, max_s, avg_s) = mi.take_window();
+        assert_eq!((arrived, max_s), (0, 0));
+        assert!(loss.is_nan());
+        assert_eq!(avg_s, 0.0);
+    }
+
+    #[test]
+    fn static_split_is_sticky_and_proportional() {
+        let cfg = MultiModelConfig::new(2, 1, SchedulerKind::Static)
+            .with_weights(vec![3.0, 1.0]);
+        let reg = ModelRegistry::new(&cfg, AsyncAggregator::default());
+        let mut s = StaticSplit::new(cfg.normalized_weights());
+        let active = [0usize, 1];
+        let first: Vec<usize> = (0..8).map(|i| s.pick(i, &reg, &active)).collect();
+        // 3:1 split over 8 slots → 6 on model 0, 2 on model 1
+        assert_eq!(first.iter().filter(|&&m| m == 0).count(), 6, "{first:?}");
+        // sticky: re-picking any slot returns the same home
+        for i in 0..8 {
+            assert_eq!(s.pick(i, &reg, &active), first[i]);
+        }
+        // home exhausted → cyclic fallback without reassignment
+        let slot0_home = first[0];
+        let other = 1 - slot0_home;
+        assert_eq!(s.pick(0, &reg, &[other]), other);
+        assert_eq!(s.pick(0, &reg, &active), slot0_home);
+    }
+
+    #[test]
+    fn round_robin_cycles_uniformly() {
+        let cfg = MultiModelConfig::new(3, 1, SchedulerKind::RoundRobin);
+        let reg = ModelRegistry::new(&cfg, AsyncAggregator::default());
+        let mut s = RoundRobin::new(cfg.normalized_weights());
+        let picks: Vec<usize> = (0..6).map(|i| s.pick(i, &reg, &[0, 1, 2])).collect();
+        assert_eq!(picks, vec![0, 1, 2, 0, 1, 2]);
+        // restricted active set keeps cycling inside it
+        let picks: Vec<usize> = (6..10).map(|i| s.pick(i, &reg, &[0, 2])).collect();
+        assert!(picks.iter().all(|m| [0usize, 2].contains(m)), "{picks:?}");
+    }
+
+    #[test]
+    fn staleness_greedy_feeds_the_starving_model() {
+        let mut reg = registry(3, 1);
+        let mut s = StalenessGreedy::new(3);
+        let active = [0usize, 1, 2];
+        // cold start, no in-flight anywhere: spreads by served count
+        let cold: Vec<usize> = (0..3).map(|i| s.pick(i, &reg, &active)).collect();
+        assert_eq!(cold, vec![0, 1, 2]);
+        // model 1 now has an ancient in-flight round; the rest are fresh
+        for m in 0..3 {
+            reg.models[m].record_dispatch(0);
+        }
+        reg.models[1].version = 10;
+        assert_eq!(s.pick(3, &reg, &active), 1);
+        // a model with nothing in flight at all out-starves everyone
+        reg.models[2].complete_dispatch(0);
+        assert_eq!(s.pick(4, &reg, &active), 2);
+    }
+
+    #[test]
+    fn schedulers_always_pick_from_active() {
+        let reg = registry(4, 1);
+        let cfg = MultiModelConfig::new(4, 1, SchedulerKind::Static);
+        let mut scheds: Vec<Box<dyn ModelScheduler + Send + Sync>> = vec![
+            Box::new(StaticSplit::new(cfg.normalized_weights())),
+            Box::new(RoundRobin::new(cfg.normalized_weights())),
+            Box::new(StalenessGreedy::new(4)),
+        ];
+        let active = [1usize, 3];
+        for sched in scheds.iter_mut() {
+            for slot in 0..32 {
+                let m = sched.pick(slot, &reg, &active);
+                assert!(active.contains(&m), "{} picked inactive {m}", sched.name());
+            }
+        }
+    }
+
+    #[test]
+    fn subfleet_alloc_index_round_trips() {
+        let mut sub = SubFleetAlloc::new();
+        assert!(sub.dirty);
+        let alloc = Allocation { tau: vec![3, 5], d: vec![100, 200] };
+        let costs = vec![
+            LearnerCost::new(1e-3, 1e-4, 0.3),
+            LearnerCost::new(2e-3, 1e-4, 0.4),
+        ];
+        sub.install(alloc, costs, vec![2, 7], 10);
+        assert!(!sub.dirty);
+        assert_eq!(sub.assignment(2), Some((3, 100)));
+        assert_eq!(sub.assignment(7), Some((5, 200)));
+        assert_eq!(sub.assignment(0), None);
+        assert_eq!(sub.assignment(9), None);
+        assert_eq!(sub.assignment(99), None, "out-of-range slot is just absent");
+        assert_eq!(sub.sum_d(), Some(300));
+        sub.clear(10);
+        assert_eq!(sub.assignment(2), None);
+        assert_eq!(sub.sum_d(), None);
+    }
+
+    #[test]
+    fn registry_active_ids_respect_budgets() {
+        let mut reg = registry(3, 1);
+        assert_eq!(reg.active_ids(), vec![0, 1, 2]);
+        assert_eq!(reg.len(), 3);
+        assert!(!reg.is_empty());
+        reg.models[1].round_budget = Some(2);
+        reg.models[1].version = 2;
+        assert!(reg.models[1].budget_exhausted());
+        assert_eq!(reg.active_ids(), vec![0, 2]);
+    }
+}

@@ -4,6 +4,20 @@
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
+echo "=== lint: cargo fmt --check ==="
+if cargo fmt --version >/dev/null 2>&1; then
+  cargo fmt --all -- --check
+else
+  echo "note: rustfmt unavailable — skipping format check"
+fi
+
+echo "=== lint: cargo clippy -- -D warnings ==="
+if cargo clippy --version >/dev/null 2>&1; then
+  cargo clippy --all-targets -- -D warnings
+else
+  echo "note: clippy unavailable — skipping lint check"
+fi
+
 echo "=== tier-1: cargo build --release ==="
 cargo build --release
 
