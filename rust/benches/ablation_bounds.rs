@@ -1,20 +1,25 @@
 //! ABL-1: batch-bounds sensitivity (regeneration harness + timing).
 //!
 //! Prints the staleness-vs-(d_l, d_u) table justifying the default
-//! (0.2, 2.5)·d/K box, and times the SAI allocator under the tightest
-//! and loosest boxes (box width changes the improve-loop work).
+//! (0.2, 2.5)·d/K box (skipped under `--smoke`), and times the SAI
+//! allocator under the tightest and loosest boxes (box width changes
+//! the improve-loop work). `--json PATH` writes machine-readable
+//! results (scripts/bench_check.sh).
 
 use asyncmel::allocation::{make_allocator, AllocatorKind};
-use asyncmel::benchkit::{bench, group, BenchConfig};
+use asyncmel::benchkit::{group, BenchConfig, BenchRun};
 use asyncmel::config::ScenarioConfig;
 use asyncmel::experiments::ablation;
 
 fn main() {
-    let params = ablation::AblationParams::default();
-    let rows = ablation::run(&params).expect("ablation sweep");
-    println!("\n========= ABL-1 — staleness vs batch bounds (7f) =========");
-    println!("{}", ablation::table(&rows).render());
-    println!("==========================================================\n");
+    let mut run = BenchRun::from_env("ablation_bounds");
+    if !run.smoke() {
+        let params = ablation::AblationParams::default();
+        let rows = ablation::run(&params).expect("ablation sweep");
+        println!("\n========= ABL-1 — staleness vs batch bounds (7f) =========");
+        println!("{}", ablation::table(&rows).render());
+        println!("==========================================================\n");
+    }
 
     group("sai allocator by bounds width @ K=20");
     let cfg = BenchConfig::default();
@@ -25,7 +30,7 @@ fn main() {
             .with_bound_fracs(lo, hi)
             .build();
         let alloc = make_allocator(AllocatorKind::Sai);
-        bench(&format!("sai/bounds=({lo},{hi})"), &cfg, || {
+        run.bench(&format!("sai/bounds=({lo},{hi})"), &cfg, || {
             alloc
                 .allocate(
                     &scenario.costs,
@@ -36,4 +41,6 @@ fn main() {
                 .unwrap()
         });
     }
+
+    run.finish().expect("bench json");
 }

@@ -2,12 +2,16 @@
 //!
 //! `cargo bench --bench fig2_staleness` does two things:
 //! 1. prints the full figure table (the regeneration harness — the rows
-//!    the paper plots, recorded in EXPERIMENTS.md);
+//!    the paper plots, recorded in EXPERIMENTS.md; skipped under
+//!    `--smoke`);
 //! 2. times the per-cycle allocation solve for each scheme at the
 //!    paper's largest operating point (K = 20) — the L3 hot path.
+//!
+//! Passthrough flags: `--smoke` (fast CI config), `--json PATH`
+//! (machine-readable results; see scripts/bench_check.sh).
 
 use asyncmel::allocation::{make_allocator, AllocatorKind};
-use asyncmel::benchkit::{bench, group, BenchConfig};
+use asyncmel::benchkit::{group, BenchConfig, BenchRun};
 use asyncmel::config::ScenarioConfig;
 use asyncmel::experiments::fig2;
 
@@ -23,7 +27,10 @@ fn print_figure_table() {
 }
 
 fn main() {
-    print_figure_table();
+    let mut run = BenchRun::from_env("fig2_staleness");
+    if !run.smoke() {
+        print_figure_table();
+    }
 
     group("allocate @ K=20, T=7.5s (per-cycle orchestrator hot path)");
     let cfg = BenchConfig::default();
@@ -33,7 +40,7 @@ fn main() {
             .with_cycle(7.5)
             .build();
         let alloc = make_allocator(kind);
-        bench(&format!("allocate/{}", kind.name()), &cfg, || {
+        run.bench(&format!("allocate/{}", kind.name()), &cfg, || {
             alloc
                 .allocate(
                     &scenario.costs,
@@ -44,4 +51,6 @@ fn main() {
                 .unwrap()
         });
     }
+
+    run.finish().expect("bench json");
 }

@@ -3,15 +3,18 @@
 //! Needs `make artifacts`. Two parts:
 //! 1. regeneration: runs a scaled-down Fig.-3 workload (12k samples,
 //!    K = 10, 8 cycles — CI-sized; the paper-scale run is
-//!    `examples/train_e2e.rs` / `asyncmel fig3`) and prints the
-//!    accuracy series + cycles-to-target summary;
+//!    `examples/train_e2e.rs` / `asyncmel fig3`; skipped under
+//!    `--smoke`);
 //! 2. timing: one full global cycle of the stack (allocation + dispatch
 //!    + τ_k SGD epochs through PJRT + aggregation + eval) — the
 //!    end-to-end hot path.
+//!
+//! Without artifacts the target skips loudly but still writes its
+//! (empty) `--json` report so CI tooling sees a well-formed file.
 
 use asyncmel::aggregation::AggregationRule;
 use asyncmel::allocation::AllocatorKind;
-use asyncmel::benchkit::{bench, group, BenchConfig};
+use asyncmel::benchkit::{group, BenchConfig, BenchRun};
 use asyncmel::config::ScenarioConfig;
 use asyncmel::coordinator::{Orchestrator, TrainOptions};
 use asyncmel::data::{synth, SynthConfig};
@@ -46,16 +49,20 @@ fn print_figure_curves(rt: &Runtime) {
 }
 
 fn main() {
+    let mut run = BenchRun::from_env("fig3_accuracy");
     let rt = match Runtime::load(default_artifacts_dir()) {
         Ok(rt) => rt,
         Err(e) => {
             eprintln!(
                 "fig3 bench skipped: artifacts not available ({e:#}). Run `make artifacts`."
             );
+            run.finish().expect("bench json");
             return;
         }
     };
-    print_figure_curves(&rt);
+    if !run.smoke() {
+        print_figure_curves(&rt);
+    }
 
     group("end-to-end global cycle");
     let ds = synth::generate(&SynthConfig {
@@ -68,7 +75,7 @@ fn main() {
         .with_cycle(15.0)
         .with_total_samples(6_000)
         .build();
-    bench("global_cycle/k10_d6000", &BenchConfig::slow(), || {
+    run.bench("global_cycle/k10_d6000", &BenchConfig::slow(), || {
         let mut orch = Orchestrator::new(
             scenario.clone(),
             AllocatorKind::Relaxed,
@@ -86,4 +93,6 @@ fn main() {
         })
         .unwrap()
     });
+
+    run.finish().expect("bench json");
 }

@@ -3,11 +3,14 @@
 //! `cargo bench --bench fleet_scale` does two things:
 //! 1. prints the fleet-scale sweep table: K ∈ {10, 100, 1000, 5000}
 //!    learners with Poisson join / exponential-lifetime churn, phantom
-//!    numerics — the ROADMAP scaling story;
+//!    numerics — the ROADMAP scaling story (skipped under `--smoke`);
 //! 2. times one full engine run at K = 1000 (event-queue + allocator
 //!    hot path) and the per-event cost of the queue itself.
+//!
+//! Passthrough flags: `--smoke` (fast CI config), `--json PATH`
+//! (machine-readable results; see scripts/bench_check.sh).
 
-use asyncmel::benchkit::{bench, group, BenchConfig};
+use asyncmel::benchkit::{group, BenchConfig, BenchRun};
 use asyncmel::config::{ChurnConfig, ScenarioConfig};
 use asyncmel::coordinator::{EngineOptions, EventEngine, ExecMode, TrainOptions};
 use asyncmel::experiments::fleet_scale;
@@ -22,7 +25,10 @@ fn print_sweep() {
 }
 
 fn main() {
-    print_sweep();
+    let mut run = BenchRun::from_env("fleet_scale");
+    if !run.smoke() {
+        print_sweep();
+    }
 
     group("event engine @ K=1000, 8 cycles, churn (phantom numerics)");
     let cfg = BenchConfig {
@@ -30,7 +36,7 @@ fn main() {
         max_iters: 50,
         ..Default::default()
     };
-    bench("engine/run_k1000", &cfg, || {
+    run.bench("engine/run_k1000", &cfg, || {
         let scenario = ScenarioConfig::paper_default()
             .with_learners(1000)
             .with_churn(ChurnConfig::new(1.0, 120.0))
@@ -50,7 +56,7 @@ fn main() {
     });
 
     group("event queue push+pop (10k events)");
-    bench("queue/churn_10k", &BenchConfig::default(), || {
+    run.bench("queue/churn_10k", &BenchConfig::default(), || {
         let mut q = EventQueue::new();
         let mut acc = 0.0f64;
         for i in 0..10_000u64 {
@@ -61,4 +67,6 @@ fn main() {
         }
         acc
     });
+
+    run.finish().expect("bench json");
 }

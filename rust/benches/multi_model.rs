@@ -3,16 +3,20 @@
 //! `cargo bench --bench multi_model` does three things:
 //! 1. prints the multi-tenancy sweep table: M ∈ {1, 2, 4, 8} concurrent
 //!    models over K ∈ {100, 1000} churny learners, buffered async
-//!    aggregation, staleness-greedy routing, phantom numerics;
+//!    aggregation, staleness-greedy routing, phantom numerics (skipped
+//!    under `--smoke`);
 //! 2. proves the ISSUE acceptance point: an M = 8, K = 1000 run with
 //!    churn completes and is byte-reproducible (report digests equal
 //!    across two runs);
 //! 3. times one full M = 8, K = 1000 engine run (scheduler + buffered
 //!    aggregation + per-model sub-fleet solve hot path).
+//!
+//! Passthrough flags: `--smoke` (fast CI config), `--json PATH`
+//! (machine-readable results; see scripts/bench_check.sh).
 
 use asyncmel::aggregation::AggregationRule;
 use asyncmel::allocation::AllocatorKind;
-use asyncmel::benchkit::{bench, group, BenchConfig};
+use asyncmel::benchkit::{group, BenchConfig, BenchRun};
 use asyncmel::config::{ChurnConfig, ScenarioConfig};
 use asyncmel::coordinator::{EventEngine, ExecMode, TrainOptions};
 use asyncmel::experiments::multi_model;
@@ -49,7 +53,10 @@ fn run_k1000_m8() -> MultiModelReport {
 }
 
 fn main() {
-    print_sweep();
+    let mut run = BenchRun::from_env("multi_model");
+    if !run.smoke() {
+        print_sweep();
+    }
 
     // ISSUE acceptance: M = 8, K = 1000 with churn, deterministically.
     let a = report_digest(&run_k1000_m8());
@@ -63,5 +70,7 @@ fn main() {
         max_iters: 50,
         ..Default::default()
     };
-    bench("multimodel/run_k1000_m8", &cfg, run_k1000_m8);
+    run.bench("multimodel/run_k1000_m8", &cfg, run_k1000_m8);
+
+    run.finish().expect("bench json");
 }

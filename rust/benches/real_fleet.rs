@@ -1,0 +1,94 @@
+//! Serial vs **sharded** real-numerics fleet runs — the ROADMAP
+//! "ExecMode::Real past a few hundred learners" acceptance harness.
+//!
+//! `cargo bench --bench real_fleet` does three things:
+//! 1. prints the real-numerics sweep table: K ∈ {100, 500, 1000}
+//!    learners running actual SGD through the native MLP executor, at
+//!    `--threads 1` vs `--threads 4` (`experiments::fleet_scale::run_real`);
+//! 2. asserts the determinism contract: the sharded run's record stream
+//!    is byte-identical to the serial one at the headline K;
+//! 3. times serial vs sharded wall clock at the largest K via benchkit
+//!    (the ISSUE acceptance comparison — speedup printed at the end).
+//!
+//! Passthrough flags: `--smoke` (K = 50, 1 cycle CI config), `--json
+//! PATH` (machine-readable results; see scripts/bench_check.sh).
+
+use asyncmel::benchkit::{group, BenchConfig, BenchRun};
+use asyncmel::coordinator::record_digest;
+use asyncmel::experiments::fleet_scale::{self, RealFleetParams};
+use asyncmel::runtime::Runtime;
+
+fn main() {
+    let mut run = BenchRun::from_env("real_fleet");
+    let params = if run.smoke() {
+        RealFleetParams {
+            ks: vec![50],
+            cycles: 1,
+            samples_per_learner: 20,
+            test_samples: 256,
+            ..Default::default()
+        }
+    } else {
+        RealFleetParams::default()
+    };
+
+    println!("\n===== REAL FLEET — ExecMode::Real, serial vs sharded =====");
+    let rows = fleet_scale::run_real(&params).expect("real fleet sweep");
+    println!("{}", fleet_scale::real_table(&rows).render());
+    println!("==========================================================\n");
+
+    // Determinism contract at every K: sharded == serial, byte for byte.
+    for pair in rows.chunks(params.threads.len()) {
+        for r in &pair[1..] {
+            assert_eq!(
+                pair[0].digest, r.digest,
+                "K={}: {} threads changed the record stream",
+                r.k, r.threads
+            );
+        }
+    }
+    println!("determinism: sharded record streams match serial byte-for-byte OK\n");
+
+    // Timed comparison at the largest K (dataset + runtime built once,
+    // outside the timed region).
+    let k = *params.ks.last().expect("non-empty ks");
+    let runtime = Runtime::native(&params.dims, params.train_batch, params.eval_batch);
+    let ds = fleet_scale::real_dataset(&params, k);
+    let cfg = BenchConfig {
+        warmup: std::time::Duration::from_millis(0),
+        measure: std::time::Duration::from_secs(8),
+        max_iters: 5,
+        min_iters: 2,
+    };
+    group(&format!("real-numerics engine @ K={k} ({} cycles)", params.cycles));
+    let mut wall: Vec<(usize, f64)> = Vec::new();
+    let mut digests: Vec<String> = Vec::new();
+    for &threads in &params.threads {
+        let stats = run.bench(&format!("real_fleet/k{k}/threads{threads}"), &cfg, || {
+            fleet_scale::real_engine_run(&params, k, threads, &runtime, &ds).expect("engine run")
+        });
+        wall.push((threads, stats.mean_s));
+        let records =
+            fleet_scale::real_engine_run(&params, k, threads, &runtime, &ds).expect("engine run");
+        digests.push(record_digest(&records));
+    }
+    for d in &digests[1..] {
+        assert_eq!(&digests[0], d, "timed runs diverged across thread counts");
+    }
+    if wall.len() >= 2 {
+        let serial = wall[0].1;
+        for &(threads, t) in &wall[1..] {
+            let cores = std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(1);
+            println!(
+                "speedup @ K={k}: {:.2}x with --threads {threads} vs --threads {} \
+                 ({cores} cores available)",
+                serial / t,
+                wall[0].0
+            );
+        }
+    }
+
+    run.finish().expect("bench json");
+}

@@ -4,10 +4,12 @@
 //! pays this once per global cycle) and prints the staleness objective
 //! side by side with the exact optimum — the quantitative version of the
 //! paper's "the analytical approximation closely matched the solution of
-//! the numerical solvers" (§VI).
+//! the numerical solvers" (§VI). The gap table is skipped under
+//! `--smoke`; `--json PATH` writes machine-readable results
+//! (scripts/bench_check.sh).
 
 use asyncmel::allocation::{make_allocator, AllocatorKind};
-use asyncmel::benchkit::{bench, group, BenchConfig};
+use asyncmel::benchkit::{group, BenchConfig, BenchRun};
 use asyncmel::config::ScenarioConfig;
 use asyncmel::metrics::{fmt_f, Table};
 
@@ -45,7 +47,10 @@ fn print_gap_table() {
 }
 
 fn main() {
-    print_gap_table();
+    let mut run = BenchRun::from_env("solver_bench");
+    if !run.smoke() {
+        print_gap_table();
+    }
 
     let cfg = BenchConfig::default();
     for kind in [AllocatorKind::Exact, AllocatorKind::Relaxed, AllocatorKind::Sai] {
@@ -56,7 +61,7 @@ fn main() {
                 .with_cycle(7.5)
                 .build();
             let alloc = make_allocator(kind);
-            bench(&format!("{}/K={k}", kind.name()), &cfg, || {
+            run.bench(&format!("{}/K={k}", kind.name()), &cfg, || {
                 alloc
                     .allocate(
                         &scenario.costs,
@@ -68,4 +73,6 @@ fn main() {
             });
         }
     }
+
+    run.finish().expect("bench json");
 }

@@ -2,8 +2,25 @@
 //! Cargo.toml). Warmup + timed iterations, robust summary statistics,
 //! aligned reporting. All `rust/benches/*` targets use this with
 //! `harness = false`.
+//!
+//! Machine-readable output: wrap the cases in a [`BenchRun`] and every
+//! target grows two passthrough flags (`cargo bench --bench X -- …`):
+//!
+//! * `--json PATH` — write the collected [`BenchResult`]s as JSON
+//!   (`BENCH_<target>.json` by convention; `scripts/bench_check.sh`
+//!   gates CI on them against `rust/benches/baseline.json`);
+//! * `--smoke` — shrink warmup/measure budgets to a fast CI smoke
+//!   config (targets also gate their expensive regeneration sweeps on
+//!   [`BenchRun::smoke`]).
+//!
+//! `BENCH_SMOKE=1` / `BENCH_JSON=PATH` env vars are honored as
+//! fallbacks for runners that cannot pass arguments through.
 
 use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::json::Value;
 
 /// Benchmark configuration.
 #[derive(Debug, Clone, Copy)]
@@ -117,6 +134,127 @@ pub fn group(title: &str) {
     println!("\n--- {title} ---");
 }
 
+/// One named measurement plus the config it ran under — the
+/// machine-readable unit `scripts/bench_check.sh` consumes.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub config: String,
+    pub stats: Stats,
+}
+
+impl BenchResult {
+    /// Flatten to JSON (times in nanoseconds).
+    pub fn to_json(&self) -> Value {
+        let mut v = Value::obj();
+        v.set("name", self.name.as_str())
+            .set("config", self.config.as_str())
+            .set("iters", self.stats.iters)
+            .set("mean_ns", self.stats.mean_s * 1e9)
+            .set("p50_ns", self.stats.median_s * 1e9)
+            .set("p95_ns", self.stats.p95_s * 1e9)
+            .set("min_ns", self.stats.min_s * 1e9)
+            .set("max_ns", self.stats.max_s * 1e9);
+        v
+    }
+}
+
+/// Per-target collector: parses `--smoke` / `--json PATH` from the
+/// process arguments, wraps [`bench`], and writes the JSON report on
+/// [`BenchRun::finish`].
+#[derive(Debug)]
+pub struct BenchRun {
+    pub target: String,
+    smoke: bool,
+    json_path: Option<String>,
+    results: Vec<BenchResult>,
+}
+
+impl BenchRun {
+    /// Build from the process arguments (+ `BENCH_SMOKE` / `BENCH_JSON`
+    /// env fallbacks). `target` names the bench binary.
+    pub fn from_env(target: &str) -> BenchRun {
+        let mut smoke = false;
+        let mut json_path: Option<String> = None;
+        let mut it = std::env::args().skip(1);
+        while let Some(tok) = it.next() {
+            if tok == "--smoke" {
+                smoke = true;
+            } else if tok == "--json" {
+                json_path = it.next();
+            } else if let Some(p) = tok.strip_prefix("--json=") {
+                json_path = Some(p.to_string());
+            }
+        }
+        if let Some(v) = std::env::var_os("BENCH_SMOKE") {
+            if !v.is_empty() && v != "0" {
+                smoke = true;
+            }
+        }
+        if json_path.is_none() {
+            json_path = std::env::var_os("BENCH_JSON")
+                .map(|v| v.to_string_lossy().into_owned());
+        }
+        BenchRun { target: target.to_string(), smoke, json_path, results: Vec::new() }
+    }
+
+    /// Smoke mode: targets use this to skip/shrink their expensive
+    /// regeneration sweeps, and [`Self::bench`] shrinks time budgets.
+    pub fn smoke(&self) -> bool {
+        self.smoke
+    }
+
+    /// The effective measurement config: unchanged normally, a fast
+    /// smoke setting when `--smoke` is active.
+    pub fn tuned(&self, cfg: &BenchConfig) -> BenchConfig {
+        if !self.smoke {
+            return *cfg;
+        }
+        BenchConfig {
+            warmup: Duration::from_millis(0),
+            measure: Duration::from_millis(80),
+            max_iters: 5,
+            min_iters: 1,
+        }
+    }
+
+    /// Run + record one case (see [`bench`]).
+    pub fn bench<T>(&mut self, name: &str, cfg: &BenchConfig, f: impl FnMut() -> T) -> Stats {
+        let cfg = self.tuned(cfg);
+        let stats = bench(name, &cfg, f);
+        self.results.push(BenchResult {
+            name: name.to_string(),
+            config: format!(
+                "warmup={:?} measure={:?} iters=[{},{}] smoke={}",
+                cfg.warmup, cfg.measure, cfg.min_iters, cfg.max_iters, self.smoke
+            ),
+            stats,
+        });
+        stats
+    }
+
+    /// The full report as JSON.
+    pub fn to_json(&self) -> Value {
+        let mut v = Value::obj();
+        v.set("target", self.target.as_str()).set("smoke", self.smoke).set(
+            "results",
+            Value::Arr(self.results.iter().map(|r| r.to_json()).collect()),
+        );
+        v
+    }
+
+    /// Write the JSON report when `--json PATH` (or `BENCH_JSON`) was
+    /// given; no-op otherwise.
+    pub fn finish(&self) -> Result<()> {
+        if let Some(path) = &self.json_path {
+            std::fs::write(path, self.to_json().pretty())
+                .with_context(|| format!("writing bench JSON {path}"))?;
+            println!("bench json -> {path}");
+        }
+        Ok(())
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -155,6 +293,62 @@ mod tests {
         assert!(fmt_time(2.5e-6).contains("µs"));
         assert!(fmt_time(2.5e-3).contains("ms"));
         assert!(fmt_time(2.5).contains(" s"));
+    }
+
+    #[test]
+    fn bench_result_serializes_times_in_ns() {
+        let r = BenchResult {
+            name: "solver/k20".to_string(),
+            config: "smoke=false".to_string(),
+            stats: Stats {
+                iters: 3,
+                mean_s: 2.5e-3,
+                median_s: 2.0e-3,
+                p95_s: 4.0e-3,
+                min_s: 1.0e-3,
+                max_s: 5.0e-3,
+            },
+        };
+        let v = r.to_json();
+        assert_eq!(v.str_field("name").unwrap(), "solver/k20");
+        assert_eq!(v.u64_field("iters").unwrap(), 3);
+        assert!((v.f64_field("mean_ns").unwrap() - 2.5e6).abs() < 1e-6);
+        assert!((v.f64_field("min_ns").unwrap() - 1.0e6).abs() < 1e-6);
+        // round-trips through the JSON substrate
+        let text = v.pretty();
+        let back = crate::json::parse(&text).unwrap();
+        assert_eq!(back.str_field("name").unwrap(), "solver/k20");
+    }
+
+    #[test]
+    fn bench_run_collects_and_writes_json() {
+        let mut run = BenchRun {
+            target: "unit_test".to_string(),
+            smoke: true,
+            json_path: None,
+            results: Vec::new(),
+        };
+        assert!(run.smoke());
+        let cfg = BenchConfig::default();
+        let tuned = run.tuned(&cfg);
+        assert!(tuned.measure < cfg.measure, "smoke must shrink the budget");
+        run.bench("case/a", &cfg, || 40 + 2);
+        run.bench("case/b", &cfg, || "x".repeat(8));
+        let v = run.to_json();
+        assert_eq!(v.str_field("target").unwrap(), "unit_test");
+        let results = v.field("results").unwrap().as_arr().unwrap();
+        assert_eq!(results.len(), 2);
+        assert_eq!(results[0].str_field("name").unwrap(), "case/a");
+        assert!(results[1].f64_field("mean_ns").unwrap() >= 0.0);
+
+        // finish() writes the file when a path is set
+        let path = std::env::temp_dir().join("asyncmel_benchkit_test.json");
+        run.json_path = Some(path.to_string_lossy().into_owned());
+        run.finish().unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let back = crate::json::parse(&text).unwrap();
+        assert_eq!(back.field("results").unwrap().as_arr().unwrap().len(), 2);
+        std::fs::remove_file(&path).ok();
     }
 
     #[test]

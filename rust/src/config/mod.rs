@@ -125,6 +125,11 @@ pub struct ScenarioConfig {
     /// Gauss–Markov block-fading coherence ρ per cycle (event engine
     /// only; None = static channels).
     pub fading_rho: Option<f64>,
+    /// Worker threads for real-numerics learner steps
+    /// ([`crate::runtime::pool::ThreadPool`]): 1 = serial (default),
+    /// 0 = the machine's available parallelism. Any value produces a
+    /// bit-identical run — sharding never changes results.
+    pub num_threads: usize,
 }
 
 impl Default for ScenarioConfig {
@@ -152,6 +157,7 @@ impl ScenarioConfig {
             churn: ChurnConfig::disabled(),
             multimodel: MultiModelConfig::single(),
             fading_rho: None,
+            num_threads: 1,
         }
     }
 
@@ -192,6 +198,12 @@ impl ScenarioConfig {
     pub fn with_fading_rho(mut self, rho: f64) -> Self {
         assert!((0.0..=1.0).contains(&rho), "fading ρ must be in [0, 1]");
         self.fading_rho = Some(rho);
+        self
+    }
+    /// Worker threads for real-numerics steps (0 = available
+    /// parallelism). Results are bit-identical for every value.
+    pub fn with_threads(mut self, num_threads: usize) -> Self {
+        self.num_threads = num_threads;
         self
     }
 
@@ -247,6 +259,7 @@ impl ScenarioConfig {
                 },
             )
             .set("engine", self.engine.name())
+            .set("num_threads", self.num_threads)
             .set("channel", ch)
             .set("devices", dev)
             .set("task", task)
@@ -344,6 +357,9 @@ impl ScenarioConfig {
             let rho = x.as_f64()?;
             anyhow::ensure!((0.0..=1.0).contains(&rho), "fading_rho must be in [0, 1]");
             cfg.fading_rho = Some(rho);
+        }
+        if let Some(x) = v.get("num_threads") {
+            cfg.num_threads = x.as_usize()?;
         }
         if let Some(ch) = v.get("channel") {
             if let Some(x) = ch.get("radius_m") {
@@ -596,6 +612,23 @@ mod tests {
         )
         .unwrap();
         assert!(ScenarioConfig::from_json(&bad).is_err());
+    }
+
+    #[test]
+    fn num_threads_round_trip_and_default() {
+        let cfg = ScenarioConfig::paper_default().with_threads(8);
+        let text = cfg.to_json().pretty();
+        let back = ScenarioConfig::from_json(&crate::json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.num_threads, 8);
+
+        // sparse configs keep the serial default; 0 = auto is accepted
+        let sparse = ScenarioConfig::from_json(&crate::json::parse("{}").unwrap()).unwrap();
+        assert_eq!(sparse.num_threads, 1);
+        let auto = ScenarioConfig::from_json(
+            &crate::json::parse(r#"{"num_threads": 0}"#).unwrap(),
+        )
+        .unwrap();
+        assert_eq!(auto.num_threads, 0);
     }
 
     #[test]

@@ -55,7 +55,7 @@ use crate::multimodel::{
     make_scheduler, BufferedUpdate, ModelRegistry, ModelStats, MultiModelOptions,
     MultiModelReport, SubFleetAlloc,
 };
-use crate::runtime::Runtime;
+use crate::runtime::{Runtime, ThreadPool};
 use crate::sim::{EventQueue, Rng};
 
 /// How the engine folds arrivals into the global model.
@@ -169,6 +169,11 @@ pub struct EventEngine<'rt> {
     initial_k: usize,
     /// Host wall-clock of the most recent allocation solve (ms).
     last_solve_ms: f64,
+    /// Fan-out pool for real-numerics learner steps that are ready at
+    /// the same event timestamp (`ScenarioConfig.num_threads`); shared
+    /// by the single- and multi-model paths. Any width is
+    /// bit-identical to the serial run.
+    pool: ThreadPool,
     pub stats: EngineStats,
 }
 
@@ -230,6 +235,7 @@ impl<'rt> EventEngine<'rt> {
         let churn = scenario.config.churn;
         let initial_k = scenario.k();
         let fading = scenario.config.fading_rho.map(|rho| make_fading(&scenario, rho));
+        let pool = ThreadPool::new(scenario.config.num_threads);
         Ok(Self {
             scenario,
             slots,
@@ -248,6 +254,7 @@ impl<'rt> EventEngine<'rt> {
             fading,
             initial_k,
             last_solve_ms: 0.0,
+            pool,
             stats: EngineStats::default(),
         })
     }
@@ -333,7 +340,13 @@ impl<'rt> EventEngine<'rt> {
 
     /// Barrier-mode dispatch of one full cycle — consumes `self.rng` in
     /// exactly the lock-step order: `sample_shards`, `draw_outcomes`,
-    /// then per-learner training in allocation order.
+    /// then per-learner training in allocation order. The train steps
+    /// themselves are pure given (global, shard, τ), so they fan out
+    /// across the thread pool and the arrivals are pushed serially in
+    /// allocation order afterwards — the RNG stream and the queue's
+    /// (time, seq) ordering are identical to the serial loop, which
+    /// keeps any pool width bit-identical (and the lock-step oracle
+    /// intact).
     fn dispatch_cycle(
         &mut self,
         q: &mut EventQueue<Event>,
@@ -352,6 +365,15 @@ impl<'rt> EventEngine<'rt> {
         };
         let outcomes = draw_outcomes(&self.faults, alive.len(), &mut self.rng);
         self.stats.dispatched += alive.len();
+        // plan serially: which learners arrive, and when
+        struct Arriving {
+            pos: usize,
+            slot: usize,
+            tau: u64,
+            d: u64,
+            effective: f64,
+        }
+        let mut arriving: Vec<Arriving> = Vec::with_capacity(alive.len());
         for (pos, &si) in alive.iter().enumerate() {
             let tau = alloc.tau[pos];
             let d = alloc.d[pos];
@@ -368,24 +390,40 @@ impl<'rt> EventEngine<'rt> {
             } else {
                 planned
             };
-            let (params, train_loss) = match (&self.exec, global) {
-                (ExecMode::Real { runtime, train, .. }, Some(g)) => {
-                    let shard = &shards.as_ref().expect("real mode has shards")[pos];
-                    let upd = self.slots[si].learner.run_cycle(
-                        runtime, g, train, shard, tau, opts.lr,
-                    )?;
-                    (Some(upd.params), upd.train_loss)
-                }
-                _ => (None, f32::NAN),
+            arriving.push(Arriving { pos, slot: si, tau, d, effective });
+        }
+        // parallel phase: the real-numerics train steps
+        let trained: Vec<Option<(ParamSet, f32)>> = match (&self.exec, global) {
+            (ExecMode::Real { runtime, train, .. }, Some(g)) => {
+                let shards_ref = shards.as_ref().expect("real mode has shards");
+                let slots = &self.slots;
+                let arriving_ref = &arriving;
+                let lr = opts.lr;
+                self.pool
+                    .try_map(arriving.len(), |i| {
+                        let a = &arriving_ref[i];
+                        slots[a.slot]
+                            .learner
+                            .run_cycle(runtime, g, train, &shards_ref[a.pos], a.tau, lr)
+                            .map(|u| Some((u.params, u.train_loss)))
+                    })?
+            }
+            _ => arriving.iter().map(|_| None).collect(),
+        };
+        // serial push phase in allocation order (stable queue seq)
+        for (a, t) in arriving.iter().zip(trained) {
+            let (params, train_loss) = match t {
+                Some((p, loss)) => (Some(p), loss),
+                None => (None, f32::NAN),
             };
             q.push(
-                now + effective.min(t_cycle),
+                now + a.effective.min(t_cycle),
                 Event::Arrival(ArrivalMsg {
-                    slot: si,
+                    slot: a.slot,
                     model: 0,
                     version_at_dispatch: 0,
-                    tau,
-                    d,
+                    tau: a.tau,
+                    d: a.d,
                     params,
                     train_loss,
                 }),
@@ -490,6 +528,137 @@ impl<'rt> EventEngine<'rt> {
         Ok(true)
     }
 
+    /// Batched [`Self::dispatch_round`]: dispatch many learner rounds
+    /// that are all ready at the **same event timestamp** from the same
+    /// per-model global snapshot (the t = 0 fleet dispatch of the async
+    /// and multi-model paths). RNG draws and event pushes happen
+    /// serially in `entries` order — the stream and the queue's seq
+    /// assignment are identical to calling `dispatch_round` once per
+    /// entry — while the real-numerics train steps fan out across the
+    /// pool. Returns one "upload scheduled" flag per entry.
+    #[allow(clippy::too_many_arguments)]
+    fn dispatch_batch(
+        &mut self,
+        q: &mut EventQueue<Event>,
+        now: f64,
+        model: usize,
+        entries: &[(usize, Option<(u64, u64)>)],
+        global: &Option<ParamSet>,
+        opts: &TrainOptions,
+        version: u64,
+    ) -> Result<Vec<bool>> {
+        enum Plan {
+            /// Slot not alive: nothing happens (no push).
+            Skip,
+            /// No usable assignment / dropped: re-arm next cycle.
+            Retry,
+            /// A round runs; `shard` is `None` in phantom mode.
+            Run {
+                tau: u64,
+                d: u64,
+                busy: f64,
+                shard: Option<Vec<u32>>,
+            },
+        }
+        let t_cycle = self.scenario.t_cycle();
+        // serial phase: fault + shard draws in entry order (the exact
+        // dispatch_round control flow, minus the pushes)
+        let mut plans: Vec<Plan> = Vec::with_capacity(entries.len());
+        for &(slot, assign) in entries {
+            if !self.slots[slot].alive {
+                plans.push(Plan::Skip);
+                continue;
+            }
+            let Some((tau, d)) = assign else {
+                plans.push(Plan::Retry);
+                continue;
+            };
+            if tau == 0 {
+                plans.push(Plan::Retry);
+                continue;
+            }
+            self.stats.dispatched += 1;
+            let outcome = draw_outcomes(&self.faults, 1, &mut self.rng)[0];
+            if outcome == FaultOutcome::Dropped {
+                plans.push(Plan::Retry);
+                continue;
+            }
+            let mut busy = self.slots[slot].learner.cost.time(tau as f64, d as f64);
+            if outcome == FaultOutcome::Straggled {
+                busy *= self.faults.straggle_factor;
+            }
+            debug_assert!(busy > 0.0);
+            let shard: Option<Vec<u32>> = match (&self.exec, global) {
+                (ExecMode::Real { train, .. }, Some(_)) => {
+                    // i.i.d. with replacement, exactly as dispatch_round
+                    // (which also only draws when a global model exists)
+                    let n = train.len() as u64;
+                    Some((0..d).map(|_| self.rng.below(n) as u32).collect())
+                }
+                _ => None,
+            };
+            plans.push(Plan::Run { tau, d, busy, shard });
+        }
+        // parallel phase: the real-numerics train steps
+        let runnable: Vec<usize> = plans
+            .iter()
+            .enumerate()
+            .filter(|(_, p)| matches!(p, Plan::Run { .. }))
+            .map(|(i, _)| i)
+            .collect();
+        let mut trained: Vec<Option<(ParamSet, f32)>> = Vec::with_capacity(plans.len());
+        trained.resize_with(plans.len(), || None);
+        if let (ExecMode::Real { runtime, train, .. }, Some(g)) = (&self.exec, global) {
+            let slots = &self.slots;
+            let plans_ref = &plans;
+            let runnable_ref = &runnable;
+            let lr = opts.lr;
+            let results = self.pool.try_map(runnable.len(), |j| {
+                let i = runnable_ref[j];
+                let (slot, _) = entries[i];
+                let Plan::Run { tau, shard, .. } = &plans_ref[i] else {
+                    unreachable!("runnable indexes only Run plans");
+                };
+                let shard = shard.as_ref().expect("real mode has shards");
+                slots[slot]
+                    .learner
+                    .run_cycle(runtime, g, train, shard, *tau, lr)
+                    .map(|u| (u.params, u.train_loss))
+            })?;
+            for (&i, r) in runnable.iter().zip(results) {
+                trained[i] = Some(r);
+            }
+        }
+        // serial push phase in entry order (stable queue seq)
+        let mut scheduled = vec![false; entries.len()];
+        for (i, (&(slot, _), plan)) in entries.iter().zip(&plans).enumerate() {
+            match plan {
+                Plan::Skip => {}
+                Plan::Retry => q.push(now + t_cycle, Event::Redispatch { slot }),
+                Plan::Run { tau, d, busy, .. } => {
+                    let (params, train_loss) = match trained[i].take() {
+                        Some((p, loss)) => (Some(p), loss),
+                        None => (None, f32::NAN),
+                    };
+                    q.push(
+                        now + busy,
+                        Event::Arrival(ArrivalMsg {
+                            slot,
+                            model,
+                            version_at_dispatch: version,
+                            tau: *tau,
+                            d: *d,
+                            params,
+                            train_loss,
+                        }),
+                    );
+                    scheduled[i] = true;
+                }
+            }
+        }
+        Ok(scheduled)
+    }
+
     /// Admit a new learner sampled from the scenario's device/channel
     /// distributions.
     fn join(&mut self, q: &mut EventQueue<Event>, now: f64) -> Option<usize> {
@@ -545,6 +714,16 @@ impl<'rt> EventEngine<'rt> {
     /// Run `opts.train.cycles` global cycles; returns one
     /// [`CycleRecord`] per cycle boundary.
     pub fn run(&mut self, opts: &EngineOptions) -> Result<Vec<CycleRecord>> {
+        self.run_with_params(opts).map(|(records, _)| records)
+    }
+
+    /// [`Self::run`], also returning the final global parameters (`None`
+    /// in phantom mode) — the thread-count determinism tests compare
+    /// them byte-for-byte.
+    pub fn run_with_params(
+        &mut self,
+        opts: &EngineOptions,
+    ) -> Result<(Vec<CycleRecord>, Option<ParamSet>)> {
         let t_cycle = self.scenario.t_cycle();
         let cycles = opts.train.cycles;
         self.stats = EngineStats::default();
@@ -574,14 +753,19 @@ impl<'rt> EventEngine<'rt> {
             }
         }
 
-        // initial dispatch
+        // initial dispatch — the whole fleet is ready at t = 0, so the
+        // async path batches it through the pool (dispatch_batch is
+        // stream- and seq-identical to per-slot dispatch_one calls)
         match opts.policy {
             EnginePolicy::Barrier => self.dispatch_cycle(&mut q, now, &global, &opts.train)?,
             EnginePolicy::Async(_) => {
-                let slots: Vec<usize> = self.alloc_slots.clone();
-                for slot in slots {
-                    self.dispatch_one(&mut q, now, slot, &global, &opts.train, 0)?;
-                }
+                let entries: Vec<(usize, Option<(u64, u64)>)> = self
+                    .alloc_slots
+                    .clone()
+                    .into_iter()
+                    .map(|slot| (slot, self.assignment(slot)))
+                    .collect();
+                self.dispatch_batch(&mut q, now, 0, &entries, &global, &opts.train, 0)?;
             }
         }
         q.push(now + t_cycle, Event::Boundary);
@@ -719,7 +903,7 @@ impl<'rt> EventEngine<'rt> {
                     {
                         match (&self.exec, global.as_ref()) {
                             (ExecMode::Real { runtime, test, .. }, Some(g)) => {
-                                let ev = runtime.evaluate(g, test)?;
+                                let ev = runtime.evaluate_pooled(&self.pool, g, test)?;
                                 (ev.accuracy, ev.mean_loss)
                             }
                             _ => (f64::NAN, f64::NAN),
@@ -759,7 +943,7 @@ impl<'rt> EventEngine<'rt> {
             }
         }
         self.stats.final_alive = self.alive_count();
-        Ok(records)
+        Ok((records, global))
     }
 
     /// (Re-)solve one model's allocation over its assigned sub-fleet
@@ -904,16 +1088,25 @@ impl<'rt> EventEngine<'rt> {
         }
 
         // initial dispatch: model-grouped, ascending slot order within
-        // each model (for M = 1 this is the whole fleet in slot order)
+        // each model (for M = 1 this is the whole fleet in slot order).
+        // Every model's sub-fleet is ready at t = 0, so each batches its
+        // train steps through the shared pool (dispatch_batch is
+        // stream- and seq-identical to per-slot dispatch_model calls —
+        // the subs were solved eagerly above, so no lazy re-solve can
+        // interleave).
         for m in 0..m_count {
-            let members = subs[m].slots.clone();
-            for slot in members {
-                let version = registry.models[m].version;
-                let scheduled = self.dispatch_model(
-                    &mut q, now, slot, m, &model_of, &mut subs[m], &globals[m],
-                    &opts.train, version,
-                )?;
-                if scheduled {
+            let entries: Vec<(usize, Option<(u64, u64)>)> = subs[m]
+                .slots
+                .clone()
+                .into_iter()
+                .map(|slot| (slot, subs[m].assignment(slot)))
+                .collect();
+            let version = registry.models[m].version;
+            let scheduled = self.dispatch_batch(
+                &mut q, now, m, &entries, &globals[m], &opts.train, version,
+            )?;
+            for sch in scheduled {
+                if sch {
                     registry.models[m].record_dispatch(version);
                 }
             }
@@ -1040,7 +1233,7 @@ impl<'rt> EventEngine<'rt> {
                         {
                             match (&self.exec, globals[m].as_ref()) {
                                 (ExecMode::Real { runtime, test, .. }, Some(g)) => {
-                                    let ev = runtime.evaluate(g, test)?;
+                                    let ev = runtime.evaluate_pooled(&self.pool, g, test)?;
                                     (ev.accuracy, ev.mean_loss)
                                 }
                                 _ => (f64::NAN, f64::NAN),

@@ -8,7 +8,7 @@ use crate::config::Scenario;
 use crate::coordinator::faults::{draw_outcomes, update_arrives, FaultModel};
 use crate::coordinator::learner::Learner;
 use crate::data::{sample_shards, Dataset};
-use crate::runtime::Runtime;
+use crate::runtime::{Runtime, ThreadPool};
 use crate::sim::{Rng, VirtualClock};
 
 /// Options for a training run.
@@ -98,6 +98,9 @@ pub struct Orchestrator<'rt> {
     rng: Rng,
     /// Straggler/dropout injection (none by default).
     pub faults: FaultModel,
+    /// Fan-out pool for the per-cycle learner steps
+    /// (`ScenarioConfig.num_threads`); bit-identical for any width.
+    pool: ThreadPool,
 }
 
 impl<'rt> Orchestrator<'rt> {
@@ -131,6 +134,7 @@ impl<'rt> Orchestrator<'rt> {
             .collect();
         let mut rng = scenario.rng.clone();
         let rng = rng.fork(0x0_0C);
+        let pool = ThreadPool::new(scenario.config.num_threads);
         Ok(Self {
             scenario,
             learners,
@@ -141,6 +145,7 @@ impl<'rt> Orchestrator<'rt> {
             test,
             rng,
             faults: FaultModel::none(),
+            pool,
         })
     }
 
@@ -162,9 +167,18 @@ impl<'rt> Orchestrator<'rt> {
 
     /// Run `opts.cycles` global cycles from a fresh He-initialized model.
     pub fn run(&mut self, opts: &TrainOptions) -> Result<Vec<CycleRecord>> {
+        self.run_with_params(opts).map(|(records, _)| records)
+    }
+
+    /// [`Self::run`], also returning the final global parameters (the
+    /// thread-count determinism tests compare them byte-for-byte).
+    pub fn run_with_params(
+        &mut self,
+        opts: &TrainOptions,
+    ) -> Result<(Vec<CycleRecord>, ParamSet)> {
         let mut init_rng = self.rng.fork(0x1417);
         let params = self.runtime.init_params(&mut init_rng);
-        self.run_from(params, opts).map(|(records, _)| records)
+        self.run_from(params, opts)
     }
 
     /// Run from given initial parameters; returns records + final model.
@@ -195,13 +209,14 @@ impl<'rt> Orchestrator<'rt> {
                 &allocation.d,
             );
 
-            // local learning (virtual-parallel: all within the cycle clock)
+            // local learning (virtual-parallel: all within the cycle
+            // clock). The per-learner train steps are pure given
+            // (global, shard, τ), so they fan out across the thread
+            // pool; the fault draws happened above and the results are
+            // merged back in learner order, which keeps any pool width
+            // bit-identical to the serial loop.
             let outcomes = draw_outcomes(&self.faults, self.learners.len(), &mut self.rng);
-            let mut locals: Vec<ParamSet> = Vec::with_capacity(self.learners.len());
-            let mut agg_d: Vec<u64> = Vec::with_capacity(self.learners.len());
-            let mut agg_tau: Vec<u64> = Vec::with_capacity(self.learners.len());
-            let mut losses = Vec::with_capacity(self.learners.len());
-            let mut arrived = 0usize;
+            let mut arriving: Vec<usize> = Vec::with_capacity(self.learners.len());
             for (learner, shard) in self.learners.iter().zip(&shards) {
                 let planned = learner
                     .cost
@@ -210,23 +225,44 @@ impl<'rt> Orchestrator<'rt> {
                     // dropped or deadline-missed: aggregate without it;
                     // the node still burned its cycle.
                     clock.record_busy(learner.id, planned.min(t_cycle));
-                    continue;
+                } else {
+                    arriving.push(learner.id);
                 }
-                let upd = learner.run_cycle(
-                    self.runtime,
-                    &global,
-                    &self.train,
-                    shard,
-                    allocation.tau[learner.id],
-                    opts.lr,
-                )?;
-                clock.record_busy(learner.id, upd.busy_s.min(t_cycle));
+            }
+            let updates = {
+                let learners = &self.learners;
+                let runtime = self.runtime;
+                let train = &self.train;
+                let global_ref = &global;
+                let alloc_ref = &allocation;
+                let shards_ref = &shards;
+                let arriving_ref = &arriving;
+                let lr = opts.lr;
+                self.pool.try_map(arriving.len(), |j| {
+                    let id = arriving_ref[j];
+                    learners[id].run_cycle(
+                        runtime,
+                        global_ref,
+                        train,
+                        &shards_ref[id],
+                        alloc_ref.tau[id],
+                        lr,
+                    )
+                })?
+            };
+            let mut locals: Vec<ParamSet> = Vec::with_capacity(arriving.len());
+            let mut agg_d: Vec<u64> = Vec::with_capacity(arriving.len());
+            let mut agg_tau: Vec<u64> = Vec::with_capacity(arriving.len());
+            let mut losses = Vec::with_capacity(arriving.len());
+            let mut arrived = 0usize;
+            for (&id, upd) in arriving.iter().zip(updates) {
+                clock.record_busy(id, upd.busy_s.min(t_cycle));
                 if upd.train_loss.is_finite() {
                     losses.push(upd.train_loss);
                 }
                 locals.push(upd.params);
-                agg_d.push(allocation.d[learner.id]);
-                agg_tau.push(allocation.tau[learner.id]);
+                agg_d.push(allocation.d[id]);
+                agg_tau.push(allocation.tau[id]);
                 arrived += 1;
             }
             clock.advance(t_cycle);
@@ -240,7 +276,9 @@ impl<'rt> Orchestrator<'rt> {
             let (accuracy, val_loss) = if cycle % opts.eval_every == 0
                 || cycle + 1 == opts.cycles
             {
-                let ev = self.runtime.evaluate(&global, &self.test)?;
+                let ev = self
+                    .runtime
+                    .evaluate_pooled(&self.pool, &global, &self.test)?;
                 (ev.accuracy, ev.mean_loss)
             } else {
                 (f64::NAN, f64::NAN)

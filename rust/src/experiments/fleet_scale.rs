@@ -11,8 +11,12 @@ use anyhow::Result;
 
 use crate::allocation::AllocatorKind;
 use crate::config::{ChurnConfig, ScenarioConfig};
-use crate::coordinator::{EngineOptions, EventEngine, ExecMode, TrainOptions};
+use crate::coordinator::{
+    record_digest, CycleRecord, EngineOptions, EventEngine, ExecMode, TrainOptions,
+};
+use crate::data::{synth, SynthConfig, SynthDataset};
 use crate::metrics::{fmt_f, Table};
+use crate::runtime::{Runtime, ThreadPool};
 
 /// One (K) point of the sweep.
 #[derive(Debug, Clone)]
@@ -132,6 +136,180 @@ pub fn table(rows: &[FleetRow]) -> Table {
     t
 }
 
+// ---------------------------------------------------------------------
+// Real-numerics sweep: ExecMode::Real through the sharded executor
+// ---------------------------------------------------------------------
+
+/// One (K, threads) point of the real-numerics sweep.
+#[derive(Debug, Clone)]
+pub struct RealFleetRow {
+    pub k: usize,
+    /// Requested pool width (0 = available parallelism).
+    pub threads: usize,
+    /// Resolved worker count.
+    pub workers: usize,
+    pub cycles: usize,
+    pub arrivals: usize,
+    /// Final-cycle mean training loss / validation accuracy.
+    pub train_loss: f32,
+    pub accuracy: f64,
+    pub wall_ms: f64,
+    /// [`record_digest`] of the full record stream — equal across
+    /// `threads` values by the pool's determinism contract.
+    pub digest: String,
+}
+
+/// Parameters for [`run_real`]: barrier-mode event engine, native MLP,
+/// tiny 36→16→4 stack so the sweep runs in seconds. The dataset scales
+/// with K (`samples_per_learner` per node), keeping per-learner work
+/// constant across fleet sizes — the serial-vs-sharded comparison the
+/// `real_fleet` bench measures.
+#[derive(Debug, Clone)]
+pub struct RealFleetParams {
+    pub base: ScenarioConfig,
+    pub ks: Vec<usize>,
+    pub cycles: usize,
+    pub scheme: AllocatorKind,
+    /// Pool widths to run each K at — one row per (K, threads).
+    pub threads: Vec<usize>,
+    /// Model stack for the native runtime; `dims[0]` must stay 36 and
+    /// the class count 4 (the synthetic dataset shape below).
+    pub dims: Vec<usize>,
+    pub train_batch: usize,
+    pub eval_batch: usize,
+    pub test_samples: usize,
+    /// Training samples per learner (total D = K × this).
+    pub samples_per_learner: u64,
+    pub lr: f32,
+}
+
+impl Default for RealFleetParams {
+    fn default() -> Self {
+        Self {
+            base: real_base(&ScenarioConfig::paper_default()),
+            ks: vec![100, 500, 1000],
+            cycles: 2,
+            scheme: AllocatorKind::Eta,
+            threads: vec![1, 4],
+            dims: vec![36, 16, 4],
+            train_batch: 64,
+            eval_batch: 256,
+            test_samples: 2048,
+            samples_per_learner: 60,
+            lr: 0.05,
+        }
+    }
+}
+
+/// Adapt a scenario config to the tiny real-numerics stack: 36 input
+/// features and a per-sample compute cost that keeps τ in the single
+/// digits for the 36→16→4 model (same trick as the engine determinism
+/// tests).
+pub fn real_base(base: &ScenarioConfig) -> ScenarioConfig {
+    let mut cfg = base.clone();
+    cfg.task.features = 36;
+    cfg.task.compute_cycles_per_sample = 2.0e7;
+    cfg
+}
+
+/// The synthetic dataset for one K point (36 features, 4 classes).
+pub fn real_dataset(params: &RealFleetParams, k: usize) -> SynthDataset {
+    synth::generate(&SynthConfig {
+        side: 6,
+        classes: 4,
+        train: (params.samples_per_learner * k as u64) as usize,
+        test: params.test_samples,
+        noise_std: 0.4,
+        ..SynthConfig::default()
+    })
+}
+
+/// One real-numerics engine run (barrier policy) at (K, threads). The
+/// `real_fleet` bench calls this directly so dataset generation stays
+/// outside the timed region.
+pub fn real_engine_run(
+    params: &RealFleetParams,
+    k: usize,
+    threads: usize,
+    runtime: &Runtime,
+    ds: &SynthDataset,
+) -> Result<Vec<CycleRecord>> {
+    let scenario = params
+        .base
+        .clone()
+        .with_learners(k)
+        .with_total_samples(params.samples_per_learner * k as u64)
+        .with_threads(threads)
+        .build();
+    let mut engine = EventEngine::new(
+        scenario,
+        params.scheme,
+        crate::aggregation::AggregationRule::FedAvg,
+        ExecMode::Real { runtime, train: ds.train.clone(), test: ds.test.clone() },
+    )?;
+    let opts = EngineOptions {
+        train: TrainOptions { cycles: params.cycles, lr: params.lr, ..Default::default() },
+        ..Default::default()
+    };
+    engine.run(&opts)
+}
+
+/// Run the real-numerics sweep.
+pub fn run_real(params: &RealFleetParams) -> Result<Vec<RealFleetRow>> {
+    let runtime = Runtime::native(&params.dims, params.train_batch, params.eval_batch);
+    let mut rows = Vec::new();
+    for &k in &params.ks {
+        let ds = real_dataset(params, k);
+        for &threads in &params.threads {
+            let t0 = std::time::Instant::now();
+            let records = real_engine_run(params, k, threads, &runtime, &ds)?;
+            let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
+            let last = records.last();
+            rows.push(RealFleetRow {
+                k,
+                threads,
+                workers: ThreadPool::new(threads).threads(),
+                cycles: records.len(),
+                arrivals: records.iter().map(|r| r.arrived).sum(),
+                train_loss: last.map(|r| r.train_loss).unwrap_or(f32::NAN),
+                accuracy: last.map(|r| r.accuracy).unwrap_or(f64::NAN),
+                wall_ms,
+                digest: record_digest(&records),
+            });
+        }
+    }
+    Ok(rows)
+}
+
+/// Render the real-numerics sweep, with per-K speedup vs the
+/// single-thread row.
+pub fn real_table(rows: &[RealFleetRow]) -> Table {
+    let mut t = Table::new(&[
+        "K", "threads", "workers", "cycles", "arrivals", "loss", "acc", "wall_ms", "speedup",
+    ]);
+    for r in rows {
+        let speedup = rows
+            .iter()
+            .find(|b| b.k == r.k && b.threads == 1)
+            .map(|b| b.wall_ms / r.wall_ms);
+        t.row(&[
+            r.k.to_string(),
+            if r.threads == 0 { "auto".to_string() } else { r.threads.to_string() },
+            r.workers.to_string(),
+            r.cycles.to_string(),
+            r.arrivals.to_string(),
+            fmt_f(r.train_loss as f64, 4),
+            fmt_f(r.accuracy, 4),
+            fmt_f(r.wall_ms, 1),
+            match speedup {
+                Some(s) => fmt_f(s, 2),
+                None => "-".to_string(),
+            },
+        ]);
+    }
+    t
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -152,6 +330,33 @@ mod tests {
             assert!(r.final_alive >= 1);
         }
         assert_eq!(table(&rows).num_rows(), 2);
+    }
+
+    #[test]
+    fn real_sweep_is_thread_invariant_and_learns() {
+        let params = RealFleetParams {
+            ks: vec![12],
+            cycles: 2,
+            threads: vec![1, 3],
+            samples_per_learner: 30,
+            test_samples: 64,
+            ..Default::default()
+        };
+        let rows = run_real(&params).unwrap();
+        assert_eq!(rows.len(), 2);
+        assert_eq!(
+            rows[0].digest, rows[1].digest,
+            "thread count changed the record stream"
+        );
+        assert_eq!(rows[0].workers, 1);
+        assert_eq!(rows[1].workers, 3);
+        for r in &rows {
+            assert_eq!(r.cycles, 2);
+            assert!(r.arrivals > 0, "{r:?}");
+            assert!(r.accuracy.is_finite(), "{r:?}");
+            assert!(r.train_loss.is_finite(), "{r:?}");
+        }
+        assert_eq!(real_table(&rows).num_rows(), 2);
     }
 
     #[test]

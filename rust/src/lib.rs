@@ -30,6 +30,7 @@
 //! | [`multimodel`] | FedAST-style multi-tenant layer: model registry, buffered aggregation, freed-slot schedulers |
 //! | [`data`] | synthetic MNIST-like dataset, sharding, minibatching |
 //! | [`runtime`] | model executor: native pure-Rust backend (default) or PJRT (`pjrt` feature) |
+//! | [`runtime::pool`] | deterministic sharded thread pool for real-numerics learner steps |
 //! | [`coordinator`] | lock-step orchestrator **and** the event-driven fleet engine |
 //! | [`metrics`] | CSV writers, table printers, run summaries |
 //! | [`experiments`] | paper figures/tables + fleet-scale and multi-model engine sweeps |
@@ -63,6 +64,19 @@
 //! the differential oracle. Optional per-cycle Gauss–Markov link
 //! fading ([`channel::fading`], `ScenarioConfig.fading_rho`) drives
 //! time-varying re-allocation under churn in both engines.
+//!
+//! ## Sharded real-numerics execution
+//!
+//! `ExecMode::Real` fleets scale past a few hundred learners through
+//! [`runtime::pool::ThreadPool`] (`ScenarioConfig.num_threads`, CLI
+//! `--threads N`, 0 = all cores): learner train steps that are ready at
+//! the same event timestamp — a barrier cycle, the t = 0 async fleet
+//! dispatch, each model's initial sub-fleet — fan out across workers,
+//! and evaluation shards across eval minibatches. All RNG draws stay in
+//! the caller and results merge in stable slot order, so **any thread
+//! count is bit-identical to the serial run** (asserted end-to-end in
+//! `rust/tests/pool_determinism.rs`; serial-vs-sharded wall time in
+//! `rust/benches/real_fleet.rs` and `asyncmel fleet --real`).
 //!
 //! ## In-tree infrastructure substrates
 //!

@@ -37,6 +37,8 @@ const USAGE: &str = "usage: asyncmel <info|solve|fig2|fig3|train|fleet|multi|abl
   fig2     --seeds N --csv PATH      staleness vs K sweep (paper Fig. 2)
   fig3     --cycles N --ks 10,15,20 --samples D --csv PATH
   train    --k N --t SECS --scheme S --aggregation A --cycles N --lr F --samples D
+           --threads N               worker threads for real-numerics learner steps
+                                     (0 = all cores; any value is bit-identical)
            --engine lockstep|event   coordinator engine (default: config)
            --async [--alpha F]       event engine: staleness-weighted async aggregation
            --churn-join R --churn-life S   event engine: joins/s + mean lifetime (s)
@@ -46,6 +48,8 @@ const USAGE: &str = "usage: asyncmel <info|solve|fig2|fig3|train|fleet|multi|abl
   fleet    --ks 10,100,1000,5000 --cycles N --scheme S
            --churn-join R --churn-life S --csv PATH
                                      event-engine scaling sweep (phantom numerics)
+           --real [--threads N]      real-numerics sweep instead (native MLP through
+                                     the sharded executor; default ks 100,500,1000)
   multi    --ks 100,1000 --ms 1,2,4,8 --buffer B --scheduler S --budget N
            --cycles N --scheme S --churn-join R --churn-life S --csv PATH
                                      multi-model concurrency sweep (phantom numerics)
@@ -204,6 +208,7 @@ fn cmd_fig3(base: ScenarioConfig, args: &Args) -> Result<()> {
 }
 
 fn cmd_train(mut base: ScenarioConfig, args: &Args) -> Result<()> {
+    base.num_threads = args.get_or("threads", base.num_threads)?;
     let k: usize = args.get_or("k", 10)?;
     let t: f64 = args.get_or("t", 15.0)?;
     let scheme: AllocatorKind = args.get_or("scheme", AllocatorKind::Relaxed)?;
@@ -440,7 +445,11 @@ fn cmd_multi(base: ScenarioConfig, args: &Args) -> Result<()> {
     Ok(())
 }
 
-fn cmd_fleet(base: ScenarioConfig, args: &Args) -> Result<()> {
+fn cmd_fleet(mut base: ScenarioConfig, args: &Args) -> Result<()> {
+    base.num_threads = args.get_or("threads", base.num_threads)?;
+    if args.has("real") {
+        return cmd_fleet_real(base, args);
+    }
     let ks: Vec<usize> = args.get_list_or("ks", vec![10, 100, 1000, 5000])?;
     let cycles: usize = args.get_or("cycles", 8)?;
     let scheme: AllocatorKind = args.get_or("scheme", AllocatorKind::Eta)?;
@@ -451,6 +460,42 @@ fn cmd_fleet(base: ScenarioConfig, args: &Args) -> Result<()> {
     let params = fleet_scale::FleetScaleParams { base, ks, cycles, scheme, churn };
     let rows = fleet_scale::run(&params)?;
     let table = fleet_scale::table(&rows);
+    println!("{}", table.render());
+    if let Some(path) = args.get("csv") {
+        table.save_csv(path)?;
+        println!("csv -> {path}");
+    }
+    Ok(())
+}
+
+/// `fleet --real`: the real-numerics sweep through the sharded executor
+/// (ROADMAP "ExecMode::Real past a few hundred learners").
+fn cmd_fleet_real(base: ScenarioConfig, args: &Args) -> Result<()> {
+    if ["churn-join", "churn-life", "churn-max", "churn-min"]
+        .iter()
+        .any(|k| args.get(k).is_some())
+    {
+        bail!("fleet --real has no churn model yet; drop the --churn-* flags");
+    }
+    let defaults = fleet_scale::RealFleetParams::default();
+    let ks: Vec<usize> = args.get_list_or("ks", defaults.ks.clone())?;
+    let cycles: usize = args.get_or("cycles", defaults.cycles)?;
+    let scheme: AllocatorKind = args.get_or("scheme", defaults.scheme)?;
+    let threads = if args.get("threads").is_some() {
+        vec![base.num_threads]
+    } else {
+        defaults.threads.clone()
+    };
+    let params = fleet_scale::RealFleetParams {
+        base: fleet_scale::real_base(&base),
+        ks,
+        cycles,
+        scheme,
+        threads,
+        ..defaults
+    };
+    let rows = fleet_scale::run_real(&params)?;
+    let table = fleet_scale::real_table(&rows);
     println!("{}", table.render());
     if let Some(path) = args.get("csv") {
         table.save_csv(path)?;

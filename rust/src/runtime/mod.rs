@@ -15,6 +15,7 @@
 //!   Python never runs here.
 
 pub mod native;
+pub mod pool;
 pub mod spec;
 
 use std::path::{Path, PathBuf};
@@ -26,6 +27,7 @@ use anyhow::Context;
 use crate::aggregation::ParamSet;
 use crate::data::{Batch, Dataset, Minibatches};
 use crate::sim::Rng;
+pub use pool::ThreadPool;
 pub use spec::Manifest;
 
 /// Compiled artifacts (or the native engine) behind one interface.
@@ -170,6 +172,37 @@ impl Runtime {
         let mut n = 0.0;
         for batch in Minibatches::new(data, &idx, self.manifest.eval_batch) {
             let (c, l, m) = self.eval_batch_raw(params, &batch)?;
+            correct += c;
+            loss += l;
+            n += m;
+        }
+        ensure!(n > 0.0, "empty evaluation set");
+        Ok(EvalResult {
+            accuracy: correct / n,
+            mean_loss: loss / n,
+            samples: n as u64,
+        })
+    }
+
+    /// [`Self::evaluate`] with the eval minibatches fanned out across a
+    /// [`ThreadPool`]. Per-batch results are reduced in batch order, so
+    /// the outcome is **bit-identical** to the serial path for any
+    /// thread count (the pool's core contract).
+    pub fn evaluate_pooled(
+        &self,
+        pool: &ThreadPool,
+        params: &ParamSet,
+        data: &Dataset,
+    ) -> Result<EvalResult> {
+        if pool.threads() <= 1 {
+            return self.evaluate(params, data);
+        }
+        let idx: Vec<u32> = (0..data.len() as u32).collect();
+        let batches: Vec<Batch> =
+            Minibatches::new(data, &idx, self.manifest.eval_batch).collect();
+        let parts = pool.try_map(batches.len(), |i| self.eval_batch_raw(params, &batches[i]))?;
+        let (mut correct, mut loss, mut n) = (0.0, 0.0, 0.0);
+        for (c, l, m) in parts {
             correct += c;
             loss += l;
             n += m;
@@ -361,6 +394,28 @@ mod tests {
         // biases zero, weights non-degenerate
         assert!(params[1].iter().all(|&v| v == 0.0));
         assert!(params[0].iter().any(|&v| v != 0.0));
+    }
+
+    #[test]
+    fn pooled_evaluate_is_bit_identical_to_serial() {
+        use crate::data::{synth, SynthConfig};
+        let rt = Runtime::native(&[36, 16, 4], 32, 48);
+        let ds = synth::generate(&SynthConfig {
+            side: 6,
+            classes: 4,
+            train: 64,
+            test: 200, // several eval batches incl. a padded tail
+            ..SynthConfig::default()
+        });
+        let mut rng = Rng::new(9);
+        let params = rt.init_params(&mut rng);
+        let serial = rt.evaluate(&params, &ds.test).unwrap();
+        for threads in [2usize, 3, 8] {
+            let pooled = rt
+                .evaluate_pooled(&ThreadPool::new(threads), &params, &ds.test)
+                .unwrap();
+            assert_eq!(serial, pooled, "threads={threads}");
+        }
     }
 
     #[test]

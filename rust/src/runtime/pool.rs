@@ -1,0 +1,202 @@
+//! Deterministic sharded thread pool for independent learner steps.
+//!
+//! `ExecMode::Real` runs caps out when every learner's `train_step` is
+//! executed serially — the top scaling bottleneck for real-numerics
+//! fleets (ROADMAP "shard the native executor across threads"). This
+//! pool fans a batch of **independent** jobs out across `num_threads`
+//! workers and hands the results back **indexed by job position**, so
+//! the caller merges them in stable slot order and an N-thread run is
+//! bit-identical to the single-thread run. Determinism is the repo's
+//! core invariant (the lock-step orchestrator is the differential
+//! oracle for the event engine), so the contract is explicit:
+//!
+//! * jobs must not share mutable state (they get `&` world views only);
+//! * all RNG draws happen in the caller **before** the fan-out;
+//! * results are returned as `Vec<T>` in job order, regardless of which
+//!   worker finished first.
+//!
+//! The offline registry has no `rayon`, so the pool is built on
+//! `std::thread::scope` + `mpsc` channels: workers claim contiguous
+//! chunks of the job range from a shared atomic cursor (cheap dynamic
+//! load balancing — learner costs are heterogeneous by construction)
+//! and stream `(index, result)` pairs back to the caller, which slots
+//! them into place. Threads live only for the duration of one batch;
+//! at the O(ms) cost of a learner train step the spawn overhead is
+//! noise, and scoped threads let jobs borrow the engine's world
+//! directly (no `Arc`, no `'static` bounds).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc;
+
+use anyhow::Result;
+
+/// A deterministic fork-join pool over `num_threads` workers.
+#[derive(Debug, Clone)]
+pub struct ThreadPool {
+    threads: usize,
+}
+
+impl Default for ThreadPool {
+    fn default() -> Self {
+        Self::serial()
+    }
+}
+
+impl ThreadPool {
+    /// Build a pool with `num_threads` workers; `0` means "use the
+    /// machine's available parallelism" (the `ScenarioConfig.num_threads
+    /// = 0` convention).
+    pub fn new(num_threads: usize) -> Self {
+        let threads = if num_threads == 0 {
+            std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(1)
+        } else {
+            num_threads
+        };
+        Self { threads }
+    }
+
+    /// A single-worker pool: every `map` runs inline on the caller.
+    pub fn serial() -> Self {
+        Self { threads: 1 }
+    }
+
+    /// Worker count this pool fans out to.
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Evaluate `f(0..n)` and return the results in index order.
+    ///
+    /// With one worker (or `n <= 1`) this is a plain serial loop — the
+    /// fan-out path must produce the exact same `Vec`, which the
+    /// determinism tests assert end-to-end through both engines.
+    pub fn map<T, F>(&self, n: usize, f: F) -> Vec<T>
+    where
+        T: Send,
+        F: Fn(usize) -> T + Sync,
+    {
+        if self.threads <= 1 || n <= 1 {
+            return (0..n).map(f).collect();
+        }
+        let workers = self.threads.min(n);
+        // Chunked claiming: big enough to amortize the atomic + channel
+        // traffic, small enough that heterogeneous job costs still
+        // balance (~4 claims per worker).
+        let chunk = (n / (workers * 4)).max(1);
+        let cursor = AtomicUsize::new(0);
+        let mut out: Vec<Option<T>> = Vec::with_capacity(n);
+        out.resize_with(n, || None);
+        let (tx, rx) = mpsc::channel::<(usize, T)>();
+        std::thread::scope(|scope| {
+            for _ in 0..workers {
+                let tx = tx.clone();
+                let cursor = &cursor;
+                let f = &f;
+                scope.spawn(move || loop {
+                    let start = cursor.fetch_add(chunk, Ordering::Relaxed);
+                    if start >= n {
+                        break;
+                    }
+                    let end = (start + chunk).min(n);
+                    for i in start..end {
+                        if tx.send((i, f(i))).is_err() {
+                            return; // receiver gone — batch abandoned
+                        }
+                    }
+                });
+            }
+            drop(tx); // the receive loop ends when every worker is done
+            for (i, v) in rx {
+                out[i] = Some(v);
+            }
+        });
+        out.into_iter()
+            .map(|v| v.expect("pool worker delivered every index"))
+            .collect()
+    }
+
+    /// Fallible [`Self::map`]: runs every job, then surfaces the first
+    /// error **in job order** (deterministic — not "whichever worker
+    /// failed first on the wall clock").
+    pub fn try_map<T, F>(&self, n: usize, f: F) -> Result<Vec<T>>
+    where
+        T: Send,
+        F: Fn(usize) -> Result<T> + Sync,
+    {
+        self.map(n, f).into_iter().collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zero_threads_means_available_parallelism() {
+        assert!(ThreadPool::new(0).threads() >= 1);
+        assert_eq!(ThreadPool::new(3).threads(), 3);
+        assert_eq!(ThreadPool::serial().threads(), 1);
+    }
+
+    #[test]
+    fn map_returns_results_in_index_order() {
+        for threads in [1usize, 2, 4, 9] {
+            let pool = ThreadPool::new(threads);
+            let out = pool.map(257, |i| i * i);
+            assert_eq!(out.len(), 257);
+            for (i, v) in out.iter().enumerate() {
+                assert_eq!(*v, i * i, "threads={threads} index {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn map_matches_serial_for_uneven_job_costs() {
+        // heterogeneous job durations must not reorder results
+        let serial: Vec<u64> = ThreadPool::serial().map(64, |i| {
+            std::hint::black_box((0..(i % 7) * 1000).sum::<usize>());
+            (i as u64) * 31
+        });
+        let sharded = ThreadPool::new(8).map(64, |i| {
+            std::hint::black_box((0..(i % 7) * 1000).sum::<usize>());
+            (i as u64) * 31
+        });
+        assert_eq!(serial, sharded);
+    }
+
+    #[test]
+    fn map_handles_empty_and_singleton_batches() {
+        let pool = ThreadPool::new(4);
+        assert_eq!(pool.map(0, |i| i), Vec::<usize>::new());
+        assert_eq!(pool.map(1, |i| i + 7), vec![7]);
+    }
+
+    #[test]
+    fn try_map_surfaces_the_first_error_in_job_order() {
+        let pool = ThreadPool::new(4);
+        let err = pool
+            .try_map(100, |i| {
+                if i == 23 || i == 71 {
+                    Err(anyhow::anyhow!("job {i} failed"))
+                } else {
+                    Ok(i)
+                }
+            })
+            .unwrap_err();
+        assert_eq!(err.to_string(), "job 23 failed");
+        let ok = pool.try_map(10, |i| Ok(i * 2)).unwrap();
+        assert_eq!(ok, (0..20).step_by(2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn jobs_can_borrow_the_caller_world() {
+        let world: Vec<f64> = (0..50).map(|i| i as f64 * 0.5).collect();
+        let pool = ThreadPool::new(4);
+        let out = pool.map(world.len(), |i| world[i] * 2.0);
+        for (i, v) in out.iter().enumerate() {
+            assert_eq!(*v, i as f64);
+        }
+    }
+}

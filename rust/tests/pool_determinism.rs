@@ -1,0 +1,248 @@
+//! Thread-count determinism for the sharded executor
+//! ([`asyncmel::runtime::pool`]).
+//!
+//! The repo's core invariant is bit-reproducibility — the lock-step
+//! orchestrator is the differential oracle for the event engine, and
+//! every golden snapshot depends on it. The thread pool must therefore
+//! be *invisible* in the results: `num_threads ∈ {1, 2, 8}` has to
+//! produce byte-identical `CycleRecord` streams **and** byte-identical
+//! final parameters for real-numerics runs, through
+//!
+//! * the lock-step [`Orchestrator`] (with and without faults),
+//! * the event engine's barrier and async policies (with churn),
+//! * the multi-model path (M concurrent models sharing one pool),
+//!
+//! plus a property sweep over random scenario seeds and fleet sizes.
+
+use asyncmel::aggregation::{AggregationRule, AsyncAggregator, ParamSet};
+use asyncmel::allocation::AllocatorKind;
+use asyncmel::config::{ChurnConfig, Scenario, ScenarioConfig};
+use asyncmel::coordinator::{
+    record_digest, EngineOptions, EnginePolicy, EventEngine, ExecMode, FaultModel, Orchestrator,
+    TrainOptions,
+};
+use asyncmel::data::{synth, SynthConfig, SynthDataset};
+use asyncmel::multimodel::{report_digest, MultiModelConfig, MultiModelOptions, SchedulerKind};
+use asyncmel::runtime::Runtime;
+use asyncmel::testkit::{forall, Gen};
+
+/// Tiny model so real-numerics runs stay fast in debug builds.
+const DIMS: [usize; 3] = [36, 16, 4];
+const SAMPLES: usize = 360;
+
+fn tiny_world(
+    k: usize,
+    threads: usize,
+    churn: ChurnConfig,
+    seed: u64,
+) -> (Scenario, SynthDataset) {
+    let mut cfg = ScenarioConfig::paper_default()
+        .with_learners(k)
+        .with_cycle(15.0)
+        .with_total_samples(SAMPLES as u64)
+        .with_churn(churn)
+        .with_threads(threads)
+        .with_seed(seed);
+    // match the model input width and keep τ small (debug friendly)
+    cfg.task.features = DIMS[0] as u64;
+    cfg.task.compute_cycles_per_sample = 2.0e7;
+    let ds = synth::generate(&SynthConfig {
+        side: 6,
+        classes: 4,
+        train: SAMPLES,
+        test: 96,
+        noise_std: 0.5,
+        ..SynthConfig::default()
+    });
+    (cfg.build(), ds)
+}
+
+fn tiny_opts() -> TrainOptions {
+    TrainOptions { cycles: 3, lr: 0.1, eval_every: 1, reallocate_each_cycle: false }
+}
+
+const SEED: u64 = 0xA5F3_2019;
+
+fn run_lockstep(threads: usize, faults: Option<FaultModel>) -> (String, ParamSet) {
+    let rt = Runtime::native(&DIMS, 32, 48);
+    let (scenario, ds) = tiny_world(6, threads, ChurnConfig::disabled(), SEED);
+    let mut orch = Orchestrator::new(
+        scenario,
+        AllocatorKind::Sai,
+        AggregationRule::FedAvg,
+        &rt,
+        ds.train,
+        ds.test,
+    )
+    .unwrap();
+    if let Some(f) = faults {
+        orch = orch.with_faults(f);
+    }
+    let (records, params) = orch.run_with_params(&tiny_opts()).unwrap();
+    (record_digest(&records), params)
+}
+
+fn run_event(
+    threads: usize,
+    policy: EnginePolicy,
+    churn: ChurnConfig,
+) -> (String, Option<ParamSet>) {
+    let rt = Runtime::native(&DIMS, 32, 48);
+    let (scenario, ds) = tiny_world(6, threads, churn, SEED);
+    let mut engine = EventEngine::new(
+        scenario,
+        AllocatorKind::Eta,
+        AggregationRule::FedAvg,
+        ExecMode::Real { runtime: &rt, train: ds.train, test: ds.test },
+    )
+    .unwrap();
+    let (records, params) = engine
+        .run_with_params(&EngineOptions { train: tiny_opts(), policy })
+        .unwrap();
+    (record_digest(&records), params)
+}
+
+#[test]
+fn lockstep_is_bit_identical_across_thread_counts() {
+    let (digest1, params1) = run_lockstep(1, None);
+    for threads in [2usize, 8] {
+        let (digest, params) = run_lockstep(threads, None);
+        assert_eq!(digest1, digest, "records diverged at {threads} threads");
+        assert_eq!(params1, params, "params diverged at {threads} threads");
+    }
+    // 0 = auto (available parallelism) is also covered by the contract
+    let (digest, params) = run_lockstep(0, None);
+    assert_eq!(digest1, digest);
+    assert_eq!(params1, params);
+}
+
+#[test]
+fn lockstep_with_faults_is_bit_identical_across_thread_counts() {
+    // dropouts + stragglers draw from the shared stream *before* the
+    // fan-out; the pool must not disturb them
+    let faults = FaultModel::new(0.25, 0.2, 1.5);
+    let (digest1, params1) = run_lockstep(1, Some(faults));
+    let (digest8, params8) = run_lockstep(8, Some(faults));
+    assert_eq!(digest1, digest8);
+    assert_eq!(params1, params8);
+}
+
+#[test]
+fn event_barrier_with_churn_is_bit_identical_across_thread_counts() {
+    let churn = ChurnConfig::new(0.1, 90.0);
+    let (digest1, params1) = run_event(1, EnginePolicy::Barrier, churn);
+    for threads in [2usize, 8] {
+        let (digest, params) = run_event(threads, EnginePolicy::Barrier, churn);
+        assert_eq!(digest1, digest, "records diverged at {threads} threads");
+        assert_eq!(params1, params, "params diverged at {threads} threads");
+    }
+    assert!(params1.is_some(), "real mode must produce final params");
+}
+
+#[test]
+fn event_async_with_churn_is_bit_identical_across_thread_counts() {
+    let churn = ChurnConfig::new(0.1, 90.0);
+    let policy = EnginePolicy::Async(AsyncAggregator::default());
+    let (digest1, params1) = run_event(1, policy, churn);
+    for threads in [2usize, 8] {
+        let (digest, params) = run_event(threads, policy, churn);
+        assert_eq!(digest1, digest, "records diverged at {threads} threads");
+        assert_eq!(params1, params, "params diverged at {threads} threads");
+    }
+}
+
+#[test]
+fn sharded_event_engine_still_matches_the_lockstep_oracle() {
+    // cross-engine AND cross-width: an 8-thread event-barrier run must
+    // still reproduce the single-thread lock-step record stream on
+    // churn-free scenarios (the PR-1 differential guarantee, now with
+    // the pool in the loop)
+    let run_lock = || {
+        let rt = Runtime::native(&DIMS, 32, 48);
+        let (scenario, ds) = tiny_world(5, 1, ChurnConfig::disabled(), SEED);
+        let mut orch = Orchestrator::new(
+            scenario,
+            AllocatorKind::Eta,
+            AggregationRule::FedAvg,
+            &rt,
+            ds.train,
+            ds.test,
+        )
+        .unwrap();
+        let (records, params) = orch.run_with_params(&tiny_opts()).unwrap();
+        (record_digest(&records), params)
+    };
+    let run_evt = |threads: usize| {
+        let rt = Runtime::native(&DIMS, 32, 48);
+        let (scenario, ds) = tiny_world(5, threads, ChurnConfig::disabled(), SEED);
+        let mut engine = EventEngine::new(
+            scenario,
+            AllocatorKind::Eta,
+            AggregationRule::FedAvg,
+            ExecMode::Real { runtime: &rt, train: ds.train, test: ds.test },
+        )
+        .unwrap();
+        let (records, params) = engine
+            .run_with_params(&EngineOptions { train: tiny_opts(), policy: EnginePolicy::Barrier })
+            .unwrap();
+        (record_digest(&records), params.expect("real mode params"))
+    };
+    let (lock_digest, lock_params) = run_lock();
+    let (evt_digest, evt_params) = run_evt(8);
+    assert_eq!(lock_digest, evt_digest);
+    assert_eq!(lock_params, evt_params);
+}
+
+#[test]
+fn multimodel_sharing_one_pool_is_bit_identical_across_thread_counts() {
+    let run = |threads: usize| {
+        let rt = Runtime::native(&DIMS, 32, 48);
+        let (scenario, ds) = tiny_world(6, threads, ChurnConfig::new(0.1, 90.0), SEED);
+        let mut engine = EventEngine::new(
+            scenario,
+            AllocatorKind::Eta,
+            AggregationRule::FedAvg,
+            ExecMode::Real { runtime: &rt, train: ds.train, test: ds.test },
+        )
+        .unwrap();
+        let opts = MultiModelOptions {
+            train: tiny_opts(),
+            multi: MultiModelConfig::new(2, 2, SchedulerKind::Static),
+            ..Default::default()
+        };
+        report_digest(&engine.run_multi(&opts).unwrap())
+    };
+    let serial = run(1);
+    assert_eq!(serial, run(2), "M=2 diverged at 2 threads");
+    assert_eq!(serial, run(8), "M=2 diverged at 8 threads");
+}
+
+#[test]
+fn prop_thread_count_never_changes_real_numerics_runs() {
+    forall("pool-thread-invariance", 6, |g: &mut Gen| {
+        let seed = g.u64_in(1, u64::MAX / 2);
+        let k = g.usize_in(3, 7);
+        let threads = g.usize_in(2, 8);
+        let cycles = g.usize_in(2, 3);
+        let opts = TrainOptions { cycles, lr: 0.1, eval_every: 1, reallocate_each_cycle: false };
+        let run = |t: usize| {
+            let rt = Runtime::native(&DIMS, 32, 48);
+            let (scenario, ds) = tiny_world(k, t, ChurnConfig::disabled(), seed);
+            let mut orch = Orchestrator::new(
+                scenario,
+                AllocatorKind::Eta,
+                AggregationRule::FedAvg,
+                &rt,
+                ds.train,
+                ds.test,
+            )
+            .unwrap();
+            let (records, params) = orch.run_with_params(&opts).unwrap();
+            (record_digest(&records), params)
+        };
+        let (d1, p1) = run(1);
+        let (dn, pn) = run(threads);
+        assert_eq!(d1, dn, "seed {seed} k {k} threads {threads}: records diverged");
+        assert_eq!(p1, pn, "seed {seed} k {k} threads {threads}: params diverged");
+    });
+}

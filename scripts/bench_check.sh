@@ -1,0 +1,120 @@
+#!/usr/bin/env bash
+# Regression gate over the machine-readable bench results.
+#
+#   scripts/bench_check.sh            compare BENCH_*.json against
+#                                     rust/benches/baseline.json
+#   scripts/bench_check.sh --update   rewrite the baseline from the
+#                                     current BENCH_*.json files
+#
+# A benchmark fails the gate when its mean regresses more than
+# BENCH_MAX_RATIO (default 2.0) vs the committed baseline mean.
+# Benchmarks without a baseline entry pass as NEW — adopt them (and
+# refresh machine-specific numbers) with --update, then commit the
+# baseline. BENCH_*.json files are produced by
+# `cargo bench --bench <b> -- --smoke --json BENCH_<b>.json`
+# (scripts/ci.sh bench runs the full set).
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+BASELINE="rust/benches/baseline.json"
+MAX_RATIO="${BENCH_MAX_RATIO:-2.0}"
+MODE="${1:-check}"
+
+shopt -s nullglob
+files=(BENCH_*.json)
+if [ ${#files[@]} -eq 0 ]; then
+  echo "bench_check: no BENCH_*.json files found — run 'scripts/ci.sh bench' first" >&2
+  exit 1
+fi
+
+# Flatten one BENCH_<target>.json to "target/name mean_ns" lines. The
+# in-tree JSON writer prints the results array inline (one object per
+# '}'-terminated segment) with keys in alphabetical order, so mean_ns
+# precedes name within each segment.
+flatten() {
+  local f="$1" target
+  target=$(sed -n 's/.*"target": "\([^"]*\)".*/\1/p' "$f" | head -n 1)
+  if [ -z "$target" ]; then
+    echo "bench_check: $f has no target field" >&2
+    return 1
+  fi
+  tr '}' '\n' <"$f" |
+    sed -n "s|.*\"mean_ns\": \([0-9.eE+-]*\).*\"name\": \"\([^\"]*\)\".*|${target}/\2 \1|p"
+}
+
+pairs=()
+for f in "${files[@]}"; do
+  while IFS= read -r line; do
+    [ -n "$line" ] && pairs+=("$line")
+  done < <(flatten "$f")
+done
+
+if [ ${#pairs[@]} -eq 0 ]; then
+  echo "bench_check: BENCH_*.json files contain no results (all targets skipped?)" >&2
+  exit 1
+fi
+
+if [ "$MODE" = "--update" ]; then
+  mapfile -t sorted < <(printf '%s\n' "${pairs[@]}" | sort)
+  {
+    echo '{'
+    echo '  "note": "Baseline smoke-config mean_ns per benchmark for scripts/bench_check.sh (fail at >BENCH_MAX_RATIO, default 2.0x). Numbers are machine-specific: refresh on the CI runner class with scripts/ci.sh bench && scripts/bench_check.sh --update and commit the result.",'
+    echo '  "entries": {'
+    n=${#sorted[@]}
+    for i in "${!sorted[@]}"; do
+      key="${sorted[$i]%% *}"
+      mean="${sorted[$i]#* }"
+      sep=','
+      [ "$i" -eq $((n - 1)) ] && sep=''
+      printf '    "%s": %s%s\n' "$key" "$mean" "$sep"
+    done
+    echo '  }'
+    echo '}'
+  } >"$BASELINE"
+  echo "bench_check: baseline rewritten with ${#sorted[@]} entries -> $BASELINE"
+  exit 0
+fi
+
+# Baseline entries: lines '  "target/name": mean,' — keys always
+# contain a '/', which keeps the note/max_ratio fields out.
+lookup_baseline() {
+  local key="$1"
+  [ -f "$BASELINE" ] || return 0
+  sed -n 's/^ *"\([^"]*\/[^"]*\)": \([0-9.eE+-]*\),\{0,1\}$/\1 \2/p' "$BASELINE" |
+    awk -v k="$key" '$1 == k { print $2; exit }'
+}
+
+if [ ! -f "$BASELINE" ]; then
+  echo "bench_check: note: $BASELINE missing — every benchmark reports NEW" >&2
+fi
+
+status=0
+new=0
+printf '%-52s %14s %14s %7s  %s\n' "benchmark" "mean_ns" "baseline_ns" "ratio" "status"
+for pair in "${pairs[@]}"; do
+  key="${pair%% *}"
+  mean="${pair#* }"
+  base="$(lookup_baseline "$key")"
+  if [ -z "$base" ]; then
+    printf '%-52s %14.0f %14s %7s  %s\n' "$key" "$mean" "-" "-" "NEW"
+    new=$((new + 1))
+    continue
+  fi
+  ratio=$(awk -v a="$mean" -v b="$base" 'BEGIN { printf "%.2f", a / b }')
+  if awk -v a="$mean" -v b="$base" -v r="$MAX_RATIO" 'BEGIN { exit !(a > b * r) }'; then
+    printf '%-52s %14.0f %14.0f %7s  %s\n' "$key" "$mean" "$base" "$ratio" "REGRESSION(>${MAX_RATIO}x)"
+    status=1
+  else
+    printf '%-52s %14.0f %14.0f %7s  %s\n' "$key" "$mean" "$base" "$ratio" "OK"
+  fi
+done
+
+if [ "$new" -gt 0 ]; then
+  echo "bench_check: $new benchmark(s) have no baseline entry — adopt with 'scripts/bench_check.sh --update'"
+fi
+if [ "$status" -ne 0 ]; then
+  echo "bench_check: FAIL — at least one benchmark regressed >${MAX_RATIO}x vs $BASELINE" >&2
+else
+  echo "bench_check: OK (${#pairs[@]} benchmarks, ratio gate ${MAX_RATIO}x)"
+fi
+exit "$status"

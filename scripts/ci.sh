@@ -1,43 +1,91 @@
 #!/usr/bin/env bash
-# Tier-1 verification + python tests, tolerant of partially-provisioned
-# environments (offline registry, missing optional python deps).
+# Tier-1 verification + bench smoke + python tests, tolerant of
+# partially-provisioned environments (offline registry, missing optional
+# python deps).
+#
+# Stages (so the CI workflow can run them as parallel jobs):
+#   scripts/ci.sh          everything (lint + test + bench)
+#   scripts/ci.sh lint     cargo fmt --check + clippy -D warnings
+#   scripts/ci.sh test     cargo build --release, cargo test -q,
+#                          cargo build --benches, python tests
+#   scripts/ci.sh bench    every bench target in --smoke config writing
+#                          BENCH_<name>.json, then the regression gate
+#                          (scripts/bench_check.sh vs rust/benches/baseline.json)
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
-echo "=== lint: cargo fmt --check ==="
-if cargo fmt --version >/dev/null 2>&1; then
-  cargo fmt --all -- --check
-else
-  echo "note: rustfmt unavailable — skipping format check"
-fi
+BENCHES=(fig2_staleness fig3_accuracy ablation_bounds solver_bench fleet_scale multi_model real_fleet)
 
-echo "=== lint: cargo clippy -- -D warnings ==="
-if cargo clippy --version >/dev/null 2>&1; then
-  cargo clippy --all-targets -- -D warnings
-else
-  echo "note: clippy unavailable — skipping lint check"
-fi
-
-echo "=== tier-1: cargo build --release ==="
-cargo build --release
-
-echo "=== tier-1: cargo test -q ==="
-cargo test -q
-
-echo "=== python tests ==="
-if command -v python3 >/dev/null 2>&1; then
-  if python3 -c "import jax, pytest" >/dev/null 2>&1; then
-    PYTEST_TARGETS="tests"
-    if ! python3 -c "import hypothesis" >/dev/null 2>&1; then
-      echo "note: 'hypothesis' not installed — skipping kernel property tests"
-      PYTEST_TARGETS="tests/test_aot.py tests/test_model.py"
-    fi
-    (cd python && python3 -m pytest ${PYTEST_TARGETS} -q)
+run_lint() {
+  echo "=== lint: cargo fmt --check ==="
+  if cargo fmt --version >/dev/null 2>&1; then
+    cargo fmt --all -- --check
   else
-    echo "note: jax/pytest unavailable — skipping python tests"
+    echo "note: rustfmt unavailable — skipping format check"
   fi
-else
-  echo "note: python3 unavailable — skipping python tests"
-fi
 
-echo "CI OK"
+  echo "=== lint: cargo clippy -- -D warnings ==="
+  if cargo clippy --version >/dev/null 2>&1; then
+    cargo clippy --all-targets -- -D warnings
+  else
+    echo "note: clippy unavailable — skipping lint check"
+  fi
+}
+
+run_test() {
+  echo "=== tier-1: cargo build --release ==="
+  cargo build --release
+
+  echo "=== tier-1: cargo test -q ==="
+  cargo test -q
+
+  # `cargo test` never compiles the harness=false bench binaries, so
+  # bench bit-rot used to slip through tier-1 — build them explicitly.
+  echo "=== tier-1: cargo build --benches ==="
+  cargo build --benches
+
+  echo "=== python tests ==="
+  if command -v python3 >/dev/null 2>&1; then
+    if python3 -c "import jax, pytest" >/dev/null 2>&1; then
+      PYTEST_TARGETS="tests"
+      if ! python3 -c "import hypothesis" >/dev/null 2>&1; then
+        echo "note: 'hypothesis' not installed — skipping kernel property tests"
+        PYTEST_TARGETS="tests/test_aot.py tests/test_model.py"
+      fi
+      (cd python && python3 -m pytest ${PYTEST_TARGETS} -q)
+    else
+      echo "note: jax/pytest unavailable — skipping python tests"
+    fi
+  else
+    echo "note: python3 unavailable — skipping python tests"
+  fi
+}
+
+run_bench() {
+  echo "=== bench-smoke: BENCH_*.json ==="
+  for b in "${BENCHES[@]}"; do
+    echo "--- cargo bench --bench ${b} -- --smoke --json BENCH_${b}.json ---"
+    cargo bench --bench "$b" -- --smoke --json "BENCH_${b}.json"
+  done
+
+  echo "=== bench regression gate ==="
+  bash scripts/bench_check.sh
+}
+
+STAGE="${1:-all}"
+case "$STAGE" in
+  lint) run_lint ;;
+  test) run_test ;;
+  bench) run_bench ;;
+  all)
+    run_lint
+    run_test
+    run_bench
+    ;;
+  *)
+    echo "usage: scripts/ci.sh [all|lint|test|bench]" >&2
+    exit 2
+    ;;
+esac
+
+echo "CI OK (${STAGE})"

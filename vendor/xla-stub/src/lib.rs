@@ -1,0 +1,188 @@
+//! API stand-in for the external `xla` crate (v0.1.6 surface).
+//!
+//! The offline build registry cannot provide the real xla/PJRT chain,
+//! so this stub mirrors the exact subset of the API that
+//! `asyncmel::runtime`'s `pjrt` feature consumes — enough for
+//! `cargo check --features pjrt` to type-check the gated backend in CI
+//! (the satellite goal: the feature-gated code can no longer bit-rot
+//! silently). Host-side [`Literal`] construction is implemented for
+//! real (the runtime's literal unit tests exercise it); anything that
+//! would need an actual PJRT runtime fails fast with a clear error.
+//! To execute compiled HLO, point the `xla` path dependency at the
+//! registry crate instead.
+
+use std::fmt;
+
+/// Stub error type (`std::error::Error`, so it flows into `anyhow`).
+#[derive(Debug)]
+pub struct Error(String);
+
+impl Error {
+    fn new(msg: impl Into<String>) -> Self {
+        Error(msg.into())
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+/// Result alias matching the real crate's shape.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+const STUB_MSG: &str =
+    "xla stub: the real xla/PJRT runtime is not vendored (see vendor/xla-stub); \
+     swap the `xla` path dependency for the registry crate to execute compiled HLO";
+
+/// Host literal: dense f32 data + shape. Fully functional.
+#[derive(Debug, Clone)]
+pub struct Literal {
+    data: Vec<f32>,
+    dims: Vec<i64>,
+}
+
+/// Conversion trait for [`Literal::to_vec`] (the runtime only reads f32).
+pub trait NativeType: Copy {
+    fn from_f32(v: f32) -> Self;
+}
+
+impl NativeType for f32 {
+    fn from_f32(v: f32) -> Self {
+        v
+    }
+}
+
+impl Literal {
+    /// A rank-0 literal.
+    pub fn scalar(v: f32) -> Literal {
+        Literal { data: vec![v], dims: Vec::new() }
+    }
+
+    /// A rank-1 literal over `data`.
+    pub fn vec1(data: &[f32]) -> Literal {
+        Literal { data: data.to_vec(), dims: vec![data.len() as i64] }
+    }
+
+    /// Reinterpret with new dimensions (element count must match).
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let n: i64 = dims.iter().product();
+        if n < 0 || n as usize != self.data.len() {
+            return Err(Error::new(format!(
+                "reshape: {} elements into shape {dims:?}",
+                self.data.len()
+            )));
+        }
+        Ok(Literal { data: self.data.clone(), dims: dims.to_vec() })
+    }
+
+    /// Total element count.
+    pub fn element_count(&self) -> usize {
+        self.data.len()
+    }
+
+    /// Copy out as a typed host vector.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        Ok(self.data.iter().map(|&v| T::from_f32(v)).collect())
+    }
+
+    /// Destructure a tuple literal — needs a real runtime.
+    pub fn to_tuple(&self) -> Result<Vec<Literal>> {
+        Err(Error::new(STUB_MSG))
+    }
+}
+
+/// Parsed HLO module proto (construction needs a real runtime).
+#[derive(Debug)]
+pub struct HloModuleProto {}
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        Err(Error::new(STUB_MSG))
+    }
+}
+
+/// An XLA computation wrapping an HLO module.
+#[derive(Debug)]
+pub struct XlaComputation {}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation {}
+    }
+}
+
+/// Device buffer handle (upload needs a real runtime).
+#[derive(Debug)]
+pub struct PjRtBuffer {}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(Error::new(STUB_MSG))
+    }
+}
+
+/// Compiled executable handle (execution needs a real runtime).
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable {}
+
+impl PjRtLoadedExecutable {
+    pub fn execute_b<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::new(STUB_MSG))
+    }
+}
+
+/// PJRT client handle. [`PjRtClient::cpu`] fails fast in the stub, so
+/// the gated backend errors at startup with a clear message instead of
+/// deep inside a training loop.
+#[derive(Debug)]
+pub struct PjRtClient {}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(Error::new(STUB_MSG))
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(Error::new(STUB_MSG))
+    }
+
+    pub fn buffer_from_host_literal(
+        &self,
+        _device: Option<usize>,
+        _literal: &Literal,
+    ) -> Result<PjRtBuffer> {
+        Err(Error::new(STUB_MSG))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_ops_work_on_the_host() {
+        let lit = Literal::vec1(&[1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        assert_eq!(lit.element_count(), 6);
+        let shaped = lit.reshape(&[2, 3]).unwrap();
+        assert_eq!(shaped.element_count(), 6);
+        assert_eq!(shaped.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        assert!(lit.reshape(&[4]).is_err());
+        assert_eq!(Literal::scalar(7.5).to_vec::<f32>().unwrap(), vec![7.5]);
+    }
+
+    #[test]
+    fn runtime_entry_points_fail_fast() {
+        assert!(PjRtClient::cpu().is_err());
+        assert!(HloModuleProto::from_text_file("/nope").is_err());
+        let err = PjRtClient::cpu().unwrap_err().to_string();
+        assert!(err.contains("xla stub"), "{err}");
+    }
+}
