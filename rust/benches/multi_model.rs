@@ -1,15 +1,18 @@
 //! Bench + regeneration harness for the **multi-model** subsystem.
 //!
-//! `cargo bench --bench multi_model` does three things:
-//! 1. prints the multi-tenancy sweep table: M ∈ {1, 2, 4, 8} concurrent
-//!    models over K ∈ {100, 1000} churny learners, buffered async
-//!    aggregation, staleness-greedy routing, phantom numerics (skipped
-//!    under `--smoke`);
-//! 2. proves the ISSUE acceptance point: an M = 8, K = 1000 run with
-//!    churn completes and is byte-reproducible (report digests equal
-//!    across two runs);
+//! `cargo bench --bench multi_model` does four things:
+//! 1. prints the multi-tenancy sweep tables: M ∈ {1, 2, 4, 8} concurrent
+//!    models over K ∈ {100, 1000} churny learners — homogeneous
+//!    (staleness-greedy, fixed B) and heterogeneous (mixed small/large
+//!    per-model tasks, adaptive B, cost-model routing), phantom
+//!    numerics (skipped under `--smoke`);
+//! 2. proves the ISSUE acceptance points: M = 8, K = 1000 runs with
+//!    churn — homogeneous and heterogeneous — complete and are
+//!    byte-reproducible (report digests equal across two runs);
 //! 3. times one full M = 8, K = 1000 engine run (scheduler + buffered
-//!    aggregation + per-model sub-fleet solve hot path).
+//!    aggregation + per-model sub-fleet solve hot path);
+//! 4. times its heterogeneous counterpart (per-model specs + adaptive
+//!    buffering + predictive routing over one churny fleet).
 //!
 //! Passthrough flags: `--smoke` (fast CI config), `--json PATH`
 //! (machine-readable results; see scripts/bench_check.sh).
@@ -21,7 +24,8 @@ use asyncmel::config::{ChurnConfig, ScenarioConfig};
 use asyncmel::coordinator::{EventEngine, ExecMode, TrainOptions};
 use asyncmel::experiments::multi_model;
 use asyncmel::multimodel::{
-    report_digest, MultiModelConfig, MultiModelOptions, MultiModelReport, SchedulerKind,
+    report_digest, AdaptiveBufferConfig, ModelTaskSpec, MultiModelConfig, MultiModelOptions,
+    MultiModelReport, SchedulerKind,
 };
 
 fn print_sweep() {
@@ -30,6 +34,19 @@ fn print_sweep() {
     println!("\n========== MULTI-MODEL — M concurrent models, shared churny fleet ==========");
     println!("{}", multi_model::table(&rows).render());
     println!("=============================================================================\n");
+
+    // the heterogeneous counterpart: mixed small/large per-model tasks,
+    // adaptive buffering, predictive cost-model routing
+    let params = multi_model::MultiModelParams {
+        hetero: true,
+        adaptive: Some(AdaptiveBufferConfig::with_b_max(8)),
+        scheduler: SchedulerKind::CostModel,
+        ..Default::default()
+    };
+    let rows = multi_model::run(&params).expect("hetero multi-model sweep");
+    println!("===== MULTI-MODEL (hetero) — small/large mix, adaptive B, cost-model =====");
+    println!("{}", multi_model::table(&rows).render());
+    println!("===========================================================================\n");
 }
 
 fn run_k1000_m8() -> MultiModelReport {
@@ -52,6 +69,32 @@ fn run_k1000_m8() -> MultiModelReport {
     engine.run_multi(&opts).expect("run_multi")
 }
 
+/// The heterogeneous acceptance point: mixed small/large models over
+/// one churny K = 1000 fleet, adaptive buffering, predictive routing.
+fn run_k1000_m8_hetero() -> MultiModelReport {
+    let base = ScenarioConfig::paper_default();
+    let specs = ModelTaskSpec::small_large_mix(8, base.total_samples, &base.task);
+    let scenario = base
+        .with_learners(1000)
+        .with_churn(ChurnConfig::new(1.0, 120.0))
+        .build();
+    let mut engine = EventEngine::new(
+        scenario,
+        AllocatorKind::Eta,
+        AggregationRule::FedAvg,
+        ExecMode::Phantom,
+    )
+    .expect("engine");
+    let opts = MultiModelOptions {
+        train: TrainOptions { cycles: 8, ..Default::default() },
+        multi: MultiModelConfig::new(8, 4, SchedulerKind::CostModel)
+            .with_adaptive_buffer(AdaptiveBufferConfig::with_b_max(8))
+            .with_specs(specs),
+        ..Default::default()
+    };
+    engine.run_multi(&opts).expect("run_multi hetero")
+}
+
 fn main() {
     let mut run = BenchRun::from_env("multi_model");
     if !run.smoke() {
@@ -64,13 +107,22 @@ fn main() {
     assert_eq!(a, b, "M=8 K=1000 churny multi-model run must be byte-reproducible");
     println!("determinism: M=8, K=1000 with churn reproduces byte-for-byte OK\n");
 
-    group("multi-model engine @ K=1000, M=8, B=4, churn (phantom numerics)");
+    // …and the heterogeneous/adaptive/predictive path holds the same bar.
+    let a = report_digest(&run_k1000_m8_hetero());
+    let b = report_digest(&run_k1000_m8_hetero());
+    assert_eq!(a, b, "heterogeneous multi-model run must be byte-reproducible");
+    println!("determinism: hetero M=8, K=1000 (adaptive B, cost-model) reproduces OK\n");
+
     let cfg = BenchConfig {
         measure: std::time::Duration::from_secs(5),
         max_iters: 50,
         ..Default::default()
     };
+    group("multi-model engine @ K=1000, M=8, B=4, churn (phantom numerics)");
     run.bench("multimodel/run_k1000_m8", &cfg, run_k1000_m8);
+
+    group("hetero multi-model @ K=1000, M=8 small/large, adaptive B, cost-model");
+    run.bench("multimodel/run_k1000_m8_hetero", &cfg, run_k1000_m8_hetero);
 
     run.finish().expect("bench json");
 }

@@ -14,8 +14,45 @@ use crate::channel::{sample_links, ChannelParams, Link};
 use crate::json::Value;
 use crate::costmodel::{Bounds, DataScenario, LearnerCost, TaskParams};
 use crate::device::{sample_fleet, Device, DeviceRanges};
-use crate::multimodel::{MultiModelConfig, SchedulerKind};
+use crate::multimodel::{AdaptiveBufferConfig, ModelTaskSpec, MultiModelConfig, SchedulerKind};
 use crate::sim::Rng;
+
+/// Serialize task constants — shared by the scenario-level `task`
+/// section and per-model heterogeneous `multimodel.specs[].task`
+/// overrides.
+fn task_to_json(task: &TaskParams) -> Value {
+    let mut v = Value::obj();
+    v.set("features", task.features)
+        .set("data_precision_bits", task.data_precision_bits)
+        .set("model_precision_bits", task.model_precision_bits)
+        .set("model_size_per_sample", task.model_size_per_sample)
+        .set("model_size_params", task.model_size_params)
+        .set("compute_cycles_per_sample", task.compute_cycles_per_sample);
+    v
+}
+
+/// Sparse task overlay: absent fields keep `base`'s values.
+fn task_from_json(v: &Value, mut base: TaskParams) -> Result<TaskParams> {
+    if let Some(x) = v.get("features") {
+        base.features = x.as_u64()?;
+    }
+    if let Some(x) = v.get("data_precision_bits") {
+        base.data_precision_bits = x.as_u64()?;
+    }
+    if let Some(x) = v.get("model_precision_bits") {
+        base.model_precision_bits = x.as_u64()?;
+    }
+    if let Some(x) = v.get("model_size_per_sample") {
+        base.model_size_per_sample = x.as_u64()?;
+    }
+    if let Some(x) = v.get("model_size_params") {
+        base.model_size_params = x.as_u64()?;
+    }
+    if let Some(x) = v.get("compute_cycles_per_sample") {
+        base.compute_cycles_per_sample = x.as_f64()?;
+    }
+    Ok(base)
+}
 
 /// Which coordinator engine executes the run.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
@@ -223,13 +260,7 @@ impl ScenarioConfig {
             .set("embedded_hz_lo", self.devices.embedded_hz.0)
             .set("embedded_hz_hi", self.devices.embedded_hz.1)
             .set("tx_power_dbm", self.devices.tx_power_dbm);
-        let mut task = Value::obj();
-        task.set("features", self.task.features)
-            .set("data_precision_bits", self.task.data_precision_bits)
-            .set("model_precision_bits", self.task.model_precision_bits)
-            .set("model_size_per_sample", self.task.model_size_per_sample)
-            .set("model_size_params", self.task.model_size_params)
-            .set("compute_cycles_per_sample", self.task.compute_cycles_per_sample);
+        let task = task_to_json(&self.task);
         let mut churn = Value::obj();
         churn
             .set("join_rate_per_s", self.churn.join_rate_per_s)
@@ -244,6 +275,37 @@ impl ScenarioConfig {
                 "weights",
                 Value::Arr(self.multimodel.weights.iter().map(|&w| Value::Num(w)).collect()),
             );
+        if let Some(a) = self.multimodel.adaptive_buffer {
+            let mut ab = Value::obj();
+            ab.set("b_max", a.b_max)
+                .set("target_staleness", a.target_staleness)
+                .set("ewma_alpha", a.ewma_alpha);
+            mm.set("adaptive_buffer", ab);
+        }
+        if !self.multimodel.specs.is_empty() {
+            let specs: Vec<Value> = self
+                .multimodel
+                .specs
+                .iter()
+                .map(|s| {
+                    let mut o = Value::obj();
+                    if let Some(d) = s.total_samples {
+                        o.set("total_samples", d);
+                    }
+                    if let Some(t) = s.t_cycle_s {
+                        o.set("t_cycle_s", t);
+                    }
+                    if s.phantom {
+                        o.set("phantom", true);
+                    }
+                    if let Some(task) = &s.task {
+                        o.set("task", task_to_json(task));
+                    }
+                    o
+                })
+                .collect();
+            mm.set("specs", Value::Arr(specs));
+        }
         let mut v = Value::obj();
         v.set("seed", self.seed)
             .set("num_learners", self.num_learners)
@@ -319,40 +381,6 @@ impl ScenarioConfig {
                 cfg.churn.min_learners = x.as_usize()?;
             }
         }
-        if let Some(mm) = v.get("multimodel") {
-            if let Some(x) = mm.get("num_models") {
-                cfg.multimodel.num_models = x.as_usize()?;
-                anyhow::ensure!(cfg.multimodel.num_models >= 1, "num_models must be >= 1");
-            }
-            if let Some(x) = mm.get("buffer_size") {
-                cfg.multimodel.buffer_size = x.as_usize()?;
-                anyhow::ensure!(cfg.multimodel.buffer_size >= 1, "buffer_size must be >= 1");
-            }
-            if let Some(x) = mm.get("scheduler") {
-                let s = x.as_str()?;
-                cfg.multimodel.scheduler = SchedulerKind::parse(s).ok_or_else(|| {
-                    anyhow::anyhow!("unknown scheduler '{s}' (static|round-robin|staleness-greedy)")
-                })?;
-            }
-            if let Some(x) = mm.get("weights") {
-                let w = x
-                    .as_arr()?
-                    .iter()
-                    .map(|w| w.as_f64())
-                    .collect::<Result<Vec<f64>>>()?;
-                anyhow::ensure!(
-                    w.is_empty() || w.len() == cfg.multimodel.num_models,
-                    "multimodel.weights needs one weight per model ({} != {})",
-                    w.len(),
-                    cfg.multimodel.num_models
-                );
-                anyhow::ensure!(
-                    w.iter().all(|&x| x.is_finite() && x > 0.0),
-                    "multimodel.weights must be positive and finite"
-                );
-                cfg.multimodel.weights = w;
-            }
-        }
         if let Some(x) = v.get("fading_rho") {
             let rho = x.as_f64()?;
             anyhow::ensure!((0.0..=1.0).contains(&rho), "fading_rho must be in [0, 1]");
@@ -402,23 +430,94 @@ impl ScenarioConfig {
             }
         }
         if let Some(tk) = v.get("task") {
-            if let Some(x) = tk.get("features") {
-                cfg.task.features = x.as_u64()?;
+            cfg.task = task_from_json(tk, cfg.task)?;
+        }
+        // parsed after `task` so per-model spec.task sections overlay
+        // the scenario task that results from this config
+        if let Some(mm) = v.get("multimodel") {
+            if let Some(x) = mm.get("num_models") {
+                cfg.multimodel.num_models = x.as_usize()?;
+                anyhow::ensure!(cfg.multimodel.num_models >= 1, "num_models must be >= 1");
             }
-            if let Some(x) = tk.get("data_precision_bits") {
-                cfg.task.data_precision_bits = x.as_u64()?;
+            if let Some(x) = mm.get("buffer_size") {
+                cfg.multimodel.buffer_size = x.as_usize()?;
+                anyhow::ensure!(cfg.multimodel.buffer_size >= 1, "buffer_size must be >= 1");
             }
-            if let Some(x) = tk.get("model_precision_bits") {
-                cfg.task.model_precision_bits = x.as_u64()?;
+            if let Some(x) = mm.get("scheduler") {
+                let s = x.as_str()?;
+                cfg.multimodel.scheduler = SchedulerKind::parse(s).ok_or_else(|| {
+                    anyhow::anyhow!(
+                        "unknown scheduler '{s}' (static|round-robin|staleness-greedy|cost-model)"
+                    )
+                })?;
             }
-            if let Some(x) = tk.get("model_size_per_sample") {
-                cfg.task.model_size_per_sample = x.as_u64()?;
+            if let Some(x) = mm.get("weights") {
+                let w = x
+                    .as_arr()?
+                    .iter()
+                    .map(|w| w.as_f64())
+                    .collect::<Result<Vec<f64>>>()?;
+                anyhow::ensure!(
+                    w.is_empty() || w.len() == cfg.multimodel.num_models,
+                    "multimodel.weights needs one weight per model ({} != {})",
+                    w.len(),
+                    cfg.multimodel.num_models
+                );
+                anyhow::ensure!(
+                    w.iter().all(|&x| x.is_finite() && x > 0.0),
+                    "multimodel.weights must be positive and finite"
+                );
+                cfg.multimodel.weights = w;
             }
-            if let Some(x) = tk.get("model_size_params") {
-                cfg.task.model_size_params = x.as_u64()?;
+            if let Some(ab) = mm.get("adaptive_buffer") {
+                // b_max is required — a silent default would clamp the
+                // configured buffer_size down to it (the CLI path
+                // likewise requires --adaptive-buffer BMAX)
+                let b_max = ab
+                    .get("b_max")
+                    .ok_or_else(|| anyhow::anyhow!("adaptive_buffer requires b_max"))?
+                    .as_usize()?;
+                let mut a = AdaptiveBufferConfig { b_max, ..AdaptiveBufferConfig::with_b_max(1) };
+                if let Some(x) = ab.get("target_staleness") {
+                    a.target_staleness = x.as_f64()?;
+                }
+                if let Some(x) = ab.get("ewma_alpha") {
+                    a.ewma_alpha = x.as_f64()?;
+                }
+                a.validate()
+                    .map_err(|e| anyhow::anyhow!("multimodel.adaptive_buffer: {e}"))?;
+                cfg.multimodel.adaptive_buffer = Some(a);
             }
-            if let Some(x) = tk.get("compute_cycles_per_sample") {
-                cfg.task.compute_cycles_per_sample = x.as_f64()?;
+            if let Some(x) = mm.get("specs") {
+                let arr = x.as_arr()?;
+                anyhow::ensure!(
+                    arr.is_empty() || arr.len() == cfg.multimodel.num_models,
+                    "multimodel.specs needs one entry per model ({} != {})",
+                    arr.len(),
+                    cfg.multimodel.num_models
+                );
+                let mut specs = Vec::with_capacity(arr.len());
+                for o in arr {
+                    let mut spec = ModelTaskSpec::inherit();
+                    if let Some(d) = o.get("total_samples") {
+                        let d = d.as_u64()?;
+                        anyhow::ensure!(d >= 1, "specs[].total_samples must be >= 1");
+                        spec.total_samples = Some(d);
+                    }
+                    if let Some(t) = o.get("t_cycle_s") {
+                        let t = t.as_f64()?;
+                        anyhow::ensure!(t > 0.0, "specs[].t_cycle_s must be > 0");
+                        spec.t_cycle_s = Some(t);
+                    }
+                    if let Some(p) = o.get("phantom") {
+                        spec.phantom = p.as_bool()?;
+                    }
+                    if let Some(tk) = o.get("task") {
+                        spec.task = Some(task_from_json(tk, cfg.task)?);
+                    }
+                    specs.push(spec);
+                }
+                cfg.multimodel.specs = specs;
             }
         }
         Ok(cfg)
@@ -612,6 +711,69 @@ mod tests {
         )
         .unwrap();
         assert!(ScenarioConfig::from_json(&bad).is_err());
+    }
+
+    #[test]
+    fn adaptive_buffer_and_specs_round_trip() {
+        let base_task = TaskParams::default();
+        let mut small = base_task;
+        small.model_size_params /= 4;
+        small.compute_cycles_per_sample /= 4.0;
+        let cfg = ScenarioConfig::paper_default().with_multimodel(
+            MultiModelConfig::new(2, 2, SchedulerKind::CostModel)
+                .with_adaptive_buffer(AdaptiveBufferConfig::new(8, 1.5, 0.3))
+                .with_specs(vec![
+                    ModelTaskSpec::inherit(),
+                    ModelTaskSpec {
+                        total_samples: Some(30_000),
+                        t_cycle_s: Some(7.5),
+                        task: Some(small),
+                        phantom: true,
+                    },
+                ]),
+        );
+        let text = cfg.to_json().pretty();
+        let back = ScenarioConfig::from_json(&crate::json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.multimodel.scheduler, SchedulerKind::CostModel);
+        assert_eq!(
+            back.multimodel.adaptive_buffer,
+            Some(AdaptiveBufferConfig::new(8, 1.5, 0.3))
+        );
+        assert_eq!(back.multimodel.specs.len(), 2);
+        assert!(back.multimodel.specs[0].is_inherit());
+        let s = &back.multimodel.specs[1];
+        assert_eq!(s.total_samples, Some(30_000));
+        assert_eq!(s.t_cycle_s, Some(7.5));
+        assert!(s.phantom);
+        assert_eq!(s.task, Some(small));
+        assert!(back.multimodel.is_hetero());
+
+        // a sparse spec.task overlays the *scenario* task
+        let overlay = crate::json::parse(
+            r#"{"task": {"features": 100},
+                "multimodel": {"num_models": 1,
+                               "specs": [{"task": {"model_size_params": 7}}]}}"#,
+        )
+        .unwrap();
+        let back = ScenarioConfig::from_json(&overlay).unwrap();
+        let t = back.multimodel.specs[0].task.unwrap();
+        assert_eq!(t.features, 100, "spec.task must overlay the configured task");
+        assert_eq!(t.model_size_params, 7);
+
+        // invalid knobs are rejected
+        for bad in [
+            // b_max is required, not silently defaulted
+            r#"{"multimodel": {"buffer_size": 4, "adaptive_buffer": {"target_staleness": 3.0}}}"#,
+            r#"{"multimodel": {"adaptive_buffer": {"b_max": 0}}}"#,
+            r#"{"multimodel": {"adaptive_buffer": {"b_max": 4, "ewma_alpha": 1.5}}}"#,
+            r#"{"multimodel": {"adaptive_buffer": {"b_max": 4, "target_staleness": -1.0}}}"#,
+            r#"{"multimodel": {"num_models": 2, "specs": [{}]}}"#,
+            r#"{"multimodel": {"specs": [{"t_cycle_s": 0.0}]}}"#,
+            r#"{"multimodel": {"specs": [{"total_samples": 0}]}}"#,
+        ] {
+            let v = crate::json::parse(bad).unwrap();
+            assert!(ScenarioConfig::from_json(&v).is_err(), "accepted: {bad}");
+        }
     }
 
     #[test]

@@ -52,8 +52,8 @@ use crate::costmodel::{Bounds, LearnerCost};
 use crate::data::{sample_shards, Dataset};
 use crate::device::{Device, DeviceClass};
 use crate::multimodel::{
-    make_scheduler, BufferedUpdate, ModelRegistry, ModelStats, MultiModelOptions,
-    MultiModelReport, SubFleetAlloc,
+    make_scheduler, BufferedUpdate, ModelRegistry, ModelStats, ModelTaskSpec, MultiModelOptions,
+    MultiModelReport, ResolvedTaskSpec, SubFleetAlloc,
 };
 use crate::runtime::{Runtime, ThreadPool};
 use crate::sim::{EventQueue, Rng};
@@ -446,8 +446,11 @@ impl<'rt> EventEngine<'rt> {
         if self.dirty {
             self.resolve()?;
         }
-        let assign = self.assignment(slot);
-        self.dispatch_round(q, now, slot, 0, assign, global, opts, version)?;
+        let assign = self
+            .assignment(slot)
+            .map(|(tau, d)| (tau, d, self.slots[slot].learner.cost));
+        let t_cycle = self.scenario.t_cycle();
+        self.dispatch_round(q, now, slot, 0, assign, global, opts, version, t_cycle)?;
         Ok(())
     }
 
@@ -455,8 +458,13 @@ impl<'rt> EventEngine<'rt> {
     /// batch sampling, arrival push — used verbatim by both the
     /// single-model path ([`Self::dispatch_one`]) and the multi-model
     /// path ([`Self::dispatch_model`]), so the `M = 1` byte-for-byte
-    /// differential guarantee holds by construction. Returns whether an
-    /// upload was actually scheduled.
+    /// differential guarantee holds by construction. `assign` carries
+    /// the cost coefficients the round is timed against (the slot's own
+    /// cost for the single-model path; the spec-adjusted sub-fleet cost
+    /// for heterogeneous models) and `t_cycle` the deadline the retry
+    /// idles on (`T_m` for heterogeneous models). Returns the
+    /// cost-model *predicted* round time when an upload was scheduled
+    /// (`None` otherwise) — the predictive scheduler's forecast input.
     #[allow(clippy::too_many_arguments)]
     fn dispatch_round(
         &mut self,
@@ -464,32 +472,33 @@ impl<'rt> EventEngine<'rt> {
         now: f64,
         slot: usize,
         model: usize,
-        assign: Option<(u64, u64)>,
+        assign: Option<(u64, u64, LearnerCost)>,
         global: &Option<ParamSet>,
         opts: &TrainOptions,
         version: u64,
-    ) -> Result<bool> {
+        t_cycle: f64,
+    ) -> Result<Option<f64>> {
         if !self.slots[slot].alive {
-            return Ok(false);
+            return Ok(None);
         }
-        let t_cycle = self.scenario.t_cycle();
-        let Some((tau, d)) = assign else {
+        let Some((tau, d, cost)) = assign else {
             // fleet changed between resolve and dispatch; try next cycle
             q.push(now + t_cycle, Event::Redispatch { slot });
-            return Ok(false);
+            return Ok(None);
         };
         if tau == 0 {
             // MEL infeasible for this node right now — idle one cycle.
             q.push(now + t_cycle, Event::Redispatch { slot });
-            return Ok(false);
+            return Ok(None);
         }
         self.stats.dispatched += 1;
         let outcome = draw_outcomes(&self.faults, 1, &mut self.rng)[0];
         if outcome == FaultOutcome::Dropped {
             q.push(now + t_cycle, Event::Redispatch { slot });
-            return Ok(false);
+            return Ok(None);
         }
-        let mut busy = self.slots[slot].learner.cost.time(tau as f64, d as f64);
+        let planned = cost.time(tau as f64, d as f64);
+        let mut busy = planned;
         if outcome == FaultOutcome::Straggled {
             busy *= self.faults.straggle_factor;
         }
@@ -525,7 +534,7 @@ impl<'rt> EventEngine<'rt> {
                 train_loss,
             }),
         );
-        Ok(true)
+        Ok(Some(planned))
     }
 
     /// Batched [`Self::dispatch_round`]: dispatch many learner rounds
@@ -535,18 +544,20 @@ impl<'rt> EventEngine<'rt> {
     /// serially in `entries` order — the stream and the queue's seq
     /// assignment are identical to calling `dispatch_round` once per
     /// entry — while the real-numerics train steps fan out across the
-    /// pool. Returns one "upload scheduled" flag per entry.
+    /// pool. Returns the cost-model predicted round time per scheduled
+    /// entry (`None` where no upload was scheduled).
     #[allow(clippy::too_many_arguments)]
     fn dispatch_batch(
         &mut self,
         q: &mut EventQueue<Event>,
         now: f64,
         model: usize,
-        entries: &[(usize, Option<(u64, u64)>)],
+        entries: &[(usize, Option<(u64, u64, LearnerCost)>)],
         global: &Option<ParamSet>,
         opts: &TrainOptions,
         version: u64,
-    ) -> Result<Vec<bool>> {
+        t_cycle: f64,
+    ) -> Result<Vec<Option<f64>>> {
         enum Plan {
             /// Slot not alive: nothing happens (no push).
             Skip,
@@ -556,11 +567,11 @@ impl<'rt> EventEngine<'rt> {
             Run {
                 tau: u64,
                 d: u64,
+                planned: f64,
                 busy: f64,
                 shard: Option<Vec<u32>>,
             },
         }
-        let t_cycle = self.scenario.t_cycle();
         // serial phase: fault + shard draws in entry order (the exact
         // dispatch_round control flow, minus the pushes)
         let mut plans: Vec<Plan> = Vec::with_capacity(entries.len());
@@ -569,7 +580,7 @@ impl<'rt> EventEngine<'rt> {
                 plans.push(Plan::Skip);
                 continue;
             }
-            let Some((tau, d)) = assign else {
+            let Some((tau, d, cost)) = assign else {
                 plans.push(Plan::Retry);
                 continue;
             };
@@ -583,7 +594,8 @@ impl<'rt> EventEngine<'rt> {
                 plans.push(Plan::Retry);
                 continue;
             }
-            let mut busy = self.slots[slot].learner.cost.time(tau as f64, d as f64);
+            let planned = cost.time(tau as f64, d as f64);
+            let mut busy = planned;
             if outcome == FaultOutcome::Straggled {
                 busy *= self.faults.straggle_factor;
             }
@@ -597,7 +609,7 @@ impl<'rt> EventEngine<'rt> {
                 }
                 _ => None,
             };
-            plans.push(Plan::Run { tau, d, busy, shard });
+            plans.push(Plan::Run { tau, d, planned, busy, shard });
         }
         // parallel phase: the real-numerics train steps
         let runnable: Vec<usize> = plans
@@ -630,12 +642,12 @@ impl<'rt> EventEngine<'rt> {
             }
         }
         // serial push phase in entry order (stable queue seq)
-        let mut scheduled = vec![false; entries.len()];
+        let mut scheduled: Vec<Option<f64>> = vec![None; entries.len()];
         for (i, (&(slot, _), plan)) in entries.iter().zip(&plans).enumerate() {
             match plan {
                 Plan::Skip => {}
                 Plan::Retry => q.push(now + t_cycle, Event::Redispatch { slot }),
-                Plan::Run { tau, d, busy, .. } => {
+                Plan::Run { tau, d, planned, busy, .. } => {
                     let (params, train_loss) = match trained[i].take() {
                         Some((p, loss)) => (Some(p), loss),
                         None => (None, f32::NAN),
@@ -652,7 +664,7 @@ impl<'rt> EventEngine<'rt> {
                             train_loss,
                         }),
                     );
-                    scheduled[i] = true;
+                    scheduled[i] = Some(*planned);
                 }
             }
         }
@@ -759,13 +771,18 @@ impl<'rt> EventEngine<'rt> {
         match opts.policy {
             EnginePolicy::Barrier => self.dispatch_cycle(&mut q, now, &global, &opts.train)?,
             EnginePolicy::Async(_) => {
-                let entries: Vec<(usize, Option<(u64, u64)>)> = self
+                let entries: Vec<(usize, Option<(u64, u64, LearnerCost)>)> = self
                     .alloc_slots
                     .clone()
                     .into_iter()
-                    .map(|slot| (slot, self.assignment(slot)))
+                    .map(|slot| {
+                        let assign = self
+                            .assignment(slot)
+                            .map(|(tau, d)| (tau, d, self.slots[slot].learner.cost));
+                        (slot, assign)
+                    })
                     .collect();
-                self.dispatch_batch(&mut q, now, 0, &entries, &global, &opts.train, 0)?;
+                self.dispatch_batch(&mut q, now, 0, &entries, &global, &opts.train, 0, t_cycle)?;
             }
         }
         q.push(now + t_cycle, Event::Boundary);
@@ -947,14 +964,21 @@ impl<'rt> EventEngine<'rt> {
     }
 
     /// (Re-)solve one model's allocation over its assigned sub-fleet
-    /// (the alive slots routed to `model`). Each model distributes the
-    /// full dataset `D` over its own learners — per-model Σ d_k = D —
-    /// and is re-solved lazily when its sub-fleet composition changes.
+    /// (the alive slots routed to `model`). Each model distributes its
+    /// own dataset `D_m` over its own learners — per-model Σ d_k = D_m
+    /// — against its own deadline `T_m` and spec-adjusted cost
+    /// coefficients (per-model model dims change the eq.-(5) comm and
+    /// compute terms), and is re-solved lazily when its sub-fleet
+    /// composition changes. For an inherit-all spec the recomputed
+    /// coefficients are bitwise identical to the slots' own costs
+    /// (same pure function, same inputs), which preserves the
+    /// homogeneous byte-for-byte oracle.
     fn resolve_sub(
         &mut self,
         model: usize,
         model_of: &[usize],
         sub: &mut SubFleetAlloc,
+        spec: &ResolvedTaskSpec,
     ) -> Result<()> {
         let t0 = Instant::now();
         let members: Vec<usize> = (0..self.slots.len())
@@ -965,14 +989,19 @@ impl<'rt> EventEngine<'rt> {
             sub.clear(self.slots.len());
             return Ok(());
         }
-        let costs: Vec<LearnerCost> =
-            members.iter().map(|&i| self.slots[i].learner.cost).collect();
         let cfg = &self.scenario.config;
+        let costs: Vec<LearnerCost> = members
+            .iter()
+            .map(|&i| {
+                let l = &self.slots[i].learner;
+                LearnerCost::from_parts(&l.device, &l.link, &spec.task, cfg.data_scenario)
+            })
+            .collect();
         let bounds =
-            Bounds::proportional(cfg.total_samples, members.len(), cfg.d_lo_frac, cfg.d_hi_frac);
-        let alloc =
-            self.allocator
-                .allocate(&costs, cfg.t_cycle_s, cfg.total_samples, &bounds)?;
+            Bounds::proportional(spec.d_total, members.len(), cfg.d_lo_frac, cfg.d_hi_frac);
+        let alloc = self
+            .allocator
+            .allocate(&costs, spec.t_cycle, spec.d_total, &bounds)?;
         sub.install(alloc, costs, members, self.slots.len());
         sub.last_solve_ms = t0.elapsed().as_secs_f64() * 1e3;
         self.last_solve_ms = sub.last_solve_ms;
@@ -983,8 +1012,9 @@ impl<'rt> EventEngine<'rt> {
     /// Multi-model analogue of [`Self::dispatch_one`]: dispatch `slot`
     /// on `model`'s current snapshot, resolving the model's sub-fleet
     /// first if its composition changed, then running the same
-    /// [`Self::dispatch_round`] core. Returns whether an upload was
-    /// actually scheduled (the caller then records the in-flight round).
+    /// [`Self::dispatch_round`] core. Returns the cost-model predicted
+    /// round time when an upload was scheduled (the caller then records
+    /// the in-flight round and feeds the scheduler's forecast).
     #[allow(clippy::too_many_arguments)]
     fn dispatch_model(
         &mut self,
@@ -994,15 +1024,42 @@ impl<'rt> EventEngine<'rt> {
         model: usize,
         model_of: &[usize],
         sub: &mut SubFleetAlloc,
+        spec: &ResolvedTaskSpec,
         global: &Option<ParamSet>,
         opts: &TrainOptions,
         version: u64,
-    ) -> Result<bool> {
+    ) -> Result<Option<f64>> {
         if sub.dirty {
-            self.resolve_sub(model, model_of, sub)?;
+            self.resolve_sub(model, model_of, sub, spec)?;
         }
-        let assign = sub.assignment(slot);
-        self.dispatch_round(q, now, slot, model, assign, global, opts, version)
+        let assign = sub.assignment_with_cost(slot);
+        self.dispatch_round(q, now, slot, model, assign, global, opts, version, spec.t_cycle)
+    }
+
+    /// A stop-gap `(τ, d)` for a learner that migrated onto `model`
+    /// between flush boundaries (the sub-fleet re-solve is batched to
+    /// the boundary): the bounds-clamped equal share of `D_m` at the
+    /// slot's spec-adjusted cost, run work-conserving (largest τ that
+    /// fits `T_m`; τ = 0 when even one epoch misses it — the usual
+    /// infeasibility marker, which idles the slot one cycle).
+    fn provisional_assign(
+        &self,
+        slot: usize,
+        model: usize,
+        model_of: &[usize],
+        spec: &ResolvedTaskSpec,
+    ) -> Option<(u64, u64, LearnerCost)> {
+        let cfg = &self.scenario.config;
+        let l = &self.slots[slot].learner;
+        let cost = LearnerCost::from_parts(&l.device, &l.link, &spec.task, cfg.data_scenario);
+        let members = (0..self.slots.len())
+            .filter(|&i| self.slots[i].alive && model_of.get(i).copied() == Some(model))
+            .count()
+            .max(1);
+        let bounds = Bounds::proportional(spec.d_total, members, cfg.d_lo_frac, cfg.d_hi_frac);
+        let d = bounds.clamp((spec.d_total / members as u64).max(1));
+        let tau = cost.tau_max_int(d, spec.t_cycle).unwrap_or(0);
+        Some((tau, d, cost))
     }
 
     /// Run `M` concurrent models over the shared fleet — FedAST-style
@@ -1035,7 +1092,29 @@ impl<'rt> EventEngine<'rt> {
                     && opts.multi.weights.iter().all(|&w| w.is_finite() && w > 0.0)),
             "multimodel weights must be positive and finite, one per model"
         );
+        ensure!(
+            opts.multi.specs.is_empty() || opts.multi.specs.len() == m_count,
+            "multimodel specs need one entry per model ({} != {m_count})",
+            opts.multi.specs.len()
+        );
+        if let Some(a) = opts.multi.adaptive_buffer {
+            a.validate().map_err(|e| anyhow!("adaptive buffer config: {e}"))?;
+        }
         self.stats = EngineStats::default();
+
+        // Per-model heterogeneous task specs, scenario defaults filled
+        // in (an empty spec list is the homogeneous workload).
+        let cfg = &self.scenario.config;
+        let inherit = ModelTaskSpec::inherit();
+        let specs: Vec<ResolvedTaskSpec> = (0..m_count)
+            .map(|m| {
+                opts.multi
+                    .specs
+                    .get(m)
+                    .unwrap_or(&inherit)
+                    .resolved(cfg.total_samples, cfg.t_cycle_s, &cfg.task)
+            })
+            .collect();
 
         let mut registry = ModelRegistry::new(&opts.multi, opts.aggregator);
         for (i, b) in opts.round_budgets.iter().take(m_count).enumerate() {
@@ -1047,12 +1126,19 @@ impl<'rt> EventEngine<'rt> {
         let mut scheduler = make_scheduler(&opts.multi);
 
         // Per-model parameter sets. Model 0 forks with the same salt as
-        // the single-model path, keeping the M = 1 stream identical.
+        // the single-model path, keeping the M = 1 stream identical; a
+        // per-model phantom spec skips materialization (bookkeeping
+        // only) but still consumes its fork so sibling models' init
+        // streams are independent of the phantom flags.
         let mut globals: Vec<Option<ParamSet>> = match &self.exec {
             ExecMode::Real { runtime, .. } => (0..m_count)
                 .map(|m| {
                     let mut init_rng = self.rng.fork(0x1417 ^ ((m as u64) << 20));
-                    Some(runtime.init_params(&mut init_rng))
+                    if specs[m].phantom {
+                        None
+                    } else {
+                        Some(runtime.init_params(&mut init_rng))
+                    }
                 })
                 .collect(),
             ExecMode::Phantom => vec![None; m_count],
@@ -1064,13 +1150,22 @@ impl<'rt> EventEngine<'rt> {
         ensure!(!active.is_empty(), "every model is budget-exhausted at start");
         let mut model_of: Vec<usize> = Vec::with_capacity(self.slots.len());
         for slot in 0..self.slots.len() {
-            model_of.push(scheduler.pick(slot, &registry, &active));
+            model_of.push(scheduler.pick(slot, 0.0, &registry, &active));
         }
         let mut subs: Vec<SubFleetAlloc> = (0..m_count).map(|_| SubFleetAlloc::new()).collect();
         for (m, sub) in subs.iter_mut().enumerate() {
             // solved eagerly so the initial dispatch below sees clean state
-            self.resolve_sub(m, &model_of, sub)?;
+            self.resolve_sub(m, &model_of, sub, &specs[m])?;
         }
+
+        // Scheduler-driven migrations are batched to the next flush
+        // boundary: a freed learner trains its new model on a
+        // provisional assignment until then, and the boundary applies
+        // all moves at once — each affected sub-fleet is dirtied (and
+        // so re-solved) at most once per boundary instead of up to
+        // twice per learner move.
+        let mut pending_moves: std::collections::BTreeMap<usize, usize> =
+            std::collections::BTreeMap::new();
 
         let mut q: EventQueue<Event> = EventQueue::new();
         let mut now = 0.0f64;
@@ -1095,20 +1190,26 @@ impl<'rt> EventEngine<'rt> {
         // the subs were solved eagerly above, so no lazy re-solve can
         // interleave).
         for m in 0..m_count {
-            let entries: Vec<(usize, Option<(u64, u64)>)> = subs[m]
+            let entries: Vec<(usize, Option<(u64, u64, LearnerCost)>)> = subs[m]
                 .slots
                 .clone()
                 .into_iter()
-                .map(|slot| (slot, subs[m].assignment(slot)))
+                .map(|slot| (slot, subs[m].assignment_with_cost(slot)))
                 .collect();
             let version = registry.models[m].version;
             let scheduled = self.dispatch_batch(
-                &mut q, now, m, &entries, &globals[m], &opts.train, version,
+                &mut q,
+                now,
+                m,
+                &entries,
+                &globals[m],
+                &opts.train,
+                version,
+                specs[m].t_cycle,
             )?;
-            for sch in scheduled {
-                if sch {
-                    registry.models[m].record_dispatch(version);
-                }
+            for planned in scheduled.into_iter().flatten() {
+                registry.models[m].record_dispatch(version);
+                scheduler.observe_dispatch(m, now + planned);
             }
         }
         q.push(now + t_cycle, Event::Boundary);
@@ -1127,6 +1228,7 @@ impl<'rt> EventEngine<'rt> {
                 Event::Arrival(msg) => {
                     let m = msg.model;
                     registry.models[m].complete_dispatch(msg.version_at_dispatch);
+                    scheduler.observe_arrival(m, now);
                     if !self.slots[msg.slot].alive {
                         continue; // left while the upload was in flight
                     }
@@ -1145,19 +1247,48 @@ impl<'rt> EventEngine<'rt> {
                     if active.is_empty() {
                         continue; // every model done — learner retires
                     }
-                    let target = scheduler.pick(msg.slot, &registry, &active);
-                    if target != model_of[msg.slot] {
-                        subs[model_of[msg.slot]].dirty = true;
-                        subs[target].dirty = true;
-                        model_of[msg.slot] = target;
-                    }
+                    let target = scheduler.pick(msg.slot, now, &registry, &active);
                     let version = registry.models[target].version;
-                    let scheduled = self.dispatch_model(
-                        &mut q, now, msg.slot, target, &model_of, &mut subs[target],
-                        &globals[target], &opts.train, version,
-                    )?;
-                    if scheduled {
+                    let scheduled = if target != model_of[msg.slot] {
+                        // migrate — but batched: the membership change
+                        // (and the two sub-fleet re-solves it implies)
+                        // waits for the next flush boundary; meanwhile
+                        // the learner trains its new model on a
+                        // provisional cost-model assignment
+                        pending_moves.insert(msg.slot, target);
+                        let assign =
+                            self.provisional_assign(msg.slot, target, &model_of, &specs[target]);
+                        self.dispatch_round(
+                            &mut q,
+                            now,
+                            msg.slot,
+                            target,
+                            assign,
+                            &globals[target],
+                            &opts.train,
+                            version,
+                            specs[target].t_cycle,
+                        )?
+                    } else {
+                        // the scheduler's latest word stands: an earlier
+                        // pending move for this slot is cancelled
+                        pending_moves.remove(&msg.slot);
+                        self.dispatch_model(
+                            &mut q,
+                            now,
+                            msg.slot,
+                            target,
+                            &model_of,
+                            &mut subs[target],
+                            &specs[target],
+                            &globals[target],
+                            &opts.train,
+                            version,
+                        )?
+                    };
+                    if let Some(planned) = scheduled {
                         registry.models[target].record_dispatch(version);
+                        scheduler.observe_dispatch(target, now + planned);
                     }
                 }
                 Event::Redispatch { slot } => {
@@ -1169,26 +1300,39 @@ impl<'rt> EventEngine<'rt> {
                     // but still flows through dispatch_model so a
                     // pending dirty re-solve happens exactly when the
                     // single-model path would perform it (byte parity).
-                    let mut m = model_of[slot];
+                    let mut m = pending_moves.get(&slot).copied().unwrap_or(model_of[slot]);
                     if self.slots[slot].alive && registry.models[m].budget_exhausted() {
                         let active = registry.active_ids();
                         if active.is_empty() {
                             continue;
                         }
-                        m = scheduler.pick(slot, &registry, &active);
-                        if m != model_of[slot] {
-                            subs[model_of[slot]].dirty = true;
-                            subs[m].dirty = true;
-                            model_of[slot] = m;
-                        }
+                        m = scheduler.pick(slot, now, &registry, &active);
                     }
                     let version = registry.models[m].version;
-                    let scheduled = self.dispatch_model(
-                        &mut q, now, slot, m, &model_of, &mut subs[m], &globals[m],
-                        &opts.train, version,
-                    )?;
-                    if scheduled {
+                    let scheduled = if m != model_of[slot] {
+                        pending_moves.insert(slot, m);
+                        let assign = self.provisional_assign(slot, m, &model_of, &specs[m]);
+                        self.dispatch_round(
+                            &mut q,
+                            now,
+                            slot,
+                            m,
+                            assign,
+                            &globals[m],
+                            &opts.train,
+                            version,
+                            specs[m].t_cycle,
+                        )?
+                    } else {
+                        pending_moves.remove(&slot);
+                        self.dispatch_model(
+                            &mut q, now, slot, m, &model_of, &mut subs[m], &specs[m],
+                            &globals[m], &opts.train, version,
+                        )?
+                    };
+                    if let Some(planned) = scheduled {
                         registry.models[m].record_dispatch(version);
+                        scheduler.observe_dispatch(m, now + planned);
                     }
                 }
                 Event::Join => {
@@ -1197,16 +1341,20 @@ impl<'rt> EventEngine<'rt> {
                         if active.is_empty() {
                             model_of.push(0); // park: nothing left to train
                         } else {
-                            let m = scheduler.pick(slot, &registry, &active);
+                            // a join is a fleet-composition change, not a
+                            // migration — the sub-fleet is dirtied (and
+                            // re-solved on this dispatch) immediately
+                            let m = scheduler.pick(slot, now, &registry, &active);
                             model_of.push(m);
                             subs[m].dirty = true;
                             let version = registry.models[m].version;
                             let scheduled = self.dispatch_model(
-                                &mut q, now, slot, m, &model_of, &mut subs[m],
+                                &mut q, now, slot, m, &model_of, &mut subs[m], &specs[m],
                                 &globals[m], &opts.train, version,
                             )?;
-                            if scheduled {
+                            if let Some(planned) = scheduled {
                                 registry.models[m].record_dispatch(version);
+                                scheduler.observe_dispatch(m, now + planned);
                             }
                         }
                     }
@@ -1224,6 +1372,20 @@ impl<'rt> EventEngine<'rt> {
                     }
                 }
                 Event::Boundary => {
+                    // apply the batched scheduler migrations: every
+                    // affected sub-fleet is dirtied at most once per
+                    // boundary, however many learners moved (a slot that
+                    // died in flight stays put — dead slots never hold
+                    // membership anywhere that matters)
+                    for (&slot, &target) in pending_moves.iter() {
+                        let from = model_of[slot];
+                        if from != target && self.slots[slot].alive {
+                            subs[from].dirty = true;
+                            subs[target].dirty = true;
+                            model_of[slot] = target;
+                        }
+                    }
+                    pending_moves.clear();
                     let cycle = done_cycles;
                     for m in 0..m_count {
                         let (arrived, train_loss, max_s, avg_s) =
@@ -1250,8 +1412,11 @@ impl<'rt> EventEngine<'rt> {
                         if mi.budget_exhausted() && mi.budget_cycle.is_none() {
                             mi.budget_cycle = Some(cycle);
                         }
+                        // utilization against the model's own deadline
+                        // T_m — the clock its allocation was solved to
+                        // fill (== scenario T for homogeneous specs)
                         let utilization = match &subs[m].alloc {
-                            Some(a) => a.mean_utilization(&subs[m].costs, t_cycle),
+                            Some(a) => a.mean_utilization(&subs[m].costs, specs[m].t_cycle),
                             None => 0.0,
                         };
                         records[m].push(CycleRecord {
@@ -1297,6 +1462,8 @@ impl<'rt> EventEngine<'rt> {
                 final_sum_d: subs[m].sum_d(),
                 budget_cycle: registry.models[m].budget_cycle,
                 target_cycle: registry.models[m].target_cycle,
+                final_buffer: registry.models[m].buffer_size,
+                retunes: registry.models[m].retunes,
             })
             .collect();
         Ok(MultiModelReport { records, stats })
@@ -1480,6 +1647,66 @@ mod tests {
         }
         let total: u64 = report.stats.iter().map(|s| s.arrivals).sum();
         assert_eq!(total as usize, engine.stats.arrivals);
+    }
+
+    #[test]
+    fn migrations_are_batched_to_flush_boundaries() {
+        use crate::multimodel::{MultiModelConfig, MultiModelOptions, SchedulerKind};
+        // round-robin re-picks every freed slot, so learners migrate
+        // constantly; batching must keep re-solves bounded by
+        // (affected sub-fleets × boundaries), not by arrivals
+        let mut engine = phantom_engine(16, ChurnConfig::disabled());
+        let cycles = 5;
+        let opts = MultiModelOptions {
+            train: TrainOptions { cycles, ..Default::default() },
+            multi: MultiModelConfig::new(2, 1, SchedulerKind::RoundRobin),
+            ..Default::default()
+        };
+        let report = engine.run_multi(&opts).unwrap();
+        let arrivals = engine.stats.arrivals;
+        assert!(arrivals > 2 * cycles, "expected a busy arrival stream, got {arrivals}");
+        // 2 eager initial solves + at most 2 dirtied sub-fleets per boundary
+        assert!(
+            engine.stats.resolves <= 2 + 2 * cycles,
+            "migration batching regressed: {} re-solves over {} boundaries ({} arrivals)",
+            engine.stats.resolves,
+            cycles,
+            arrivals
+        );
+        assert_eq!(report.num_models(), 2);
+    }
+
+    #[test]
+    fn hetero_specs_solve_each_model_against_its_own_task() {
+        use crate::multimodel::{
+            ModelTaskSpec, MultiModelConfig, MultiModelOptions, SchedulerKind,
+        };
+        let mut engine = phantom_engine(12, ChurnConfig::disabled());
+        let d_total = engine.scenario.total_samples();
+        let mut small = engine.scenario.config.task;
+        small.model_size_params /= 4;
+        small.compute_cycles_per_sample /= 4.0;
+        let specs = vec![
+            ModelTaskSpec::inherit(),
+            ModelTaskSpec {
+                total_samples: Some(d_total / 2),
+                t_cycle_s: None,
+                task: Some(small),
+                phantom: false,
+            },
+        ];
+        let opts = MultiModelOptions {
+            train: TrainOptions { cycles: 4, ..Default::default() },
+            multi: MultiModelConfig::new(2, 1, SchedulerKind::Static).with_specs(specs),
+            ..Default::default()
+        };
+        let report = engine.run_multi(&opts).unwrap();
+        // per-model Σd = D_m: each model distributes its *own* dataset
+        assert_eq!(report.stats[0].final_sum_d, Some(d_total));
+        assert_eq!(report.stats[1].final_sum_d, Some(d_total / 2));
+        for s in &report.stats {
+            assert!(s.arrivals > 0, "model {} starved", s.model);
+        }
     }
 
     #[test]

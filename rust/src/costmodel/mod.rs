@@ -37,7 +37,7 @@ pub enum DataScenario {
 }
 
 /// Learning-task constants (§V-A values as defaults).
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone, Copy, PartialEq)]
 pub struct TaskParams {
     /// Features per sample `F` (MNIST: 784).
     pub features: u64,

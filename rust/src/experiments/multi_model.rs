@@ -17,7 +17,9 @@ use crate::allocation::AllocatorKind;
 use crate::config::{ChurnConfig, ScenarioConfig};
 use crate::coordinator::{EventEngine, ExecMode, TrainOptions};
 use crate::metrics::{fmt_f, fmt_opt_f, Table};
-use crate::multimodel::{MultiModelConfig, MultiModelOptions, SchedulerKind};
+use crate::multimodel::{
+    AdaptiveBufferConfig, ModelTaskSpec, MultiModelConfig, MultiModelOptions, SchedulerKind,
+};
 
 /// One (K, M) point of the sweep.
 #[derive(Debug, Clone)]
@@ -43,6 +45,13 @@ pub struct MultiModelRow {
     /// Mean over models of the cycle at which the round budget was met
     /// (None if any model never got there, or no budget was set).
     pub rounds_to_budget: Option<f64>,
+    /// Heterogeneous small/large per-model task specs in effect?
+    pub hetero: bool,
+    /// Mean over models of the final buffer size `B_m` (== the
+    /// configured `B` for fixed-buffer runs).
+    pub mean_final_b: f64,
+    /// Adaptive-controller retunes summed over models (0 = fixed `B`).
+    pub retunes: u64,
     /// Host wall-clock for the whole run (ms).
     pub wall_ms: f64,
 }
@@ -62,6 +71,12 @@ pub struct MultiModelParams {
     /// Applied-update budget per model (drives the rounds-to-target
     /// column; None = unbounded).
     pub round_budget: Option<u64>,
+    /// Run the mixed small/large per-model task specs
+    /// ([`ModelTaskSpec::small_large_mix`]) instead of homogeneous
+    /// tasks.
+    pub hetero: bool,
+    /// FedAST-style adaptive buffer sizing (None = fixed `B`).
+    pub adaptive: Option<AdaptiveBufferConfig>,
 }
 
 impl Default for MultiModelParams {
@@ -78,6 +93,8 @@ impl Default for MultiModelParams {
             churn: ChurnConfig::new(1.0, 120.0),
             aggregator: AsyncAggregator::default(),
             round_budget: Some(64),
+            hetero: false,
+            adaptive: None,
         }
     }
 }
@@ -99,10 +116,21 @@ pub fn run(params: &MultiModelParams) -> Result<Vec<MultiModelRow>> {
                 crate::aggregation::AggregationRule::FedAvg,
                 ExecMode::Phantom,
             )?;
+            let mut multi = MultiModelConfig::new(m, params.buffer, params.scheduler);
+            if let Some(a) = params.adaptive {
+                multi = multi.with_adaptive_buffer(a);
+            }
+            if params.hetero {
+                multi = multi.with_specs(ModelTaskSpec::small_large_mix(
+                    m,
+                    params.base.total_samples,
+                    &params.base.task,
+                ));
+            }
             let opts = MultiModelOptions {
                 train: TrainOptions { cycles: params.cycles, ..Default::default() },
                 aggregator: params.aggregator,
-                multi: MultiModelConfig::new(m, params.buffer, params.scheduler),
+                multi,
                 round_budgets: vec![params.round_budget; m],
                 target_accuracies: Vec::new(),
             };
@@ -134,6 +162,8 @@ pub fn run(params: &MultiModelParams) -> Result<Vec<MultiModelRow>> {
             } else {
                 None
             };
+            let mean_final_b = report.stats.iter().map(|s| s.final_buffer).sum::<usize>() as f64
+                / report.stats.len().max(1) as f64;
             rows.push(MultiModelRow {
                 k,
                 m,
@@ -148,6 +178,9 @@ pub fn run(params: &MultiModelParams) -> Result<Vec<MultiModelRow>> {
                 max_staleness,
                 utilization: util_sum / util_n.max(1) as f64,
                 rounds_to_budget,
+                hetero: params.hetero,
+                mean_final_b,
+                retunes: report.stats.iter().map(|s| s.retunes).sum(),
                 wall_ms: wall * 1e3,
             });
         }
@@ -158,8 +191,9 @@ pub fn run(params: &MultiModelParams) -> Result<Vec<MultiModelRow>> {
 /// Render as a table.
 pub fn table(rows: &[MultiModelRow]) -> Table {
     let mut t = Table::new(&[
-        "K", "M", "B", "sched", "cycles", "events", "arrivals", "applied", "resolves",
-        "avg_stale", "max_stale", "util", "rounds_to_budget", "wall_ms",
+        "K", "M", "B", "sched", "hetero", "cycles", "events", "arrivals", "applied",
+        "resolves", "avg_stale", "max_stale", "util", "rounds_to_budget", "final_B",
+        "retunes", "wall_ms",
     ]);
     for r in rows {
         t.row(&[
@@ -167,6 +201,7 @@ pub fn table(rows: &[MultiModelRow]) -> Table {
             r.m.to_string(),
             r.buffer.to_string(),
             r.scheduler.name().to_string(),
+            r.hetero.to_string(),
             r.cycles.to_string(),
             r.events.to_string(),
             r.arrivals.to_string(),
@@ -176,6 +211,8 @@ pub fn table(rows: &[MultiModelRow]) -> Table {
             r.max_staleness.to_string(),
             fmt_f(r.utilization, 3),
             fmt_opt_f(r.rounds_to_budget, 1),
+            fmt_f(r.mean_final_b, 2),
+            r.retunes.to_string(),
             fmt_f(r.wall_ms, 1),
         ]);
     }
@@ -188,11 +225,12 @@ pub fn row_keys(rows: &[MultiModelRow]) -> Vec<String> {
     rows.iter()
         .map(|r| {
             format!(
-                "K={} M={} B={} sched={} events={} arrivals={} applied={} resolves={} avg_s={:?} max_s={} util={:?} rtb={:?}",
+                "K={} M={} B={} sched={} hetero={} events={} arrivals={} applied={} resolves={} avg_s={:?} max_s={} util={:?} rtb={:?} final_b={:?} retunes={}",
                 r.k,
                 r.m,
                 r.buffer,
                 r.scheduler.name(),
+                r.hetero,
                 r.events,
                 r.arrivals,
                 r.applied,
@@ -201,6 +239,8 @@ pub fn row_keys(rows: &[MultiModelRow]) -> Vec<String> {
                 r.max_staleness,
                 r.utilization,
                 r.rounds_to_budget,
+                r.mean_final_b,
+                r.retunes,
             )
         })
         .collect()
@@ -234,6 +274,44 @@ mod tests {
         }
         assert_eq!(table(&rows).num_rows(), 4);
         assert_eq!(row_keys(&rows).len(), 4);
+    }
+
+    #[test]
+    fn hetero_adaptive_sweep_runs_and_reports_buffer_telemetry() {
+        let params = MultiModelParams {
+            ks: vec![16],
+            ms: vec![2, 4],
+            cycles: 5,
+            buffer: 2,
+            scheduler: SchedulerKind::CostModel,
+            churn: ChurnConfig::disabled(),
+            round_budget: None,
+            hetero: true,
+            adaptive: Some(AdaptiveBufferConfig::new(6, 1.0, 0.5)),
+            ..Default::default()
+        };
+        let rows = run(&params).unwrap();
+        assert_eq!(rows.len(), 2);
+        for r in &rows {
+            assert!(r.hetero);
+            assert!(r.arrivals > 0);
+            assert!(
+                (1.0..=6.0).contains(&r.mean_final_b),
+                "final B {} escaped [1, b_max]",
+                r.mean_final_b
+            );
+        }
+        // deterministic across reruns (the golden-style contract)
+        let again = run(&params).unwrap();
+        assert_eq!(row_keys(&rows), row_keys(&again));
+        // and genuinely different from the homogeneous fixed-B sweep
+        let homo = run(&MultiModelParams {
+            hetero: false,
+            adaptive: None,
+            ..params
+        })
+        .unwrap();
+        assert_ne!(row_keys(&rows), row_keys(&homo));
     }
 
     #[test]

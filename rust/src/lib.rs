@@ -53,17 +53,34 @@
 //! ([`multimodel`], after FedAST 2406.00302):
 //! [`coordinator::EventEngine::run_multi`] trains `M` model instances
 //! concurrently over one shared fleet. Each model owns its parameters,
-//! staleness tracker and a **buffered aggregator** (server update every
-//! `B` client updates); freed learners are routed between models by a
-//! pluggable [`multimodel::ModelScheduler`] (static split, weighted
-//! round-robin, or staleness-greedy), and every model re-solves the
+//! staleness tracker, a **buffered aggregator** (server update every
+//! `B_m` client updates) and — new in the heterogeneous-workload
+//! generalization — its own **task spec**
+//! ([`multimodel::ModelTaskSpec`]): per-model `D_m`, `T_m`, model dims
+//! (reshaping the eq.-(5) cost coefficients its sub-fleet is solved
+//! with) and exec mode (per-model phantom). Every model re-solves the
 //! paper's `(τ_k, d_k)` program lazily over its own sub-fleet
-//! (per-model Σ d_k = D). With `M = 1, B = 1` the multi-model path
-//! reproduces the single-model async `CycleRecord` stream
-//! byte-for-byte (`rust/tests/multimodel.rs`) — the degenerate case is
-//! the differential oracle. Optional per-cycle Gauss–Markov link
-//! fading ([`channel::fading`], `ScenarioConfig.fading_rho`) drives
-//! time-varying re-allocation under churn in both engines.
+//! (per-model Σ d_k = D_m). Buffering can be **adaptive**
+//! ([`multimodel::AdaptiveBufferConfig`], FedAST's tuned-`B`): `B_m`
+//! is retuned at flush boundaries from an EWMA of observed arrival
+//! staleness, clamped to `[1, B_max]`, while the fixed-`B` path stays
+//! byte-identical as the differential oracle. Freed learners are
+//! routed between models by a pluggable
+//! [`multimodel::ModelScheduler`] — static split, weighted
+//! round-robin, staleness-greedy, or the predictive **cost-model**
+//! scheduler ([`multimodel::CostModelScheduler`]), which feeds the
+//! model whose next server update is predicted (from the allocator's
+//! own cost model) to be furthest away. Scheduler-driven migrations
+//! are batched to flush boundaries, so an arrival dirties at most one
+//! re-solve per affected sub-fleet per boundary (all migrating
+//! schedulers, not just the new one). With `M = 1, B = 1` the
+//! multi-model path reproduces the single-model async `CycleRecord`
+//! stream byte-for-byte (`rust/tests/multimodel.rs`) — the degenerate
+//! case is the differential oracle, and an inherit-all heterogeneous
+//! spec at `M = 1` holds the same guarantee. Optional per-cycle
+//! Gauss–Markov link fading ([`channel::fading`],
+//! `ScenarioConfig.fading_rho`) drives time-varying re-allocation
+//! under churn in both engines.
 //!
 //! ## Sharded real-numerics execution
 //!

@@ -28,7 +28,9 @@ use asyncmel::coordinator::{
 use asyncmel::data::{synth, SynthConfig, SynthDataset};
 use asyncmel::experiments::{ablation, fig2, fig3, fleet_scale, multi_model};
 use asyncmel::metrics::{fmt_f, fmt_opt_u, Table};
-use asyncmel::multimodel::{MultiModelConfig, MultiModelOptions, SchedulerKind};
+use asyncmel::multimodel::{
+    AdaptiveBufferConfig, ModelTaskSpec, MultiModelConfig, MultiModelOptions, SchedulerKind,
+};
 use asyncmel::runtime::{default_artifacts_dir, Runtime};
 
 const USAGE: &str = "usage: asyncmel <info|solve|fig2|fig3|train|fleet|multi|ablation> [flags]
@@ -42,8 +44,15 @@ const USAGE: &str = "usage: asyncmel <info|solve|fig2|fig3|train|fleet|multi|abl
            --engine lockstep|event   coordinator engine (default: config)
            --async [--alpha F]       event engine: staleness-weighted async aggregation
            --churn-join R --churn-life S   event engine: joins/s + mean lifetime (s)
-           --models M --buffer B --scheduler static|round-robin|staleness-greedy
+           --models M --buffer B
+           --scheduler static|round-robin|staleness-greedy|cost-model
                                      event engine: concurrent multi-model training
+                                     (cost-model routes by predicted completion time)
+           --hetero                  mixed small/large per-model tasks (odd models:
+                                     quarter model dims + compute, half the dataset)
+           --adaptive-buffer BMAX [--buffer-target S --buffer-alpha A]
+                                     FedAST-style adaptive B in [1, BMAX], retuned
+                                     from the observed staleness EWMA
            --fading-rho RHO          event engine: per-cycle Gauss-Markov link fading
   fleet    --ks 10,100,1000,5000 --cycles N --scheme S
            --churn-join R --churn-life S --csv PATH
@@ -52,6 +61,7 @@ const USAGE: &str = "usage: asyncmel <info|solve|fig2|fig3|train|fleet|multi|abl
                                      the sharded executor; default ks 100,500,1000)
   multi    --ks 100,1000 --ms 1,2,4,8 --buffer B --scheduler S --budget N
            --cycles N --scheme S --churn-join R --churn-life S --csv PATH
+           --hetero --adaptive-buffer BMAX [--buffer-target S --buffer-alpha A]
                                      multi-model concurrency sweep (phantom numerics)
   ablation --seeds N --csv PATH      batch-bounds sensitivity (ABL-1)
 global: --config PATH (sparse scenario JSON override)";
@@ -92,6 +102,23 @@ fn base_config(args: &Args) -> Result<ScenarioConfig> {
         Some(path) => ScenarioConfig::load(path)?,
         None => ScenarioConfig::paper_default(),
     })
+}
+
+/// `--adaptive-buffer BMAX [--buffer-target S --buffer-alpha A]` →
+/// adaptive buffer config (None when the flag is absent).
+fn adaptive_from_args(args: &Args) -> Result<Option<AdaptiveBufferConfig>> {
+    if args.get("adaptive-buffer").is_none() {
+        return Ok(None);
+    }
+    let a = AdaptiveBufferConfig {
+        b_max: args.require("adaptive-buffer")?,
+        target_staleness: args.get_or("buffer-target", 2.0)?,
+        ewma_alpha: args.get_or("buffer-alpha", 0.25)?,
+    };
+    if let Err(e) = a.validate() {
+        bail!("--adaptive-buffer/--buffer-target/--buffer-alpha: {e}");
+    }
+    Ok(Some(a))
 }
 
 fn cmd_info(base: &ScenarioConfig) {
@@ -217,9 +244,10 @@ fn cmd_train(mut base: ScenarioConfig, args: &Args) -> Result<()> {
     let lr: f32 = args.get_or("lr", 0.01)?;
     let samples: u64 = args.get_or("samples", 60_000)?;
     let mut engine: EngineKind = args.get_or("engine", base.engine)?;
-    let multi_flags_given = ["models", "buffer", "scheduler"]
+    let multi_flags_given = ["models", "buffer", "scheduler", "adaptive-buffer"]
         .iter()
-        .any(|k| args.get(k).is_some());
+        .any(|k| args.get(k).is_some())
+        || args.has("hetero");
     let multi_requested = multi_flags_given || base.multimodel.is_multi();
     if (args.has("async") || multi_requested) && engine == EngineKind::Lockstep {
         if args.get("engine").is_some() && !multi_flags_given && !args.has("async") {
@@ -266,7 +294,17 @@ fn cmd_train(mut base: ScenarioConfig, args: &Args) -> Result<()> {
     } else {
         Vec::new()
     };
-    let mm_cfg = MultiModelConfig::new(models, buffer, scheduler).with_weights(weights);
+    let mut mm_cfg = MultiModelConfig::new(models, buffer, scheduler).with_weights(weights);
+    mm_cfg.adaptive_buffer = adaptive_from_args(args)?.or(base.multimodel.adaptive_buffer);
+    // --hetero generates the mixed small/large spec set; otherwise a
+    // config-file spec list carries over while it matches the count
+    mm_cfg.specs = if args.has("hetero") {
+        ModelTaskSpec::small_large_mix(models, samples, &base.task)
+    } else if base.multimodel.specs.len() == models {
+        base.multimodel.specs.clone()
+    } else {
+        Vec::new()
+    };
 
     let runtime = load_runtime();
     let scenario = base
@@ -421,6 +459,8 @@ fn cmd_multi(base: ScenarioConfig, args: &Args) -> Result<()> {
     let cycles: usize = args.get_or("cycles", 6)?;
     let scheme: AllocatorKind = args.get_or("scheme", AllocatorKind::Eta)?;
     let budget: u64 = args.get_or("budget", 64)?;
+    let hetero = args.has("hetero");
+    let adaptive = adaptive_from_args(args)?.or(base.multimodel.adaptive_buffer);
     let churn_base = if base.churn.is_enabled() { base.churn } else { ChurnConfig::new(1.0, 120.0) };
     let churn = churn_from_args(churn_base, args)?;
     let params = multi_model::MultiModelParams {
@@ -434,6 +474,8 @@ fn cmd_multi(base: ScenarioConfig, args: &Args) -> Result<()> {
         churn,
         aggregator: AsyncAggregator::default(),
         round_budget: if budget == 0 { None } else { Some(budget) },
+        hetero,
+        adaptive,
     };
     let rows = multi_model::run(&params)?;
     let table = multi_model::table(&rows);

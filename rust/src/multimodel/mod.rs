@@ -19,15 +19,28 @@
 //!   arrived, or a newly joined node) to its next model.
 //!   [`SchedulerKind::Static`] pins each slot to a weighted static
 //!   split, [`SchedulerKind::RoundRobin`] cycles freed slots through
-//!   the models by weighted deficit, and
+//!   the models by weighted deficit,
 //!   [`SchedulerKind::StalenessGreedy`] assigns the slot to the model
 //!   whose **oldest in-flight update is stalest** (a model with no
-//!   in-flight work at all is treated as infinitely starved).
+//!   in-flight work at all is treated as infinitely starved), and
+//!   [`SchedulerKind::CostModel`] routes **predictively**: the engine
+//!   feeds it every dispatch's cost-model completion forecast, and it
+//!   picks the model whose next server update is predicted to be
+//!   furthest away. Scheduler-driven migrations are batched by the
+//!   engine to flush boundaries, so each affected sub-fleet re-solves
+//!   at most once per boundary.
 //! * [`SubFleetAlloc`] — the per-model allocation state: each model
 //!   solves the paper's `(τ_k, d_k)` program lazily over *its own*
-//!   assigned sub-fleet (Σ d_k = D per model), re-solving only when
-//!   that sub-fleet's composition changes. Slot→position lookups are
-//!   O(1) via an index maintained on re-solve.
+//!   assigned sub-fleet against its own [`ModelTaskSpec`] (per-model
+//!   Σ d_k = D_m, deadline `T_m`, spec-adjusted cost coefficients),
+//!   re-solving only when that sub-fleet's composition changes.
+//!   Slot→position lookups are O(1) via an index maintained on
+//!   re-solve.
+//!
+//! Buffering can be **adaptive** ([`AdaptiveBufferConfig`]): `B_m` is
+//! retuned at flush boundaries from an EWMA of the model's observed
+//! arrival staleness, clamped to `[1, B_max]`; the fixed-`B` path is
+//! byte-for-byte unchanged and remains the differential oracle.
 //!
 //! The event loop itself lives in
 //! [`crate::coordinator::EventEngine::run_multi`]; this module is the
@@ -41,7 +54,7 @@ use std::collections::BTreeMap;
 use crate::aggregation::{AsyncAggregator, ParamSet};
 use crate::allocation::Allocation;
 use crate::coordinator::{record_digest, CycleRecord, TrainOptions};
-use crate::costmodel::LearnerCost;
+use crate::costmodel::{LearnerCost, TaskParams};
 
 /// Which freed-slot routing policy the engine uses.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
@@ -53,6 +66,11 @@ pub enum SchedulerKind {
     RoundRobin,
     /// Route to the model whose oldest in-flight update is stalest.
     StalenessGreedy,
+    /// Route by *predicted* completion time from the allocator's own
+    /// cost model: feed the model whose next server update is predicted
+    /// to be furthest away (instead of reacting to realized in-flight
+    /// staleness).
+    CostModel,
 }
 
 impl SchedulerKind {
@@ -61,14 +79,16 @@ impl SchedulerKind {
             SchedulerKind::Static => "static",
             SchedulerKind::RoundRobin => "round-robin",
             SchedulerKind::StalenessGreedy => "staleness-greedy",
+            SchedulerKind::CostModel => "cost-model",
         }
     }
 
-    pub fn all() -> [SchedulerKind; 3] {
+    pub fn all() -> [SchedulerKind; 4] {
         [
             SchedulerKind::Static,
             SchedulerKind::RoundRobin,
             SchedulerKind::StalenessGreedy,
+            SchedulerKind::CostModel,
         ]
     }
 
@@ -86,10 +106,149 @@ impl std::str::FromStr for SchedulerKind {
         SchedulerKind::parse(s).ok_or_else(|| {
             std::io::Error::new(
                 std::io::ErrorKind::InvalidInput,
-                format!("unknown scheduler '{s}' (static|round-robin|staleness-greedy)"),
+                format!(
+                    "unknown scheduler '{s}' (static|round-robin|staleness-greedy|cost-model)"
+                ),
             )
         })
     }
+}
+
+/// FedAST-style adaptive buffer sizing: `B_m` is retuned from the
+/// model's observed staleness distribution (an EWMA over recent
+/// arrivals), clamped to `[1, b_max]`. Retunes happen only at flush
+/// boundaries, so every server flush still applies exactly the `B_m`
+/// that was in effect while the buffer filled.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct AdaptiveBufferConfig {
+    /// Upper clamp for the adaptive buffer size.
+    pub b_max: usize,
+    /// Mean arrival staleness the controller steers toward: above it
+    /// (with hysteresis) `B` shrinks to flush sooner, below it `B`
+    /// grows to amortize more updates per flush.
+    pub target_staleness: f64,
+    /// EWMA smoothing factor over arrival staleness, in (0, 1].
+    pub ewma_alpha: f64,
+}
+
+impl AdaptiveBufferConfig {
+    pub fn new(b_max: usize, target_staleness: f64, ewma_alpha: f64) -> Self {
+        let cfg = Self { b_max, target_staleness, ewma_alpha };
+        if let Err(e) = cfg.validate() {
+            panic!("{e}");
+        }
+        cfg
+    }
+
+    /// Default controller constants for a given clamp.
+    pub fn with_b_max(b_max: usize) -> Self {
+        Self::new(b_max, 2.0, 0.25)
+    }
+
+    /// The single invariant set shared by every entry point — CLI
+    /// flags, config JSON, and [`MultiModelOptions`] reaching the
+    /// engine (the fields are `pub`, so values can arrive unchecked).
+    pub fn validate(&self) -> Result<(), String> {
+        if self.b_max < 1 {
+            return Err("b_max must be >= 1".into());
+        }
+        if !(self.ewma_alpha > 0.0 && self.ewma_alpha <= 1.0) {
+            return Err(format!("ewma_alpha must be in (0, 1], got {}", self.ewma_alpha));
+        }
+        if !(self.target_staleness.is_finite() && self.target_staleness >= 0.0) {
+            return Err(format!(
+                "target_staleness must be finite and >= 0, got {}",
+                self.target_staleness
+            ));
+        }
+        Ok(())
+    }
+}
+
+/// Per-model heterogeneous task spec: each model instance may carry its
+/// own dataset size `D_m`, cycle deadline `T_m`, task/model dimensions
+/// (which drive the eq.-(5) cost coefficients its sub-fleet is solved
+/// with), and exec mode. `None` fields inherit the scenario's values —
+/// a spec of all-`None` is byte-for-byte identical to the homogeneous
+/// path.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct ModelTaskSpec {
+    /// Dataset size `D_m` distributed over the model's sub-fleet
+    /// (per-model Σ d = D_m). `None` = scenario `total_samples`.
+    pub total_samples: Option<u64>,
+    /// Cycle deadline `T_m` the model's `(τ, d)` program is solved
+    /// against. `None` = scenario `t_cycle_s`.
+    pub t_cycle_s: Option<f64>,
+    /// Task constants (model size, per-sample compute, …) for this
+    /// model's cost coefficients. `None` = scenario task. Note: in
+    /// `Real` exec mode this changes the *allocator's* view only — the
+    /// runtime keeps its compiled model stack.
+    pub task: Option<TaskParams>,
+    /// Per-model exec mode: `true` runs this model as timing/staleness
+    /// bookkeeping only (no parameters, no SGD) even when the engine
+    /// runs real numerics.
+    pub phantom: bool,
+}
+
+impl ModelTaskSpec {
+    /// Inherit everything from the scenario (the homogeneous spec).
+    pub fn inherit() -> Self {
+        Self::default()
+    }
+
+    pub fn is_inherit(&self) -> bool {
+        *self == Self::default()
+    }
+
+    /// Materialize against the scenario's base values.
+    pub fn resolved(&self, base_d: u64, base_t: f64, base_task: &TaskParams) -> ResolvedTaskSpec {
+        let d_total = self.total_samples.unwrap_or(base_d);
+        let t_cycle = self.t_cycle_s.unwrap_or(base_t);
+        assert!(d_total >= 1, "per-model total_samples must be >= 1");
+        assert!(t_cycle > 0.0, "per-model t_cycle_s must be > 0");
+        ResolvedTaskSpec {
+            d_total,
+            t_cycle,
+            task: self.task.unwrap_or(*base_task),
+            phantom: self.phantom,
+        }
+    }
+
+    /// A ready-made mixed workload for sweeps/benches: even-indexed
+    /// models inherit the base task, odd-indexed ones run a "small"
+    /// variant (quarter model size and per-sample compute, half the
+    /// dataset) — the heterogeneous small/large mix the multi-tenant
+    /// sweep exercises.
+    pub fn small_large_mix(num_models: usize, base_d: u64, base_task: &TaskParams) -> Vec<Self> {
+        (0..num_models)
+            .map(|m| {
+                if m % 2 == 0 {
+                    Self::inherit()
+                } else {
+                    let mut task = *base_task;
+                    task.model_size_params = (task.model_size_params / 4).max(1);
+                    task.compute_cycles_per_sample =
+                        (task.compute_cycles_per_sample / 4.0).max(1.0);
+                    Self {
+                        total_samples: Some((base_d / 2).max(1)),
+                        t_cycle_s: None,
+                        task: Some(task),
+                        phantom: false,
+                    }
+                }
+            })
+            .collect()
+    }
+}
+
+/// A [`ModelTaskSpec`] with the scenario defaults filled in — what the
+/// engine actually solves and dispatches against.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ResolvedTaskSpec {
+    pub d_total: u64,
+    pub t_cycle: f64,
+    pub task: TaskParams,
+    pub phantom: bool,
 }
 
 /// Declarative multi-model knobs ([`crate::config::ScenarioConfig`]).
@@ -104,9 +263,15 @@ pub struct MultiModelConfig {
     /// Freed-slot routing policy.
     pub scheduler: SchedulerKind,
     /// Per-model scheduling weights (empty = uniform). Used by the
-    /// static and round-robin schedulers; staleness-greedy ignores
-    /// them.
+    /// static and round-robin schedulers; staleness-greedy and
+    /// cost-model ignore them.
     pub weights: Vec<f64>,
+    /// FedAST-style adaptive buffer sizing (`None` = fixed `B`; the
+    /// fixed path is the byte-for-byte differential oracle).
+    pub adaptive_buffer: Option<AdaptiveBufferConfig>,
+    /// Per-model heterogeneous task specs (empty = homogeneous: every
+    /// model inherits the scenario's `D`, `T` and task constants).
+    pub specs: Vec<ModelTaskSpec>,
 }
 
 impl MultiModelConfig {
@@ -117,13 +282,22 @@ impl MultiModelConfig {
             buffer_size: 1,
             scheduler: SchedulerKind::Static,
             weights: Vec::new(),
+            adaptive_buffer: None,
+            specs: Vec::new(),
         }
     }
 
     pub fn new(num_models: usize, buffer_size: usize, scheduler: SchedulerKind) -> Self {
         assert!(num_models >= 1, "need at least one model");
         assert!(buffer_size >= 1, "buffer size must be >= 1");
-        Self { num_models, buffer_size, scheduler, weights: Vec::new() }
+        Self {
+            num_models,
+            buffer_size,
+            scheduler,
+            weights: Vec::new(),
+            adaptive_buffer: None,
+            specs: Vec::new(),
+        }
     }
 
     pub fn with_weights(mut self, weights: Vec<f64>) -> Self {
@@ -131,9 +305,34 @@ impl MultiModelConfig {
         self
     }
 
+    pub fn with_adaptive_buffer(mut self, adaptive: AdaptiveBufferConfig) -> Self {
+        self.adaptive_buffer = Some(adaptive);
+        self
+    }
+
+    pub fn with_specs(mut self, specs: Vec<ModelTaskSpec>) -> Self {
+        assert!(
+            specs.is_empty() || specs.len() == self.num_models,
+            "need one task spec per model"
+        );
+        self.specs = specs;
+        self
+    }
+
     /// Anything beyond the plain per-arrival single-model async path?
+    /// (Adaptive buffering and non-inherit task specs count: they only
+    /// take effect on the multi-model engine path, so callers routing
+    /// on this must not silently drop them.)
     pub fn is_multi(&self) -> bool {
-        self.num_models > 1 || self.buffer_size > 1
+        self.num_models > 1
+            || self.buffer_size > 1
+            || self.adaptive_buffer.is_some()
+            || self.is_hetero()
+    }
+
+    /// Any model deviating from the scenario's homogeneous task?
+    pub fn is_hetero(&self) -> bool {
+        self.specs.iter().any(|s| !s.is_inherit())
     }
 
     /// Scheduling weights normalized to sum 1 (uniform when unset).
@@ -172,8 +371,15 @@ pub struct ModelInstance {
     /// Normalized scheduling weight.
     pub weight: f64,
     pub aggregator: AsyncAggregator,
-    /// Buffered-aggregation size `B`.
+    /// Buffered-aggregation size `B_m` — fixed, or retuned at flush
+    /// boundaries by the adaptive controller.
     pub buffer_size: usize,
+    /// Adaptive buffer controller (`None` = fixed `B`).
+    pub adaptive: Option<AdaptiveBufferConfig>,
+    /// EWMA of arrival staleness the adaptive controller steers on.
+    pub staleness_ewma: f64,
+    /// Times the adaptive controller changed `B_m`.
+    pub retunes: u64,
     /// Server version = applied updates so far.
     pub version: u64,
     /// Client updates that reached this model's server.
@@ -198,13 +404,28 @@ pub struct ModelInstance {
 }
 
 impl ModelInstance {
-    fn new(id: usize, weight: f64, aggregator: AsyncAggregator, buffer_size: usize) -> Self {
+    fn new(
+        id: usize,
+        weight: f64,
+        aggregator: AsyncAggregator,
+        buffer_size: usize,
+        adaptive: Option<AdaptiveBufferConfig>,
+    ) -> Self {
         assert!(buffer_size >= 1);
+        // start inside the adaptive clamp so the invariant holds from
+        // the first arrival
+        let buffer_size = match adaptive {
+            Some(a) => buffer_size.clamp(1, a.b_max),
+            None => buffer_size,
+        };
         Self {
             id,
             weight,
             aggregator,
             buffer_size,
+            adaptive,
+            staleness_ewma: 0.0,
+            retunes: 0,
             version: 0,
             arrivals: 0,
             round_budget: None,
@@ -258,12 +479,20 @@ impl ModelInstance {
     /// `B` updates are parked — the buffered server flush (each update
     /// mixed with its *own* arrival-time staleness weight, one version
     /// bump per update, in arrival order). Returns how many updates
-    /// were applied (0 while the buffer is still filling).
+    /// were applied (0 while the buffer is still filling). With an
+    /// adaptive controller, the flush is followed by a retune of
+    /// `B_m` — flushes therefore always apply exactly the `B_m` that
+    /// was in effect while the buffer filled, and `B_m` only ever
+    /// changes on an empty buffer.
     pub fn absorb(&mut self, global: &mut Option<ParamSet>, upd: BufferedUpdate) -> usize {
         self.arrivals += 1;
         self.window_s.push(upd.staleness);
         if upd.train_loss.is_finite() {
             self.window_losses.push(upd.train_loss);
+        }
+        if let Some(a) = self.adaptive {
+            self.staleness_ewma = a.ewma_alpha * upd.staleness as f64
+                + (1.0 - a.ewma_alpha) * self.staleness_ewma;
         }
         self.buffer.push(upd);
         if self.buffer.len() < self.buffer_size {
@@ -276,7 +505,30 @@ impl ModelInstance {
             }
             self.version += 1;
         }
+        self.retune();
         applied
+    }
+
+    /// Adaptive `B_m` step (no-op for fixed-`B` models): shrink when the
+    /// observed staleness EWMA runs hot past the target (flush sooner),
+    /// grow when it runs cold (amortize more updates per flush). The
+    /// 25% hysteresis band keeps the controller from thrashing; the
+    /// result is always clamped to `[1, b_max]`.
+    fn retune(&mut self) {
+        let Some(cfg) = self.adaptive else { return };
+        debug_assert!(self.buffer.is_empty(), "retune only on flush boundaries");
+        let b = self.buffer_size;
+        let next = if self.staleness_ewma > cfg.target_staleness * 1.25 {
+            b.saturating_sub(1).max(1)
+        } else if self.staleness_ewma < cfg.target_staleness * 0.75 {
+            (b + 1).min(cfg.b_max)
+        } else {
+            b
+        };
+        if next != b {
+            self.buffer_size = next;
+            self.retunes += 1;
+        }
     }
 
     /// Drain the per-cycle telemetry window:
@@ -310,7 +562,15 @@ impl ModelRegistry {
     pub fn new(cfg: &MultiModelConfig, aggregator: AsyncAggregator) -> Self {
         let weights = cfg.normalized_weights();
         let models = (0..cfg.num_models)
-            .map(|id| ModelInstance::new(id, weights[id], aggregator, cfg.buffer_size))
+            .map(|id| {
+                ModelInstance::new(
+                    id,
+                    weights[id],
+                    aggregator,
+                    cfg.buffer_size,
+                    cfg.adaptive_buffer,
+                )
+            })
             .collect();
         Self { models }
     }
@@ -337,10 +597,22 @@ impl ModelRegistry {
 pub trait ModelScheduler {
     fn name(&self) -> &'static str;
 
-    /// Route a freed (or newly joined) learner `slot` to a model.
-    /// `active` is the ascending list of schedulable model ids; callers
-    /// guarantee it is non-empty, and the pick must come from it.
-    fn pick(&mut self, slot: usize, registry: &ModelRegistry, active: &[usize]) -> usize;
+    /// Route a freed (or newly joined) learner `slot` to a model at
+    /// virtual time `now`. `active` is the ascending list of
+    /// schedulable model ids; callers guarantee it is non-empty, and
+    /// the pick must come from it.
+    fn pick(&mut self, slot: usize, now: f64, registry: &ModelRegistry, active: &[usize])
+        -> usize;
+
+    /// Observe a scheduled dispatch for `model` whose *cost-model
+    /// predicted* completion is at virtual time `predicted_done` (the
+    /// eq.-(5) round time, no fault/straggle knowledge). Default no-op;
+    /// the predictive scheduler builds its completion forecast here.
+    fn observe_dispatch(&mut self, _model: usize, _predicted_done: f64) {}
+
+    /// Observe an upload arrival for `model` at virtual time `now`.
+    /// Default no-op.
+    fn observe_arrival(&mut self, _model: usize, _now: f64) {}
 }
 
 /// Weighted deficit pick: the model with the largest `w_m·(n+1) −
@@ -383,7 +655,13 @@ impl ModelScheduler for StaticSplit {
         "static"
     }
 
-    fn pick(&mut self, slot: usize, _registry: &ModelRegistry, active: &[usize]) -> usize {
+    fn pick(
+        &mut self,
+        slot: usize,
+        _now: f64,
+        _registry: &ModelRegistry,
+        active: &[usize],
+    ) -> usize {
         if self.home.len() <= slot {
             self.home.resize(slot + 1, 0);
         }
@@ -423,7 +701,13 @@ impl ModelScheduler for RoundRobin {
         "round-robin"
     }
 
-    fn pick(&mut self, _slot: usize, _registry: &ModelRegistry, active: &[usize]) -> usize {
+    fn pick(
+        &mut self,
+        _slot: usize,
+        _now: f64,
+        _registry: &ModelRegistry,
+        active: &[usize],
+    ) -> usize {
         let m = deficit_pick(&self.weights, &self.served, self.total, active);
         self.served[m] += 1;
         self.total += 1;
@@ -451,7 +735,13 @@ impl ModelScheduler for StalenessGreedy {
         "staleness-greedy"
     }
 
-    fn pick(&mut self, _slot: usize, registry: &ModelRegistry, active: &[usize]) -> usize {
+    fn pick(
+        &mut self,
+        _slot: usize,
+        _now: f64,
+        registry: &ModelRegistry,
+        active: &[usize],
+    ) -> usize {
         let mut best = active[0];
         let mut best_key = (0u64, u64::MAX);
         let mut first = true;
@@ -472,6 +762,81 @@ impl ModelScheduler for StalenessGreedy {
     }
 }
 
+/// Predictive routing from the allocator's own cost model (the
+/// delay-aware extension of 2012.00143 applied to freed-slot routing):
+/// the engine reports every dispatch's *predicted* completion time
+/// (`t_k(τ, d)` from the spec-adjusted eq.-(5) coefficients — link rate
+/// + compute profile, no fault knowledge), and the scheduler feeds the
+/// model whose next predicted server update is **furthest away** — a
+/// model with nothing predicted in flight is infinitely starved.
+/// Predictions that have passed `now` are assumed delivered (or lost)
+/// and pruned, so dropped rounds cannot starve the forecast. Ties break
+/// toward the model fed least, then the lowest id.
+pub struct CostModelScheduler {
+    served: Vec<u64>,
+    /// Per-model sorted predicted completion times (virtual clock).
+    pending: Vec<Vec<f64>>,
+}
+
+impl CostModelScheduler {
+    pub fn new(num_models: usize) -> Self {
+        Self { served: vec![0; num_models], pending: vec![Vec::new(); num_models] }
+    }
+}
+
+impl ModelScheduler for CostModelScheduler {
+    fn name(&self) -> &'static str {
+        "cost-model"
+    }
+
+    fn pick(
+        &mut self,
+        _slot: usize,
+        now: f64,
+        _registry: &ModelRegistry,
+        active: &[usize],
+    ) -> usize {
+        let mut best = active[0];
+        let mut best_next = f64::NEG_INFINITY;
+        let mut best_served = u64::MAX;
+        let mut first = true;
+        for &m in active {
+            // prune predictions already in the past
+            let p = &mut self.pending[m];
+            let cut = p.partition_point(|&t| t <= now);
+            p.drain(..cut);
+            let next = p.first().copied().unwrap_or(f64::INFINITY);
+            let better = next > best_next
+                || (next == best_next && self.served[m] < best_served);
+            if first || better {
+                best = m;
+                best_next = next;
+                best_served = self.served[m];
+                first = false;
+            }
+        }
+        self.served[best] += 1;
+        best
+    }
+
+    fn observe_dispatch(&mut self, model: usize, predicted_done: f64) {
+        let p = &mut self.pending[model];
+        let i = p.partition_point(|&t| t <= predicted_done);
+        p.insert(i, predicted_done);
+    }
+
+    fn observe_arrival(&mut self, model: usize, now: f64) {
+        // retire the earliest outstanding prediction, but only one that
+        // is already due — a straggled arrival (whose own forecast was
+        // pruned while it ran late) must not consume a *future*
+        // prediction belonging to a different in-flight round, which
+        // would permanently under-count the model's in-flight work
+        if self.pending[model].first().is_some_and(|&t| t <= now) {
+            self.pending[model].remove(0);
+        }
+    }
+}
+
 /// Instantiate the configured scheduler.
 pub fn make_scheduler(cfg: &MultiModelConfig) -> Box<dyn ModelScheduler + Send + Sync> {
     let weights = cfg.normalized_weights();
@@ -479,6 +844,7 @@ pub fn make_scheduler(cfg: &MultiModelConfig) -> Box<dyn ModelScheduler + Send +
         SchedulerKind::Static => Box::new(StaticSplit::new(weights)),
         SchedulerKind::RoundRobin => Box::new(RoundRobin::new(weights)),
         SchedulerKind::StalenessGreedy => Box::new(StalenessGreedy::new(cfg.num_models)),
+        SchedulerKind::CostModel => Box::new(CostModelScheduler::new(cfg.num_models)),
     }
 }
 
@@ -547,6 +913,18 @@ impl SubFleetAlloc {
         Some((alloc.tau[pos - 1], alloc.d[pos - 1]))
     }
 
+    /// [`Self::assignment`] plus the spec-adjusted cost coefficients the
+    /// sub-fleet was solved with — what heterogeneous dispatch times a
+    /// round against.
+    pub fn assignment_with_cost(&self, slot: usize) -> Option<(u64, u64, LearnerCost)> {
+        let pos = *self.slot_pos.get(slot)?;
+        if pos == 0 {
+            return None;
+        }
+        let alloc = self.alloc.as_ref()?;
+        Some((alloc.tau[pos - 1], alloc.d[pos - 1], self.costs[pos - 1]))
+    }
+
     /// Σ d over the current allocation (None when the sub-fleet is
     /// empty). A valid per-model solve distributes the full dataset.
     pub fn sum_d(&self) -> Option<u64> {
@@ -585,6 +963,10 @@ pub struct ModelStats {
     pub budget_cycle: Option<usize>,
     /// Cycle at which the accuracy target was met (None = never / unset).
     pub target_cycle: Option<usize>,
+    /// `B_m` at run end (fixed configs: the configured `B`).
+    pub final_buffer: usize,
+    /// Times the adaptive controller changed `B_m` (0 for fixed `B`).
+    pub retunes: u64,
 }
 
 /// What [`crate::coordinator::EventEngine::run_multi`] returns.
@@ -609,8 +991,15 @@ pub fn report_digest(report: &MultiModelReport) -> String {
     for (m, records) in report.records.iter().enumerate() {
         let s = &report.stats[m];
         out.push_str(&format!(
-            "model={m} arrivals={} applied={} assigned={} sum_d={:?} budget_cycle={:?}\n",
-            s.arrivals, s.applied, s.assigned_slots, s.final_sum_d, s.budget_cycle,
+            "model={m} arrivals={} applied={} assigned={} sum_d={:?} budget_cycle={:?} \
+             buffer={} retunes={}\n",
+            s.arrivals,
+            s.applied,
+            s.assigned_slots,
+            s.final_sum_d,
+            s.budget_cycle,
+            s.final_buffer,
+            s.retunes,
         ));
         out.push_str(&record_digest(records));
     }
@@ -637,6 +1026,10 @@ mod tests {
         assert_eq!(
             "staleness-greedy".parse::<SchedulerKind>().unwrap(),
             SchedulerKind::StalenessGreedy
+        );
+        assert_eq!(
+            SchedulerKind::parse("cost-model"),
+            Some(SchedulerKind::CostModel)
         );
         assert!(SchedulerKind::parse("fifo").is_none());
         assert!("fifo".parse::<SchedulerKind>().is_err());
@@ -751,18 +1144,18 @@ mod tests {
         let reg = ModelRegistry::new(&cfg, AsyncAggregator::default());
         let mut s = StaticSplit::new(cfg.normalized_weights());
         let active = [0usize, 1];
-        let first: Vec<usize> = (0..8).map(|i| s.pick(i, &reg, &active)).collect();
+        let first: Vec<usize> = (0..8).map(|i| s.pick(i, 0.0, &reg, &active)).collect();
         // 3:1 split over 8 slots → 6 on model 0, 2 on model 1
         assert_eq!(first.iter().filter(|&&m| m == 0).count(), 6, "{first:?}");
         // sticky: re-picking any slot returns the same home
         for i in 0..8 {
-            assert_eq!(s.pick(i, &reg, &active), first[i]);
+            assert_eq!(s.pick(i, 0.0, &reg, &active), first[i]);
         }
         // home exhausted → cyclic fallback without reassignment
         let slot0_home = first[0];
         let other = 1 - slot0_home;
-        assert_eq!(s.pick(0, &reg, &[other]), other);
-        assert_eq!(s.pick(0, &reg, &active), slot0_home);
+        assert_eq!(s.pick(0, 0.0, &reg, &[other]), other);
+        assert_eq!(s.pick(0, 0.0, &reg, &active), slot0_home);
     }
 
     #[test]
@@ -770,10 +1163,10 @@ mod tests {
         let cfg = MultiModelConfig::new(3, 1, SchedulerKind::RoundRobin);
         let reg = ModelRegistry::new(&cfg, AsyncAggregator::default());
         let mut s = RoundRobin::new(cfg.normalized_weights());
-        let picks: Vec<usize> = (0..6).map(|i| s.pick(i, &reg, &[0, 1, 2])).collect();
+        let picks: Vec<usize> = (0..6).map(|i| s.pick(i, 0.0, &reg, &[0, 1, 2])).collect();
         assert_eq!(picks, vec![0, 1, 2, 0, 1, 2]);
         // restricted active set keeps cycling inside it
-        let picks: Vec<usize> = (6..10).map(|i| s.pick(i, &reg, &[0, 2])).collect();
+        let picks: Vec<usize> = (6..10).map(|i| s.pick(i, 0.0, &reg, &[0, 2])).collect();
         assert!(picks.iter().all(|m| [0usize, 2].contains(m)), "{picks:?}");
     }
 
@@ -783,17 +1176,48 @@ mod tests {
         let mut s = StalenessGreedy::new(3);
         let active = [0usize, 1, 2];
         // cold start, no in-flight anywhere: spreads by served count
-        let cold: Vec<usize> = (0..3).map(|i| s.pick(i, &reg, &active)).collect();
+        let cold: Vec<usize> = (0..3).map(|i| s.pick(i, 0.0, &reg, &active)).collect();
         assert_eq!(cold, vec![0, 1, 2]);
         // model 1 now has an ancient in-flight round; the rest are fresh
         for m in 0..3 {
             reg.models[m].record_dispatch(0);
         }
         reg.models[1].version = 10;
-        assert_eq!(s.pick(3, &reg, &active), 1);
+        assert_eq!(s.pick(3, 0.0, &reg, &active), 1);
         // a model with nothing in flight at all out-starves everyone
         reg.models[2].complete_dispatch(0);
-        assert_eq!(s.pick(4, &reg, &active), 2);
+        assert_eq!(s.pick(4, 0.0, &reg, &active), 2);
+    }
+
+    #[test]
+    fn cost_model_scheduler_feeds_the_predictively_starved_model() {
+        let reg = registry(3, 1);
+        let mut s = CostModelScheduler::new(3);
+        let active = [0usize, 1, 2];
+        // cold start, nothing predicted in flight: spreads by served
+        let cold: Vec<usize> = (0..3).map(|i| s.pick(i, 0.0, &reg, &active)).collect();
+        assert_eq!(cold, vec![0, 1, 2]);
+        // models 0/2 get quick predicted completions, model 1 a late one
+        s.observe_dispatch(0, 1.0);
+        s.observe_dispatch(1, 50.0);
+        s.observe_dispatch(2, 2.0);
+        // model 1's next predicted server update is furthest away
+        assert_eq!(s.pick(3, 0.0, &reg, &active), 1);
+        // model 2's arrival retires its prediction: now predictively
+        // starved (nothing in flight) and beats model 1's finite forecast
+        s.observe_arrival(2, 2.0);
+        assert_eq!(s.pick(4, 2.0, &reg, &active), 2);
+        // stale predictions are pruned by `now` — a dropped round on
+        // model 0 (predicted done at t=1, never arrived) cannot pin the
+        // forecast forever
+        s.observe_arrival(1, 50.0);
+        assert_eq!(s.pick(5, 60.0, &reg, &[0]), 0);
+        assert!(s.pending[0].is_empty(), "past prediction must be pruned");
+        // a straggler whose own forecast was already pruned must not
+        // retire a different round's *future* prediction
+        s.observe_dispatch(0, 100.0);
+        s.observe_arrival(0, 60.0);
+        assert_eq!(s.pending[0], vec![100.0], "future prediction must survive");
     }
 
     #[test]
@@ -804,14 +1228,111 @@ mod tests {
             Box::new(StaticSplit::new(cfg.normalized_weights())),
             Box::new(RoundRobin::new(cfg.normalized_weights())),
             Box::new(StalenessGreedy::new(4)),
+            Box::new(CostModelScheduler::new(4)),
         ];
         let active = [1usize, 3];
         for sched in scheds.iter_mut() {
             for slot in 0..32 {
-                let m = sched.pick(slot, &reg, &active);
+                let m = sched.pick(slot, slot as f64, &reg, &active);
                 assert!(active.contains(&m), "{} picked inactive {m}", sched.name());
             }
         }
+    }
+
+    #[test]
+    fn adaptive_buffer_retunes_only_at_flush_and_stays_clamped() {
+        let adaptive = AdaptiveBufferConfig::new(4, 1.0, 0.5);
+        let mut mi = ModelInstance::new(0, 1.0, AsyncAggregator::default(), 2, Some(adaptive));
+        let mut global: Option<ParamSet> = None;
+        let upd = |s| BufferedUpdate { params: None, staleness: s, train_loss: f32::NAN };
+        // cold EWMA (0 < 0.75) → first flush grows B toward b_max
+        assert_eq!(mi.absorb(&mut global, upd(0)), 0);
+        assert_eq!(mi.buffer_size, 2, "no retune while the buffer fills");
+        assert_eq!(mi.absorb(&mut global, upd(0)), 2, "flush at the in-effect B");
+        assert_eq!(mi.buffer_size, 3, "cold staleness grows B");
+        assert_eq!(mi.retunes, 1);
+        // hot staleness shrinks B one step per flush, clamped at 1
+        for _ in 0..20 {
+            let b = mi.buffer_size;
+            let mut applied = 0;
+            while applied == 0 {
+                applied = mi.absorb(&mut global, upd(100));
+            }
+            assert_eq!(applied, b, "flush size must match the in-effect B");
+            assert!((1..=4).contains(&mi.buffer_size));
+        }
+        assert_eq!(mi.buffer_size, 1, "hot EWMA must shrink B to the floor");
+    }
+
+    #[test]
+    fn fixed_buffer_never_retunes() {
+        let mut mi = ModelInstance::new(0, 1.0, AsyncAggregator::default(), 3, None);
+        let mut global: Option<ParamSet> = None;
+        for s in 0..30u64 {
+            mi.absorb(
+                &mut global,
+                BufferedUpdate { params: None, staleness: s * 7, train_loss: f32::NAN },
+            );
+        }
+        assert_eq!(mi.buffer_size, 3);
+        assert_eq!(mi.retunes, 0);
+        assert_eq!(mi.staleness_ewma, 0.0, "fixed path never touches the EWMA");
+    }
+
+    #[test]
+    fn task_specs_resolve_against_the_base() {
+        let base = TaskParams::default();
+        let inherit = ModelTaskSpec::inherit();
+        assert!(inherit.is_inherit());
+        let r = inherit.resolved(60_000, 15.0, &base);
+        assert_eq!(r.d_total, 60_000);
+        assert_eq!(r.t_cycle, 15.0);
+        assert_eq!(r.task, base);
+        assert!(!r.phantom);
+
+        let mut small_task = base;
+        small_task.model_size_params /= 4;
+        let spec = ModelTaskSpec {
+            total_samples: Some(30_000),
+            t_cycle_s: Some(7.5),
+            task: Some(small_task),
+            phantom: true,
+        };
+        assert!(!spec.is_inherit());
+        let r = spec.resolved(60_000, 15.0, &base);
+        assert_eq!(r.d_total, 30_000);
+        assert_eq!(r.t_cycle, 7.5);
+        assert_eq!(r.task.model_size_params, base.model_size_params / 4);
+        assert!(r.phantom);
+    }
+
+    #[test]
+    fn small_large_mix_alternates() {
+        let base = TaskParams::default();
+        let specs = ModelTaskSpec::small_large_mix(4, 60_000, &base);
+        assert_eq!(specs.len(), 4);
+        assert!(specs[0].is_inherit() && specs[2].is_inherit());
+        for m in [1usize, 3] {
+            let r = specs[m].resolved(60_000, 15.0, &base);
+            assert_eq!(r.d_total, 30_000);
+            assert_eq!(r.task.model_size_params, base.model_size_params / 4);
+            assert!(
+                r.task.compute_cycles_per_sample < base.compute_cycles_per_sample,
+                "small models must be computationally lighter"
+            );
+        }
+        let cfg = MultiModelConfig::new(4, 2, SchedulerKind::CostModel)
+            .with_specs(specs)
+            .with_adaptive_buffer(AdaptiveBufferConfig::with_b_max(8));
+        assert!(cfg.is_hetero());
+        assert!(cfg.is_multi());
+    }
+
+    #[test]
+    #[should_panic]
+    fn spec_count_mismatch_rejected() {
+        MultiModelConfig::new(3, 1, SchedulerKind::Static)
+            .with_specs(vec![ModelTaskSpec::inherit()]);
     }
 
     #[test]
@@ -827,6 +1348,12 @@ mod tests {
         assert!(!sub.dirty);
         assert_eq!(sub.assignment(2), Some((3, 100)));
         assert_eq!(sub.assignment(7), Some((5, 200)));
+        // the cost-carrying lookup returns the same (τ, d) plus the
+        // coefficients the sub-fleet was solved with
+        let (tau, d, cost) = sub.assignment_with_cost(7).unwrap();
+        assert_eq!((tau, d), (5, 200));
+        assert_eq!(cost, LearnerCost::new(2e-3, 1e-4, 0.4));
+        assert_eq!(sub.assignment_with_cost(0), None);
         assert_eq!(sub.assignment(0), None);
         assert_eq!(sub.assignment(9), None);
         assert_eq!(sub.assignment(99), None, "out-of-range slot is just absent");

@@ -14,7 +14,8 @@ use asyncmel::coordinator::{
 use asyncmel::data::{synth, SynthConfig, SynthDataset};
 use asyncmel::experiments::multi_model;
 use asyncmel::multimodel::{
-    report_digest, MultiModelConfig, MultiModelOptions, MultiModelReport, SchedulerKind,
+    report_digest, AdaptiveBufferConfig, ModelTaskSpec, MultiModelConfig, MultiModelOptions,
+    MultiModelReport, SchedulerKind,
 };
 use asyncmel::runtime::Runtime;
 use asyncmel::testkit::{forall, Gen};
@@ -77,6 +78,167 @@ fn m1_b1_static_reproduces_the_async_path_byte_for_byte() {
             cfg.churn.is_enabled()
         );
     }
+}
+
+#[test]
+fn m1_heterogeneous_plumbing_matches_the_single_model_async_path() {
+    // the hetero machinery with M = 1 must still be the async path
+    // byte-for-byte: an explicit inherit-all spec routes every solve
+    // and dispatch through the spec-adjusted cost recomputation, whose
+    // coefficients must be bitwise identical to the slots' own costs —
+    // with and without churn. small_large_mix(1, …) degenerates to the
+    // same inherit spec, so the CLI's --hetero at M = 1 is covered too.
+    let configs = [
+        ScenarioConfig::paper_default().with_learners(11),
+        ScenarioConfig::paper_default()
+            .with_learners(13)
+            .with_churn(ChurnConfig::new(0.4, 80.0)),
+    ];
+    for cfg in configs {
+        let single = run_async_phantom(&cfg, 6);
+        for specs in [
+            vec![ModelTaskSpec::inherit()],
+            ModelTaskSpec::small_large_mix(1, cfg.total_samples, &cfg.task),
+        ] {
+            let multi = run_multi_phantom(
+                &cfg,
+                6,
+                MultiModelConfig::single().with_specs(specs),
+            );
+            assert_eq!(
+                record_digest(&single),
+                record_digest(&multi.records[0]),
+                "hetero M=1 diverged from EnginePolicy::Async (churn={})",
+                cfg.churn.is_enabled()
+            );
+        }
+    }
+}
+
+#[test]
+fn hetero_specs_change_the_simulation_and_stay_deterministic() {
+    let cfg = ScenarioConfig::paper_default()
+        .with_learners(24)
+        .with_churn(ChurnConfig::new(0.5, 90.0));
+    let hetero = MultiModelConfig::new(4, 2, SchedulerKind::StalenessGreedy)
+        .with_specs(ModelTaskSpec::small_large_mix(4, cfg.total_samples, &cfg.task));
+    let a = run_multi_phantom(&cfg, 5, hetero.clone());
+    let b = run_multi_phantom(&cfg, 5, hetero);
+    assert_eq!(report_digest(&a), report_digest(&b), "hetero run must be deterministic");
+    // small models (odd ids) distribute half the dataset
+    for s in &a.stats {
+        if let Some(sum_d) = s.final_sum_d {
+            let want = if s.model % 2 == 0 {
+                cfg.total_samples
+            } else {
+                cfg.total_samples / 2
+            };
+            assert_eq!(sum_d, want, "model {} solved the wrong D_m", s.model);
+        }
+    }
+    // and the workload genuinely differs from the homogeneous one
+    let homo = run_multi_phantom(
+        &cfg,
+        5,
+        MultiModelConfig::new(4, 2, SchedulerKind::StalenessGreedy),
+    );
+    assert_ne!(report_digest(&a), report_digest(&homo));
+}
+
+#[test]
+fn cost_model_scheduler_is_deterministic_and_routes_differently() {
+    let cfg = ScenarioConfig::paper_default()
+        .with_learners(120)
+        .with_churn(ChurnConfig::new(0.8, 100.0));
+    let run = |s: SchedulerKind| {
+        report_digest(&run_multi_phantom(&cfg, 5, MultiModelConfig::new(3, 2, s)))
+    };
+    assert_eq!(run(SchedulerKind::CostModel), run(SchedulerKind::CostModel));
+    assert_ne!(run(SchedulerKind::CostModel), run(SchedulerKind::Static));
+    assert_ne!(run(SchedulerKind::CostModel), run(SchedulerKind::StalenessGreedy));
+}
+
+#[test]
+fn adaptive_buffer_shrinks_under_hot_staleness_and_grows_when_cold() {
+    let cfg = ScenarioConfig::paper_default().with_learners(30);
+    // target 0 ⇒ any observed staleness reads hot ⇒ B walks down to 1
+    let hot = run_multi_phantom(
+        &cfg,
+        6,
+        MultiModelConfig::new(2, 4, SchedulerKind::Static)
+            .with_adaptive_buffer(AdaptiveBufferConfig::new(6, 0.0, 0.5)),
+    );
+    for s in &hot.stats {
+        assert!(
+            (1..=6).contains(&s.final_buffer),
+            "B_m escaped [1, b_max]: {s:?}"
+        );
+        assert!(s.retunes > 0, "hot-staleness run never retuned: {s:?}");
+        assert!(s.final_buffer <= 4, "hot staleness must not grow B: {s:?}");
+    }
+    // an absurdly high target reads cold ⇒ B walks up to b_max
+    let cold = run_multi_phantom(
+        &cfg,
+        6,
+        MultiModelConfig::new(2, 4, SchedulerKind::Static)
+            .with_adaptive_buffer(AdaptiveBufferConfig::new(6, 1e9, 0.5)),
+    );
+    for s in &cold.stats {
+        assert!((4..=6).contains(&s.final_buffer), "cold staleness must grow B: {s:?}");
+    }
+    // adaptively retuned runs stay byte-reproducible
+    let again = run_multi_phantom(
+        &cfg,
+        6,
+        MultiModelConfig::new(2, 4, SchedulerKind::Static)
+            .with_adaptive_buffer(AdaptiveBufferConfig::new(6, 0.0, 0.5)),
+    );
+    assert_eq!(report_digest(&hot), report_digest(&again));
+}
+
+#[test]
+fn prop_adaptive_buffering_invariants() {
+    forall("adaptive-buffer-invariants", 20, |g: &mut Gen| {
+        let k = g.usize_in(6, 20);
+        let m = g.usize_in(1, 3);
+        let b0 = g.usize_in(1, 5);
+        let b_max = g.usize_in(1, 6);
+        let target = [0.0, 0.5, 2.0, 100.0][g.usize_in(0, 3)];
+        let alpha = [0.1, 0.5, 1.0][g.usize_in(0, 2)];
+        let scheduler = match g.usize_in(0, 3) {
+            0 => SchedulerKind::Static,
+            1 => SchedulerKind::RoundRobin,
+            2 => SchedulerKind::StalenessGreedy,
+            _ => SchedulerKind::CostModel,
+        };
+        let mut cfg = ScenarioConfig::paper_default()
+            .with_learners(k)
+            .with_seed(0xBEEF_2026 ^ g.u64_in(0, 1 << 20));
+        if g.bool() {
+            cfg = cfg.with_churn(ChurnConfig::new(0.5, 60.0));
+        }
+        let report = run_multi_phantom(
+            &cfg,
+            3,
+            MultiModelConfig::new(m, b0, scheduler)
+                .with_adaptive_buffer(AdaptiveBufferConfig::new(b_max, target, alpha)),
+        );
+        for s in &report.stats {
+            // B_m stays within [1, B_max] whatever the controller saw
+            assert!(
+                (1..=b_max).contains(&s.final_buffer),
+                "B_m {} escaped [1, {b_max}] (b0={b0}, target={target})",
+                s.final_buffer
+            );
+            // flushes only happen in whole buffers: at most one
+            // partially-filled buffer is pending at run end
+            assert!(s.applied <= s.arrivals, "applied more than arrived: {s:?}");
+            assert!(
+                s.arrivals - s.applied <= b_max.max(b0) as u64,
+                "more than one buffer of unapplied arrivals: {s:?}"
+            );
+        }
+    });
 }
 
 /// Tiny model so real-numerics runs stay fast in debug builds (mirrors
@@ -148,15 +310,54 @@ fn m1_b1_static_reproduces_the_async_path_with_real_numerics() {
 }
 
 #[test]
+fn per_model_phantom_exec_mode_skips_numerics_for_that_model_only() {
+    // M = 2 over a real-numerics engine, model 1 flagged phantom: model
+    // 0 must train and evaluate (finite accuracy), model 1 must be pure
+    // timing/staleness bookkeeping (NaN accuracy, no params) — the
+    // per-model ExecMode knob.
+    let rt = Runtime::native(&DIMS, 32, 48);
+    let (cfg, ds) = tiny_world();
+    let mut engine = EventEngine::new(
+        cfg.build(),
+        AllocatorKind::Eta,
+        AggregationRule::FedAvg,
+        ExecMode::Real { runtime: &rt, train: ds.train, test: ds.test },
+    )
+    .unwrap();
+    let specs = vec![
+        ModelTaskSpec::inherit(),
+        ModelTaskSpec { phantom: true, ..ModelTaskSpec::inherit() },
+    ];
+    let report = engine
+        .run_multi(&MultiModelOptions {
+            train: train_opts(3),
+            aggregator: AsyncAggregator::default(),
+            multi: MultiModelConfig::new(2, 1, SchedulerKind::Static).with_specs(specs),
+            ..Default::default()
+        })
+        .unwrap();
+    assert!(
+        report.records[0].iter().any(|r| r.accuracy.is_finite()),
+        "real model never evaluated"
+    );
+    assert!(
+        report.records[1].iter().all(|r| !r.accuracy.is_finite()),
+        "phantom model must not evaluate"
+    );
+    assert!(report.stats[1].arrivals > 0, "phantom model still simulates rounds");
+}
+
+#[test]
 fn prop_no_slot_is_double_assigned_and_every_submodel_gets_full_d() {
     forall("multimodel-invariants", 24, |g: &mut Gen| {
         let k = g.usize_in(4, 18);
         let m = g.usize_in(1, 4);
         let buffer = g.usize_in(1, 3);
-        let scheduler = match g.usize_in(0, 2) {
+        let scheduler = match g.usize_in(0, 3) {
             0 => SchedulerKind::Static,
             1 => SchedulerKind::RoundRobin,
-            _ => SchedulerKind::StalenessGreedy,
+            2 => SchedulerKind::StalenessGreedy,
+            _ => SchedulerKind::CostModel,
         };
         let churny = g.bool();
         let mut cfg = ScenarioConfig::paper_default()
@@ -284,7 +485,7 @@ fn golden_multi_model_sweep_fixed_seed() {
     // CSV column contract
     let csv = multi_model::table(&a).to_csv();
     assert!(csv.starts_with(
-        "K,M,B,sched,cycles,events,arrivals,applied,resolves,avg_stale,max_stale,util,rounds_to_budget,wall_ms\n"
+        "K,M,B,sched,hetero,cycles,events,arrivals,applied,resolves,avg_stale,max_stale,util,rounds_to_budget,final_B,retunes,wall_ms\n"
     ));
     assert_eq!(csv.lines().count(), 5);
     // sanity: the sweep actually trained something everywhere

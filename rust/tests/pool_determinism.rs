@@ -22,7 +22,10 @@ use asyncmel::coordinator::{
     TrainOptions,
 };
 use asyncmel::data::{synth, SynthConfig, SynthDataset};
-use asyncmel::multimodel::{report_digest, MultiModelConfig, MultiModelOptions, SchedulerKind};
+use asyncmel::multimodel::{
+    report_digest, AdaptiveBufferConfig, ModelTaskSpec, MultiModelConfig, MultiModelOptions,
+    SchedulerKind,
+};
 use asyncmel::runtime::Runtime;
 use asyncmel::testkit::{forall, Gen};
 
@@ -215,6 +218,37 @@ fn multimodel_sharing_one_pool_is_bit_identical_across_thread_counts() {
     let serial = run(1);
     assert_eq!(serial, run(2), "M=2 diverged at 2 threads");
     assert_eq!(serial, run(8), "M=2 diverged at 8 threads");
+}
+
+#[test]
+fn hetero_adaptive_multimodel_is_bit_identical_across_thread_counts() {
+    // the heterogeneous path (per-model specs + adaptive buffering +
+    // predictive routing) must stay thread-invariant like everything
+    // else: all spec-dependent work happens in the serial phases
+    let run = |threads: usize| {
+        let rt = Runtime::native(&DIMS, 32, 48);
+        let (scenario, ds) = tiny_world(6, threads, ChurnConfig::new(0.1, 90.0), SEED);
+        let specs =
+            ModelTaskSpec::small_large_mix(2, scenario.config.total_samples, &scenario.config.task);
+        let mut engine = EventEngine::new(
+            scenario,
+            AllocatorKind::Eta,
+            AggregationRule::FedAvg,
+            ExecMode::Real { runtime: &rt, train: ds.train, test: ds.test },
+        )
+        .unwrap();
+        let opts = MultiModelOptions {
+            train: tiny_opts(),
+            multi: MultiModelConfig::new(2, 2, SchedulerKind::CostModel)
+                .with_specs(specs)
+                .with_adaptive_buffer(AdaptiveBufferConfig::new(4, 1.0, 0.5)),
+            ..Default::default()
+        };
+        report_digest(&engine.run_multi(&opts).unwrap())
+    };
+    let serial = run(1);
+    assert_eq!(serial, run(2), "hetero M=2 diverged at 2 threads");
+    assert_eq!(serial, run(8), "hetero M=2 diverged at 8 threads");
 }
 
 #[test]

@@ -3,27 +3,107 @@
 #
 #   scripts/bench_check.sh            compare BENCH_*.json against
 #                                     rust/benches/baseline.json
-#   scripts/bench_check.sh --update   rewrite the baseline from the
-#                                     current BENCH_*.json files
+#   scripts/bench_check.sh --update   merge the current BENCH_*.json
+#                                     means into the baseline (existing
+#                                     per-bench max_ratio overrides and
+#                                     entries not re-measured are kept)
+#   scripts/bench_check.sh --selftest exercise the gate on synthetic
+#                                     data: a 3x slowdown must FAIL, an
+#                                     in-threshold run must PASS, and a
+#                                     per-bench max_ratio override must
+#                                     be honored (run in CI so the gate
+#                                     is proven live on every build)
 #
-# A benchmark fails the gate when its mean regresses more than
-# BENCH_MAX_RATIO (default 2.0) vs the committed baseline mean.
-# Benchmarks without a baseline entry pass as NEW — adopt them (and
-# refresh machine-specific numbers) with --update, then commit the
-# baseline. BENCH_*.json files are produced by
+# A benchmark fails the gate when its observed mean exceeds
+# baseline_mean * max_ratio. The threshold is per-bench: an entry's own
+# "max_ratio" field when present, else the baseline's
+# "default_max_ratio", else BENCH_MAX_RATIO (default 2.0).
+#
+# Baseline entry formats (both accepted):
+#   "target/name": 12345.0                          legacy scalar mean
+#   "target/name": {"mean_ns": 12345.0, "max_ratio": 3.0}
+#
+# BENCH_*.json files are produced by
 # `cargo bench --bench <b> -- --smoke --json BENCH_<b>.json`
-# (scripts/ci.sh bench runs the full set).
+# (scripts/ci.sh bench runs the full set). When $GITHUB_STEP_SUMMARY is
+# set, the comparison table is also appended there as markdown.
+#
+# Env overrides (used by --selftest): BENCH_DIR (where BENCH_*.json
+# live, default repo root), BENCH_BASELINE (baseline path).
 set -euo pipefail
 cd "$(dirname "$0")/.."
+REPO_ROOT=$(pwd)
 
-BASELINE="rust/benches/baseline.json"
-MAX_RATIO="${BENCH_MAX_RATIO:-2.0}"
+BASELINE="${BENCH_BASELINE:-rust/benches/baseline.json}"
+BENCH_DIR="${BENCH_DIR:-.}"
+DEFAULT_RATIO="${BENCH_MAX_RATIO:-2.0}"
 MODE="${1:-check}"
 
+# ---------------------------------------------------------------- selftest
+if [ "$MODE" = "--selftest" ]; then
+  tmp=$(mktemp -d)
+  trap 'rm -rf "$tmp"' EXIT
+  cat >"$tmp/baseline.json" <<'EOF'
+{
+  "note": "selftest baseline",
+  "default_max_ratio": 2.0,
+  "entries": {
+    "fake/case_a": { "mean_ns": 100.0 },
+    "fake/case_b": { "mean_ns": 100.0, "max_ratio": 4.0 },
+    "fake/case_c": 100.0
+  }
+}
+EOF
+  write_bench() { # $1 = mean for case_a, $2 case_b, $3 case_c
+    cat >"$tmp/BENCH_fake.json" <<EOF
+{
+  "target": "fake",
+  "results": [
+    { "mean_ns": $1, "name": "case_a" },
+    { "mean_ns": $2, "name": "case_b" },
+    { "mean_ns": $3, "name": "case_c" }
+  ]
+}
+EOF
+  }
+  run_gate() {
+    (BENCH_DIR="$tmp" BENCH_BASELINE="$tmp/baseline.json" GITHUB_STEP_SUMMARY= \
+      bash "$REPO_ROOT/scripts/bench_check.sh")
+  }
+  echo "bench_check selftest: injected 3x slowdown must fail the gate"
+  write_bench 300 300 120   # case_a regresses 3x (>2x) -> FAIL expected
+  if run_gate >"$tmp/out_fail.txt" 2>&1; then
+    echo "selftest FAILED: a 3x slowdown passed the gate" >&2
+    cat "$tmp/out_fail.txt" >&2
+    exit 1
+  fi
+  grep -q "fake/case_a.*REGRESSION" "$tmp/out_fail.txt" || {
+    echo "selftest FAILED: regression not attributed to fake/case_a" >&2
+    cat "$tmp/out_fail.txt" >&2
+    exit 1
+  }
+  # case_b regressed 3x too, but its per-bench max_ratio=4.0 covers it
+  grep -q "fake/case_b.*OK" "$tmp/out_fail.txt" || {
+    echo "selftest FAILED: per-bench max_ratio override not honored" >&2
+    cat "$tmp/out_fail.txt" >&2
+    exit 1
+  }
+  echo "bench_check selftest: in-threshold run must pass"
+  write_bench 150 150 150   # all within 2x (legacy scalar case_c too)
+  if ! run_gate >"$tmp/out_ok.txt" 2>&1; then
+    echo "selftest FAILED: an in-threshold run failed the gate" >&2
+    cat "$tmp/out_ok.txt" >&2
+    exit 1
+  fi
+  echo "bench_check selftest: OK (3x slowdown fails, 1.5x passes, overrides honored)"
+  exit 0
+fi
+
+# ------------------------------------------------------------ collect runs
 shopt -s nullglob
-files=(BENCH_*.json)
+files=("$BENCH_DIR"/BENCH_*.json)
 if [ ${#files[@]} -eq 0 ]; then
-  echo "bench_check: no BENCH_*.json files found — run 'scripts/ci.sh bench' first" >&2
+  echo "bench_check: no BENCH_*.json files found in $BENCH_DIR — run 'scripts/ci.sh bench' first" >&2
   exit 1
 fi
 
@@ -54,67 +134,127 @@ if [ ${#pairs[@]} -eq 0 ]; then
   exit 1
 fi
 
+# ------------------------------------------------------- baseline parsing
+# Baseline entries are one per line:
+#   '  "target/name": 123.0,'                                    (legacy)
+#   '  "target/name": { "mean_ns": 123.0, "max_ratio": 3.0 },'   (object)
+# Keys always contain a '/', which keeps note/default_max_ratio out.
+# Emits "key mean ratio" lines ('-' for an absent per-bench ratio).
+baseline_rows() {
+  [ -f "$BASELINE" ] || return 0
+  sed -n 's/^ *"\([^"]*\/[^"]*\)": *\([0-9.eE+-]*\),\{0,1\} *$/\1 \2 -/p' "$BASELINE"
+  sed -n 's/^ *"\([^"]*\/[^"]*\)": *{ *"mean_ns": *\([0-9.eE+-]*\)\(, *"max_ratio": *\([0-9.eE+-]*\)\)\{0,1\} *},\{0,1\} *$/\1 \2 \4/p' "$BASELINE" |
+    awk '{ print $1, $2, ($3 == "" ? "-" : $3) }'
+}
+
+baseline_default_ratio() {
+  local r=""
+  if [ -f "$BASELINE" ]; then
+    r=$(sed -n 's/^ *"default_max_ratio": *\([0-9.eE+-]*\),\{0,1\} *$/\1/p' "$BASELINE" | head -n 1)
+  fi
+  echo "${r:-$DEFAULT_RATIO}"
+}
+
+lookup_baseline() { # -> "mean ratio" (empty if absent)
+  local key="$1"
+  baseline_rows | awk -v k="$key" '$1 == k { print $2, $3; exit }'
+}
+
+# ---------------------------------------------------------------- update
 if [ "$MODE" = "--update" ]; then
-  mapfile -t sorted < <(printf '%s\n' "${pairs[@]}" | sort)
+  # merge: fresh means win, entries not re-measured and per-bench
+  # ratio overrides survive
+  declare -A mean ratio
+  while read -r k m r; do
+    [ -n "${k:-}" ] || continue
+    mean["$k"]="$m"
+    ratio["$k"]="$r"
+  done < <(baseline_rows)
+  for pair in "${pairs[@]}"; do
+    k="${pair%% *}"
+    mean["$k"]="${pair#* }"
+    : "${ratio["$k"]:=-}"
+  done
+  def=$(baseline_default_ratio)
   {
     echo '{'
-    echo '  "note": "Baseline smoke-config mean_ns per benchmark for scripts/bench_check.sh (fail at >BENCH_MAX_RATIO, default 2.0x). Numbers are machine-specific: refresh on the CI runner class with scripts/ci.sh bench && scripts/bench_check.sh --update and commit the result.",'
+    echo '  "note": "Per-bench smoke/full mean_ns baselines for scripts/bench_check.sh: fail when observed mean > mean_ns * max_ratio (per-entry max_ratio, else default_max_ratio). Refresh on the stable CI runner class via the bench-baseline workflow job (scripts/ci.sh bench-full + scripts/bench_check.sh --update) and commit the result.",'
+    printf '  "default_max_ratio": %s,\n' "$def"
     echo '  "entries": {'
-    n=${#sorted[@]}
-    for i in "${!sorted[@]}"; do
-      key="${sorted[$i]%% *}"
-      mean="${sorted[$i]#* }"
+    n=${#mean[@]}
+    i=0
+    for k in $(printf '%s\n' "${!mean[@]}" | sort); do
+      i=$((i + 1))
       sep=','
-      [ "$i" -eq $((n - 1)) ] && sep=''
-      printf '    "%s": %s%s\n' "$key" "$mean" "$sep"
+      [ "$i" -eq "$n" ] && sep=''
+      if [ "${ratio[$k]}" = "-" ]; then
+        printf '    "%s": { "mean_ns": %s }%s\n' "$k" "${mean[$k]}" "$sep"
+      else
+        printf '    "%s": { "mean_ns": %s, "max_ratio": %s }%s\n' "$k" "${mean[$k]}" "${ratio[$k]}" "$sep"
+      fi
     done
     echo '  }'
     echo '}'
   } >"$BASELINE"
-  echo "bench_check: baseline rewritten with ${#sorted[@]} entries -> $BASELINE"
+  echo "bench_check: baseline merged to ${#mean[@]} entries -> $BASELINE"
   exit 0
 fi
 
-# Baseline entries: lines '  "target/name": mean,' — keys always
-# contain a '/', which keeps the note/max_ratio fields out.
-lookup_baseline() {
-  local key="$1"
-  [ -f "$BASELINE" ] || return 0
-  sed -n 's/^ *"\([^"]*\/[^"]*\)": \([0-9.eE+-]*\),\{0,1\}$/\1 \2/p' "$BASELINE" |
-    awk -v k="$key" '$1 == k { print $2; exit }'
-}
-
+# ----------------------------------------------------------------- check
 if [ ! -f "$BASELINE" ]; then
   echo "bench_check: note: $BASELINE missing — every benchmark reports NEW" >&2
 fi
 
+def_ratio=$(baseline_default_ratio)
 status=0
 new=0
-printf '%-52s %14s %14s %7s  %s\n' "benchmark" "mean_ns" "baseline_ns" "ratio" "status"
+table_md="| benchmark | mean_ns | baseline_ns | ratio | gate | status |
+|---|---:|---:|---:|---:|---|"
+printf '%-52s %14s %14s %7s %6s  %s\n' "benchmark" "mean_ns" "baseline_ns" "ratio" "gate" "status"
 for pair in "${pairs[@]}"; do
   key="${pair%% *}"
   mean="${pair#* }"
-  base="$(lookup_baseline "$key")"
-  if [ -z "$base" ]; then
-    printf '%-52s %14.0f %14s %7s  %s\n' "$key" "$mean" "-" "-" "NEW"
+  row="$(lookup_baseline "$key")"
+  if [ -z "$row" ]; then
+    printf '%-52s %14.0f %14s %7s %6s  %s\n' "$key" "$mean" "-" "-" "-" "NEW"
+    table_md+=$'\n'"| $key | $(printf '%.0f' "$mean") | - | - | - | NEW |"
     new=$((new + 1))
     continue
   fi
+  base="${row%% *}"
+  gate="${row#* }"
+  [ "$gate" = "-" ] && gate="$def_ratio"
   ratio=$(awk -v a="$mean" -v b="$base" 'BEGIN { printf "%.2f", a / b }')
-  if awk -v a="$mean" -v b="$base" -v r="$MAX_RATIO" 'BEGIN { exit !(a > b * r) }'; then
-    printf '%-52s %14.0f %14.0f %7s  %s\n' "$key" "$mean" "$base" "$ratio" "REGRESSION(>${MAX_RATIO}x)"
+  if awk -v a="$mean" -v b="$base" -v r="$gate" 'BEGIN { exit !(a > b * r) }'; then
+    verdict="REGRESSION(>${gate}x)"
     status=1
   else
-    printf '%-52s %14.0f %14.0f %7s  %s\n' "$key" "$mean" "$base" "$ratio" "OK"
+    verdict="OK"
   fi
+  printf '%-52s %14.0f %14.0f %7s %6s  %s\n' "$key" "$mean" "$base" "$ratio" "$gate" "$verdict"
+  table_md+=$'\n'"| $key | $(printf '%.0f' "$mean") | $(printf '%.0f' "$base") | $ratio | ${gate}x | $verdict |"
 done
+
+if [ -n "${GITHUB_STEP_SUMMARY:-}" ]; then
+  {
+    echo "### Bench regression gate"
+    echo
+    echo "$table_md"
+    echo
+    if [ "$status" -ne 0 ]; then
+      echo "**FAIL** — at least one benchmark regressed past its gate."
+    else
+      echo "OK (${#pairs[@]} benchmarks, default gate ${def_ratio}x)."
+    fi
+  } >>"$GITHUB_STEP_SUMMARY"
+fi
 
 if [ "$new" -gt 0 ]; then
   echo "bench_check: $new benchmark(s) have no baseline entry — adopt with 'scripts/bench_check.sh --update'"
 fi
 if [ "$status" -ne 0 ]; then
-  echo "bench_check: FAIL — at least one benchmark regressed >${MAX_RATIO}x vs $BASELINE" >&2
+  echo "bench_check: FAIL — at least one benchmark regressed past its per-bench gate vs $BASELINE" >&2
 else
-  echo "bench_check: OK (${#pairs[@]} benchmarks, ratio gate ${MAX_RATIO}x)"
+  echo "bench_check: OK (${#pairs[@]} benchmarks, default ratio gate ${def_ratio}x)"
 fi
 exit "$status"

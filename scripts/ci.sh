@@ -10,7 +10,14 @@
 #                          cargo build --benches, python tests
 #   scripts/ci.sh bench    every bench target in --smoke config writing
 #                          BENCH_<name>.json, then the regression gate
-#                          (scripts/bench_check.sh vs rust/benches/baseline.json)
+#                          (scripts/bench_check.sh vs rust/benches/baseline.json,
+#                          after a gate selftest proving a 3x slowdown fails)
+#   scripts/ci.sh bench-full
+#                          baseline refresh: the full (non---smoke) suite,
+#                          then the smoke suite, each merged into
+#                          rust/benches/baseline.json via bench_check.sh
+#                          --update (run on the stable CI runner class —
+#                          see the bench-baseline workflow job)
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -62,6 +69,9 @@ run_test() {
 }
 
 run_bench() {
+  echo "=== bench gate selftest (3x slowdown must fail) ==="
+  bash scripts/bench_check.sh --selftest
+
   echo "=== bench-smoke: BENCH_*.json ==="
   for b in "${BENCHES[@]}"; do
     echo "--- cargo bench --bench ${b} -- --smoke --json BENCH_${b}.json ---"
@@ -72,18 +82,43 @@ run_bench() {
   bash scripts/bench_check.sh
 }
 
+# Baseline refresh for the stable CI runner class: run the FULL suite
+# and merge its means, then the smoke suite and merge those too — the
+# baseline ends up covering both key sets (some targets use different
+# case names under --smoke, e.g. real_fleet's K), so the bench-smoke
+# gate bites on every key it measures.
+run_bench_full() {
+  echo "=== bench-full: full-suite BENCH_*.json ==="
+  rm -f BENCH_*.json
+  for b in "${BENCHES[@]}"; do
+    echo "--- cargo bench --bench ${b} -- --json BENCH_${b}.json ---"
+    cargo bench --bench "$b" -- --json "BENCH_${b}.json"
+  done
+  bash scripts/bench_check.sh --update
+
+  echo "=== bench-full: smoke-config pass ==="
+  rm -f BENCH_*.json
+  for b in "${BENCHES[@]}"; do
+    echo "--- cargo bench --bench ${b} -- --smoke --json BENCH_${b}.json ---"
+    cargo bench --bench "$b" -- --smoke --json "BENCH_${b}.json"
+  done
+  bash scripts/bench_check.sh --update
+  echo "=== bench-full: refreshed rust/benches/baseline.json ==="
+}
+
 STAGE="${1:-all}"
 case "$STAGE" in
   lint) run_lint ;;
   test) run_test ;;
   bench) run_bench ;;
+  bench-full) run_bench_full ;;
   all)
     run_lint
     run_test
     run_bench
     ;;
   *)
-    echo "usage: scripts/ci.sh [all|lint|test|bench]" >&2
+    echo "usage: scripts/ci.sh [all|lint|test|bench|bench-full]" >&2
     exit 2
     ;;
 esac
