@@ -1,0 +1,91 @@
+//! Microbenchmarks for the native executor's forward/backward hot path
+//! — the zero-alloc tiled rewrite's acceptance harness.
+//!
+//! `cargo bench --bench native_hotpath` times, through a persistent
+//! [`Scratch`] (the zero-alloc steady state the engines run in):
+//!
+//! * one in-place `train_step_into` on the paper's 784→300→124→60→10
+//!   stack at batch 128, and on the tiny 36→16→4 test stack at batch 32
+//!   (the shapes the golden/e2e suites exercise);
+//! * one `eval_batch_with` on the paper stack at batch 512.
+//!
+//! Passthrough flags: `--smoke` (shrunk time budgets), `--json PATH`
+//! (see scripts/bench_check.sh; keys are gated against
+//! rust/benches/baseline.json).
+
+use asyncmel::aggregation::ParamSet;
+use asyncmel::benchkit::{group, BenchConfig, BenchRun};
+use asyncmel::data::Batch;
+use asyncmel::runtime::native::{NativeExecutor, Scratch};
+use asyncmel::sim::Rng;
+
+fn he_params(dims: &[usize], rng: &mut Rng) -> ParamSet {
+    let mut out = Vec::new();
+    for l in 0..dims.len() - 1 {
+        let std = (2.0 / dims[l] as f64).sqrt();
+        out.push(
+            (0..dims[l] * dims[l + 1])
+                .map(|_| rng.normal_ms(0.0, std) as f32)
+                .collect(),
+        );
+        out.push(vec![0.0f32; dims[l + 1]]);
+    }
+    out
+}
+
+fn random_batch(rows: usize, f: usize, c: usize, rng: &mut Rng) -> Batch {
+    let x: Vec<f32> = (0..rows * f).map(|_| rng.normal() as f32).collect();
+    let mut y = vec![0.0f32; rows * c];
+    for r in 0..rows {
+        y[r * c + rng.below(c as u64) as usize] = 1.0;
+    }
+    Batch { x, y_onehot: y, mask: vec![1.0; rows], real: rows }
+}
+
+fn main() {
+    let mut run = BenchRun::from_env("native_hotpath");
+    let cfg = BenchConfig::default();
+    let mut rng = Rng::new(0x40E7);
+
+    group("native hot path — zero-alloc scratch, tiled kernels");
+
+    // paper stack, train
+    {
+        let dims = vec![784usize, 300, 124, 60, 10];
+        let exec = NativeExecutor::new(&dims);
+        let mut params = he_params(&dims, &mut rng);
+        let batch = random_batch(128, 784, 10, &mut rng);
+        let mut scratch = Scratch::new();
+        // low lr: repeated in-place steps stay numerically tame
+        run.bench("train_step/paper_b128", &cfg, || {
+            exec.train_step_into(&mut scratch, &mut params, &batch, 0.001)
+        });
+    }
+
+    // tiny stack, train (the engine-test shape: step cost ~ µs, where
+    // the old per-step allocations dominated)
+    {
+        let dims = vec![36usize, 16, 4];
+        let exec = NativeExecutor::new(&dims);
+        let mut params = he_params(&dims, &mut rng);
+        let batch = random_batch(32, 36, 4, &mut rng);
+        let mut scratch = Scratch::new();
+        run.bench("train_step/tiny_b32", &cfg, || {
+            exec.train_step_into(&mut scratch, &mut params, &batch, 0.001)
+        });
+    }
+
+    // paper stack, eval
+    {
+        let dims = vec![784usize, 300, 124, 60, 10];
+        let exec = NativeExecutor::new(&dims);
+        let params = he_params(&dims, &mut rng);
+        let batch = random_batch(512, 784, 10, &mut rng);
+        let mut scratch = Scratch::new();
+        run.bench("eval_batch/paper_b512", &cfg, || {
+            exec.eval_batch_with(&mut scratch, &params, &batch)
+        });
+    }
+
+    run.finish().expect("bench json");
+}

@@ -1,14 +1,20 @@
 //! Serial vs **sharded** real-numerics fleet runs — the ROADMAP
 //! "ExecMode::Real past a few hundred learners" acceptance harness.
 //!
-//! `cargo bench --bench real_fleet` does three things:
+//! `cargo bench --bench real_fleet` does four things:
 //! 1. prints the real-numerics sweep table: K ∈ {100, 500, 1000}
 //!    learners running actual SGD through the native MLP executor, at
 //!    `--threads 1` vs `--threads 4` (`experiments::fleet_scale::run_real`);
 //! 2. asserts the determinism contract: the sharded run's record stream
 //!    is byte-identical to the serial one at the headline K;
 //! 3. times serial vs sharded wall clock at the largest K via benchkit
-//!    (the ISSUE acceptance comparison — speedup printed at the end).
+//!    (the barrier-mode acceptance comparison — speedup printed at the
+//!    end);
+//! 4. times the **async** policy serial vs sharded (per-event) vs
+//!    sharded + ε-window arrival coalescing — the hot-path overhaul
+//!    acceptance case: coalescing at 8 threads must beat per-event
+//!    serial dispatch on steps/sec (both recorded in the bench JSON,
+//!    with coalescing thread-invariance asserted byte-for-byte).
 //!
 //! Passthrough flags: `--smoke` (K = 50, 1 cycle CI config), `--json
 //! PATH` (machine-readable results; see scripts/bench_check.sh).
@@ -88,6 +94,70 @@ fn main() {
                 wall[0].0
             );
         }
+    }
+
+    // ---- async-real coalescing case (ISSUE 5 acceptance) ------------
+    // Per-arrival aggregation: per-event dispatch trains one learner at
+    // a time no matter the pool width; the ε-window batches arrivals so
+    // the train steps fan out. ε = 1 s of virtual time clusters the
+    // free-running arrival stream into multi-learner windows.
+    let ak = if run.smoke() { 50 } else { 200 };
+    let eps = 1.0f64;
+    let async_params = fleet_scale::RealFleetParams {
+        ks: vec![ak],
+        threads: vec![1, 8],
+        ..params.clone()
+    };
+    let ads = fleet_scale::real_dataset(&async_params, ak);
+    group(&format!(
+        "async-real @ K={ak} ({} cycles): serial vs sharded vs coalesce ε={eps}s",
+        async_params.cycles
+    ));
+    let mut async_wall: Vec<(&str, f64)> = Vec::new();
+    for (mode, threads, epsilon) in [
+        ("serial", 1usize, None),
+        ("sharded8", 8usize, None),
+        ("coalesce8", 8usize, Some(eps)),
+    ] {
+        let stats = run.bench(&format!("async_k{ak}/{mode}"), &cfg, || {
+            fleet_scale::async_engine_run(&async_params, ak, threads, epsilon, &runtime, &ads)
+                .expect("async engine run")
+        });
+        async_wall.push((mode, stats.mean_s));
+    }
+    // determinism: per-event dispatch is thread-invariant, and the
+    // coalescing stream is itself bit-identical across thread counts
+    let (r1, steps) =
+        fleet_scale::async_engine_run(&async_params, ak, 1, None, &runtime, &ads).unwrap();
+    let (r8, _) =
+        fleet_scale::async_engine_run(&async_params, ak, 8, None, &runtime, &ads).unwrap();
+    assert_eq!(
+        record_digest(&r1),
+        record_digest(&r8),
+        "per-event async diverged across thread counts"
+    );
+    let (c1, _) =
+        fleet_scale::async_engine_run(&async_params, ak, 1, Some(eps), &runtime, &ads).unwrap();
+    let (c8, csteps) =
+        fleet_scale::async_engine_run(&async_params, ak, 8, Some(eps), &runtime, &ads).unwrap();
+    assert_eq!(
+        record_digest(&c1),
+        record_digest(&c8),
+        "coalescing (ε={eps}) diverged across thread counts"
+    );
+    println!("determinism: async per-event + coalescing streams thread-invariant OK");
+    // steps/sec ratio, not wall-time ratio: the ε>0 stream completes a
+    // different arrival count than the per-event one, so each mode is
+    // normalized by its own step count.
+    let serial_rate = steps as f64 / async_wall[0].1;
+    for &(mode, t) in &async_wall[1..] {
+        let mode_steps = if mode == "coalesce8" { csteps } else { steps };
+        let rate = mode_steps as f64 / t;
+        println!(
+            "async speedup @ K={ak}: {:.2}x steps/sec with {mode} vs serial \
+             ({rate:.1} vs {serial_rate:.1} steps/s)",
+            rate / serial_rate
+        );
     }
 
     run.finish().expect("bench json");

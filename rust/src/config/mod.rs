@@ -167,6 +167,15 @@ pub struct ScenarioConfig {
     /// 0 = the machine's available parallelism. Any value produces a
     /// bit-identical run — sharding never changes results.
     pub num_threads: usize,
+    /// ε-window (virtual seconds) for async arrival coalescing in the
+    /// event engine: when an upload arrival (or re-dispatch) pops, all
+    /// already-queued arrivals/re-dispatches within `ε` of it are
+    /// drained in `(time, seq)` order and their freed learners' train
+    /// steps fan out across the thread pool together. `0.0` (default)
+    /// still coalesces *simultaneous* events and is byte-identical to
+    /// per-event dispatch; any value is bit-identical across thread
+    /// counts.
+    pub epsilon_window: f64,
 }
 
 impl Default for ScenarioConfig {
@@ -195,6 +204,7 @@ impl ScenarioConfig {
             multimodel: MultiModelConfig::single(),
             fading_rho: None,
             num_threads: 1,
+            epsilon_window: 0.0,
         }
     }
 
@@ -241,6 +251,18 @@ impl ScenarioConfig {
     /// parallelism). Results are bit-identical for every value.
     pub fn with_threads(mut self, num_threads: usize) -> Self {
         self.num_threads = num_threads;
+        self
+    }
+    /// ε-window (seconds) for async arrival coalescing in the event
+    /// engine. `0.0` coalesces only simultaneous events (byte-identical
+    /// to per-event dispatch); any ε is bit-identical across thread
+    /// counts.
+    pub fn with_epsilon_window(mut self, epsilon: f64) -> Self {
+        assert!(
+            epsilon.is_finite() && epsilon >= 0.0,
+            "epsilon_window must be finite and >= 0"
+        );
+        self.epsilon_window = epsilon;
         self
     }
 
@@ -322,6 +344,7 @@ impl ScenarioConfig {
             )
             .set("engine", self.engine.name())
             .set("num_threads", self.num_threads)
+            .set("epsilon_window", self.epsilon_window)
             .set("channel", ch)
             .set("devices", dev)
             .set("task", task)
@@ -388,6 +411,14 @@ impl ScenarioConfig {
         }
         if let Some(x) = v.get("num_threads") {
             cfg.num_threads = x.as_usize()?;
+        }
+        if let Some(x) = v.get("epsilon_window") {
+            let eps = x.as_f64()?;
+            anyhow::ensure!(
+                eps.is_finite() && eps >= 0.0,
+                "epsilon_window must be finite and >= 0, got {eps}"
+            );
+            cfg.epsilon_window = eps;
         }
         if let Some(ch) = v.get("channel") {
             if let Some(x) = ch.get("radius_m") {
@@ -791,6 +822,27 @@ mod tests {
         )
         .unwrap();
         assert_eq!(auto.num_threads, 0);
+    }
+
+    #[test]
+    fn epsilon_window_round_trip_default_and_validation() {
+        let cfg = ScenarioConfig::paper_default().with_epsilon_window(0.75);
+        let text = cfg.to_json().pretty();
+        let back = ScenarioConfig::from_json(&crate::json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.epsilon_window, 0.75);
+
+        // sparse configs keep the ε = 0 (simultaneous-only) default
+        let sparse = ScenarioConfig::from_json(&crate::json::parse("{}").unwrap()).unwrap();
+        assert_eq!(sparse.epsilon_window, 0.0);
+
+        for bad in [r#"{"epsilon_window": -0.5}"#, r#"{"epsilon_window": 1e999}"#] {
+            let v = crate::json::parse(bad);
+            let rejected = match v {
+                Ok(v) => ScenarioConfig::from_json(&v).is_err(),
+                Err(_) => true, // the substrate may refuse inf literals outright
+            };
+            assert!(rejected, "accepted: {bad}");
+        }
     }
 
     #[test]

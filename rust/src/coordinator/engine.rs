@@ -142,6 +142,71 @@ enum Event {
     Leave { slot: usize },
 }
 
+/// Deferred remainder of one async dispatch after its serial phase
+/// (RNG draws, assignment lookup, bookkeeping) has run — what
+/// [`EventEngine::flush_plans`] executes (train steps possibly fanned
+/// out across the pool) and then pushes, in plan order.
+enum RoundPlan {
+    /// Dead slot (or retired learner): nothing is scheduled.
+    Skip,
+    /// No usable assignment / infeasible τ / dropped: re-arm via a
+    /// `Redispatch` event at `at`.
+    Retry { slot: usize, at: f64 },
+    /// A round runs; its arrival is pushed at `arrive_at`.
+    Run(Box<RunPlan>),
+}
+
+struct RunPlan {
+    slot: usize,
+    model: usize,
+    /// Model version the round was dispatched from.
+    version: u64,
+    tau: u64,
+    d: u64,
+    arrive_at: f64,
+    /// i.i.d. batch indices; `None` exactly when no train step runs
+    /// (phantom exec, or no global model yet).
+    shard: Option<Vec<u32>>,
+    /// Frozen pre-mix snapshot of the dispatching model's parameters.
+    /// `None` = the shared globals passed to `flush_plans` are still
+    /// current for this plan (no aggregation happened after it was
+    /// planned).
+    global: Option<ParamSet>,
+}
+
+/// The parameters [`EventEngine::flush_plans`] falls back to for plans
+/// without a frozen snapshot.
+enum SharedGlobals<'a> {
+    One(&'a Option<ParamSet>),
+    PerModel(&'a [Option<ParamSet>]),
+}
+
+impl SharedGlobals<'_> {
+    fn get(&self, model: usize) -> Option<&ParamSet> {
+        match self {
+            SharedGlobals::One(g) => g.as_ref(),
+            SharedGlobals::PerModel(gs) => gs.get(model).and_then(|g| g.as_ref()),
+        }
+    }
+}
+
+/// Freeze the pre-mix parameters into every pending runnable plan for
+/// `model` that hasn't captured a snapshot yet. A dispatch planned
+/// earlier in a coalesced window must train from the model **as it was
+/// at its own serial turn**, not from the post-mix state — per-entry
+/// snapshotting is what keeps ε-window coalescing byte-identical to
+/// per-event dispatch at ε = 0. Lazy by design: windows where no mix
+/// follows a plan (the common case) never clone anything.
+fn freeze_pending(plans: &mut [RoundPlan], model: usize, global: &Option<ParamSet>) {
+    for plan in plans.iter_mut() {
+        if let RoundPlan::Run(rp) = plan {
+            if rp.model == model && rp.global.is_none() && rp.shard.is_some() {
+                rp.global = global.clone();
+            }
+        }
+    }
+}
+
 /// The event-driven orchestrator.
 pub struct EventEngine<'rt> {
     pub scenario: Scenario,
@@ -174,6 +239,14 @@ pub struct EventEngine<'rt> {
     /// by the single- and multi-model paths. Any width is
     /// bit-identical to the serial run.
     pool: ThreadPool,
+    /// Async arrival coalescing: `Some(ε)` drains every already-queued
+    /// arrival/re-dispatch within `ε` (virtual seconds) of a popped one
+    /// and fans their train steps out together
+    /// (`ScenarioConfig.epsilon_window`; ε = 0 coalesces simultaneous
+    /// events only and is byte-identical to per-event dispatch). `None`
+    /// is the legacy strictly-per-event path, kept as the differential
+    /// oracle ([`Self::with_per_event_dispatch`]).
+    coalesce: Option<f64>,
     pub stats: EngineStats,
 }
 
@@ -236,6 +309,11 @@ impl<'rt> EventEngine<'rt> {
         let initial_k = scenario.k();
         let fading = scenario.config.fading_rho.map(|rho| make_fading(&scenario, rho));
         let pool = ThreadPool::new(scenario.config.num_threads);
+        let eps = scenario.config.epsilon_window;
+        ensure!(
+            eps.is_finite() && eps >= 0.0,
+            "epsilon_window must be finite and >= 0 (got {eps})"
+        );
         Ok(Self {
             scenario,
             slots,
@@ -255,8 +333,29 @@ impl<'rt> EventEngine<'rt> {
             initial_k,
             last_solve_ms: 0.0,
             pool,
+            coalesce: Some(eps),
             stats: EngineStats::default(),
         })
+    }
+
+    /// Disable ε-window arrival coalescing: process strictly one event
+    /// per dispatch (the pre-coalescing path). Differential tests use
+    /// this side as the oracle, and the `fleet --real` async sweep as
+    /// the serial/sharded baselines.
+    pub fn with_per_event_dispatch(mut self) -> Self {
+        self.coalesce = None;
+        self
+    }
+
+    /// Override the arrival-coalescing ε-window (seconds) from
+    /// `ScenarioConfig.epsilon_window`.
+    pub fn with_epsilon_window(mut self, epsilon: f64) -> Self {
+        assert!(
+            epsilon.is_finite() && epsilon >= 0.0,
+            "epsilon_window must be finite and >= 0"
+        );
+        self.coalesce = Some(epsilon);
+        self
     }
 
     /// Enable fault injection for subsequent runs.
@@ -454,17 +553,165 @@ impl<'rt> EventEngine<'rt> {
         Ok(())
     }
 
-    /// The shared async dispatch core: fault draw, straggle, i.i.d.
-    /// batch sampling, arrival push — used verbatim by both the
-    /// single-model path ([`Self::dispatch_one`]) and the multi-model
-    /// path ([`Self::dispatch_model`]), so the `M = 1` byte-for-byte
-    /// differential guarantee holds by construction. `assign` carries
-    /// the cost coefficients the round is timed against (the slot's own
-    /// cost for the single-model path; the spec-adjusted sub-fleet cost
-    /// for heterogeneous models) and `t_cycle` the deadline the retry
-    /// idles on (`T_m` for heterogeneous models). Returns the
-    /// cost-model *predicted* round time when an upload was scheduled
-    /// (`None` otherwise) — the predictive scheduler's forecast input.
+    /// The serial phase of the shared async dispatch core — used by
+    /// both the single-model path ([`Self::dispatch_one`]) and the
+    /// multi-model path ([`Self::dispatch_model`]), so the `M = 1`
+    /// byte-for-byte differential guarantee holds by construction:
+    /// alive/assignment checks, fault draw, straggle, i.i.d. batch
+    /// sampling. Consumes `self.rng` exactly as the old inline dispatch
+    /// did; the train step and the event pushes are deferred into the
+    /// returned [`RoundPlan`] so coalesced batches can fan the steps
+    /// out across the pool ([`Self::flush_plans`]).
+    ///
+    /// `assign` carries the cost coefficients the round is timed
+    /// against (the slot's own cost for the single-model path; the
+    /// spec-adjusted sub-fleet cost for heterogeneous models) and
+    /// `t_cycle` the deadline the retry idles on (`T_m` for
+    /// heterogeneous models). Also returns the cost-model *predicted*
+    /// round time when an upload was scheduled (`None` otherwise) — the
+    /// predictive scheduler's forecast input.
+    #[allow(clippy::too_many_arguments)]
+    fn plan_round(
+        &mut self,
+        now: f64,
+        slot: usize,
+        model: usize,
+        assign: Option<(u64, u64, LearnerCost)>,
+        global: &Option<ParamSet>,
+        version: u64,
+        t_cycle: f64,
+    ) -> (RoundPlan, Option<f64>) {
+        if !self.slots[slot].alive {
+            return (RoundPlan::Skip, None);
+        }
+        let Some((tau, d, cost)) = assign else {
+            // fleet changed between resolve and dispatch; try next cycle
+            return (RoundPlan::Retry { slot, at: now + t_cycle }, None);
+        };
+        if tau == 0 {
+            // MEL infeasible for this node right now — idle one cycle.
+            return (RoundPlan::Retry { slot, at: now + t_cycle }, None);
+        }
+        self.stats.dispatched += 1;
+        let outcome = draw_outcomes(&self.faults, 1, &mut self.rng)[0];
+        if outcome == FaultOutcome::Dropped {
+            return (RoundPlan::Retry { slot, at: now + t_cycle }, None);
+        }
+        let planned = cost.time(tau as f64, d as f64);
+        let mut busy = planned;
+        if outcome == FaultOutcome::Straggled {
+            busy *= self.faults.straggle_factor;
+        }
+        debug_assert!(busy > 0.0);
+        let shard: Option<Vec<u32>> = match (&self.exec, global) {
+            (ExecMode::Real { train, .. }, Some(_)) => {
+                // Async mode samples the learner's batch i.i.d. WITH
+                // replacement: eq. (7c)'s exact dataset partition is a
+                // per-cycle barrier concept and has no analogue in a
+                // free-running arrival stream (each learner starts its
+                // round at a different time). Σ d_k = D still governs
+                // the *rate* via the allocation; only the disjointness
+                // is relaxed.
+                let n = train.len() as u64;
+                Some((0..d).map(|_| self.rng.below(n) as u32).collect())
+            }
+            _ => None,
+        };
+        (
+            RoundPlan::Run(Box::new(RunPlan {
+                slot,
+                model,
+                version,
+                tau,
+                d,
+                arrive_at: now + busy,
+                shard,
+                global: None,
+            })),
+            Some(planned),
+        )
+    }
+
+    /// Execute a batch of [`RoundPlan`]s: fan the real-numerics train
+    /// steps out across the pool (plan order = job order; results merge
+    /// by index, so any pool width is bit-identical), then perform the
+    /// event pushes **serially in plan order**, which keeps the queue's
+    /// `(time, seq)` assignment identical to per-plan dispatch.
+    fn flush_plans(
+        &mut self,
+        q: &mut EventQueue<Event>,
+        plans: Vec<RoundPlan>,
+        shared: SharedGlobals<'_>,
+        opts: &TrainOptions,
+    ) -> Result<()> {
+        let runnable: Vec<usize> = plans
+            .iter()
+            .enumerate()
+            .filter(|(_, p)| matches!(p, RoundPlan::Run(rp) if rp.shard.is_some()))
+            .map(|(i, _)| i)
+            .collect();
+        let mut trained: Vec<Option<(ParamSet, f32)>> = Vec::with_capacity(plans.len());
+        trained.resize_with(plans.len(), || None);
+        if !runnable.is_empty() {
+            let ExecMode::Real { runtime, train, .. } = &self.exec else {
+                unreachable!("runnable plans only exist in real exec mode");
+            };
+            let slots = &self.slots;
+            let plans_ref = &plans;
+            let runnable_ref = &runnable;
+            let shared_ref = &shared;
+            let lr = opts.lr;
+            let results = self.pool.try_map(runnable.len(), |j| {
+                let i = runnable_ref[j];
+                let RoundPlan::Run(rp) = &plans_ref[i] else {
+                    unreachable!("runnable indexes only Run plans");
+                };
+                let g = rp
+                    .global
+                    .as_ref()
+                    .or_else(|| shared_ref.get(rp.model))
+                    .expect("runnable plan without a global");
+                let shard = rp.shard.as_ref().expect("runnable plan has a shard");
+                slots[rp.slot]
+                    .learner
+                    .run_cycle(runtime, g, train, shard, rp.tau, lr)
+                    .map(|u| (u.params, u.train_loss))
+            })?;
+            for (&i, r) in runnable.iter().zip(results) {
+                trained[i] = Some(r);
+            }
+        }
+        for (i, plan) in plans.into_iter().enumerate() {
+            match plan {
+                RoundPlan::Skip => {}
+                RoundPlan::Retry { slot, at } => q.push(at, Event::Redispatch { slot }),
+                RoundPlan::Run(rp) => {
+                    let (params, train_loss) = match trained[i].take() {
+                        Some((p, loss)) => (Some(p), loss),
+                        None => (None, f32::NAN),
+                    };
+                    q.push(
+                        rp.arrive_at,
+                        Event::Arrival(ArrivalMsg {
+                            slot: rp.slot,
+                            model: rp.model,
+                            version_at_dispatch: rp.version,
+                            tau: rp.tau,
+                            d: rp.d,
+                            params,
+                            train_loss,
+                        }),
+                    );
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// One-plan convenience wrapper: plan + flush immediately. The
+    /// un-coalesced dispatch paths (joins, migrations outside a window,
+    /// the per-event oracle mode) run through this, so their RNG/push
+    /// order is byte-identical to the pre-refactor inline code.
     #[allow(clippy::too_many_arguments)]
     fn dispatch_round(
         &mut self,
@@ -478,63 +725,9 @@ impl<'rt> EventEngine<'rt> {
         version: u64,
         t_cycle: f64,
     ) -> Result<Option<f64>> {
-        if !self.slots[slot].alive {
-            return Ok(None);
-        }
-        let Some((tau, d, cost)) = assign else {
-            // fleet changed between resolve and dispatch; try next cycle
-            q.push(now + t_cycle, Event::Redispatch { slot });
-            return Ok(None);
-        };
-        if tau == 0 {
-            // MEL infeasible for this node right now — idle one cycle.
-            q.push(now + t_cycle, Event::Redispatch { slot });
-            return Ok(None);
-        }
-        self.stats.dispatched += 1;
-        let outcome = draw_outcomes(&self.faults, 1, &mut self.rng)[0];
-        if outcome == FaultOutcome::Dropped {
-            q.push(now + t_cycle, Event::Redispatch { slot });
-            return Ok(None);
-        }
-        let planned = cost.time(tau as f64, d as f64);
-        let mut busy = planned;
-        if outcome == FaultOutcome::Straggled {
-            busy *= self.faults.straggle_factor;
-        }
-        debug_assert!(busy > 0.0);
-        let (params, train_loss) = match (&self.exec, global) {
-            (ExecMode::Real { runtime, train, .. }, Some(g)) => {
-                // Async mode samples the learner's batch i.i.d. WITH
-                // replacement: eq. (7c)'s exact dataset partition is a
-                // per-cycle barrier concept and has no analogue in a
-                // free-running arrival stream (each learner starts its
-                // round at a different time). Σ d_k = D still governs
-                // the *rate* via the allocation; only the disjointness
-                // is relaxed.
-                let n = train.len() as u64;
-                let shard: Vec<u32> =
-                    (0..d).map(|_| self.rng.below(n) as u32).collect();
-                let upd = self.slots[slot].learner.run_cycle(
-                    runtime, g, train, &shard, tau, opts.lr,
-                )?;
-                (Some(upd.params), upd.train_loss)
-            }
-            _ => (None, f32::NAN),
-        };
-        q.push(
-            now + busy,
-            Event::Arrival(ArrivalMsg {
-                slot,
-                model,
-                version_at_dispatch: version,
-                tau,
-                d,
-                params,
-                train_loss,
-            }),
-        );
-        Ok(Some(planned))
+        let (plan, planned) = self.plan_round(now, slot, model, assign, global, version, t_cycle);
+        self.flush_plans(q, vec![plan], SharedGlobals::One(global), opts)?;
+        Ok(planned)
     }
 
     /// Batched [`Self::dispatch_round`]: dispatch many learner rounds
@@ -558,117 +751,111 @@ impl<'rt> EventEngine<'rt> {
         version: u64,
         t_cycle: f64,
     ) -> Result<Vec<Option<f64>>> {
-        enum Plan {
-            /// Slot not alive: nothing happens (no push).
-            Skip,
-            /// No usable assignment / dropped: re-arm next cycle.
-            Retry,
-            /// A round runs; `shard` is `None` in phantom mode.
-            Run {
-                tau: u64,
-                d: u64,
-                planned: f64,
-                busy: f64,
-                shard: Option<Vec<u32>>,
-            },
-        }
         // serial phase: fault + shard draws in entry order (the exact
-        // dispatch_round control flow, minus the pushes)
-        let mut plans: Vec<Plan> = Vec::with_capacity(entries.len());
+        // dispatch_round control flow), pushes deferred into plans
+        let mut plans: Vec<RoundPlan> = Vec::with_capacity(entries.len());
+        let mut scheduled: Vec<Option<f64>> = Vec::with_capacity(entries.len());
         for &(slot, assign) in entries {
-            if !self.slots[slot].alive {
-                plans.push(Plan::Skip);
-                continue;
-            }
-            let Some((tau, d, cost)) = assign else {
-                plans.push(Plan::Retry);
-                continue;
-            };
-            if tau == 0 {
-                plans.push(Plan::Retry);
-                continue;
-            }
-            self.stats.dispatched += 1;
-            let outcome = draw_outcomes(&self.faults, 1, &mut self.rng)[0];
-            if outcome == FaultOutcome::Dropped {
-                plans.push(Plan::Retry);
-                continue;
-            }
-            let planned = cost.time(tau as f64, d as f64);
-            let mut busy = planned;
-            if outcome == FaultOutcome::Straggled {
-                busy *= self.faults.straggle_factor;
-            }
-            debug_assert!(busy > 0.0);
-            let shard: Option<Vec<u32>> = match (&self.exec, global) {
-                (ExecMode::Real { train, .. }, Some(_)) => {
-                    // i.i.d. with replacement, exactly as dispatch_round
-                    // (which also only draws when a global model exists)
-                    let n = train.len() as u64;
-                    Some((0..d).map(|_| self.rng.below(n) as u32).collect())
-                }
-                _ => None,
-            };
-            plans.push(Plan::Run { tau, d, planned, busy, shard });
+            let (plan, planned) =
+                self.plan_round(now, slot, model, assign, global, version, t_cycle);
+            plans.push(plan);
+            scheduled.push(planned);
         }
-        // parallel phase: the real-numerics train steps
-        let runnable: Vec<usize> = plans
-            .iter()
-            .enumerate()
-            .filter(|(_, p)| matches!(p, Plan::Run { .. }))
-            .map(|(i, _)| i)
-            .collect();
-        let mut trained: Vec<Option<(ParamSet, f32)>> = Vec::with_capacity(plans.len());
-        trained.resize_with(plans.len(), || None);
-        if let (ExecMode::Real { runtime, train, .. }, Some(g)) = (&self.exec, global) {
-            let slots = &self.slots;
-            let plans_ref = &plans;
-            let runnable_ref = &runnable;
-            let lr = opts.lr;
-            let results = self.pool.try_map(runnable.len(), |j| {
-                let i = runnable_ref[j];
-                let (slot, _) = entries[i];
-                let Plan::Run { tau, shard, .. } = &plans_ref[i] else {
-                    unreachable!("runnable indexes only Run plans");
-                };
-                let shard = shard.as_ref().expect("real mode has shards");
-                slots[slot]
-                    .learner
-                    .run_cycle(runtime, g, train, shard, *tau, lr)
-                    .map(|u| (u.params, u.train_loss))
-            })?;
-            for (&i, r) in runnable.iter().zip(results) {
-                trained[i] = Some(r);
-            }
-        }
-        // serial push phase in entry order (stable queue seq)
-        let mut scheduled: Vec<Option<f64>> = vec![None; entries.len()];
-        for (i, (&(slot, _), plan)) in entries.iter().zip(&plans).enumerate() {
-            match plan {
-                Plan::Skip => {}
-                Plan::Retry => q.push(now + t_cycle, Event::Redispatch { slot }),
-                Plan::Run { tau, d, planned, busy, .. } => {
-                    let (params, train_loss) = match trained[i].take() {
-                        Some((p, loss)) => (Some(p), loss),
-                        None => (None, f32::NAN),
-                    };
-                    q.push(
-                        now + busy,
-                        Event::Arrival(ArrivalMsg {
-                            slot,
-                            model,
-                            version_at_dispatch: version,
-                            tau: *tau,
-                            d: *d,
-                            params,
-                            train_loss,
-                        }),
-                    );
-                    scheduled[i] = Some(*planned);
-                }
-            }
-        }
+        // parallel train phase + serial push phase in entry order
+        // (stable queue seq)
+        self.flush_plans(q, plans, SharedGlobals::One(global), opts)?;
         Ok(scheduled)
+    }
+
+    /// Process one popped async-mode arrival/re-dispatch **plus** every
+    /// already-queued arrival/re-dispatch within the ε-window of it
+    /// (none in per-event oracle mode): the serial phases run in
+    /// `(time, seq)` pop order — aggregation, version bumps and RNG
+    /// draws consume exactly the per-event stream — then all planned
+    /// train steps fan out across the pool in one batch and the
+    /// resulting events are pushed in plan order.
+    ///
+    /// Each coalesced entry keeps its **own** timestamp for the
+    /// dispatch arithmetic (arrival/retry push times), but the engine
+    /// clock stays at the window head: a wide window may process an
+    /// entry whose time lies *after* events its own flush pushes, so
+    /// advancing `now` to the last entry would run the virtual clock
+    /// backwards at the next pop. Head times are monotone by the heap
+    /// property (everything queued or pushed is ≥ the current head).
+    ///
+    /// ε = 0 still coalesces *simultaneous* events; because every plan
+    /// trains from the global **as of its own serial turn**
+    /// ([`freeze_pending`]), the record stream is byte-identical to
+    /// per-event dispatch — the differential oracle in
+    /// `rust/tests/coalescing.rs`. Any ε stays bit-identical across
+    /// thread counts: the window only decides which steps run
+    /// concurrently, never their inputs or push order.
+    #[allow(clippy::too_many_arguments)]
+    fn async_window(
+        &mut self,
+        q: &mut EventQueue<Event>,
+        head_time: f64,
+        head: Event,
+        agg: AsyncAggregator,
+        global: &mut Option<ParamSet>,
+        version: &mut u64,
+        window_s: &mut Vec<u64>,
+        window_losses: &mut Vec<f32>,
+        opts: &TrainOptions,
+    ) -> Result<()> {
+        let mut batch: Vec<(f64, Event)> = vec![(head_time, head)];
+        if let Some(eps) = self.coalesce {
+            let horizon = head_time + eps;
+            while let Some((t, ev)) = q.peek() {
+                if t <= horizon && matches!(ev, Event::Arrival(_) | Event::Redispatch { .. }) {
+                    let popped = q.pop().expect("peeked event pops");
+                    self.stats.events += 1;
+                    batch.push(popped);
+                } else {
+                    break; // any other event type closes the window
+                }
+            }
+        }
+        let t_cycle = self.scenario.t_cycle();
+        let mut plans: Vec<RoundPlan> = Vec::with_capacity(batch.len());
+        for (et, ev) in batch {
+            let slot = match ev {
+                Event::Arrival(msg) => {
+                    if !self.slots[msg.slot].alive {
+                        continue; // left while the upload was in flight
+                    }
+                    let s = *version - msg.version_at_dispatch;
+                    if let Some(p) = msg.params.as_ref() {
+                        if global.is_some() {
+                            // dispatches planned earlier in this window
+                            // must not see the post-mix model
+                            freeze_pending(&mut plans, 0, global);
+                            agg.mix(global.as_mut().expect("checked above"), p, s);
+                        }
+                    }
+                    *version += 1;
+                    self.stats.arrivals += 1;
+                    window_s.push(s);
+                    if msg.train_loss.is_finite() {
+                        window_losses.push(msg.train_loss);
+                    }
+                    msg.slot
+                }
+                Event::Redispatch { slot } => slot,
+                _ => unreachable!("async window drains only arrivals/re-dispatches"),
+            };
+            // the dispatch_one serial phase, at this entry's own time
+            if self.dirty {
+                self.resolve()?;
+            }
+            let assign = self
+                .assignment(slot)
+                .map(|(tau, d)| (tau, d, self.slots[slot].learner.cost));
+            let (plan, _) = self.plan_round(et, slot, 0, assign, global, *version, t_cycle);
+            plans.push(plan);
+        }
+        self.flush_plans(q, plans, SharedGlobals::One(global), opts)?;
+        Ok(())
     }
 
     /// Admit a new learner sampled from the scenario's device/channel
@@ -809,23 +996,33 @@ impl<'rt> EventEngine<'rt> {
                     match opts.policy {
                         EnginePolicy::Barrier => barrier_buf.push(msg),
                         EnginePolicy::Async(agg) => {
-                            let s = version - msg.version_at_dispatch;
-                            if let (Some(g), Some(p)) = (global.as_mut(), msg.params.as_ref()) {
-                                agg.mix(g, p, s);
-                            }
-                            version += 1;
-                            self.stats.arrivals += 1;
-                            window_s.push(s);
-                            if msg.train_loss.is_finite() {
-                                window_losses.push(msg.train_loss);
-                            }
-                            self.dispatch_one(&mut q, now, msg.slot, &global, &opts.train, version)?;
+                            self.async_window(
+                                &mut q,
+                                now,
+                                Event::Arrival(msg),
+                                agg,
+                                &mut global,
+                                &mut version,
+                                &mut window_s,
+                                &mut window_losses,
+                                &opts.train,
+                            )?;
                         }
                     }
                 }
                 Event::Redispatch { slot } => {
-                    if let EnginePolicy::Async(_) = opts.policy {
-                        self.dispatch_one(&mut q, now, slot, &global, &opts.train, version)?;
+                    if let EnginePolicy::Async(agg) = opts.policy {
+                        self.async_window(
+                            &mut q,
+                            now,
+                            Event::Redispatch { slot },
+                            agg,
+                            &mut global,
+                            &mut version,
+                            &mut window_s,
+                            &mut window_losses,
+                            &opts.train,
+                        )?;
                     }
                 }
                 Event::Join => {
@@ -1029,11 +1226,33 @@ impl<'rt> EventEngine<'rt> {
         opts: &TrainOptions,
         version: u64,
     ) -> Result<Option<f64>> {
+        let (plan, planned) =
+            self.plan_model(now, slot, model, model_of, sub, spec, global, version)?;
+        self.flush_plans(q, vec![plan], SharedGlobals::One(global), opts)?;
+        Ok(planned)
+    }
+
+    /// Serial phase of [`Self::dispatch_model`]: re-solve the model's
+    /// sub-fleet if its composition changed, then plan the round —
+    /// coalesced windows in [`Self::run_multi`] flush the plans in one
+    /// pooled batch afterwards.
+    #[allow(clippy::too_many_arguments)]
+    fn plan_model(
+        &mut self,
+        now: f64,
+        slot: usize,
+        model: usize,
+        model_of: &[usize],
+        sub: &mut SubFleetAlloc,
+        spec: &ResolvedTaskSpec,
+        global: &Option<ParamSet>,
+        version: u64,
+    ) -> Result<(RoundPlan, Option<f64>)> {
         if sub.dirty {
             self.resolve_sub(model, model_of, sub, spec)?;
         }
         let assign = sub.assignment_with_cost(slot);
-        self.dispatch_round(q, now, slot, model, assign, global, opts, version, spec.t_cycle)
+        Ok(self.plan_round(now, slot, model, assign, global, version, spec.t_cycle))
     }
 
     /// A stop-gap `(τ, d)` for a learner that migrated onto `model`
@@ -1225,115 +1444,168 @@ impl<'rt> EventEngine<'rt> {
             now = t;
             self.stats.events += 1;
             match ev {
-                Event::Arrival(msg) => {
-                    let m = msg.model;
-                    registry.models[m].complete_dispatch(msg.version_at_dispatch);
-                    scheduler.observe_arrival(m, now);
-                    if !self.slots[msg.slot].alive {
-                        continue; // left while the upload was in flight
-                    }
-                    self.stats.arrivals += 1;
-                    let s = registry.models[m].staleness_of(msg.version_at_dispatch);
-                    registry.models[m].absorb(
-                        &mut globals[m],
-                        BufferedUpdate {
-                            params: msg.params,
-                            staleness: s,
-                            train_loss: msg.train_loss,
-                        },
-                    );
-                    // the learner is free again: route it to its next model
-                    let active = registry.active_ids();
-                    if active.is_empty() {
-                        continue; // every model done — learner retires
-                    }
-                    let target = scheduler.pick(msg.slot, now, &registry, &active);
-                    let version = registry.models[target].version;
-                    let scheduled = if target != model_of[msg.slot] {
-                        // migrate — but batched: the membership change
-                        // (and the two sub-fleet re-solves it implies)
-                        // waits for the next flush boundary; meanwhile
-                        // the learner trains its new model on a
-                        // provisional cost-model assignment
-                        pending_moves.insert(msg.slot, target);
-                        let assign =
-                            self.provisional_assign(msg.slot, target, &model_of, &specs[target]);
-                        self.dispatch_round(
-                            &mut q,
-                            now,
-                            msg.slot,
-                            target,
-                            assign,
-                            &globals[target],
-                            &opts.train,
-                            version,
-                            specs[target].t_cycle,
-                        )?
-                    } else {
-                        // the scheduler's latest word stands: an earlier
-                        // pending move for this slot is cancelled
-                        pending_moves.remove(&msg.slot);
-                        self.dispatch_model(
-                            &mut q,
-                            now,
-                            msg.slot,
-                            target,
-                            &model_of,
-                            &mut subs[target],
-                            &specs[target],
-                            &globals[target],
-                            &opts.train,
-                            version,
-                        )?
-                    };
-                    if let Some(planned) = scheduled {
-                        registry.models[target].record_dispatch(version);
-                        scheduler.observe_dispatch(target, now + planned);
-                    }
-                }
-                Event::Redispatch { slot } => {
-                    // a failed round retries on its current model (the
-                    // slot was never freed — scheduler routing happens
-                    // on completed rounds and joins only). The alive
-                    // check gates only the budget re-route: a dead
-                    // slot must not charge the scheduler's counters,
-                    // but still flows through dispatch_model so a
-                    // pending dirty re-solve happens exactly when the
-                    // single-model path would perform it (byte parity).
-                    let mut m = pending_moves.get(&slot).copied().unwrap_or(model_of[slot]);
-                    if self.slots[slot].alive && registry.models[m].budget_exhausted() {
-                        let active = registry.active_ids();
-                        if active.is_empty() {
-                            continue;
+                Event::Arrival(_) | Event::Redispatch { .. } => {
+                    // ε-window drain: batch this event with every
+                    // already-queued arrival/re-dispatch within ε (any
+                    // other event type closes the window). Serial
+                    // phases run below in `(time, seq)` pop order —
+                    // absorb/flush, scheduler routing and RNG draws
+                    // consume exactly the per-event stream — then all
+                    // planned train steps fan out across the pool in
+                    // one flush. Entries keep their own timestamps for
+                    // the dispatch arithmetic, but the engine clock
+                    // stays at the window head (`now` = t): a wide
+                    // window can process an entry later than events its
+                    // own flush pushes, and head times are what stays
+                    // monotone (see `async_window`).
+                    let mut batch: Vec<(f64, Event)> = vec![(t, ev)];
+                    if let Some(eps) = self.coalesce {
+                        let horizon = t + eps;
+                        while let Some((pt, pe)) = q.peek() {
+                            if pt <= horizon
+                                && matches!(pe, Event::Arrival(_) | Event::Redispatch { .. })
+                            {
+                                let popped = q.pop().expect("peeked event pops");
+                                self.stats.events += 1;
+                                batch.push(popped);
+                            } else {
+                                break;
+                            }
                         }
-                        m = scheduler.pick(slot, now, &registry, &active);
                     }
-                    let version = registry.models[m].version;
-                    let scheduled = if m != model_of[slot] {
-                        pending_moves.insert(slot, m);
-                        let assign = self.provisional_assign(slot, m, &model_of, &specs[m]);
-                        self.dispatch_round(
-                            &mut q,
-                            now,
-                            slot,
-                            m,
-                            assign,
-                            &globals[m],
-                            &opts.train,
-                            version,
-                            specs[m].t_cycle,
-                        )?
-                    } else {
-                        pending_moves.remove(&slot);
-                        self.dispatch_model(
-                            &mut q, now, slot, m, &model_of, &mut subs[m], &specs[m],
-                            &globals[m], &opts.train, version,
-                        )?
-                    };
-                    if let Some(planned) = scheduled {
-                        registry.models[m].record_dispatch(version);
-                        scheduler.observe_dispatch(m, now + planned);
+                    let mut plans: Vec<RoundPlan> = Vec::with_capacity(batch.len());
+                    for (et, bev) in batch {
+                        match bev {
+                            Event::Arrival(msg) => {
+                                let m = msg.model;
+                                registry.models[m].complete_dispatch(msg.version_at_dispatch);
+                                scheduler.observe_arrival(m, et);
+                                if !self.slots[msg.slot].alive {
+                                    continue; // left while the upload was in flight
+                                }
+                                self.stats.arrivals += 1;
+                                let s =
+                                    registry.models[m].staleness_of(msg.version_at_dispatch);
+                                // a buffered flush mutates this model's
+                                // parameters: earlier window plans keep
+                                // their pre-flush snapshot
+                                if registry.models[m].next_absorb_flushes() {
+                                    freeze_pending(&mut plans, m, &globals[m]);
+                                }
+                                registry.models[m].absorb(
+                                    &mut globals[m],
+                                    BufferedUpdate {
+                                        params: msg.params,
+                                        staleness: s,
+                                        train_loss: msg.train_loss,
+                                    },
+                                );
+                                // the learner is free again: route it
+                                let active = registry.active_ids();
+                                if active.is_empty() {
+                                    continue; // every model done — learner retires
+                                }
+                                let target = scheduler.pick(msg.slot, et, &registry, &active);
+                                let version = registry.models[target].version;
+                                let (plan, planned) = if target != model_of[msg.slot] {
+                                    // migrate — but batched: the membership change
+                                    // (and the two sub-fleet re-solves it implies)
+                                    // waits for the next flush boundary; meanwhile
+                                    // the learner trains its new model on a
+                                    // provisional cost-model assignment
+                                    pending_moves.insert(msg.slot, target);
+                                    let assign = self.provisional_assign(
+                                        msg.slot,
+                                        target,
+                                        &model_of,
+                                        &specs[target],
+                                    );
+                                    self.plan_round(
+                                        et,
+                                        msg.slot,
+                                        target,
+                                        assign,
+                                        &globals[target],
+                                        version,
+                                        specs[target].t_cycle,
+                                    )
+                                } else {
+                                    // the scheduler's latest word stands: an earlier
+                                    // pending move for this slot is cancelled
+                                    pending_moves.remove(&msg.slot);
+                                    self.plan_model(
+                                        et,
+                                        msg.slot,
+                                        target,
+                                        &model_of,
+                                        &mut subs[target],
+                                        &specs[target],
+                                        &globals[target],
+                                        version,
+                                    )?
+                                };
+                                plans.push(plan);
+                                if let Some(planned) = planned {
+                                    registry.models[target].record_dispatch(version);
+                                    scheduler.observe_dispatch(target, et + planned);
+                                }
+                            }
+                            Event::Redispatch { slot } => {
+                                // a failed round retries on its current model (the
+                                // slot was never freed — scheduler routing happens
+                                // on completed rounds and joins only). The alive
+                                // check gates only the budget re-route: a dead
+                                // slot must not charge the scheduler's counters,
+                                // but still flows through plan_model so a
+                                // pending dirty re-solve happens exactly when the
+                                // single-model path would perform it (byte parity).
+                                let mut m =
+                                    pending_moves.get(&slot).copied().unwrap_or(model_of[slot]);
+                                if self.slots[slot].alive
+                                    && registry.models[m].budget_exhausted()
+                                {
+                                    let active = registry.active_ids();
+                                    if active.is_empty() {
+                                        continue;
+                                    }
+                                    m = scheduler.pick(slot, et, &registry, &active);
+                                }
+                                let version = registry.models[m].version;
+                                let (plan, planned) = if m != model_of[slot] {
+                                    pending_moves.insert(slot, m);
+                                    let assign =
+                                        self.provisional_assign(slot, m, &model_of, &specs[m]);
+                                    self.plan_round(
+                                        et,
+                                        slot,
+                                        m,
+                                        assign,
+                                        &globals[m],
+                                        version,
+                                        specs[m].t_cycle,
+                                    )
+                                } else {
+                                    pending_moves.remove(&slot);
+                                    self.plan_model(
+                                        et, slot, m, &model_of, &mut subs[m], &specs[m],
+                                        &globals[m], version,
+                                    )?
+                                };
+                                plans.push(plan);
+                                if let Some(planned) = planned {
+                                    registry.models[m].record_dispatch(version);
+                                    scheduler.observe_dispatch(m, et + planned);
+                                }
+                            }
+                            _ => unreachable!("window drains only arrivals/re-dispatches"),
+                        }
                     }
+                    self.flush_plans(
+                        &mut q,
+                        plans,
+                        SharedGlobals::PerModel(&globals),
+                        &opts.train,
+                    )?;
                 }
                 Event::Join => {
                     if let Some(slot) = self.join(&mut q, now) {

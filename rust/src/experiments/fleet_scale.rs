@@ -281,6 +281,126 @@ pub fn run_real(params: &RealFleetParams) -> Result<Vec<RealFleetRow>> {
     Ok(rows)
 }
 
+// ---------------------------------------------------------------------
+// Async-real sweep: per-arrival aggregation, serial vs sharded vs
+// sharded + ε-window coalescing (the hot-path overhaul acceptance
+// comparison — async throughput must scale with cores)
+// ---------------------------------------------------------------------
+
+/// One (K, mode) point of the async-real sweep.
+#[derive(Debug, Clone)]
+pub struct AsyncRealRow {
+    pub k: usize,
+    /// `serial` (1 thread, per-event), `sharded` (N threads, per-event
+    /// dispatch — only the t = 0 fan-out and eval parallelize) or
+    /// `coalesce` (N threads + ε-window arrival batching).
+    pub mode: &'static str,
+    pub threads: usize,
+    /// Completed train rounds (server arrivals).
+    pub steps: usize,
+    pub wall_ms: f64,
+    /// Train rounds per wall-clock second — the headline metric.
+    pub steps_per_s: f64,
+    /// [`record_digest`] of the record stream. Equal across thread
+    /// counts for a fixed dispatch mode; `coalesce` at ε = 0 would
+    /// also equal the per-event modes byte-for-byte.
+    pub digest: String,
+}
+
+/// One async-policy engine run at (K, threads, coalescing mode);
+/// `epsilon = None` forces the per-event oracle path. Returns the
+/// records plus the arrival count.
+pub fn async_engine_run(
+    params: &RealFleetParams,
+    k: usize,
+    threads: usize,
+    epsilon: Option<f64>,
+    runtime: &Runtime,
+    ds: &SynthDataset,
+) -> Result<(Vec<CycleRecord>, usize)> {
+    let scenario = params
+        .base
+        .clone()
+        .with_learners(k)
+        .with_total_samples(params.samples_per_learner * k as u64)
+        .with_threads(threads)
+        .build();
+    let mut engine = EventEngine::new(
+        scenario,
+        params.scheme,
+        crate::aggregation::AggregationRule::FedAvg,
+        ExecMode::Real { runtime, train: ds.train.clone(), test: ds.test.clone() },
+    )?;
+    engine = match epsilon {
+        Some(eps) => engine.with_epsilon_window(eps),
+        None => engine.with_per_event_dispatch(),
+    };
+    let opts = EngineOptions {
+        train: TrainOptions { cycles: params.cycles, lr: params.lr, ..Default::default() },
+        policy: crate::coordinator::EnginePolicy::Async(
+            crate::aggregation::AsyncAggregator::default(),
+        ),
+    };
+    let records = engine.run(&opts)?;
+    Ok((records, engine.stats.arrivals))
+}
+
+/// Run the async-real sweep: serial vs sharded (per-event) vs sharded
+/// + ε-window coalescing, at the widest configured thread count.
+pub fn run_async_real(params: &RealFleetParams, epsilon: f64) -> Result<Vec<AsyncRealRow>> {
+    let runtime = Runtime::native(&params.dims, params.train_batch, params.eval_batch);
+    let wide = *params.threads.iter().max().unwrap_or(&1);
+    let mut rows = Vec::new();
+    for &k in &params.ks {
+        let ds = real_dataset(params, k);
+        for (mode, threads, eps) in [
+            ("serial", 1usize, None),
+            ("sharded", wide, None),
+            ("coalesce", wide, Some(epsilon)),
+        ] {
+            let t0 = std::time::Instant::now();
+            let (records, arrivals) = async_engine_run(params, k, threads, eps, &runtime, &ds)?;
+            let wall = t0.elapsed().as_secs_f64();
+            rows.push(AsyncRealRow {
+                k,
+                mode,
+                threads,
+                steps: arrivals,
+                wall_ms: wall * 1e3,
+                steps_per_s: arrivals as f64 / wall.max(1e-9),
+                digest: record_digest(&records),
+            });
+        }
+    }
+    Ok(rows)
+}
+
+/// Render the async-real sweep with per-K speedup vs the serial row.
+pub fn async_real_table(rows: &[AsyncRealRow]) -> Table {
+    let mut t = Table::new(&[
+        "K", "mode", "threads", "steps", "wall_ms", "steps/s", "speedup",
+    ]);
+    for r in rows {
+        let speedup = rows
+            .iter()
+            .find(|b| b.k == r.k && b.mode == "serial")
+            .map(|b| r.steps_per_s / b.steps_per_s.max(1e-12));
+        t.row(&[
+            r.k.to_string(),
+            r.mode.to_string(),
+            r.threads.to_string(),
+            r.steps.to_string(),
+            fmt_f(r.wall_ms, 1),
+            fmt_f(r.steps_per_s, 1),
+            match speedup {
+                Some(s) => fmt_f(s, 2),
+                None => "-".to_string(),
+            },
+        ]);
+    }
+    t
+}
+
 /// Render the real-numerics sweep, with per-K speedup vs the
 /// single-thread row.
 pub fn real_table(rows: &[RealFleetRow]) -> Table {
@@ -357,6 +477,34 @@ mod tests {
             assert!(r.train_loss.is_finite(), "{r:?}");
         }
         assert_eq!(real_table(&rows).num_rows(), 2);
+    }
+
+    #[test]
+    fn async_real_sweep_reports_three_modes_and_stays_deterministic() {
+        let params = RealFleetParams {
+            ks: vec![10],
+            cycles: 2,
+            threads: vec![1, 3],
+            samples_per_learner: 30,
+            test_samples: 64,
+            ..Default::default()
+        };
+        let rows = run_async_real(&params, 1.0).unwrap();
+        assert_eq!(rows.len(), 3);
+        assert_eq!(
+            rows.iter().map(|r| r.mode).collect::<Vec<_>>(),
+            vec!["serial", "sharded", "coalesce"]
+        );
+        // per-event dispatch is thread-invariant: sharded == serial
+        assert_eq!(rows[0].digest, rows[1].digest, "sharding changed the stream");
+        for r in &rows {
+            assert!(r.steps > 0, "{r:?}");
+            assert!(r.steps_per_s > 0.0, "{r:?}");
+        }
+        assert_eq!(async_real_table(&rows).num_rows(), 3);
+        // and the coalescing run itself is reproducible
+        let again = run_async_real(&params, 1.0).unwrap();
+        assert_eq!(rows[2].digest, again[2].digest);
     }
 
     #[test]

@@ -86,14 +86,38 @@
 //!
 //! `ExecMode::Real` fleets scale past a few hundred learners through
 //! [`runtime::pool::ThreadPool`] (`ScenarioConfig.num_threads`, CLI
-//! `--threads N`, 0 = all cores): learner train steps that are ready at
-//! the same event timestamp — a barrier cycle, the t = 0 async fleet
-//! dispatch, each model's initial sub-fleet — fan out across workers,
-//! and evaluation shards across eval minibatches. All RNG draws stay in
-//! the caller and results merge in stable slot order, so **any thread
-//! count is bit-identical to the serial run** (asserted end-to-end in
+//! `--threads N`, 0 = all cores) — a **persistent** worker pool:
+//! workers spawn once per engine run and park between batches, while
+//! [`runtime::pool::ThreadPool::scoped_batch`] still lets every batch
+//! borrow the engine world without `Arc`. Learner train steps that are
+//! ready together — a barrier cycle, the t = 0 async fleet dispatch,
+//! each model's initial sub-fleet, and (new) every **ε-window of
+//! coalesced async arrivals** — fan out across workers, and evaluation
+//! shards across eval minibatches. All RNG draws stay in the caller and
+//! results merge in stable slot order, so **any thread count is
+//! bit-identical to the serial run** (asserted end-to-end in
 //! `rust/tests/pool_determinism.rs`; serial-vs-sharded wall time in
 //! `rust/benches/real_fleet.rs` and `asyncmel fleet --real`).
+//!
+//! **ε-window arrival coalescing** (`ScenarioConfig.epsilon_window`,
+//! CLI `--epsilon-window S`): when an async upload arrival pops, the
+//! engine drains every already-queued arrival/re-dispatch within `ε`
+//! virtual seconds, processes their aggregation serially in
+//! `(time, seq)` order, and fans the freed learners' train steps out in
+//! one pooled batch — async throughput finally scales with cores
+//! instead of training one learner per event. Each coalesced dispatch
+//! trains from a snapshot of the model *as of its own serial turn*, so
+//! **ε = 0 (the default, merging only simultaneous events) is
+//! byte-identical to per-event dispatch** — the differential oracle in
+//! `rust/tests/coalescing.rs` — and any ε is bit-identical across
+//! thread counts. The multi-model path coalesces the same way.
+//!
+//! The native backend itself runs a zero-alloc hot path: a reusable
+//! [`runtime::native::Scratch`] (borrowed input batch, recycled
+//! activation/gradient buffers, in-place SGD), register-tiled forward
+//! matmuls and a cached transposed-weight backward — all bit-identical
+//! to the original scalar implementation (reference-differential tests
+//! in `runtime::native`; `rust/benches/native_hotpath.rs` times it).
 //!
 //! ## In-tree infrastructure substrates
 //!

@@ -41,6 +41,10 @@ const USAGE: &str = "usage: asyncmel <info|solve|fig2|fig3|train|fleet|multi|abl
   train    --k N --t SECS --scheme S --aggregation A --cycles N --lr F --samples D
            --threads N               worker threads for real-numerics learner steps
                                      (0 = all cores; any value is bit-identical)
+           --epsilon-window S        event engine: coalesce async arrivals within S
+                                     virtual seconds and fan their train steps out
+                                     together (0 = simultaneous-only, the default;
+                                     byte-identical to per-event dispatch)
            --engine lockstep|event   coordinator engine (default: config)
            --async [--alpha F]       event engine: staleness-weighted async aggregation
            --churn-join R --churn-life S   event engine: joins/s + mean lifetime (s)
@@ -57,8 +61,10 @@ const USAGE: &str = "usage: asyncmel <info|solve|fig2|fig3|train|fleet|multi|abl
   fleet    --ks 10,100,1000,5000 --cycles N --scheme S
            --churn-join R --churn-life S --csv PATH
                                      event-engine scaling sweep (phantom numerics)
-           --real [--threads N]      real-numerics sweep instead (native MLP through
-                                     the sharded executor; default ks 100,500,1000)
+           --real [--threads N] [--epsilon-window S]
+                                     real-numerics sweep instead (native MLP through
+                                     the sharded executor; default ks 100,500,1000),
+                                     plus an async serial/sharded/coalescing sweep
   multi    --ks 100,1000 --ms 1,2,4,8 --buffer B --scheduler S --budget N
            --cycles N --scheme S --churn-join R --churn-life S --csv PATH
            --hetero --adaptive-buffer BMAX [--buffer-target S --buffer-alpha A]
@@ -234,8 +240,20 @@ fn cmd_fig3(base: ScenarioConfig, args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `--epsilon-window S` → scenario override, validated like the config
+/// parser (finite, >= 0).
+fn epsilon_from_args(base: &mut ScenarioConfig, args: &Args) -> Result<()> {
+    let eps: f64 = args.get_or("epsilon-window", base.epsilon_window)?;
+    if !(eps.is_finite() && eps >= 0.0) {
+        bail!("--epsilon-window must be finite and >= 0 (seconds), got {eps}");
+    }
+    base.epsilon_window = eps;
+    Ok(())
+}
+
 fn cmd_train(mut base: ScenarioConfig, args: &Args) -> Result<()> {
     base.num_threads = args.get_or("threads", base.num_threads)?;
+    epsilon_from_args(&mut base, args)?;
     let k: usize = args.get_or("k", 10)?;
     let t: f64 = args.get_or("t", 15.0)?;
     let scheme: AllocatorKind = args.get_or("scheme", AllocatorKind::Relaxed)?;
@@ -489,6 +507,7 @@ fn cmd_multi(base: ScenarioConfig, args: &Args) -> Result<()> {
 
 fn cmd_fleet(mut base: ScenarioConfig, args: &Args) -> Result<()> {
     base.num_threads = args.get_or("threads", base.num_threads)?;
+    epsilon_from_args(&mut base, args)?;
     if args.has("real") {
         return cmd_fleet_real(base, args);
     }
@@ -543,6 +562,20 @@ fn cmd_fleet_real(base: ScenarioConfig, args: &Args) -> Result<()> {
         table.save_csv(path)?;
         println!("csv -> {path}");
     }
+    // async-real comparison: per-arrival aggregation at serial vs
+    // sharded (per-event) vs sharded + ε-window coalescing. An explicit
+    // --epsilon-window always wins (including 0 = simultaneous-only);
+    // otherwise ε defaults to 1 s of virtual time for the sweep — at
+    // ε = 0 the window only merges simultaneous arrivals, which a
+    // free-running stream essentially never produces.
+    let eps = if args.get("epsilon-window").is_some() || params.base.epsilon_window > 0.0 {
+        params.base.epsilon_window
+    } else {
+        1.0
+    };
+    println!("async-real sweep (steps/s; coalesce ε = {eps}s):");
+    let async_rows = fleet_scale::run_async_real(&params, eps)?;
+    println!("{}", fleet_scale::async_real_table(&async_rows).render());
     Ok(())
 }
 

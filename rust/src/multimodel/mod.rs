@@ -475,6 +475,14 @@ impl ModelInstance {
             .map(|&v| self.version.saturating_sub(v))
     }
 
+    /// Will the next [`Self::absorb`] call flush (and so mutate the
+    /// global parameters)? The engine's ε-window coalescing uses this
+    /// to freeze pending dispatch snapshots only when the model is
+    /// actually about to change.
+    pub fn next_absorb_flushes(&self) -> bool {
+        self.buffer.len() + 1 >= self.buffer_size
+    }
+
     /// Ingest an arrived client update: telemetry, buffer, and — once
     /// `B` updates are parked — the buffered server flush (each update
     /// mixed with its *own* arrival-time staleness weight, one version

@@ -129,6 +129,11 @@ impl Runtime {
 
     /// `tau` local epochs of minibatch SGD over a shard; returns the
     /// final local parameters and the last epoch's mean loss.
+    ///
+    /// On the native backend this is the zero-alloc hot loop: one
+    /// parameter buffer updated in place and one [`native::Scratch`]
+    /// recycled across every step of every epoch (bit-identical to the
+    /// step-by-step path — see `runtime::native`).
     pub fn train_epochs(
         &self,
         params: &ParamSet,
@@ -138,13 +143,23 @@ impl Runtime {
         lr: f32,
     ) -> Result<(ParamSet, f32)> {
         let mut local = params.clone();
+        let mut scratch = native::Scratch::new();
         let mut last_loss = f32::NAN;
         for _epoch in 0..tau {
             let mut loss_sum = 0.0f64;
             let mut batches = 0usize;
             for batch in Minibatches::new(data, shard, self.manifest.train_batch) {
-                let (next, loss) = self.train_step(&local, &batch, lr)?;
-                local = next;
+                let loss = match &self.backend {
+                    Backend::Native(exec) => {
+                        exec.train_step_into(&mut scratch, &mut local, &batch, lr)
+                    }
+                    #[cfg(feature = "pjrt")]
+                    Backend::Pjrt(_) => {
+                        let (next, loss) = self.train_step(&local, &batch, lr)?;
+                        local = next;
+                        loss
+                    }
+                };
                 loss_sum += loss as f64;
                 batches += 1;
             }
@@ -164,14 +179,20 @@ impl Runtime {
         }
     }
 
-    /// Streamed evaluation over a whole dataset.
+    /// Streamed evaluation over a whole dataset. On the native backend
+    /// one [`native::Scratch`] is recycled across all eval batches.
     pub fn evaluate(&self, params: &ParamSet, data: &Dataset) -> Result<EvalResult> {
         let idx: Vec<u32> = (0..data.len() as u32).collect();
         let mut correct = 0.0;
         let mut loss = 0.0;
         let mut n = 0.0;
+        let mut scratch = native::Scratch::new();
         for batch in Minibatches::new(data, &idx, self.manifest.eval_batch) {
-            let (c, l, m) = self.eval_batch_raw(params, &batch)?;
+            let (c, l, m) = match &self.backend {
+                Backend::Native(exec) => exec.eval_batch_with(&mut scratch, params, &batch),
+                #[cfg(feature = "pjrt")]
+                Backend::Pjrt(_) => self.eval_batch_raw(params, &batch)?,
+            };
             correct += c;
             loss += l;
             n += m;

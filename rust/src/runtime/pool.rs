@@ -15,25 +15,197 @@
 //! * results are returned as `Vec<T>` in job order, regardless of which
 //!   worker finished first.
 //!
-//! The offline registry has no `rayon`, so the pool is built on
-//! `std::thread::scope` + `mpsc` channels: workers claim contiguous
-//! chunks of the job range from a shared atomic cursor (cheap dynamic
-//! load balancing — learner costs are heterogeneous by construction)
-//! and stream `(index, result)` pairs back to the caller, which slots
-//! them into place. Threads live only for the duration of one batch;
-//! at the O(ms) cost of a learner train step the spawn overhead is
-//! noise, and scoped threads let jobs borrow the engine's world
-//! directly (no `Arc`, no `'static` bounds).
+//! The offline registry has no `rayon`, so the pool is hand-rolled:
+//! **persistent** workers are spawned once (lazily, on the first
+//! fan-out) and parked on a condvar between batches. Publishing a batch
+//! bumps a generation counter and unparks everyone; workers then claim
+//! contiguous chunks of the job range from a shared atomic cursor
+//! (cheap dynamic load balancing — learner costs are heterogeneous by
+//! construction) and write `(index, result)` pairs straight into the
+//! caller's output slots. With the ε-window arrival coalescing and the
+//! tiled native backend, per-batch work dropped to the point where the
+//! old spawn-per-batch `std::thread::scope` design was measurable
+//! overhead (ROADMAP "long-lived pool + work queue") — the persistent
+//! pool amortizes the spawn to once per engine run.
+//!
+//! Callers still borrow the engine world without `Arc` or `'static`
+//! bounds: [`ThreadPool::scoped_batch`] type-erases the batch closure
+//! behind a raw pointer and blocks until every worker has finished it,
+//! so the borrow provably outlives all uses (the same guarantee
+//! `std::thread::scope` gave, now without the per-batch spawn). Clones
+//! of a `ThreadPool` share one worker set — the multi-model engine
+//! runs `M` models over a single pool.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::mpsc;
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+use std::thread::JoinHandle;
 
 use anyhow::Result;
 
-/// A deterministic fork-join pool over `num_threads` workers.
-#[derive(Debug, Clone)]
+/// Type-erased pointer to the batch closure currently published to the
+/// workers. Validity is guaranteed by the completion barrier in
+/// [`ThreadPool::scoped_batch`]: the caller cannot return (and so the
+/// borrow cannot end) until every worker has finished running it.
+struct Job(*const (dyn Fn() + Sync));
+
+// SAFETY: the pointee is `Sync` (shared calls from many threads are
+// fine) and `scoped_batch` keeps it alive for the whole batch.
+unsafe impl Send for Job {}
+
+/// Erase the borrow lifetime of a batch closure so it can sit in the
+/// shared worker state.
+///
+/// # Safety
+/// The caller must keep the closure alive (and its captures borrowed)
+/// until every worker has finished running it — `scoped_batch`'s
+/// completion barrier provides exactly that.
+unsafe fn erase_job<'a>(f: &'a (dyn Fn() + Sync + 'a)) -> *const (dyn Fn() + Sync + 'static) {
+    std::mem::transmute(f)
+}
+
+struct State {
+    /// The published batch closure (`None` between batches).
+    job: Option<Job>,
+    /// Batch generation counter: bumped once per published batch so
+    /// every worker runs each batch exactly once.
+    epoch: u64,
+    /// Workers still running the current batch.
+    active: usize,
+    /// A worker panicked inside the current batch.
+    panicked: bool,
+    shutdown: bool,
+}
+
+struct Shared {
+    state: Mutex<State>,
+    /// Workers park here between batches.
+    work: Condvar,
+    /// The publishing caller parks here until `active` drains to 0.
+    done: Condvar,
+}
+
+fn worker_loop(shared: &Shared) {
+    let mut seen = 0u64;
+    loop {
+        let job = {
+            let mut st = shared.state.lock().unwrap();
+            loop {
+                if st.shutdown {
+                    return;
+                }
+                if st.epoch != seen {
+                    seen = st.epoch;
+                    break st.job.as_ref().expect("published batch carries a job").0;
+                }
+                st = shared.work.wait(st).unwrap();
+            }
+        };
+        // SAFETY: `scoped_batch` blocks until `active` reaches 0, so
+        // the closure behind the pointer outlives this call.
+        let f = unsafe { &*job };
+        let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(f));
+        let mut st = shared.state.lock().unwrap();
+        if outcome.is_err() {
+            st.panicked = true;
+        }
+        st.active -= 1;
+        if st.active == 0 {
+            shared.done.notify_one();
+        }
+    }
+}
+
+/// The long-lived background workers (`threads - 1` of them — the
+/// caller itself is the last participant of every batch).
+struct Workers {
+    shared: Arc<Shared>,
+    handles: Vec<JoinHandle<()>>,
+}
+
+impl Workers {
+    fn spawn(n: usize) -> Self {
+        let shared = Arc::new(Shared {
+            state: Mutex::new(State {
+                job: None,
+                epoch: 0,
+                active: 0,
+                panicked: false,
+                shutdown: false,
+            }),
+            work: Condvar::new(),
+            done: Condvar::new(),
+        });
+        let handles = (0..n)
+            .map(|_| {
+                let sh = Arc::clone(&shared);
+                std::thread::Builder::new()
+                    .name("asyncmel-pool".into())
+                    .spawn(move || worker_loop(&sh))
+                    .expect("spawning pool worker")
+            })
+            .collect();
+        Self { shared, handles }
+    }
+}
+
+impl Drop for Workers {
+    fn drop(&mut self) {
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.shutdown = true;
+        }
+        self.shared.work.notify_all();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Waits out the in-flight batch even if the caller's own share of the
+/// work panics — the workers must not outlive the borrow they run on.
+struct BatchGuard<'a>(&'a Shared);
+
+impl Drop for BatchGuard<'_> {
+    fn drop(&mut self) {
+        let mut st = self.0.state.lock().unwrap();
+        while st.active > 0 {
+            st = self.0.done.wait(st).unwrap();
+        }
+        st.job = None;
+    }
+}
+
+/// Writes batch results into disjoint output slots from many threads.
+/// Each index is claimed by exactly one worker (atomic cursor), and the
+/// caller only reads after the completion barrier.
+struct SlotWriter<T>(*mut Option<T>);
+
+// SAFETY: workers write disjoint indices; the mutex hand-off in
+// `scoped_batch` sequences those writes before the caller's reads.
+unsafe impl<T: Send> Send for SlotWriter<T> {}
+unsafe impl<T: Send> Sync for SlotWriter<T> {}
+
+/// A deterministic fork-join pool over `num_threads` persistent workers.
 pub struct ThreadPool {
     threads: usize,
+    /// Lazily-spawned shared worker set (`threads - 1` background
+    /// threads); clones share it, serial pools never populate it.
+    workers: Arc<OnceLock<Workers>>,
+}
+
+impl Clone for ThreadPool {
+    fn clone(&self) -> Self {
+        Self { threads: self.threads, workers: Arc::clone(&self.workers) }
+    }
+}
+
+impl std::fmt::Debug for ThreadPool {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ThreadPool")
+            .field("threads", &self.threads)
+            .field("spawned", &self.workers.get().is_some())
+            .finish()
+    }
 }
 
 impl Default for ThreadPool {
@@ -45,7 +217,8 @@ impl Default for ThreadPool {
 impl ThreadPool {
     /// Build a pool with `num_threads` workers; `0` means "use the
     /// machine's available parallelism" (the `ScenarioConfig.num_threads
-    /// = 0` convention).
+    /// = 0` convention). Workers spawn lazily on the first fan-out and
+    /// persist until the last clone of the pool drops.
     pub fn new(num_threads: usize) -> Self {
         let threads = if num_threads == 0 {
             std::thread::available_parallelism()
@@ -54,17 +227,58 @@ impl ThreadPool {
         } else {
             num_threads
         };
-        Self { threads }
+        Self { threads, workers: Arc::new(OnceLock::new()) }
     }
 
     /// A single-worker pool: every `map` runs inline on the caller.
     pub fn serial() -> Self {
-        Self { threads: 1 }
+        Self { threads: 1, workers: Arc::new(OnceLock::new()) }
     }
 
     /// Worker count this pool fans out to.
     pub fn threads(&self) -> usize {
         self.threads
+    }
+
+    /// Run `f` concurrently on every worker **and** the caller, then
+    /// return once all of them have finished. `f` typically contains a
+    /// claim loop over a shared atomic cursor (see [`Self::map`]); it
+    /// may borrow the caller's stack freely — the completion barrier
+    /// guarantees the borrow outlives every use, which is what lets
+    /// engine code hand the pool `&`-views of its world without `Arc`.
+    ///
+    /// With one thread this is a plain inline call. Re-entrant use from
+    /// inside a batch of the *same* pool is a bug and panics.
+    pub fn scoped_batch<F: Fn() + Sync>(&self, f: F) {
+        if self.threads <= 1 {
+            f();
+            return;
+        }
+        let workers = self
+            .workers
+            .get_or_init(|| Workers::spawn(self.threads - 1));
+        let shared = &*workers.shared;
+        {
+            let mut st = shared.state.lock().unwrap();
+            assert!(
+                st.active == 0 && st.job.is_none(),
+                "nested scoped_batch on one pool is not supported"
+            );
+            // SAFETY: the barrier below keeps the borrow alive until
+            // every worker is done with it.
+            st.job = Some(Job(unsafe { erase_job(&f) }));
+            st.epoch = st.epoch.wrapping_add(1);
+            st.active = workers.handles.len();
+            st.panicked = false;
+        }
+        shared.work.notify_all();
+        let guard = BatchGuard(shared);
+        f(); // the caller is the last participant
+        drop(guard); // barrier: wait for every worker
+        let panicked = shared.state.lock().unwrap().panicked;
+        if panicked {
+            panic!("pool worker panicked during a batch");
+        }
     }
 
     /// Evaluate `f(0..n)` and return the results in index order.
@@ -81,35 +295,28 @@ impl ThreadPool {
             return (0..n).map(f).collect();
         }
         let workers = self.threads.min(n);
-        // Chunked claiming: big enough to amortize the atomic + channel
-        // traffic, small enough that heterogeneous job costs still
-        // balance (~4 claims per worker).
+        // Chunked claiming: big enough to amortize the atomic traffic,
+        // small enough that heterogeneous job costs still balance
+        // (~4 claims per worker).
         let chunk = (n / (workers * 4)).max(1);
         let cursor = AtomicUsize::new(0);
         let mut out: Vec<Option<T>> = Vec::with_capacity(n);
         out.resize_with(n, || None);
-        let (tx, rx) = mpsc::channel::<(usize, T)>();
-        std::thread::scope(|scope| {
-            for _ in 0..workers {
-                let tx = tx.clone();
-                let cursor = &cursor;
-                let f = &f;
-                scope.spawn(move || loop {
-                    let start = cursor.fetch_add(chunk, Ordering::Relaxed);
-                    if start >= n {
-                        break;
-                    }
-                    let end = (start + chunk).min(n);
-                    for i in start..end {
-                        if tx.send((i, f(i))).is_err() {
-                            return; // receiver gone — batch abandoned
-                        }
-                    }
-                });
-            }
-            drop(tx); // the receive loop ends when every worker is done
-            for (i, v) in rx {
-                out[i] = Some(v);
+        let slots = SlotWriter(out.as_mut_ptr());
+        self.scoped_batch(|| {
+            let slots = &slots;
+            loop {
+                let start = cursor.fetch_add(chunk, Ordering::Relaxed);
+                if start >= n {
+                    break;
+                }
+                let end = (start + chunk).min(n);
+                for i in start..end {
+                    // SAFETY: each index is claimed exactly once via
+                    // the atomic cursor, so writes are disjoint; the
+                    // caller reads only after the completion barrier.
+                    unsafe { slots.0.add(i).write(Some(f(i))) };
+                }
             }
         });
         out.into_iter()
@@ -198,5 +405,65 @@ mod tests {
         for (i, v) in out.iter().enumerate() {
             assert_eq!(*v, i as f64);
         }
+    }
+
+    #[test]
+    fn workers_persist_across_many_interleaved_batches() {
+        // the persistent pool must survive arbitrary batch-size
+        // interleavings — including the empty and singleton batches
+        // that never touch the workers — without respawning
+        let pool = ThreadPool::new(4);
+        for round in 0..5usize {
+            for n in [0usize, 1, 2, 3, 17, 1, 0, 64, 257, 5] {
+                let out = pool.map(n, |i| i * 3 + round);
+                let expect: Vec<usize> = (0..n).map(|i| i * 3 + round).collect();
+                assert_eq!(out, expect, "round {round}, n {n}");
+            }
+        }
+        // workers were actually spawned (some batch exceeded 1 job)
+        assert!(pool.workers.get().is_some());
+    }
+
+    #[test]
+    fn clones_share_one_worker_set() {
+        let pool = ThreadPool::new(3);
+        let clone = pool.clone();
+        let a = clone.map(40, |i| i + 1);
+        assert_eq!(a, (1..41).collect::<Vec<_>>());
+        // the original now sees the workers the clone spawned
+        assert!(pool.workers.get().is_some());
+        let b = pool.map(40, |i| i + 2);
+        assert_eq!(b, (2..42).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn scoped_batch_runs_on_all_participants_and_borrows() {
+        let pool = ThreadPool::new(4);
+        let counter = AtomicUsize::new(0);
+        let data: Vec<usize> = (0..100).collect();
+        pool.scoped_batch(|| {
+            // every participant (3 workers + caller) runs this once
+            counter.fetch_add(data.len(), Ordering::Relaxed);
+        });
+        assert_eq!(counter.load(Ordering::Relaxed), 4 * 100);
+    }
+
+    #[test]
+    fn worker_panic_propagates_to_the_caller() {
+        let pool = ThreadPool::new(4);
+        let hook = std::panic::take_hook();
+        std::panic::set_hook(Box::new(|_| {})); // silence expected panics
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            pool.map(64, |i| {
+                if i == 33 {
+                    panic!("boom");
+                }
+                i
+            })
+        }));
+        std::panic::set_hook(hook);
+        assert!(result.is_err(), "a panicking job must fail the batch");
+        // and the pool is still usable afterwards
+        assert_eq!(pool.map(8, |i| i), (0..8).collect::<Vec<_>>());
     }
 }

@@ -80,6 +80,13 @@ impl<T> EventQueue<T> {
         self.heap.peek().map(|e| e.time)
     }
 
+    /// The next event — `(time, payload)` — without removing it. The
+    /// event engine's ε-window coalescing peeks to decide whether the
+    /// head of the queue joins the current dispatch batch.
+    pub fn peek(&self) -> Option<(f64, &T)> {
+        self.heap.peek().map(|e| (e.time, &e.payload))
+    }
+
     pub fn len(&self) -> usize {
         self.heap.len()
     }
@@ -167,6 +174,7 @@ mod tests {
         assert_eq!(q.len(), 2);
         assert_eq!(q.pushed(), 2);
         assert_eq!(q.peek_time(), Some(0.0));
+        assert_eq!(q.peek(), Some((0.0, &())));
         q.pop();
         assert_eq!(q.len(), 1);
         assert_eq!(q.pushed(), 2);

@@ -1,0 +1,220 @@
+//! ε-window arrival coalescing — differential tests against the
+//! per-event dispatch oracle.
+//!
+//! The hot-path overhaul batches async upload arrivals that land within
+//! an ε-window and fans their train steps out across the thread pool.
+//! The contract (see `coordinator::EventEngine::async_window`):
+//!
+//! * **ε = 0 is byte-identical to the pre-coalescing per-event path** —
+//!   full `CycleRecord` stream *and* final parameters — because ε = 0
+//!   only merges simultaneous events and every coalesced dispatch
+//!   trains from a snapshot of the model as of its own serial turn;
+//! * **any ε is bit-identical across thread counts** (exercised here
+//!   and property-tested in `pool_determinism.rs`);
+//! * the multi-model path (`run_multi`) holds the same ε = 0 guarantee
+//!   through buffered aggregation, schedulers and migrations.
+
+use asyncmel::aggregation::{AggregationRule, AsyncAggregator, ParamSet};
+use asyncmel::allocation::AllocatorKind;
+use asyncmel::config::{ChurnConfig, Scenario, ScenarioConfig};
+use asyncmel::coordinator::{
+    record_digest, EngineOptions, EnginePolicy, EventEngine, ExecMode, FaultModel, TrainOptions,
+};
+use asyncmel::data::{synth, SynthConfig, SynthDataset};
+use asyncmel::multimodel::{report_digest, MultiModelConfig, MultiModelOptions, SchedulerKind};
+use asyncmel::runtime::Runtime;
+
+const DIMS: [usize; 3] = [36, 16, 4];
+const SAMPLES: usize = 360;
+const SEED: u64 = 0xC0A1_E5CE;
+
+fn tiny_world(k: usize, churn: ChurnConfig, seed: u64) -> (Scenario, SynthDataset) {
+    let mut cfg = ScenarioConfig::paper_default()
+        .with_learners(k)
+        .with_cycle(15.0)
+        .with_total_samples(SAMPLES as u64)
+        .with_churn(churn)
+        .with_seed(seed);
+    cfg.task.features = DIMS[0] as u64;
+    cfg.task.compute_cycles_per_sample = 2.0e7;
+    let ds = synth::generate(&SynthConfig {
+        side: 6,
+        classes: 4,
+        train: SAMPLES,
+        test: 96,
+        noise_std: 0.5,
+        ..SynthConfig::default()
+    });
+    (cfg.build(), ds)
+}
+
+fn opts() -> TrainOptions {
+    TrainOptions { cycles: 3, lr: 0.1, eval_every: 1, reallocate_each_cycle: false }
+}
+
+/// One async real-numerics run; `epsilon = None` selects the per-event
+/// oracle path.
+fn run_async(
+    epsilon: Option<f64>,
+    threads: usize,
+    churn: ChurnConfig,
+    faults: Option<FaultModel>,
+) -> (String, Option<ParamSet>) {
+    let rt = Runtime::native(&DIMS, 32, 48);
+    let (mut scenario, ds) = tiny_world(6, churn, SEED);
+    scenario.config.num_threads = threads;
+    let mut engine = EventEngine::new(
+        scenario,
+        AllocatorKind::Eta,
+        AggregationRule::FedAvg,
+        ExecMode::Real { runtime: &rt, train: ds.train, test: ds.test },
+    )
+    .unwrap();
+    engine = match epsilon {
+        Some(e) => engine.with_epsilon_window(e),
+        None => engine.with_per_event_dispatch(),
+    };
+    if let Some(f) = faults {
+        engine = engine.with_faults(f);
+    }
+    let (records, params) = engine
+        .run_with_params(&EngineOptions {
+            train: opts(),
+            policy: EnginePolicy::Async(AsyncAggregator::default()),
+        })
+        .unwrap();
+    (record_digest(&records), params)
+}
+
+#[test]
+fn epsilon_zero_matches_the_per_event_oracle_byte_for_byte() {
+    let churn = ChurnConfig::new(0.1, 90.0);
+    let (d_oracle, p_oracle) = run_async(None, 1, churn, None);
+    let (d_zero, p_zero) = run_async(Some(0.0), 1, churn, None);
+    assert_eq!(d_oracle, d_zero, "ε=0 record stream diverged from per-event dispatch");
+    assert_eq!(p_oracle, p_zero, "ε=0 final params diverged from per-event dispatch");
+    // and with the pool fanned out
+    let (d_zero8, p_zero8) = run_async(Some(0.0), 8, churn, None);
+    assert_eq!(d_oracle, d_zero8);
+    assert_eq!(p_oracle, p_zero8);
+}
+
+#[test]
+fn epsilon_zero_matches_the_oracle_under_faults() {
+    // dropouts/stragglers draw from the shared RNG stream inside the
+    // dispatch serial phase — the coalesced planning must consume it in
+    // exactly the per-event order
+    let faults = FaultModel::new(0.25, 0.2, 1.5);
+    let (d_oracle, p_oracle) = run_async(None, 1, ChurnConfig::disabled(), Some(faults));
+    let (d_zero, p_zero) = run_async(Some(0.0), 8, ChurnConfig::disabled(), Some(faults));
+    assert_eq!(d_oracle, d_zero);
+    assert_eq!(p_oracle, p_zero);
+}
+
+#[test]
+fn epsilon_zero_matches_the_oracle_in_phantom_mode_at_scale() {
+    // bookkeeping-only path, bigger fleet with churn: the event/arrival
+    // counters and the record stream must match the per-event oracle
+    let run = |epsilon: Option<f64>| {
+        let scenario = ScenarioConfig::paper_default()
+            .with_learners(40)
+            .with_churn(ChurnConfig::new(0.3, 90.0))
+            .build();
+        let mut engine = EventEngine::new(
+            scenario,
+            AllocatorKind::Eta,
+            AggregationRule::FedAvg,
+            ExecMode::Phantom,
+        )
+        .unwrap();
+        engine = match epsilon {
+            Some(e) => engine.with_epsilon_window(e),
+            None => engine.with_per_event_dispatch(),
+        };
+        let records = engine
+            .run(&EngineOptions {
+                train: TrainOptions { cycles: 6, ..Default::default() },
+                policy: EnginePolicy::Async(AsyncAggregator::default()),
+            })
+            .unwrap();
+        (record_digest(&records), engine.stats)
+    };
+    let (d_oracle, s_oracle) = run(None);
+    let (d_zero, s_zero) = run(Some(0.0));
+    assert_eq!(d_oracle, d_zero);
+    assert_eq!(s_oracle, s_zero, "engine counters diverged at ε=0");
+}
+
+#[test]
+fn nonzero_epsilon_is_deterministic_and_thread_invariant() {
+    let churn = ChurnConfig::new(0.1, 90.0);
+    for eps in [0.5f64, 2.0, 10.0] {
+        let (d1, p1) = run_async(Some(eps), 1, churn, None);
+        let (d1b, p1b) = run_async(Some(eps), 1, churn, None);
+        assert_eq!(d1, d1b, "ε={eps} run not reproducible");
+        assert_eq!(p1, p1b);
+        for threads in [2usize, 8] {
+            let (dn, pn) = run_async(Some(eps), threads, churn, None);
+            assert_eq!(d1, dn, "ε={eps} diverged at {threads} threads");
+            assert_eq!(p1, pn, "ε={eps} params diverged at {threads} threads");
+        }
+    }
+}
+
+/// Multi-model run with the given dispatch mode.
+fn run_multi(
+    epsilon: Option<f64>,
+    threads: usize,
+    scheduler: SchedulerKind,
+    buffer: usize,
+) -> String {
+    let rt = Runtime::native(&DIMS, 32, 48);
+    let (mut scenario, ds) = tiny_world(6, ChurnConfig::new(0.1, 90.0), SEED);
+    scenario.config.num_threads = threads;
+    let mut engine = EventEngine::new(
+        scenario,
+        AllocatorKind::Eta,
+        AggregationRule::FedAvg,
+        ExecMode::Real { runtime: &rt, train: ds.train, test: ds.test },
+    )
+    .unwrap();
+    engine = match epsilon {
+        Some(e) => engine.with_epsilon_window(e),
+        None => engine.with_per_event_dispatch(),
+    };
+    let mm_opts = MultiModelOptions {
+        train: opts(),
+        multi: MultiModelConfig::new(2, buffer, scheduler),
+        ..Default::default()
+    };
+    report_digest(&engine.run_multi(&mm_opts).unwrap())
+}
+
+#[test]
+fn multimodel_epsilon_zero_matches_the_per_event_oracle() {
+    // buffered aggregation (B = 2) + static routing
+    let oracle = run_multi(None, 1, SchedulerKind::Static, 2);
+    assert_eq!(oracle, run_multi(Some(0.0), 1, SchedulerKind::Static, 2));
+    assert_eq!(oracle, run_multi(Some(0.0), 8, SchedulerKind::Static, 2));
+}
+
+#[test]
+fn multimodel_epsilon_zero_matches_the_oracle_with_migrations() {
+    // round-robin migrates learners constantly: provisional assigns and
+    // pending-move bookkeeping must coalesce byte-identically too
+    let oracle = run_multi(None, 1, SchedulerKind::RoundRobin, 1);
+    assert_eq!(oracle, run_multi(Some(0.0), 1, SchedulerKind::RoundRobin, 1));
+    assert_eq!(oracle, run_multi(Some(0.0), 8, SchedulerKind::RoundRobin, 1));
+}
+
+#[test]
+fn multimodel_nonzero_epsilon_is_thread_invariant() {
+    for eps in [1.0f64, 5.0] {
+        let serial = run_multi(Some(eps), 1, SchedulerKind::StalenessGreedy, 2);
+        assert_eq!(
+            serial,
+            run_multi(Some(eps), 8, SchedulerKind::StalenessGreedy, 2),
+            "multi-model ε={eps} diverged across thread counts"
+        );
+    }
+}

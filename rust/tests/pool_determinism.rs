@@ -26,7 +26,7 @@ use asyncmel::multimodel::{
     report_digest, AdaptiveBufferConfig, ModelTaskSpec, MultiModelConfig, MultiModelOptions,
     SchedulerKind,
 };
-use asyncmel::runtime::Runtime;
+use asyncmel::runtime::{Runtime, ThreadPool};
 use asyncmel::testkit::{forall, Gen};
 
 /// Tiny model so real-numerics runs stay fast in debug builds.
@@ -249,6 +249,87 @@ fn hetero_adaptive_multimodel_is_bit_identical_across_thread_counts() {
     let serial = run(1);
     assert_eq!(serial, run(2), "hetero M=2 diverged at 2 threads");
     assert_eq!(serial, run(8), "hetero M=2 diverged at 8 threads");
+}
+
+#[test]
+fn persistent_pool_reuses_workers_across_interleaved_batches() {
+    // the pool spawns its workers once and parks them between batches;
+    // arbitrary interleavings of batch sizes — including 0 and 1 jobs,
+    // which never leave the caller — must keep the index-order contract
+    for threads in [2usize, 8] {
+        let pool = ThreadPool::new(threads);
+        let serial = ThreadPool::serial();
+        for round in 0..4usize {
+            for n in [0usize, 1, 3, 64, 1, 257, 0, 7, 31] {
+                let f = |i: usize| (i as u64).wrapping_mul(0x9E37_79B9) ^ round as u64;
+                assert_eq!(
+                    pool.map(n, f),
+                    serial.map(n, f),
+                    "threads={threads} round={round} n={n}"
+                );
+            }
+        }
+        // clones share the same persistent worker set
+        let clone = pool.clone();
+        assert_eq!(clone.map(100, |i| i * i), serial.map(100, |i| i * i));
+    }
+}
+
+/// Async run through the coalescing dispatch path at a given ε.
+fn run_event_coalesced(
+    threads: usize,
+    epsilon: f64,
+    churn: ChurnConfig,
+    seed: u64,
+    cycles: usize,
+) -> (String, Option<ParamSet>) {
+    let rt = Runtime::native(&DIMS, 32, 48);
+    let (scenario, ds) = tiny_world(6, threads, churn, seed);
+    let mut engine = EventEngine::new(
+        scenario,
+        AllocatorKind::Eta,
+        AggregationRule::FedAvg,
+        ExecMode::Real { runtime: &rt, train: ds.train, test: ds.test },
+    )
+    .unwrap()
+    .with_epsilon_window(epsilon);
+    let opts = TrainOptions { cycles, lr: 0.1, eval_every: 1, reallocate_each_cycle: false };
+    let (records, params) = engine
+        .run_with_params(&EngineOptions {
+            train: opts,
+            policy: EnginePolicy::Async(AsyncAggregator::default()),
+        })
+        .unwrap();
+    (record_digest(&records), params)
+}
+
+#[test]
+fn event_async_coalescing_with_churn_is_bit_identical_across_thread_counts() {
+    // a wide ε forms multi-learner windows; the pooled fan-out inside
+    // them must stay invisible in the results, churn included
+    let churn = ChurnConfig::new(0.1, 90.0);
+    let (digest1, params1) = run_event_coalesced(1, 2.0, churn, SEED, 3);
+    for threads in [2usize, 8] {
+        let (digest, params) = run_event_coalesced(threads, 2.0, churn, SEED, 3);
+        assert_eq!(digest1, digest, "records diverged at {threads} threads");
+        assert_eq!(params1, params, "params diverged at {threads} threads");
+    }
+}
+
+#[test]
+fn prop_random_epsilon_keeps_thread_count_invariance() {
+    // any ε (including 0 and windows wider than a round) must keep the
+    // async coalescing path bit-identical across thread counts
+    forall("epsilon-thread-invariance", 6, |g: &mut Gen| {
+        let seed = g.u64_in(1, u64::MAX / 2);
+        let eps = if g.bool() { 0.0 } else { g.f64_in(0.0, 20.0) };
+        let threads = g.usize_in(2, 8);
+        let churn = if g.bool() { ChurnConfig::new(0.1, 90.0) } else { ChurnConfig::disabled() };
+        let (d1, p1) = run_event_coalesced(1, eps, churn, seed, 2);
+        let (dn, pn) = run_event_coalesced(threads, eps, churn, seed, 2);
+        assert_eq!(d1, dn, "seed {seed} ε {eps} threads {threads}: records diverged");
+        assert_eq!(p1, pn, "seed {seed} ε {eps} threads {threads}: params diverged");
+    });
 }
 
 #[test]

@@ -21,7 +21,7 @@
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
-BENCHES=(fig2_staleness fig3_accuracy ablation_bounds solver_bench fleet_scale multi_model real_fleet)
+BENCHES=(fig2_staleness fig3_accuracy ablation_bounds solver_bench fleet_scale multi_model real_fleet native_hotpath)
 
 run_lint() {
   echo "=== lint: cargo fmt --check ==="
