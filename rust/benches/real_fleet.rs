@@ -14,7 +14,12 @@
 //!    sharded + ε-window arrival coalescing — the hot-path overhaul
 //!    acceptance case: coalescing at 8 threads must beat per-event
 //!    serial dispatch on steps/sec (both recorded in the bench JSON,
-//!    with coalescing thread-invariance asserted byte-for-byte).
+//!    with coalescing thread-invariance asserted byte-for-byte);
+//! 5. times the **hierarchical sharded coordinator** on a phantom
+//!    K = 100 000 async fleet at `--shards` 1 vs 8 (the 500k-scale
+//!    enabler), and asserts the shard-count determinism contract:
+//!    records + engine stats bit-identical across shard counts
+//!    {1, 2, 8}.
 //!
 //! Passthrough flags: `--smoke` (K = 50, 1 cycle CI config), `--json
 //! PATH` (machine-readable results; see scripts/bench_check.sh).
@@ -159,6 +164,43 @@ fn main() {
             rate / serial_rate
         );
     }
+
+    // ---- hierarchical sharded coordinator @ phantom K=100k ----------
+    // The 500k-scale enabler: per-shard event queues + regional
+    // aggregators must cost nothing extra and change nothing — any
+    // shard count is bit-identical to the flat k=1 coordinator, so the
+    // only thing left to measure is wall clock.
+    let pk = 100_000usize;
+    let pcycles = if run.smoke() { 2 } else { 8 };
+    group(&format!(
+        "phantom async sharded coordinator @ K={pk} ({pcycles} cycles): --shards 1 vs 8"
+    ));
+    for shards in [1usize, 8] {
+        run.bench(&format!("async_k{pk}_shard{shards}"), &cfg, || {
+            fleet_scale::phantom_async_run(pk, shards, pcycles).expect("phantom async run")
+        });
+    }
+    // shard-count determinism gate (runs in bench-smoke): the record
+    // stream and the engine counters must be bit-identical whatever the
+    // shard count, at a CI-sized fleet.
+    let dk = 5_000usize;
+    let (flat_records, flat_stats) =
+        fleet_scale::phantom_async_run(dk, 1, 3).expect("flat phantom run");
+    let flat_digest = record_digest(&flat_records);
+    for shards in [2usize, 8] {
+        let (records, stats) =
+            fleet_scale::phantom_async_run(dk, shards, 3).expect("sharded phantom run");
+        assert_eq!(
+            flat_digest,
+            record_digest(&records),
+            "--shards {shards} changed the record stream vs the flat coordinator"
+        );
+        assert_eq!(
+            flat_stats, stats,
+            "--shards {shards} changed the engine stats vs the flat coordinator"
+        );
+    }
+    println!("determinism: sharded coordinator bit-identical across shard counts OK\n");
 
     run.finish().expect("bench json");
 }

@@ -54,6 +54,20 @@ fn task_from_json(v: &Value, mut base: TaskParams) -> Result<TaskParams> {
     Ok(base)
 }
 
+/// Validate an async-coalescing ε-window. The single source of truth
+/// shared by the builder ([`ScenarioConfig::with_epsilon_window`]), the
+/// JSON intake path ([`ScenarioConfig::from_json`]), the CLI and
+/// [`crate::coordinator::EventEngine::with_epsilon_window`], so every
+/// intake path rejects a bad ε with the same `Err` instead of some of
+/// them panicking.
+pub fn validate_epsilon_window(epsilon: f64) -> Result<()> {
+    anyhow::ensure!(
+        epsilon.is_finite() && epsilon >= 0.0,
+        "epsilon_window must be finite and >= 0, got {epsilon}"
+    );
+    Ok(())
+}
+
 /// Which coordinator engine executes the run.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
 pub enum EngineKind {
@@ -176,6 +190,15 @@ pub struct ScenarioConfig {
     /// per-event dispatch; any value is bit-identical across thread
     /// counts.
     pub epsilon_window: f64,
+    /// Coordinator shards `k` for the hierarchical (learner → shard →
+    /// global) event engine: each shard owns a regional event heap and
+    /// an [`crate::aggregation::AsyncAggregator`] acting as a regional
+    /// aggregator; shard summaries merge into the global model at
+    /// aggregation boundaries with a deterministic
+    /// `(time, seq, shard_id)` tie-break. 1 = flat coordinator
+    /// (default). Any value produces a bit-identical run — sharding
+    /// never changes results, only coordination topology.
+    pub num_shards: usize,
 }
 
 impl Default for ScenarioConfig {
@@ -205,6 +228,7 @@ impl ScenarioConfig {
             fading_rho: None,
             num_threads: 1,
             epsilon_window: 0.0,
+            num_shards: 1,
         }
     }
 
@@ -256,13 +280,20 @@ impl ScenarioConfig {
     /// ε-window (seconds) for async arrival coalescing in the event
     /// engine. `0.0` coalesces only simultaneous events (byte-identical
     /// to per-event dispatch); any ε is bit-identical across thread
-    /// counts.
-    pub fn with_epsilon_window(mut self, epsilon: f64) -> Self {
-        assert!(
-            epsilon.is_finite() && epsilon >= 0.0,
-            "epsilon_window must be finite and >= 0"
-        );
+    /// counts. Rejects non-finite or negative ε with the same `Err` as
+    /// the JSON intake path ([`validate_epsilon_window`]) — the builder
+    /// no longer panics on bad input.
+    pub fn with_epsilon_window(mut self, epsilon: f64) -> Result<Self> {
+        validate_epsilon_window(epsilon)?;
         self.epsilon_window = epsilon;
+        Ok(self)
+    }
+    /// Coordinator shards `k` for the hierarchical event engine
+    /// (1 = flat). Results are bit-identical for every value; 0 is
+    /// rejected at the intake paths (JSON/CLI) and clamped to 1 by the
+    /// engine.
+    pub fn with_shards(mut self, num_shards: usize) -> Self {
+        self.num_shards = num_shards;
         self
     }
 
@@ -345,6 +376,7 @@ impl ScenarioConfig {
             .set("engine", self.engine.name())
             .set("num_threads", self.num_threads)
             .set("epsilon_window", self.epsilon_window)
+            .set("num_shards", self.num_shards)
             .set("channel", ch)
             .set("devices", dev)
             .set("task", task)
@@ -414,11 +446,13 @@ impl ScenarioConfig {
         }
         if let Some(x) = v.get("epsilon_window") {
             let eps = x.as_f64()?;
-            anyhow::ensure!(
-                eps.is_finite() && eps >= 0.0,
-                "epsilon_window must be finite and >= 0, got {eps}"
-            );
+            validate_epsilon_window(eps)?;
             cfg.epsilon_window = eps;
+        }
+        if let Some(x) = v.get("num_shards") {
+            let k = x.as_usize()?;
+            anyhow::ensure!(k >= 1, "num_shards must be >= 1, got {k}");
+            cfg.num_shards = k;
         }
         if let Some(ch) = v.get("channel") {
             if let Some(x) = ch.get("radius_m") {
@@ -826,7 +860,9 @@ mod tests {
 
     #[test]
     fn epsilon_window_round_trip_default_and_validation() {
-        let cfg = ScenarioConfig::paper_default().with_epsilon_window(0.75);
+        let cfg = ScenarioConfig::paper_default()
+            .with_epsilon_window(0.75)
+            .unwrap();
         let text = cfg.to_json().pretty();
         let back = ScenarioConfig::from_json(&crate::json::parse(&text).unwrap()).unwrap();
         assert_eq!(back.epsilon_window, 0.75);
@@ -843,6 +879,44 @@ mod tests {
             };
             assert!(rejected, "accepted: {bad}");
         }
+    }
+
+    #[test]
+    fn epsilon_window_builder_matches_json_validation() {
+        // Regression: the builder used assert! (process abort) while the
+        // JSON path returned Err. Both intake paths must now reject the
+        // same bad values the same way — with an error, not a panic.
+        for bad in [-0.5, f64::NAN, f64::INFINITY, f64::NEG_INFINITY] {
+            let builder = ScenarioConfig::paper_default().with_epsilon_window(bad);
+            assert!(builder.is_err(), "builder accepted ε = {bad}");
+            assert!(validate_epsilon_window(bad).is_err());
+        }
+        for good in [0.0, 0.25, 10.0] {
+            let cfg = ScenarioConfig::paper_default()
+                .with_epsilon_window(good)
+                .unwrap_or_else(|e| panic!("builder rejected ε = {good}: {e}"));
+            assert_eq!(cfg.epsilon_window, good);
+            // and the JSON path accepts the same value
+            let text = cfg.to_json().pretty();
+            let back = ScenarioConfig::from_json(&crate::json::parse(&text).unwrap()).unwrap();
+            assert_eq!(back.epsilon_window, good);
+        }
+    }
+
+    #[test]
+    fn num_shards_round_trip_default_and_validation() {
+        let cfg = ScenarioConfig::paper_default().with_shards(8);
+        let text = cfg.to_json().pretty();
+        let back = ScenarioConfig::from_json(&crate::json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.num_shards, 8);
+
+        // sparse configs keep the flat (k = 1) default
+        let sparse = ScenarioConfig::from_json(&crate::json::parse("{}").unwrap()).unwrap();
+        assert_eq!(sparse.num_shards, 1);
+
+        // 0 shards is rejected at the JSON intake path
+        let bad = crate::json::parse(r#"{"num_shards": 0}"#).unwrap();
+        assert!(ScenarioConfig::from_json(&bad).is_err());
     }
 
     #[test]

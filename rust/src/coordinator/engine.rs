@@ -5,9 +5,29 @@
 //! scenario diversity. This engine instead timestamps *everything* —
 //! learner dispatch, local-epoch completion / upload arrival, learner
 //! churn (join/leave mid-run), aggregation — as events on a
-//! deterministic [`EventQueue`] over the virtual clock, so thousands of
-//! heterogeneous learners can be simulated with churn while staying
-//! bit-reproducible from the scenario seed.
+//! deterministic [`crate::sim::EventQueue`] over the virtual clock, so
+//! thousands of heterogeneous learners can be simulated with churn
+//! while staying bit-reproducible from the scenario seed.
+//!
+//! # Hierarchical sharded coordination
+//!
+//! At fleet scales past ~5k learners the single serial event heap is
+//! the bottleneck, so the engine partitions the fleet across
+//! `ScenarioConfig.num_shards` coordinator shards (the MEL
+//! edge → region → cloud topology): each shard owns a regional event
+//! heap ([`ShardedEventQueue`]) and a per-shard [`AsyncAggregator`]
+//! acting as a regional aggregator. Learner-owned events route to
+//! shard `slot % k` — a churned-in learner keeps hitting the same
+//! regional coordinator for its whole lifetime — while fleet-global
+//! events (cycle boundaries, Poisson joins) live on shard 0. Shards
+//! emit timestamped summary updates that merge into the global model's
+//! telemetry at aggregation boundaries with a deterministic
+//! `(time, seq, shard_id)` tie-break. Because the shard heaps share
+//! one global `seq` counter, the merged pop order — and therefore the
+//! RNG streams, the aggregation order and every f32 sum — is identical
+//! for every shard count: **any `--shards k` is bit-identical to
+//! `k = 1`**, extending the repo's serial-oracle invariant from
+//! `runtime::pool` to the coordination layer.
 //!
 //! Two aggregation policies:
 //!
@@ -56,7 +76,7 @@ use crate::multimodel::{
     MultiModelReport, ResolvedTaskSpec, SubFleetAlloc,
 };
 use crate::runtime::{Runtime, ThreadPool};
-use crate::sim::{EventQueue, Rng};
+use crate::sim::{Rng, ShardedEventQueue};
 
 /// How the engine folds arrivals into the global model.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -140,6 +160,146 @@ enum Event {
     Join,
     /// Scheduled departure of a learner.
     Leave { slot: usize },
+}
+
+/// Typed dispatch-sequencing errors, surfaced through `run`'s existing
+/// `Result` instead of `expect` panics: a mis-sequenced resolve (or a
+/// real/phantom mode mix-up) now aborts the run with context rather
+/// than crashing the process.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EngineError {
+    /// A dispatch path ran before any allocation was solved —
+    /// `resolve()` must precede dispatch.
+    AllocationNotSolved,
+    /// Real exec mode reached the train fan-out without per-learner
+    /// batch shards.
+    MissingShards,
+}
+
+impl std::fmt::Display for EngineError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            EngineError::AllocationNotSolved => {
+                write!(f, "allocation not solved before dispatch")
+            }
+            EngineError::MissingShards => {
+                write!(f, "real exec mode dispatched without batch shards")
+            }
+        }
+    }
+}
+
+impl std::error::Error for EngineError {}
+
+/// One arrival's contribution to a coordinator shard's summary window:
+/// the timestamped update record a regional aggregator emits toward
+/// the global model. `seq` is the engine's global arrival counter,
+/// stamped in merged pop order, so each shard's window is sorted by
+/// `(time, seq)` by construction.
+#[derive(Debug, Clone, Copy)]
+struct ShardSummary {
+    time: f64,
+    /// Global arrival sequence number (unique across shards).
+    seq: u64,
+    /// Server-version staleness of the arrival.
+    staleness: u64,
+    /// Training loss; non-finite when the round produced none
+    /// (phantom mode).
+    loss: f32,
+}
+
+/// Merge the per-shard summary windows in `(time, seq, shard_id)`
+/// order — the regional → global aggregation contract — and reduce
+/// them to one cycle's telemetry `(arrived, mean train loss, max
+/// staleness, avg staleness)`, clearing the windows. Each window is
+/// sorted by construction, so this is a standard k-way sorted merge;
+/// `seq` is globally unique, so the merged order is exactly the
+/// arrival processing order and the left-folded f32 loss sum is
+/// bit-identical for every shard count.
+fn merge_windows(windows: &mut [Vec<ShardSummary>]) -> (usize, f32, u64, f64) {
+    let total: usize = windows.iter().map(|w| w.len()).sum();
+    let mut heads = vec![0usize; windows.len()];
+    let mut loss_sum = 0.0f32;
+    let mut loss_n = 0usize;
+    let mut max_s = 0u64;
+    let mut sum_s = 0u64;
+    for _ in 0..total {
+        let mut best: Option<(f64, u64, usize)> = None;
+        for (shard, w) in windows.iter().enumerate() {
+            if let Some(e) = w.get(heads[shard]) {
+                let earlier = match best {
+                    None => true,
+                    Some((bt, bs, _)) => e.time < bt || (e.time == bt && e.seq < bs),
+                };
+                if earlier {
+                    best = Some((e.time, e.seq, shard));
+                }
+            }
+        }
+        let (_, _, shard) = best.expect("`total` counts exactly the unmerged entries");
+        let e = windows[shard][heads[shard]];
+        heads[shard] += 1;
+        max_s = max_s.max(e.staleness);
+        sum_s += e.staleness;
+        if e.loss.is_finite() {
+            loss_sum += e.loss;
+            loss_n += 1;
+        }
+    }
+    for w in windows.iter_mut() {
+        w.clear();
+    }
+    let train_loss = if loss_n == 0 { f32::NAN } else { loss_sum / loss_n as f32 };
+    let avg_s = if total == 0 { 0.0 } else { sum_s as f64 / total as f64 };
+    (total, train_loss, max_s, avg_s)
+}
+
+/// Shard-routing wrapper over [`ShardedEventQueue`] — the hierarchical
+/// coordinator's regional event heaps. Learner-owned events (arrivals,
+/// re-dispatches, departures) route to shard `slot % k`, so a learner
+/// that churns in mid-run keeps hitting the same regional coordinator
+/// for its whole lifetime; fleet-global events (cycle boundaries,
+/// Poisson joins) live on shard 0. Pops merge by
+/// `(time, seq, shard_id)`, which is identical to a flat queue for
+/// every `k` (see [`ShardedEventQueue`]).
+struct CoordQueue {
+    q: ShardedEventQueue<Event>,
+}
+
+impl CoordQueue {
+    fn new(shards: usize) -> Self {
+        Self { q: ShardedEventQueue::new(shards.max(1)) }
+    }
+
+    fn shards(&self) -> usize {
+        self.q.shards()
+    }
+
+    /// Owning shard of an event: `slot % k` for learner-owned events,
+    /// shard 0 for fleet-global ones.
+    fn shard_of(&self, ev: &Event) -> usize {
+        let k = self.q.shards();
+        match ev {
+            Event::Arrival(msg) => msg.slot % k,
+            Event::Redispatch { slot } | Event::Leave { slot } => slot % k,
+            Event::Boundary | Event::Join => 0,
+        }
+    }
+
+    fn push(&mut self, time: f64, ev: Event) {
+        let shard = self.shard_of(&ev);
+        self.q.push_to(shard, time, ev);
+    }
+
+    /// Pop the globally earliest event as `(time, shard_id, event)`.
+    fn pop(&mut self) -> Option<(f64, usize, Event)> {
+        self.q.pop()
+    }
+
+    /// Peek the globally earliest event as `(time, shard_id, &event)`.
+    fn peek(&self) -> Option<(f64, usize, &Event)> {
+        self.q.peek()
+    }
 }
 
 /// Deferred remainder of one async dispatch after its serial phase
@@ -247,6 +407,19 @@ pub struct EventEngine<'rt> {
     /// is the legacy strictly-per-event path, kept as the differential
     /// oracle ([`Self::with_per_event_dispatch`]).
     coalesce: Option<f64>,
+    /// Coordinator shards `k` for the hierarchical run loop
+    /// (`ScenarioConfig.num_shards`; 1 = flat). Any value is
+    /// bit-identical — sharding changes coordination topology, never
+    /// results.
+    num_shards: usize,
+    /// O(1) alive-learner counter, maintained at join/leave. At
+    /// K = 500k the churn path would otherwise re-scan all slots per
+    /// departure (O(K²) over a run) — this counter is what makes the
+    /// 500k phantom sweep finish in reasonable wall time.
+    alive_learners: usize,
+    /// Events processed per coordinator shard by the most recent run
+    /// (sums to `stats.events`).
+    shard_events: Vec<u64>,
     pub stats: EngineStats,
 }
 
@@ -310,10 +483,9 @@ impl<'rt> EventEngine<'rt> {
         let fading = scenario.config.fading_rho.map(|rho| make_fading(&scenario, rho));
         let pool = ThreadPool::new(scenario.config.num_threads);
         let eps = scenario.config.epsilon_window;
-        ensure!(
-            eps.is_finite() && eps >= 0.0,
-            "epsilon_window must be finite and >= 0 (got {eps})"
-        );
+        crate::config::validate_epsilon_window(eps)?;
+        let num_shards = scenario.config.num_shards.max(1);
+        let alive_learners = slots.len();
         Ok(Self {
             scenario,
             slots,
@@ -334,6 +506,9 @@ impl<'rt> EventEngine<'rt> {
             last_solve_ms: 0.0,
             pool,
             coalesce: Some(eps),
+            num_shards,
+            alive_learners,
+            shard_events: Vec::new(),
             stats: EngineStats::default(),
         })
     }
@@ -348,14 +523,29 @@ impl<'rt> EventEngine<'rt> {
     }
 
     /// Override the arrival-coalescing ε-window (seconds) from
-    /// `ScenarioConfig.epsilon_window`.
-    pub fn with_epsilon_window(mut self, epsilon: f64) -> Self {
-        assert!(
-            epsilon.is_finite() && epsilon >= 0.0,
-            "epsilon_window must be finite and >= 0"
-        );
+    /// `ScenarioConfig.epsilon_window`. Rejects non-finite or negative
+    /// ε with the same `Err` as the config intake paths
+    /// ([`crate::config::validate_epsilon_window`]) instead of
+    /// panicking.
+    pub fn with_epsilon_window(mut self, epsilon: f64) -> Result<Self> {
+        crate::config::validate_epsilon_window(epsilon)?;
         self.coalesce = Some(epsilon);
+        Ok(self)
+    }
+
+    /// Override the coordinator shard count from
+    /// `ScenarioConfig.num_shards` (0 is clamped to 1 = flat). Results
+    /// are bit-identical for every value.
+    pub fn with_shards(mut self, num_shards: usize) -> Self {
+        self.num_shards = num_shards.max(1);
         self
+    }
+
+    /// Events processed per coordinator shard by the most recent run
+    /// (empty before the first run; sums to `stats.events`) — the
+    /// regional-coordinator load profile.
+    pub fn shard_event_counts(&self) -> &[u64] {
+        &self.shard_events
     }
 
     /// Enable fault injection for subsequent runs.
@@ -378,8 +568,16 @@ impl<'rt> EventEngine<'rt> {
         self
     }
 
+    /// O(1) via the maintained counter — the churn hot path at
+    /// fleet scale (a per-departure O(K) rescan made K = 500k runs
+    /// quadratic). Debug builds cross-check against the slot scan.
     fn alive_count(&self) -> usize {
-        self.slots.iter().filter(|s| s.alive).count()
+        debug_assert_eq!(
+            self.alive_learners,
+            self.slots.iter().filter(|s| s.alive).count(),
+            "alive-learner counter drifted from the slot scan"
+        );
+        self.alive_learners
     }
 
     fn max_learners(&self) -> usize {
@@ -448,13 +646,13 @@ impl<'rt> EventEngine<'rt> {
     /// intact).
     fn dispatch_cycle(
         &mut self,
-        q: &mut EventQueue<Event>,
+        q: &mut CoordQueue,
         now: f64,
         global: &Option<ParamSet>,
         opts: &TrainOptions,
     ) -> Result<()> {
         let t_cycle = self.scenario.t_cycle();
-        let alloc = self.alloc.clone().expect("allocation solved before dispatch");
+        let alloc = self.alloc.clone().ok_or(EngineError::AllocationNotSolved)?;
         let alive = self.alloc_slots.clone();
         let shards: Option<Vec<Vec<u32>>> = match &self.exec {
             ExecMode::Real { train, .. } => {
@@ -494,7 +692,7 @@ impl<'rt> EventEngine<'rt> {
         // parallel phase: the real-numerics train steps
         let trained: Vec<Option<(ParamSet, f32)>> = match (&self.exec, global) {
             (ExecMode::Real { runtime, train, .. }, Some(g)) => {
-                let shards_ref = shards.as_ref().expect("real mode has shards");
+                let shards_ref = shards.as_ref().ok_or(EngineError::MissingShards)?;
                 let slots = &self.slots;
                 let arriving_ref = &arriving;
                 let lr = opts.lr;
@@ -535,7 +733,7 @@ impl<'rt> EventEngine<'rt> {
     /// model snapshot.
     fn dispatch_one(
         &mut self,
-        q: &mut EventQueue<Event>,
+        q: &mut CoordQueue,
         now: f64,
         slot: usize,
         global: &Option<ParamSet>,
@@ -639,7 +837,7 @@ impl<'rt> EventEngine<'rt> {
     /// `(time, seq)` assignment identical to per-plan dispatch.
     fn flush_plans(
         &mut self,
-        q: &mut EventQueue<Event>,
+        q: &mut CoordQueue,
         plans: Vec<RoundPlan>,
         shared: SharedGlobals<'_>,
         opts: &TrainOptions,
@@ -715,7 +913,7 @@ impl<'rt> EventEngine<'rt> {
     #[allow(clippy::too_many_arguments)]
     fn dispatch_round(
         &mut self,
-        q: &mut EventQueue<Event>,
+        q: &mut CoordQueue,
         now: f64,
         slot: usize,
         model: usize,
@@ -742,7 +940,7 @@ impl<'rt> EventEngine<'rt> {
     #[allow(clippy::too_many_arguments)]
     fn dispatch_batch(
         &mut self,
-        q: &mut EventQueue<Event>,
+        q: &mut CoordQueue,
         now: f64,
         model: usize,
         entries: &[(usize, Option<(u64, u64, LearnerCost)>)],
@@ -790,26 +988,34 @@ impl<'rt> EventEngine<'rt> {
     /// `rust/tests/coalescing.rs`. Any ε stays bit-identical across
     /// thread counts: the window only decides which steps run
     /// concurrently, never their inputs or push order.
+    ///
+    /// Each arrival is mixed by its owning shard's regional aggregator
+    /// (`shard_aggs[shard]`) and appends a timestamped [`ShardSummary`]
+    /// to that shard's window; the windows merge into the cycle record
+    /// at the next aggregation boundary in `(time, seq, shard_id)`
+    /// order ([`merge_windows`]).
     #[allow(clippy::too_many_arguments)]
     fn async_window(
         &mut self,
-        q: &mut EventQueue<Event>,
+        q: &mut CoordQueue,
         head_time: f64,
+        head_shard: usize,
         head: Event,
-        agg: AsyncAggregator,
+        shard_aggs: &[AsyncAggregator],
         global: &mut Option<ParamSet>,
         version: &mut u64,
-        window_s: &mut Vec<u64>,
-        window_losses: &mut Vec<f32>,
+        windows: &mut [Vec<ShardSummary>],
+        arrival_seq: &mut u64,
         opts: &TrainOptions,
     ) -> Result<()> {
-        let mut batch: Vec<(f64, Event)> = vec![(head_time, head)];
+        let mut batch: Vec<(f64, usize, Event)> = vec![(head_time, head_shard, head)];
         if let Some(eps) = self.coalesce {
             let horizon = head_time + eps;
-            while let Some((t, ev)) = q.peek() {
+            while let Some((t, _, ev)) = q.peek() {
                 if t <= horizon && matches!(ev, Event::Arrival(_) | Event::Redispatch { .. }) {
                     let popped = q.pop().expect("peeked event pops");
                     self.stats.events += 1;
+                    self.shard_events[popped.1] += 1;
                     batch.push(popped);
                 } else {
                     break; // any other event type closes the window
@@ -818,7 +1024,7 @@ impl<'rt> EventEngine<'rt> {
         }
         let t_cycle = self.scenario.t_cycle();
         let mut plans: Vec<RoundPlan> = Vec::with_capacity(batch.len());
-        for (et, ev) in batch {
+        for (et, eshard, ev) in batch {
             let slot = match ev {
                 Event::Arrival(msg) => {
                     if !self.slots[msg.slot].alive {
@@ -830,15 +1036,26 @@ impl<'rt> EventEngine<'rt> {
                             // dispatches planned earlier in this window
                             // must not see the post-mix model
                             freeze_pending(&mut plans, 0, global);
-                            agg.mix(global.as_mut().expect("checked above"), p, s);
+                            // the owning shard's regional aggregator
+                            // performs the mix (all shards share the
+                            // decay law, so topology never shows up in
+                            // the numerics)
+                            shard_aggs[eshard].mix(
+                                global.as_mut().expect("checked above"),
+                                p,
+                                s,
+                            );
                         }
                     }
                     *version += 1;
                     self.stats.arrivals += 1;
-                    window_s.push(s);
-                    if msg.train_loss.is_finite() {
-                        window_losses.push(msg.train_loss);
-                    }
+                    windows[eshard].push(ShardSummary {
+                        time: et,
+                        seq: *arrival_seq,
+                        staleness: s,
+                        loss: msg.train_loss,
+                    });
+                    *arrival_seq += 1;
                     msg.slot
                 }
                 Event::Redispatch { slot } => slot,
@@ -860,7 +1077,7 @@ impl<'rt> EventEngine<'rt> {
 
     /// Admit a new learner sampled from the scenario's device/channel
     /// distributions.
-    fn join(&mut self, q: &mut EventQueue<Event>, now: f64) -> Option<usize> {
+    fn join(&mut self, q: &mut CoordQueue, now: f64) -> Option<usize> {
         if self.alive_count() >= self.max_learners() {
             return None;
         }
@@ -882,6 +1099,7 @@ impl<'rt> EventEngine<'rt> {
             learner: Learner { id, device, link, cost },
             alive: true,
         });
+        self.alive_learners += 1;
         self.dirty = true;
         self.stats.joins += 1;
         if self.churn.mean_lifetime_s > 0.0 {
@@ -937,7 +1155,16 @@ impl<'rt> EventEngine<'rt> {
 
         self.resolve()?; // times itself into last_solve_ms
 
-        let mut q: EventQueue<Event> = EventQueue::new();
+        let mut q = CoordQueue::new(self.num_shards);
+        let k_shards = q.shards();
+        self.shard_events = vec![0; k_shards];
+        // per-shard regional aggregators: copies of the policy's
+        // aggregator, one per coordinator shard (identical decay law —
+        // topology must never show up in the numerics)
+        let shard_aggs: Vec<AsyncAggregator> = match opts.policy {
+            EnginePolicy::Async(agg) => vec![agg; k_shards],
+            EnginePolicy::Barrier => Vec::new(),
+        };
         let mut now = 0.0f64;
 
         // churn arming
@@ -976,18 +1203,21 @@ impl<'rt> EventEngine<'rt> {
 
         let mut records: Vec<CycleRecord> = Vec::with_capacity(cycles);
         let mut barrier_buf: Vec<ArrivalMsg> = Vec::new();
-        // async per-cycle telemetry window
-        let mut window_s: Vec<u64> = Vec::new();
-        let mut window_losses: Vec<f32> = Vec::new();
+        // per-shard summary windows (regional telemetry, merged by
+        // (time, seq, shard_id) at each aggregation boundary) + the
+        // global arrival sequence stamp
+        let mut windows: Vec<Vec<ShardSummary>> = vec![Vec::new(); k_shards];
+        let mut arrival_seq: u64 = 0;
         let mut version: u64 = 0;
 
         while records.len() < cycles {
-            let (t, ev) = q
+            let (t, shard, ev) = q
                 .pop()
                 .ok_or_else(|| anyhow!("event queue drained after {} cycles", records.len()))?;
             debug_assert!(t >= now - 1e-9, "time went backwards: {t} < {now}");
             now = t;
             self.stats.events += 1;
+            self.shard_events[shard] += 1;
             match ev {
                 Event::Arrival(msg) => {
                     if !self.slots[msg.slot].alive {
@@ -995,32 +1225,34 @@ impl<'rt> EventEngine<'rt> {
                     }
                     match opts.policy {
                         EnginePolicy::Barrier => barrier_buf.push(msg),
-                        EnginePolicy::Async(agg) => {
+                        EnginePolicy::Async(_) => {
                             self.async_window(
                                 &mut q,
                                 now,
+                                shard,
                                 Event::Arrival(msg),
-                                agg,
+                                &shard_aggs,
                                 &mut global,
                                 &mut version,
-                                &mut window_s,
-                                &mut window_losses,
+                                &mut windows,
+                                &mut arrival_seq,
                                 &opts.train,
                             )?;
                         }
                     }
                 }
                 Event::Redispatch { slot } => {
-                    if let EnginePolicy::Async(agg) = opts.policy {
+                    if let EnginePolicy::Async(_) = opts.policy {
                         self.async_window(
                             &mut q,
                             now,
+                            shard,
                             Event::Redispatch { slot },
-                            agg,
+                            &shard_aggs,
                             &mut global,
                             &mut version,
-                            &mut window_s,
-                            &mut window_losses,
+                            &mut windows,
+                            &mut arrival_seq,
                             &opts.train,
                         )?;
                     }
@@ -1041,6 +1273,7 @@ impl<'rt> EventEngine<'rt> {
                 Event::Leave { slot } => {
                     if self.slots[slot].alive && self.alive_count() > self.min_learners() {
                         self.slots[slot].alive = false;
+                        self.alive_learners -= 1;
                         self.dirty = true;
                         self.stats.leaves += 1;
                     }
@@ -1088,27 +1321,21 @@ impl<'rt> EventEngine<'rt> {
                             } else {
                                 losses.iter().sum::<f32>() / losses.len() as f32
                             };
-                            let alloc = self.alloc.as_ref().expect("allocation solved");
+                            let alloc =
+                                self.alloc.as_ref().ok_or(EngineError::AllocationNotSolved)?;
                             max_s = alloc.max_staleness();
                             avg_s = alloc.avg_staleness();
                         }
                         EnginePolicy::Async(_) => {
-                            arrived = window_s.len();
-                            train_loss = if window_losses.is_empty() {
-                                f32::NAN
-                            } else {
-                                window_losses.iter().sum::<f32>() / window_losses.len() as f32
-                            };
-                            // event-time staleness of this window's
-                            // arrivals (server-version lag, not τ-lag)
-                            max_s = window_s.iter().copied().max().unwrap_or(0);
-                            avg_s = if window_s.is_empty() {
-                                0.0
-                            } else {
-                                window_s.iter().sum::<u64>() as f64 / window_s.len() as f64
-                            };
-                            window_s.clear();
-                            window_losses.clear();
+                            // merge the shards' timestamped summary
+                            // updates in (time, seq, shard_id) order —
+                            // staleness here is event-time server-
+                            // version lag, not τ-lag
+                            let (a, tl, ms, avs) = merge_windows(&mut windows);
+                            arrived = a;
+                            train_loss = tl;
+                            max_s = ms;
+                            avg_s = avs;
                         }
                     }
 
@@ -1126,7 +1353,7 @@ impl<'rt> EventEngine<'rt> {
                         (f64::NAN, f64::NAN)
                     };
 
-                    let alloc = self.alloc.as_ref().expect("allocation solved");
+                    let alloc = self.alloc.as_ref().ok_or(EngineError::AllocationNotSolved)?;
                     records.push(CycleRecord {
                         cycle,
                         vtime_s: now,
@@ -1215,7 +1442,7 @@ impl<'rt> EventEngine<'rt> {
     #[allow(clippy::too_many_arguments)]
     fn dispatch_model(
         &mut self,
-        q: &mut EventQueue<Event>,
+        q: &mut CoordQueue,
         now: f64,
         slot: usize,
         model: usize,
@@ -1273,8 +1500,14 @@ impl<'rt> EventEngine<'rt> {
         let cost = LearnerCost::from_parts(&l.device, &l.link, &spec.task, cfg.data_scenario);
         let members = (0..self.slots.len())
             .filter(|&i| self.slots[i].alive && model_of.get(i).copied() == Some(model))
-            .count()
-            .max(1);
+            .count();
+        if members == 0 {
+            // churn emptied the target sub-fleet between boundaries:
+            // there is no share of D_m to derive a stop-gap (τ, d)
+            // from, so the migrating learner idles one cycle (Retry)
+            // and the boundary re-solve rebuilds the sub-fleet.
+            return None;
+        }
         let bounds = Bounds::proportional(spec.d_total, members, cfg.d_lo_frac, cfg.d_hi_frac);
         let d = bounds.clamp((spec.d_total / members as u64).max(1));
         let tau = cost.tau_max_int(d, spec.t_cycle).unwrap_or(0);
@@ -1386,7 +1619,12 @@ impl<'rt> EventEngine<'rt> {
         let mut pending_moves: std::collections::BTreeMap<usize, usize> =
             std::collections::BTreeMap::new();
 
-        let mut q: EventQueue<Event> = EventQueue::new();
+        let mut q = CoordQueue::new(self.num_shards);
+        self.shard_events = vec![0; q.shards()];
+        // global arrival sequence stamp for the models' per-shard
+        // summary windows (merged by (time, seq, shard_id) at each
+        // boundary — see multimodel::ModelInstance)
+        let mut arrival_seq: u64 = 0;
         let mut now = 0.0f64;
 
         // churn arming — identical to `run`
@@ -1437,12 +1675,13 @@ impl<'rt> EventEngine<'rt> {
         let mut done_cycles = 0usize;
 
         while done_cycles < cycles {
-            let (t, ev) = q.pop().ok_or_else(|| {
+            let (t, shard, ev) = q.pop().ok_or_else(|| {
                 anyhow!("event queue drained after {done_cycles} cycles")
             })?;
             debug_assert!(t >= now - 1e-9, "time went backwards: {t} < {now}");
             now = t;
             self.stats.events += 1;
+            self.shard_events[shard] += 1;
             match ev {
                 Event::Arrival(_) | Event::Redispatch { .. } => {
                     // ε-window drain: batch this event with every
@@ -1458,15 +1697,16 @@ impl<'rt> EventEngine<'rt> {
                     // window can process an entry later than events its
                     // own flush pushes, and head times are what stays
                     // monotone (see `async_window`).
-                    let mut batch: Vec<(f64, Event)> = vec![(t, ev)];
+                    let mut batch: Vec<(f64, usize, Event)> = vec![(t, shard, ev)];
                     if let Some(eps) = self.coalesce {
                         let horizon = t + eps;
-                        while let Some((pt, pe)) = q.peek() {
+                        while let Some((pt, _, pe)) = q.peek() {
                             if pt <= horizon
                                 && matches!(pe, Event::Arrival(_) | Event::Redispatch { .. })
                             {
                                 let popped = q.pop().expect("peeked event pops");
                                 self.stats.events += 1;
+                                self.shard_events[popped.1] += 1;
                                 batch.push(popped);
                             } else {
                                 break;
@@ -1474,7 +1714,7 @@ impl<'rt> EventEngine<'rt> {
                         }
                     }
                     let mut plans: Vec<RoundPlan> = Vec::with_capacity(batch.len());
-                    for (et, bev) in batch {
+                    for (et, eshard, bev) in batch {
                         match bev {
                             Event::Arrival(msg) => {
                                 let m = msg.model;
@@ -1492,14 +1732,18 @@ impl<'rt> EventEngine<'rt> {
                                 if registry.models[m].next_absorb_flushes() {
                                     freeze_pending(&mut plans, m, &globals[m]);
                                 }
-                                registry.models[m].absorb(
+                                registry.models[m].absorb_from(
                                     &mut globals[m],
                                     BufferedUpdate {
                                         params: msg.params,
                                         staleness: s,
                                         train_loss: msg.train_loss,
                                     },
+                                    eshard,
+                                    et,
+                                    arrival_seq,
                                 );
+                                arrival_seq += 1;
                                 // the learner is free again: route it
                                 let active = registry.active_ids();
                                 if active.is_empty() {
@@ -1639,6 +1883,7 @@ impl<'rt> EventEngine<'rt> {
                 Event::Leave { slot } => {
                     if self.slots[slot].alive && self.alive_count() > self.min_learners() {
                         self.slots[slot].alive = false;
+                        self.alive_learners -= 1;
                         subs[model_of[slot]].dirty = true;
                         self.stats.leaves += 1;
                     }
@@ -1833,6 +2078,7 @@ mod tests {
         engine.resolve().unwrap();
         for dead in [3usize, 7, 19, 33] {
             engine.slots[dead].alive = false;
+            engine.alive_learners -= 1;
         }
         engine.dirty = true;
         engine.resolve().unwrap();
@@ -1994,5 +2240,97 @@ mod tests {
         assert_eq!(records.len(), 3);
         assert!(engine.stats.final_alive >= 1);
         assert_eq!(engine.stats.final_alive, 1, "everyone but the floor should leave");
+    }
+
+    #[test]
+    fn dispatch_before_resolve_is_a_typed_error() {
+        // a mis-sequenced resolve must surface EngineError through the
+        // Result chain, not crash the process (the old `expect` path)
+        let mut engine = phantom_engine(4, ChurnConfig::disabled());
+        assert!(engine.alloc.is_none(), "fresh engine must be unsolved");
+        let mut q = CoordQueue::new(1);
+        let err = engine
+            .dispatch_cycle(&mut q, 0.0, &None, &TrainOptions::default())
+            .expect_err("dispatch without a solved allocation must fail");
+        assert_eq!(
+            err.root_cause(),
+            EngineError::AllocationNotSolved.to_string(),
+            "typed error must be the root cause"
+        );
+    }
+
+    #[test]
+    fn provisional_assign_on_empty_sub_fleet_is_none() {
+        use crate::multimodel::ModelTaskSpec;
+        // churn can empty a target sub-fleet between flush boundaries;
+        // the stop-gap assignment must degrade to None (→ Retry) instead
+        // of dividing D_m by zero members
+        let engine = phantom_engine(4, ChurnConfig::disabled());
+        let cfg = &engine.scenario.config;
+        let spec =
+            ModelTaskSpec::inherit().resolved(cfg.total_samples, cfg.t_cycle_s, &cfg.task);
+        // every slot belongs to model 0 → model 1's sub-fleet is empty
+        let model_of = vec![0usize; 4];
+        assert_eq!(engine.provisional_assign(0, 1, &model_of, &spec), None);
+        // a populated sub-fleet still yields a usable stop-gap (τ, d)
+        let (tau, d, _) = engine.provisional_assign(0, 0, &model_of, &spec).unwrap();
+        assert!(d >= 1);
+        assert!(tau >= 1, "paper-default fleet must be feasible");
+    }
+
+    #[test]
+    fn run_multi_survives_churn_emptying_a_sub_fleet() {
+        use crate::multimodel::{MultiModelConfig, MultiModelOptions, SchedulerKind};
+        // brutal churn + free migration: sub-fleets repeatedly empty out
+        // mid-window; the run must complete without a divide-by-zero
+        let churn = ChurnConfig { mean_lifetime_s: 2.0, ..ChurnConfig::disabled() };
+        let mut engine = phantom_engine(6, churn);
+        let opts = MultiModelOptions {
+            train: TrainOptions { cycles: 4, ..Default::default() },
+            multi: MultiModelConfig::new(3, 1, SchedulerKind::RoundRobin),
+            ..Default::default()
+        };
+        let report = engine.run_multi(&opts).unwrap();
+        assert_eq!(report.num_models(), 3);
+        assert!(engine.stats.leaves > 0, "churn produced no departures");
+    }
+
+    #[test]
+    fn sharded_coordinator_is_bit_identical_to_flat() {
+        let run = |shards: usize| {
+            let mut engine =
+                phantom_engine(12, ChurnConfig::new(0.3, 60.0)).with_shards(shards);
+            let opts = EngineOptions {
+                train: TrainOptions { cycles: 6, ..Default::default() },
+                policy: EnginePolicy::Async(AsyncAggregator::default()),
+            };
+            let records = engine.run(&opts).unwrap();
+            (record_digest(&records), engine.stats)
+        };
+        let (flat, flat_stats) = run(1);
+        for k in [2usize, 4, 12, 64] {
+            let (d, s) = run(k);
+            assert_eq!(d, flat, "k={k} diverged from the flat coordinator");
+            assert_eq!(s, flat_stats, "k={k} stats diverged");
+        }
+    }
+
+    #[test]
+    fn shard_event_counts_sum_to_total_and_spread() {
+        let mut engine = phantom_engine(16, ChurnConfig::disabled()).with_shards(8);
+        let opts = EngineOptions {
+            train: TrainOptions { cycles: 4, ..Default::default() },
+            policy: EnginePolicy::Async(AsyncAggregator::default()),
+        };
+        engine.run(&opts).unwrap();
+        let per_shard = engine.shard_event_counts();
+        assert_eq!(per_shard.len(), 8);
+        let total: u64 = per_shard.iter().sum();
+        assert_eq!(total, engine.stats.events);
+        // slot % k routing spreads learner events over every shard
+        assert!(
+            per_shard.iter().all(|&n| n > 0),
+            "some regional coordinator saw no events: {per_shard:?}"
+        );
     }
 }

@@ -31,7 +31,7 @@ pub mod faults;
 pub mod learner;
 pub mod orchestrator;
 
-pub use engine::{EngineOptions, EnginePolicy, EngineStats, EventEngine, ExecMode};
+pub use engine::{EngineError, EngineOptions, EnginePolicy, EngineStats, EventEngine, ExecMode};
 pub use faults::{FaultModel, FaultOutcome};
 pub use learner::Learner;
 pub use orchestrator::{record_digest, CycleRecord, Orchestrator, TrainOptions};

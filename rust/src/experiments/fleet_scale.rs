@@ -12,7 +12,8 @@ use anyhow::Result;
 use crate::allocation::AllocatorKind;
 use crate::config::{ChurnConfig, ScenarioConfig};
 use crate::coordinator::{
-    record_digest, CycleRecord, EngineOptions, EventEngine, ExecMode, TrainOptions,
+    record_digest, CycleRecord, EngineOptions, EnginePolicy, EngineStats, EventEngine, ExecMode,
+    TrainOptions,
 };
 use crate::data::{synth, SynthConfig, SynthDataset};
 use crate::metrics::{fmt_f, Table};
@@ -22,6 +23,9 @@ use crate::runtime::{Runtime, ThreadPool};
 #[derive(Debug, Clone)]
 pub struct FleetRow {
     pub k: usize,
+    /// Coordinator shards the point ran with (1 = flat; results are
+    /// bit-identical for every value).
+    pub shards: usize,
     pub cycles: usize,
     pub events: u64,
     pub joins: usize,
@@ -48,6 +52,8 @@ pub struct FleetScaleParams {
     pub cycles: usize,
     pub scheme: AllocatorKind,
     pub churn: ChurnConfig,
+    /// Coordinator shards `k` (hierarchical run loop; 1 = flat).
+    pub num_shards: usize,
 }
 
 impl Default for FleetScaleParams {
@@ -60,6 +66,7 @@ impl Default for FleetScaleParams {
             // exercised at the smaller K by the experiment callers.
             scheme: AllocatorKind::Eta,
             churn: ChurnConfig::new(1.0, 120.0),
+            num_shards: 1,
         }
     }
 }
@@ -73,6 +80,7 @@ pub fn run(params: &FleetScaleParams) -> Result<Vec<FleetRow>> {
             .clone()
             .with_learners(k)
             .with_churn(params.churn)
+            .with_shards(params.num_shards)
             .build();
         let mut engine = EventEngine::new(
             scenario,
@@ -95,6 +103,7 @@ pub fn run(params: &FleetScaleParams) -> Result<Vec<FleetRow>> {
             / records.len().max(1) as f64;
         rows.push(FleetRow {
             k,
+            shards: params.num_shards.max(1),
             cycles: records.len(),
             events: stats.events,
             joins: stats.joins,
@@ -111,15 +120,45 @@ pub fn run(params: &FleetScaleParams) -> Result<Vec<FleetRow>> {
     Ok(rows)
 }
 
+/// One phantom **async** engine run at (K, shards) with the default
+/// sweep churn — the hierarchical coordinator's fleet-scale hot path.
+/// The `real_fleet` bench times this directly (dataset-free, so the
+/// whole run is coordination cost) and asserts shard-count
+/// bit-identity on the returned records + stats.
+pub fn phantom_async_run(
+    k: usize,
+    shards: usize,
+    cycles: usize,
+) -> Result<(Vec<CycleRecord>, EngineStats)> {
+    let scenario = ScenarioConfig::paper_default()
+        .with_learners(k)
+        .with_churn(ChurnConfig::new(1.0, 120.0))
+        .with_shards(shards)
+        .build();
+    let mut engine = EventEngine::new(
+        scenario,
+        AllocatorKind::Eta,
+        crate::aggregation::AggregationRule::FedAvg,
+        ExecMode::Phantom,
+    )?;
+    let opts = EngineOptions {
+        train: TrainOptions { cycles, ..Default::default() },
+        policy: EnginePolicy::Async(crate::aggregation::AsyncAggregator::default()),
+    };
+    let records = engine.run(&opts)?;
+    Ok((records, engine.stats))
+}
+
 /// Render as a table.
 pub fn table(rows: &[FleetRow]) -> Table {
     let mut t = Table::new(&[
-        "K", "cycles", "events", "joins", "leaves", "arrivals", "arrive_ratio", "resolves",
-        "alive", "max_stale", "wall_ms", "events/s",
+        "K", "shards", "cycles", "events", "joins", "leaves", "arrivals", "arrive_ratio",
+        "resolves", "alive", "max_stale", "wall_ms", "events/s",
     ]);
     for r in rows {
         t.row(&[
             r.k.to_string(),
+            r.shards.to_string(),
             r.cycles.to_string(),
             r.events.to_string(),
             r.joins.to_string(),
@@ -332,7 +371,7 @@ pub fn async_engine_run(
         ExecMode::Real { runtime, train: ds.train.clone(), test: ds.test.clone() },
     )?;
     engine = match epsilon {
-        Some(eps) => engine.with_epsilon_window(eps),
+        Some(eps) => engine.with_epsilon_window(eps)?,
         None => engine.with_per_event_dispatch(),
     };
     let opts = EngineOptions {
@@ -505,6 +544,47 @@ mod tests {
         // and the coalescing run itself is reproducible
         let again = run_async_real(&params, 1.0).unwrap();
         assert_eq!(rows[2].digest, again[2].digest);
+    }
+
+    #[test]
+    fn sweep_is_shard_count_invariant() {
+        let rows_at = |num_shards: usize| {
+            let params = FleetScaleParams {
+                ks: vec![30],
+                cycles: 3,
+                churn: ChurnConfig::new(0.5, 90.0),
+                num_shards,
+                ..Default::default()
+            };
+            run(&params).unwrap()
+        };
+        let flat = rows_at(1);
+        for k in [2usize, 8] {
+            let sharded = rows_at(k);
+            assert_eq!(sharded[0].shards, k);
+            // every deterministic column must match the flat run
+            assert_eq!(sharded[0].events, flat[0].events, "shards={k}");
+            assert_eq!(sharded[0].joins, flat[0].joins, "shards={k}");
+            assert_eq!(sharded[0].leaves, flat[0].leaves, "shards={k}");
+            assert_eq!(sharded[0].arrivals, flat[0].arrivals, "shards={k}");
+            assert_eq!(sharded[0].resolves, flat[0].resolves, "shards={k}");
+            assert_eq!(sharded[0].final_alive, flat[0].final_alive, "shards={k}");
+            assert_eq!(
+                sharded[0].max_staleness.to_bits(),
+                flat[0].max_staleness.to_bits(),
+                "shards={k}"
+            );
+        }
+    }
+
+    #[test]
+    fn phantom_async_run_is_shard_count_invariant() {
+        let (r1, s1) = phantom_async_run(40, 1, 3).unwrap();
+        for k in [2usize, 8] {
+            let (rk, sk) = phantom_async_run(40, k, 3).unwrap();
+            assert_eq!(record_digest(&rk), record_digest(&r1), "shards={k}");
+            assert_eq!(sk, s1, "shards={k}");
+        }
     }
 
     #[test]

@@ -112,6 +112,28 @@
 //! `rust/tests/coalescing.rs` — and any ε is bit-identical across
 //! thread counts. The multi-model path coalesces the same way.
 //!
+//! ## Hierarchical sharded coordinator
+//!
+//! The coordinator itself shards (`ScenarioConfig.num_shards`, CLI
+//! `--shards K`): the fleet is partitioned across `K` coordinator
+//! shards, each owning a per-shard event queue
+//! ([`sim::ShardedEventQueue`]) and a **regional aggregator** (a copy
+//! of the async policy's [`aggregation::AsyncAggregator`]). A
+//! learner's events route to shard `slot % K` (churned-in learners by
+//! id for their lifetime; fleet-wide joins and aggregation boundaries
+//! on shard 0). Per-shard summary windows merge into the global model
+//! at aggregation boundaries under the deterministic
+//! `(time, seq, shard_id)` tie-break, where `seq` is a **global**
+//! event sequence counter shared by all shards — so the merged pop
+//! order is exactly the flat queue's pop order and **any shard count
+//! is bit-identical to the flat `K = 1` coordinator** (records, final
+//! params, engine stats; asserted across the barrier, async,
+//! coalescing, phantom and multi-model paths in
+//! `rust/tests/shard_determinism.rs`). Together with an O(K)
+//! alive-set counter in the churn path this takes phantom fleets from
+//! ~5k to 500k+ learners (`asyncmel fleet --ks 100000,500000`);
+//! `rust/benches/real_fleet.rs` times K = 100 000 at 1 vs 8 shards.
+//!
 //! The native backend itself runs a zero-alloc hot path: a reusable
 //! [`runtime::native::Scratch`] (borrowed input batch, recycled
 //! activation/gradient buffers, in-place SGD), register-tiled forward

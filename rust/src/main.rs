@@ -45,6 +45,9 @@ const USAGE: &str = "usage: asyncmel <info|solve|fig2|fig3|train|fleet|multi|abl
                                      virtual seconds and fan their train steps out
                                      together (0 = simultaneous-only, the default;
                                      byte-identical to per-event dispatch)
+           --shards K                event engine: hierarchical coordinator shards
+                                     (learner events route to shard slot%K; any K
+                                     is bit-identical to the flat K=1 coordinator)
            --engine lockstep|event   coordinator engine (default: config)
            --async [--alpha F]       event engine: staleness-weighted async aggregation
            --churn-join R --churn-life S   event engine: joins/s + mean lifetime (s)
@@ -59,7 +62,7 @@ const USAGE: &str = "usage: asyncmel <info|solve|fig2|fig3|train|fleet|multi|abl
                                      from the observed staleness EWMA
            --fading-rho RHO          event engine: per-cycle Gauss-Markov link fading
   fleet    --ks 10,100,1000,5000 --cycles N --scheme S
-           --churn-join R --churn-life S --csv PATH
+           --churn-join R --churn-life S --shards K --csv PATH
                                      event-engine scaling sweep (phantom numerics)
            --real [--threads N] [--epsilon-window S]
                                      real-numerics sweep instead (native MLP through
@@ -244,16 +247,28 @@ fn cmd_fig3(base: ScenarioConfig, args: &Args) -> Result<()> {
 /// parser (finite, >= 0).
 fn epsilon_from_args(base: &mut ScenarioConfig, args: &Args) -> Result<()> {
     let eps: f64 = args.get_or("epsilon-window", base.epsilon_window)?;
-    if !(eps.is_finite() && eps >= 0.0) {
-        bail!("--epsilon-window must be finite and >= 0 (seconds), got {eps}");
+    if let Err(e) = asyncmel::config::validate_epsilon_window(eps) {
+        bail!("--epsilon-window: {e}");
     }
     base.epsilon_window = eps;
+    Ok(())
+}
+
+/// `--shards K` → scenario override: hierarchical coordinator shard
+/// count (rejects 0, same as the JSON intake path).
+fn shards_from_args(base: &mut ScenarioConfig, args: &Args) -> Result<()> {
+    let shards: usize = args.get_or("shards", base.num_shards)?;
+    if shards == 0 {
+        bail!("--shards must be >= 1 (coordinator shard count)");
+    }
+    base.num_shards = shards;
     Ok(())
 }
 
 fn cmd_train(mut base: ScenarioConfig, args: &Args) -> Result<()> {
     base.num_threads = args.get_or("threads", base.num_threads)?;
     epsilon_from_args(&mut base, args)?;
+    shards_from_args(&mut base, args)?;
     let k: usize = args.get_or("k", 10)?;
     let t: f64 = args.get_or("t", 15.0)?;
     let scheme: AllocatorKind = args.get_or("scheme", AllocatorKind::Relaxed)?;
@@ -508,6 +523,7 @@ fn cmd_multi(base: ScenarioConfig, args: &Args) -> Result<()> {
 fn cmd_fleet(mut base: ScenarioConfig, args: &Args) -> Result<()> {
     base.num_threads = args.get_or("threads", base.num_threads)?;
     epsilon_from_args(&mut base, args)?;
+    shards_from_args(&mut base, args)?;
     if args.has("real") {
         return cmd_fleet_real(base, args);
     }
@@ -518,7 +534,8 @@ fn cmd_fleet(mut base: ScenarioConfig, args: &Args) -> Result<()> {
     // visibly churny fleet (the point of the sweep)
     let churn_base = if base.churn.is_enabled() { base.churn } else { ChurnConfig::new(1.0, 120.0) };
     let churn = churn_from_args(churn_base, args)?;
-    let params = fleet_scale::FleetScaleParams { base, ks, cycles, scheme, churn };
+    let num_shards = base.num_shards;
+    let params = fleet_scale::FleetScaleParams { base, ks, cycles, scheme, churn, num_shards };
     let rows = fleet_scale::run(&params)?;
     let table = fleet_scale::table(&rows);
     println!("{}", table.render());

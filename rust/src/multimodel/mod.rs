@@ -364,6 +364,17 @@ pub struct BufferedUpdate {
     pub train_loss: f32,
 }
 
+/// One telemetry-window entry, stamped with the coordinates of the
+/// `(time, seq, shard)` merge the hierarchical coordinator uses to
+/// drain per-shard windows in a shard-count-independent order.
+#[derive(Debug, Clone, Copy)]
+struct WindowEntry {
+    time: f64,
+    seq: u64,
+    staleness: u64,
+    loss: f32,
+}
+
 /// One of the `M` concurrently trained models.
 #[derive(Debug, Clone)]
 pub struct ModelInstance {
@@ -398,9 +409,14 @@ pub struct ModelInstance {
     /// BTreeMap keeps the oldest (stalest) version at `keys().next()`,
     /// so the staleness-greedy scheduler reads it in O(log n).
     in_flight: BTreeMap<u64, usize>,
-    /// Per-cycle telemetry window (staleness of this window's arrivals).
-    window_s: Vec<u64>,
-    window_losses: Vec<f32>,
+    /// Per-cycle telemetry windows, one per coordinator shard (lazily
+    /// sized by shard id), merged by `(time, seq, shard)` in
+    /// [`Self::take_window`] — identical drain order for any shard
+    /// count, so sharded runs stay bit-identical to `k = 1`.
+    windows: Vec<Vec<WindowEntry>>,
+    /// Fallback arrival stamp for the shard-agnostic [`Self::absorb`]
+    /// path (monotone per instance, so shard 0 stays merge-sorted).
+    local_seq: u64,
 }
 
 impl ModelInstance {
@@ -434,8 +450,8 @@ impl ModelInstance {
             target_cycle: None,
             buffer: Vec::new(),
             in_flight: BTreeMap::new(),
-            window_s: Vec::new(),
-            window_losses: Vec::new(),
+            windows: Vec::new(),
+            local_seq: 0,
         }
     }
 
@@ -493,11 +509,35 @@ impl ModelInstance {
     /// was in effect while the buffer filled, and `B_m` only ever
     /// changes on an empty buffer.
     pub fn absorb(&mut self, global: &mut Option<ParamSet>, upd: BufferedUpdate) -> usize {
+        self.local_seq += 1;
+        let seq = self.local_seq;
+        self.absorb_from(global, upd, 0, 0.0, seq)
+    }
+
+    /// Shard-aware [`Self::absorb`]: the hierarchical coordinator stamps
+    /// each arrival with its owning shard, virtual arrival time and
+    /// engine-global arrival sequence, so [`Self::take_window`] can
+    /// drain the per-shard telemetry windows in the deterministic
+    /// `(time, seq, shard)` merge order. Aggregation semantics are
+    /// byte-for-byte those of [`Self::absorb`].
+    pub fn absorb_from(
+        &mut self,
+        global: &mut Option<ParamSet>,
+        upd: BufferedUpdate,
+        shard: usize,
+        time: f64,
+        seq: u64,
+    ) -> usize {
         self.arrivals += 1;
-        self.window_s.push(upd.staleness);
-        if upd.train_loss.is_finite() {
-            self.window_losses.push(upd.train_loss);
+        if self.windows.len() <= shard {
+            self.windows.resize_with(shard + 1, Vec::new);
         }
+        self.windows[shard].push(WindowEntry {
+            time,
+            seq,
+            staleness: upd.staleness,
+            loss: upd.train_loss,
+        });
         if let Some(a) = self.adaptive {
             self.staleness_ewma = a.ewma_alpha * upd.staleness as f64
                 + (1.0 - a.ewma_alpha) * self.staleness_ewma;
@@ -539,23 +579,52 @@ impl ModelInstance {
         }
     }
 
-    /// Drain the per-cycle telemetry window:
+    /// Drain the per-cycle telemetry windows:
     /// `(arrived, mean_train_loss, max_staleness, avg_staleness)`.
+    ///
+    /// The per-shard windows are k-way merged by `(time, seq, shard)` —
+    /// with the engine-global `seq` stamp, this reconstructs exactly
+    /// the order a single flat window would have accumulated in, so
+    /// the left-fold `f32` loss sum (and therefore every record) is
+    /// bit-identical for any shard count.
     pub fn take_window(&mut self) -> (usize, f32, u64, f64) {
-        let arrived = self.window_s.len();
-        let train_loss = if self.window_losses.is_empty() {
-            f32::NAN
-        } else {
-            self.window_losses.iter().sum::<f32>() / self.window_losses.len() as f32
-        };
-        let max_s = self.window_s.iter().copied().max().unwrap_or(0);
-        let avg_s = if self.window_s.is_empty() {
-            0.0
-        } else {
-            self.window_s.iter().sum::<u64>() as f64 / self.window_s.len() as f64
-        };
-        self.window_s.clear();
-        self.window_losses.clear();
+        let mut idx = vec![0usize; self.windows.len()];
+        let mut arrived = 0usize;
+        let mut loss_sum = 0.0f32;
+        let mut losses = 0usize;
+        let mut max_s = 0u64;
+        let mut sum_s = 0u64;
+        loop {
+            let mut best: Option<usize> = None;
+            for (sh, w) in self.windows.iter().enumerate() {
+                let Some(e) = w.get(idx[sh]) else { continue };
+                let better = match best {
+                    None => true,
+                    Some(b) => {
+                        let be = &self.windows[b][idx[b]];
+                        (e.time, e.seq, sh) < (be.time, be.seq, b)
+                    }
+                };
+                if better {
+                    best = Some(sh);
+                }
+            }
+            let Some(sh) = best else { break };
+            let e = self.windows[sh][idx[sh]];
+            idx[sh] += 1;
+            arrived += 1;
+            max_s = max_s.max(e.staleness);
+            sum_s += e.staleness;
+            if e.loss.is_finite() {
+                loss_sum += e.loss;
+                losses += 1;
+            }
+        }
+        for w in &mut self.windows {
+            w.clear();
+        }
+        let train_loss = if losses == 0 { f32::NAN } else { loss_sum / losses as f32 };
+        let avg_s = if arrived == 0 { 0.0 } else { sum_s as f64 / arrived as f64 };
         (arrived, train_loss, max_s, avg_s)
     }
 }
@@ -1143,6 +1212,34 @@ mod tests {
         assert_eq!((arrived, max_s), (0, 0));
         assert!(loss.is_nan());
         assert_eq!(avg_s, 0.0);
+    }
+
+    #[test]
+    fn sharded_take_window_matches_the_flat_order() {
+        // The same arrival stream absorbed flat (shard 0) and scattered
+        // across shards by `slot % k` must drain to bit-identical window
+        // summaries: the (time, seq, shard) merge reconstructs the
+        // global arrival order from the per-shard windows.
+        let stream: Vec<(f64, u64, u64, f32)> = (0..40)
+            .map(|i| {
+                let t = (i / 3) as f64; // deliberate cross-shard time ties
+                (t, i as u64, (i % 5) as u64, 0.1 + 0.03 * i as f32)
+            })
+            .collect();
+        let mut flat = ModelInstance::new(0, 1.0, AsyncAggregator::default(), 1, None);
+        let mut sharded = ModelInstance::new(0, 1.0, AsyncAggregator::default(), 1, None);
+        let mut global: Option<ParamSet> = None;
+        for &(t, seq, s, loss) in &stream {
+            let upd = || BufferedUpdate { params: None, staleness: s, train_loss: loss };
+            flat.absorb_from(&mut global, upd(), 0, t, seq);
+            sharded.absorb_from(&mut global, upd(), (seq % 3) as usize, t, seq);
+        }
+        let f = flat.take_window();
+        let k = sharded.take_window();
+        assert_eq!(f.0, k.0);
+        assert_eq!(f.1.to_bits(), k.1.to_bits(), "f32 loss fold must be bit-identical");
+        assert_eq!(f.2, k.2);
+        assert_eq!(f.3.to_bits(), k.3.to_bits());
     }
 
     #[test]

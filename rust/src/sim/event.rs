@@ -7,6 +7,14 @@
 //! no wall clock. That property is what makes fleet-scale simulations
 //! with churn bit-reproducible from a scenario seed (and lets the
 //! lockstep orchestrator serve as a differential-testing oracle).
+//!
+//! [`ShardedEventQueue`] extends the same contract to a hierarchical
+//! (learner → shard → global) coordinator: `k` per-shard heaps share a
+//! single global `seq` counter, and the merged pop order is the total
+//! order on `(time, seq, shard_id)`. Because `seq` is globally unique,
+//! the merged order is *identical* to pushing every event through one
+//! `EventQueue` — which is what makes any shard count bit-identical to
+//! `k = 1`.
 
 use std::cmp::Ordering;
 use std::collections::BinaryHeap;
@@ -101,6 +109,115 @@ impl<T> EventQueue<T> {
     }
 }
 
+/// Shard-tagged deterministic event queue: `k` per-shard min-heaps that
+/// share ONE global `(time, seq)` counter. `push_to(shard, ..)` stamps
+/// the next global `seq` exactly as a single [`EventQueue`] would, and
+/// `pop` performs a k-way merge over the shard heads, taking the
+/// smallest `(time, seq, shard_id)`.
+///
+/// The tie-break contract: `time` first, then `seq`, then `shard_id`.
+/// Since `seq` is globally unique the `shard_id` leg can never decide
+/// between two live events — it exists so the ordering is total (and
+/// documented) even if two shards were ever to hold equal `(time, seq)`
+/// keys. Consequence: for a fixed push sequence, the merged pop order
+/// is byte-identical to a single `EventQueue` regardless of `k`, which
+/// is the coordination-layer analogue of `runtime::pool`'s
+/// threads-invariance oracle.
+///
+/// `pop`/`peek` scan the `k` shard heads (O(k)); intended for small
+/// shard counts (regional aggregators), not per-learner sharding.
+#[derive(Debug, Clone)]
+pub struct ShardedEventQueue<T> {
+    heaps: Vec<BinaryHeap<Entry<T>>>,
+    seq: u64,
+    len: usize,
+}
+
+impl<T> ShardedEventQueue<T> {
+    /// Create a queue with `shards >= 1` per-shard heaps.
+    pub fn new(shards: usize) -> Self {
+        assert!(shards >= 1, "shard count must be >= 1 (got {shards})");
+        Self {
+            heaps: (0..shards).map(|_| BinaryHeap::new()).collect(),
+            seq: 0,
+            len: 0,
+        }
+    }
+
+    /// Number of shards (fixed at construction).
+    pub fn shards(&self) -> usize {
+        self.heaps.len()
+    }
+
+    /// Schedule `payload` at virtual time `time` on `shard`. The `seq`
+    /// stamp is global across shards, so cross-shard ties at the same
+    /// time still pop in push (FIFO) order.
+    pub fn push_to(&mut self, shard: usize, time: f64, payload: T) {
+        assert!(time.is_finite(), "event time must be finite (got {time})");
+        assert!(
+            shard < self.heaps.len(),
+            "shard {shard} out of range (k = {})",
+            self.heaps.len()
+        );
+        let seq = self.seq;
+        self.seq += 1;
+        self.len += 1;
+        self.heaps[shard].push(Entry { time, seq, payload });
+    }
+
+    /// Shard holding the globally earliest event: min over the shard
+    /// heads by `(time, seq, shard_id)`. Linear scan over `k` heads.
+    fn min_shard(&self) -> Option<usize> {
+        let mut best: Option<(f64, u64, usize)> = None;
+        for (shard, heap) in self.heaps.iter().enumerate() {
+            if let Some(e) = heap.peek() {
+                let earlier = match best {
+                    None => true,
+                    Some((bt, bs, _)) => e.time < bt || (e.time == bt && e.seq < bs),
+                };
+                if earlier {
+                    best = Some((e.time, e.seq, shard));
+                }
+            }
+        }
+        best.map(|(_, _, shard)| shard)
+    }
+
+    /// Pop the globally earliest event as `(time, shard_id, payload)`.
+    pub fn pop(&mut self) -> Option<(f64, usize, T)> {
+        let shard = self.min_shard()?;
+        let e = self.heaps[shard].pop().expect("min_shard points at a non-empty heap");
+        self.len -= 1;
+        Some((e.time, shard, e.payload))
+    }
+
+    /// The globally earliest event — `(time, shard_id, &payload)` —
+    /// without removing it.
+    pub fn peek(&self) -> Option<(f64, usize, &T)> {
+        let shard = self.min_shard()?;
+        self.heaps[shard].peek().map(|e| (e.time, shard, &e.payload))
+    }
+
+    /// Time of the globally earliest event without removing it.
+    pub fn peek_time(&self) -> Option<f64> {
+        self.min_shard()
+            .and_then(|s| self.heaps[s].peek().map(|e| e.time))
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Total number of events ever pushed (the global tie-break counter).
+    pub fn pushed(&self) -> u64 {
+        self.seq
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -184,5 +301,81 @@ mod tests {
     #[should_panic]
     fn nan_time_rejected() {
         EventQueue::new().push(f64::NAN, 0u8);
+    }
+
+    // ------------------------------------------------------------------
+    // ShardedEventQueue
+    // ------------------------------------------------------------------
+
+    #[test]
+    fn sharded_merge_equals_single_queue_any_shard_count() {
+        // The load-bearing invariant: for the same push sequence, the
+        // k-way merged pop order is byte-identical to one EventQueue,
+        // for every shard count.
+        let mut rng = Rng::new(0xC0FFEE);
+        let pushes: Vec<(f64, u64)> = (0..2_000u64)
+            .map(|i| ((rng.below(40)) as f64 * 0.25, i))
+            .collect();
+        let mut single = EventQueue::new();
+        for &(t, p) in &pushes {
+            single.push(t, p);
+        }
+        let oracle: Vec<(f64, u64)> = std::iter::from_fn(|| single.pop()).collect();
+        for k in [1usize, 2, 3, 8] {
+            let mut sharded = ShardedEventQueue::new(k);
+            for &(t, p) in &pushes {
+                // route by payload, the same way the engine routes by slot
+                sharded.push_to(p as usize % k, t, p);
+            }
+            assert_eq!(sharded.len(), pushes.len());
+            assert_eq!(sharded.pushed(), pushes.len() as u64);
+            let merged: Vec<(f64, u64)> =
+                std::iter::from_fn(|| sharded.pop().map(|(t, _, p)| (t, p))).collect();
+            assert_eq!(merged, oracle, "k={k} diverged from the single-queue oracle");
+        }
+    }
+
+    #[test]
+    fn sharded_pop_reports_owning_shard() {
+        let mut q = ShardedEventQueue::new(3);
+        q.push_to(2, 1.0, "on-2");
+        q.push_to(0, 0.5, "on-0");
+        q.push_to(1, 0.5, "on-1"); // same time as shard 0, later seq
+        assert_eq!(q.peek(), Some((0.5, 0, &"on-0")));
+        assert_eq!(q.peek_time(), Some(0.5));
+        assert_eq!(q.pop(), Some((0.5, 0, "on-0")));
+        assert_eq!(q.pop(), Some((0.5, 1, "on-1")));
+        assert_eq!(q.pop(), Some((1.0, 2, "on-2")));
+        assert_eq!(q.pop(), None);
+        assert!(q.is_empty());
+        assert_eq!(q.pushed(), 3);
+    }
+
+    #[test]
+    fn sharded_cross_shard_ties_pop_in_global_push_order() {
+        let mut q = ShardedEventQueue::new(4);
+        for i in 0..100u32 {
+            q.push_to(i as usize % 4, 7.5, i);
+        }
+        let order: Vec<u32> = std::iter::from_fn(|| q.pop().map(|(_, _, p)| p)).collect();
+        assert_eq!(order, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    #[should_panic]
+    fn sharded_zero_shards_rejected() {
+        let _ = ShardedEventQueue::<u8>::new(0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn sharded_out_of_range_shard_rejected() {
+        ShardedEventQueue::new(2).push_to(2, 0.0, 0u8);
+    }
+
+    #[test]
+    #[should_panic]
+    fn sharded_nan_time_rejected() {
+        ShardedEventQueue::new(1).push_to(0, f64::NAN, 0u8);
     }
 }

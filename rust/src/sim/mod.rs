@@ -8,12 +8,15 @@
 //! from the paper's eq. (5) and advanced on [`clock::VirtualClock`]. The
 //! event-driven engine schedules dispatch/arrival/churn on
 //! [`event::EventQueue`], a binary heap with stable `(time, seq)`
-//! ordering so fleet-scale runs stay deterministic.
+//! ordering so fleet-scale runs stay deterministic. The hierarchical
+//! coordinator shards that heap into [`event::ShardedEventQueue`] —
+//! `k` regional heaps merged by `(time, seq, shard_id)` — without
+//! changing the global pop order.
 
 pub mod clock;
 pub mod event;
 pub mod rng;
 
 pub use clock::VirtualClock;
-pub use event::EventQueue;
+pub use event::{EventQueue, ShardedEventQueue};
 pub use rng::Rng;

@@ -71,7 +71,7 @@ fn run_async(
     )
     .unwrap();
     engine = match epsilon {
-        Some(e) => engine.with_epsilon_window(e),
+        Some(e) => engine.with_epsilon_window(e).unwrap(),
         None => engine.with_per_event_dispatch(),
     };
     if let Some(f) = faults {
@@ -128,7 +128,7 @@ fn epsilon_zero_matches_the_oracle_in_phantom_mode_at_scale() {
         )
         .unwrap();
         engine = match epsilon {
-            Some(e) => engine.with_epsilon_window(e),
+            Some(e) => engine.with_epsilon_window(e).unwrap(),
             None => engine.with_per_event_dispatch(),
         };
         let records = engine
@@ -179,7 +179,7 @@ fn run_multi(
     )
     .unwrap();
     engine = match epsilon {
-        Some(e) => engine.with_epsilon_window(e),
+        Some(e) => engine.with_epsilon_window(e).unwrap(),
         None => engine.with_per_event_dispatch(),
     };
     let mm_opts = MultiModelOptions {

@@ -292,7 +292,8 @@ fn run_event_coalesced(
         ExecMode::Real { runtime: &rt, train: ds.train, test: ds.test },
     )
     .unwrap()
-    .with_epsilon_window(epsilon);
+    .with_epsilon_window(epsilon)
+    .unwrap();
     let opts = TrainOptions { cycles, lr: 0.1, eval_every: 1, reallocate_each_cycle: false };
     let (records, params) = engine
         .run_with_params(&EngineOptions {

@@ -1,0 +1,186 @@
+//! Shard-count determinism for the hierarchical sharded coordinator
+//! ([`asyncmel::coordinator::engine`] with `--shards k`).
+//!
+//! The sharded coordinator partitions the fleet across k per-shard
+//! event queues with regional aggregators, merging per-shard summary
+//! windows at aggregation boundaries under the deterministic
+//! `(time, seq, shard_id)` tie-break. The contract mirrors the thread
+//! pool's (see `pool_determinism.rs`): the shard count must be
+//! *invisible* in the results — `num_shards ∈ {1, 2, 8}` has to
+//! produce byte-identical `CycleRecord` streams, byte-identical final
+//! parameters, and equal `EngineStats`, through
+//!
+//! * the event engine's barrier and async policies (real numerics,
+//!   with churn),
+//! * the async policy with ε-window arrival coalescing,
+//! * the phantom path at a larger fleet (where the per-shard queues
+//!   actually matter),
+//! * the multi-model path (per-shard sub-fleet routing).
+
+use asyncmel::aggregation::{AggregationRule, AsyncAggregator, ParamSet};
+use asyncmel::allocation::AllocatorKind;
+use asyncmel::config::{ChurnConfig, Scenario, ScenarioConfig};
+use asyncmel::coordinator::{
+    record_digest, EngineOptions, EnginePolicy, EngineStats, EventEngine, ExecMode, TrainOptions,
+};
+use asyncmel::data::{synth, SynthConfig, SynthDataset};
+use asyncmel::multimodel::{report_digest, MultiModelConfig, MultiModelOptions, SchedulerKind};
+use asyncmel::runtime::Runtime;
+
+/// Tiny model so real-numerics runs stay fast in debug builds.
+const DIMS: [usize; 3] = [36, 16, 4];
+const SAMPLES: usize = 360;
+const SEED: u64 = 0x51AD_ED06;
+
+fn tiny_world(k: usize, shards: usize, churn: ChurnConfig) -> (Scenario, SynthDataset) {
+    let mut cfg = ScenarioConfig::paper_default()
+        .with_learners(k)
+        .with_cycle(15.0)
+        .with_total_samples(SAMPLES as u64)
+        .with_churn(churn)
+        .with_shards(shards)
+        .with_seed(SEED);
+    // match the model input width and keep τ small (debug friendly)
+    cfg.task.features = DIMS[0] as u64;
+    cfg.task.compute_cycles_per_sample = 2.0e7;
+    let ds = synth::generate(&SynthConfig {
+        side: 6,
+        classes: 4,
+        train: SAMPLES,
+        test: 96,
+        noise_std: 0.5,
+        ..SynthConfig::default()
+    });
+    (cfg.build(), ds)
+}
+
+fn tiny_opts() -> TrainOptions {
+    TrainOptions { cycles: 3, lr: 0.1, eval_every: 1, reallocate_each_cycle: false }
+}
+
+/// Real-numerics run with churn at a given shard count; records,
+/// final params and engine counters all enter the comparison.
+fn run_real(
+    shards: usize,
+    policy: EnginePolicy,
+    epsilon: Option<f64>,
+) -> (String, Option<ParamSet>, EngineStats) {
+    let rt = Runtime::native(&DIMS, 32, 48);
+    let (scenario, ds) = tiny_world(6, shards, ChurnConfig::new(0.1, 90.0));
+    let mut engine = EventEngine::new(
+        scenario,
+        AllocatorKind::Eta,
+        AggregationRule::FedAvg,
+        ExecMode::Real { runtime: &rt, train: ds.train, test: ds.test },
+    )
+    .unwrap();
+    if let Some(eps) = epsilon {
+        engine = engine.with_epsilon_window(eps).unwrap();
+    }
+    let (records, params) = engine
+        .run_with_params(&EngineOptions { train: tiny_opts(), policy })
+        .unwrap();
+    (record_digest(&records), params, engine.stats)
+}
+
+#[test]
+fn barrier_is_bit_identical_across_shard_counts() {
+    let (digest1, params1, stats1) = run_real(1, EnginePolicy::Barrier, None);
+    for shards in [2usize, 8] {
+        let (digest, params, stats) = run_real(shards, EnginePolicy::Barrier, None);
+        assert_eq!(digest1, digest, "records diverged at {shards} shards");
+        assert_eq!(params1, params, "params diverged at {shards} shards");
+        assert_eq!(stats1, stats, "engine stats diverged at {shards} shards");
+    }
+    assert!(params1.is_some(), "real mode must produce final params");
+}
+
+#[test]
+fn async_is_bit_identical_across_shard_counts() {
+    let policy = EnginePolicy::Async(AsyncAggregator::default());
+    let (digest1, params1, stats1) = run_real(1, policy, None);
+    for shards in [2usize, 8] {
+        let (digest, params, stats) = run_real(shards, policy, None);
+        assert_eq!(digest1, digest, "records diverged at {shards} shards");
+        assert_eq!(params1, params, "params diverged at {shards} shards");
+        assert_eq!(stats1, stats, "engine stats diverged at {shards} shards");
+    }
+}
+
+#[test]
+fn async_coalescing_is_bit_identical_across_shard_counts() {
+    // a wide ε forms multi-learner windows that now straddle shard
+    // queues; the merged drain order must still match the flat one
+    let policy = EnginePolicy::Async(AsyncAggregator::default());
+    let (digest1, params1, stats1) = run_real(1, policy, Some(2.0));
+    for shards in [2usize, 8] {
+        let (digest, params, stats) = run_real(shards, policy, Some(2.0));
+        assert_eq!(digest1, digest, "records diverged at {shards} shards");
+        assert_eq!(params1, params, "params diverged at {shards} shards");
+        assert_eq!(stats1, stats, "engine stats diverged at {shards} shards");
+    }
+}
+
+#[test]
+fn phantom_fleet_is_bit_identical_across_shard_counts() {
+    // larger phantom fleet with heavy churn: joins route to shard 0,
+    // churned-in learners route by id % k for their lifetime, and every
+    // cross-shard path has to stay invisible in the results
+    let run = |shards: usize| {
+        let (scenario, _) = tiny_world(300, shards, ChurnConfig::new(1.0, 60.0));
+        let mut engine = EventEngine::new(
+            scenario,
+            AllocatorKind::Eta,
+            AggregationRule::FedAvg,
+            ExecMode::Phantom,
+        )
+        .unwrap();
+        let opts = EngineOptions {
+            train: TrainOptions { cycles: 4, ..Default::default() },
+            policy: EnginePolicy::Async(AsyncAggregator::default()),
+        };
+        let records = engine.run(&opts).unwrap();
+        let per_shard = engine.shard_event_counts().to_vec();
+        (record_digest(&records), engine.stats, per_shard)
+    };
+    let (digest1, stats1, _) = run(1);
+    for shards in [2usize, 8] {
+        let (digest, stats, per_shard) = run(shards);
+        assert_eq!(digest1, digest, "records diverged at {shards} shards");
+        assert_eq!(stats1, stats, "engine stats diverged at {shards} shards");
+        // the per-shard counters are observability, not semantics: they
+        // must partition the same global event count
+        assert_eq!(per_shard.len(), shards);
+        assert_eq!(
+            per_shard.iter().sum::<u64>(),
+            stats.events,
+            "per-shard event counts must sum to the global total"
+        );
+    }
+}
+
+#[test]
+fn multimodel_is_bit_identical_across_shard_counts() {
+    // M concurrent models with per-shard sub-fleet routing: each model
+    // keeps per-shard summary windows merged by (time, seq, shard_id)
+    let run = |shards: usize| {
+        let rt = Runtime::native(&DIMS, 32, 48);
+        let (scenario, ds) = tiny_world(6, shards, ChurnConfig::new(0.1, 90.0));
+        let mut engine = EventEngine::new(
+            scenario,
+            AllocatorKind::Eta,
+            AggregationRule::FedAvg,
+            ExecMode::Real { runtime: &rt, train: ds.train, test: ds.test },
+        )
+        .unwrap();
+        let opts = MultiModelOptions {
+            train: tiny_opts(),
+            multi: MultiModelConfig::new(2, 2, SchedulerKind::Static),
+            ..Default::default()
+        };
+        report_digest(&engine.run_multi(&opts).unwrap())
+    };
+    let flat = run(1);
+    assert_eq!(flat, run(2), "M=2 diverged at 2 shards");
+    assert_eq!(flat, run(8), "M=2 diverged at 8 shards");
+}
