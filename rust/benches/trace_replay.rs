@@ -1,0 +1,89 @@
+//! Bench for **trace-driven workload replay** on the event engine.
+//!
+//! `cargo bench --bench trace_replay` does two things:
+//! 1. verifies the replay contract end-to-end: the same diurnal trace
+//!    replayed twice, and across `--shards {1, 8}`, produces
+//!    bit-identical records (skipped under `--smoke` — the contract is
+//!    also asserted in `rust/tests/checkpoint_restore.rs`);
+//! 2. times a K = 5000 phantom fleet replaying a diurnal capacity
+//!    trace with background Poisson churn under the async policy, flat
+//!    and at 8 coordinator shards.
+//!
+//! Passthrough flags: `--smoke` (fast CI config), `--json PATH`
+//! (machine-readable results; see scripts/bench_check.sh).
+
+use asyncmel::aggregation::{AggregationRule, AsyncAggregator};
+use asyncmel::allocation::AllocatorKind;
+use asyncmel::benchkit::{group, BenchConfig, BenchRun};
+use asyncmel::config::{ChurnConfig, ScenarioConfig, TraceConfig};
+use asyncmel::coordinator::{
+    record_digest, EngineOptions, EnginePolicy, EventEngine, ExecMode, TrainOptions,
+};
+
+const K: usize = 5000;
+const CYCLES: usize = 6;
+
+fn trace() -> TraceConfig {
+    // one diurnal period over the run's horizon (6 × 15 s), capacity
+    // swinging between K/2 and 2K across 12 retarget points, 4 regions
+    TraceConfig::gen_diurnal(11, 90.0, 90.0, 12, K / 2, 2 * K, 4)
+}
+
+fn engine(shards: usize) -> EventEngine<'static> {
+    let scenario = ScenarioConfig::paper_default()
+        .with_learners(K)
+        .with_churn(ChurnConfig::new(1.0, 120.0))
+        .with_trace(trace())
+        .unwrap()
+        .build();
+    EventEngine::new(
+        scenario,
+        AllocatorKind::Eta,
+        AggregationRule::FedAvg,
+        ExecMode::Phantom,
+    )
+    .unwrap()
+    .with_shards(shards)
+}
+
+fn opts() -> EngineOptions {
+    EngineOptions {
+        train: TrainOptions { cycles: CYCLES, ..Default::default() },
+        policy: EnginePolicy::Async(AsyncAggregator::default()),
+    }
+}
+
+fn verify_replay() {
+    println!("\n========== TRACE REPLAY — bit-identity check ==========");
+    let reference = record_digest(&engine(1).run(&opts()).unwrap());
+    let again = record_digest(&engine(1).run(&opts()).unwrap());
+    assert_eq!(reference, again, "same trace, same digest");
+    let sharded = record_digest(&engine(8).run(&opts()).unwrap());
+    assert_eq!(reference, sharded, "replay diverged at 8 shards");
+    println!("replay digest {} @ shards {{1, 1, 8}} — bit-identical", &reference[..16]);
+    println!("=======================================================\n");
+}
+
+fn main() {
+    let mut run = BenchRun::from_env("trace_replay");
+    if !run.smoke() {
+        verify_replay();
+    }
+
+    group("diurnal trace replay @ K=5000, 6 cycles, async (phantom)");
+    let cfg = BenchConfig {
+        measure: std::time::Duration::from_secs(5),
+        max_iters: 20,
+        ..Default::default()
+    };
+    run.bench("async_k5000", &cfg, || {
+        let mut e = engine(1);
+        e.run(&opts()).unwrap()
+    });
+    run.bench("async_k5000_shard8", &cfg, || {
+        let mut e = engine(8);
+        e.run(&opts()).unwrap()
+    });
+
+    run.finish().expect("bench json");
+}

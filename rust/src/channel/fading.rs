@@ -20,7 +20,18 @@
 use crate::channel::{pathloss_db, shannon_rate_bps, ChannelParams, Link};
 use crate::costmodel::{DataScenario, LearnerCost, TaskParams};
 use crate::device::Device;
-use crate::sim::Rng;
+use crate::sim::{Rng, RngState};
+
+/// Serializable mid-run snapshot of a [`FadingProcess`] (checkpointing:
+/// the Gauss–Markov state and its RNG stream must survive a restart for
+/// the resumed run to stay bit-identical). `params`/`rho` are rebuilt
+/// from the scenario config, so only the evolving state is captured.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FadingState {
+    pub shadow_db: Vec<f64>,
+    pub dist_m: Vec<f64>,
+    pub rng: RngState,
+}
 
 /// Gauss–Markov shadowing evolution over a fixed fleet.
 #[derive(Debug, Clone)]
@@ -59,6 +70,29 @@ impl FadingProcess {
         self.shadow_db
             .push(loss_db - pathloss_db(&self.params, link.dist_m));
         self.dist_m.push(link.dist_m);
+    }
+
+    /// Snapshot the evolving state for checkpointing.
+    pub fn state(&self) -> FadingState {
+        FadingState {
+            shadow_db: self.shadow_db.clone(),
+            dist_m: self.dist_m.clone(),
+            rng: self.rng.state(),
+        }
+    }
+
+    /// Rebuild a process mid-run from a checkpointed [`FadingState`];
+    /// subsequent [`Self::step`]s continue bit-identically.
+    pub fn from_state(params: ChannelParams, rho: f64, state: FadingState) -> Self {
+        assert!((0.0..=1.0).contains(&rho));
+        assert_eq!(state.shadow_db.len(), state.dist_m.len());
+        Self {
+            params,
+            rho,
+            shadow_db: state.shadow_db,
+            dist_m: state.dist_m,
+            rng: Rng::from_state(state.rng),
+        }
     }
 
     /// Number of learners tracked by the process.
@@ -189,6 +223,24 @@ mod tests {
             links[8].rate_bps,
             newcomer.rate_bps
         );
+    }
+
+    #[test]
+    fn state_round_trip_resumes_bit_identically() {
+        let (mut proc, devices) = setup(0.7);
+        proc.step(&devices);
+        proc.step(&devices);
+        let snap = proc.state();
+        let mut restored = FadingProcess::from_state(proc.params, proc.rho, snap.clone());
+        assert_eq!(restored.state(), snap);
+        for _ in 0..5 {
+            let a = proc.step(&devices);
+            let b = restored.step(&devices);
+            for (x, y) in a.iter().zip(&b) {
+                assert_eq!(x.rate_bps.to_bits(), y.rate_bps.to_bits());
+                assert_eq!(x.gain.to_bits(), y.gain.to_bits());
+            }
+        }
     }
 
     #[test]

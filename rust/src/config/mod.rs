@@ -6,6 +6,8 @@
 //! allocation layer and the coordinator consume. Presets reproduce the
 //! paper's §V-A environment.
 
+pub mod trace;
+
 use std::path::Path;
 
 use anyhow::{Context, Result};
@@ -16,6 +18,25 @@ use crate::costmodel::{Bounds, DataScenario, LearnerCost, TaskParams};
 use crate::device::{sample_fleet, Device, DeviceRanges};
 use crate::multimodel::{AdaptiveBufferConfig, ModelTaskSpec, MultiModelConfig, SchedulerKind};
 use crate::sim::Rng;
+
+pub use trace::{TraceAction, TraceConfig, TraceEvent};
+
+/// Reject JSON object keys outside `known`, naming the offender — the
+/// scenario intake used to silently ignore typo'd keys (`epsilon_windw`
+/// would quietly run with the default ε), which is the worst possible
+/// failure mode for a reproducibility-first config layer.
+fn reject_unknown_keys(v: &Value, known: &[&str], section: &str) -> Result<()> {
+    if let Value::Obj(m) = v {
+        for k in m.keys() {
+            anyhow::ensure!(
+                known.contains(&k.as_str()),
+                "unknown {section} key '{k}' (known: {})",
+                known.join(", ")
+            );
+        }
+    }
+    Ok(())
+}
 
 /// Serialize task constants — shared by the scenario-level `task`
 /// section and per-model heterogeneous `multimodel.specs[].task`
@@ -199,6 +220,12 @@ pub struct ScenarioConfig {
     /// (default). Any value produces a bit-identical run — sharding
     /// never changes results, only coordination topology.
     pub num_shards: usize,
+    /// Replayable churn trace (event engine only; None = no scripted
+    /// events). Plugs in *beside* the Poisson/exponential [`ChurnConfig`]
+    /// — both may be active; trace events are pre-scheduled on the
+    /// deterministic queue so a trace replays bit-identically across
+    /// shard and thread counts.
+    pub trace: Option<TraceConfig>,
 }
 
 impl Default for ScenarioConfig {
@@ -229,6 +256,7 @@ impl ScenarioConfig {
             num_threads: 1,
             epsilon_window: 0.0,
             num_shards: 1,
+            trace: None,
         }
     }
 
@@ -295,6 +323,12 @@ impl ScenarioConfig {
     pub fn with_shards(mut self, num_shards: usize) -> Self {
         self.num_shards = num_shards;
         self
+    }
+    /// Attach a replayable churn trace (validated; event engine only).
+    pub fn with_trace(mut self, trace: TraceConfig) -> Result<Self> {
+        trace.validate()?;
+        self.trace = Some(trace);
+        Ok(self)
     }
 
     /// Serialize to a JSON value (own [`crate::json`] substrate).
@@ -385,12 +419,39 @@ impl ScenarioConfig {
         if let Some(rho) = self.fading_rho {
             v.set("fading_rho", rho);
         }
+        if let Some(trace) = &self.trace {
+            v.set("trace", trace.to_json());
+        }
         v
     }
 
     /// Deserialize from a JSON value; absent fields fall back to the
     /// paper defaults so configs can be sparse overrides.
     pub fn from_json(v: &Value) -> Result<Self> {
+        reject_unknown_keys(
+            v,
+            &[
+                "seed",
+                "num_learners",
+                "total_samples",
+                "t_cycle_s",
+                "d_lo_frac",
+                "d_hi_frac",
+                "data_scenario",
+                "engine",
+                "churn",
+                "fading_rho",
+                "num_threads",
+                "epsilon_window",
+                "num_shards",
+                "channel",
+                "devices",
+                "task",
+                "multimodel",
+                "trace",
+            ],
+            "scenario",
+        )?;
         let mut cfg = ScenarioConfig::paper_default();
         if let Some(x) = v.get("seed") {
             cfg.seed = x.as_u64()?;
@@ -500,6 +561,11 @@ impl ScenarioConfig {
         // parsed after `task` so per-model spec.task sections overlay
         // the scenario task that results from this config
         if let Some(mm) = v.get("multimodel") {
+            reject_unknown_keys(
+                mm,
+                &["num_models", "buffer_size", "scheduler", "weights", "adaptive_buffer", "specs"],
+                "multimodel",
+            )?;
             if let Some(x) = mm.get("num_models") {
                 cfg.multimodel.num_models = x.as_usize()?;
                 anyhow::ensure!(cfg.multimodel.num_models >= 1, "num_models must be >= 1");
@@ -584,6 +650,9 @@ impl ScenarioConfig {
                 }
                 cfg.multimodel.specs = specs;
             }
+        }
+        if let Some(tr) = v.get("trace") {
+            cfg.trace = Some(TraceConfig::from_json(tr)?);
         }
         Ok(cfg)
     }
@@ -916,6 +985,76 @@ mod tests {
 
         // 0 shards is rejected at the JSON intake path
         let bad = crate::json::parse(r#"{"num_shards": 0}"#).unwrap();
+        assert!(ScenarioConfig::from_json(&bad).is_err());
+    }
+
+    #[test]
+    fn unknown_keys_are_rejected_by_name() {
+        // Regression: the intake used to silently ignore typo'd keys, so
+        // `epsilon_windw` ran with the default ε and nobody noticed.
+        for (bad, offender) in [
+            (r#"{"epsilon_windw": 0.5}"#, "epsilon_windw"),
+            (r#"{"seeed": 1}"#, "seeed"),
+            (r#"{"num_learner": 4}"#, "num_learner"),
+            (r#"{"multimodel": {"num_model": 2}}"#, "num_model"),
+            (r#"{"multimodel": {"buffer_sizes": 3}}"#, "buffer_sizes"),
+            (r#"{"trace": {"eventz": []}}"#, "eventz"),
+        ] {
+            let v = crate::json::parse(bad).unwrap();
+            let err = match ScenarioConfig::from_json(&v) {
+                Err(e) => e.to_string(),
+                Ok(_) => panic!("accepted: {bad}"),
+            };
+            assert!(err.contains(offender), "error '{err}' does not name '{offender}'");
+        }
+    }
+
+    #[test]
+    fn every_serialized_key_is_known_to_the_parser() {
+        // to_json and the from_json known-key lists must never drift:
+        // a fully-populated config (every optional section present) must
+        // re-parse without tripping the unknown-key rejection.
+        let cfg = ScenarioConfig::paper_default()
+            .with_engine(EngineKind::Event)
+            .with_churn(ChurnConfig::new(0.5, 120.0))
+            .with_fading_rho(0.9)
+            .with_threads(2)
+            .with_shards(4)
+            .with_epsilon_window(0.5)
+            .unwrap()
+            .with_multimodel(
+                MultiModelConfig::new(2, 2, SchedulerKind::CostModel)
+                    .with_adaptive_buffer(AdaptiveBufferConfig::new(8, 1.5, 0.3)),
+            )
+            .with_trace(TraceConfig::gen_diurnal(1, 300.0, 150.0, 8, 4, 12, 2))
+            .unwrap();
+        let text = cfg.to_json().pretty();
+        let back = ScenarioConfig::from_json(&crate::json::parse(&text).unwrap())
+            .expect("round trip must accept every key to_json emits");
+        assert_eq!(back.trace, cfg.trace);
+    }
+
+    #[test]
+    fn trace_round_trip_and_validation() {
+        let trace = TraceConfig::new(
+            2,
+            vec![
+                TraceEvent { time: 0.0, action: TraceAction::Join { count: 3 } },
+                TraceEvent { time: 15.0, action: TraceAction::Outage { region: 1, fraction: 0.5 } },
+            ],
+        )
+        .unwrap();
+        let cfg = ScenarioConfig::paper_default().with_trace(trace.clone()).unwrap();
+        let text = cfg.to_json().pretty();
+        let back = ScenarioConfig::from_json(&crate::json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.trace, Some(trace));
+
+        // sparse configs carry no trace
+        let sparse = ScenarioConfig::from_json(&crate::json::parse("{}").unwrap()).unwrap();
+        assert_eq!(sparse.trace, None);
+
+        // invalid traces are rejected at the scenario intake too
+        let bad = crate::json::parse(r#"{"trace": {"events": [{"t": -1.0, "join": 1}]}}"#).unwrap();
         assert!(ScenarioConfig::from_json(&bad).is_err());
     }
 

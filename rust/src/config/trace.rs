@@ -1,0 +1,422 @@
+//! Replayable churn traces — scheduled fleet dynamics beside the
+//! Poisson/exponential churn model.
+//!
+//! A [`TraceConfig`] is a time-ordered script of fleet events (joins,
+//! leaves, capacity retargets, correlated regional outages) loaded from
+//! JSON or produced by the seeded generators below, so production-shaped
+//! workloads — diurnal load curves, flash crowds, regional failures —
+//! replay bit-identically from a file + scenario seed. The event engine
+//! pre-schedules every trace event on its deterministic queue at start
+//! of run; simultaneous trace events keep file order under the global
+//! `(time, seq, shard_id)` tie-break, and a trace that ends before the
+//! simulation horizon simply stops injecting events (the engine keeps
+//! running on whatever churn model is configured).
+//!
+//! ## JSON schema
+//!
+//! ```json
+//! {
+//!   "regions": 4,
+//!   "events": [
+//!     {"t": 0.0,   "join": 5},
+//!     {"t": 30.0,  "capacity": 24},
+//!     {"t": 45.0,  "leave": 2},
+//!     {"t": 60.0,  "outage": {"region": 1, "fraction": 0.5}}
+//!   ]
+//! }
+//! ```
+//!
+//! Each event object carries `t` (virtual seconds, finite and >= 0) and
+//! exactly one action key. `regions` partitions the fleet for outage
+//! targeting as `slot % regions` — deliberately independent of the
+//! coordinator shard count so a trace replays bit-identically across
+//! `--shards` values. Unknown keys are rejected by name, like the rest
+//! of the scenario-config intake.
+
+use anyhow::{anyhow, bail, ensure, Result};
+
+use crate::json::Value;
+use crate::sim::Rng;
+
+/// One scheduled fleet action.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum TraceAction {
+    /// `count` learners join (subject to the churn `max_learners` cap).
+    Join { count: usize },
+    /// `count` seeded-random alive learners leave (down to the churn
+    /// `min_learners` floor).
+    Leave { count: usize },
+    /// Steer the alive count toward `target` by joining or removing the
+    /// difference — the primitive diurnal curves are built from.
+    Capacity { target: usize },
+    /// Correlated regional failure: kill `fraction` of the alive
+    /// learners in `region` (= slots with `slot % regions == region`).
+    Outage { region: usize, fraction: f64 },
+}
+
+/// A [`TraceAction`] stamped with its virtual firing time.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TraceEvent {
+    /// Virtual time in seconds (finite, >= 0; 0 fires before the first
+    /// natural arrival of the run).
+    pub time: f64,
+    pub action: TraceAction,
+}
+
+/// A replayable churn trace: a region count plus a scripted event list.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceConfig {
+    /// Fleet partition count for outage targeting (`slot % regions`).
+    pub regions: usize,
+    /// Events replay in list order; same-time events keep list order via
+    /// the engine queue's global seq counter.
+    pub events: Vec<TraceEvent>,
+}
+
+impl TraceConfig {
+    /// Build and validate a trace.
+    pub fn new(regions: usize, events: Vec<TraceEvent>) -> Result<Self> {
+        let t = Self { regions, events };
+        t.validate()?;
+        Ok(t)
+    }
+
+    /// An empty trace: valid, injects nothing.
+    pub fn empty() -> Self {
+        Self { regions: 1, events: Vec::new() }
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        ensure!(self.regions >= 1, "trace.regions must be >= 1, got {}", self.regions);
+        for (i, e) in self.events.iter().enumerate() {
+            ensure!(
+                e.time.is_finite() && e.time >= 0.0,
+                "trace.events[{i}].t must be finite and >= 0, got {}",
+                e.time
+            );
+            match e.action {
+                TraceAction::Join { count } | TraceAction::Leave { count } => {
+                    ensure!(count >= 1, "trace.events[{i}] count must be >= 1");
+                }
+                TraceAction::Capacity { .. } => {}
+                TraceAction::Outage { region, fraction } => {
+                    ensure!(
+                        region < self.regions,
+                        "trace.events[{i}].outage.region {region} out of range (regions = {})",
+                        self.regions
+                    );
+                    ensure!(
+                        (0.0..=1.0).contains(&fraction),
+                        "trace.events[{i}].outage.fraction must be in [0, 1], got {fraction}"
+                    );
+                }
+            }
+        }
+        Ok(())
+    }
+
+    // ------------------------------------------------------------------
+    // JSON codec
+    // ------------------------------------------------------------------
+
+    pub fn to_json(&self) -> Value {
+        let events: Vec<Value> = self
+            .events
+            .iter()
+            .map(|e| {
+                let mut o = Value::obj();
+                o.set("t", e.time);
+                match e.action {
+                    TraceAction::Join { count } => {
+                        o.set("join", count);
+                    }
+                    TraceAction::Leave { count } => {
+                        o.set("leave", count);
+                    }
+                    TraceAction::Capacity { target } => {
+                        o.set("capacity", target);
+                    }
+                    TraceAction::Outage { region, fraction } => {
+                        let mut out = Value::obj();
+                        out.set("region", region).set("fraction", fraction);
+                        o.set("outage", out);
+                    }
+                }
+                o
+            })
+            .collect();
+        let mut v = Value::obj();
+        v.set("regions", self.regions).set("events", Value::Arr(events));
+        v
+    }
+
+    pub fn from_json(v: &Value) -> Result<Self> {
+        if let Value::Obj(m) = v {
+            for k in m.keys() {
+                ensure!(
+                    matches!(k.as_str(), "regions" | "events"),
+                    "unknown trace key '{k}' (known: regions, events)"
+                );
+            }
+        } else {
+            bail!("trace must be a JSON object, got {v:?}");
+        }
+        let regions = match v.get("regions") {
+            Some(x) => x.as_usize()?,
+            None => 1,
+        };
+        let mut events = Vec::new();
+        if let Some(arr) = v.get("events") {
+            for (i, o) in arr.as_arr()?.iter().enumerate() {
+                events.push(Self::event_from_json(o).map_err(|e| anyhow!("trace.events[{i}]: {e}"))?);
+            }
+        }
+        Self::new(regions, events)
+    }
+
+    fn event_from_json(o: &Value) -> Result<TraceEvent> {
+        let m = match o {
+            Value::Obj(m) => m,
+            _ => bail!("trace event must be a JSON object, got {o:?}"),
+        };
+        for k in m.keys() {
+            ensure!(
+                matches!(k.as_str(), "t" | "join" | "leave" | "capacity" | "outage"),
+                "unknown trace event key '{k}' (known: t, join, leave, capacity, outage)"
+            );
+        }
+        let time = o.f64_field("t")?;
+        let mut action = None;
+        let mut set = |a: TraceAction| -> Result<()> {
+            ensure!(action.is_none(), "trace event carries more than one action");
+            action = Some(a);
+            Ok(())
+        };
+        if let Some(x) = o.get("join") {
+            set(TraceAction::Join { count: x.as_usize()? })?;
+        }
+        if let Some(x) = o.get("leave") {
+            set(TraceAction::Leave { count: x.as_usize()? })?;
+        }
+        if let Some(x) = o.get("capacity") {
+            set(TraceAction::Capacity { target: x.as_usize()? })?;
+        }
+        if let Some(x) = o.get("outage") {
+            if let Value::Obj(om) = x {
+                for k in om.keys() {
+                    ensure!(
+                        matches!(k.as_str(), "region" | "fraction"),
+                        "unknown outage key '{k}' (known: region, fraction)"
+                    );
+                }
+            }
+            set(TraceAction::Outage {
+                region: x.usize_field("region")?,
+                fraction: x.f64_field("fraction")?,
+            })?;
+        }
+        let action =
+            action.ok_or_else(|| anyhow!("trace event needs one of join/leave/capacity/outage"))?;
+        Ok(TraceEvent { time, action })
+    }
+
+    /// Load a standalone trace file (the `asyncmel serve` submission
+    /// format embeds the same object under `scenario.trace`).
+    pub fn load(path: impl AsRef<std::path::Path>) -> Result<Self> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .map_err(|e| anyhow!("reading {}: {e}", path.as_ref().display()))?;
+        Self::from_json(&crate::json::parse(&text)?)
+    }
+
+    // ------------------------------------------------------------------
+    // Seeded generators — reproducible production-shaped traces
+    // ------------------------------------------------------------------
+
+    /// Diurnal load curve: `samples` capacity retargets over
+    /// `horizon_s`, following a raised cosine between `base` and `peak`
+    /// learners with small seeded jitter (±10% of the swing).
+    pub fn gen_diurnal(
+        seed: u64,
+        horizon_s: f64,
+        period_s: f64,
+        samples: usize,
+        base: usize,
+        peak: usize,
+        regions: usize,
+    ) -> Self {
+        assert!(horizon_s > 0.0 && period_s > 0.0 && samples >= 1 && peak >= base);
+        let mut rng = Rng::new(seed ^ 0xD1_0BA1);
+        let swing = (peak - base) as f64;
+        let events = (0..samples)
+            .map(|i| {
+                let t = horizon_s * i as f64 / samples as f64;
+                let phase = 2.0 * std::f64::consts::PI * t / period_s;
+                let level = 0.5 - 0.5 * phase.cos();
+                let jitter = rng.uniform_range(-0.1, 0.1) * swing;
+                let target = (base as f64 + swing * level + jitter).round().max(1.0) as usize;
+                TraceEvent { time: t, action: TraceAction::Capacity { target } }
+            })
+            .collect();
+        Self::new(regions, events).expect("generated diurnal trace is valid")
+    }
+
+    /// Flash crowd: a burst of joins ramping in over `ramp_steps`
+    /// seeded-jittered steps starting at `t_start_s`, held for
+    /// `hold_s`, then drained by an equal number of leaves.
+    pub fn gen_flash_crowd(
+        seed: u64,
+        t_start_s: f64,
+        ramp_steps: usize,
+        joins_per_step: usize,
+        hold_s: f64,
+        regions: usize,
+    ) -> Self {
+        assert!(t_start_s >= 0.0 && ramp_steps >= 1 && joins_per_step >= 1 && hold_s >= 0.0);
+        let mut rng = Rng::new(seed ^ 0xF1A5_4C20);
+        let mut events = Vec::with_capacity(2 * ramp_steps);
+        let mut t = t_start_s;
+        for _ in 0..ramp_steps {
+            events.push(TraceEvent {
+                time: t,
+                action: TraceAction::Join { count: joins_per_step },
+            });
+            t += rng.uniform_range(0.5, 2.0);
+        }
+        let mut t = t + hold_s;
+        for _ in 0..ramp_steps {
+            events.push(TraceEvent {
+                time: t,
+                action: TraceAction::Leave { count: joins_per_step },
+            });
+            t += rng.uniform_range(0.5, 2.0);
+        }
+        Self::new(regions, events).expect("generated flash-crowd trace is valid")
+    }
+
+    /// Correlated regional outages: `outages` failures at seeded times
+    /// over `horizon_s`, each killing `fraction` of a seeded-random
+    /// region, followed `recover_s` later by a recovery join sized to
+    /// the expected loss (`expected_alive * fraction / regions`).
+    pub fn gen_regional_outages(
+        seed: u64,
+        horizon_s: f64,
+        outages: usize,
+        fraction: f64,
+        recover_s: f64,
+        regions: usize,
+        expected_alive: usize,
+    ) -> Self {
+        assert!(horizon_s > 0.0 && (0.0..=1.0).contains(&fraction) && regions >= 1);
+        let mut rng = Rng::new(seed ^ 0x007A_6E00);
+        let mut events = Vec::with_capacity(2 * outages);
+        for _ in 0..outages {
+            let t = rng.uniform_range(0.0, horizon_s);
+            let region = rng.below(regions as u64) as usize;
+            events.push(TraceEvent { time: t, action: TraceAction::Outage { region, fraction } });
+            let back = ((expected_alive as f64 / regions as f64) * fraction).round() as usize;
+            if back >= 1 && recover_s > 0.0 {
+                events.push(TraceEvent {
+                    time: t + recover_s,
+                    action: TraceAction::Join { count: back },
+                });
+            }
+        }
+        Self::new(regions, events).expect("generated outage trace is valid")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn json_round_trip_covers_every_action() {
+        let trace = TraceConfig::new(
+            4,
+            vec![
+                TraceEvent { time: 0.0, action: TraceAction::Join { count: 5 } },
+                TraceEvent { time: 7.5, action: TraceAction::Leave { count: 2 } },
+                TraceEvent { time: 7.5, action: TraceAction::Capacity { target: 12 } },
+                TraceEvent {
+                    time: 30.0,
+                    action: TraceAction::Outage { region: 3, fraction: 0.5 },
+                },
+            ],
+        )
+        .unwrap();
+        let text = trace.to_json().pretty();
+        let back = TraceConfig::from_json(&crate::json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back, trace);
+    }
+
+    #[test]
+    fn empty_trace_is_valid_and_round_trips() {
+        let trace = TraceConfig::empty();
+        let back = TraceConfig::from_json(&trace.to_json()).unwrap();
+        assert_eq!(back, trace);
+        assert!(back.events.is_empty());
+    }
+
+    #[test]
+    fn rejects_invalid_traces() {
+        for bad in [
+            // unknown keys, at every level, named in the error
+            r#"{"regionz": 2}"#,
+            r#"{"events": [{"t": 1.0, "joyn": 3}]}"#,
+            r#"{"events": [{"t": 1.0, "outage": {"region": 0, "frac": 0.5}}]}"#,
+            // two actions in one event
+            r#"{"events": [{"t": 1.0, "join": 3, "leave": 1}]}"#,
+            // no action
+            r#"{"events": [{"t": 1.0}]}"#,
+            // bad values
+            r#"{"events": [{"t": -1.0, "join": 3}]}"#,
+            r#"{"events": [{"t": 1.0, "join": 0}]}"#,
+            r#"{"regions": 0}"#,
+            r#"{"regions": 2, "events": [{"t": 0.0, "outage": {"region": 2, "fraction": 0.5}}]}"#,
+            r#"{"events": [{"t": 0.0, "outage": {"region": 0, "fraction": 1.5}}]}"#,
+        ] {
+            let v = crate::json::parse(bad).unwrap();
+            assert!(TraceConfig::from_json(&v).is_err(), "accepted: {bad}");
+        }
+    }
+
+    #[test]
+    fn unknown_key_errors_name_the_key() {
+        let v = crate::json::parse(r#"{"regionz": 2}"#).unwrap();
+        let err = TraceConfig::from_json(&v).unwrap_err().to_string();
+        assert!(err.contains("regionz"), "{err}");
+    }
+
+    #[test]
+    fn generators_are_seed_deterministic() {
+        let a = TraceConfig::gen_diurnal(7, 600.0, 300.0, 16, 8, 24, 2);
+        let b = TraceConfig::gen_diurnal(7, 600.0, 300.0, 16, 8, 24, 2);
+        assert_eq!(a, b);
+        assert_ne!(a, TraceConfig::gen_diurnal(8, 600.0, 300.0, 16, 8, 24, 2));
+        assert_eq!(a.events.len(), 16);
+        for e in &a.events {
+            match e.action {
+                TraceAction::Capacity { target } => {
+                    assert!(target >= 1 && target <= 27, "target {target}")
+                }
+                other => panic!("diurnal generated {other:?}"),
+            }
+        }
+
+        let f = TraceConfig::gen_flash_crowd(11, 10.0, 5, 4, 60.0, 1);
+        assert_eq!(f, TraceConfig::gen_flash_crowd(11, 10.0, 5, 4, 60.0, 1));
+        assert_eq!(f.events.len(), 10);
+        // ramp strictly precedes the drain
+        assert!(f.events[..5]
+            .iter()
+            .all(|e| matches!(e.action, TraceAction::Join { count: 4 })));
+        assert!(f.events[5..]
+            .iter()
+            .all(|e| matches!(e.action, TraceAction::Leave { count: 4 })));
+
+        let o = TraceConfig::gen_regional_outages(3, 900.0, 4, 0.5, 30.0, 4, 40);
+        assert_eq!(o, TraceConfig::gen_regional_outages(3, 900.0, 4, 0.5, 30.0, 4, 40));
+        assert_eq!(o.events.len(), 8, "each outage pairs with a recovery join");
+        o.validate().unwrap();
+    }
+}

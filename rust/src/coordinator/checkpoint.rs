@@ -1,0 +1,953 @@
+//! Bit-identical checkpoint/restore of [`EventEngine`] runs.
+//!
+//! A checkpoint is captured at an **aggregation boundary** — immediately
+//! after the engine schedules the next `Boundary` event — which is the
+//! one instant where every per-cycle scratch structure (ε-windows, the
+//! barrier buffer, pending multi-model moves) is empty by construction.
+//! What remains is the durable state:
+//!
+//! * the event queue contents **with their original seq stamps** plus
+//!   the global seq counter (so the `(time, seq, shard_id)` pop order
+//!   is preserved exactly, even when restoring into a different shard
+//!   count),
+//! * the fleet (learners + alive flags), the allocation and its slot
+//!   maps, the dirty flag,
+//! * every RNG stream (engine, churn, fading) as raw xoshiro words,
+//! * model state (versions, buffers, in-flight maps, windows,
+//!   schedulers) for multi-model runs,
+//! * the records produced so far and the running [`EngineStats`].
+//!
+//! The serialized form is JSON via the in-tree [`crate::json`] module.
+//! **Every float and every RNG word is hex-encoded** ([`json::f64_to_hex`]
+//! and friends): `Value::Num` is an `f64`, which cannot hold all `u64`s
+//! and would round-trip `NaN`/`∞` lossily, and bit-identity is the whole
+//! point. Resuming a run from a checkpoint produces the same records,
+//! final params, digests and [`EngineStats`] as the uninterrupted run,
+//! bit for bit — see `tests/checkpoint_restore.rs`.
+//!
+//! [`EventEngine`]: crate::coordinator::EventEngine
+
+use std::path::Path;
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::aggregation::ParamSet;
+use crate::allocation::Allocation;
+use crate::channel::fading::FadingState;
+use crate::channel::Link;
+use crate::coordinator::engine::EngineStats;
+use crate::coordinator::learner::Learner;
+use crate::coordinator::orchestrator::CycleRecord;
+use crate::costmodel::LearnerCost;
+use crate::device::{Device, DeviceClass};
+use crate::json::{self, Value};
+use crate::sim::RngState;
+
+/// On-disk format tag; bump on breaking layout changes.
+pub const CHECKPOINT_FORMAT: &str = "asyncmel-checkpoint-v1";
+
+// ---------------------------------------------------------------------------
+// containers
+// ---------------------------------------------------------------------------
+
+/// Public mirror of the engine's private event enum, used for the
+/// serialized queue. `Trace { idx }` indexes into the scenario's
+/// [`TraceConfig`](crate::config::TraceConfig) event list.
+#[derive(Debug, Clone, PartialEq)]
+pub enum EventCheckpoint {
+    Boundary,
+    Arrival {
+        slot: usize,
+        model: usize,
+        version_at_dispatch: u64,
+        tau: u64,
+        d: u64,
+        params: Option<ParamSet>,
+        train_loss: f32,
+    },
+    Redispatch {
+        slot: usize,
+    },
+    Join,
+    Leave {
+        slot: usize,
+    },
+    Trace {
+        idx: usize,
+    },
+}
+
+/// Engine state shared by single- and multi-model runs.
+///
+/// `initial_k` and everything scenario-derived (channel params, churn
+/// rates, the trace itself) are *not* serialized: a checkpoint is only
+/// valid against the scenario that produced it, and the caller restores
+/// into an engine built from that same scenario.
+#[derive(Debug, Clone)]
+pub struct CoreState {
+    /// Virtual time at capture (the just-finished boundary).
+    pub now: f64,
+    /// Monotone arrival counter (feeds the ε-window merge order).
+    pub arrival_seq: u64,
+    /// Global seq counter of the event queue (next stamp to hand out).
+    pub queue_next_seq: u64,
+    /// Pending events in global pop order, with original stamps.
+    pub queue: Vec<(f64, u64, EventCheckpoint)>,
+    /// Every slot ever created (learner + alive flag), in slot order.
+    pub slots: Vec<(Learner, bool)>,
+    pub alive_learners: usize,
+    pub rng: RngState,
+    pub churn_rng: RngState,
+    pub fading: Option<FadingState>,
+    /// Current allocation + the costs/slot map it was solved for
+    /// (`alloc_pos` is rebuilt from `alloc_slots` on restore).
+    pub alloc: Option<(Allocation, Vec<LearnerCost>, Vec<usize>)>,
+    pub dirty: bool,
+    pub last_solve_ms: f64,
+    pub stats: EngineStats,
+    /// Per-shard event counts; collapsed onto shard 0 when restoring
+    /// into a different shard count (the sum is what's meaningful).
+    pub shard_events: Vec<u64>,
+}
+
+/// Suspended single-model run ([`EventEngine::run_to_checkpoint`]).
+///
+/// [`EventEngine::run_to_checkpoint`]: crate::coordinator::EventEngine::run_to_checkpoint
+#[derive(Debug, Clone)]
+pub struct EngineCheckpoint {
+    pub core: CoreState,
+    /// Async aggregation version counter at capture.
+    pub version: u64,
+    /// Global model params (`None` in phantom mode).
+    pub global: Option<ParamSet>,
+    /// Records produced so far.
+    pub records: Vec<CycleRecord>,
+}
+
+/// Suspended multi-model run ([`EventEngine::run_multi_to_checkpoint`]).
+///
+/// The `models` / `scheduler` / `subs` blobs are produced and consumed
+/// by the `export_state` / `import_state` pairs in [`crate::multimodel`];
+/// config-derived fields (weights, aggregators, budgets) are rebuilt
+/// from the options at restore and only the evolving state travels.
+///
+/// [`EventEngine::run_multi_to_checkpoint`]: crate::coordinator::EventEngine::run_multi_to_checkpoint
+#[derive(Debug, Clone)]
+pub struct MultiModelCheckpoint {
+    pub core: CoreState,
+    /// Total boundary cycles completed across the run.
+    pub done_cycles: usize,
+    /// Per-model record streams produced so far.
+    pub records: Vec<Vec<CycleRecord>>,
+    /// Per-model global params (`None` in phantom mode).
+    pub globals: Vec<Option<ParamSet>>,
+    /// Slot → model assignment, one entry per slot ever created.
+    pub model_of: Vec<usize>,
+    /// Per-model [`ModelInstance`](crate::multimodel::ModelInstance) state.
+    pub models: Vec<Value>,
+    /// Scheduler state ([`ModelScheduler::export_state`](crate::multimodel::ModelScheduler::export_state)).
+    pub scheduler: Value,
+    /// Per-model [`SubFleetAlloc`](crate::multimodel::SubFleetAlloc) state.
+    pub subs: Vec<Value>,
+}
+
+// ---------------------------------------------------------------------------
+// shared JSON helpers (also used by multimodel's export/import pairs)
+// ---------------------------------------------------------------------------
+
+/// Hex-encode an `f64` into a [`Value::Str`] (bit-exact round trip).
+pub fn hex_f64(v: f64) -> Value {
+    Value::Str(json::f64_to_hex(v))
+}
+
+/// Hex-encode an `f32` into a [`Value::Str`] (bit-exact round trip).
+pub fn hex_f32(v: f32) -> Value {
+    Value::Str(json::f32_to_hex(v))
+}
+
+/// Read a hex-encoded `f64` field written by [`hex_f64`].
+pub fn f64_hex_field(v: &Value, key: &str) -> Result<f64> {
+    json::f64_from_hex(v.field(key)?.as_str()?).with_context(|| format!("field '{key}'"))
+}
+
+/// Read a hex-encoded `f32` field written by [`hex_f32`].
+pub fn f32_hex_field(v: &Value, key: &str) -> Result<f32> {
+    json::f32_from_hex(v.field(key)?.as_str()?).with_context(|| format!("field '{key}'"))
+}
+
+fn u64_to_hex(v: u64) -> String {
+    format!("{v:016x}")
+}
+
+fn u64_from_hex(s: &str) -> Result<u64> {
+    ensure!(s.len() == 16, "u64 hex must be 16 chars, got {}", s.len());
+    u64::from_str_radix(s, 16).context("invalid u64 hex")
+}
+
+/// Serialize optional model params as `Null` or an array of per-layer
+/// tensor hex strings.
+pub fn params_to_json(p: &Option<ParamSet>) -> Value {
+    match p {
+        None => Value::Null,
+        Some(layers) => Value::Arr(
+            layers
+                .iter()
+                .map(|l| Value::Str(json::tensor_to_hex(l)))
+                .collect(),
+        ),
+    }
+}
+
+/// Inverse of [`params_to_json`].
+pub fn params_from_json(v: &Value) -> Result<Option<ParamSet>> {
+    match v {
+        Value::Null => Ok(None),
+        other => {
+            let layers = other
+                .as_arr()?
+                .iter()
+                .map(|l| json::tensor_from_hex(l.as_str()?))
+                .collect::<Result<Vec<_>>>()?;
+            Ok(Some(layers))
+        }
+    }
+}
+
+/// Serialize an RNG snapshot: state words as 16-char hex, the cached
+/// Box–Muller spare (if any) as hex `f64`.
+pub fn rng_state_to_json(s: &RngState) -> Value {
+    let mut v = Value::obj();
+    v.set(
+        "s",
+        Value::Arr(s.s.iter().map(|w| Value::Str(u64_to_hex(*w))).collect()),
+    );
+    v.set(
+        "spare_normal",
+        match s.spare_normal {
+            Some(x) => hex_f64(x),
+            None => Value::Null,
+        },
+    );
+    v
+}
+
+/// Inverse of [`rng_state_to_json`].
+pub fn rng_state_from_json(v: &Value) -> Result<RngState> {
+    let words = v.field("s")?.as_arr()?;
+    ensure!(words.len() == 4, "rng state needs 4 words, got {}", words.len());
+    let mut s = [0u64; 4];
+    for (i, w) in words.iter().enumerate() {
+        s[i] = u64_from_hex(w.as_str()?)?;
+    }
+    let spare_normal = match v.field("spare_normal")? {
+        Value::Null => None,
+        other => Some(json::f64_from_hex(other.as_str()?)?),
+    };
+    Ok(RngState { s, spare_normal })
+}
+
+pub fn f64_vec_to_json(xs: &[f64]) -> Value {
+    Value::Arr(xs.iter().map(|&x| hex_f64(x)).collect())
+}
+
+pub fn f64_vec_from_json(v: &Value) -> Result<Vec<f64>> {
+    v.as_arr()?
+        .iter()
+        .map(|x| json::f64_from_hex(x.as_str()?))
+        .collect()
+}
+
+pub fn usize_vec_to_json(xs: &[usize]) -> Value {
+    Value::Arr(xs.iter().map(|&x| Value::from(x)).collect())
+}
+
+pub fn usize_vec_from_json(v: &Value) -> Result<Vec<usize>> {
+    v.as_arr()?.iter().map(|x| x.as_usize()).collect()
+}
+
+pub fn u64_vec_to_json(xs: &[u64]) -> Value {
+    // small counters (per-shard event tallies, tau/d) stay well below
+    // 2^53, so plain numbers are exact here
+    Value::Arr(xs.iter().map(|&x| Value::from(x)).collect())
+}
+
+pub fn u64_vec_from_json(v: &Value) -> Result<Vec<u64>> {
+    v.as_arr()?.iter().map(|x| x.as_u64()).collect()
+}
+
+// ---------------------------------------------------------------------------
+// leaf codecs
+// ---------------------------------------------------------------------------
+
+fn device_to_json(d: &Device) -> Value {
+    let mut v = Value::obj();
+    v.set(
+        "class",
+        match d.class {
+            DeviceClass::Laptop => "laptop",
+            DeviceClass::Embedded => "embedded",
+        },
+    );
+    v.set("cpu_hz", hex_f64(d.cpu_hz));
+    v.set("tx_power_w", hex_f64(d.tx_power_w));
+    v
+}
+
+fn device_from_json(v: &Value) -> Result<Device> {
+    let class = match v.str_field("class")? {
+        "laptop" => DeviceClass::Laptop,
+        "embedded" => DeviceClass::Embedded,
+        other => bail!("unknown device class '{other}'"),
+    };
+    Ok(Device {
+        class,
+        cpu_hz: f64_hex_field(v, "cpu_hz")?,
+        tx_power_w: f64_hex_field(v, "tx_power_w")?,
+    })
+}
+
+fn link_to_json(l: &Link) -> Value {
+    let mut v = Value::obj();
+    v.set("pos_x", hex_f64(l.pos.0));
+    v.set("pos_y", hex_f64(l.pos.1));
+    v.set("dist_m", hex_f64(l.dist_m));
+    v.set("gain", hex_f64(l.gain));
+    v.set("rate_bps", hex_f64(l.rate_bps));
+    v
+}
+
+fn link_from_json(v: &Value) -> Result<Link> {
+    Ok(Link {
+        pos: (f64_hex_field(v, "pos_x")?, f64_hex_field(v, "pos_y")?),
+        dist_m: f64_hex_field(v, "dist_m")?,
+        gain: f64_hex_field(v, "gain")?,
+        rate_bps: f64_hex_field(v, "rate_bps")?,
+    })
+}
+
+pub fn cost_to_json(c: &LearnerCost) -> Value {
+    let mut v = Value::obj();
+    v.set("c2", hex_f64(c.c2));
+    v.set("c1", hex_f64(c.c1));
+    v.set("c0", hex_f64(c.c0));
+    v
+}
+
+pub fn cost_from_json(v: &Value) -> Result<LearnerCost> {
+    Ok(LearnerCost {
+        c2: f64_hex_field(v, "c2")?,
+        c1: f64_hex_field(v, "c1")?,
+        c0: f64_hex_field(v, "c0")?,
+    })
+}
+
+fn learner_to_json(l: &Learner) -> Value {
+    let mut v = Value::obj();
+    v.set("id", Value::from(l.id));
+    v.set("device", device_to_json(&l.device));
+    v.set("link", link_to_json(&l.link));
+    v.set("cost", cost_to_json(&l.cost));
+    v
+}
+
+fn learner_from_json(v: &Value) -> Result<Learner> {
+    Ok(Learner {
+        id: v.usize_field("id")?,
+        device: device_from_json(v.field("device")?)?,
+        link: link_from_json(v.field("link")?)?,
+        cost: cost_from_json(v.field("cost")?)?,
+    })
+}
+
+pub fn alloc_to_json(a: &Allocation) -> Value {
+    let mut v = Value::obj();
+    v.set("tau", u64_vec_to_json(&a.tau));
+    v.set("d", u64_vec_to_json(&a.d));
+    v
+}
+
+pub fn alloc_from_json(v: &Value) -> Result<Allocation> {
+    Ok(Allocation {
+        tau: u64_vec_from_json(v.field("tau")?)?,
+        d: u64_vec_from_json(v.field("d")?)?,
+    })
+}
+
+/// Serialize a [`CycleRecord`] with bit-exact floats (hex-encoded).
+pub fn record_to_json(r: &CycleRecord) -> Value {
+    let mut v = Value::obj();
+    v.set("cycle", Value::from(r.cycle));
+    v.set("vtime_s", hex_f64(r.vtime_s));
+    v.set("max_staleness", Value::from(r.max_staleness));
+    v.set("avg_staleness", hex_f64(r.avg_staleness));
+    v.set("train_loss", hex_f32(r.train_loss));
+    v.set("accuracy", hex_f64(r.accuracy));
+    v.set("val_loss", hex_f64(r.val_loss));
+    v.set("utilization", hex_f64(r.utilization));
+    v.set("arrived", Value::from(r.arrived));
+    v.set("solve_ms", hex_f64(r.solve_ms));
+    v
+}
+
+/// Inverse of [`record_to_json`].
+pub fn record_from_json(v: &Value) -> Result<CycleRecord> {
+    Ok(CycleRecord {
+        cycle: v.usize_field("cycle")?,
+        vtime_s: f64_hex_field(v, "vtime_s")?,
+        max_staleness: v.u64_field("max_staleness")?,
+        avg_staleness: f64_hex_field(v, "avg_staleness")?,
+        train_loss: f32_hex_field(v, "train_loss")?,
+        accuracy: f64_hex_field(v, "accuracy")?,
+        val_loss: f64_hex_field(v, "val_loss")?,
+        utilization: f64_hex_field(v, "utilization")?,
+        arrived: v.usize_field("arrived")?,
+        solve_ms: f64_hex_field(v, "solve_ms")?,
+    })
+}
+
+fn records_to_json(rs: &[CycleRecord]) -> Value {
+    Value::Arr(rs.iter().map(record_to_json).collect())
+}
+
+fn records_from_json(v: &Value) -> Result<Vec<CycleRecord>> {
+    v.as_arr()?.iter().map(record_from_json).collect()
+}
+
+fn event_to_json(ev: &EventCheckpoint) -> Value {
+    let mut v = Value::obj();
+    match ev {
+        EventCheckpoint::Boundary => {
+            v.set("kind", "boundary");
+        }
+        EventCheckpoint::Arrival {
+            slot,
+            model,
+            version_at_dispatch,
+            tau,
+            d,
+            params,
+            train_loss,
+        } => {
+            v.set("kind", "arrival");
+            v.set("slot", Value::from(*slot));
+            v.set("model", Value::from(*model));
+            v.set("version_at_dispatch", Value::from(*version_at_dispatch));
+            v.set("tau", Value::from(*tau));
+            v.set("d", Value::from(*d));
+            v.set("params", params_to_json(params));
+            v.set("train_loss", hex_f32(*train_loss));
+        }
+        EventCheckpoint::Redispatch { slot } => {
+            v.set("kind", "redispatch");
+            v.set("slot", Value::from(*slot));
+        }
+        EventCheckpoint::Join => {
+            v.set("kind", "join");
+        }
+        EventCheckpoint::Leave { slot } => {
+            v.set("kind", "leave");
+            v.set("slot", Value::from(*slot));
+        }
+        EventCheckpoint::Trace { idx } => {
+            v.set("kind", "trace");
+            v.set("idx", Value::from(*idx));
+        }
+    }
+    v
+}
+
+fn event_from_json(v: &Value) -> Result<EventCheckpoint> {
+    Ok(match v.str_field("kind")? {
+        "boundary" => EventCheckpoint::Boundary,
+        "arrival" => EventCheckpoint::Arrival {
+            slot: v.usize_field("slot")?,
+            model: v.usize_field("model")?,
+            version_at_dispatch: v.u64_field("version_at_dispatch")?,
+            tau: v.u64_field("tau")?,
+            d: v.u64_field("d")?,
+            params: params_from_json(v.field("params")?)?,
+            train_loss: f32_hex_field(v, "train_loss")?,
+        },
+        "redispatch" => EventCheckpoint::Redispatch {
+            slot: v.usize_field("slot")?,
+        },
+        "join" => EventCheckpoint::Join,
+        "leave" => EventCheckpoint::Leave {
+            slot: v.usize_field("slot")?,
+        },
+        "trace" => EventCheckpoint::Trace {
+            idx: v.usize_field("idx")?,
+        },
+        other => bail!("unknown queue event kind '{other}'"),
+    })
+}
+
+fn stats_to_json(s: &EngineStats) -> Value {
+    let mut v = Value::obj();
+    v.set("events", Value::from(s.events));
+    v.set("joins", Value::from(s.joins));
+    v.set("leaves", Value::from(s.leaves));
+    v.set("dispatched", Value::from(s.dispatched));
+    v.set("arrivals", Value::from(s.arrivals));
+    v.set("resolves", Value::from(s.resolves));
+    v.set("final_alive", Value::from(s.final_alive));
+    v
+}
+
+fn stats_from_json(v: &Value) -> Result<EngineStats> {
+    Ok(EngineStats {
+        events: v.u64_field("events")?,
+        joins: v.usize_field("joins")?,
+        leaves: v.usize_field("leaves")?,
+        dispatched: v.usize_field("dispatched")?,
+        arrivals: v.usize_field("arrivals")?,
+        resolves: v.usize_field("resolves")?,
+        final_alive: v.usize_field("final_alive")?,
+    })
+}
+
+// ---------------------------------------------------------------------------
+// CoreState codec
+// ---------------------------------------------------------------------------
+
+impl CoreState {
+    pub fn to_json(&self) -> Value {
+        let mut v = Value::obj();
+        v.set("now", hex_f64(self.now));
+        v.set("arrival_seq", Value::from(self.arrival_seq));
+        v.set("queue_next_seq", Value::from(self.queue_next_seq));
+        v.set(
+            "queue",
+            Value::Arr(
+                self.queue
+                    .iter()
+                    .map(|(t, seq, ev)| {
+                        let mut e = Value::obj();
+                        e.set("t", hex_f64(*t));
+                        e.set("seq", Value::from(*seq));
+                        e.set("event", event_to_json(ev));
+                        e
+                    })
+                    .collect(),
+            ),
+        );
+        v.set(
+            "slots",
+            Value::Arr(
+                self.slots
+                    .iter()
+                    .map(|(l, alive)| {
+                        let mut s = learner_to_json(l);
+                        s.set("alive", Value::from(*alive));
+                        s
+                    })
+                    .collect(),
+            ),
+        );
+        v.set("alive_learners", Value::from(self.alive_learners));
+        v.set("rng", rng_state_to_json(&self.rng));
+        v.set("churn_rng", rng_state_to_json(&self.churn_rng));
+        v.set(
+            "fading",
+            match &self.fading {
+                None => Value::Null,
+                Some(f) => {
+                    let mut fv = Value::obj();
+                    fv.set("shadow_db", f64_vec_to_json(&f.shadow_db));
+                    fv.set("dist_m", f64_vec_to_json(&f.dist_m));
+                    fv.set("rng", rng_state_to_json(&f.rng));
+                    fv
+                }
+            },
+        );
+        v.set(
+            "alloc",
+            match &self.alloc {
+                None => Value::Null,
+                Some((a, costs, slots)) => {
+                    let mut av = Value::obj();
+                    av.set("alloc", alloc_to_json(a));
+                    av.set("costs", Value::Arr(costs.iter().map(cost_to_json).collect()));
+                    av.set("slots", usize_vec_to_json(slots));
+                    av
+                }
+            },
+        );
+        v.set("dirty", Value::from(self.dirty));
+        v.set("last_solve_ms", hex_f64(self.last_solve_ms));
+        v.set("stats", stats_to_json(&self.stats));
+        v.set("shard_events", u64_vec_to_json(&self.shard_events));
+        v
+    }
+
+    pub fn from_json(v: &Value) -> Result<Self> {
+        let queue = v
+            .field("queue")?
+            .as_arr()?
+            .iter()
+            .map(|e| {
+                Ok((
+                    f64_hex_field(e, "t")?,
+                    e.u64_field("seq")?,
+                    event_from_json(e.field("event")?)?,
+                ))
+            })
+            .collect::<Result<Vec<_>>>()
+            .context("queue")?;
+        let slots = v
+            .field("slots")?
+            .as_arr()?
+            .iter()
+            .map(|s| {
+                Ok((
+                    learner_from_json(s)?,
+                    s.field("alive")?.as_bool()?,
+                ))
+            })
+            .collect::<Result<Vec<_>>>()
+            .context("slots")?;
+        let fading = match v.field("fading")? {
+            Value::Null => None,
+            f => Some(FadingState {
+                shadow_db: f64_vec_from_json(f.field("shadow_db")?)?,
+                dist_m: f64_vec_from_json(f.field("dist_m")?)?,
+                rng: rng_state_from_json(f.field("rng")?)?,
+            }),
+        };
+        let alloc = match v.field("alloc")? {
+            Value::Null => None,
+            a => Some((
+                alloc_from_json(a.field("alloc")?)?,
+                a.field("costs")?
+                    .as_arr()?
+                    .iter()
+                    .map(cost_from_json)
+                    .collect::<Result<Vec<_>>>()?,
+                usize_vec_from_json(a.field("slots")?)?,
+            )),
+        };
+        Ok(CoreState {
+            now: f64_hex_field(v, "now")?,
+            arrival_seq: v.u64_field("arrival_seq")?,
+            queue_next_seq: v.u64_field("queue_next_seq")?,
+            queue,
+            slots,
+            alive_learners: v.usize_field("alive_learners")?,
+            rng: rng_state_from_json(v.field("rng")?)?,
+            churn_rng: rng_state_from_json(v.field("churn_rng")?)?,
+            fading,
+            alloc,
+            dirty: v.field("dirty")?.as_bool()?,
+            last_solve_ms: f64_hex_field(v, "last_solve_ms")?,
+            stats: stats_from_json(v.field("stats")?)?,
+            shard_events: u64_vec_from_json(v.field("shard_events")?)?,
+        })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// top-level codecs
+// ---------------------------------------------------------------------------
+
+fn check_header(v: &Value, want_kind: &str) -> Result<()> {
+    let format = v.str_field("format").context("missing checkpoint header")?;
+    ensure!(
+        format == CHECKPOINT_FORMAT,
+        "unsupported checkpoint format '{format}' (expected '{CHECKPOINT_FORMAT}')"
+    );
+    let kind = v.str_field("kind")?;
+    ensure!(
+        kind == want_kind,
+        "checkpoint kind is '{kind}', expected '{want_kind}'"
+    );
+    Ok(())
+}
+
+/// Peek at a serialized checkpoint's kind ("single" or "multi").
+pub fn checkpoint_kind(v: &Value) -> Result<&str> {
+    let format = v.str_field("format").context("missing checkpoint header")?;
+    ensure!(
+        format == CHECKPOINT_FORMAT,
+        "unsupported checkpoint format '{format}' (expected '{CHECKPOINT_FORMAT}')"
+    );
+    v.str_field("kind")
+}
+
+impl EngineCheckpoint {
+    pub fn to_json(&self) -> Value {
+        let mut v = Value::obj();
+        v.set("format", CHECKPOINT_FORMAT);
+        v.set("kind", "single");
+        v.set("core", self.core.to_json());
+        v.set("version", Value::from(self.version));
+        v.set("global", params_to_json(&self.global));
+        v.set("records", records_to_json(&self.records));
+        v
+    }
+
+    pub fn from_json(v: &Value) -> Result<Self> {
+        check_header(v, "single")?;
+        Ok(EngineCheckpoint {
+            core: CoreState::from_json(v.field("core")?).context("core")?,
+            version: v.u64_field("version")?,
+            global: params_from_json(v.field("global")?)?,
+            records: records_from_json(v.field("records")?)?,
+        })
+    }
+
+    /// Atomically write the checkpoint (tmp file + rename).
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        save_value(&self.to_json(), path.as_ref())
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let path = path.as_ref();
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading checkpoint {}", path.display()))?;
+        Self::from_json(&json::parse(&text)?)
+            .with_context(|| format!("parsing checkpoint {}", path.display()))
+    }
+}
+
+impl MultiModelCheckpoint {
+    pub fn to_json(&self) -> Value {
+        let mut v = Value::obj();
+        v.set("format", CHECKPOINT_FORMAT);
+        v.set("kind", "multi");
+        v.set("core", self.core.to_json());
+        v.set("done_cycles", Value::from(self.done_cycles));
+        v.set(
+            "records",
+            Value::Arr(self.records.iter().map(|rs| records_to_json(rs)).collect()),
+        );
+        v.set(
+            "globals",
+            Value::Arr(self.globals.iter().map(params_to_json).collect()),
+        );
+        v.set("model_of", usize_vec_to_json(&self.model_of));
+        v.set("models", Value::Arr(self.models.clone()));
+        v.set("scheduler", self.scheduler.clone());
+        v.set("subs", Value::Arr(self.subs.clone()));
+        v
+    }
+
+    pub fn from_json(v: &Value) -> Result<Self> {
+        check_header(v, "multi")?;
+        Ok(MultiModelCheckpoint {
+            core: CoreState::from_json(v.field("core")?).context("core")?,
+            done_cycles: v.usize_field("done_cycles")?,
+            records: v
+                .field("records")?
+                .as_arr()?
+                .iter()
+                .map(records_from_json)
+                .collect::<Result<Vec<_>>>()?,
+            globals: v
+                .field("globals")?
+                .as_arr()?
+                .iter()
+                .map(params_from_json)
+                .collect::<Result<Vec<_>>>()?,
+            model_of: usize_vec_from_json(v.field("model_of")?)?,
+            models: v.field("models")?.as_arr()?.to_vec(),
+            scheduler: v.field("scheduler")?.clone(),
+            subs: v.field("subs")?.as_arr()?.to_vec(),
+        })
+    }
+
+    /// Atomically write the checkpoint (tmp file + rename).
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        save_value(&self.to_json(), path.as_ref())
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let path = path.as_ref();
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading checkpoint {}", path.display()))?;
+        Self::from_json(&json::parse(&text)?)
+            .with_context(|| format!("parsing checkpoint {}", path.display()))
+    }
+}
+
+fn save_value(v: &Value, path: &Path) -> Result<()> {
+    let tmp = path.with_extension("tmp");
+    std::fs::write(&tmp, v.pretty())
+        .with_context(|| format!("writing checkpoint {}", tmp.display()))?;
+    std::fs::rename(&tmp, path)
+        .with_context(|| format!("committing checkpoint {}", path.display()))?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::Rng;
+
+    fn sample_core() -> CoreState {
+        let rng = Rng::new(7);
+        let learner = Learner {
+            id: 0,
+            device: Device {
+                class: DeviceClass::Embedded,
+                cpu_hz: 1.1e9,
+                tx_power_w: 0.1,
+            },
+            link: Link {
+                pos: (3.0, -4.0),
+                dist_m: 5.0,
+                gain: 1.25e-9,
+                rate_bps: 2.5e6,
+            },
+            cost: LearnerCost {
+                c2: 1e-7,
+                c1: 2e-6,
+                c0: 0.3,
+            },
+        };
+        // exercise the lossy corners on purpose: NaN, ∞, a >2^53 RNG word
+        let mut rng_state = rng.state();
+        rng_state.s[0] = u64::MAX - 3;
+        rng_state.spare_normal = Some(f64::NAN);
+        CoreState {
+            now: 123.456789,
+            arrival_seq: 42,
+            queue_next_seq: 99,
+            queue: vec![
+                (1.5, 10, EventCheckpoint::Boundary),
+                (
+                    1.5,
+                    11,
+                    EventCheckpoint::Arrival {
+                        slot: 3,
+                        model: 1,
+                        version_at_dispatch: 7,
+                        tau: 20,
+                        d: 150,
+                        params: Some(vec![vec![0.25, -1.5], vec![f32::INFINITY]]),
+                        train_loss: 0.125,
+                    },
+                ),
+                (2.0, 12, EventCheckpoint::Redispatch { slot: 1 }),
+                (2.5, 13, EventCheckpoint::Join),
+                (3.0, 14, EventCheckpoint::Leave { slot: 2 }),
+                (3.5, 15, EventCheckpoint::Trace { idx: 4 }),
+            ],
+            slots: vec![(learner.clone(), true), (learner, false)],
+            alive_learners: 1,
+            rng: rng_state,
+            churn_rng: rng.state(),
+            fading: Some(FadingState {
+                shadow_db: vec![0.5, f64::NEG_INFINITY],
+                dist_m: vec![10.0, 20.0],
+                rng: rng.state(),
+            }),
+            alloc: Some((
+                Allocation {
+                    tau: vec![5, 6],
+                    d: vec![100, 200],
+                },
+                vec![LearnerCost {
+                    c2: 1e-7,
+                    c1: 2e-6,
+                    c0: 0.3,
+                }],
+                vec![0],
+            )),
+            dirty: true,
+            last_solve_ms: 0.75,
+            stats: EngineStats {
+                events: 1000,
+                joins: 3,
+                leaves: 2,
+                dispatched: 50,
+                arrivals: 48,
+                resolves: 9,
+                final_alive: 0,
+            },
+            shard_events: vec![600, 400],
+        }
+    }
+
+    #[test]
+    fn engine_checkpoint_round_trips_through_text() {
+        let ck = EngineCheckpoint {
+            core: sample_core(),
+            version: 17,
+            global: Some(vec![vec![1.0, -2.5e-8], vec![f32::NAN]]),
+            records: vec![CycleRecord {
+                cycle: 0,
+                vtime_s: 8.0,
+                max_staleness: 4,
+                avg_staleness: 1.25,
+                train_loss: 0.5,
+                accuracy: 0.75,
+                val_loss: 0.3,
+                utilization: 0.9,
+                arrived: 12,
+                solve_ms: 0.01,
+            }],
+        };
+        let text = ck.to_json().pretty();
+        let back = EngineCheckpoint::from_json(&json::parse(&text).unwrap()).unwrap();
+        // Value comparison covers bit-identity: every float travels as hex
+        assert_eq!(back.to_json(), ck.to_json());
+        // spot-check the bit-sensitive corners survive textual round trip
+        assert_eq!(back.core.rng.s[0], u64::MAX - 3);
+        assert!(back.core.rng.spare_normal.unwrap().is_nan());
+        assert!(back.global.as_ref().unwrap()[1][0].is_nan());
+        assert_eq!(back.core.fading.as_ref().unwrap().shadow_db[1], f64::NEG_INFINITY);
+    }
+
+    #[test]
+    fn multi_checkpoint_round_trips_through_text() {
+        let mut blob = Value::obj();
+        blob.set("version", Value::from(3u64));
+        let ck = MultiModelCheckpoint {
+            core: sample_core(),
+            done_cycles: 5,
+            records: vec![vec![], vec![]],
+            globals: vec![None, Some(vec![vec![0.5f32]])],
+            model_of: vec![0, 1, 0],
+            models: vec![blob.clone(), blob.clone()],
+            scheduler: blob.clone(),
+            subs: vec![blob.clone(), blob],
+        };
+        let text = ck.to_json().compact();
+        let back = MultiModelCheckpoint::from_json(&json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.to_json(), ck.to_json());
+        assert_eq!(checkpoint_kind(&back.to_json()).unwrap(), "multi");
+    }
+
+    #[test]
+    fn kind_mismatch_is_rejected() {
+        let ck = EngineCheckpoint {
+            core: sample_core(),
+            version: 0,
+            global: None,
+            records: vec![],
+        };
+        let err = MultiModelCheckpoint::from_json(&ck.to_json()).unwrap_err();
+        assert!(err.to_string().contains("kind"), "{err}");
+        let mut bogus = ck.to_json();
+        bogus.set("format", "asyncmel-checkpoint-v0");
+        let err = EngineCheckpoint::from_json(&bogus).unwrap_err();
+        assert!(err.to_string().contains("unsupported checkpoint format"), "{err}");
+    }
+
+    #[test]
+    fn save_and_load_round_trip_on_disk() {
+        let dir = std::env::temp_dir().join(format!("asyncmel-ckpt-test-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("test.ckpt.json");
+        let ck = EngineCheckpoint {
+            core: sample_core(),
+            version: 2,
+            global: None,
+            records: vec![],
+        };
+        ck.save(&path).unwrap();
+        let back = EngineCheckpoint::load(&path).unwrap();
+        assert_eq!(back.to_json(), ck.to_json());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

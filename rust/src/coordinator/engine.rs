@@ -58,13 +58,16 @@
 
 use std::time::Instant;
 
-use anyhow::{anyhow, ensure, Result};
+use anyhow::{anyhow, bail, ensure, Result};
 
 use crate::aggregation::{aggregate, AggregationRule, AsyncAggregator, ParamSet};
 use crate::allocation::{make_allocator, Allocation, AllocatorKind, TaskAllocator};
 use crate::channel::fading::FadingProcess;
 use crate::channel::sample_link;
-use crate::config::{ChurnConfig, Scenario};
+use crate::config::{ChurnConfig, Scenario, TraceAction};
+use crate::coordinator::checkpoint::{
+    CoreState, EngineCheckpoint, EventCheckpoint, MultiModelCheckpoint,
+};
 use crate::coordinator::faults::{draw_outcomes, update_arrives, FaultModel, FaultOutcome};
 use crate::coordinator::learner::Learner;
 use crate::coordinator::orchestrator::{CycleRecord, TrainOptions};
@@ -160,6 +163,79 @@ enum Event {
     Join,
     /// Scheduled departure of a learner.
     Leave { slot: usize },
+    /// Scripted churn: apply event `idx` of the scenario's
+    /// [`crate::config::TraceConfig`] (joins, leaves, capacity
+    /// targets, regional outages).
+    Trace { idx: usize },
+}
+
+impl Event {
+    /// Lower to the serializable mirror enum for checkpointing.
+    fn into_checkpoint(self) -> EventCheckpoint {
+        match self {
+            Event::Boundary => EventCheckpoint::Boundary,
+            Event::Arrival(msg) => EventCheckpoint::Arrival {
+                slot: msg.slot,
+                model: msg.model,
+                version_at_dispatch: msg.version_at_dispatch,
+                tau: msg.tau,
+                d: msg.d,
+                params: msg.params,
+                train_loss: msg.train_loss,
+            },
+            Event::Redispatch { slot } => EventCheckpoint::Redispatch { slot },
+            Event::Join => EventCheckpoint::Join,
+            Event::Leave { slot } => EventCheckpoint::Leave { slot },
+            Event::Trace { idx } => EventCheckpoint::Trace { idx },
+        }
+    }
+
+    /// Inverse of [`Self::into_checkpoint`].
+    fn from_checkpoint(ev: EventCheckpoint) -> Event {
+        match ev {
+            EventCheckpoint::Boundary => Event::Boundary,
+            EventCheckpoint::Arrival {
+                slot,
+                model,
+                version_at_dispatch,
+                tau,
+                d,
+                params,
+                train_loss,
+            } => Event::Arrival(ArrivalMsg {
+                slot,
+                model,
+                version_at_dispatch,
+                tau,
+                d,
+                params,
+                train_loss,
+            }),
+            EventCheckpoint::Redispatch { slot } => Event::Redispatch { slot },
+            EventCheckpoint::Join => Event::Join,
+            EventCheckpoint::Leave { slot } => Event::Leave { slot },
+            EventCheckpoint::Trace { idx } => Event::Trace { idx },
+        }
+    }
+}
+
+/// Outcome of a checkpointable single-model segment
+/// ([`EventEngine::run_to_checkpoint`]): either the run completed, or
+/// it was suspended at a cycle boundary into a restorable
+/// [`EngineCheckpoint`].
+pub enum RunOutcome {
+    Finished {
+        records: Vec<CycleRecord>,
+        params: Option<ParamSet>,
+    },
+    Suspended(Box<EngineCheckpoint>),
+}
+
+/// Outcome of a checkpointable multi-model segment
+/// ([`EventEngine::run_multi_to_checkpoint`]).
+pub enum MultiRunOutcome {
+    Finished(Box<MultiModelReport>),
+    Suspended(Box<MultiModelCheckpoint>),
 }
 
 /// Typed dispatch-sequencing errors, surfaced through `run`'s existing
@@ -282,7 +358,7 @@ impl CoordQueue {
         match ev {
             Event::Arrival(msg) => msg.slot % k,
             Event::Redispatch { slot } | Event::Leave { slot } => slot % k,
-            Event::Boundary | Event::Join => 0,
+            Event::Boundary | Event::Join | Event::Trace { .. } => 0,
         }
     }
 
@@ -1128,6 +1204,205 @@ impl<'rt> EventEngine<'rt> {
         true
     }
 
+    /// Kill one candidate slot for a trace-driven departure, drawn
+    /// from `candidates` with the churn RNG (seeded, so replays are
+    /// bit-identical). Removes the chosen slot from `candidates`;
+    /// respects the churn floor (`min_learners`).
+    fn trace_kill(&mut self, candidates: &mut Vec<usize>) -> Option<usize> {
+        if candidates.is_empty() || self.alive_count() <= self.min_learners() {
+            return None;
+        }
+        let i = self.churn_rng.below(candidates.len() as u64) as usize;
+        let slot = candidates.remove(i);
+        debug_assert!(self.slots[slot].alive);
+        self.slots[slot].alive = false;
+        self.alive_learners -= 1;
+        self.dirty = true;
+        self.stats.leaves += 1;
+        Some(slot)
+    }
+
+    /// Apply one scripted [`TraceAction`] from the scenario's churn
+    /// trace. Returns `(joined, left)` slot ids; the caller decides how
+    /// to put newcomers to work (policy-dependent). Departures mark the
+    /// allocation dirty just like Poisson leaves.
+    fn apply_trace(&mut self, q: &mut CoordQueue, now: f64, idx: usize) -> (Vec<usize>, Vec<usize>) {
+        let (action, regions) = match self.scenario.config.trace.as_ref() {
+            Some(tr) => match tr.events.get(idx) {
+                Some(ev) => (ev.action, tr.regions.max(1)),
+                None => return (Vec::new(), Vec::new()),
+            },
+            None => return (Vec::new(), Vec::new()),
+        };
+        let mut joined = Vec::new();
+        let mut left = Vec::new();
+        match action {
+            TraceAction::Join { count } => {
+                for _ in 0..count {
+                    match self.join(q, now) {
+                        Some(slot) => joined.push(slot),
+                        None => break, // capacity cap reached
+                    }
+                }
+            }
+            TraceAction::Leave { count } => {
+                let mut candidates: Vec<usize> =
+                    (0..self.slots.len()).filter(|&i| self.slots[i].alive).collect();
+                for _ in 0..count {
+                    match self.trace_kill(&mut candidates) {
+                        Some(slot) => left.push(slot),
+                        None => break, // churn floor reached
+                    }
+                }
+            }
+            TraceAction::Capacity { target } => {
+                while self.alive_count() < target {
+                    match self.join(q, now) {
+                        Some(slot) => joined.push(slot),
+                        None => break,
+                    }
+                }
+                if self.alive_count() > target {
+                    let mut candidates: Vec<usize> =
+                        (0..self.slots.len()).filter(|&i| self.slots[i].alive).collect();
+                    while self.alive_count() > target {
+                        match self.trace_kill(&mut candidates) {
+                            Some(slot) => left.push(slot),
+                            None => break,
+                        }
+                    }
+                }
+            }
+            TraceAction::Outage { region, fraction } => {
+                // region membership is `slot % regions` — deliberately
+                // independent of the coordinator shard count, so the
+                // same trace replays bit-identically for every --shards
+                let mut candidates: Vec<usize> = (0..self.slots.len())
+                    .filter(|&i| self.slots[i].alive && i % regions == region % regions)
+                    .collect();
+                let kill = (candidates.len() as f64 * fraction).round() as usize;
+                for _ in 0..kill {
+                    match self.trace_kill(&mut candidates) {
+                        Some(slot) => left.push(slot),
+                        None => break,
+                    }
+                }
+            }
+        }
+        (joined, left)
+    }
+
+    /// Snapshot the engine-owned mutable state (plus the drained event
+    /// queue) at an aggregation boundary. The queue is consumed — the
+    /// run must stop after capturing.
+    fn capture_core(&self, q: &mut CoordQueue, now: f64, arrival_seq: u64) -> CoreState {
+        let queue_next_seq = q.q.pushed();
+        let queue = q
+            .q
+            .drain_entries()
+            .into_iter()
+            .map(|(t, s, ev)| (t, s, ev.into_checkpoint()))
+            .collect();
+        CoreState {
+            now,
+            arrival_seq,
+            queue_next_seq,
+            queue,
+            slots: self.slots.iter().map(|s| (s.learner.clone(), s.alive)).collect(),
+            alive_learners: self.alive_learners,
+            rng: self.rng.state(),
+            churn_rng: self.churn_rng.state(),
+            fading: self.fading.as_ref().map(|fp| fp.state()),
+            alloc: self.alloc.as_ref().map(|a| {
+                (a.clone(), self.alloc_costs.clone(), self.alloc_slots.clone())
+            }),
+            dirty: self.dirty,
+            last_solve_ms: self.last_solve_ms,
+            stats: self.stats,
+            shard_events: self.shard_events.clone(),
+        }
+    }
+
+    /// Rebuild the engine-owned mutable state from a checkpointed
+    /// [`CoreState`] and return the restored event queue. The engine
+    /// must have been constructed from the *same scenario* the
+    /// checkpoint was captured from; the shard count may differ —
+    /// restored events re-derive their owning shard from the current
+    /// `--shards`, and the `(time, seq)` stamps keep the pop order
+    /// bit-identical (see [`ShardedEventQueue`]).
+    fn restore_core(&mut self, core: CoreState) -> Result<CoordQueue> {
+        self.slots = core
+            .slots
+            .into_iter()
+            .map(|(learner, alive)| Slot { learner, alive })
+            .collect();
+        self.alive_learners = core.alive_learners;
+        self.rng = Rng::from_state(core.rng);
+        self.churn_rng = Rng::from_state(core.churn_rng);
+        let params = self.scenario.config.channel;
+        match (self.fading.as_mut(), core.fading) {
+            (Some(fp), Some(state)) => {
+                ensure!(
+                    state.shadow_db.len() == self.slots.len(),
+                    "fading state tracks {} learners, checkpoint has {} slots",
+                    state.shadow_db.len(),
+                    self.slots.len()
+                );
+                *fp = FadingProcess::from_state(params, fp.rho, state);
+            }
+            (None, None) => {}
+            (Some(_), None) => bail!("engine has fading enabled but the checkpoint has none"),
+            (None, Some(_)) => bail!("checkpoint has fading state but the engine has none"),
+        }
+        match core.alloc {
+            Some((alloc, costs, slots)) => {
+                ensure!(
+                    alloc.tau.len() == costs.len() && costs.len() == slots.len(),
+                    "checkpoint allocation arity mismatch"
+                );
+                let mut pos = vec![0usize; self.slots.len()];
+                for (i, &slot) in slots.iter().enumerate() {
+                    ensure!(slot < pos.len(), "allocation references slot {slot} out of range");
+                    pos[slot] = i + 1; // pos+1 convention; 0 = unassigned
+                }
+                self.alloc = Some(alloc);
+                self.alloc_costs = costs;
+                self.alloc_slots = slots;
+                self.alloc_pos = pos;
+            }
+            None => {
+                self.alloc = None;
+                self.alloc_costs.clear();
+                self.alloc_slots.clear();
+                self.alloc_pos.clear();
+            }
+        }
+        self.dirty = core.dirty;
+        self.last_solve_ms = core.last_solve_ms;
+        self.stats = core.stats;
+        let mut q = CoordQueue::new(self.num_shards);
+        let k = q.shards();
+        if core.shard_events.len() == k {
+            self.shard_events = core.shard_events;
+        } else {
+            // restored into a different shard count: per-shard counts
+            // are topology-specific telemetry, so collapse the history
+            // onto shard 0 (totals stay exact)
+            let mut counts = vec![0u64; k];
+            counts[0] = core.shard_events.iter().sum();
+            self.shard_events = counts;
+        }
+        // restore_seq must run before the entries: restore_entry
+        // asserts every restored stamp predates the counter
+        q.q.restore_seq(core.queue_next_seq);
+        for (t, s, ev) in core.queue {
+            let event = Event::from_checkpoint(ev);
+            let shard = q.shard_of(&event);
+            q.q.restore_entry(shard, t, s, event);
+        }
+        Ok(q)
+    }
+
     /// Run `opts.train.cycles` global cycles; returns one
     /// [`CycleRecord`] per cycle boundary.
     pub fn run(&mut self, opts: &EngineOptions) -> Result<Vec<CycleRecord>> {
@@ -1141,74 +1416,139 @@ impl<'rt> EventEngine<'rt> {
         &mut self,
         opts: &EngineOptions,
     ) -> Result<(Vec<CycleRecord>, Option<ParamSet>)> {
+        match self.run_segment(opts, None, None)? {
+            RunOutcome::Finished { records, params } => Ok((records, params)),
+            RunOutcome::Suspended(_) => unreachable!("no stop_after was set"),
+        }
+    }
+
+    /// Checkpointable run driver: start fresh (`resume = None`) or
+    /// continue a suspended run from its [`EngineCheckpoint`], and
+    /// optionally suspend again once `stop_after` cycles have been
+    /// recorded (checked at each aggregation boundary). The engine must
+    /// be freshly built from the *same scenario* the checkpoint came
+    /// from, and `opts` must match the original run's; the shard/thread
+    /// counts may differ. [`Self::run`] / [`Self::run_with_params`]
+    /// delegate here with `(None, None)`, so the uninterrupted path is
+    /// unchanged — and a suspended + resumed run replays the exact
+    /// event stream an uninterrupted run would have produced.
+    pub fn run_to_checkpoint(
+        &mut self,
+        opts: &EngineOptions,
+        resume: Option<EngineCheckpoint>,
+        stop_after: Option<usize>,
+    ) -> Result<RunOutcome> {
+        self.run_segment(opts, resume, stop_after)
+    }
+
+    fn run_segment(
+        &mut self,
+        opts: &EngineOptions,
+        resume: Option<EngineCheckpoint>,
+        stop_after: Option<usize>,
+    ) -> Result<RunOutcome> {
         let t_cycle = self.scenario.t_cycle();
         let cycles = opts.train.cycles;
-        self.stats = EngineStats::default();
 
-        let mut global: Option<ParamSet> = match &self.exec {
-            ExecMode::Real { runtime, .. } => {
-                let mut init_rng = self.rng.fork(0x1417);
-                Some(runtime.init_params(&mut init_rng))
+        let mut q: CoordQueue;
+        let mut now: f64;
+        let mut global: Option<ParamSet>;
+        let mut records: Vec<CycleRecord>;
+        let mut arrival_seq: u64;
+        let mut version: u64;
+        if let Some(ck) = resume {
+            // Resumed runs skip every cold-start side effect in the
+            // branch below: the init forks, eager resolve, churn
+            // arming, trace pre-push and initial dispatch all happened
+            // before the capture, and their RNG draws are baked into
+            // the restored streams.
+            let EngineCheckpoint { core, version: v, global: g, records: r } = ck;
+            now = core.now;
+            arrival_seq = core.arrival_seq;
+            q = self.restore_core(core)?;
+            global = g;
+            records = r;
+            version = v;
+        } else {
+            self.stats = EngineStats::default();
+
+            global = match &self.exec {
+                ExecMode::Real { runtime, .. } => {
+                    let mut init_rng = self.rng.fork(0x1417);
+                    Some(runtime.init_params(&mut init_rng))
+                }
+                ExecMode::Phantom => None,
+            };
+
+            self.resolve()?; // times itself into last_solve_ms
+
+            q = CoordQueue::new(self.num_shards);
+            self.shard_events = vec![0; q.shards()];
+            now = 0.0f64;
+
+            // churn arming
+            if self.churn.join_rate_per_s > 0.0 {
+                let dt = exp_sample(&mut self.churn_rng, 1.0 / self.churn.join_rate_per_s);
+                q.push(now + dt, Event::Join);
             }
-            ExecMode::Phantom => None,
-        };
+            if self.churn.mean_lifetime_s > 0.0 {
+                for slot in 0..self.slots.len() {
+                    let life = exp_sample(&mut self.churn_rng, self.churn.mean_lifetime_s);
+                    q.push(now + life, Event::Leave { slot });
+                }
+            }
 
-        self.resolve()?; // times itself into last_solve_ms
+            // trace-driven workload: pre-push the scripted churn
+            // schedule in file order. All trace events live on shard 0
+            // with these fixed seq stamps, so a replay is bit-identical
+            // for every shard count.
+            if let Some(trace) = self.scenario.config.trace.as_ref() {
+                for (idx, ev) in trace.events.iter().enumerate() {
+                    q.push(ev.time, Event::Trace { idx });
+                }
+            }
 
-        let mut q = CoordQueue::new(self.num_shards);
+            // initial dispatch — the whole fleet is ready at t = 0, so the
+            // async path batches it through the pool (dispatch_batch is
+            // stream- and seq-identical to per-slot dispatch_one calls)
+            match opts.policy {
+                EnginePolicy::Barrier => self.dispatch_cycle(&mut q, now, &global, &opts.train)?,
+                EnginePolicy::Async(_) => {
+                    let entries: Vec<(usize, Option<(u64, u64, LearnerCost)>)> = self
+                        .alloc_slots
+                        .clone()
+                        .into_iter()
+                        .map(|slot| {
+                            let assign = self
+                                .assignment(slot)
+                                .map(|(tau, d)| (tau, d, self.slots[slot].learner.cost));
+                            (slot, assign)
+                        })
+                        .collect();
+                    self.dispatch_batch(&mut q, now, 0, &entries, &global, &opts.train, 0, t_cycle)?;
+                }
+            }
+            q.push(now + t_cycle, Event::Boundary);
+
+            records = Vec::with_capacity(cycles);
+            arrival_seq = 0;
+            version = 0;
+        }
         let k_shards = q.shards();
-        self.shard_events = vec![0; k_shards];
         // per-shard regional aggregators: copies of the policy's
         // aggregator, one per coordinator shard (identical decay law —
-        // topology must never show up in the numerics)
+        // topology must never show up in the numerics). Stateless, so
+        // rebuilding them on resume is exact.
         let shard_aggs: Vec<AsyncAggregator> = match opts.policy {
             EnginePolicy::Async(agg) => vec![agg; k_shards],
             EnginePolicy::Barrier => Vec::new(),
         };
-        let mut now = 0.0f64;
-
-        // churn arming
-        if self.churn.join_rate_per_s > 0.0 {
-            let dt = exp_sample(&mut self.churn_rng, 1.0 / self.churn.join_rate_per_s);
-            q.push(now + dt, Event::Join);
-        }
-        if self.churn.mean_lifetime_s > 0.0 {
-            for slot in 0..self.slots.len() {
-                let life = exp_sample(&mut self.churn_rng, self.churn.mean_lifetime_s);
-                q.push(now + life, Event::Leave { slot });
-            }
-        }
-
-        // initial dispatch — the whole fleet is ready at t = 0, so the
-        // async path batches it through the pool (dispatch_batch is
-        // stream- and seq-identical to per-slot dispatch_one calls)
-        match opts.policy {
-            EnginePolicy::Barrier => self.dispatch_cycle(&mut q, now, &global, &opts.train)?,
-            EnginePolicy::Async(_) => {
-                let entries: Vec<(usize, Option<(u64, u64, LearnerCost)>)> = self
-                    .alloc_slots
-                    .clone()
-                    .into_iter()
-                    .map(|slot| {
-                        let assign = self
-                            .assignment(slot)
-                            .map(|(tau, d)| (tau, d, self.slots[slot].learner.cost));
-                        (slot, assign)
-                    })
-                    .collect();
-                self.dispatch_batch(&mut q, now, 0, &entries, &global, &opts.train, 0, t_cycle)?;
-            }
-        }
-        q.push(now + t_cycle, Event::Boundary);
-
-        let mut records: Vec<CycleRecord> = Vec::with_capacity(cycles);
-        let mut barrier_buf: Vec<ArrivalMsg> = Vec::new();
         // per-shard summary windows (regional telemetry, merged by
-        // (time, seq, shard_id) at each aggregation boundary) + the
-        // global arrival sequence stamp
+        // (time, seq, shard_id) at each aggregation boundary). Both the
+        // windows and the barrier buffer are empty at every aggregation
+        // boundary by construction, so a checkpoint never carries them.
+        let mut barrier_buf: Vec<ArrivalMsg> = Vec::new();
         let mut windows: Vec<Vec<ShardSummary>> = vec![Vec::new(); k_shards];
-        let mut arrival_seq: u64 = 0;
-        let mut version: u64 = 0;
 
         while records.len() < cycles {
             let (t, shard, ev) = q
@@ -1276,6 +1616,18 @@ impl<'rt> EventEngine<'rt> {
                         self.alive_learners -= 1;
                         self.dirty = true;
                         self.stats.leaves += 1;
+                    }
+                }
+                Event::Trace { idx } => {
+                    let (joined, _left) = self.apply_trace(&mut q, now, idx);
+                    // async: put newcomers to work immediately, exactly
+                    // like a Poisson join; barrier folds them in at the
+                    // next boundary re-solve. Departures only dirty the
+                    // allocation (done inside apply_trace).
+                    if let EnginePolicy::Async(_) = opts.policy {
+                        for slot in joined {
+                            self.dispatch_one(&mut q, now, slot, &global, &opts.train, version)?;
+                        }
                     }
                 }
                 Event::Boundary => {
@@ -1380,11 +1732,23 @@ impl<'rt> EventEngine<'rt> {
                         self.dispatch_cycle(&mut q, now, &global, &opts.train)?;
                     }
                     q.push(now + t_cycle, Event::Boundary);
+                    // suspend point: the next Boundary is armed and the
+                    // aggregation windows are empty, so the capture is
+                    // a complete description of the run's future
+                    if stop_after.is_some_and(|stop| records.len() >= stop) {
+                        let core = self.capture_core(&mut q, now, arrival_seq);
+                        return Ok(RunOutcome::Suspended(Box::new(EngineCheckpoint {
+                            core,
+                            version,
+                            global,
+                            records,
+                        })));
+                    }
                 }
             }
         }
         self.stats.final_alive = self.alive_count();
-        Ok((records, global))
+        Ok(RunOutcome::Finished { records, params: global })
     }
 
     /// (Re-)solve one model's allocation over its assigned sub-fleet
@@ -1530,6 +1894,31 @@ impl<'rt> EventEngine<'rt> {
     /// [`EnginePolicy::Async`] and reproduces its [`CycleRecord`]
     /// stream byte-for-byte (`rust/tests/multimodel.rs`).
     pub fn run_multi(&mut self, opts: &MultiModelOptions) -> Result<MultiModelReport> {
+        match self.run_multi_segment(opts, None, None)? {
+            MultiRunOutcome::Finished(report) => Ok(*report),
+            MultiRunOutcome::Suspended(_) => unreachable!("no stop_after was set"),
+        }
+    }
+
+    /// Checkpointable multi-model driver — same contract as
+    /// [`Self::run_to_checkpoint`]; the capture additionally carries
+    /// every model instance, the scheduler state and the per-model
+    /// sub-fleet allocations.
+    pub fn run_multi_to_checkpoint(
+        &mut self,
+        opts: &MultiModelOptions,
+        resume: Option<MultiModelCheckpoint>,
+        stop_after: Option<usize>,
+    ) -> Result<MultiRunOutcome> {
+        self.run_multi_segment(opts, resume, stop_after)
+    }
+
+    fn run_multi_segment(
+        &mut self,
+        opts: &MultiModelOptions,
+        resume: Option<MultiModelCheckpoint>,
+        stop_after: Option<usize>,
+    ) -> Result<MultiRunOutcome> {
         let t_cycle = self.scenario.t_cycle();
         let cycles = opts.train.cycles;
         let m_count = opts.multi.num_models;
@@ -1552,7 +1941,6 @@ impl<'rt> EventEngine<'rt> {
         if let Some(a) = opts.multi.adaptive_buffer {
             a.validate().map_err(|e| anyhow!("adaptive buffer config: {e}"))?;
         }
-        self.stats = EngineStats::default();
 
         // Per-model heterogeneous task specs, scenario defaults filled
         // in (an empty spec list is the homogeneous workload).
@@ -1577,37 +1965,148 @@ impl<'rt> EventEngine<'rt> {
         }
         let mut scheduler = make_scheduler(&opts.multi);
 
-        // Per-model parameter sets. Model 0 forks with the same salt as
-        // the single-model path, keeping the M = 1 stream identical; a
-        // per-model phantom spec skips materialization (bookkeeping
-        // only) but still consumes its fork so sibling models' init
-        // streams are independent of the phantom flags.
-        let mut globals: Vec<Option<ParamSet>> = match &self.exec {
-            ExecMode::Real { runtime, .. } => (0..m_count)
-                .map(|m| {
-                    let mut init_rng = self.rng.fork(0x1417 ^ ((m as u64) << 20));
-                    if specs[m].phantom {
-                        None
-                    } else {
-                        Some(runtime.init_params(&mut init_rng))
-                    }
-                })
-                .collect(),
-            ExecMode::Phantom => vec![None; m_count],
-        };
+        let mut q: CoordQueue;
+        let mut now: f64;
+        let mut arrival_seq: u64;
+        let mut globals: Vec<Option<ParamSet>>;
+        let mut model_of: Vec<usize>;
+        let mut subs: Vec<SubFleetAlloc>;
+        let mut records: Vec<Vec<CycleRecord>>;
+        let mut done_cycles: usize;
+        if let Some(ck) = resume {
+            // Resumed runs skip every cold-start side effect in the
+            // branch below (init forks, initial routing, eager
+            // resolves, churn arming, trace pre-push, initial
+            // dispatch): all of it happened before the capture, and
+            // its RNG/scheduler state travels in the checkpoint.
+            let MultiModelCheckpoint {
+                core,
+                done_cycles: dc,
+                records: rs,
+                globals: gs,
+                model_of: mo,
+                models,
+                scheduler: sched_state,
+                subs: sub_states,
+            } = ck;
+            ensure!(
+                models.len() == m_count
+                    && gs.len() == m_count
+                    && rs.len() == m_count
+                    && sub_states.len() == m_count,
+                "checkpoint was captured with a different model count"
+            );
+            now = core.now;
+            arrival_seq = core.arrival_seq;
+            q = self.restore_core(core)?;
+            for (m, state) in models.iter().enumerate() {
+                registry.models[m].import_state(state)?;
+            }
+            scheduler.import_state(&sched_state)?;
+            subs = sub_states
+                .iter()
+                .map(SubFleetAlloc::import_state)
+                .collect::<Result<Vec<_>>>()?;
+            globals = gs;
+            model_of = mo;
+            records = rs;
+            done_cycles = dc;
+        } else {
+            self.stats = EngineStats::default();
 
-        // Route the initial fleet through the scheduler, then solve each
-        // model's sub-fleet.
-        let active = registry.active_ids();
-        ensure!(!active.is_empty(), "every model is budget-exhausted at start");
-        let mut model_of: Vec<usize> = Vec::with_capacity(self.slots.len());
-        for slot in 0..self.slots.len() {
-            model_of.push(scheduler.pick(slot, 0.0, &registry, &active));
-        }
-        let mut subs: Vec<SubFleetAlloc> = (0..m_count).map(|_| SubFleetAlloc::new()).collect();
-        for (m, sub) in subs.iter_mut().enumerate() {
-            // solved eagerly so the initial dispatch below sees clean state
-            self.resolve_sub(m, &model_of, sub, &specs[m])?;
+            // Per-model parameter sets. Model 0 forks with the same salt as
+            // the single-model path, keeping the M = 1 stream identical; a
+            // per-model phantom spec skips materialization (bookkeeping
+            // only) but still consumes its fork so sibling models' init
+            // streams are independent of the phantom flags.
+            globals = match &self.exec {
+                ExecMode::Real { runtime, .. } => (0..m_count)
+                    .map(|m| {
+                        let mut init_rng = self.rng.fork(0x1417 ^ ((m as u64) << 20));
+                        if specs[m].phantom {
+                            None
+                        } else {
+                            Some(runtime.init_params(&mut init_rng))
+                        }
+                    })
+                    .collect(),
+                ExecMode::Phantom => vec![None; m_count],
+            };
+
+            // Route the initial fleet through the scheduler, then solve each
+            // model's sub-fleet.
+            let active = registry.active_ids();
+            ensure!(!active.is_empty(), "every model is budget-exhausted at start");
+            model_of = Vec::with_capacity(self.slots.len());
+            for slot in 0..self.slots.len() {
+                model_of.push(scheduler.pick(slot, 0.0, &registry, &active));
+            }
+            subs = (0..m_count).map(|_| SubFleetAlloc::new()).collect();
+            for (m, sub) in subs.iter_mut().enumerate() {
+                // solved eagerly so the initial dispatch below sees clean state
+                self.resolve_sub(m, &model_of, sub, &specs[m])?;
+            }
+
+            q = CoordQueue::new(self.num_shards);
+            self.shard_events = vec![0; q.shards()];
+            arrival_seq = 0;
+            now = 0.0f64;
+
+            // churn arming — identical to `run`
+            if self.churn.join_rate_per_s > 0.0 {
+                let dt = exp_sample(&mut self.churn_rng, 1.0 / self.churn.join_rate_per_s);
+                q.push(now + dt, Event::Join);
+            }
+            if self.churn.mean_lifetime_s > 0.0 {
+                for slot in 0..self.slots.len() {
+                    let life = exp_sample(&mut self.churn_rng, self.churn.mean_lifetime_s);
+                    q.push(now + life, Event::Leave { slot });
+                }
+            }
+
+            // trace-driven workload: scripted churn schedule, pre-pushed
+            // in file order on shard 0 (identical to the single-model
+            // path — trace replays are bit-identical for every --shards)
+            if let Some(trace) = self.scenario.config.trace.as_ref() {
+                for (idx, ev) in trace.events.iter().enumerate() {
+                    q.push(ev.time, Event::Trace { idx });
+                }
+            }
+
+            // initial dispatch: model-grouped, ascending slot order within
+            // each model (for M = 1 this is the whole fleet in slot order).
+            // Every model's sub-fleet is ready at t = 0, so each batches its
+            // train steps through the shared pool (dispatch_batch is
+            // stream- and seq-identical to per-slot dispatch_model calls —
+            // the subs were solved eagerly above, so no lazy re-solve can
+            // interleave).
+            for m in 0..m_count {
+                let entries: Vec<(usize, Option<(u64, u64, LearnerCost)>)> = subs[m]
+                    .slots
+                    .clone()
+                    .into_iter()
+                    .map(|slot| (slot, subs[m].assignment_with_cost(slot)))
+                    .collect();
+                let version = registry.models[m].version;
+                let scheduled = self.dispatch_batch(
+                    &mut q,
+                    now,
+                    m,
+                    &entries,
+                    &globals[m],
+                    &opts.train,
+                    version,
+                    specs[m].t_cycle,
+                )?;
+                for planned in scheduled.into_iter().flatten() {
+                    registry.models[m].record_dispatch(version);
+                    scheduler.observe_dispatch(m, now + planned);
+                }
+            }
+            q.push(now + t_cycle, Event::Boundary);
+
+            records = vec![Vec::with_capacity(cycles); m_count];
+            done_cycles = 0;
         }
 
         // Scheduler-driven migrations are batched to the next flush
@@ -1615,64 +2114,10 @@ impl<'rt> EventEngine<'rt> {
         // provisional assignment until then, and the boundary applies
         // all moves at once — each affected sub-fleet is dirtied (and
         // so re-solved) at most once per boundary instead of up to
-        // twice per learner move.
+        // twice per learner move. Applied at every boundary, so a
+        // checkpoint never carries pending moves.
         let mut pending_moves: std::collections::BTreeMap<usize, usize> =
             std::collections::BTreeMap::new();
-
-        let mut q = CoordQueue::new(self.num_shards);
-        self.shard_events = vec![0; q.shards()];
-        // global arrival sequence stamp for the models' per-shard
-        // summary windows (merged by (time, seq, shard_id) at each
-        // boundary — see multimodel::ModelInstance)
-        let mut arrival_seq: u64 = 0;
-        let mut now = 0.0f64;
-
-        // churn arming — identical to `run`
-        if self.churn.join_rate_per_s > 0.0 {
-            let dt = exp_sample(&mut self.churn_rng, 1.0 / self.churn.join_rate_per_s);
-            q.push(now + dt, Event::Join);
-        }
-        if self.churn.mean_lifetime_s > 0.0 {
-            for slot in 0..self.slots.len() {
-                let life = exp_sample(&mut self.churn_rng, self.churn.mean_lifetime_s);
-                q.push(now + life, Event::Leave { slot });
-            }
-        }
-
-        // initial dispatch: model-grouped, ascending slot order within
-        // each model (for M = 1 this is the whole fleet in slot order).
-        // Every model's sub-fleet is ready at t = 0, so each batches its
-        // train steps through the shared pool (dispatch_batch is
-        // stream- and seq-identical to per-slot dispatch_model calls —
-        // the subs were solved eagerly above, so no lazy re-solve can
-        // interleave).
-        for m in 0..m_count {
-            let entries: Vec<(usize, Option<(u64, u64, LearnerCost)>)> = subs[m]
-                .slots
-                .clone()
-                .into_iter()
-                .map(|slot| (slot, subs[m].assignment_with_cost(slot)))
-                .collect();
-            let version = registry.models[m].version;
-            let scheduled = self.dispatch_batch(
-                &mut q,
-                now,
-                m,
-                &entries,
-                &globals[m],
-                &opts.train,
-                version,
-                specs[m].t_cycle,
-            )?;
-            for planned in scheduled.into_iter().flatten() {
-                registry.models[m].record_dispatch(version);
-                scheduler.observe_dispatch(m, now + planned);
-            }
-        }
-        q.push(now + t_cycle, Event::Boundary);
-
-        let mut records: Vec<Vec<CycleRecord>> = vec![Vec::with_capacity(cycles); m_count];
-        let mut done_cycles = 0usize;
 
         while done_cycles < cycles {
             let (t, shard, ev) = q.pop().ok_or_else(|| {
@@ -1888,6 +2333,33 @@ impl<'rt> EventEngine<'rt> {
                         self.stats.leaves += 1;
                     }
                 }
+                Event::Trace { idx } => {
+                    let (joined, left) = self.apply_trace(&mut q, now, idx);
+                    for slot in left {
+                        subs[model_of[slot]].dirty = true;
+                    }
+                    // newcomers route through the scheduler and start
+                    // immediately — same treatment as a Poisson join
+                    for slot in joined {
+                        let active = registry.active_ids();
+                        if active.is_empty() {
+                            model_of.push(0); // park: nothing left to train
+                            continue;
+                        }
+                        let m = scheduler.pick(slot, now, &registry, &active);
+                        model_of.push(m);
+                        subs[m].dirty = true;
+                        let version = registry.models[m].version;
+                        let scheduled = self.dispatch_model(
+                            &mut q, now, slot, m, &model_of, &mut subs[m], &specs[m],
+                            &globals[m], &opts.train, version,
+                        )?;
+                        if let Some(planned) = scheduled {
+                            registry.models[m].record_dispatch(version);
+                            scheduler.observe_dispatch(m, now + planned);
+                        }
+                    }
+                }
                 Event::Boundary => {
                     // apply the batched scheduler migrations: every
                     // affected sub-fleet is dirtied at most once per
@@ -1962,6 +2434,23 @@ impl<'rt> EventEngine<'rt> {
                         }
                     }
                     q.push(now + t_cycle, Event::Boundary);
+                    // suspend point — mirror of the single-model one:
+                    // pending moves were applied, every window was
+                    // taken, the next Boundary is armed
+                    if stop_after.is_some_and(|stop| done_cycles >= stop) {
+                        let core = self.capture_core(&mut q, now, arrival_seq);
+                        let ck = MultiModelCheckpoint {
+                            core,
+                            done_cycles,
+                            records,
+                            globals,
+                            model_of,
+                            models: registry.models.iter().map(|m| m.export_state()).collect(),
+                            scheduler: scheduler.export_state(),
+                            subs: subs.iter().map(|s| s.export_state()).collect(),
+                        };
+                        return Ok(MultiRunOutcome::Suspended(Box::new(ck)));
+                    }
                 }
             }
         }
@@ -1983,7 +2472,7 @@ impl<'rt> EventEngine<'rt> {
                 retunes: registry.models[m].retunes,
             })
             .collect();
-        Ok(MultiModelReport { records, stats })
+        Ok(MultiRunOutcome::Finished(Box::new(MultiModelReport { records, stats })))
     }
 }
 
@@ -2332,5 +2821,172 @@ mod tests {
             per_shard.iter().all(|&n| n > 0),
             "some regional coordinator saw no events: {per_shard:?}"
         );
+    }
+
+    // --- trace-driven workloads + checkpoint/restore -------------------
+
+    use crate::config::{TraceConfig, TraceEvent};
+
+    fn traced_engine(k: usize, churn: ChurnConfig, trace: TraceConfig) -> EventEngine<'static> {
+        let scenario = ScenarioConfig::paper_default()
+            .with_learners(k)
+            .with_churn(churn)
+            .with_trace(trace)
+            .unwrap()
+            .build();
+        EventEngine::new(
+            scenario,
+            AllocatorKind::Eta,
+            AggregationRule::FedAvg,
+            ExecMode::Phantom,
+        )
+        .unwrap()
+    }
+
+    fn async_opts(cycles: usize) -> EngineOptions {
+        EngineOptions {
+            train: TrainOptions { cycles, ..Default::default() },
+            policy: EnginePolicy::Async(AsyncAggregator::default()),
+        }
+    }
+
+    #[test]
+    fn trace_events_drive_joins_and_leaves() {
+        let trace = TraceConfig::new(
+            1,
+            vec![
+                TraceEvent { time: 5.0, action: TraceAction::Join { count: 3 } },
+                TraceEvent { time: 25.0, action: TraceAction::Leave { count: 2 } },
+            ],
+        )
+        .unwrap();
+        let mut engine = traced_engine(8, ChurnConfig::disabled(), trace);
+        engine.run(&async_opts(5)).unwrap();
+        assert_eq!(engine.stats.joins, 3);
+        assert_eq!(engine.stats.leaves, 2);
+        assert_eq!(engine.stats.final_alive, 8 + 3 - 2);
+    }
+
+    #[test]
+    fn trace_capacity_and_outage_shape_the_fleet() {
+        let trace = TraceConfig::new(
+            4,
+            vec![
+                TraceEvent { time: 2.0, action: TraceAction::Capacity { target: 14 } },
+                TraceEvent {
+                    time: 30.0,
+                    action: TraceAction::Outage { region: 1, fraction: 1.0 },
+                },
+            ],
+        )
+        .unwrap();
+        let mut engine = traced_engine(8, ChurnConfig::disabled(), trace);
+        engine.run(&async_opts(6)).unwrap();
+        assert_eq!(engine.stats.joins, 6, "capacity 14 from 8 alive");
+        // outage kills every alive slot with slot % 4 == 1; slots 1, 5,
+        // 9, 13 existed by then
+        assert_eq!(engine.stats.leaves, 4);
+        assert_eq!(engine.stats.final_alive, 10);
+    }
+
+    #[test]
+    fn trace_replay_is_bit_identical_across_shards() {
+        let trace = TraceConfig::gen_flash_crowd(9, 10.0, 3, 2, 40.0, 1);
+        let run = |shards: usize| {
+            let mut engine =
+                traced_engine(10, ChurnConfig::new(0.2, 80.0), trace.clone()).with_shards(shards);
+            let records = engine.run(&async_opts(6)).unwrap();
+            (record_digest(&records), engine.stats)
+        };
+        let (flat, flat_stats) = run(1);
+        for k in [2usize, 8] {
+            let (d, s) = run(k);
+            assert_eq!(d, flat, "trace replay diverged at k={k}");
+            assert_eq!(s, flat_stats, "trace stats diverged at k={k}");
+        }
+    }
+
+    #[test]
+    fn checkpoint_resume_matches_uninterrupted_run() {
+        let trace = TraceConfig::gen_diurnal(4, 120.0, 60.0, 6, 8, 14, 1);
+        let opts = async_opts(6);
+        let make = || traced_engine(8, ChurnConfig::new(0.3, 50.0), trace.clone());
+
+        let mut oracle = make();
+        let (full_records, _) = oracle.run_with_params(&opts).unwrap();
+
+        let mut first = make();
+        let ck = match first.run_to_checkpoint(&opts, None, Some(2)).unwrap() {
+            RunOutcome::Suspended(ck) => ck,
+            RunOutcome::Finished { .. } => panic!("expected a suspension at cycle 2"),
+        };
+        assert_eq!(ck.records.len(), 2);
+        // push the checkpoint through its own text format — resume must
+        // survive serialization, not just an in-memory hand-off
+        let text = ck.to_json().pretty();
+        let ck = EngineCheckpoint::from_json(&crate::json::parse(&text).unwrap()).unwrap();
+
+        let mut second = make();
+        let records = match second.run_to_checkpoint(&opts, Some(ck), None).unwrap() {
+            RunOutcome::Finished { records, .. } => records,
+            RunOutcome::Suspended(_) => panic!("resume had no stop_after"),
+        };
+        assert_eq!(record_digest(&records), record_digest(&full_records));
+        assert_eq!(second.stats, oracle.stats, "resumed stats diverged");
+    }
+
+    #[test]
+    fn checkpoint_restores_into_a_different_shard_count() {
+        let trace = TraceConfig::gen_flash_crowd(2, 15.0, 2, 3, 50.0, 1);
+        let opts = async_opts(5);
+        let make = |shards: usize| {
+            traced_engine(9, ChurnConfig::new(0.2, 70.0), trace.clone()).with_shards(shards)
+        };
+
+        let mut oracle = make(1);
+        let (full_records, _) = oracle.run_with_params(&opts).unwrap();
+
+        // capture on the flat coordinator, resume on 8 shards
+        let mut first = make(1);
+        let ck = match first.run_to_checkpoint(&opts, None, Some(2)).unwrap() {
+            RunOutcome::Suspended(ck) => ck,
+            RunOutcome::Finished { .. } => panic!("expected a suspension"),
+        };
+        let mut second = make(8);
+        let records = match second.run_to_checkpoint(&opts, Some(*ck), None).unwrap() {
+            RunOutcome::Finished { records, .. } => records,
+            RunOutcome::Suspended(_) => panic!("resume had no stop_after"),
+        };
+        assert_eq!(record_digest(&records), record_digest(&full_records));
+    }
+
+    #[test]
+    fn multi_model_checkpoint_resume_matches_uninterrupted_run() {
+        use crate::multimodel::{report_digest, MultiModelConfig, MultiModelOptions, SchedulerKind};
+        let opts = MultiModelOptions {
+            train: TrainOptions { cycles: 6, ..Default::default() },
+            multi: MultiModelConfig::new(3, 2, SchedulerKind::RoundRobin),
+            ..Default::default()
+        };
+        let make = || phantom_engine(9, ChurnConfig::new(0.3, 60.0));
+
+        let mut oracle = make();
+        let full = oracle.run_multi(&opts).unwrap();
+
+        let mut first = make();
+        let ck = match first.run_multi_to_checkpoint(&opts, None, Some(3)).unwrap() {
+            MultiRunOutcome::Suspended(ck) => ck,
+            MultiRunOutcome::Finished(_) => panic!("expected a suspension at cycle 3"),
+        };
+        let text = ck.to_json().pretty();
+        let ck = MultiModelCheckpoint::from_json(&crate::json::parse(&text).unwrap()).unwrap();
+
+        let mut second = make();
+        let report = match second.run_multi_to_checkpoint(&opts, Some(ck), None).unwrap() {
+            MultiRunOutcome::Finished(report) => *report,
+            MultiRunOutcome::Suspended(_) => panic!("resume had no stop_after"),
+        };
+        assert_eq!(report_digest(&report), report_digest(&full));
+        assert_eq!(second.stats, oracle.stats, "resumed stats diverged");
     }
 }

@@ -26,12 +26,17 @@
 //!   thousands of learners with optional per-arrival
 //!   staleness-weighted asynchronous aggregation.
 
+pub mod checkpoint;
 pub mod engine;
 pub mod faults;
 pub mod learner;
 pub mod orchestrator;
 
-pub use engine::{EngineError, EngineOptions, EnginePolicy, EngineStats, EventEngine, ExecMode};
+pub use checkpoint::{CoreState, EngineCheckpoint, EventCheckpoint, MultiModelCheckpoint};
+pub use engine::{
+    EngineError, EngineOptions, EnginePolicy, EngineStats, EventEngine, ExecMode, MultiRunOutcome,
+    RunOutcome,
+};
 pub use faults::{FaultModel, FaultOutcome};
 pub use learner::Learner;
 pub use orchestrator::{record_digest, CycleRecord, Orchestrator, TrainOptions};

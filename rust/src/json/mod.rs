@@ -437,6 +437,69 @@ impl<'a> Parser<'a> {
     }
 }
 
+// ----------------------------------------------------------------------
+// Bit-exact float encoding (checkpoint substrate)
+// ----------------------------------------------------------------------
+//
+// Plain JSON numbers round-trip finite f64s exactly (Rust prints the
+// shortest digit string that parses back to the same bits), but they
+// cannot carry NaN/∞ and re-parsing f32 training state through f64
+// text is needlessly fragile. Checkpoints therefore store floats as
+// fixed-width lowercase hex of the IEEE-754 bit pattern: 16 digits for
+// f64, 8 for f32, and whole `f32` tensors as one concatenated string.
+
+/// Encode an `f64` as the 16-hex-digit big-endian form of `to_bits`.
+pub fn f64_to_hex(v: f64) -> String {
+    format!("{:016x}", v.to_bits())
+}
+
+/// Decode [`f64_to_hex`] output; bit-exact, including NaN payloads.
+pub fn f64_from_hex(s: &str) -> Result<f64> {
+    if s.len() != 16 {
+        bail!("f64 hex must be 16 digits, got '{s}'");
+    }
+    let bits = u64::from_str_radix(s, 16).with_context(|| format!("bad f64 hex '{s}'"))?;
+    Ok(f64::from_bits(bits))
+}
+
+/// Encode an `f32` as the 8-hex-digit big-endian form of `to_bits`.
+pub fn f32_to_hex(v: f32) -> String {
+    format!("{:08x}", v.to_bits())
+}
+
+/// Decode [`f32_to_hex`] output; bit-exact, including NaN payloads.
+pub fn f32_from_hex(s: &str) -> Result<f32> {
+    if s.len() != 8 {
+        bail!("f32 hex must be 8 digits, got '{s}'");
+    }
+    let bits = u32::from_str_radix(s, 16).with_context(|| format!("bad f32 hex '{s}'"))?;
+    Ok(f32::from_bits(bits))
+}
+
+/// Encode an `f32` tensor as one concatenated 8-hex-per-element string
+/// (a `ParamSet` layer serializes to a single compact JSON string).
+pub fn tensor_to_hex(t: &[f32]) -> String {
+    let mut s = String::with_capacity(t.len() * 8);
+    for &v in t {
+        let _ = fmt::Write::write_fmt(&mut s, format_args!("{:08x}", v.to_bits()));
+    }
+    s
+}
+
+/// Decode [`tensor_to_hex`] output back into the exact bit pattern.
+pub fn tensor_from_hex(s: &str) -> Result<Vec<f32>> {
+    if s.len() % 8 != 0 {
+        bail!("tensor hex length {} is not a multiple of 8", s.len());
+    }
+    if !s.is_ascii() {
+        bail!("tensor hex must be ASCII");
+    }
+    s.as_bytes()
+        .chunks(8)
+        .map(|c| f32_from_hex(std::str::from_utf8(c).expect("ascii checked above")))
+        .collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -518,5 +581,32 @@ mod tests {
         let v = parse(r#"{"a": 1}"#).unwrap();
         let err = v.str_field("missing").unwrap_err().to_string();
         assert!(err.contains("missing"), "{err}");
+    }
+
+    #[test]
+    fn float_hex_round_trips_bit_exactly() {
+        for v in [0.0f64, -0.0, 1.5, f64::MIN_POSITIVE, f64::MAX, f64::NEG_INFINITY, f64::NAN] {
+            let back = f64_from_hex(&f64_to_hex(v)).unwrap();
+            assert_eq!(back.to_bits(), v.to_bits(), "f64 {v}");
+        }
+        for v in [0.0f32, -0.0, 0.1, f32::MAX, f32::INFINITY, f32::NAN] {
+            let back = f32_from_hex(&f32_to_hex(v)).unwrap();
+            assert_eq!(back.to_bits(), v.to_bits(), "f32 {v}");
+        }
+    }
+
+    #[test]
+    fn tensor_hex_round_trips() {
+        let t: Vec<f32> = (0..257).map(|i| (i as f32 - 100.5) * 0.3).collect();
+        let s = tensor_to_hex(&t);
+        assert_eq!(s.len(), t.len() * 8);
+        let back = tensor_from_hex(&s).unwrap();
+        assert_eq!(back.len(), t.len());
+        for (a, b) in t.iter().zip(&back) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        assert!(tensor_from_hex("abc").is_err());
+        assert!(f64_from_hex("xyz").is_err());
+        assert!(f32_from_hex("0123456z").is_err());
     }
 }

@@ -32,6 +32,7 @@
 //! | [`runtime`] | model executor: native pure-Rust backend (default) or PJRT (`pjrt` feature) |
 //! | [`runtime::pool`] | deterministic sharded thread pool for real-numerics learner steps |
 //! | [`coordinator`] | lock-step orchestrator **and** the event-driven fleet engine |
+//! | [`serve`] | `asyncmel serve` daemon: spooled submissions, checkpoint/restore, pluggable result formats |
 //! | [`metrics`] | CSV writers, table printers, run summaries |
 //! | [`experiments`] | paper figures/tables + fleet-scale and multi-model engine sweeps |
 //!
@@ -141,6 +142,38 @@
 //! to the original scalar implementation (reference-differential tests
 //! in `runtime::native`; `rust/benches/native_hotpath.rs` times it).
 //!
+//! ## Service mode, checkpoint/restore, trace-driven workloads
+//!
+//! [`serve`] turns the engine into a long-running daemon
+//! (`asyncmel serve`): submissions — a scenario plus a run spec —
+//! arrive in a watched spool directory (or as one-line JSON on stdin),
+//! run on the [`coordinator::EventEngine`], and stream results back
+//! through a pluggable [`serve::Format`] layer (JSON first, over the
+//! in-tree [`json`] substrate).
+//!
+//! **Checkpoint/restore** ([`coordinator::checkpoint`]): the full
+//! engine state — sharded event queue (with its global sequence
+//! counter), RNG streams, fleet slots, allocation, fading process,
+//! counters, and on the multi-model path every model instance,
+//! scheduler and sub-fleet — serializes to JSON at aggregation
+//! boundaries ([`coordinator::EventEngine::run_to_checkpoint`] /
+//! `run_multi_to_checkpoint`). All floats are hex-encoded bit
+//! patterns, so a killed daemon (or any caller) that resumes from a
+//! checkpoint produces records, final parameters and
+//! [`coordinator::EngineStats`] **bit-identical** to an uninterrupted
+//! run — even at a different shard or thread count
+//! (`rust/tests/checkpoint_restore.rs`).
+//!
+//! **Trace-driven workloads** ([`config::trace`],
+//! `ScenarioConfig.trace`): beside the Poisson/exponential churn
+//! model, a replayable [`config::TraceConfig`] scripts exact fleet
+//! dynamics — joins, leaves, capacity targets, correlated regional
+//! outages — with seeded generators for diurnal curves, flash crowds
+//! and outage storms. Trace events are pre-scheduled on the event
+//! queue, so the same trace replays bit-identically for every
+//! `--shards`/`--threads` setting (`rust/benches/trace_replay.rs`
+//! times a 5000-learner replay).
+//!
 //! ## In-tree infrastructure substrates
 //!
 //! This build environment is fully offline, so the usual ecosystem
@@ -167,6 +200,7 @@ pub mod json;
 pub mod metrics;
 pub mod multimodel;
 pub mod runtime;
+pub mod serve;
 pub mod sim;
 pub mod solver;
 pub mod staleness;

@@ -16,12 +16,14 @@
 //! Global flag: `--config <json>` loads a [`ScenarioConfig`] override
 //! file (sparse — absent fields keep the paper defaults).
 
+use std::path::PathBuf;
+
 use anyhow::{bail, Result};
 
 use asyncmel::aggregation::{AggregationRule, AsyncAggregator, StalenessDecay};
 use asyncmel::allocation::{make_allocator, AllocatorKind};
 use asyncmel::cli::Args;
-use asyncmel::config::{ChurnConfig, EngineKind, Scenario, ScenarioConfig};
+use asyncmel::config::{ChurnConfig, EngineKind, Scenario, ScenarioConfig, TraceConfig};
 use asyncmel::coordinator::{
     EngineOptions, EnginePolicy, EventEngine, ExecMode, Orchestrator, TrainOptions,
 };
@@ -32,8 +34,10 @@ use asyncmel::multimodel::{
     AdaptiveBufferConfig, ModelTaskSpec, MultiModelConfig, MultiModelOptions, SchedulerKind,
 };
 use asyncmel::runtime::{default_artifacts_dir, Runtime};
+use asyncmel::serve::ServeOptions;
 
-const USAGE: &str = "usage: asyncmel <info|solve|fig2|fig3|train|fleet|multi|ablation> [flags]
+const USAGE: &str =
+    "usage: asyncmel <info|solve|fig2|fig3|train|fleet|multi|ablation|serve|trace-gen> [flags]
   info                               environment + artifact status
   solve    --k N --t SECS            compare all allocation schemes
   fig2     --seeds N --csv PATH      staleness vs K sweep (paper Fig. 2)
@@ -73,6 +77,22 @@ const USAGE: &str = "usage: asyncmel <info|solve|fig2|fig3|train|fleet|multi|abl
            --hetero --adaptive-buffer BMAX [--buffer-target S --buffer-alpha A]
                                      multi-model concurrency sweep (phantom numerics)
   ablation --seeds N --csv PATH      batch-bounds sensitivity (ABL-1)
+  serve    --spool DIR               daemon: watch DIR for submission JSON files
+           --once                    drain the queue, then exit (no polling)
+           --poll-ms MS              idle poll interval (default 200)
+           --checkpoint-every N      suspend + checkpoint each job every N cycles
+                                     (0 = run start-to-finish; resume after a kill
+                                     is bit-identical to an uninterrupted run)
+           --stop-after N            exit after N checkpointed segments (CI's
+                                     deterministic stand-in for kill -9)
+           --format json|json-compact  result encoding
+           --stdin                   one-line JSON submissions on stdin instead
+  trace-gen <diurnal|flash|outage> [--seed N --regions R --out PATH]
+           diurnal: --horizon S --period S --steps N --base K --peak K
+           flash:   --start S --steps N --joins K --hold S
+           outage:  --horizon S --outages N --fraction F --recover S --alive K
+                                     seeded churn-trace generators (JSON to stdout
+                                     or --out; load via ScenarioConfig.trace)
 global: --config PATH (sparse scenario JSON override)";
 
 /// Paper model stack for artifact-free runs.
@@ -613,6 +633,77 @@ fn cmd_ablation(base: ScenarioConfig, args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `asyncmel serve` — the spool-watching daemon. The submission files
+/// carry their own scenarios, so the global `--config` override does
+/// not apply here.
+fn cmd_serve(args: &Args) -> Result<()> {
+    let opts = ServeOptions {
+        spool: PathBuf::from(args.get("spool").unwrap_or("spool")),
+        once: args.has("once"),
+        poll_ms: args.get_or("poll-ms", 200u64)?,
+        checkpoint_every: args.get_or("checkpoint-every", 0usize)?,
+        stop_after_segments: match args.get("stop-after") {
+            Some(_) => Some(args.require("stop-after")?),
+            None => None,
+        },
+        format: args.get("format").unwrap_or("json").to_string(),
+        stdin: args.has("stdin"),
+    };
+    let summary = asyncmel::serve::serve(&opts)?;
+    println!(
+        "serve: {} completed, {} failed, {} suspended, {} segment(s)",
+        summary.jobs_completed, summary.jobs_failed, summary.jobs_suspended, summary.segments
+    );
+    Ok(())
+}
+
+/// `asyncmel trace-gen` — seeded churn-trace generators. Emits the
+/// trace JSON schema `{"regions": R, "events": [{"t": S, ...}]}` that
+/// `ScenarioConfig.trace` (and serve submissions) accept.
+fn cmd_trace_gen(args: &Args) -> Result<()> {
+    let kind = args.positional.first().map(|s| s.as_str()).unwrap_or("diurnal");
+    let seed: u64 = args.get_or("seed", 1)?;
+    let regions: usize = args.get_or("regions", 1)?;
+    let trace = match kind {
+        "diurnal" => TraceConfig::gen_diurnal(
+            seed,
+            args.get_or("horizon", 600.0)?,
+            args.get_or("period", 300.0)?,
+            args.get_or("steps", 16)?,
+            args.get_or("base", 8)?,
+            args.get_or("peak", 32)?,
+            regions,
+        ),
+        "flash" => TraceConfig::gen_flash_crowd(
+            seed,
+            args.get_or("start", 60.0)?,
+            args.get_or("steps", 5)?,
+            args.get_or("joins", 10)?,
+            args.get_or("hold", 120.0)?,
+            regions,
+        ),
+        "outage" => TraceConfig::gen_regional_outages(
+            seed,
+            args.get_or("horizon", 600.0)?,
+            args.get_or("outages", 3)?,
+            args.get_or("fraction", 0.5)?,
+            args.get_or("recover", 90.0)?,
+            regions,
+            args.get_or("alive", 32)?,
+        ),
+        other => bail!("unknown trace kind '{other}' (diurnal|flash|outage)"),
+    };
+    let text = trace.to_json().pretty();
+    match args.get("out") {
+        Some(path) => {
+            std::fs::write(path, &text)?;
+            println!("trace ({} events) -> {path}", trace.events.len());
+        }
+        None => println!("{text}"),
+    }
+    Ok(())
+}
+
 fn main() -> Result<()> {
     let args = Args::from_env()?;
     let base = base_config(&args)?;
@@ -628,6 +719,8 @@ fn main() -> Result<()> {
         Some("fleet") => cmd_fleet(base, &args),
         Some("multi") => cmd_multi(base, &args),
         Some("ablation") => cmd_ablation(base, &args),
+        Some("serve") => cmd_serve(&args),
+        Some("trace-gen") => cmd_trace_gen(&args),
         Some(other) => bail!("unknown subcommand '{other}'\n{USAGE}"),
         None => {
             println!("{USAGE}");

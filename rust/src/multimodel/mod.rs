@@ -51,10 +51,28 @@
 
 use std::collections::BTreeMap;
 
+use anyhow::Result;
+
 use crate::aggregation::{AsyncAggregator, ParamSet};
 use crate::allocation::Allocation;
+use crate::coordinator::checkpoint as ckpt;
 use crate::coordinator::{record_digest, CycleRecord, TrainOptions};
 use crate::costmodel::{LearnerCost, TaskParams};
+use crate::json::{self, Value};
+
+fn opt_usize_to_json(o: Option<usize>) -> Value {
+    match o {
+        Some(n) => Value::from(n),
+        None => Value::Null,
+    }
+}
+
+fn opt_usize_from_json(v: &Value) -> Result<Option<usize>> {
+    match v {
+        Value::Null => Ok(None),
+        other => Ok(Some(other.as_usize()?)),
+    }
+}
 
 /// Which freed-slot routing policy the engine uses.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
@@ -627,6 +645,126 @@ impl ModelInstance {
         let avg_s = if arrived == 0 { 0.0 } else { sum_s as f64 / arrived as f64 };
         (arrived, train_loss, max_s, avg_s)
     }
+
+    /// Serialize the instance's *evolving* state for checkpointing.
+    /// Config-derived fields (id, weight, aggregator, adaptive config,
+    /// budgets/targets) are rebuilt from the run options at restore, so
+    /// only what the run mutated travels. Floats are hex-encoded for
+    /// bit-exact round trips ([`crate::coordinator::checkpoint`]).
+    pub fn export_state(&self) -> Value {
+        let mut v = Value::obj();
+        v.set("buffer_size", Value::from(self.buffer_size));
+        v.set("staleness_ewma", ckpt::hex_f64(self.staleness_ewma));
+        v.set("retunes", Value::from(self.retunes));
+        v.set("version", Value::from(self.version));
+        v.set("arrivals", Value::from(self.arrivals));
+        v.set("budget_cycle", opt_usize_to_json(self.budget_cycle));
+        v.set("target_cycle", opt_usize_to_json(self.target_cycle));
+        v.set("local_seq", Value::from(self.local_seq));
+        v.set(
+            "buffer",
+            Value::Arr(
+                self.buffer
+                    .iter()
+                    .map(|u| {
+                        let mut b = Value::obj();
+                        b.set("params", ckpt::params_to_json(&u.params));
+                        b.set("staleness", Value::from(u.staleness));
+                        b.set("train_loss", ckpt::hex_f32(u.train_loss));
+                        b
+                    })
+                    .collect(),
+            ),
+        );
+        v.set(
+            "in_flight",
+            Value::Arr(
+                self.in_flight
+                    .iter()
+                    .map(|(&version, &count)| {
+                        Value::Arr(vec![Value::from(version), Value::from(count)])
+                    })
+                    .collect(),
+            ),
+        );
+        v.set(
+            "windows",
+            Value::Arr(
+                self.windows
+                    .iter()
+                    .map(|w| {
+                        Value::Arr(
+                            w.iter()
+                                .map(|e| {
+                                    let mut ev = Value::obj();
+                                    ev.set("t", ckpt::hex_f64(e.time));
+                                    ev.set("seq", Value::from(e.seq));
+                                    ev.set("staleness", Value::from(e.staleness));
+                                    ev.set("loss", ckpt::hex_f32(e.loss));
+                                    ev
+                                })
+                                .collect(),
+                        )
+                    })
+                    .collect(),
+            ),
+        );
+        v
+    }
+
+    /// Restore state captured by [`Self::export_state`] onto a freshly
+    /// configured instance (same id/weight/aggregator/adaptive config).
+    pub fn import_state(&mut self, v: &Value) -> Result<()> {
+        self.buffer_size = v.usize_field("buffer_size")?;
+        self.staleness_ewma = ckpt::f64_hex_field(v, "staleness_ewma")?;
+        self.retunes = v.u64_field("retunes")?;
+        self.version = v.u64_field("version")?;
+        self.arrivals = v.u64_field("arrivals")?;
+        self.budget_cycle = opt_usize_from_json(v.field("budget_cycle")?)?;
+        self.target_cycle = opt_usize_from_json(v.field("target_cycle")?)?;
+        self.local_seq = v.u64_field("local_seq")?;
+        self.buffer = v
+            .field("buffer")?
+            .as_arr()?
+            .iter()
+            .map(|b| {
+                Ok(BufferedUpdate {
+                    params: ckpt::params_from_json(b.field("params")?)?,
+                    staleness: b.u64_field("staleness")?,
+                    train_loss: ckpt::f32_hex_field(b, "train_loss")?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        self.in_flight = v
+            .field("in_flight")?
+            .as_arr()?
+            .iter()
+            .map(|pair| {
+                let pair = pair.as_arr()?;
+                anyhow::ensure!(pair.len() == 2, "in_flight entries are [version, count]");
+                Ok((pair[0].as_u64()?, pair[1].as_usize()?))
+            })
+            .collect::<Result<BTreeMap<_, _>>>()?;
+        self.windows = v
+            .field("windows")?
+            .as_arr()?
+            .iter()
+            .map(|w| {
+                w.as_arr()?
+                    .iter()
+                    .map(|e| {
+                        Ok(WindowEntry {
+                            time: ckpt::f64_hex_field(e, "t")?,
+                            seq: e.u64_field("seq")?,
+                            staleness: e.u64_field("staleness")?,
+                            loss: ckpt::f32_hex_field(e, "loss")?,
+                        })
+                    })
+                    .collect::<Result<Vec<_>>>()
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(())
+    }
 }
 
 /// The `M` concurrent model instances.
@@ -690,6 +828,14 @@ pub trait ModelScheduler {
     /// Observe an upload arrival for `model` at virtual time `now`.
     /// Default no-op.
     fn observe_arrival(&mut self, _model: usize, _now: f64) {}
+
+    /// Serialize the scheduler's evolving state for checkpointing
+    /// (floats hex-encoded; see [`crate::coordinator::checkpoint`]).
+    fn export_state(&self) -> Value;
+
+    /// Restore state captured by [`Self::export_state`] onto a freshly
+    /// constructed scheduler of the same kind.
+    fn import_state(&mut self, v: &Value) -> Result<()>;
 }
 
 /// Weighted deficit pick: the model with the largest `w_m·(n+1) −
@@ -756,6 +902,21 @@ impl ModelScheduler for StaticSplit {
         // budget-exhausted home: borrow the cyclically-next active model
         *active.iter().find(|&&m| m > home).unwrap_or(&active[0])
     }
+
+    fn export_state(&self) -> Value {
+        let mut v = Value::obj();
+        v.set("home", ckpt::usize_vec_to_json(&self.home));
+        v.set("served", ckpt::u64_vec_to_json(&self.served));
+        v.set("total", Value::from(self.total));
+        v
+    }
+
+    fn import_state(&mut self, v: &Value) -> Result<()> {
+        self.home = ckpt::usize_vec_from_json(v.field("home")?)?;
+        self.served = ckpt::u64_vec_from_json(v.field("served")?)?;
+        self.total = v.u64_field("total")?;
+        Ok(())
+    }
 }
 
 /// Weighted deficit round-robin over the active models; every freed
@@ -789,6 +950,19 @@ impl ModelScheduler for RoundRobin {
         self.served[m] += 1;
         self.total += 1;
         m
+    }
+
+    fn export_state(&self) -> Value {
+        let mut v = Value::obj();
+        v.set("served", ckpt::u64_vec_to_json(&self.served));
+        v.set("total", Value::from(self.total));
+        v
+    }
+
+    fn import_state(&mut self, v: &Value) -> Result<()> {
+        self.served = ckpt::u64_vec_from_json(v.field("served")?)?;
+        self.total = v.u64_field("total")?;
+        Ok(())
     }
 }
 
@@ -836,6 +1010,17 @@ impl ModelScheduler for StalenessGreedy {
         }
         self.served[best] += 1;
         best
+    }
+
+    fn export_state(&self) -> Value {
+        let mut v = Value::obj();
+        v.set("served", ckpt::u64_vec_to_json(&self.served));
+        v
+    }
+
+    fn import_state(&mut self, v: &Value) -> Result<()> {
+        self.served = ckpt::u64_vec_from_json(v.field("served")?)?;
+        Ok(())
     }
 }
 
@@ -911,6 +1096,32 @@ impl ModelScheduler for CostModelScheduler {
         if self.pending[model].first().is_some_and(|&t| t <= now) {
             self.pending[model].remove(0);
         }
+    }
+
+    fn export_state(&self) -> Value {
+        let mut v = Value::obj();
+        v.set("served", ckpt::u64_vec_to_json(&self.served));
+        v.set(
+            "pending",
+            Value::Arr(
+                self.pending
+                    .iter()
+                    .map(|p| ckpt::f64_vec_to_json(p))
+                    .collect(),
+            ),
+        );
+        v
+    }
+
+    fn import_state(&mut self, v: &Value) -> Result<()> {
+        self.served = ckpt::u64_vec_from_json(v.field("served")?)?;
+        self.pending = v
+            .field("pending")?
+            .as_arr()?
+            .iter()
+            .map(ckpt::f64_vec_from_json)
+            .collect::<Result<Vec<_>>>()?;
+        Ok(())
     }
 }
 
@@ -1006,6 +1217,59 @@ impl SubFleetAlloc {
     /// empty). A valid per-model solve distributes the full dataset.
     pub fn sum_d(&self) -> Option<u64> {
         self.alloc.as_ref().map(|a| a.d.iter().sum())
+    }
+
+    /// Serialize for checkpointing. The `dirty` flag travels faithfully:
+    /// a sub-fleet dirtied at a boundary (migration/churn) re-solves
+    /// lazily *after* the checkpoint, and the resumed run must do the
+    /// same — never re-solve eagerly on restore, or `stats.resolves`
+    /// (and the solver's wall-clock accounting) would diverge.
+    pub fn export_state(&self) -> Value {
+        let mut v = Value::obj();
+        v.set(
+            "alloc",
+            match &self.alloc {
+                None => Value::Null,
+                Some(a) => ckpt::alloc_to_json(a),
+            },
+        );
+        v.set(
+            "costs",
+            Value::Arr(self.costs.iter().map(ckpt::cost_to_json).collect()),
+        );
+        v.set("slots", ckpt::usize_vec_to_json(&self.slots));
+        v.set("n_slots", Value::from(self.slot_pos.len()));
+        v.set("dirty", Value::from(self.dirty));
+        v.set("last_solve_ms", ckpt::hex_f64(self.last_solve_ms));
+        v
+    }
+
+    /// Rebuild a sub-fleet allocation from [`Self::export_state`] output
+    /// (the O(1) slot index is reconstructed, not serialized).
+    pub fn import_state(v: &Value) -> Result<Self> {
+        let n_slots = v.usize_field("n_slots")?;
+        let mut sub = SubFleetAlloc::new();
+        match v.field("alloc")? {
+            Value::Null => sub.clear(n_slots),
+            a => {
+                let alloc = ckpt::alloc_from_json(a)?;
+                let costs = v
+                    .field("costs")?
+                    .as_arr()?
+                    .iter()
+                    .map(ckpt::cost_from_json)
+                    .collect::<Result<Vec<_>>>()?;
+                let slots = ckpt::usize_vec_from_json(v.field("slots")?)?;
+                anyhow::ensure!(
+                    alloc.tau.len() == slots.len() && costs.len() == slots.len(),
+                    "sub-fleet alloc/costs/slots length mismatch"
+                );
+                sub.install(alloc, costs, slots, n_slots);
+            }
+        }
+        sub.dirty = v.field("dirty")?.as_bool()?;
+        sub.last_solve_ms = ckpt::f64_hex_field(v, "last_solve_ms")?;
+        Ok(sub)
     }
 }
 
@@ -1478,5 +1742,111 @@ mod tests {
         reg.models[1].version = 2;
         assert!(reg.models[1].budget_exhausted());
         assert_eq!(reg.active_ids(), vec![0, 2]);
+    }
+
+    #[test]
+    fn model_instance_state_round_trips() {
+        let adaptive = AdaptiveBufferConfig::new(4, 1.0, 0.5);
+        let mut mi = ModelInstance::new(0, 0.5, AsyncAggregator::default(), 2, Some(adaptive));
+        let mut global: Option<ParamSet> = Some(vec![vec![0.0, 1.0]]);
+        mi.record_dispatch(0);
+        mi.record_dispatch(0);
+        mi.record_dispatch(3);
+        mi.absorb_from(
+            &mut global,
+            BufferedUpdate {
+                params: Some(vec![vec![0.5, -0.5]]),
+                staleness: 2,
+                train_loss: 0.25,
+            },
+            1,
+            3.5,
+            17,
+        );
+        mi.budget_cycle = Some(9);
+        assert_eq!(mi.buffer.len(), 1, "buffer mid-fill is the interesting case");
+        let blob = mi.export_state();
+        // restore onto a freshly configured twin
+        let mut twin = ModelInstance::new(0, 0.5, AsyncAggregator::default(), 2, Some(adaptive));
+        twin.import_state(&blob).unwrap();
+        assert_eq!(twin.export_state(), blob);
+        // and through text, as the daemon writes it
+        let text = blob.pretty();
+        let mut twin2 = ModelInstance::new(0, 0.5, AsyncAggregator::default(), 2, Some(adaptive));
+        twin2.import_state(&json::parse(&text).unwrap()).unwrap();
+        assert_eq!(twin2.export_state(), blob);
+        // behavioural equivalence: the next absorb flushes identically
+        let mut g1 = global.clone();
+        let mut g2 = global.clone();
+        let upd = || BufferedUpdate {
+            params: Some(vec![vec![1.0, 2.0]]),
+            staleness: 1,
+            train_loss: 0.125,
+        };
+        assert_eq!(
+            mi.absorb_from(&mut g1, upd(), 0, 4.0, 18),
+            twin.absorb_from(&mut g2, upd(), 0, 4.0, 18)
+        );
+        assert_eq!(g1, g2);
+        assert_eq!(mi.version, twin.version);
+        assert_eq!(mi.take_window(), twin.take_window());
+    }
+
+    #[test]
+    fn scheduler_state_round_trips_for_every_kind() {
+        let reg = registry(3, 1);
+        let cfg = MultiModelConfig::new(3, 1, SchedulerKind::Static);
+        for kind in SchedulerKind::all() {
+            let cfg = MultiModelConfig { scheduler: kind, ..cfg.clone() };
+            let mut sched = make_scheduler(&cfg);
+            // drive some state into it
+            for slot in 0..7 {
+                let m = sched.pick(slot, slot as f64, &reg, &[0, 1, 2]);
+                sched.observe_dispatch(m, slot as f64 + 10.0);
+            }
+            sched.observe_arrival(1, 11.0);
+            let blob = sched.export_state();
+            let mut twin = make_scheduler(&cfg);
+            twin.import_state(&json::parse(&blob.compact()).unwrap()).unwrap();
+            assert_eq!(twin.export_state(), blob, "{}", kind.name());
+            // identical future picks
+            for slot in 7..20 {
+                assert_eq!(
+                    sched.pick(slot, slot as f64, &reg, &[0, 1, 2]),
+                    twin.pick(slot, slot as f64, &reg, &[0, 1, 2]),
+                    "{} diverged after restore",
+                    kind.name()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn subfleet_alloc_state_round_trips() {
+        let mut sub = SubFleetAlloc::new();
+        sub.install(
+            Allocation { tau: vec![3, 5], d: vec![100, 200] },
+            vec![
+                LearnerCost::new(1e-3, 1e-4, 0.3),
+                LearnerCost::new(2e-3, 1e-4, 0.4),
+            ],
+            vec![2, 7],
+            10,
+        );
+        sub.dirty = true; // boundary migrations leave installed-but-dirty state
+        sub.last_solve_ms = 0.125;
+        let blob = sub.export_state();
+        let twin = SubFleetAlloc::import_state(&json::parse(&blob.pretty()).unwrap()).unwrap();
+        assert_eq!(twin.export_state(), blob);
+        assert!(twin.dirty, "dirty flag must travel faithfully");
+        assert_eq!(twin.assignment(7), Some((5, 200)));
+        assert_eq!(twin.assignment(0), None);
+        // the empty (cleared) form round-trips too
+        let mut empty = SubFleetAlloc::new();
+        empty.clear(4);
+        let blob = empty.export_state();
+        let twin = SubFleetAlloc::import_state(&blob).unwrap();
+        assert_eq!(twin.export_state(), blob);
+        assert_eq!(twin.assignment(1), None);
     }
 }

@@ -1,0 +1,104 @@
+//! Pluggable result-encoding layer for the `serve` daemon.
+//!
+//! Results (and only results — checkpoints have their own fixed JSON
+//! format, see [`crate::coordinator::checkpoint`]) stream through a
+//! serde-style [`Format`] object so a future wire format (CSV, a binary
+//! framing, …) plugs in without touching the daemon loop. The first and
+//! default implementation is JSON over the in-tree [`crate::json`]
+//! substrate.
+
+use anyhow::{bail, Result};
+
+use crate::json::{self, Value};
+
+/// A result encoding: turns the daemon's [`Value`] trees into text and
+/// back. Implementations must be pure (same value → same text) so
+/// digest comparisons across daemon restarts stay meaningful.
+pub trait Format: Send + Sync {
+    /// Short name, as accepted by `asyncmel serve --format`.
+    fn name(&self) -> &'static str;
+    /// MIME-style content type (informational).
+    fn content_type(&self) -> &'static str;
+    /// File extension including the dot (e.g. `.json`).
+    fn extension(&self) -> &'static str;
+    /// Encode a value to text.
+    fn write_value(&self, v: &Value) -> String;
+    /// Decode text back into a value.
+    fn read_value(&self, text: &str) -> Result<Value>;
+}
+
+/// JSON over the in-tree [`crate::json`] module.
+pub struct JsonFormat {
+    /// Pretty-print (spool files); compact is the stdin line protocol.
+    pub pretty: bool,
+}
+
+impl Format for JsonFormat {
+    fn name(&self) -> &'static str {
+        if self.pretty {
+            "json"
+        } else {
+            "json-compact"
+        }
+    }
+
+    fn content_type(&self) -> &'static str {
+        "application/json"
+    }
+
+    fn extension(&self) -> &'static str {
+        ".json"
+    }
+
+    fn write_value(&self, v: &Value) -> String {
+        if self.pretty {
+            v.pretty()
+        } else {
+            v.compact()
+        }
+    }
+
+    fn read_value(&self, text: &str) -> Result<Value> {
+        json::parse(text)
+    }
+}
+
+/// Resolve a `--format` name to an implementation.
+pub fn make_format(name: &str) -> Result<Box<dyn Format>> {
+    match name {
+        "json" => Ok(Box::new(JsonFormat { pretty: true })),
+        "json-compact" => Ok(Box::new(JsonFormat { pretty: false })),
+        other => bail!("unknown result format '{other}' (known: json, json-compact)"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn json_round_trips_and_is_pure() {
+        let fmt = make_format("json").unwrap();
+        let mut v = Value::obj();
+        v.set("id", "job-1")
+            .set("records", Value::Arr(vec![Value::from(1.5f64), Value::from(2u64)]));
+        let text = fmt.write_value(&v);
+        assert_eq!(text, fmt.write_value(&v), "encoding must be pure");
+        let back = fmt.read_value(&text).unwrap();
+        assert_eq!(back.str_field("id").unwrap(), "job-1");
+    }
+
+    #[test]
+    fn compact_variant_has_no_newlines() {
+        let fmt = make_format("json-compact").unwrap();
+        let mut v = Value::obj();
+        v.set("a", 1u64).set("b", 2u64);
+        assert!(!fmt.write_value(&v).contains('\n'));
+    }
+
+    #[test]
+    fn unknown_format_is_rejected_by_name() {
+        let err = make_format("msgpack").unwrap_err().to_string();
+        assert!(err.contains("msgpack"), "{err}");
+    }
+}

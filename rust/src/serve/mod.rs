@@ -1,0 +1,728 @@
+//! Service mode: the `asyncmel serve` daemon.
+//!
+//! A long-running process that accepts scenario/workload submissions and
+//! runs them on the existing [`crate::coordinator::EventEngine`]
+//! machinery, streaming results back through a pluggable
+//! [`format::Format`] layer (JSON first, over the in-tree
+//! [`crate::json`] substrate).
+//!
+//! # Spool protocol
+//!
+//! The daemon watches a spool directory:
+//!
+//! ```text
+//! spool/
+//!   <id>.json          # submissions land here (atomically rename in!)
+//!   work/<id>.json     # claimed — the daemon owns the job now
+//!   ckpt/<id>.ckpt.json# suspended engine state (see below)
+//!   out/<id>.result.json  # the finished run, via the Format layer
+//!   out/<id>.digest    # canonical record digest, for bit-identity cmp
+//!   out/<id>.error     # quarantine note for rejected submissions
+//!   done/<id>.json     # processed submissions (success or poison)
+//! ```
+//!
+//! Jobs are claimed oldest-name-first by `rename(2)` into `work/`, so a
+//! submission is never half-read and a crashed daemon leaves claimed
+//! jobs where its successor will find them. On startup the daemon
+//! first resumes everything in `work/` — from its checkpoint if one
+//! exists — before looking at new arrivals.
+//!
+//! # Checkpoint/restore
+//!
+//! With `--checkpoint-every N` the daemon runs each job in segments of
+//! `N` global cycles via
+//! [`crate::coordinator::engine::EventEngine::run_to_checkpoint`],
+//! serializing the complete engine state (event queue, RNG streams,
+//! fleet, allocation, fading, counters) at an aggregation boundary
+//! after each segment. A killed daemon restarted over the same spool
+//! resumes from the last checkpoint and produces records, final
+//! parameters and [`EngineStats`] **bit-identical** to an uninterrupted
+//! run — the digest files let CI `cmp` the two.
+//!
+//! # Submission schema
+//!
+//! ```json
+//! {
+//!   "id": "job-1",
+//!   "scenario": { ... ScenarioConfig JSON ... },
+//!   "run": { "cycles": 50, "policy": "async", "alpha": 0.6,
+//!            "scheme": "eta", "eval_every": 1 }
+//! }
+//! ```
+//!
+//! Unknown keys anywhere are rejected (same contract as the scenario
+//! config loader). Scenarios whose `multimodel` block
+//! [`MultiModelConfig::is_multi`] routes to the multi-model engine
+//! path; `run.policy` is ignored there (that path is always
+//! per-arrival asynchronous).
+
+pub mod format;
+
+use std::fs;
+use std::path::{Path, PathBuf};
+use std::time::Duration;
+
+use anyhow::{anyhow, bail, ensure, Context, Result};
+
+use crate::aggregation::{AggregationRule, AsyncAggregator, StalenessDecay};
+use crate::allocation::AllocatorKind;
+use crate::config::ScenarioConfig;
+use crate::coordinator::checkpoint::record_to_json;
+use crate::coordinator::engine::{MultiRunOutcome, RunOutcome};
+use crate::coordinator::{
+    record_digest, CycleRecord, EngineCheckpoint, EngineOptions, EnginePolicy, EngineStats,
+    EventEngine, ExecMode, MultiModelCheckpoint, TrainOptions,
+};
+use crate::json::{self, Value};
+use crate::multimodel::{report_digest, MultiModelConfig, MultiModelOptions, MultiModelReport};
+
+pub use format::{make_format, Format, JsonFormat};
+
+/// Serve-side unknown-key guard (the scenario config keeps its own
+/// private copy for its sections; submissions add layers above it).
+fn reject_unknown_keys(v: &Value, known: &[&str], section: &str) -> Result<()> {
+    if let Value::Obj(m) = v {
+        for key in m.keys() {
+            ensure!(
+                known.contains(&key.as_str()),
+                "unknown key '{key}' in {section} (known: {})",
+                known.join(", ")
+            );
+        }
+    }
+    Ok(())
+}
+
+/// How to drive the engine for one submission.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RunSpec {
+    /// Global cycles to run.
+    pub cycles: usize,
+    /// `true` = lock-step barrier aggregation; `false` = per-arrival
+    /// staleness-weighted async (the default).
+    pub barrier: bool,
+    /// Async base mixing rate `α` (ignored under barrier).
+    pub alpha: f64,
+    /// Task-allocation scheme.
+    pub scheme: AllocatorKind,
+    /// Evaluate every `eval_every` cycles.
+    pub eval_every: usize,
+}
+
+impl RunSpec {
+    pub fn from_json(v: &Value) -> Result<Self> {
+        reject_unknown_keys(v, &["cycles", "policy", "alpha", "scheme", "eval_every"], "run spec")?;
+        let cycles = v.usize_field("cycles").context("run spec")?;
+        ensure!(cycles >= 1, "run spec needs cycles >= 1");
+        let barrier = match v.get("policy") {
+            None => false,
+            Some(p) => match p.as_str().context("run policy")? {
+                "async" => false,
+                "barrier" => true,
+                other => bail!("run policy must be 'async' or 'barrier', got '{other}'"),
+            },
+        };
+        let alpha = match v.get("alpha") {
+            None => 0.6,
+            Some(a) => a.as_f64().context("run alpha")?,
+        };
+        ensure!(alpha > 0.0 && alpha <= 1.0, "run alpha must be in (0, 1], got {alpha}");
+        let scheme = match v.get("scheme") {
+            None => AllocatorKind::Eta,
+            Some(s) => {
+                let name = s.as_str().context("run scheme")?;
+                AllocatorKind::parse(name)
+                    .ok_or_else(|| anyhow!("unknown allocation scheme '{name}'"))?
+            }
+        };
+        let eval_every = match v.get("eval_every") {
+            None => 1,
+            Some(e) => e.as_usize().context("run eval_every")?,
+        };
+        ensure!(eval_every >= 1, "run eval_every must be >= 1");
+        Ok(Self { cycles, barrier, alpha, scheme, eval_every })
+    }
+
+    fn aggregator(&self) -> AsyncAggregator {
+        AsyncAggregator::new(self.alpha, StalenessDecay::Polynomial { a: 0.5 })
+    }
+
+    /// Single-model engine options for this spec.
+    pub fn engine_options(&self) -> EngineOptions {
+        EngineOptions {
+            train: TrainOptions {
+                cycles: self.cycles,
+                eval_every: self.eval_every,
+                ..TrainOptions::default()
+            },
+            policy: if self.barrier {
+                EnginePolicy::Barrier
+            } else {
+                EnginePolicy::Async(self.aggregator())
+            },
+        }
+    }
+
+    /// Multi-model engine options, wiring the scenario's declarative
+    /// `multimodel` block through.
+    pub fn multi_options(&self, multi: &MultiModelConfig) -> MultiModelOptions {
+        MultiModelOptions {
+            train: TrainOptions {
+                cycles: self.cycles,
+                eval_every: self.eval_every,
+                ..TrainOptions::default()
+            },
+            aggregator: self.aggregator(),
+            multi: multi.clone(),
+            round_budgets: Vec::new(),
+            target_accuracies: Vec::new(),
+        }
+    }
+}
+
+/// One unit of daemon work: a scenario plus how to run it.
+#[derive(Debug, Clone)]
+pub struct Submission {
+    pub id: String,
+    pub scenario: ScenarioConfig,
+    pub run: RunSpec,
+}
+
+impl Submission {
+    pub fn from_json(v: &Value) -> Result<Self> {
+        reject_unknown_keys(v, &["id", "scenario", "run"], "submission")?;
+        let id = v.str_field("id")?.to_string();
+        ensure!(
+            !id.is_empty()
+                && id.chars().all(|c| c.is_ascii_alphanumeric() || c == '-' || c == '_'),
+            "submission id must be non-empty [A-Za-z0-9_-], got '{id}'"
+        );
+        let scenario =
+            ScenarioConfig::from_json(v.field("scenario")?).context("submission scenario")?;
+        let run = RunSpec::from_json(v.field("run")?).context("submission run spec")?;
+        Ok(Self { id, scenario, run })
+    }
+
+    pub fn parse(text: &str) -> Result<Self> {
+        Self::from_json(&json::parse(text).context("parsing submission JSON")?)
+    }
+}
+
+/// Daemon configuration (`asyncmel serve` flags).
+#[derive(Debug, Clone)]
+pub struct ServeOptions {
+    /// Spool directory root (created if missing).
+    pub spool: PathBuf,
+    /// Process everything currently queued, then exit instead of
+    /// polling.
+    pub once: bool,
+    /// Idle poll interval.
+    pub poll_ms: u64,
+    /// Checkpoint each job every this many global cycles (0 = never —
+    /// jobs run start-to-finish in one segment).
+    pub checkpoint_every: usize,
+    /// Stop the daemon after this many checkpointed segments — the CI
+    /// harness's deterministic stand-in for `kill -9`.
+    pub stop_after_segments: Option<usize>,
+    /// Result encoding, by [`make_format`] name.
+    pub format: String,
+    /// Read compact one-line submissions from stdin instead of watching
+    /// the spool (results still land in `spool/out/`).
+    pub stdin: bool,
+}
+
+impl Default for ServeOptions {
+    fn default() -> Self {
+        Self {
+            spool: PathBuf::from("spool"),
+            once: false,
+            poll_ms: 200,
+            checkpoint_every: 0,
+            stop_after_segments: None,
+            format: "json".to_string(),
+            stdin: false,
+        }
+    }
+}
+
+/// What one daemon lifetime accomplished.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ServeSummary {
+    pub jobs_completed: usize,
+    pub jobs_failed: usize,
+    /// Jobs left suspended (checkpoint on disk, submission still
+    /// claimed in `work/`) when the daemon stopped.
+    pub jobs_suspended: usize,
+    /// Engine segments run (a completed job counts its final segment).
+    pub segments: usize,
+}
+
+/// The spool directory layout.
+pub struct Spool {
+    pub root: PathBuf,
+    pub work: PathBuf,
+    pub ckpt: PathBuf,
+    pub out: PathBuf,
+    pub done: PathBuf,
+}
+
+impl Spool {
+    /// Create the layout under `root` (idempotent).
+    pub fn prepare(root: &Path) -> Result<Spool> {
+        let spool = Spool {
+            root: root.to_path_buf(),
+            work: root.join("work"),
+            ckpt: root.join("ckpt"),
+            out: root.join("out"),
+            done: root.join("done"),
+        };
+        for dir in [&spool.root, &spool.work, &spool.ckpt, &spool.out, &spool.done] {
+            fs::create_dir_all(dir)
+                .with_context(|| format!("creating spool dir {}", dir.display()))?;
+        }
+        Ok(spool)
+    }
+
+    fn ckpt_path(&self, id: &str) -> PathBuf {
+        self.ckpt.join(format!("{id}.ckpt.json"))
+    }
+}
+
+/// `*.json` files directly inside `dir`, oldest name first (submitters
+/// who want FIFO should use sortable names, e.g. zero-padded counters).
+fn sorted_json_files(dir: &Path) -> Result<Vec<PathBuf>> {
+    let mut out = Vec::new();
+    for entry in fs::read_dir(dir).with_context(|| format!("listing {}", dir.display()))? {
+        let path = entry?.path();
+        if path.is_file() && path.extension().and_then(|e| e.to_str()) == Some("json") {
+            out.push(path);
+        }
+    }
+    out.sort();
+    Ok(out)
+}
+
+/// Crash-safe write: results and digests appear atomically or not at
+/// all (the checkpoint layer has the same tmp+rename discipline).
+fn write_atomic(path: &Path, text: &str) -> Result<()> {
+    let tmp = path.with_extension("tmp");
+    fs::write(&tmp, text).with_context(|| format!("writing {}", tmp.display()))?;
+    fs::rename(&tmp, path).with_context(|| format!("renaming into {}", path.display()))?;
+    Ok(())
+}
+
+fn stats_to_json(s: &EngineStats) -> Value {
+    let mut v = Value::obj();
+    v.set("events", s.events)
+        .set("joins", s.joins)
+        .set("leaves", s.leaves)
+        .set("dispatched", s.dispatched)
+        .set("arrivals", s.arrivals)
+        .set("resolves", s.resolves)
+        .set("final_alive", s.final_alive);
+    v
+}
+
+fn single_result_json(id: &str, records: &[CycleRecord], stats: &EngineStats) -> Value {
+    let mut v = Value::obj();
+    v.set("id", id)
+        .set("kind", "single")
+        .set("records", Value::Arr(records.iter().map(record_to_json).collect()))
+        .set("stats", stats_to_json(stats));
+    v
+}
+
+fn multi_result_json(id: &str, report: &MultiModelReport) -> Value {
+    let mut models = Vec::with_capacity(report.num_models());
+    for (m, records) in report.records.iter().enumerate() {
+        let s = &report.stats[m];
+        let mut mv = Value::obj();
+        mv.set("model", s.model)
+            .set("weight", s.weight)
+            .set("arrivals", s.arrivals)
+            .set("applied", s.applied)
+            .set("assigned_slots", s.assigned_slots)
+            .set("final_sum_d", s.final_sum_d.map_or(Value::Null, Value::from))
+            .set("budget_cycle", s.budget_cycle.map_or(Value::Null, Value::from))
+            .set("target_cycle", s.target_cycle.map_or(Value::Null, Value::from))
+            .set("final_buffer", s.final_buffer)
+            .set("retunes", s.retunes)
+            .set("records", Value::Arr(records.iter().map(record_to_json).collect()));
+        models.push(mv);
+    }
+    let mut v = Value::obj();
+    v.set("id", id).set("kind", "multi").set("models", Value::Arr(models));
+    v
+}
+
+/// Move a bad submission out of the way with a note, so one poison job
+/// cannot wedge the queue. Best-effort: quarantine failures must not
+/// take the daemon down.
+fn poison(spool: &Spool, job_path: &Path, id: &str, err: &anyhow::Error) {
+    eprintln!("serve: job '{id}' failed: {err:#}");
+    let _ = write_atomic(&spool.out.join(format!("{id}.error")), &format!("{err:#}\n"));
+    let _ = fs::remove_file(spool.ckpt_path(id));
+    if let Some(name) = job_path.file_name() {
+        let _ = fs::rename(job_path, spool.done.join(name));
+    }
+}
+
+enum JobStep {
+    Finished,
+    Suspended,
+}
+
+/// Where to suspend the next segment: `checkpoint_every` more recorded
+/// cycles, or never. The engine finishes (does not suspend) when the
+/// stop lands at/after the run's cycle budget.
+fn segment_stop(done: usize, checkpoint_every: usize) -> Option<usize> {
+    if checkpoint_every == 0 {
+        None
+    } else {
+        Some(done + checkpoint_every)
+    }
+}
+
+/// Drive one engine segment for a claimed job: build a fresh engine
+/// (the daemon may have been killed and restarted since the last
+/// segment — nothing is carried in memory), resume from the on-disk
+/// checkpoint if one exists, and either suspend again or finish.
+fn run_one_segment(
+    sub: &Submission,
+    spool: &Spool,
+    job_path: &Path,
+    fmt: &dyn Format,
+    checkpoint_every: usize,
+) -> Result<JobStep> {
+    let ckpt_path = spool.ckpt_path(&sub.id);
+    let mut engine = EventEngine::new(
+        sub.scenario.build(),
+        sub.run.scheme,
+        AggregationRule::FedAvg,
+        ExecMode::Phantom,
+    )?;
+
+    let (result, digest, step) = if sub.scenario.multimodel.is_multi() {
+        let resume = if ckpt_path.exists() {
+            Some(MultiModelCheckpoint::load(&ckpt_path)?)
+        } else {
+            None
+        };
+        let done = resume.as_ref().map_or(0, |ck| ck.done_cycles);
+        let opts = sub.run.multi_options(&sub.scenario.multimodel);
+        match engine.run_multi_to_checkpoint(&opts, resume, segment_stop(done, checkpoint_every))? {
+            MultiRunOutcome::Suspended(ck) => {
+                ck.save(&ckpt_path)?;
+                return Ok(JobStep::Suspended);
+            }
+            MultiRunOutcome::Finished(report) => {
+                let digest = report_digest(&report);
+                (multi_result_json(&sub.id, &report), digest, JobStep::Finished)
+            }
+        }
+    } else {
+        let resume =
+            if ckpt_path.exists() { Some(EngineCheckpoint::load(&ckpt_path)?) } else { None };
+        let done = resume.as_ref().map_or(0, |ck| ck.records.len());
+        let opts = sub.run.engine_options();
+        match engine.run_to_checkpoint(&opts, resume, segment_stop(done, checkpoint_every))? {
+            RunOutcome::Suspended(ck) => {
+                ck.save(&ckpt_path)?;
+                return Ok(JobStep::Suspended);
+            }
+            RunOutcome::Finished { records, .. } => {
+                let digest = record_digest(&records);
+                (single_result_json(&sub.id, &records, &engine.stats), digest, JobStep::Finished)
+            }
+        }
+    };
+
+    write_atomic(
+        &spool.out.join(format!("{}.result{}", sub.id, fmt.extension())),
+        &fmt.write_value(&result),
+    )?;
+    write_atomic(&spool.out.join(format!("{}.digest", sub.id)), &digest)?;
+    let _ = fs::remove_file(&ckpt_path);
+    let name = job_path.file_name().ok_or_else(|| anyhow!("job path has no file name"))?;
+    fs::rename(job_path, spool.done.join(name))
+        .with_context(|| format!("retiring {}", job_path.display()))?;
+    Ok(step)
+}
+
+/// Run a claimed job segment-by-segment until it finishes (or the
+/// segment budget says the daemon should stop). Returns `true` when the
+/// daemon should exit with the job left suspended.
+fn drive_job(
+    sub: &Submission,
+    spool: &Spool,
+    job_path: &Path,
+    fmt: &dyn Format,
+    opts: &ServeOptions,
+    summary: &mut ServeSummary,
+) -> bool {
+    loop {
+        match run_one_segment(sub, spool, job_path, fmt, opts.checkpoint_every) {
+            Ok(JobStep::Finished) => {
+                summary.segments += 1;
+                summary.jobs_completed += 1;
+                println!("serve: job '{}' finished", sub.id);
+                return false;
+            }
+            Ok(JobStep::Suspended) => {
+                summary.segments += 1;
+                if opts.stop_after_segments.is_some_and(|max| summary.segments >= max) {
+                    summary.jobs_suspended += 1;
+                    println!("serve: stopping after {} segment(s), job '{}' suspended", summary.segments, sub.id);
+                    return true;
+                }
+            }
+            Err(e) => {
+                poison(spool, job_path, &sub.id, &e);
+                summary.jobs_failed += 1;
+                return false;
+            }
+        }
+    }
+}
+
+/// The daemon loop. Returns when `once` drains the queue, when
+/// `stop_after_segments` is hit, or (stdin mode) at end-of-input.
+pub fn serve(opts: &ServeOptions) -> Result<ServeSummary> {
+    let fmt = make_format(&opts.format)?;
+    let spool = Spool::prepare(&opts.spool)?;
+    let mut summary = ServeSummary::default();
+
+    if opts.stdin {
+        use std::io::BufRead;
+        let stdin = std::io::stdin();
+        for line in stdin.lock().lines() {
+            let line = line.context("reading stdin submission")?;
+            let text = line.trim();
+            if text.is_empty() || text.starts_with('#') {
+                continue;
+            }
+            let sub = match Submission::parse(text) {
+                Ok(s) => s,
+                Err(e) => {
+                    eprintln!("serve: rejected stdin submission: {e:#}");
+                    summary.jobs_failed += 1;
+                    continue;
+                }
+            };
+            // Materialize the submission so a kill mid-run leaves the
+            // same claimed-job + checkpoint state as spool mode.
+            let job_path = spool.work.join(format!("{}.json", sub.id));
+            write_atomic(&job_path, text)?;
+            if drive_job(&sub, &spool, &job_path, fmt.as_ref(), opts, &mut summary) {
+                return Ok(summary);
+            }
+        }
+        return Ok(summary);
+    }
+
+    loop {
+        // Claim new arrivals. Jobs already in work/ (a previous daemon's
+        // claims) sort in with them and resume from their checkpoints.
+        for path in sorted_json_files(&spool.root)? {
+            let Some(name) = path.file_name() else { continue };
+            fs::rename(&path, spool.work.join(name))
+                .with_context(|| format!("claiming {}", path.display()))?;
+        }
+        let claimed = sorted_json_files(&spool.work)?;
+        if claimed.is_empty() {
+            if opts.once {
+                return Ok(summary);
+            }
+            std::thread::sleep(Duration::from_millis(opts.poll_ms.max(1)));
+            continue;
+        }
+        for job_path in claimed {
+            let stem = job_path
+                .file_stem()
+                .and_then(|s| s.to_str())
+                .unwrap_or("job")
+                .to_string();
+            let text = match fs::read_to_string(&job_path) {
+                Ok(t) => t,
+                Err(e) => {
+                    poison(&spool, &job_path, &stem, &anyhow!(e));
+                    summary.jobs_failed += 1;
+                    continue;
+                }
+            };
+            let sub = match Submission::parse(&text) {
+                Ok(s) => s,
+                Err(e) => {
+                    poison(&spool, &job_path, &stem, &e);
+                    summary.jobs_failed += 1;
+                    continue;
+                }
+            };
+            if drive_job(&sub, &spool, &job_path, fmt.as_ref(), opts, &mut summary) {
+                return Ok(summary);
+            }
+        }
+        if opts.once {
+            return Ok(summary);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::multimodel::SchedulerKind;
+
+    fn test_dir(tag: &str) -> PathBuf {
+        let dir =
+            std::env::temp_dir().join(format!("asyncmel-serve-{}-{tag}", std::process::id()));
+        let _ = fs::remove_dir_all(&dir);
+        fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    fn submission_text(id: &str, k: usize, seed: u64, cycles: usize) -> String {
+        let cfg = ScenarioConfig::paper_default().with_learners(k).with_seed(seed);
+        let mut run = Value::obj();
+        run.set("cycles", cycles).set("policy", "async").set("alpha", 0.6).set("scheme", "eta");
+        let mut v = Value::obj();
+        v.set("id", id).set("scenario", cfg.to_json()).set("run", run);
+        v.compact()
+    }
+
+    fn reference_digest(text: &str) -> String {
+        let sub = Submission::parse(text).unwrap();
+        let mut engine = EventEngine::new(
+            sub.scenario.build(),
+            sub.run.scheme,
+            AggregationRule::FedAvg,
+            ExecMode::Phantom,
+        )
+        .unwrap();
+        let records = engine.run(&sub.run.engine_options()).unwrap();
+        record_digest(&records)
+    }
+
+    #[test]
+    fn submission_rejects_unknown_keys_and_bad_run_specs() {
+        let text = submission_text("job-x", 4, 1, 3);
+        let sub = Submission::parse(&text).unwrap();
+        assert_eq!(sub.id, "job-x");
+        assert_eq!(sub.run.cycles, 3);
+        assert!(matches!(sub.run.engine_options().policy, EnginePolicy::Async(_)));
+
+        let mut v = json::parse(&text).unwrap();
+        v.set("surprise", 1u64);
+        assert!(Submission::from_json(&v).unwrap_err().to_string().contains("surprise"));
+
+        let mut v = json::parse(&text).unwrap();
+        let mut run = Value::obj();
+        run.set("cycles", 3u64).set("policy", "semi-sync");
+        v.set("run", run);
+        assert!(Submission::from_json(&v).is_err());
+
+        let mut v = json::parse(&text).unwrap();
+        v.set("id", "bad id with spaces");
+        assert!(Submission::from_json(&v).is_err());
+    }
+
+    #[test]
+    fn spool_job_completes_and_digest_matches_direct_run() {
+        let dir = test_dir("complete");
+        let text = submission_text("job-a", 4, 11, 4);
+        fs::write(dir.join("job-a.json"), &text).unwrap();
+        let opts = ServeOptions { spool: dir.clone(), once: true, ..Default::default() };
+        let summary = serve(&opts).unwrap();
+        assert_eq!(summary.jobs_completed, 1);
+        assert_eq!(summary.jobs_failed, 0);
+        assert_eq!(summary.segments, 1);
+
+        let digest = fs::read_to_string(dir.join("out/job-a.digest")).unwrap();
+        assert_eq!(digest, reference_digest(&text));
+        assert!(dir.join("done/job-a.json").exists(), "submission retired to done/");
+        assert!(!dir.join("ckpt/job-a.ckpt.json").exists(), "no stray checkpoint");
+
+        let result =
+            json::parse(&fs::read_to_string(dir.join("out/job-a.result.json")).unwrap()).unwrap();
+        assert_eq!(result.str_field("kind").unwrap(), "single");
+        assert_eq!(result.field("records").unwrap().as_arr().unwrap().len(), 4);
+        assert!(result.field("stats").unwrap().u64_field("events").unwrap() > 0);
+    }
+
+    #[test]
+    fn killed_daemon_resumes_bit_identically_from_its_checkpoint() {
+        let dir = test_dir("resume");
+        let text = submission_text("job-r", 5, 23, 6);
+        fs::write(dir.join("job-r.json"), &text).unwrap();
+
+        // First daemon lifetime: checkpoint every 2 cycles, "die" after
+        // the first suspension.
+        let first = ServeOptions {
+            spool: dir.clone(),
+            once: true,
+            checkpoint_every: 2,
+            stop_after_segments: Some(1),
+            ..Default::default()
+        };
+        let summary = serve(&first).unwrap();
+        assert_eq!(summary.segments, 1);
+        assert_eq!(summary.jobs_suspended, 1);
+        assert_eq!(summary.jobs_completed, 0);
+        assert!(dir.join("ckpt/job-r.ckpt.json").exists());
+        assert!(dir.join("work/job-r.json").exists(), "suspended job stays claimed");
+
+        // Second lifetime: fresh process state, picks the claimed job up
+        // from its checkpoint and drives it home.
+        let second = ServeOptions {
+            spool: dir.clone(),
+            once: true,
+            checkpoint_every: 2,
+            ..Default::default()
+        };
+        let summary = serve(&second).unwrap();
+        assert_eq!(summary.jobs_completed, 1);
+        assert!(summary.segments >= 2, "resumed run needs further segments");
+
+        let digest = fs::read_to_string(dir.join("out/job-r.digest")).unwrap();
+        assert_eq!(digest, reference_digest(&text), "restore must be bit-identical");
+        assert!(!dir.join("ckpt/job-r.ckpt.json").exists(), "checkpoint cleaned up");
+        assert!(dir.join("done/job-r.json").exists());
+    }
+
+    #[test]
+    fn malformed_submission_is_quarantined_and_the_rest_proceed() {
+        let dir = test_dir("poison");
+        fs::write(dir.join("aaa-bad.json"), "{ this is not json").unwrap();
+        let text = submission_text("job-ok", 4, 3, 3);
+        fs::write(dir.join("zzz-ok.json"), &text).unwrap();
+        let opts = ServeOptions { spool: dir.clone(), once: true, ..Default::default() };
+        let summary = serve(&opts).unwrap();
+        assert_eq!(summary.jobs_failed, 1);
+        assert_eq!(summary.jobs_completed, 1);
+        assert!(dir.join("out/aaa-bad.error").exists());
+        assert!(dir.join("done/aaa-bad.json").exists(), "poison job moved aside");
+        assert!(dir.join("out/job-ok.digest").exists());
+    }
+
+    #[test]
+    fn multi_model_submission_routes_to_the_multi_engine() {
+        let dir = test_dir("multi");
+        let mut cfg = ScenarioConfig::paper_default().with_learners(6).with_seed(9);
+        cfg.multimodel = MultiModelConfig::new(2, 1, SchedulerKind::RoundRobin);
+        let mut run = Value::obj();
+        run.set("cycles", 4u64);
+        let mut v = Value::obj();
+        v.set("id", "job-m").set("scenario", cfg.to_json()).set("run", run);
+        fs::write(dir.join("job-m.json"), v.compact()).unwrap();
+
+        let opts = ServeOptions { spool: dir.clone(), once: true, ..Default::default() };
+        let summary = serve(&opts).unwrap();
+        assert_eq!(summary.jobs_completed, 1);
+
+        let result =
+            json::parse(&fs::read_to_string(dir.join("out/job-m.result.json")).unwrap()).unwrap();
+        assert_eq!(result.str_field("kind").unwrap(), "multi");
+        assert_eq!(result.field("models").unwrap().as_arr().unwrap().len(), 2);
+        assert!(dir.join("out/job-m.digest").exists());
+    }
+}

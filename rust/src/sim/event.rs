@@ -216,6 +216,56 @@ impl<T> ShardedEventQueue<T> {
     pub fn pushed(&self) -> u64 {
         self.seq
     }
+
+    /// Drain every queued event as `(time, seq, payload)` triples in
+    /// global pop order, for checkpointing. The global `seq` counter is
+    /// left untouched (capture it separately via [`Self::pushed`]) so a
+    /// restored queue can keep stamping new events exactly where the
+    /// original left off.
+    pub fn drain_entries(&mut self) -> Vec<(f64, u64, T)> {
+        let mut out = Vec::with_capacity(self.len);
+        while let Some(shard) = self.min_shard() {
+            let e = self.heaps[shard].pop().expect("min_shard points at a non-empty heap");
+            self.len -= 1;
+            out.push((e.time, e.seq, e.payload));
+        }
+        out
+    }
+
+    /// Re-insert a checkpointed event with its *original* global `seq`
+    /// stamp. Restoring the stamps verbatim — rather than re-pushing
+    /// through [`Self::push_to`] — is what keeps the `(time, seq,
+    /// shard_id)` tie-break contract intact across a checkpoint/restore
+    /// boundary, even when the restored queue uses a different shard
+    /// count (the `shard_id` leg never decides between live events
+    /// because `seq` is globally unique).
+    pub fn restore_entry(&mut self, shard: usize, time: f64, seq: u64, payload: T) {
+        assert!(time.is_finite(), "event time must be finite (got {time})");
+        assert!(
+            shard < self.heaps.len(),
+            "shard {shard} out of range (k = {})",
+            self.heaps.len()
+        );
+        assert!(
+            seq < self.seq,
+            "restored seq {seq} not below the restored counter {}",
+            self.seq
+        );
+        self.len += 1;
+        self.heaps[shard].push(Entry { time, seq, payload });
+    }
+
+    /// Restore the global push counter from a checkpoint. Must be called
+    /// *before* [`Self::restore_entry`] (which asserts stamps stay below
+    /// the counter) and never moves the counter backwards.
+    pub fn restore_seq(&mut self, seq: u64) {
+        assert!(
+            seq >= self.seq,
+            "seq counter may not move backwards ({} -> {seq})",
+            self.seq
+        );
+        self.seq = seq;
+    }
 }
 
 #[cfg(test)]
@@ -359,6 +409,65 @@ mod tests {
         }
         let order: Vec<u32> = std::iter::from_fn(|| q.pop().map(|(_, _, p)| p)).collect();
         assert_eq!(order, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn sharded_drain_restore_round_trip_preserves_pop_order() {
+        let mut rng = Rng::new(0xD1CE);
+        let pushes: Vec<(f64, u64)> = (0..500u64)
+            .map(|i| ((rng.below(30)) as f64 * 0.5, i))
+            .collect();
+        let build = |k: usize| {
+            let mut q = ShardedEventQueue::new(k);
+            for &(t, p) in &pushes {
+                q.push_to(p as usize % k, t, p);
+            }
+            q
+        };
+        let mut flat = build(1);
+        let oracle: Vec<(f64, u64)> =
+            std::iter::from_fn(|| flat.pop().map(|(t, _, p)| (t, p))).collect();
+        // drain at k=4, restore into k=2 (different shard count), pop
+        let mut src = build(4);
+        let counter = src.pushed();
+        let entries = src.drain_entries();
+        assert!(src.is_empty());
+        assert_eq!(src.pushed(), counter, "drain must not disturb the counter");
+        // drained order is the global pop order
+        for w in entries.windows(2) {
+            assert!(w[0].0 < w[1].0 || (w[0].0 == w[1].0 && w[0].1 < w[1].1));
+        }
+        let mut dst = ShardedEventQueue::new(2);
+        dst.restore_seq(counter);
+        for &(t, seq, p) in &entries {
+            dst.restore_entry(p as usize % 2, t, seq, p);
+        }
+        assert_eq!(dst.len(), pushes.len());
+        assert_eq!(dst.pushed(), counter);
+        // new pushes continue from the restored counter
+        dst.push_to(0, 1e9, u64::MAX);
+        assert_eq!(dst.pushed(), counter + 1);
+        let merged: Vec<(f64, u64)> = std::iter::from_fn(|| dst.pop().map(|(t, _, p)| (t, p)))
+            .take(pushes.len())
+            .collect();
+        assert_eq!(merged, oracle, "restore into a different shard count diverged");
+    }
+
+    #[test]
+    #[should_panic]
+    fn restore_entry_rejects_seq_at_or_above_counter() {
+        let mut q = ShardedEventQueue::new(1);
+        q.restore_seq(3);
+        q.restore_entry(0, 0.0, 3, 0u8);
+    }
+
+    #[test]
+    #[should_panic]
+    fn restore_seq_rejects_backwards_counter() {
+        let mut q: ShardedEventQueue<u8> = ShardedEventQueue::new(1);
+        q.push_to(0, 0.0, 0);
+        q.push_to(0, 0.0, 1);
+        q.restore_seq(1);
     }
 
     #[test]

@@ -19,4 +19,4 @@ pub mod rng;
 
 pub use clock::VirtualClock;
 pub use event::{EventQueue, ShardedEventQueue};
-pub use rng::Rng;
+pub use rng::{Rng, RngState};

@@ -1,0 +1,352 @@
+//! Bit-identical checkpoint/restore for the event engine
+//! ([`asyncmel::coordinator::checkpoint`], the `asyncmel serve`
+//! substrate).
+//!
+//! Contract: a run suspended at an aggregation boundary
+//! ([`EventEngine::run_to_checkpoint`] / `run_multi_to_checkpoint`),
+//! serialized to JSON, reloaded into a *fresh* engine and resumed must
+//! produce byte-identical `CycleRecord` streams, byte-identical final
+//! parameters and equal `EngineStats` versus the uninterrupted run —
+//! across the barrier, async, sharded and multi-model paths, through
+//! both the in-memory JSON round trip and the on-disk save/load path,
+//! and even when the resuming engine uses a different shard or thread
+//! count. Trace-driven workloads replay bit-identically under the same
+//! matrix.
+
+use std::path::PathBuf;
+
+use asyncmel::aggregation::{AggregationRule, AsyncAggregator, ParamSet};
+use asyncmel::allocation::AllocatorKind;
+use asyncmel::config::{ChurnConfig, Scenario, ScenarioConfig, TraceConfig};
+use asyncmel::coordinator::checkpoint::checkpoint_kind;
+use asyncmel::coordinator::{
+    record_digest, EngineCheckpoint, EngineOptions, EnginePolicy, EngineStats, EventEngine,
+    ExecMode, MultiModelCheckpoint, MultiRunOutcome, RunOutcome, TrainOptions,
+};
+use asyncmel::data::{synth, SynthConfig, SynthDataset};
+use asyncmel::multimodel::{report_digest, MultiModelConfig, MultiModelOptions, SchedulerKind};
+use asyncmel::runtime::Runtime;
+
+const DIMS: [usize; 3] = [36, 16, 4];
+const SAMPLES: usize = 360;
+const SEED: u64 = 0xC4EC_D07;
+
+fn tiny_config(k: usize, churn: ChurnConfig) -> ScenarioConfig {
+    let mut cfg = ScenarioConfig::paper_default()
+        .with_learners(k)
+        .with_cycle(15.0)
+        .with_total_samples(SAMPLES as u64)
+        .with_churn(churn)
+        .with_seed(SEED);
+    cfg.task.features = DIMS[0] as u64;
+    cfg.task.compute_cycles_per_sample = 2.0e7;
+    cfg
+}
+
+fn tiny_world(k: usize, churn: ChurnConfig) -> (Scenario, SynthDataset) {
+    let cfg = tiny_config(k, churn);
+    let ds = synth::generate(&SynthConfig {
+        side: 6,
+        classes: 4,
+        train: SAMPLES,
+        test: 96,
+        noise_std: 0.5,
+        ..SynthConfig::default()
+    });
+    (cfg.build(), ds)
+}
+
+fn real_engine<'rt>(rt: &'rt Runtime, k: usize, churn: ChurnConfig) -> EventEngine<'rt> {
+    let (scenario, ds) = tiny_world(k, churn);
+    EventEngine::new(
+        scenario,
+        AllocatorKind::Eta,
+        AggregationRule::FedAvg,
+        ExecMode::Real { runtime: rt, train: ds.train, test: ds.test },
+    )
+    .unwrap()
+}
+
+fn opts(policy: EnginePolicy, cycles: usize) -> EngineOptions {
+    EngineOptions {
+        train: TrainOptions { cycles, lr: 0.1, eval_every: 1, reallocate_each_cycle: false },
+        policy,
+    }
+}
+
+fn finished(outcome: RunOutcome) -> (String, Option<ParamSet>) {
+    match outcome {
+        RunOutcome::Finished { records, params } => (record_digest(&records), params),
+        RunOutcome::Suspended(_) => panic!("run suspended past its stop point"),
+    }
+}
+
+/// Serialize → pretty text → parse → deserialize: the exact bytes a
+/// killed daemon would leave on disk and read back.
+fn json_round_trip(ck: EngineCheckpoint) -> EngineCheckpoint {
+    let text = ck.to_json().pretty();
+    let v = asyncmel::json::parse(&text).unwrap();
+    assert_eq!(checkpoint_kind(&v).unwrap(), "single");
+    EngineCheckpoint::from_json(&v).unwrap()
+}
+
+/// One suspend + resume through the JSON text round trip, compared to
+/// the uninterrupted run policy-by-policy.
+fn assert_resume_matches(policy: EnginePolicy) {
+    let rt = Runtime::native(&DIMS, 32, 48);
+    let churn = ChurnConfig::new(0.1, 90.0);
+    let run_opts = opts(policy, 4);
+
+    let mut oracle = real_engine(&rt, 6, churn);
+    let (want_digest, want_params) =
+        finished(oracle.run_to_checkpoint(&run_opts, None, None).unwrap());
+    let want_stats = oracle.stats;
+
+    let mut first = real_engine(&rt, 6, churn);
+    let ck = match first.run_to_checkpoint(&run_opts, None, Some(2)).unwrap() {
+        RunOutcome::Suspended(ck) => *ck,
+        RunOutcome::Finished { .. } => panic!("run finished before its stop point"),
+    };
+    assert_eq!(ck.records.len(), 2, "suspended after the requested cycle count");
+
+    let mut second = real_engine(&rt, 6, churn);
+    let (digest, params) =
+        finished(second.run_to_checkpoint(&run_opts, Some(json_round_trip(ck)), None).unwrap());
+
+    assert_eq!(want_digest, digest, "records diverged after resume");
+    assert_eq!(want_params, params, "final params diverged after resume");
+    assert_eq!(want_stats, second.stats, "engine stats diverged after resume");
+    assert!(params.is_some(), "real mode must produce final params");
+}
+
+#[test]
+fn barrier_checkpoint_resume_is_bit_identical() {
+    assert_resume_matches(EnginePolicy::Barrier);
+}
+
+#[test]
+fn async_checkpoint_resume_is_bit_identical() {
+    assert_resume_matches(EnginePolicy::Async(AsyncAggregator::default()));
+}
+
+#[test]
+fn repeated_suspend_resume_cycles_match_one_shot() {
+    // serve's --checkpoint-every N: many short segments, each through
+    // the disk path, must splice into the uninterrupted stream
+    let dir = std::env::temp_dir().join(format!("asyncmel-ckres-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path: PathBuf = dir.join("segmented.ckpt.json");
+    let _ = std::fs::remove_file(&path);
+
+    let rt = Runtime::native(&DIMS, 32, 48);
+    let churn = ChurnConfig::new(0.2, 80.0);
+    let run_opts = opts(EnginePolicy::Async(AsyncAggregator::default()), 5);
+
+    let mut oracle = real_engine(&rt, 5, churn);
+    let (want_digest, want_params) =
+        finished(oracle.run_to_checkpoint(&run_opts, None, None).unwrap());
+
+    let mut done = 0usize;
+    let (digest, params, stats) = loop {
+        // fresh engine per segment, as a restarted daemon would build
+        let mut engine = real_engine(&rt, 5, churn);
+        let resume =
+            if path.exists() { Some(EngineCheckpoint::load(&path).unwrap()) } else { None };
+        match engine.run_to_checkpoint(&run_opts, resume, Some(done + 2)).unwrap() {
+            RunOutcome::Suspended(ck) => {
+                done = ck.records.len();
+                ck.save(&path).unwrap();
+            }
+            RunOutcome::Finished { records, params } => {
+                break (record_digest(&records), params, engine.stats);
+            }
+        }
+    };
+    assert_eq!(want_digest, digest);
+    assert_eq!(want_params, params);
+    assert_eq!(oracle.stats, stats);
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn checkpoint_restores_across_shard_counts() {
+    // capture on the flat coordinator, resume at 8 shards (and the
+    // reverse): the queue entries re-derive their shards on restore
+    let churn = ChurnConfig::new(0.5, 70.0);
+    let run_opts = opts(EnginePolicy::Async(AsyncAggregator::default()), 5);
+    let phantom = |shards: usize| {
+        let cfg = tiny_config(40, churn).with_shards(shards);
+        EventEngine::new(cfg.build(), AllocatorKind::Eta, AggregationRule::FedAvg, ExecMode::Phantom)
+            .unwrap()
+    };
+    let mut oracle = phantom(1);
+    let (want_digest, _) = finished(oracle.run_to_checkpoint(&run_opts, None, None).unwrap());
+
+    for (capture_shards, resume_shards) in [(1usize, 8usize), (8, 1), (8, 2)] {
+        let mut first = phantom(capture_shards);
+        let ck = match first.run_to_checkpoint(&run_opts, None, Some(2)).unwrap() {
+            RunOutcome::Suspended(ck) => *ck,
+            RunOutcome::Finished { .. } => panic!("finished before the stop point"),
+        };
+        let mut second = phantom(resume_shards);
+        let (digest, _) =
+            finished(second.run_to_checkpoint(&run_opts, Some(json_round_trip(ck)), None).unwrap());
+        assert_eq!(
+            want_digest, digest,
+            "resume diverged capturing at {capture_shards} shards, resuming at {resume_shards}"
+        );
+        assert_eq!(oracle.stats, second.stats);
+    }
+}
+
+#[test]
+fn checkpoint_restores_across_thread_counts() {
+    // real numerics: capture serial, resume on a 3-worker pool
+    let rt = Runtime::native(&DIMS, 32, 48);
+    let run_opts = opts(EnginePolicy::Async(AsyncAggregator::default()), 4);
+    let engine_with_threads = |threads: usize| {
+        let mut cfg = tiny_config(6, ChurnConfig::new(0.1, 90.0));
+        cfg.num_threads = threads;
+        let ds = synth::generate(&SynthConfig {
+            side: 6,
+            classes: 4,
+            train: SAMPLES,
+            test: 96,
+            noise_std: 0.5,
+            ..SynthConfig::default()
+        });
+        EventEngine::new(
+            cfg.build(),
+            AllocatorKind::Eta,
+            AggregationRule::FedAvg,
+            ExecMode::Real { runtime: &rt, train: ds.train, test: ds.test },
+        )
+        .unwrap()
+    };
+    let mut oracle = engine_with_threads(1);
+    let (want_digest, want_params) =
+        finished(oracle.run_to_checkpoint(&run_opts, None, None).unwrap());
+
+    let mut first = engine_with_threads(1);
+    let ck = match first.run_to_checkpoint(&run_opts, None, Some(2)).unwrap() {
+        RunOutcome::Suspended(ck) => *ck,
+        RunOutcome::Finished { .. } => panic!("finished before the stop point"),
+    };
+    let mut second = engine_with_threads(3);
+    let (digest, params) =
+        finished(second.run_to_checkpoint(&run_opts, Some(ck), None).unwrap());
+    assert_eq!(want_digest, digest, "records diverged resuming on 3 threads");
+    assert_eq!(want_params, params, "params diverged resuming on 3 threads");
+    assert_eq!(oracle.stats, second.stats);
+}
+
+#[test]
+fn multi_model_checkpoint_resume_is_bit_identical() {
+    let churn = ChurnConfig::new(0.3, 80.0);
+    let multi_opts = MultiModelOptions {
+        train: TrainOptions { cycles: 5, ..Default::default() },
+        multi: MultiModelConfig::new(3, 2, SchedulerKind::RoundRobin),
+        ..Default::default()
+    };
+    let make = || {
+        let cfg = tiny_config(9, churn);
+        EventEngine::new(cfg.build(), AllocatorKind::Eta, AggregationRule::FedAvg, ExecMode::Phantom)
+            .unwrap()
+    };
+    let mut oracle = make();
+    let want = match oracle.run_multi_to_checkpoint(&multi_opts, None, None).unwrap() {
+        MultiRunOutcome::Finished(report) => report_digest(&report),
+        MultiRunOutcome::Suspended(_) => panic!("suspended without a stop point"),
+    };
+
+    let dir = std::env::temp_dir().join(format!("asyncmel-ckres-multi-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("multi.ckpt.json");
+    let _ = std::fs::remove_file(&path);
+
+    let mut first = make();
+    match first.run_multi_to_checkpoint(&multi_opts, None, Some(2)).unwrap() {
+        MultiRunOutcome::Suspended(ck) => ck.save(&path).unwrap(),
+        MultiRunOutcome::Finished(_) => panic!("finished before the stop point"),
+    }
+    let text = std::fs::read_to_string(&path).unwrap();
+    assert_eq!(checkpoint_kind(&asyncmel::json::parse(&text).unwrap()).unwrap(), "multi");
+
+    let mut second = make();
+    let resume = MultiModelCheckpoint::load(&path).unwrap();
+    let got = match second.run_multi_to_checkpoint(&multi_opts, Some(resume), None).unwrap() {
+        MultiRunOutcome::Finished(report) => report_digest(&report),
+        MultiRunOutcome::Suspended(_) => panic!("suspended without a stop point"),
+    };
+    assert_eq!(want, got, "multi-model resume diverged");
+    assert_eq!(oracle.stats, second.stats);
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn trace_replay_is_bit_identical_across_shards_and_threads() {
+    // the same scripted flash crowd, replayed on every (shards,
+    // threads) combination, must produce one stream of bytes
+    let rt = Runtime::native(&DIMS, 32, 48);
+    let trace = TraceConfig::gen_flash_crowd(3, 20.0, 3, 2, 60.0, 2);
+    let run = |shards: usize, threads: usize| {
+        let mut cfg = tiny_config(5, ChurnConfig::new(0.1, 90.0))
+            .with_shards(shards)
+            .with_trace(trace.clone())
+            .unwrap();
+        cfg.num_threads = threads;
+        let ds = synth::generate(&SynthConfig {
+            side: 6,
+            classes: 4,
+            train: SAMPLES,
+            test: 96,
+            noise_std: 0.5,
+            ..SynthConfig::default()
+        });
+        let mut engine = EventEngine::new(
+            cfg.build(),
+            AllocatorKind::Eta,
+            AggregationRule::FedAvg,
+            ExecMode::Real { runtime: &rt, train: ds.train, test: ds.test },
+        )
+        .unwrap();
+        let (records, params) = engine
+            .run_with_params(&opts(EnginePolicy::Async(AsyncAggregator::default()), 4))
+            .unwrap();
+        (record_digest(&records), params, engine.stats)
+    };
+    let (digest1, params1, stats1): (String, Option<ParamSet>, EngineStats) = run(1, 1);
+    assert!(stats1.joins >= 6, "the flash crowd must actually join ({} joins)", stats1.joins);
+    for (shards, threads) in [(1usize, 3usize), (8, 1), (8, 3)] {
+        let (digest, params, stats) = run(shards, threads);
+        assert_eq!(digest1, digest, "trace replay diverged at ({shards} shards, {threads} threads)");
+        assert_eq!(params1, params, "params diverged at ({shards} shards, {threads} threads)");
+        assert_eq!(stats1, stats, "stats diverged at ({shards} shards, {threads} threads)");
+    }
+}
+
+#[test]
+fn traced_run_checkpoint_resume_is_bit_identical() {
+    // suspend mid-trace: pending scripted events live in the queue
+    // checkpoint and must fire identically after restore
+    let trace = TraceConfig::gen_diurnal(7, 150.0, 75.0, 6, 4, 10, 2);
+    let run_opts = opts(EnginePolicy::Async(AsyncAggregator::default()), 6);
+    let make = || {
+        let cfg = tiny_config(6, ChurnConfig::new(0.2, 60.0)).with_trace(trace.clone()).unwrap();
+        EventEngine::new(cfg.build(), AllocatorKind::Eta, AggregationRule::FedAvg, ExecMode::Phantom)
+            .unwrap()
+    };
+    let mut oracle = make();
+    let (want_digest, _) = finished(oracle.run_to_checkpoint(&run_opts, None, None).unwrap());
+
+    let mut first = make();
+    let ck = match first.run_to_checkpoint(&run_opts, None, Some(3)).unwrap() {
+        RunOutcome::Suspended(ck) => *ck,
+        RunOutcome::Finished { .. } => panic!("finished before the stop point"),
+    };
+    let mut second = make();
+    let (digest, _) =
+        finished(second.run_to_checkpoint(&run_opts, Some(json_round_trip(ck)), None).unwrap());
+    assert_eq!(want_digest, digest, "traced resume diverged");
+    assert_eq!(oracle.stats, second.stats);
+}

@@ -1,0 +1,258 @@
+//! Trace-driven workload edge cases + scenario-config round-trip
+//! properties.
+//!
+//! The edge cases the trace contract promises
+//! ([`asyncmel::config::trace`]): an empty trace is a no-op, events at
+//! `t = 0` fire before the first natural arrival, simultaneous events
+//! keep file order under the `(time, seq, shard_id)` tie-break, and a
+//! trace that ends before the horizon leaves the engine running on the
+//! configured churn model. Plus the property test for the full
+//! [`ScenarioConfig`] JSON codec over randomized knob combinations —
+//! serialize → parse → deserialize → serialize must be a fixed point.
+
+use asyncmel::aggregation::{AggregationRule, AsyncAggregator};
+use asyncmel::allocation::AllocatorKind;
+use asyncmel::config::{
+    ChurnConfig, DataScenario, EngineKind, ScenarioConfig, TraceAction, TraceConfig, TraceEvent,
+};
+use asyncmel::coordinator::{
+    record_digest, EngineOptions, EnginePolicy, EventEngine, ExecMode, TrainOptions,
+};
+use asyncmel::multimodel::{AdaptiveBufferConfig, ModelTaskSpec, MultiModelConfig, SchedulerKind};
+use asyncmel::testkit::{forall, Gen};
+
+fn phantom_engine(k: usize, churn: ChurnConfig, trace: Option<TraceConfig>) -> EventEngine<'static> {
+    let mut cfg = ScenarioConfig::paper_default()
+        .with_learners(k)
+        .with_cycle(15.0)
+        .with_churn(churn)
+        .with_seed(0x7AC3);
+    if let Some(trace) = trace {
+        cfg = cfg.with_trace(trace).unwrap();
+    }
+    EventEngine::new(cfg.build(), AllocatorKind::Eta, AggregationRule::FedAvg, ExecMode::Phantom)
+        .unwrap()
+}
+
+fn async_opts(cycles: usize) -> EngineOptions {
+    EngineOptions {
+        train: TrainOptions { cycles, ..Default::default() },
+        policy: EnginePolicy::Async(AsyncAggregator::default()),
+    }
+}
+
+#[test]
+fn empty_trace_is_a_no_op() {
+    let churn = ChurnConfig::new(0.3, 90.0);
+    let mut plain = phantom_engine(8, churn, None);
+    let want = record_digest(&plain.run(&async_opts(4)).unwrap());
+
+    let mut traced = phantom_engine(8, churn, Some(TraceConfig::empty()));
+    let got = record_digest(&traced.run(&async_opts(4)).unwrap());
+
+    assert_eq!(want, got, "an empty trace must not perturb the run");
+    assert_eq!(plain.stats, traced.stats);
+}
+
+#[test]
+fn trace_events_at_time_zero_fire_before_the_first_boundary() {
+    let trace = TraceConfig::new(
+        1,
+        vec![TraceEvent { time: 0.0, action: TraceAction::Join { count: 4 } }],
+    )
+    .unwrap();
+    let mut engine = phantom_engine(6, ChurnConfig::disabled(), Some(trace));
+    let records = engine.run(&async_opts(3)).unwrap();
+    assert_eq!(records.len(), 3);
+    assert_eq!(engine.stats.joins, 4, "the t = 0 join burst must land");
+    assert_eq!(engine.stats.final_alive, 10);
+    // joined learners participate from the first cycle: the 4 extras
+    // were dispatched, not just registered
+    assert!(engine.stats.dispatched > 6, "t = 0 joiners must be dispatched work");
+}
+
+#[test]
+fn simultaneous_trace_events_keep_file_order() {
+    // two capacity retargets at the same instant: last-in-file wins,
+    // in both orders — the (time, seq, shard_id) tie-break preserves
+    // submission order, it does not reorder or merge
+    let run = |targets: [usize; 2]| {
+        let events = targets
+            .iter()
+            .map(|&t| TraceEvent { time: 5.0, action: TraceAction::Capacity { target: t } })
+            .collect();
+        let trace = TraceConfig::new(1, events).unwrap();
+        let mut engine = phantom_engine(6, ChurnConfig::disabled(), Some(trace));
+        engine.run(&async_opts(3)).unwrap();
+        engine.stats
+    };
+    let up_then_down = run([12, 8]);
+    assert_eq!(up_then_down.final_alive, 8, "second event must see the first's effect");
+    assert_eq!(up_then_down.joins, 6, "first retarget joins 6");
+    assert_eq!(up_then_down.leaves, 4, "second retarget trims 4");
+
+    let down_then_up = run([8, 12]);
+    assert_eq!(down_then_up.final_alive, 12, "reversed file order, reversed outcome");
+    assert_eq!(down_then_up.joins, 6);
+    assert_eq!(down_then_up.leaves, 0, "6 -> 8 -> 12 never shrinks");
+}
+
+#[test]
+fn trace_ending_before_the_horizon_leaves_churn_running() {
+    // the script ends at t = 10s of a 6-cycle (90s) run; the Poisson
+    // churn model keeps the fleet moving after the last scripted event
+    let trace = TraceConfig::new(
+        1,
+        vec![TraceEvent { time: 10.0, action: TraceAction::Join { count: 2 } }],
+    )
+    .unwrap();
+    let churn = ChurnConfig::new(0.5, 40.0);
+    let mut engine = phantom_engine(10, churn, Some(trace));
+    let records = engine.run(&async_opts(6)).unwrap();
+    assert_eq!(records.len(), 6, "the run must reach the full horizon");
+    assert!(
+        engine.stats.joins > 2,
+        "churn joins must continue after the trace ends ({} joins)",
+        engine.stats.joins
+    );
+    assert!(engine.stats.leaves > 0, "churn leaves must continue after the trace ends");
+}
+
+#[test]
+fn outage_trace_respects_the_min_learners_floor() {
+    // a full-fleet outage cannot kill below churn.min_learners
+    let trace = TraceConfig::new(
+        1,
+        vec![TraceEvent { time: 5.0, action: TraceAction::Outage { region: 0, fraction: 1.0 } }],
+    )
+    .unwrap();
+    let mut churn = ChurnConfig::disabled();
+    churn.min_learners = 3;
+    let mut engine = phantom_engine(8, churn, Some(trace));
+    engine.run(&async_opts(3)).unwrap();
+    assert_eq!(engine.stats.final_alive, 3, "outage must stop at the min_learners floor");
+    assert_eq!(engine.stats.leaves, 5);
+}
+
+// ---------------------------------------------------------------------
+// ScenarioConfig JSON codec property
+// ---------------------------------------------------------------------
+
+fn gen_trace(g: &mut Gen) -> TraceConfig {
+    let regions = g.usize_in(1, 4);
+    let n = g.usize_in(0, 6);
+    let events = g.vec(n, |g| {
+        // quantized times produce deliberate duplicates (simultaneous
+        // events) and exact zeros
+        let time = g.usize_in(0, 8) as f64 * 12.5;
+        let action = match g.usize_in(0, 3) {
+            0 => TraceAction::Join { count: g.usize_in(1, 10) },
+            1 => TraceAction::Leave { count: g.usize_in(1, 10) },
+            2 => TraceAction::Capacity { target: g.usize_in(0, 40) },
+            _ => TraceAction::Outage {
+                region: g.usize_in(0, regions - 1),
+                fraction: g.usize_in(0, 10) as f64 / 10.0,
+            },
+        };
+        TraceEvent { time, action }
+    });
+    TraceConfig::new(regions, events).unwrap()
+}
+
+fn gen_config(g: &mut Gen) -> ScenarioConfig {
+    let mut cfg = ScenarioConfig::paper_default()
+        .with_seed(g.u64_in(0, 1 << 48))
+        .with_learners(g.usize_in(1, 200))
+        .with_total_samples(g.u64_in(100, 100_000))
+        .with_cycle(g.f64_in(1.0, 30.0))
+        .with_bound_fracs(g.f64_in(0.05, 0.9), g.f64_in(1.1, 4.0))
+        .with_shards(g.usize_in(1, 16))
+        .with_threads(g.usize_in(0, 8));
+    cfg.data_scenario = if g.bool() {
+        DataScenario::TaskParallelization
+    } else {
+        DataScenario::DistributedDataset
+    };
+    cfg.engine = if g.bool() { EngineKind::Event } else { EngineKind::Lockstep };
+    cfg.epsilon_window = g.usize_in(0, 20) as f64 * 0.25;
+    if g.bool() {
+        cfg.churn = ChurnConfig {
+            join_rate_per_s: g.f64_in(0.01, 2.0),
+            mean_lifetime_s: g.f64_in(10.0, 300.0),
+            max_learners: g.usize_in(0, 100),
+            min_learners: g.usize_in(1, 5),
+        };
+    }
+    if g.bool() {
+        cfg.fading_rho = Some(g.usize_in(0, 10) as f64 / 10.0);
+    }
+
+    let num_models = g.usize_in(1, 4);
+    let scheduler = match g.usize_in(0, 3) {
+        0 => SchedulerKind::Static,
+        1 => SchedulerKind::RoundRobin,
+        2 => SchedulerKind::StalenessGreedy,
+        _ => SchedulerKind::CostModel,
+    };
+    let mut mm = MultiModelConfig::new(num_models, g.usize_in(1, 4), scheduler);
+    if g.bool() {
+        mm.weights = g.vec(num_models, |g| g.f64_in(0.1, 5.0));
+    }
+    if g.bool() {
+        mm.adaptive_buffer = Some(AdaptiveBufferConfig {
+            b_max: g.usize_in(1, 8),
+            target_staleness: g.f64_in(0.5, 4.0),
+            ewma_alpha: g.f64_in(0.05, 0.95),
+        });
+    }
+    if g.bool() {
+        mm.specs = g.vec(num_models, |g| {
+            let mut s = ModelTaskSpec::inherit();
+            if g.bool() {
+                s.total_samples = Some(g.u64_in(1, 50_000));
+            }
+            if g.bool() {
+                s.t_cycle_s = Some(g.f64_in(1.0, 20.0));
+            }
+            s.phantom = g.bool();
+            s
+        });
+    }
+    cfg.multimodel = mm;
+
+    if g.bool() {
+        cfg = cfg.with_trace(gen_trace(g)).unwrap();
+    }
+    cfg
+}
+
+#[test]
+fn scenario_config_json_round_trip_over_random_knobs() {
+    forall("scenario-config-json-round-trip", 120, |g| {
+        let cfg = gen_config(g);
+        let text = cfg.to_json().pretty();
+        let back = ScenarioConfig::from_json(&asyncmel::json::parse(&text).unwrap())
+            .unwrap_or_else(|e| panic!("rejected its own serialization: {e:#}\n{text}"));
+        let text2 = back.to_json().pretty();
+        assert_eq!(text, text2, "serialize -> parse -> serialize is not a fixed point");
+        // and the reloaded config still builds a scenario
+        let scenario = back.build();
+        assert_eq!(scenario.k(), cfg.num_learners);
+    });
+}
+
+#[test]
+fn scenario_config_save_load_round_trip_with_trace() {
+    let dir = std::env::temp_dir().join(format!("asyncmel-cfg-rt-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("traced.json");
+    let cfg = ScenarioConfig::paper_default()
+        .with_learners(12)
+        .with_trace(TraceConfig::gen_diurnal(5, 300.0, 150.0, 8, 4, 16, 2))
+        .unwrap();
+    cfg.save(&path).unwrap();
+    let back = ScenarioConfig::load(&path).unwrap();
+    assert_eq!(cfg.to_json().pretty(), back.to_json().pretty());
+    assert_eq!(back.trace.as_ref().unwrap().events.len(), 8);
+    let _ = std::fs::remove_file(&path);
+}

@@ -21,7 +21,7 @@
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
-BENCHES=(fig2_staleness fig3_accuracy ablation_bounds solver_bench fleet_scale multi_model real_fleet native_hotpath)
+BENCHES=(fig2_staleness fig3_accuracy ablation_bounds solver_bench fleet_scale multi_model real_fleet native_hotpath trace_replay)
 
 run_lint() {
   echo "=== lint: cargo fmt --check ==="
@@ -51,6 +51,8 @@ run_test() {
   echo "=== tier-1: cargo build --benches ==="
   cargo build --benches
 
+  run_serve_smoke
+
   echo "=== python tests ==="
   if command -v python3 >/dev/null 2>&1; then
     if python3 -c "import jax, pytest" >/dev/null 2>&1; then
@@ -66,6 +68,40 @@ run_test() {
   else
     echo "note: python3 unavailable — skipping python tests"
   fi
+}
+
+# Serve-mode smoke: the same submission run (a) uninterrupted and
+# (b) suspended at its first checkpoint and resumed by a second daemon
+# invocation must emit byte-identical digests and result payloads —
+# the bit-identical checkpoint/restore guarantee, end to end through
+# the spool protocol.
+run_serve_smoke() {
+  echo "=== serve smoke: checkpoint/restore bit-identity ==="
+  local bin=target/release/asyncmel
+  local work
+  work="$(mktemp -d)"
+  trap 'rm -rf "$work"' RETURN
+
+  local sub='{"id": "smoke", "scenario": {"num_learners": 8, "seed": 42}, "run": {"cycles": 4, "policy": "async"}}'
+
+  # (a) reference: one uninterrupted pass
+  mkdir -p "$work/ref"
+  printf '%s\n' "$sub" > "$work/ref/smoke.json"
+  "$bin" serve --spool "$work/ref" --once
+
+  # (b) suspend after the first 2-cycle segment, then resume
+  mkdir -p "$work/int"
+  printf '%s\n' "$sub" > "$work/int/smoke.json"
+  "$bin" serve --spool "$work/int" --once --checkpoint-every 2 --stop-after 1
+  test -f "$work/int/ckpt/smoke.ckpt.json" || {
+    echo "serve smoke: expected a checkpoint after the suspended pass" >&2
+    exit 1
+  }
+  "$bin" serve --spool "$work/int" --once
+
+  cmp "$work/ref/out/smoke.digest" "$work/int/out/smoke.digest"
+  cmp "$work/ref/out/smoke.result.json" "$work/int/out/smoke.result.json"
+  echo "serve smoke OK: restored run is bit-identical ($(cat "$work/ref/out/smoke.digest"))"
 }
 
 run_bench() {
@@ -110,6 +146,7 @@ STAGE="${1:-all}"
 case "$STAGE" in
   lint) run_lint ;;
   test) run_test ;;
+  serve-smoke) run_serve_smoke ;;
   bench) run_bench ;;
   bench-full) run_bench_full ;;
   all)
@@ -118,7 +155,7 @@ case "$STAGE" in
     run_bench
     ;;
   *)
-    echo "usage: scripts/ci.sh [all|lint|test|bench|bench-full]" >&2
+    echo "usage: scripts/ci.sh [all|lint|test|serve-smoke|bench|bench-full]" >&2
     exit 2
     ;;
 esac
