@@ -7,7 +7,12 @@
 //! * one in-place `train_step_into` on the paper's 784→300→124→60→10
 //!   stack at batch 128, and on the tiny 36→16→4 test stack at batch 32
 //!   (the shapes the golden/e2e suites exercise);
-//! * one `eval_batch_with` on the paper stack at batch 512.
+//! * one `eval_batch_with` on the paper stack at batch 512;
+//! * one batched `train_many_into` flush of 8 and 64 uniform learner
+//!   tasks on the tiny stack vs the same tasks through the scalar
+//!   per-learner `train_epochs_into` loop — the batched-GEMM
+//!   acceptance comparison (speedup table printed at the end; batched
+//!   must win at batch ≥ 8).
 //!
 //! Passthrough flags: `--smoke` (shrunk time budgets), `--json PATH`
 //! (see scripts/bench_check.sh; keys are gated against
@@ -15,8 +20,9 @@
 
 use asyncmel::aggregation::ParamSet;
 use asyncmel::benchkit::{group, BenchConfig, BenchRun};
-use asyncmel::data::Batch;
-use asyncmel::runtime::native::{NativeExecutor, Scratch};
+use asyncmel::data::{synth, Batch, Dataset, SynthConfig};
+use asyncmel::runtime::native::{BatchScratch, NativeExecutor, Scratch};
+use asyncmel::runtime::{Executor, TrainTask};
 use asyncmel::sim::Rng;
 
 fn he_params(dims: &[usize], rng: &mut Rng) -> ParamSet {
@@ -86,6 +92,78 @@ fn main() {
             exec.eval_batch_with(&mut scratch, &params, &batch)
         });
     }
+
+    // batched train_many vs the scalar per-learner loop: a coalesced
+    // flush of uniform (τ=1, d=48) tasks on the engine-test stack. Both
+    // sides run through persistent scratches (their zero-alloc steady
+    // states); per-outcome parameter clones are inherent to both APIs.
+    let data: Dataset = synth::generate(&SynthConfig {
+        side: 6,
+        classes: 4,
+        train: 4096,
+        test: 32,
+        noise_std: 0.4,
+        ..SynthConfig::default()
+    })
+    .train;
+    let dims = vec![36usize, 16, 4];
+    let exec = NativeExecutor::new(&dims);
+    let (d, tau, train_batch, lr) = (48usize, 1u64, 32usize, 0.001f32);
+    let n = (data.x.len() / data.features) as u64;
+    let mut speedups: Vec<(usize, f64, f64)> = Vec::new();
+    group("batched train_many vs per-learner loop — tiny stack, τ=1, d=48");
+    for nb in [8usize, 64] {
+        let owned: Vec<(ParamSet, Vec<u32>)> = (0..nb)
+            .map(|_| {
+                let p = he_params(&dims, &mut rng);
+                let shard: Vec<u32> = (0..d).map(|_| rng.below(n) as u32).collect();
+                (p, shard)
+            })
+            .collect();
+        let tasks: Vec<TrainTask<'_>> = owned
+            .iter()
+            .map(|(p, s)| TrainTask { params: p, shard: s, tau })
+            .collect();
+        let mut bs = BatchScratch::new();
+        let batched = run.bench(&format!("train_many/b{nb}"), &cfg, || {
+            exec.train_many_into(&mut bs, &tasks, &data, train_batch, lr)
+                .expect("batched flush")
+        });
+        let mut scratch = Scratch::new();
+        let scalar = run.bench(&format!("per_learner_loop/b{nb}"), &cfg, || {
+            tasks
+                .iter()
+                .map(|t| {
+                    let mut local = t.params.clone();
+                    Executor::train_epochs_into(
+                        &exec,
+                        &mut scratch,
+                        &mut local,
+                        &data,
+                        t.shard,
+                        t.tau,
+                        train_batch,
+                        lr,
+                    )
+                    .map(|loss| (local, loss))
+                    .expect("scalar task")
+                })
+                .collect::<Vec<_>>()
+        });
+        speedups.push((nb, scalar.mean_s, batched.mean_s));
+    }
+    println!("\nbatched train_many speedup (tiny 36→16→4 stack, τ=1, d=48):");
+    println!("{:>6} {:>14} {:>14} {:>9}", "batch", "per-learner", "train_many", "speedup");
+    for (nb, scalar_s, batched_s) in &speedups {
+        println!(
+            "{:>6} {:>12.1}µs {:>12.1}µs {:>8.2}x",
+            nb,
+            scalar_s * 1e6,
+            batched_s * 1e6,
+            scalar_s / batched_s
+        );
+    }
+    println!();
 
     run.finish().expect("bench json");
 }

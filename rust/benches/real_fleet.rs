@@ -165,6 +165,41 @@ fn main() {
         );
     }
 
+    // ---- batched train_many flushes @ K=5000 ------------------------
+    // The coalesced ε-window flush is where the batched backend earns
+    // its keep: thousands of same-shape learner steps per flush. Timed
+    // batched (the default) vs the scalar per-learner oracle
+    // (`with_per_learner_train`) on an identical run.
+    let bk = if run.smoke() { 200 } else { 5_000 };
+    let batched_params = fleet_scale::RealFleetParams {
+        ks: vec![bk],
+        cycles: 1,
+        samples_per_learner: 12,
+        test_samples: 256,
+        ..params.clone()
+    };
+    let bds = fleet_scale::real_dataset(&batched_params, bk);
+    group(&format!(
+        "async-real batched flushes @ K={bk} (1 cycle, ε={eps}s, 8 threads): \
+         train_many vs per-learner"
+    ));
+    let batched_stats = run.bench(&format!("async_k{bk}_batched"), &cfg, || {
+        fleet_scale::async_engine_run_mode(
+            &batched_params, bk, 8, Some(eps), false, &runtime, &bds,
+        )
+        .expect("batched async run")
+    });
+    let scalar_stats = run.bench(&format!("async_k{bk}_per_learner"), &cfg, || {
+        fleet_scale::async_engine_run_mode(&batched_params, bk, 8, Some(eps), true, &runtime, &bds)
+            .expect("per-learner async run")
+    });
+    println!(
+        "batched flush speedup @ K={bk}: {:.2}x (train_many {:.0}ms vs per-learner {:.0}ms)",
+        scalar_stats.mean_s / batched_stats.mean_s,
+        batched_stats.mean_s * 1e3,
+        scalar_stats.mean_s * 1e3,
+    );
+
     // ---- hierarchical sharded coordinator @ phantom K=100k ----------
     // The 500k-scale enabler: per-shard event queues + regional
     // aggregators must cost nothing extra and change nothing — any

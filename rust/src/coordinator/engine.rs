@@ -78,7 +78,7 @@ use crate::multimodel::{
     make_scheduler, BufferedUpdate, ModelRegistry, ModelStats, ModelTaskSpec, MultiModelOptions,
     MultiModelReport, ResolvedTaskSpec, SubFleetAlloc,
 };
-use crate::runtime::{Runtime, ThreadPool};
+use crate::runtime::{Runtime, ThreadPool, TrainTask};
 use crate::sim::{Rng, ShardedEventQueue};
 
 /// How the engine folds arrivals into the global model.
@@ -443,6 +443,42 @@ fn freeze_pending(plans: &mut [RoundPlan], model: usize, global: &Option<ParamSe
     }
 }
 
+/// Upper bound on how many learner tasks one batched `train_many`
+/// chunk stacks: bounds the `BatchScratch` stripe memory (64 stripes ×
+/// minibatch rows × widest layer) while leaving the batched kernels
+/// plenty of rows to block over.
+const MAX_TRAIN_CHUNK: usize = 64;
+
+/// Fan a flush's worth of learner train tasks out across the pool in
+/// contiguous chunks, each chunk running through the batched
+/// [`Runtime::train_many`] entry point (one warmed batch scratch + one
+/// register-panel kernel invocation per layer, instead of one scalar
+/// GEMM per learner). Results come back in task order. Because each
+/// task's arithmetic is independent of its chunk- and batch-mates
+/// (per-stripe kernels), the outcome is bitwise identical to the
+/// per-learner path for every thread count and chunking — the engine's
+/// determinism contract survives unchanged.
+fn train_tasks_batched(
+    pool: &ThreadPool,
+    runtime: &Runtime,
+    train: &Dataset,
+    tasks: &[TrainTask<'_>],
+    lr: f32,
+) -> Result<Vec<(ParamSet, f32)>> {
+    let workers = pool.threads();
+    let chunk = if workers <= 1 {
+        MAX_TRAIN_CHUNK
+    } else {
+        // ~4 chunks per worker for load balancing over heterogeneous
+        // shard sizes, capped to bound stripe memory
+        tasks.len().div_ceil(workers * 4).clamp(1, MAX_TRAIN_CHUNK)
+    };
+    pool.try_map_chunked(tasks.len(), chunk, |lo, hi| {
+        let outs = runtime.train_many(&tasks[lo..hi], train, lr)?;
+        Ok(outs.into_iter().map(|o| (o.params, o.train_loss)).collect())
+    })
+}
+
 /// The event-driven orchestrator.
 pub struct EventEngine<'rt> {
     pub scenario: Scenario,
@@ -483,6 +519,14 @@ pub struct EventEngine<'rt> {
     /// is the legacy strictly-per-event path, kept as the differential
     /// oracle ([`Self::with_per_event_dispatch`]).
     coalesce: Option<f64>,
+    /// Run each flushed learner round through its own
+    /// [`crate::coordinator::learner::Learner::run_cycle`] scalar path
+    /// instead of stacking same-shape rounds into the batched
+    /// `train_many` kernels. Default `false` (batched); the per-learner
+    /// path is kept as the bitwise oracle for the batched one
+    /// ([`Self::with_per_learner_train`], `rust/tests/coalescing.rs`)
+    /// and as the bench baseline.
+    per_learner_train: bool,
     /// Coordinator shards `k` for the hierarchical run loop
     /// (`ScenarioConfig.num_shards`; 1 = flat). Any value is
     /// bit-identical — sharding changes coordination topology, never
@@ -582,6 +626,7 @@ impl<'rt> EventEngine<'rt> {
             last_solve_ms: 0.0,
             pool,
             coalesce: Some(eps),
+            per_learner_train: false,
             num_shards,
             alive_learners,
             shard_events: Vec::new(),
@@ -595,6 +640,18 @@ impl<'rt> EventEngine<'rt> {
     /// the serial/sharded baselines.
     pub fn with_per_event_dispatch(mut self) -> Self {
         self.coalesce = None;
+        self
+    }
+
+    /// Disable batched `train_many` flushes: run every flushed round
+    /// through the scalar per-learner `run_cycle` path. Differential
+    /// tests use this side as the bitwise oracle for the batched
+    /// kernels, and `benches/native_hotpath.rs` as the speedup
+    /// baseline. Results are byte-identical either way in the default
+    /// build (the `fast-numerics` feature relaxes only the batched
+    /// side).
+    pub fn with_per_learner_train(mut self) -> Self {
+        self.per_learner_train = true;
         self
     }
 
@@ -769,17 +826,28 @@ impl<'rt> EventEngine<'rt> {
         let trained: Vec<Option<(ParamSet, f32)>> = match (&self.exec, global) {
             (ExecMode::Real { runtime, train, .. }, Some(g)) => {
                 let shards_ref = shards.as_ref().ok_or(EngineError::MissingShards)?;
-                let slots = &self.slots;
-                let arriving_ref = &arriving;
                 let lr = opts.lr;
-                self.pool
-                    .try_map(arriving.len(), |i| {
-                        let a = &arriving_ref[i];
-                        slots[a.slot]
-                            .learner
-                            .run_cycle(runtime, g, train, &shards_ref[a.pos], a.tau, lr)
-                            .map(|u| Some((u.params, u.train_loss)))
-                    })?
+                if self.per_learner_train {
+                    let slots = &self.slots;
+                    let arriving_ref = &arriving;
+                    self.pool
+                        .try_map(arriving.len(), |i| {
+                            let a = &arriving_ref[i];
+                            slots[a.slot]
+                                .learner
+                                .run_cycle(runtime, g, train, &shards_ref[a.pos], a.tau, lr)
+                                .map(|u| Some((u.params, u.train_loss)))
+                        })?
+                } else {
+                    let tasks: Vec<TrainTask<'_>> = arriving
+                        .iter()
+                        .map(|a| TrainTask { params: g, shard: &shards_ref[a.pos], tau: a.tau })
+                        .collect();
+                    train_tasks_batched(&self.pool, runtime, train, &tasks, lr)?
+                        .into_iter()
+                        .map(Some)
+                        .collect()
+                }
             }
             _ => arriving.iter().map(|_| None).collect(),
         };
@@ -930,27 +998,51 @@ impl<'rt> EventEngine<'rt> {
             let ExecMode::Real { runtime, train, .. } = &self.exec else {
                 unreachable!("runnable plans only exist in real exec mode");
             };
-            let slots = &self.slots;
-            let plans_ref = &plans;
-            let runnable_ref = &runnable;
-            let shared_ref = &shared;
             let lr = opts.lr;
-            let results = self.pool.try_map(runnable.len(), |j| {
-                let i = runnable_ref[j];
-                let RoundPlan::Run(rp) = &plans_ref[i] else {
-                    unreachable!("runnable indexes only Run plans");
-                };
-                let g = rp
-                    .global
-                    .as_ref()
-                    .or_else(|| shared_ref.get(rp.model))
-                    .expect("runnable plan without a global");
-                let shard = rp.shard.as_ref().expect("runnable plan has a shard");
-                slots[rp.slot]
-                    .learner
-                    .run_cycle(runtime, g, train, shard, rp.tau, lr)
-                    .map(|u| (u.params, u.train_loss))
-            })?;
+            let results = if self.per_learner_train {
+                // scalar oracle path: one run_cycle per pooled job
+                let slots = &self.slots;
+                let plans_ref = &plans;
+                let runnable_ref = &runnable;
+                let shared_ref = &shared;
+                self.pool.try_map(runnable.len(), |j| {
+                    let i = runnable_ref[j];
+                    let RoundPlan::Run(rp) = &plans_ref[i] else {
+                        unreachable!("runnable indexes only Run plans");
+                    };
+                    let g = rp
+                        .global
+                        .as_ref()
+                        .or_else(|| shared_ref.get(rp.model))
+                        .expect("runnable plan without a global");
+                    let shard = rp.shard.as_ref().expect("runnable plan has a shard");
+                    slots[rp.slot]
+                        .learner
+                        .run_cycle(runtime, g, train, shard, rp.tau, lr)
+                        .map(|u| (u.params, u.train_loss))
+                })?
+            } else {
+                // batched path: stack the flush into train_many chunks
+                // (run_cycle's τ = 0 / empty-shard semantics — snapshot
+                // back untouched, NaN loss — are reproduced inside
+                // train_many, and only params/loss are consumed here)
+                let tasks: Vec<TrainTask<'_>> = runnable
+                    .iter()
+                    .map(|&i| {
+                        let RoundPlan::Run(rp) = &plans[i] else {
+                            unreachable!("runnable indexes only Run plans");
+                        };
+                        let g = rp
+                            .global
+                            .as_ref()
+                            .or_else(|| shared.get(rp.model))
+                            .expect("runnable plan without a global");
+                        let shard = rp.shard.as_ref().expect("runnable plan has a shard");
+                        TrainTask { params: g, shard, tau: rp.tau }
+                    })
+                    .collect();
+                train_tasks_batched(&self.pool, runtime, train, &tasks, lr)?
+            };
             for (&i, r) in runnable.iter().zip(results) {
                 trained[i] = Some(r);
             }

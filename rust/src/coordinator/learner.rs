@@ -8,7 +8,7 @@ use crate::channel::Link;
 use crate::costmodel::LearnerCost;
 use crate::data::Dataset;
 use crate::device::Device;
-use crate::runtime::Runtime;
+use crate::runtime::{Runtime, Scratch};
 
 /// A learner node (the paper's learner `k ∈ κ`).
 #[derive(Debug, Clone)]
@@ -60,7 +60,12 @@ impl Learner {
                 d,
             });
         }
-        let (params, train_loss) = runtime.train_epochs(global, data, shard, tau, lr)?;
+        // Borrow-first hot loop: one owned parameter buffer updated in
+        // place through a scratch recycled across every step.
+        let mut params = global.clone();
+        let mut scratch = Scratch::new();
+        let train_loss =
+            runtime.train_epochs_into(&mut scratch, &mut params, data, shard, tau, lr)?;
         Ok(LocalUpdate {
             learner_id: self.id,
             params,

@@ -357,6 +357,21 @@ pub fn async_engine_run(
     runtime: &Runtime,
     ds: &SynthDataset,
 ) -> Result<(Vec<CycleRecord>, usize)> {
+    async_engine_run_mode(params, k, threads, epsilon, false, runtime, ds)
+}
+
+/// [`async_engine_run`] with an explicit train mode: `per_learner`
+/// disables the batched `train_many` flushes (the scalar oracle the
+/// `real_fleet` bench times the batched path against).
+pub fn async_engine_run_mode(
+    params: &RealFleetParams,
+    k: usize,
+    threads: usize,
+    epsilon: Option<f64>,
+    per_learner: bool,
+    runtime: &Runtime,
+    ds: &SynthDataset,
+) -> Result<(Vec<CycleRecord>, usize)> {
     let scenario = params
         .base
         .clone()
@@ -374,6 +389,9 @@ pub fn async_engine_run(
         Some(eps) => engine.with_epsilon_window(eps)?,
         None => engine.with_per_event_dispatch(),
     };
+    if per_learner {
+        engine = engine.with_per_learner_train();
+    }
     let opts = EngineOptions {
         train: TrainOptions { cycles: params.cycles, lr: params.lr, ..Default::default() },
         policy: crate::coordinator::EnginePolicy::Async(

@@ -29,7 +29,7 @@
 //! | [`aggregation`] | cycle aggregation rules + staleness-weighted async server updates |
 //! | [`multimodel`] | FedAST-style multi-tenant layer: model registry, buffered aggregation, freed-slot schedulers |
 //! | [`data`] | synthetic MNIST-like dataset, sharding, minibatching |
-//! | [`runtime`] | model executor: native pure-Rust backend (default) or PJRT (`pjrt` feature) |
+//! | [`runtime`] | [`runtime::Executor`] backend seam: native pure-Rust scalar + batched kernels (default) or PJRT (`pjrt` feature) |
 //! | [`runtime::pool`] | deterministic sharded thread pool for real-numerics learner steps |
 //! | [`coordinator`] | lock-step orchestrator **and** the event-driven fleet engine |
 //! | [`serve`] | `asyncmel serve` daemon: spooled submissions, checkpoint/restore, pluggable result formats |
@@ -135,12 +135,35 @@
 //! ~5k to 500k+ learners (`asyncmel fleet --ks 100000,500000`);
 //! `rust/benches/real_fleet.rs` times K = 100 000 at 1 vs 8 shards.
 //!
-//! The native backend itself runs a zero-alloc hot path: a reusable
+//! ## The `Executor` backend seam and the batched native kernels
+//!
+//! Backends sit behind the public object-safe [`runtime::Executor`]
+//! trait — borrow-first `train_step_into` / `train_epochs_into` /
+//! `train_many` / `evaluate_scratch`, the caller owning the parameter
+//! buffer and the scratch. [`runtime::Runtime`] keeps the old
+//! allocating signatures as thin delegating wrappers and exposes the
+//! seam via [`runtime::Runtime::executor`].
+//!
+//! The native backend runs a zero-alloc hot path: a reusable
 //! [`runtime::native::Scratch`] (borrowed input batch, recycled
 //! activation/gradient buffers, in-place SGD), register-tiled forward
 //! matmuls and a cached transposed-weight backward — all bit-identical
 //! to the original scalar implementation (reference-differential tests
 //! in `runtime::native`; `rust/benches/native_hotpath.rs` times it).
+//! On top of it, [`runtime::native::NativeExecutor::train_many`]
+//! stacks a coalesced flush's same-shape learner steps into one
+//! batched, `ROW_BLOCK × TILE` register-blocked forward/backward per
+//! layer through a batch-striped [`runtime::native::BatchScratch`] —
+//! the engine's default flush path ([`runtime::Runtime::train_many`]
+//! groups mixed flushes into uniform runs; the scalar path survives as
+//! the engine's differential oracle behind
+//! `EventEngine::with_per_learner_train`). Each learner occupies its
+//! own stripe, so per learner the arithmetic is exactly the scalar
+//! sequence: the default build stays bit-identical for every batch
+//! size (`rust/tests/batched_backend.rs`), and the opt-in
+//! **`fast-numerics`** feature (FMA + reassociation inside a stripe)
+//! stays deterministic and batch-composition-invariant, gated by a
+//! tolerance suite instead of bit-equality.
 //!
 //! ## Service mode, checkpoint/restore, trace-driven workloads
 //!

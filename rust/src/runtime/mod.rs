@@ -1,18 +1,27 @@
-//! Model executor — dual-backend: pure-Rust native (default) or PJRT.
+//! Model executor — the [`Executor`] trait seam between the
+//! coordinator layer and the numerics backends.
 //!
-//! The hot path is [`Runtime::train_step`] / [`Runtime::evaluate`],
-//! consumed by the coordinator layer. Two interchangeable backends:
+//! The hot path is [`Runtime::train_epochs_into`] /
+//! [`Runtime::train_many`] / [`Runtime::evaluate`], consumed by the
+//! coordinator layer through [`Runtime`]'s thin delegating wrappers.
+//! The backend behind them is a `Box<dyn Executor>` — a public
+//! object-safe trait with **borrow-first** entry points (caller-owned
+//! parameters + scratch, no clone-and-return) — with two
+//! implementations:
 //!
 //! * **native** (default): [`native::NativeExecutor`], an in-process
 //!   f32 implementation of the same ReLU-MLP + softmax-CE train/eval
 //!   steps the AOT artifacts encode. Hermetic — no registry, no
 //!   artifact files. Construct directly with [`Runtime::native`], or
 //!   let [`Runtime::load`] build it from an artifact `manifest.json`.
+//!   The only backend implementing batched [`Executor::train_many`].
 //! * **pjrt** (`--features pjrt`, requires the external `xla = "0.1.6"`
 //!   crate): the original compiled-HLO path (per /opt/xla-example/
 //!   load_hlo): HLO **text** → `HloModuleProto::from_text_file` →
 //!   `XlaComputation` → `PjRtClient::cpu().compile` — once, at startup.
-//!   Python never runs here.
+//!   Python never runs here. `train_many` is `Unsupported`
+//!   ([`Executor::supports_train_many`] is `false`), so [`Runtime`]
+//!   falls back to the per-task loop.
 
 pub mod native;
 pub mod pool;
@@ -22,25 +31,173 @@ use std::path::{Path, PathBuf};
 
 use anyhow::{ensure, Result};
 #[cfg(feature = "pjrt")]
-use anyhow::Context;
+use anyhow::{bail, Context};
 
 use crate::aggregation::ParamSet;
 use crate::data::{Batch, Dataset, Minibatches};
 use crate::sim::Rng;
+pub use native::{BatchScratch, Scratch};
 pub use pool::ThreadPool;
 pub use spec::Manifest;
 
-/// Compiled artifacts (or the native engine) behind one interface.
-pub struct Runtime {
-    backend: Backend,
-    pub manifest: Manifest,
-    pub artifacts_dir: PathBuf,
+/// One unit of batched training work for [`Executor::train_many`]: a
+/// learner's starting snapshot, its sample shard and its local epoch
+/// count. The dataset, minibatch size and learning rate are shared per
+/// call.
+#[derive(Debug, Clone, Copy)]
+pub struct TrainTask<'a> {
+    /// The global parameters the learner trains from (its received
+    /// snapshot — borrowed, the outcome owns the trained copy).
+    pub params: &'a ParamSet,
+    /// Sample indices of the learner's shard.
+    pub shard: &'a [u32],
+    /// Local epochs `τ` (0 = return the snapshot untouched, NaN loss).
+    pub tau: u64,
 }
 
-enum Backend {
-    Native(native::NativeExecutor),
-    #[cfg(feature = "pjrt")]
-    Pjrt(PjrtBackend),
+/// Result of one [`TrainTask`]: the trained parameters and the final
+/// local epoch's mean loss (NaN when no step ran).
+#[derive(Debug, Clone)]
+pub struct TrainOutcome {
+    pub params: ParamSet,
+    pub train_loss: f32,
+}
+
+/// Object-safe backend seam for model execution — the redesign that
+/// replaced the closed `Backend` enum + per-method `match`.
+///
+/// Entry points are **borrow-first**: the caller owns the parameter
+/// buffer and the [`Scratch`] working memory, so a τ-epoch learner
+/// round performs no backend-imposed allocation. [`Runtime`] keeps the
+/// old allocating signatures as thin delegating wrappers, so call
+/// sites outside `runtime/` keep compiling; new code (and the engine
+/// flush paths) should call the borrow-first forms.
+pub trait Executor: Send + Sync {
+    /// Backend platform string (diagnostics).
+    fn platform(&self) -> String;
+
+    /// One SGD minibatch step in place; returns the masked mean loss.
+    fn train_step_into(
+        &self,
+        s: &mut Scratch,
+        params: &mut ParamSet,
+        batch: &Batch,
+        lr: f32,
+    ) -> Result<f32>;
+
+    /// `tau` local epochs of minibatch SGD over a shard, updating
+    /// `params` in place; returns the last epoch's mean loss (NaN when
+    /// no step ran).
+    fn train_epochs_into(
+        &self,
+        s: &mut Scratch,
+        params: &mut ParamSet,
+        data: &Dataset,
+        shard: &[u32],
+        tau: u64,
+        train_batch: usize,
+        lr: f32,
+    ) -> Result<f32>;
+
+    /// Batched τ-epoch SGD over a **uniform** batch of tasks (same τ,
+    /// same shard length) — the coalesced-flush hot path. Backends
+    /// without a batched kernel return an `Unsupported` error and
+    /// advertise it via [`Self::supports_train_many`]; callers should
+    /// go through [`Runtime::train_many`], which splits mixed batches
+    /// into uniform runs and falls back per task.
+    fn train_many(
+        &self,
+        tasks: &[TrainTask<'_>],
+        data: &Dataset,
+        train_batch: usize,
+        lr: f32,
+    ) -> Result<Vec<TrainOutcome>>;
+
+    /// Whether [`Self::train_many`] is implemented (`false` routes
+    /// [`Runtime::train_many`] to the per-task fallback).
+    fn supports_train_many(&self) -> bool {
+        true
+    }
+
+    /// One eval minibatch through a caller-held scratch:
+    /// `(correct, loss_sum, mask_sum)` over the real rows.
+    fn evaluate_scratch(
+        &self,
+        s: &mut Scratch,
+        params: &ParamSet,
+        batch: &Batch,
+    ) -> Result<(f64, f64, f64)>;
+}
+
+impl Executor for native::NativeExecutor {
+    fn platform(&self) -> String {
+        "native-cpu".to_string()
+    }
+
+    fn train_step_into(
+        &self,
+        s: &mut Scratch,
+        params: &mut ParamSet,
+        batch: &Batch,
+        lr: f32,
+    ) -> Result<f32> {
+        Ok(native::NativeExecutor::train_step_into(self, s, params, batch, lr))
+    }
+
+    fn train_epochs_into(
+        &self,
+        s: &mut Scratch,
+        params: &mut ParamSet,
+        data: &Dataset,
+        shard: &[u32],
+        tau: u64,
+        train_batch: usize,
+        lr: f32,
+    ) -> Result<f32> {
+        let mut last_loss = f32::NAN;
+        for _epoch in 0..tau {
+            let mut loss_sum = 0.0f64;
+            let mut batches = 0usize;
+            for batch in Minibatches::new(data, shard, train_batch) {
+                let loss = native::NativeExecutor::train_step_into(self, s, params, &batch, lr);
+                loss_sum += loss as f64;
+                batches += 1;
+            }
+            if batches > 0 {
+                last_loss = (loss_sum / batches as f64) as f32;
+            }
+        }
+        Ok(last_loss)
+    }
+
+    fn train_many(
+        &self,
+        tasks: &[TrainTask<'_>],
+        data: &Dataset,
+        train_batch: usize,
+        lr: f32,
+    ) -> Result<Vec<TrainOutcome>> {
+        native::NativeExecutor::train_many(self, tasks, data, train_batch, lr)
+    }
+
+    fn evaluate_scratch(
+        &self,
+        s: &mut Scratch,
+        params: &ParamSet,
+        batch: &Batch,
+    ) -> Result<(f64, f64, f64)> {
+        Ok(self.eval_batch_with(s, params, batch))
+    }
+}
+
+/// Compiled artifacts (or the native engine) behind the [`Executor`]
+/// seam, bundled with the model [`Manifest`]. The coordinator layer
+/// talks to this; backends are swapped by constructing with
+/// [`Runtime::load`] (feature-selected) or [`Runtime::native`].
+pub struct Runtime {
+    executor: Box<dyn Executor>,
+    pub manifest: Manifest,
+    pub artifacts_dir: PathBuf,
 }
 
 impl std::fmt::Debug for Runtime {
@@ -68,10 +225,11 @@ impl Runtime {
         let dir = dir.as_ref().to_path_buf();
         let manifest = Manifest::load(&dir)?;
         #[cfg(feature = "pjrt")]
-        let backend = Backend::Pjrt(PjrtBackend::load(&dir, &manifest)?);
+        let executor: Box<dyn Executor> = Box::new(PjrtBackend::load(&dir, &manifest)?);
         #[cfg(not(feature = "pjrt"))]
-        let backend = Backend::Native(native::NativeExecutor::new(&manifest.layer_dims));
-        Ok(Self { backend, manifest, artifacts_dir: dir })
+        let executor: Box<dyn Executor> =
+            Box::new(native::NativeExecutor::new(&manifest.layer_dims));
+        Ok(Self { executor, manifest, artifacts_dir: dir })
     }
 
     /// Build an artifact-free native runtime for the given model stack —
@@ -80,7 +238,7 @@ impl Runtime {
     pub fn native(layer_dims: &[usize], train_batch: usize, eval_batch: usize) -> Self {
         let manifest = Manifest::native(layer_dims, train_batch, eval_batch);
         Self {
-            backend: Backend::Native(native::NativeExecutor::new(layer_dims)),
+            executor: Box::new(native::NativeExecutor::new(layer_dims)),
             manifest,
             artifacts_dir: PathBuf::from("<native>"),
         }
@@ -88,11 +246,13 @@ impl Runtime {
 
     /// Backend platform string (diagnostics).
     pub fn platform(&self) -> String {
-        match &self.backend {
-            Backend::Native(_) => "native-cpu".to_string(),
-            #[cfg(feature = "pjrt")]
-            Backend::Pjrt(p) => p.client.platform_name(),
-        }
+        self.executor.platform()
+    }
+
+    /// Borrow the backend through the [`Executor`] seam — for callers
+    /// that manage their own parameter buffers and [`Scratch`].
+    pub fn executor(&self) -> &dyn Executor {
+        &*self.executor
     }
 
     /// He-initialized parameter set matching the manifest shapes.
@@ -114,26 +274,54 @@ impl Runtime {
     }
 
     /// One SGD minibatch step: returns the updated parameters + loss.
+    ///
+    /// **Deprecated in practice** (kept for compatibility, not removed):
+    /// this is the allocating clone-and-return shape — it clones the
+    /// parameter buffer and builds a fresh [`Scratch`] per call. New
+    /// code should hold a [`Scratch`] and call
+    /// [`Executor::train_step_into`] via [`Self::executor`] instead.
     pub fn train_step(
         &self,
         params: &ParamSet,
         batch: &Batch,
         lr: f32,
     ) -> Result<(ParamSet, f32)> {
-        match &self.backend {
-            Backend::Native(exec) => Ok(exec.train_step(params, batch, lr)),
-            #[cfg(feature = "pjrt")]
-            Backend::Pjrt(p) => p.train_step(&self.manifest, params, batch, lr),
-        }
+        let mut local = params.clone();
+        let mut scratch = Scratch::new();
+        let loss = self.executor.train_step_into(&mut scratch, &mut local, batch, lr)?;
+        Ok((local, loss))
+    }
+
+    /// Borrow-first `tau`-epoch loop: `params` updated in place through
+    /// a caller-owned [`Scratch`]; returns the last epoch's mean loss.
+    /// This is the engine's per-learner hot path (zero-alloc on the
+    /// native backend).
+    pub fn train_epochs_into(
+        &self,
+        scratch: &mut Scratch,
+        params: &mut ParamSet,
+        data: &Dataset,
+        shard: &[u32],
+        tau: u64,
+        lr: f32,
+    ) -> Result<f32> {
+        self.executor.train_epochs_into(
+            scratch,
+            params,
+            data,
+            shard,
+            tau,
+            self.manifest.train_batch,
+            lr,
+        )
     }
 
     /// `tau` local epochs of minibatch SGD over a shard; returns the
     /// final local parameters and the last epoch's mean loss.
     ///
-    /// On the native backend this is the zero-alloc hot loop: one
-    /// parameter buffer updated in place and one [`native::Scratch`]
-    /// recycled across every step of every epoch (bit-identical to the
-    /// step-by-step path — see `runtime::native`).
+    /// Thin clone-and-return wrapper over [`Self::train_epochs_into`];
+    /// callers that recycle buffers across rounds should use the
+    /// borrow-first form directly.
     pub fn train_epochs(
         &self,
         params: &ParamSet,
@@ -143,56 +331,79 @@ impl Runtime {
         lr: f32,
     ) -> Result<(ParamSet, f32)> {
         let mut local = params.clone();
-        let mut scratch = native::Scratch::new();
-        let mut last_loss = f32::NAN;
-        for _epoch in 0..tau {
-            let mut loss_sum = 0.0f64;
-            let mut batches = 0usize;
-            for batch in Minibatches::new(data, shard, self.manifest.train_batch) {
-                let loss = match &self.backend {
-                    Backend::Native(exec) => {
-                        exec.train_step_into(&mut scratch, &mut local, &batch, lr)
-                    }
-                    #[cfg(feature = "pjrt")]
-                    Backend::Pjrt(_) => {
-                        let (next, loss) = self.train_step(&local, &batch, lr)?;
-                        local = next;
-                        loss
-                    }
-                };
-                loss_sum += loss as f64;
-                batches += 1;
-            }
-            if batches > 0 {
-                last_loss = (loss_sum / batches as f64) as f32;
-            }
-        }
-        Ok((local, last_loss))
+        let mut scratch = Scratch::new();
+        let loss = self.train_epochs_into(&mut scratch, &mut local, data, shard, tau, lr)?;
+        Ok((local, loss))
     }
 
-    /// One eval minibatch: (correct, loss_sum, mask_sum).
-    fn eval_batch_raw(&self, params: &ParamSet, batch: &Batch) -> Result<(f64, f64, f64)> {
-        match &self.backend {
-            Backend::Native(exec) => Ok(exec.eval_batch(params, batch)),
-            #[cfg(feature = "pjrt")]
-            Backend::Pjrt(p) => p.eval_batch(&self.manifest, params, batch),
+    /// Batched τ-epoch SGD over a flush's worth of learner tasks.
+    ///
+    /// Tasks are grouped by `(tau, shard length)` (preserving first-seen
+    /// order) and each uniform group runs through the backend's
+    /// [`Executor::train_many`] batched kernels; mixed-shape flushes
+    /// therefore split into several batched runs rather than falling
+    /// back to scalar code. Backends without batched kernels
+    /// ([`Executor::supports_train_many`] = `false`, e.g. pjrt) fall
+    /// back to a per-task [`Executor::train_epochs_into`] loop through
+    /// one recycled [`Scratch`]. Outcomes are returned in task order
+    /// and are bitwise identical to the per-learner path in the default
+    /// build.
+    pub fn train_many(
+        &self,
+        tasks: &[TrainTask<'_>],
+        data: &Dataset,
+        lr: f32,
+    ) -> Result<Vec<TrainOutcome>> {
+        let b = self.manifest.train_batch;
+        if !self.executor.supports_train_many() {
+            let mut scratch = Scratch::new();
+            let mut outs = Vec::with_capacity(tasks.len());
+            for t in tasks {
+                let mut local = t.params.clone();
+                let loss = self.executor.train_epochs_into(
+                    &mut scratch, &mut local, data, t.shard, t.tau, b, lr,
+                )?;
+                outs.push(TrainOutcome { params: local, train_loss: loss });
+            }
+            return Ok(outs);
         }
+        // Group into uniform (tau, shard-length) runs, preserving
+        // first-seen order; scatter outcomes back by original index.
+        let mut groups: Vec<((u64, usize), Vec<usize>)> = Vec::new();
+        for (i, t) in tasks.iter().enumerate() {
+            let key = (t.tau, t.shard.len());
+            match groups.iter_mut().find(|(k, _)| *k == key) {
+                Some((_, idxs)) => idxs.push(i),
+                None => groups.push((key, vec![i])),
+            }
+        }
+        let mut outs: Vec<Option<TrainOutcome>> = (0..tasks.len()).map(|_| None).collect();
+        for (_, idxs) in &groups {
+            let group: Vec<TrainTask<'_>> = idxs.iter().map(|&i| tasks[i]).collect();
+            let got = self.executor.train_many(&group, data, b, lr)?;
+            ensure!(
+                got.len() == group.len(),
+                "train_many returned {} outcomes for {} tasks",
+                got.len(),
+                group.len()
+            );
+            for (&i, o) in idxs.iter().zip(got) {
+                outs[i] = Some(o);
+            }
+        }
+        Ok(outs.into_iter().map(|o| o.expect("every task grouped")).collect())
     }
 
-    /// Streamed evaluation over a whole dataset. On the native backend
-    /// one [`native::Scratch`] is recycled across all eval batches.
+    /// Streamed evaluation over a whole dataset. One [`Scratch`] is
+    /// recycled across all eval batches.
     pub fn evaluate(&self, params: &ParamSet, data: &Dataset) -> Result<EvalResult> {
         let idx: Vec<u32> = (0..data.len() as u32).collect();
         let mut correct = 0.0;
         let mut loss = 0.0;
         let mut n = 0.0;
-        let mut scratch = native::Scratch::new();
+        let mut scratch = Scratch::new();
         for batch in Minibatches::new(data, &idx, self.manifest.eval_batch) {
-            let (c, l, m) = match &self.backend {
-                Backend::Native(exec) => exec.eval_batch_with(&mut scratch, params, &batch),
-                #[cfg(feature = "pjrt")]
-                Backend::Pjrt(_) => self.eval_batch_raw(params, &batch)?,
-            };
+            let (c, l, m) = self.executor.evaluate_scratch(&mut scratch, params, &batch)?;
             correct += c;
             loss += l;
             n += m;
@@ -206,9 +417,11 @@ impl Runtime {
     }
 
     /// [`Self::evaluate`] with the eval minibatches fanned out across a
-    /// [`ThreadPool`]. Per-batch results are reduced in batch order, so
-    /// the outcome is **bit-identical** to the serial path for any
-    /// thread count (the pool's core contract).
+    /// [`ThreadPool`]. Batches are split into contiguous chunks (one
+    /// recycled [`Scratch`] per chunk, so fan-out stays alloc-light) and
+    /// per-batch results are reduced in batch order, so the outcome is
+    /// **bit-identical** to the serial path for any thread count (the
+    /// pool's core contract).
     pub fn evaluate_pooled(
         &self,
         pool: &ThreadPool,
@@ -221,7 +434,18 @@ impl Runtime {
         let idx: Vec<u32> = (0..data.len() as u32).collect();
         let batches: Vec<Batch> =
             Minibatches::new(data, &idx, self.manifest.eval_batch).collect();
-        let parts = pool.try_map(batches.len(), |i| self.eval_batch_raw(params, &batches[i]))?;
+        let chunk = batches
+            .len()
+            .div_ceil(pool.threads().saturating_mul(4).max(1))
+            .max(1);
+        let parts = pool.try_map_chunked(batches.len(), chunk, |lo, hi| {
+            let mut scratch = Scratch::new();
+            let mut triples = Vec::with_capacity(hi - lo);
+            for batch in &batches[lo..hi] {
+                triples.push(self.executor.evaluate_scratch(&mut scratch, params, batch)?);
+            }
+            Ok(triples)
+        })?;
         let (mut correct, mut loss, mut n) = (0.0, 0.0, 0.0);
         for (c, l, m) in parts {
             correct += c;
@@ -243,6 +467,79 @@ struct PjrtBackend {
     client: xla::PjRtClient,
     train_exe: xla::PjRtLoadedExecutable,
     eval_exe: xla::PjRtLoadedExecutable,
+    /// Own copy of the model manifest — the object-safe [`Executor`]
+    /// entry points can't thread `Runtime.manifest` through.
+    manifest: Manifest,
+}
+
+#[cfg(feature = "pjrt")]
+impl Executor for PjrtBackend {
+    fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    fn train_step_into(
+        &self,
+        _s: &mut Scratch,
+        params: &mut ParamSet,
+        batch: &Batch,
+        lr: f32,
+    ) -> Result<f32> {
+        // Device buffers round-trip through literals; the scratch is a
+        // host-side concept, unused here.
+        let (next, loss) = PjrtBackend::train_step(self, &self.manifest, params, batch, lr)?;
+        *params = next;
+        Ok(loss)
+    }
+
+    fn train_epochs_into(
+        &self,
+        s: &mut Scratch,
+        params: &mut ParamSet,
+        data: &Dataset,
+        shard: &[u32],
+        tau: u64,
+        train_batch: usize,
+        lr: f32,
+    ) -> Result<f32> {
+        let mut last_loss = f32::NAN;
+        for _epoch in 0..tau {
+            let mut loss_sum = 0.0f64;
+            let mut batches = 0usize;
+            for batch in Minibatches::new(data, shard, train_batch) {
+                let loss = Executor::train_step_into(self, s, params, &batch, lr)?;
+                loss_sum += loss as f64;
+                batches += 1;
+            }
+            if batches > 0 {
+                last_loss = (loss_sum / batches as f64) as f32;
+            }
+        }
+        Ok(last_loss)
+    }
+
+    fn train_many(
+        &self,
+        _tasks: &[TrainTask<'_>],
+        _data: &Dataset,
+        _train_batch: usize,
+        _lr: f32,
+    ) -> Result<Vec<TrainOutcome>> {
+        bail!("train_many is unsupported on the pjrt backend; use the per-task fallback")
+    }
+
+    fn supports_train_many(&self) -> bool {
+        false
+    }
+
+    fn evaluate_scratch(
+        &self,
+        _s: &mut Scratch,
+        params: &ParamSet,
+        batch: &Batch,
+    ) -> Result<(f64, f64, f64)> {
+        PjrtBackend::eval_batch(self, &self.manifest, params, batch)
+    }
 }
 
 #[cfg(feature = "pjrt")]
@@ -276,7 +573,7 @@ impl PjrtBackend {
         };
         let train_exe = load(&manifest.entries.train_step.file)?;
         let eval_exe = load(&manifest.entries.eval_step.file)?;
-        Ok(Self { client, train_exe, eval_exe })
+        Ok(Self { client, train_exe, eval_exe, manifest: manifest.clone() })
     }
 
     fn param_literals(&self, manifest: &Manifest, params: &ParamSet) -> Result<Vec<xla::Literal>> {

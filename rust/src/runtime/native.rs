@@ -40,12 +40,26 @@
 //! previous backend — asserted against a kept reference implementation
 //! in the tests below and by the repo's golden digests.
 
+use anyhow::{ensure, Result};
+
 use crate::aggregation::ParamSet;
-use crate::data::Batch;
+use crate::data::{Batch, Dataset};
+use crate::runtime::{TrainTask, TrainOutcome};
+
+/// Native f32 SIMD width the batched kernels are tiled around (one
+/// 256-bit AVX2 register = 8 f32 lanes; [`TILE`] is two such lanes).
+/// Exported so the batched-vs-per-learner differential tests can probe
+/// the ragged edges (`W − 1`, `W`, `W + 1`).
+pub const SIMD_WIDTH: usize = 8;
 
 /// Output-dimension register tile for the forward matmul: small enough
 /// to stay in vector registers, wide enough to keep SIMD lanes full.
-const TILE: usize = 16;
+const TILE: usize = 2 * SIMD_WIDTH;
+
+/// Row-block width of the batched kernels: one weight-row load is
+/// reused across this many batch rows (the registers hold a
+/// `ROW_BLOCK × TILE` accumulator panel).
+const ROW_BLOCK: usize = 4;
 
 /// Reusable per-learner working memory for the executor's hot path.
 /// One `Scratch` serves any (batch, layer-stack) shape — buffers grow
@@ -134,6 +148,151 @@ fn matmul_bias_into(
             or[o0..o0 + ow].copy_from_slice(&acc[..ow]);
             o0 += ow;
         }
+    }
+}
+
+/// `acc[..] += scale * row[..]` with the hot loop's exact `scale == 0`
+/// skip — the per-element accumulation the whole backend is built from.
+/// Under `fast-numerics` the skip is dropped and the multiply-add fuses
+/// (FMA): branchless and faster, but differently rounded, so the
+/// feature trades bit-equality for the tolerance-differential contract.
+#[inline(always)]
+fn lanes_axpy(acc: &mut [f32], scale: f32, row: &[f32]) {
+    #[cfg(not(feature = "fast-numerics"))]
+    {
+        if scale == 0.0 {
+            return;
+        }
+        for (a, &v) in acc.iter_mut().zip(row) {
+            *a += scale * v;
+        }
+    }
+    #[cfg(feature = "fast-numerics")]
+    for (a, &v) in acc.iter_mut().zip(row) {
+        *a = scale.mul_add(v, *a);
+    }
+}
+
+/// Row-blocked variant of [`matmul_bias_into`] for the batched path:
+/// a `ROW_BLOCK × TILE` accumulator panel keeps each weight-row load
+/// live across `ROW_BLOCK` batch rows instead of one. Per output
+/// element the accumulation is still bias-first then ascending `i` with
+/// the same `xi == 0` skip, so the default build is bit-identical to
+/// the scalar-row kernel (asserted in the tests below); `fast-numerics`
+/// swaps the inner step for fused multiply-adds via [`lanes_axpy`].
+fn matmul_bias_rows(
+    out: &mut [f32],
+    x: &[f32],
+    w: &[f32],
+    b: &[f32],
+    rows: usize,
+    in_d: usize,
+    out_d: usize,
+) {
+    debug_assert_eq!(x.len(), rows * in_d);
+    debug_assert_eq!(w.len(), in_d * out_d);
+    debug_assert_eq!(b.len(), out_d);
+    debug_assert_eq!(out.len(), rows * out_d);
+    let mut r0 = 0;
+    while r0 < rows {
+        let rb = ROW_BLOCK.min(rows - r0);
+        let mut o0 = 0;
+        while o0 < out_d {
+            let ow = TILE.min(out_d - o0);
+            let mut acc = [[0.0f32; TILE]; ROW_BLOCK];
+            for a in acc.iter_mut().take(rb) {
+                a[..ow].copy_from_slice(&b[o0..o0 + ow]);
+            }
+            for i in 0..in_d {
+                let wrow = &w[i * out_d + o0..i * out_d + o0 + ow];
+                for (rr, a) in acc.iter_mut().take(rb).enumerate() {
+                    lanes_axpy(&mut a[..ow], x[(r0 + rr) * in_d + i], wrow);
+                }
+            }
+            for (rr, a) in acc.iter().take(rb).enumerate() {
+                let orow = (r0 + rr) * out_d + o0;
+                out[orow..orow + ow].copy_from_slice(&a[..ow]);
+            }
+            o0 += ow;
+        }
+        r0 += rb;
+    }
+}
+
+/// Row-blocked weight-gradient accumulation for the batched path:
+/// `gw[i, ·] += Σ_r a[r, i] · delta[r, ·]`. The `gw` tile is loaded
+/// once per `ROW_BLOCK` rows instead of read-modified-written per row.
+/// Contributions land per element in ascending-`r` order with the hot
+/// loop's `ai == 0` skip — bit-identical to the per-learner sweep
+/// (under `fast-numerics`, FMA without the skip).
+fn grad_weights_rows(
+    gw: &mut [f32],
+    a_in: &[f32],
+    delta: &[f32],
+    rows: usize,
+    in_d: usize,
+    out_d: usize,
+) {
+    debug_assert_eq!(gw.len(), in_d * out_d);
+    debug_assert_eq!(a_in.len(), rows * in_d);
+    debug_assert_eq!(delta.len(), rows * out_d);
+    let mut r0 = 0;
+    while r0 < rows {
+        let rb = ROW_BLOCK.min(rows - r0);
+        for i in 0..in_d {
+            let mut o0 = 0;
+            while o0 < out_d {
+                let ow = TILE.min(out_d - o0);
+                let mut acc = [0.0f32; TILE];
+                acc[..ow].copy_from_slice(&gw[i * out_d + o0..i * out_d + o0 + ow]);
+                for rr in 0..rb {
+                    let dr = &delta[(r0 + rr) * out_d + o0..(r0 + rr) * out_d + o0 + ow];
+                    lanes_axpy(&mut acc[..ow], a_in[(r0 + rr) * in_d + i], dr);
+                }
+                gw[i * out_d + o0..i * out_d + o0 + ow].copy_from_slice(&acc[..ow]);
+                o0 += ow;
+            }
+        }
+        r0 += rb;
+    }
+}
+
+/// Batch-striped working memory for [`NativeExecutor::train_many`]:
+/// the PR-5 [`Scratch`] layout extended with a learner-stripe
+/// dimension. For a batch of `B` learners each buffer holds `B`
+/// contiguous stripes (`stripe b` = learner `b`'s rows), so one warmed
+/// `BatchScratch` serves every step of every epoch of every learner in
+/// the flush with **no heap allocation** — including the gathered
+/// minibatch (`x`/`y`/`mask`), which replaces the per-step `Vec`
+/// triple `Minibatches` allocates on the per-learner path.
+#[derive(Debug, Clone, Default)]
+pub struct BatchScratch {
+    /// Per-layer outputs, `B` stripes of `rows × out_d` each.
+    acts: Vec<Vec<f32>>,
+    /// dL/dz stripes of the layer being backpropagated.
+    delta: Vec<f32>,
+    /// dL/dz stripes of the layer below (swapped per layer).
+    prev: Vec<f32>,
+    /// Per-row softmax buffer (rows are processed serially, so one
+    /// buffer serves all stripes).
+    probs: Vec<f32>,
+    /// Gradients + transposed weights of the learner currently being
+    /// updated (consumed stripe-by-stripe, so not striped themselves).
+    gw: Vec<f32>,
+    gb: Vec<f32>,
+    wt: Vec<f32>,
+    /// Gathered minibatch stripes: learner `b`'s current `rows × f`
+    /// inputs, `rows × c` one-hots and `rows` mask.
+    x: Vec<f32>,
+    y: Vec<f32>,
+    mask: Vec<f32>,
+    /// Per-learner masked mean loss of the current step.
+    step_loss: Vec<f32>,
+}
+
+impl BatchScratch {
+    pub fn new() -> Self {
+        Self::default()
     }
 }
 
@@ -334,6 +493,284 @@ impl NativeExecutor {
             }
         }
         loss
+    }
+
+    /// Batched `τ`-epoch minibatch SGD over a **uniform** batch of
+    /// learner tasks (same `τ`, same shard length — mixed shapes are an
+    /// error; [`crate::runtime::Runtime::train_many`] splits mixed
+    /// flushes into uniform runs). Convenience wrapper over
+    /// [`Self::train_many_into`] with a fresh [`BatchScratch`].
+    pub fn train_many(
+        &self,
+        tasks: &[TrainTask<'_>],
+        data: &Dataset,
+        train_batch: usize,
+        lr: f32,
+    ) -> Result<Vec<TrainOutcome>> {
+        let mut s = BatchScratch::new();
+        self.train_many_into(&mut s, tasks, data, train_batch, lr)
+    }
+
+    /// [`Self::train_many`] through a caller-held [`BatchScratch`].
+    ///
+    /// Runs the whole batch **layer-synchronously**: per minibatch step
+    /// all learners' layer-`l` matmuls execute as one batched pass over
+    /// the stripe buffers ([`matmul_bias_rows`] /
+    /// [`grad_weights_rows`] — `ROW_BLOCK × TILE` register panels),
+    /// then the next layer. Each learner trains from its own parameter
+    /// snapshot on its own shard, and per learner the arithmetic is
+    /// **exactly** the [`crate::runtime::Runtime::train_epochs`]
+    /// sequence — same accumulation order, same zero-skips, same f64
+    /// loss averaging — so in the default build the outcome is
+    /// bit-identical to running the tasks one at a time, for every
+    /// batch size (the `rust/tests/batched_backend.rs` differential).
+    /// Under `fast-numerics` the batched kernels use FMA without the
+    /// zero-skips; results stay deterministic and batch-size-invariant
+    /// (the kernels are per-stripe), but differ from the default bits
+    /// within the tolerance contract.
+    ///
+    /// `τ = 0` or an empty shard reproduces the per-learner semantics:
+    /// the snapshot is returned untouched with a NaN loss.
+    pub fn train_many_into(
+        &self,
+        s: &mut BatchScratch,
+        tasks: &[TrainTask<'_>],
+        data: &Dataset,
+        train_batch: usize,
+        lr: f32,
+    ) -> Result<Vec<TrainOutcome>> {
+        let nb = tasks.len();
+        if nb == 0 {
+            return Ok(Vec::new());
+        }
+        ensure!(train_batch > 0, "train_batch must be positive");
+        let tau = tasks[0].tau;
+        let d = tasks[0].shard.len();
+        for (i, t) in tasks.iter().enumerate() {
+            ensure!(
+                t.tau == tau && t.shard.len() == d,
+                "train_many requires a uniform batch: task {i} is (tau={}, d={}) vs task 0 (tau={tau}, d={d})",
+                t.tau,
+                t.shard.len()
+            );
+            self.check_params(t.params);
+        }
+        let mut outs: Vec<TrainOutcome> = tasks
+            .iter()
+            .map(|t| TrainOutcome { params: t.params.clone(), train_loss: f32::NAN })
+            .collect();
+        if tau == 0 || d == 0 {
+            return Ok(outs);
+        }
+        let f = data.features;
+        let c = *self.dims.last().unwrap();
+        ensure!(f == self.dims[0], "dataset features {f} != input dim {}", self.dims[0]);
+        ensure!(data.classes == c, "dataset classes {} != output dim {c}", data.classes);
+
+        let b = train_batch;
+        let steps = d.div_ceil(b);
+        let mut loss_sum = vec![0.0f64; nb];
+        for _epoch in 0..tau {
+            for v in loss_sum.iter_mut() {
+                *v = 0.0;
+            }
+            for step in 0..steps {
+                let lo = step * b;
+                let real = (d - lo).min(b);
+                self.gather_batch(s, tasks, data, lo, real, b);
+                self.train_step_batched(s, &mut outs, b, lr);
+                for (ls, &l) in loss_sum.iter_mut().zip(&s.step_loss) {
+                    *ls += l as f64;
+                }
+            }
+        }
+        for (o, &ls) in outs.iter_mut().zip(&loss_sum) {
+            o.train_loss = (ls / steps as f64) as f32;
+        }
+        Ok(outs)
+    }
+
+    /// Gather every learner's current minibatch into the stripe buffers
+    /// — exactly the rows, one-hots and mask `Minibatches` would have
+    /// produced for `shard[lo..lo + real]` padded to `b` rows, minus
+    /// the three per-step `Vec` allocations.
+    fn gather_batch(
+        &self,
+        s: &mut BatchScratch,
+        tasks: &[TrainTask<'_>],
+        data: &Dataset,
+        lo: usize,
+        real: usize,
+        b: usize,
+    ) {
+        let nb = tasks.len();
+        let f = data.features;
+        let c = data.classes;
+        s.x.resize(nb * b * f, 0.0);
+        // one-hots and mask are cheap to clear fully; x only needs its
+        // pad rows re-zeroed (real rows are overwritten below, pad rows
+        // from earlier steps were already zero)
+        zeroed(&mut s.y, nb * b * c);
+        zeroed(&mut s.mask, nb * b);
+        for (bi, t) in tasks.iter().enumerate() {
+            let xs = &mut s.x[bi * b * f..(bi + 1) * b * f];
+            xs[real * f..].fill(0.0);
+            let ys = &mut s.y[bi * b * c..(bi + 1) * b * c];
+            let ms = &mut s.mask[bi * b..(bi + 1) * b];
+            for (row, &idx) in t.shard[lo..lo + real].iter().enumerate() {
+                xs[row * f..(row + 1) * f].copy_from_slice(data.row(idx as usize));
+                ys[row * c + data.y[idx as usize] as usize] = 1.0;
+                ms[row] = 1.0;
+            }
+        }
+    }
+
+    /// One layer-synchronous batched SGD step over all stripes: the
+    /// [`Self::train_step_into`] control flow with the learner loop
+    /// pulled inside each per-layer phase. Per-learner masked mean
+    /// losses land in `s.step_loss`.
+    fn train_step_batched(&self, s: &mut BatchScratch, outs: &mut [TrainOutcome], rows: usize, lr: f32) {
+        let nb = outs.len();
+        let l_count = self.layers();
+        let c = *self.dims.last().unwrap();
+
+        // batched forward: one pass per layer across all stripes
+        {
+            let BatchScratch { acts, x, .. } = s;
+            while acts.len() < l_count {
+                acts.push(Vec::new());
+            }
+            for l in 0..l_count {
+                let (in_d, out_d) = (self.dims[l], self.dims[l + 1]);
+                let (below, rest) = acts.split_at_mut(l);
+                let z = &mut rest[0];
+                z.resize(nb * rows * out_d, 0.0);
+                for (bi, o) in outs.iter().enumerate() {
+                    let input: &[f32] = if l == 0 {
+                        &x[bi * rows * in_d..(bi + 1) * rows * in_d]
+                    } else {
+                        &below[l - 1][bi * rows * in_d..(bi + 1) * rows * in_d]
+                    };
+                    matmul_bias_rows(
+                        &mut z[bi * rows * out_d..(bi + 1) * rows * out_d],
+                        input,
+                        &o.params[2 * l],
+                        &o.params[2 * l + 1],
+                        rows,
+                        in_d,
+                        out_d,
+                    );
+                }
+                if l + 1 < l_count {
+                    for v in z.iter_mut() {
+                        if *v < 0.0 {
+                            *v = 0.0;
+                        }
+                    }
+                }
+            }
+        }
+
+        // per-stripe softmax-CE loss + dL/dlogits
+        {
+            let BatchScratch { acts, delta, probs, mask, y, step_loss, .. } = s;
+            zeroed(delta, nb * rows * c);
+            zeroed(probs, c);
+            zeroed(step_loss, nb);
+            let logits = &acts[l_count - 1];
+            for bi in 0..nb {
+                let mrow = &mask[bi * rows..(bi + 1) * rows];
+                let mask_sum: f32 = mrow.iter().sum();
+                debug_assert!(mask_sum > 0.0, "all-padded stripe");
+                let inv = 1.0 / mask_sum;
+                let mut loss = 0.0f64;
+                for r in 0..rows {
+                    if mrow[r] == 0.0 {
+                        continue;
+                    }
+                    let yr = &y[(bi * rows + r) * c..(bi * rows + r + 1) * c];
+                    let label = yr
+                        .iter()
+                        .position(|&v| v == 1.0)
+                        .expect("one-hot row without a label");
+                    loss += Self::row_loss(
+                        &logits[(bi * rows + r) * c..(bi * rows + r + 1) * c],
+                        label,
+                        probs,
+                    ) as f64;
+                    let dr = &mut delta[(bi * rows + r) * c..(bi * rows + r + 1) * c];
+                    for j in 0..c {
+                        dr[j] = (probs[j] - yr[j]) * inv;
+                    }
+                }
+                step_loss[bi] = (loss * inv as f64) as f32;
+            }
+        }
+
+        // batched backward + in-place SGD, layer by layer from the top;
+        // within a layer each stripe computes gw/gb, backprops its delta
+        // and updates its own parameters — the per-learner order — with
+        // the row-blocked gradient kernel.
+        let BatchScratch { acts, delta, prev, gw, gb, wt, x, .. } = s;
+        for l in (0..l_count).rev() {
+            let (in_d, out_d) = (self.dims[l], self.dims[l + 1]);
+            if l > 0 {
+                zeroed(prev, nb * rows * in_d);
+            }
+            for (bi, o) in outs.iter_mut().enumerate() {
+                let dstripe = &delta[bi * rows * out_d..(bi + 1) * rows * out_d];
+                let astripe: &[f32] = if l == 0 {
+                    &x[bi * rows * in_d..(bi + 1) * rows * in_d]
+                } else {
+                    &acts[l - 1][bi * rows * in_d..(bi + 1) * rows * in_d]
+                };
+                zeroed(gw, in_d * out_d);
+                zeroed(gb, out_d);
+                for r in 0..rows {
+                    let dr = &dstripe[r * out_d..(r + 1) * out_d];
+                    for (g, &dv) in gb.iter_mut().zip(dr) {
+                        *g += dv;
+                    }
+                }
+                grad_weights_rows(gw, astripe, dstripe, rows, in_d, out_d);
+                if l > 0 {
+                    let w = &o.params[2 * l];
+                    wt.resize(in_d * out_d, 0.0); // fully overwritten below
+                    for i in 0..in_d {
+                        let wrow = &w[i * out_d..(i + 1) * out_d];
+                        for (oj, &wio) in wrow.iter().enumerate() {
+                            wt[oj * in_d + i] = wio;
+                        }
+                    }
+                    let pstripe = &mut prev[bi * rows * in_d..(bi + 1) * rows * in_d];
+                    for r in 0..rows {
+                        let dr = &dstripe[r * out_d..(r + 1) * out_d];
+                        let ar = &astripe[r * in_d..(r + 1) * in_d];
+                        let pr = &mut pstripe[r * in_d..(r + 1) * in_d];
+                        for (j, &dj) in dr.iter().enumerate() {
+                            let wtr = &wt[j * in_d..(j + 1) * in_d];
+                            for (p, &wv) in pr.iter_mut().zip(wtr) {
+                                *p += wv * dj;
+                            }
+                        }
+                        for (p, &ai) in pr.iter_mut().zip(ar) {
+                            if ai <= 0.0 {
+                                *p = 0.0;
+                            }
+                        }
+                    }
+                }
+                for (p, &g) in o.params[2 * l].iter_mut().zip(gw.iter()) {
+                    *p -= lr * g;
+                }
+                for (p, &g) in o.params[2 * l + 1].iter_mut().zip(gb.iter()) {
+                    *p -= lr * g;
+                }
+            }
+            if l > 0 {
+                std::mem::swap(delta, prev);
+            }
+        }
     }
 
     /// One eval minibatch; mirrors the AOT `eval_step` contract:

@@ -40,7 +40,7 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex, OnceLock};
 use std::thread::JoinHandle;
 
-use anyhow::Result;
+use anyhow::{ensure, Result};
 
 /// Type-erased pointer to the batch closure currently published to the
 /// workers. Validity is guaranteed by the completion barrier in
@@ -334,6 +334,35 @@ impl ThreadPool {
     {
         self.map(n, f).into_iter().collect()
     }
+
+    /// Batched fan-out shape: split `n` items into contiguous
+    /// `chunk`-sized ranges, run `f(lo, hi)` per range (each job returns
+    /// the results for items `lo..hi`, in order) and hand back the
+    /// flattened `Vec` in item order. This is the shape the batched
+    /// `train_many` flush and pooled evaluation use — one job amortizes
+    /// a warmed scratch (or one batched kernel invocation) over its
+    /// whole range instead of paying per-item setup. Error selection
+    /// follows [`Self::try_map`]: first failing *chunk* in range order.
+    pub fn try_map_chunked<T, F>(&self, n: usize, chunk: usize, f: F) -> Result<Vec<T>>
+    where
+        T: Send,
+        F: Fn(usize, usize) -> Result<Vec<T>> + Sync,
+    {
+        let chunk = chunk.max(1);
+        let jobs = n.div_ceil(chunk);
+        let parts = self.try_map(jobs, |j| {
+            let lo = j * chunk;
+            let hi = (lo + chunk).min(n);
+            let out = f(lo, hi)?;
+            ensure!(
+                out.len() == hi - lo,
+                "chunked job [{lo}, {hi}) returned {} results",
+                out.len()
+            );
+            Ok(out)
+        })?;
+        Ok(parts.into_iter().flatten().collect())
+    }
 }
 
 #[cfg(test)]
@@ -395,6 +424,39 @@ mod tests {
         assert_eq!(err.to_string(), "job 23 failed");
         let ok = pool.try_map(10, |i| Ok(i * 2)).unwrap();
         assert_eq!(ok, (0..20).step_by(2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn try_map_chunked_flattens_in_item_order() {
+        for threads in [1usize, 2, 8] {
+            let pool = ThreadPool::new(threads);
+            for (n, chunk) in [(0usize, 3usize), (1, 3), (7, 3), (9, 3), (64, 5), (10, 100)] {
+                let out = pool
+                    .try_map_chunked(n, chunk, |lo, hi| Ok((lo..hi).map(|i| i * 7).collect()))
+                    .unwrap();
+                let expect: Vec<usize> = (0..n).map(|i| i * 7).collect();
+                assert_eq!(out, expect, "threads={threads} n={n} chunk={chunk}");
+            }
+        }
+    }
+
+    #[test]
+    fn try_map_chunked_rejects_short_chunks_and_surfaces_errors() {
+        let pool = ThreadPool::new(4);
+        let err = pool
+            .try_map_chunked(10, 4, |lo, hi| {
+                if lo == 4 {
+                    Err(anyhow::anyhow!("chunk at {lo} failed"))
+                } else {
+                    Ok((lo..hi).collect())
+                }
+            })
+            .unwrap_err();
+        assert_eq!(err.to_string(), "chunk at 4 failed");
+        let err = pool
+            .try_map_chunked(10, 4, |lo, _hi| Ok(vec![lo]))
+            .unwrap_err();
+        assert!(err.to_string().contains("returned 1 results"), "{err}");
     }
 
     #[test]

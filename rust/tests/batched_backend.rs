@@ -1,0 +1,273 @@
+//! Batched `train_many` backend — differential tests against the
+//! scalar per-task path.
+//!
+//! The batched native kernels stack same-shape learner steps into
+//! register-blocked, SIMD-width-tiled panels, but run one **stripe per
+//! learner** per layer: each task's per-element accumulation order is
+//! exactly the scalar `train_step_into` order. That makes the default
+//! build bitwise identical to the per-task loop, and makes every task's
+//! outcome independent of what else shares its batch — which is the
+//! invariant the `fast-numerics` build still has to keep (reassociation
+//! and FMA may move individual bits, never batch-composition bits).
+
+use asyncmel::aggregation::ParamSet;
+use asyncmel::data::{synth, Dataset, SynthConfig};
+use asyncmel::runtime::native::{NativeExecutor, SIMD_WIDTH};
+use asyncmel::runtime::{Executor, Runtime, Scratch, TrainTask};
+use asyncmel::sim::Rng;
+
+const DIMS: [usize; 3] = [36, 16, 4];
+const LR: f32 = 0.1;
+const TRAIN_BATCH: usize = 32;
+
+fn tiny_data() -> Dataset {
+    synth::generate(&SynthConfig {
+        side: 6,
+        classes: 4,
+        train: 480,
+        test: 32,
+        noise_std: 0.5,
+        ..SynthConfig::default()
+    })
+    .train
+}
+
+fn he_params(dims: &[usize], rng: &mut Rng) -> ParamSet {
+    let mut out = Vec::new();
+    for l in 0..dims.len() - 1 {
+        let std = (2.0 / dims[l] as f64).sqrt();
+        out.push((0..dims[l] * dims[l + 1]).map(|_| rng.normal_ms(0.0, std) as f32).collect());
+        out.push(vec![0.0f32; dims[l + 1]]);
+    }
+    out
+}
+
+/// `nb` distinct (params, shard) pairs with a common `(τ, d)` shape.
+/// Shards overlap and are deliberately non-contiguous.
+fn uniform_tasks(nb: usize, d: usize, rng: &mut Rng, data: &Dataset) -> Vec<(ParamSet, Vec<u32>)> {
+    let n = data.x.len() / data.features;
+    (0..nb)
+        .map(|_| {
+            let params = he_params(&DIMS, rng);
+            let shard: Vec<u32> = (0..d).map(|_| rng.below(n as u64) as u32).collect();
+            (params, shard)
+        })
+        .collect()
+}
+
+fn scalar_outcomes(
+    exec: &NativeExecutor,
+    owned: &[(ParamSet, Vec<u32>)],
+    tau: u64,
+    data: &Dataset,
+) -> Vec<(ParamSet, f32)> {
+    let mut scratch = Scratch::new();
+    owned
+        .iter()
+        .map(|(p, shard)| {
+            let mut local = p.clone();
+            let loss = Executor::train_epochs_into(
+                exec,
+                &mut scratch,
+                &mut local,
+                data,
+                shard,
+                tau,
+                TRAIN_BATCH,
+                LR,
+            )
+            .unwrap();
+            (local, loss)
+        })
+        .collect()
+}
+
+fn assert_params_bitwise(a: &ParamSet, b: &ParamSet, what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: tensor count");
+    for (ti, (ta, tb)) in a.iter().zip(b).enumerate() {
+        assert_eq!(ta.len(), tb.len(), "{what}: tensor {ti} len");
+        for (vi, (va, vb)) in ta.iter().zip(tb).enumerate() {
+            assert_eq!(va.to_bits(), vb.to_bits(), "{what}: tensor {ti}[{vi}]: {va} vs {vb}");
+        }
+    }
+}
+
+/// Max relative (floored by absolute) elementwise divergence.
+#[cfg(feature = "fast-numerics")]
+fn max_rel_err(a: &ParamSet, b: &ParamSet) -> f64 {
+    let mut worst = 0.0f64;
+    for (ta, tb) in a.iter().zip(b) {
+        for (&va, &vb) in ta.iter().zip(tb) {
+            let denom = va.abs().max(vb.abs()).max(1e-3) as f64;
+            worst = worst.max(((va - vb).abs() as f64) / denom);
+        }
+    }
+    worst
+}
+
+/// Ragged batch sizes around the SIMD width: the stripe loop must not
+/// care whether a flush fills a register panel.
+#[cfg(not(feature = "fast-numerics"))]
+#[test]
+fn batched_train_many_is_bitwise_identical_to_the_per_task_loop() {
+    let data = tiny_data();
+    let exec = NativeExecutor::new(&DIMS);
+    let mut rng = Rng::new(0xBA7C_4ED0);
+    let full_flush = 24; // a realistic coalesced flush
+    for nb in [1usize, 2, SIMD_WIDTH - 1, SIMD_WIDTH, SIMD_WIDTH + 1, full_flush] {
+        for (tau, d) in [(1u64, 48usize), (3, 37)] {
+            let owned = uniform_tasks(nb, d, &mut rng, &data);
+            let tasks: Vec<TrainTask<'_>> = owned
+                .iter()
+                .map(|(p, s)| TrainTask { params: p, shard: s, tau })
+                .collect();
+            let batched = exec.train_many(&tasks, &data, TRAIN_BATCH, LR).unwrap();
+            let scalar = scalar_outcomes(&exec, &owned, tau, &data);
+            assert_eq!(batched.len(), nb);
+            for (i, (got, (want_p, want_l))) in batched.iter().zip(&scalar).enumerate() {
+                assert_eq!(
+                    got.train_loss.to_bits(),
+                    want_l.to_bits(),
+                    "nb={nb} τ={tau} d={d}: task {i} loss"
+                );
+                assert_params_bitwise(
+                    &got.params,
+                    want_p,
+                    &format!("nb={nb} τ={tau} d={d}: task {i}"),
+                );
+            }
+        }
+    }
+}
+
+/// Every task's outcome must be independent of its batch-mates — in
+/// BOTH builds. `fast-numerics` may reassociate within a stripe, but a
+/// stripe only ever holds one learner, so batch-of-1 == batch-of-N
+/// bitwise even there. This is what keeps the engine's coalescing
+/// determinism tests honest under the relaxed feature.
+#[test]
+fn task_outcomes_are_invariant_to_batch_composition() {
+    let data = tiny_data();
+    let exec = NativeExecutor::new(&DIMS);
+    let mut rng = Rng::new(0x1D0_CAFE);
+    let owned = uniform_tasks(SIMD_WIDTH + 3, 41, &mut rng, &data);
+    let tasks: Vec<TrainTask<'_>> = owned
+        .iter()
+        .map(|(p, s)| TrainTask { params: p, shard: s, tau: 2 })
+        .collect();
+    let together = exec.train_many(&tasks, &data, TRAIN_BATCH, LR).unwrap();
+    for (i, t) in tasks.iter().enumerate() {
+        let alone = exec.train_many(std::slice::from_ref(t), &data, TRAIN_BATCH, LR).unwrap();
+        assert_eq!(
+            alone[0].train_loss.to_bits(),
+            together[i].train_loss.to_bits(),
+            "task {i}: loss changed with batch composition"
+        );
+        assert_params_bitwise(
+            &alone[0].params,
+            &together[i].params,
+            &format!("task {i} vs batch"),
+        );
+    }
+}
+
+/// The raw executor entry point rejects mixed shapes; the `Runtime`
+/// wrapper splits them into uniform groups and returns task-order
+/// results identical to the per-task loop.
+#[test]
+fn mixed_shape_flushes_error_raw_but_split_through_the_runtime() {
+    let data = tiny_data();
+    let exec = NativeExecutor::new(&DIMS);
+    let mut rng = Rng::new(0x3A5E_D00D);
+    let owned_a = uniform_tasks(3, 40, &mut rng, &data);
+    let owned_b = uniform_tasks(2, 25, &mut rng, &data);
+    let mixed: Vec<TrainTask<'_>> = owned_a
+        .iter()
+        .map(|(p, s)| TrainTask { params: p, shard: s, tau: 2 })
+        .chain(owned_b.iter().map(|(p, s)| TrainTask { params: p, shard: s, tau: 1 }))
+        .collect();
+
+    let err = exec.train_many(&mixed, &data, TRAIN_BATCH, LR).unwrap_err();
+    assert!(
+        err.to_string().contains("uniform batch"),
+        "unexpected mixed-shape error: {err}"
+    );
+
+    let rt = Runtime::native(&DIMS, TRAIN_BATCH, 48);
+    let outs = rt.train_many(&mixed, &data, LR).unwrap();
+    assert_eq!(outs.len(), mixed.len());
+    let mut scratch = Scratch::new();
+    for (i, (t, got)) in mixed.iter().zip(&outs).enumerate() {
+        let mut want = t.params.clone();
+        let want_l = rt
+            .train_epochs_into(&mut scratch, &mut want, &data, t.shard, t.tau, LR)
+            .unwrap();
+        assert_eq!(got.train_loss.to_bits(), want_l.to_bits(), "mixed task {i}: loss");
+        assert_params_bitwise(&got.params, &want, &format!("mixed task {i}"));
+    }
+}
+
+/// τ = 0 and empty shards short-circuit to (snapshot clone, NaN loss)
+/// exactly like `Learner::run_cycle`'s infeasible branch.
+#[test]
+fn infeasible_tasks_return_the_snapshot_untouched() {
+    let data = tiny_data();
+    let exec = NativeExecutor::new(&DIMS);
+    let mut rng = Rng::new(0xF0_0D5);
+    let owned = uniform_tasks(3, 30, &mut rng, &data);
+    let empty: Vec<u32> = Vec::new();
+
+    // uniform τ=0 group straight through the executor
+    let tasks: Vec<TrainTask<'_>> = owned
+        .iter()
+        .map(|(p, s)| TrainTask { params: p, shard: s, tau: 0 })
+        .collect();
+    for (got, (snap, _)) in exec.train_many(&tasks, &data, TRAIN_BATCH, LR).unwrap().iter().zip(&owned) {
+        assert!(got.train_loss.is_nan());
+        assert_params_bitwise(&got.params, snap, "τ=0 snapshot");
+    }
+
+    // empty shard (d=0, τ>0) mixed with real work through the Runtime
+    let mixed = [
+        TrainTask { params: &owned[0].0, shard: &empty, tau: 2 },
+        TrainTask { params: &owned[1].0, shard: &owned[1].1, tau: 2 },
+    ];
+    let rt = Runtime::native(&DIMS, TRAIN_BATCH, 48);
+    let outs = rt.train_many(&mixed, &data, LR).unwrap();
+    assert!(outs[0].train_loss.is_nan());
+    assert_params_bitwise(&outs[0].params, &owned[0].0, "d=0 snapshot");
+    assert!(outs[1].train_loss.is_finite());
+}
+
+/// Tolerance contract for the relaxed build: FMA/reassociation may move
+/// low-order bits against the scalar oracle, but the result must stay a
+/// tight numerical neighbour — and the loss must track it.
+#[cfg(feature = "fast-numerics")]
+#[test]
+fn fast_numerics_stays_within_tolerance_of_the_scalar_oracle() {
+    let data = tiny_data();
+    let exec = NativeExecutor::new(&DIMS);
+    let mut rng = Rng::new(0xFA57_0001);
+    for (nb, tau, d) in [(SIMD_WIDTH, 2u64, 48usize), (13, 3, 37)] {
+        let owned = uniform_tasks(nb, d, &mut rng, &data);
+        let tasks: Vec<TrainTask<'_>> = owned
+            .iter()
+            .map(|(p, s)| TrainTask { params: p, shard: s, tau })
+            .collect();
+        let batched = exec.train_many(&tasks, &data, TRAIN_BATCH, LR).unwrap();
+        let scalar = scalar_outcomes(&exec, &owned, tau, &data);
+        for (i, (got, (want_p, want_l))) in batched.iter().zip(&scalar).enumerate() {
+            let rel = max_rel_err(&got.params, want_p);
+            assert!(
+                rel < 1e-4,
+                "nb={nb} τ={tau}: task {i} params drifted {rel:.3e} from scalar"
+            );
+            let dl = (got.train_loss - want_l).abs();
+            assert!(
+                dl < 1e-4 * want_l.abs().max(1.0),
+                "nb={nb} τ={tau}: task {i} loss {} vs scalar {want_l}",
+                got.train_loss
+            );
+        }
+    }
+}

@@ -53,12 +53,14 @@ fn opts() -> TrainOptions {
 }
 
 /// One async real-numerics run; `epsilon = None` selects the per-event
-/// oracle path.
-fn run_async(
+/// oracle path. `per_learner` disables the batched `train_many` flushes
+/// (the scalar train oracle).
+fn run_async_with(
     epsilon: Option<f64>,
     threads: usize,
     churn: ChurnConfig,
     faults: Option<FaultModel>,
+    per_learner: bool,
 ) -> (String, Option<ParamSet>) {
     let rt = Runtime::native(&DIMS, 32, 48);
     let (mut scenario, ds) = tiny_world(6, churn, SEED);
@@ -74,6 +76,9 @@ fn run_async(
         Some(e) => engine.with_epsilon_window(e).unwrap(),
         None => engine.with_per_event_dispatch(),
     };
+    if per_learner {
+        engine = engine.with_per_learner_train();
+    }
     if let Some(f) = faults {
         engine = engine.with_faults(f);
     }
@@ -84,6 +89,15 @@ fn run_async(
         })
         .unwrap();
     (record_digest(&records), params)
+}
+
+fn run_async(
+    epsilon: Option<f64>,
+    threads: usize,
+    churn: ChurnConfig,
+    faults: Option<FaultModel>,
+) -> (String, Option<ParamSet>) {
+    run_async_with(epsilon, threads, churn, faults, false)
 }
 
 #[test]
@@ -162,11 +176,12 @@ fn nonzero_epsilon_is_deterministic_and_thread_invariant() {
 }
 
 /// Multi-model run with the given dispatch mode.
-fn run_multi(
+fn run_multi_with(
     epsilon: Option<f64>,
     threads: usize,
     scheduler: SchedulerKind,
     buffer: usize,
+    per_learner: bool,
 ) -> String {
     let rt = Runtime::native(&DIMS, 32, 48);
     let (mut scenario, ds) = tiny_world(6, ChurnConfig::new(0.1, 90.0), SEED);
@@ -182,12 +197,24 @@ fn run_multi(
         Some(e) => engine.with_epsilon_window(e).unwrap(),
         None => engine.with_per_event_dispatch(),
     };
+    if per_learner {
+        engine = engine.with_per_learner_train();
+    }
     let mm_opts = MultiModelOptions {
         train: opts(),
         multi: MultiModelConfig::new(2, buffer, scheduler),
         ..Default::default()
     };
     report_digest(&engine.run_multi(&mm_opts).unwrap())
+}
+
+fn run_multi(
+    epsilon: Option<f64>,
+    threads: usize,
+    scheduler: SchedulerKind,
+    buffer: usize,
+) -> String {
+    run_multi_with(epsilon, threads, scheduler, buffer, false)
 }
 
 #[test]
@@ -215,6 +242,76 @@ fn multimodel_nonzero_epsilon_is_thread_invariant() {
             serial,
             run_multi(Some(eps), 8, SchedulerKind::StalenessGreedy, 2),
             "multi-model ε={eps} diverged across thread counts"
+        );
+    }
+}
+
+/// The batched `train_many` flushes (the default) must be byte-identical
+/// to the scalar per-learner `run_cycle` path — full record stream and
+/// final parameters — across dispatch modes, ε-windows and thread
+/// counts. Bitwise by construction only in the default build: the
+/// `fast-numerics` feature deliberately relaxes the batched side to the
+/// tolerance contract (`rust/tests/batched_backend.rs`), so this suite
+/// is compiled out there.
+#[cfg(not(feature = "fast-numerics"))]
+#[test]
+fn batched_flushes_match_the_per_learner_train_oracle_byte_for_byte() {
+    let churn = ChurnConfig::new(0.1, 90.0);
+    for (eps, threads) in [(None, 1usize), (Some(0.0), 1), (Some(2.0), 1), (Some(2.0), 8)] {
+        let (db, pb) = run_async_with(eps, threads, churn, None, false);
+        let (dp, pp) = run_async_with(eps, threads, churn, None, true);
+        assert_eq!(db, dp, "batched records diverged (ε={eps:?}, threads={threads})");
+        assert_eq!(pb, pp, "batched params diverged (ε={eps:?}, threads={threads})");
+    }
+}
+
+#[cfg(not(feature = "fast-numerics"))]
+#[test]
+fn batched_flushes_match_the_per_learner_oracle_under_faults_and_barrier() {
+    // faults thin the flush to ragged batch sizes; the barrier policy
+    // exercises the dispatch_cycle batching instead of flush_plans
+    let faults = FaultModel::new(0.25, 0.2, 1.5);
+    let (db, pb) = run_async_with(Some(0.0), 8, ChurnConfig::disabled(), Some(faults), false);
+    let (dp, pp) = run_async_with(Some(0.0), 8, ChurnConfig::disabled(), Some(faults), true);
+    assert_eq!(db, dp);
+    assert_eq!(pb, pp);
+
+    let barrier = |per_learner: bool| {
+        let rt = Runtime::native(&DIMS, 32, 48);
+        let (scenario, ds) = tiny_world(6, ChurnConfig::disabled(), SEED);
+        let mut engine = EventEngine::new(
+            scenario,
+            AllocatorKind::Eta,
+            AggregationRule::FedAvg,
+            ExecMode::Real { runtime: &rt, train: ds.train, test: ds.test },
+        )
+        .unwrap();
+        if per_learner {
+            engine = engine.with_per_learner_train();
+        }
+        let (records, params) = engine
+            .run_with_params(&EngineOptions { train: opts(), policy: EnginePolicy::Barrier })
+            .unwrap();
+        (record_digest(&records), params)
+    };
+    let (db, pb) = barrier(false);
+    let (dp, pp) = barrier(true);
+    assert_eq!(db, dp, "barrier-mode batched records diverged from per-learner");
+    assert_eq!(pb, pp, "barrier-mode batched params diverged from per-learner");
+}
+
+#[cfg(not(feature = "fast-numerics"))]
+#[test]
+fn multimodel_batched_flushes_match_the_per_learner_oracle() {
+    for (eps, threads, sched, buffer) in [
+        (Some(0.0), 1usize, SchedulerKind::Static, 2usize),
+        (Some(5.0), 8, SchedulerKind::RoundRobin, 1),
+    ] {
+        let batched = run_multi_with(eps, threads, sched, buffer, false);
+        let scalar = run_multi_with(eps, threads, sched, buffer, true);
+        assert_eq!(
+            batched, scalar,
+            "multi-model batched flushes diverged (ε={eps:?}, threads={threads})"
         );
     }
 }

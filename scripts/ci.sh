@@ -8,6 +8,9 @@
 #   scripts/ci.sh lint     cargo fmt --check + clippy -D warnings
 #   scripts/ci.sh test     cargo build --release, cargo test -q,
 #                          cargo build --benches, python tests
+#   scripts/ci.sh fast-numerics
+#                          cargo check --all-targets plus the tolerance +
+#                          determinism suites under --features fast-numerics
 #   scripts/ci.sh bench    every bench target in --smoke config writing
 #                          BENCH_<name>.json, then the regression gate
 #                          (scripts/bench_check.sh vs rust/benches/baseline.json,
@@ -104,6 +107,21 @@ run_serve_smoke() {
   echo "serve smoke OK: restored run is bit-identical ($(cat "$work/ref/out/smoke.digest"))"
 }
 
+# fast-numerics stage: the relaxed batched kernels must still compile
+# everywhere and hold the tolerance + batch-invariance contract
+# (rust/tests/batched_backend.rs; the bitwise differentials are
+# compiled out under this feature by design).
+run_fast_numerics() {
+  echo "=== fast-numerics: cargo check --all-targets ==="
+  cargo check --all-targets --features fast-numerics
+
+  echo "=== fast-numerics: tolerance suite (batched_backend) ==="
+  cargo test -q --features fast-numerics --test batched_backend
+
+  echo "=== fast-numerics: engine coalescing determinism ==="
+  cargo test -q --features fast-numerics --test coalescing
+}
+
 run_bench() {
   echo "=== bench gate selftest (3x slowdown must fail) ==="
   bash scripts/bench_check.sh --selftest
@@ -147,15 +165,17 @@ case "$STAGE" in
   lint) run_lint ;;
   test) run_test ;;
   serve-smoke) run_serve_smoke ;;
+  fast-numerics) run_fast_numerics ;;
   bench) run_bench ;;
   bench-full) run_bench_full ;;
   all)
     run_lint
     run_test
+    run_fast_numerics
     run_bench
     ;;
   *)
-    echo "usage: scripts/ci.sh [all|lint|test|serve-smoke|bench|bench-full]" >&2
+    echo "usage: scripts/ci.sh [all|lint|test|serve-smoke|fast-numerics|bench|bench-full]" >&2
     exit 2
     ;;
 esac
