@@ -1,0 +1,117 @@
+//! Bench for the **energy-constrained fleet**: budgeted allocation and
+//! battery-driven churn on the event engine.
+//!
+//! `cargo bench --bench energy_fleet` does two things:
+//! 1. verifies the energy contracts end-to-end (skipped under
+//!    `--smoke`; also asserted in `rust/tests/energy_path.rs`):
+//!    a budget-∞ run is byte-identical to a run that never touches the
+//!    energy path, and battery-driven churn is bit-identical across
+//!    `--shards {1, 8}`;
+//! 2. times a K = 5000 phantom async fleet (a) with a finite
+//!    per-learner budget routing every re-solve through the
+//!    energy-feasible clipping wrapper, and (b) with batteries + duty
+//!    cycling, where every dispatch bills a battery and depletion
+//!    feeds Leave/Rejoin back through the churn path.
+//!
+//! Passthrough flags: `--smoke` (fast CI config), `--json PATH`
+//! (machine-readable results; see scripts/bench_check.sh).
+
+use asyncmel::aggregation::{AggregationRule, AsyncAggregator};
+use asyncmel::allocation::AllocatorKind;
+use asyncmel::benchkit::{group, BenchConfig, BenchRun};
+use asyncmel::config::{ChurnConfig, EnergyConfig, ScenarioConfig};
+use asyncmel::coordinator::{
+    record_digest, EngineOptions, EnginePolicy, EventEngine, ExecMode, TrainOptions,
+};
+
+const K: usize = 5000;
+const CYCLES: usize = 6;
+
+/// A cap that clamps the 2–3 GHz laptop class (~20 J work-conserving
+/// rounds at the paper defaults) but not the embedded class (~0.5 J).
+const BUDGET_J: f64 = 12.0;
+
+fn battery_cfg() -> EnergyConfig {
+    EnergyConfig {
+        battery_lo_j: 40.0,
+        battery_hi_j: 80.0,
+        battery_floor_j: 0.5,
+        recharge_s: 30.0,
+        ..EnergyConfig::disabled()
+    }
+}
+
+fn engine(energy: Option<EnergyConfig>, shards: usize) -> EventEngine<'static> {
+    let mut base = ScenarioConfig::paper_default()
+        .with_learners(K)
+        .with_churn(ChurnConfig::new(1.0, 120.0));
+    if let Some(e) = energy {
+        base = base.with_energy(e).unwrap();
+    }
+    EventEngine::new(
+        base.build(),
+        AllocatorKind::Eta,
+        AggregationRule::FedAvg,
+        ExecMode::Phantom,
+    )
+    .unwrap()
+    .with_shards(shards)
+}
+
+fn opts() -> EngineOptions {
+    EngineOptions {
+        train: TrainOptions { cycles: CYCLES, ..Default::default() },
+        policy: EnginePolicy::Async(AsyncAggregator::default()),
+    }
+}
+
+fn verify_contracts() {
+    println!("\n========== ENERGY FLEET — contract checks ==========");
+    // budget-∞ must be byte-identical to the energy-free path
+    let bare = record_digest(&engine(None, 1).run(&opts()).unwrap());
+    let inf = EnergyConfig { budget_j: f64::INFINITY, ..EnergyConfig::disabled() };
+    let unconstrained = record_digest(&engine(Some(inf), 1).run(&opts()).unwrap());
+    assert_eq!(bare, unconstrained, "budget-∞ diverged from the unconstrained oracle");
+    println!("budget-∞ oracle {} — byte-identical", &bare[..16]);
+
+    // battery-driven churn must be bit-identical across shard counts
+    let mut flat = engine(Some(battery_cfg()), 1);
+    let flat_digest = record_digest(&flat.run(&opts()).unwrap());
+    let flat_stats = flat.stats;
+    let mut sharded = engine(Some(battery_cfg()), 8);
+    let sharded_digest = record_digest(&sharded.run(&opts()).unwrap());
+    assert_eq!(flat_digest, sharded_digest, "battery churn diverged at 8 shards");
+    assert_eq!(flat_stats, sharded.stats, "battery churn stats diverged at 8 shards");
+    assert!(flat_stats.leaves > 0, "batteries never depleted — dead contract check");
+    println!(
+        "battery churn digest {} @ shards {{1, 8}} — bit-identical ({} leaves)",
+        &flat_digest[..16],
+        flat_stats.leaves
+    );
+    println!("====================================================\n");
+}
+
+fn main() {
+    let mut run = BenchRun::from_env("energy_fleet");
+    if !run.smoke() {
+        verify_contracts();
+    }
+
+    group("energy fleet @ K=5000, 6 cycles, async (phantom)");
+    let cfg = BenchConfig {
+        measure: std::time::Duration::from_secs(5),
+        max_iters: 20,
+        ..Default::default()
+    };
+    let budget = EnergyConfig { budget_j: BUDGET_J, ..EnergyConfig::disabled() };
+    run.bench("async_k5000_budget", &cfg, || {
+        let mut e = engine(Some(budget), 1);
+        e.run(&opts()).unwrap()
+    });
+    run.bench("async_k5000_battery", &cfg, || {
+        let mut e = engine(Some(battery_cfg()), 1);
+        e.run(&opts()).unwrap()
+    });
+
+    run.finish().expect("bench json");
+}

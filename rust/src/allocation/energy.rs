@@ -1,0 +1,287 @@
+//! Energy-budget-constrained allocation — the authors' sequel
+//! (arXiv:2012.00143) grafted onto the paper's suggest-and-improve
+//! structure.
+//!
+//! The deadline pipeline ends with a feasible integer point on the
+//! `t_k ≤ T` manifold; this module adds the per-learner budget
+//! `E_k^comp + E_k^tx ≤ E_k^max` as a second frontier, handled the same
+//! way the deadline is: take the unconstrained *suggestion* (any base
+//! [`TaskAllocator`]), **clip** each over-budget learner's `(τ_k, d_k)`
+//! onto the energy-feasible frontier ([`EnergyCoeffs::tau_max_energy`],
+//! the energy twin of [`LearnerCost::tau_max_int`]), then run a
+//! `Σ d_k = D` **repair** sweep that hands the freed samples to
+//! learners with both deadline *and* energy headroom.
+//!
+//! Two invariants drive the tests (`rust/tests/energy_path.rs`):
+//!
+//! * **budget-∞ oracle** — when every budget is infinite the base
+//!   allocator's result is returned *verbatim* (the same `Allocation`
+//!   value, bit for bit), so the unconstrained solver remains the
+//!   differential oracle;
+//! * **two-frontier feasibility** — finite budgets yield allocations
+//!   satisfying the deadline (7b, as `≤ T`), the box (7f), and
+//!   `E_k(τ_k, d_k) ≤ E_k^max` for every learner, with `Σ d_k = D`
+//!   whenever the energy frontier leaves room ([`AllocationOutcome::
+//!   shortfall`] reports the samples nobody could afford otherwise).
+
+use anyhow::{ensure, Result};
+
+use crate::allocation::{Allocation, TaskAllocator};
+use crate::costmodel::{Bounds, EnergyCoeffs, LearnerCost};
+
+/// Result of an energy-constrained solve: the allocation plus a typed
+/// account of where the budget bit.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct AllocationOutcome {
+    /// The (possibly clipped) assignment.
+    pub alloc: Allocation,
+    /// `energy_clamped[k]` — learner `k`'s suggested `(τ, d)` violated
+    /// its budget and was clipped onto the energy frontier.
+    pub energy_clamped: Vec<bool>,
+    /// Samples of `D` that could not be placed because every learner
+    /// with deadline headroom was already at its energy frontier
+    /// (0 in the common case; `Σ d_k = D − shortfall`).
+    pub shortfall: u64,
+}
+
+impl AllocationOutcome {
+    /// Number of learners whose assignment was energy-clipped.
+    pub fn clamped_count(&self) -> usize {
+        self.energy_clamped.iter().filter(|&&c| c).count()
+    }
+}
+
+/// `true` iff no budget can ever bind (all `+∞`) — the unconstrained
+/// fast path.
+pub fn budgets_unbounded(budgets: &[f64]) -> bool {
+    budgets.iter().all(|&b| b == f64::INFINITY)
+}
+
+/// Solve `(τ, d)` under both the deadline and per-learner energy
+/// budgets, suggest-and-improve style.
+///
+/// `coeffs[k]`/`budgets[k]` give learner `k`'s energy forecast and
+/// budget `E_k^max` in joules (`f64::INFINITY` = unconstrained). With
+/// every budget infinite, the base allocator's result is returned
+/// verbatim — byte-identical to calling it directly.
+pub fn allocate_energy_constrained(
+    base: &(dyn TaskAllocator + Send + Sync),
+    costs: &[LearnerCost],
+    coeffs: &[EnergyCoeffs],
+    budgets: &[f64],
+    t_cycle: f64,
+    d_total: u64,
+    bounds: &Bounds,
+) -> Result<AllocationOutcome> {
+    let k = costs.len();
+    ensure!(
+        coeffs.len() == k && budgets.len() == k,
+        "energy arity mismatch: costs={k} coeffs={} budgets={}",
+        coeffs.len(),
+        budgets.len()
+    );
+    ensure!(
+        budgets.iter().all(|b| !b.is_nan() && *b > 0.0),
+        "energy budgets must be positive (or +inf for unconstrained)"
+    );
+    let alloc = base.allocate(costs, t_cycle, d_total, bounds)?;
+    if budgets_unbounded(budgets) {
+        // the differential-oracle contract: no arithmetic touches the
+        // unconstrained result, it is passed through as-is
+        return Ok(AllocationOutcome {
+            energy_clamped: vec![false; k],
+            shortfall: 0,
+            alloc,
+        });
+    }
+
+    let mut tau = alloc.tau;
+    let mut d = alloc.d;
+    let mut clamped = vec![false; k];
+
+    // --- clip: pull every over-budget learner onto the energy frontier
+    // (before the Σd = D repair, so freed samples are redistributable)
+    for i in 0..k {
+        let e_max = budgets[i];
+        if coeffs[i].energy(tau[i] as f64, d[i] as f64) <= e_max {
+            continue; // suggestion already affordable
+        }
+        clamped[i] = true;
+        match coeffs[i].tau_max_energy(d[i], e_max) {
+            Some(te) if te >= 1 => {
+                // fewer epochs at the suggested batch: deadline slack
+                // only grows (t is increasing in τ)
+                tau[i] = tau[i].min(te);
+            }
+            _ => {
+                // even one epoch (or the bare exchange) busts the
+                // budget at this batch — idle the learner (the paper's
+                // τ = 0 infeasibility marker) and shrink its batch to
+                // the box floor so the repair can re-place the samples
+                tau[i] = 0;
+                d[i] = bounds.d_lo;
+                if coeffs[i].energy(0.0, d[i] as f64) > e_max {
+                    // it cannot even hold the floor batch affordably;
+                    // τ = 0 means no round runs, so no energy is spent
+                    // — keep the floor batch as its share of the box
+                }
+            }
+        }
+    }
+
+    // --- repair: restore Σ d_k = D by handing the freed samples to
+    // learners with headroom on *both* frontiers, in index order
+    // (deterministic; the same order integerize_batches sweeps)
+    let placed: u64 = d.iter().sum();
+    let mut deficit = d_total.saturating_sub(placed);
+    if deficit > 0 {
+        for i in 0..k {
+            if deficit == 0 {
+                break;
+            }
+            if tau[i] == 0 {
+                continue; // idled learners take no extra work
+            }
+            // headroom: box ceiling ∧ deadline frontier ∧ energy frontier
+            let cap_box = bounds.d_hi;
+            let cap_time = costs[i].d_max_int_for_tau(tau[i], t_cycle).unwrap_or(0);
+            let cap_energy = coeffs[i]
+                .d_max_energy_at_tau(tau[i], budgets[i])
+                .unwrap_or(0);
+            let cap = cap_box.min(cap_time).min(cap_energy);
+            if cap > d[i] {
+                let take = (cap - d[i]).min(deficit);
+                d[i] += take;
+                deficit -= take;
+            }
+        }
+    }
+
+    Ok(AllocationOutcome {
+        alloc: Allocation { tau, d },
+        energy_clamped: clamped,
+        shortfall: deficit,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::allocation::{make_allocator, AllocatorKind};
+
+    fn het_costs(k: usize) -> Vec<LearnerCost> {
+        (0..k)
+            .map(|i| {
+                let c2 = if i % 2 == 0 { 4.5e-4 } else { 1.6e-3 };
+                LearnerCost::new(c2, 1.1e-4 + 1e-5 * (i % 4) as f64, 0.3 + 0.04 * (i % 3) as f64)
+            })
+            .collect()
+    }
+
+    fn het_coeffs(k: usize) -> Vec<EnergyCoeffs> {
+        (0..k)
+            .map(|i| {
+                let e2 = if i % 2 == 0 { 4e-4 } else { 1e-4 };
+                EnergyCoeffs::new(e2, 2e-5, 0.06)
+            })
+            .collect()
+    }
+
+    #[test]
+    fn infinite_budgets_return_the_base_allocation_verbatim() {
+        let k = 10;
+        let costs = het_costs(k);
+        let coeffs = het_coeffs(k);
+        let d_total = 30_000u64;
+        let bounds = Bounds::proportional(d_total, k, 0.2, 2.5);
+        let base = make_allocator(AllocatorKind::Sai);
+        let oracle = base.allocate(&costs, 7.5, d_total, &bounds).unwrap();
+        let out = allocate_energy_constrained(
+            base.as_ref(),
+            &costs,
+            &coeffs,
+            &vec![f64::INFINITY; k],
+            7.5,
+            d_total,
+            &bounds,
+        )
+        .unwrap();
+        assert_eq!(out.alloc, oracle, "budget-∞ must be the oracle, bit for bit");
+        assert_eq!(out.clamped_count(), 0);
+        assert_eq!(out.shortfall, 0);
+    }
+
+    #[test]
+    fn tight_budgets_clamp_and_stay_on_both_frontiers() {
+        let k = 10;
+        let costs = het_costs(k);
+        let coeffs = het_coeffs(k);
+        let t_cycle = 7.5;
+        let d_total = 30_000u64;
+        let bounds = Bounds::proportional(d_total, k, 0.2, 2.5);
+        let base = make_allocator(AllocatorKind::Sai);
+        // budget chosen to bite the fast (high-e2) learners only
+        let budgets: Vec<f64> =
+            (0..k).map(|i| if i % 2 == 0 { 6.0 } else { f64::INFINITY }).collect();
+        let out = allocate_energy_constrained(
+            base.as_ref(), &costs, &coeffs, &budgets, t_cycle, d_total, &bounds,
+        )
+        .unwrap();
+        assert!(out.clamped_count() > 0, "budget never bit: raise e2 or lower it");
+        for i in 0..k {
+            let (tau, d) = (out.alloc.tau[i], out.alloc.d[i]);
+            assert!(bounds.contains(d), "d[{i}] = {d} outside the box");
+            let t = costs[i].time(tau as f64, d as f64);
+            assert!(t <= t_cycle * (1.0 + 1e-9), "learner {i} misses the deadline");
+            if tau > 0 {
+                let e = coeffs[i].energy(tau as f64, d as f64);
+                assert!(
+                    e <= budgets[i] * (1.0 + 1e-9),
+                    "learner {i}: E = {e} over budget {}",
+                    budgets[i]
+                );
+            }
+        }
+        assert_eq!(
+            out.alloc.d.iter().sum::<u64>() + out.shortfall,
+            d_total,
+            "repair must account for every sample"
+        );
+    }
+
+    #[test]
+    fn starvation_budget_idles_learners_not_the_solve() {
+        let k = 6;
+        let costs = het_costs(k);
+        let coeffs = het_coeffs(k);
+        let d_total = 18_000u64;
+        let bounds = Bounds::proportional(d_total, k, 0.2, 2.5);
+        let base = make_allocator(AllocatorKind::Eta);
+        // below every learner's bare exchange energy (e0 = 0.06)
+        let budgets = vec![0.01f64; k];
+        let out = allocate_energy_constrained(
+            base.as_ref(), &costs, &coeffs, &budgets, 7.5, d_total, &bounds,
+        )
+        .unwrap();
+        assert!(out.alloc.tau.iter().all(|&t| t == 0), "nobody can afford a round");
+        assert_eq!(out.clamped_count(), k);
+        assert!(out.shortfall > 0, "idled fleet cannot place all of D");
+    }
+
+    #[test]
+    fn arity_and_sign_errors_are_typed() {
+        let costs = het_costs(4);
+        let coeffs = het_coeffs(3);
+        let bounds = Bounds::new(10, 10_000);
+        let base = make_allocator(AllocatorKind::Eta);
+        assert!(allocate_energy_constrained(
+            base.as_ref(), &costs, &coeffs, &[1.0; 4], 7.5, 4000, &bounds,
+        )
+        .is_err());
+        let coeffs = het_coeffs(4);
+        assert!(allocate_energy_constrained(
+            base.as_ref(), &costs, &coeffs, &[1.0, -2.0, 1.0, 1.0], 7.5, 4000, &bounds,
+        )
+        .is_err());
+    }
+}

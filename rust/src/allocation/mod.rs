@@ -10,8 +10,14 @@
 //! | [`AllocatorKind::Exact`] | optimality yardstick: exact integer window search over the reduced space (DESIGN.md) | [`exact`] |
 //! | [`AllocatorKind::Eta`] | asynchronous Equal Task Allocation baseline [10] | [`eta`] |
 //! | [`AllocatorKind::Sync`] | synchronous MEL of [9]: common τ, `t_k ≤ T` | [`sync`] |
+//!
+//! Orthogonal to the kind, [`allocate_energy_constrained`] wraps any of
+//! the five with per-learner energy budgets `E_k ≤ E_k^max` (the
+//! authors' sequel, arXiv:2012.00143) and reports the clipping in a
+//! typed [`AllocationOutcome`]. See [`energy`].
 
 pub mod common;
+pub mod energy;
 pub mod eta;
 pub mod exact;
 pub mod maxcon;
@@ -20,6 +26,8 @@ pub mod sai;
 pub mod sync;
 
 use anyhow::Result;
+
+pub use energy::{allocate_energy_constrained, AllocationOutcome};
 
 pub use crate::costmodel::Bounds;
 use crate::costmodel::LearnerCost;

@@ -168,6 +168,124 @@ impl Default for ChurnConfig {
     }
 }
 
+/// Energy model for the scenario: allocation budgets and device
+/// batteries (the authors' sequel, arXiv:2012.00143). Fully disabled by
+/// default — no budget, no batteries — which keeps every engine path
+/// byte-identical to the energy-unaware build.
+///
+/// Two independent switches:
+///
+/// * **budget** — a finite [`EnergyConfig::budget_j`] makes the
+///   allocator clip `(τ, d)` to `E_k ≤ E_k^max` per cycle
+///   ([`crate::allocation::energy`]); `+∞` (the default) routes through
+///   the unconstrained allocator verbatim.
+/// * **battery** — `battery_hi_j > 0` gives each device a battery drawn
+///   uniformly from `[battery_lo_j, battery_hi_j]`; every dispatched
+///   round drains its forecast energy, and when the remaining charge
+///   crosses [`EnergyConfig::battery_floor_j`] the engine emits a Leave
+///   through the normal churn path (correlated churn). A positive
+///   [`EnergyConfig::recharge_s`] duty-cycles the device back in via a
+///   Rejoin event with a refilled battery.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct EnergyConfig {
+    /// Effective switched capacitance κ (CMOS compute energy constant).
+    pub kappa: f64,
+    /// RX power as a fraction of TX power — see
+    /// [`crate::energy::EnergyParams::rx_power_ratio`].
+    pub rx_power_ratio: f64,
+    /// Per-learner per-cycle allocation budget `E_k^max` in joules;
+    /// `f64::INFINITY` (default) disables the constraint.
+    pub budget_j: f64,
+    /// Initial battery charge range `[lo, hi]` in joules; `hi = 0`
+    /// (default) disables batteries entirely.
+    pub battery_lo_j: f64,
+    pub battery_hi_j: f64,
+    /// Charge floor (joules): a device whose battery would cross below
+    /// this after a round departs instead of running it.
+    pub battery_floor_j: f64,
+    /// Duty-cycle period: a depleted device rejoins with a full battery
+    /// after this many virtual seconds (0 = gone for good).
+    pub recharge_s: f64,
+}
+
+impl EnergyConfig {
+    pub fn disabled() -> Self {
+        Self {
+            kappa: 1e-28,
+            rx_power_ratio: 1.0,
+            budget_j: f64::INFINITY,
+            battery_lo_j: 0.0,
+            battery_hi_j: 0.0,
+            battery_floor_j: 0.0,
+            recharge_s: 0.0,
+        }
+    }
+
+    /// Allocation budget active (finite `E_k^max`)?
+    pub fn has_budget(&self) -> bool {
+        self.budget_j.is_finite()
+    }
+
+    /// Battery depletion model active?
+    pub fn has_battery(&self) -> bool {
+        self.battery_hi_j > 0.0
+    }
+
+    pub fn is_enabled(&self) -> bool {
+        self.has_budget() || self.has_battery()
+    }
+
+    /// The audit/forecast constants this config implies.
+    pub fn params(&self) -> crate::energy::EnergyParams {
+        crate::energy::EnergyParams { kappa: self.kappa, rx_power_ratio: self.rx_power_ratio }
+    }
+
+    /// Shared by the builder and the JSON intake path.
+    pub fn validate(&self) -> Result<()> {
+        anyhow::ensure!(
+            self.kappa.is_finite() && self.kappa > 0.0,
+            "energy.kappa must be positive and finite"
+        );
+        anyhow::ensure!(
+            self.rx_power_ratio.is_finite() && self.rx_power_ratio >= 0.0,
+            "energy.rx_power_ratio must be >= 0 and finite"
+        );
+        anyhow::ensure!(
+            !self.budget_j.is_nan() && self.budget_j > 0.0,
+            "energy.budget_j must be positive (omit for unconstrained)"
+        );
+        anyhow::ensure!(
+            self.battery_lo_j.is_finite()
+                && self.battery_hi_j.is_finite()
+                && self.battery_lo_j >= 0.0
+                && self.battery_lo_j <= self.battery_hi_j,
+            "energy battery range needs 0 <= lo <= hi (both finite)"
+        );
+        anyhow::ensure!(
+            self.battery_floor_j.is_finite() && self.battery_floor_j >= 0.0,
+            "energy.battery_floor_j must be >= 0 and finite"
+        );
+        if self.has_battery() {
+            anyhow::ensure!(
+                self.battery_floor_j < self.battery_lo_j,
+                "energy.battery_floor_j must sit below battery_lo_j or \
+                 devices would start depleted"
+            );
+        }
+        anyhow::ensure!(
+            self.recharge_s.is_finite() && self.recharge_s >= 0.0,
+            "energy.recharge_s must be >= 0 and finite"
+        );
+        Ok(())
+    }
+}
+
+impl Default for EnergyConfig {
+    fn default() -> Self {
+        Self::disabled()
+    }
+}
+
 /// Declarative experiment description.
 #[derive(Debug, Clone)]
 pub struct ScenarioConfig {
@@ -191,6 +309,9 @@ pub struct ScenarioConfig {
     pub engine: EngineKind,
     /// Learner churn (event engine only; disabled by default).
     pub churn: ChurnConfig,
+    /// Energy budgets and batteries (disabled by default; batteries are
+    /// event engine only).
+    pub energy: EnergyConfig,
     /// Multi-model concurrency (event engine only; single-tenant by
     /// default — see [`crate::multimodel`]).
     pub multimodel: MultiModelConfig,
@@ -251,6 +372,7 @@ impl ScenarioConfig {
             task: TaskParams::default(),
             engine: EngineKind::Lockstep,
             churn: ChurnConfig::disabled(),
+            energy: EnergyConfig::disabled(),
             multimodel: MultiModelConfig::single(),
             fading_rho: None,
             num_threads: 1,
@@ -289,6 +411,13 @@ impl ScenarioConfig {
     pub fn with_churn(mut self, churn: ChurnConfig) -> Self {
         self.churn = churn;
         self
+    }
+    /// Energy budgets/batteries (validated; rejects the same bad values
+    /// as the JSON intake path).
+    pub fn with_energy(mut self, energy: EnergyConfig) -> Result<Self> {
+        energy.validate()?;
+        self.energy = energy;
+        Ok(self)
     }
     pub fn with_multimodel(mut self, multimodel: MultiModelConfig) -> Self {
         self.multimodel = multimodel;
@@ -354,6 +483,18 @@ impl ScenarioConfig {
             .set("mean_lifetime_s", self.churn.mean_lifetime_s)
             .set("max_learners", self.churn.max_learners)
             .set("min_learners", self.churn.min_learners);
+        let mut energy = Value::obj();
+        energy
+            .set("kappa", self.energy.kappa)
+            .set("rx_power_ratio", self.energy.rx_power_ratio)
+            .set("battery_lo_j", self.energy.battery_lo_j)
+            .set("battery_hi_j", self.energy.battery_hi_j)
+            .set("battery_floor_j", self.energy.battery_floor_j)
+            .set("recharge_s", self.energy.recharge_s);
+        // JSON has no ∞ literal: an absent budget_j *is* "unconstrained"
+        if self.energy.budget_j.is_finite() {
+            energy.set("budget_j", self.energy.budget_j);
+        }
         let mut mm = Value::obj();
         mm.set("num_models", self.multimodel.num_models)
             .set("buffer_size", self.multimodel.buffer_size)
@@ -415,6 +556,7 @@ impl ScenarioConfig {
             .set("devices", dev)
             .set("task", task)
             .set("churn", churn)
+            .set("energy", energy)
             .set("multimodel", mm);
         if let Some(rho) = self.fading_rho {
             v.set("fading_rho", rho);
@@ -440,6 +582,7 @@ impl ScenarioConfig {
                 "data_scenario",
                 "engine",
                 "churn",
+                "energy",
                 "fading_rho",
                 "num_threads",
                 "epsilon_window",
@@ -496,6 +639,43 @@ impl ScenarioConfig {
             if let Some(x) = cu.get("min_learners") {
                 cfg.churn.min_learners = x.as_usize()?;
             }
+        }
+        if let Some(en) = v.get("energy") {
+            reject_unknown_keys(
+                en,
+                &[
+                    "kappa",
+                    "rx_power_ratio",
+                    "budget_j",
+                    "battery_lo_j",
+                    "battery_hi_j",
+                    "battery_floor_j",
+                    "recharge_s",
+                ],
+                "energy",
+            )?;
+            if let Some(x) = en.get("kappa") {
+                cfg.energy.kappa = x.as_f64()?;
+            }
+            if let Some(x) = en.get("rx_power_ratio") {
+                cfg.energy.rx_power_ratio = x.as_f64()?;
+            }
+            if let Some(x) = en.get("budget_j") {
+                cfg.energy.budget_j = x.as_f64()?;
+            }
+            if let Some(x) = en.get("battery_lo_j") {
+                cfg.energy.battery_lo_j = x.as_f64()?;
+            }
+            if let Some(x) = en.get("battery_hi_j") {
+                cfg.energy.battery_hi_j = x.as_f64()?;
+            }
+            if let Some(x) = en.get("battery_floor_j") {
+                cfg.energy.battery_floor_j = x.as_f64()?;
+            }
+            if let Some(x) = en.get("recharge_s") {
+                cfg.energy.recharge_s = x.as_f64()?;
+            }
+            cfg.energy.validate()?;
         }
         if let Some(x) = v.get("fading_rho") {
             let rho = x.as_f64()?;
@@ -911,6 +1091,61 @@ mod tests {
     }
 
     #[test]
+    fn energy_round_trip_default_and_validation() {
+        let cfg = ScenarioConfig::paper_default()
+            .with_energy(EnergyConfig {
+                budget_j: 12.5,
+                battery_lo_j: 400.0,
+                battery_hi_j: 900.0,
+                battery_floor_j: 50.0,
+                recharge_s: 120.0,
+                ..EnergyConfig::disabled()
+            })
+            .unwrap();
+        let text = cfg.to_json().pretty();
+        let back = ScenarioConfig::from_json(&crate::json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.energy, cfg.energy);
+        assert!(back.energy.has_budget() && back.energy.has_battery());
+
+        // sparse configs stay fully disabled: budget ∞, no batteries
+        let sparse = ScenarioConfig::from_json(&crate::json::parse("{}").unwrap()).unwrap();
+        assert_eq!(sparse.energy, EnergyConfig::disabled());
+        assert!(!sparse.energy.is_enabled());
+        assert_eq!(sparse.energy.budget_j, f64::INFINITY);
+
+        // an omitted budget_j round-trips back to ∞ even with batteries on
+        let batt = ScenarioConfig::paper_default()
+            .with_energy(EnergyConfig {
+                battery_lo_j: 10.0,
+                battery_hi_j: 20.0,
+                ..EnergyConfig::disabled()
+            })
+            .unwrap();
+        let back =
+            ScenarioConfig::from_json(&crate::json::parse(&batt.to_json().pretty()).unwrap())
+                .unwrap();
+        assert_eq!(back.energy.budget_j, f64::INFINITY);
+        assert!(back.energy.has_battery());
+
+        // invalid knobs are rejected, builder and JSON alike
+        for bad in [
+            r#"{"energy": {"kappa": 0.0}}"#,
+            r#"{"energy": {"rx_power_ratio": -0.5}}"#,
+            r#"{"energy": {"budget_j": 0.0}}"#,
+            r#"{"energy": {"battery_lo_j": 5.0, "battery_hi_j": 2.0}}"#,
+            // floor at/above lo would spawn devices pre-depleted
+            r#"{"energy": {"battery_lo_j": 5.0, "battery_hi_j": 9.0, "battery_floor_j": 5.0}}"#,
+            r#"{"energy": {"recharge_s": -1.0}}"#,
+        ] {
+            let v = crate::json::parse(bad).unwrap();
+            assert!(ScenarioConfig::from_json(&v).is_err(), "accepted: {bad}");
+        }
+        assert!(ScenarioConfig::paper_default()
+            .with_energy(EnergyConfig { kappa: f64::NAN, ..EnergyConfig::disabled() })
+            .is_err());
+    }
+
+    #[test]
     fn num_threads_round_trip_and_default() {
         let cfg = ScenarioConfig::paper_default().with_threads(8);
         let text = cfg.to_json().pretty();
@@ -999,6 +1234,7 @@ mod tests {
             (r#"{"multimodel": {"num_model": 2}}"#, "num_model"),
             (r#"{"multimodel": {"buffer_sizes": 3}}"#, "buffer_sizes"),
             (r#"{"trace": {"eventz": []}}"#, "eventz"),
+            (r#"{"energy": {"budget": 5.0}}"#, "budget"),
         ] {
             let v = crate::json::parse(bad).unwrap();
             let err = match ScenarioConfig::from_json(&v) {
@@ -1017,6 +1253,15 @@ mod tests {
         let cfg = ScenarioConfig::paper_default()
             .with_engine(EngineKind::Event)
             .with_churn(ChurnConfig::new(0.5, 120.0))
+            .with_energy(EnergyConfig {
+                budget_j: 25.0,
+                battery_lo_j: 100.0,
+                battery_hi_j: 300.0,
+                battery_floor_j: 10.0,
+                recharge_s: 60.0,
+                ..EnergyConfig::disabled()
+            })
+            .unwrap()
             .with_fading_rho(0.9)
             .with_threads(2)
             .with_shards(4)

@@ -12,7 +12,9 @@
 //!   count),
 //! * the fleet (learners + alive flags), the allocation and its slot
 //!   maps, the dirty flag,
-//! * every RNG stream (engine, churn, fading) as raw xoshiro words,
+//! * every RNG stream (engine, churn, fading, battery) as raw xoshiro
+//!   words, plus battery charge/capacity/depletion state when the
+//!   scenario has batteries enabled,
 //! * model state (versions, buffers, in-flight maps, windows,
 //!   schedulers) for multi-model runs,
 //! * the records produced so far and the running [`EngineStats`].
@@ -72,9 +74,36 @@ pub enum EventCheckpoint {
     Leave {
         slot: usize,
     },
+    /// Duty-cycled return of a battery-depleted learner after
+    /// `recharge_s` (see [`EnergyConfig`](crate::config::EnergyConfig)).
+    Rejoin {
+        slot: usize,
+    },
     Trace {
         idx: usize,
     },
+}
+
+/// Battery state for energy-driven churn, serialized only when the
+/// scenario has batteries enabled ([`EnergyConfig::has_battery`]).
+///
+/// `batteries` is the current charge, `caps` the per-device capacity a
+/// [`Rejoin`](EventCheckpoint::Rejoin) recharges back to, `depleted`
+/// the floor-crossing latch, and `rng` the dedicated battery-draw
+/// stream — all restored verbatim so a resumed run bills and recharges
+/// bit-identically to the uninterrupted one.
+///
+/// [`EnergyConfig::has_battery`]: crate::config::EnergyConfig::has_battery
+#[derive(Debug, Clone)]
+pub struct EnergyState {
+    /// Remaining charge per slot (J), in slot order.
+    pub batteries: Vec<f64>,
+    /// Drawn capacity per slot (J) — the recharge target.
+    pub caps: Vec<f64>,
+    /// Whether each slot has crossed the battery floor.
+    pub depleted: Vec<bool>,
+    /// The battery-draw RNG stream.
+    pub rng: RngState,
 }
 
 /// Engine state shared by single- and multi-model runs.
@@ -98,6 +127,9 @@ pub struct CoreState {
     pub alive_learners: usize,
     pub rng: RngState,
     pub churn_rng: RngState,
+    /// Battery state; `None` when the scenario has no batteries.
+    /// Absent in pre-energy checkpoints, which restore as `None`.
+    pub energy: Option<EnergyState>,
     pub fading: Option<FadingState>,
     /// Current allocation + the costs/slot map it was solved for
     /// (`alloc_pos` is rebuilt from `alloc_slots` on restore).
@@ -448,6 +480,10 @@ fn event_to_json(ev: &EventCheckpoint) -> Value {
             v.set("kind", "leave");
             v.set("slot", Value::from(*slot));
         }
+        EventCheckpoint::Rejoin { slot } => {
+            v.set("kind", "rejoin");
+            v.set("slot", Value::from(*slot));
+        }
         EventCheckpoint::Trace { idx } => {
             v.set("kind", "trace");
             v.set("idx", Value::from(*idx));
@@ -475,10 +511,40 @@ fn event_from_json(v: &Value) -> Result<EventCheckpoint> {
         "leave" => EventCheckpoint::Leave {
             slot: v.usize_field("slot")?,
         },
+        "rejoin" => EventCheckpoint::Rejoin {
+            slot: v.usize_field("slot")?,
+        },
         "trace" => EventCheckpoint::Trace {
             idx: v.usize_field("idx")?,
         },
         other => bail!("unknown queue event kind '{other}'"),
+    })
+}
+
+fn energy_state_to_json(e: &EnergyState) -> Value {
+    let mut v = Value::obj();
+    v.set("batteries", f64_vec_to_json(&e.batteries));
+    v.set("caps", f64_vec_to_json(&e.caps));
+    v.set(
+        "depleted",
+        Value::Arr(e.depleted.iter().map(|&b| Value::from(b)).collect()),
+    );
+    v.set("rng", rng_state_to_json(&e.rng));
+    v
+}
+
+fn energy_state_from_json(v: &Value) -> Result<EnergyState> {
+    let depleted = v
+        .field("depleted")?
+        .as_arr()?
+        .iter()
+        .map(|b| b.as_bool())
+        .collect::<Result<Vec<_>>>()?;
+    Ok(EnergyState {
+        batteries: f64_vec_from_json(v.field("batteries")?)?,
+        caps: f64_vec_from_json(v.field("caps")?)?,
+        depleted,
+        rng: rng_state_from_json(v.field("rng")?)?,
     })
 }
 
@@ -548,6 +614,13 @@ impl CoreState {
         v.set("rng", rng_state_to_json(&self.rng));
         v.set("churn_rng", rng_state_to_json(&self.churn_rng));
         v.set(
+            "energy",
+            match &self.energy {
+                None => Value::Null,
+                Some(e) => energy_state_to_json(e),
+            },
+        );
+        v.set(
             "fading",
             match &self.fading {
                 None => Value::Null,
@@ -606,6 +679,11 @@ impl CoreState {
             })
             .collect::<Result<Vec<_>>>()
             .context("slots")?;
+        // absent (pre-energy checkpoint) and Null both mean "no batteries"
+        let energy = match v.get("energy") {
+            None | Some(Value::Null) => None,
+            Some(e) => Some(energy_state_from_json(e).context("energy")?),
+        };
         let fading = match v.field("fading")? {
             Value::Null => None,
             f => Some(FadingState {
@@ -635,6 +713,7 @@ impl CoreState {
             alive_learners: v.usize_field("alive_learners")?,
             rng: rng_state_from_json(v.field("rng")?)?,
             churn_rng: rng_state_from_json(v.field("churn_rng")?)?,
+            energy,
             fading,
             alloc,
             dirty: v.field("dirty")?.as_bool()?,
@@ -830,12 +909,19 @@ mod tests {
                 (2.0, 12, EventCheckpoint::Redispatch { slot: 1 }),
                 (2.5, 13, EventCheckpoint::Join),
                 (3.0, 14, EventCheckpoint::Leave { slot: 2 }),
-                (3.5, 15, EventCheckpoint::Trace { idx: 4 }),
+                (3.2, 15, EventCheckpoint::Rejoin { slot: 2 }),
+                (3.5, 16, EventCheckpoint::Trace { idx: 4 }),
             ],
             slots: vec![(learner.clone(), true), (learner, false)],
             alive_learners: 1,
             rng: rng_state,
             churn_rng: rng.state(),
+            energy: Some(EnergyState {
+                batteries: vec![12.5, f64::INFINITY],
+                caps: vec![30.0, 45.0],
+                depleted: vec![false, true],
+                rng: rng.state(),
+            }),
             fading: Some(FadingState {
                 shadow_db: vec![0.5, f64::NEG_INFINITY],
                 dist_m: vec![10.0, 20.0],
@@ -896,6 +982,25 @@ mod tests {
         assert!(back.core.rng.spare_normal.unwrap().is_nan());
         assert!(back.global.as_ref().unwrap()[1][0].is_nan());
         assert_eq!(back.core.fading.as_ref().unwrap().shadow_db[1], f64::NEG_INFINITY);
+        let es = back.core.energy.as_ref().unwrap();
+        assert_eq!(es.batteries[1], f64::INFINITY);
+        assert_eq!(es.depleted, vec![false, true]);
+    }
+
+    #[test]
+    fn battery_free_and_pre_energy_checkpoints_restore_as_none() {
+        // Null energy round-trips as None
+        let mut core = sample_core();
+        core.energy = None;
+        let back = CoreState::from_json(&core.to_json()).unwrap();
+        assert!(back.energy.is_none());
+        // a pre-energy checkpoint (field absent entirely) also parses
+        let mut v = core.to_json();
+        if let Value::Obj(m) = &mut v {
+            m.remove("energy");
+        }
+        let back = CoreState::from_json(&v).unwrap();
+        assert!(back.energy.is_none());
     }
 
     #[test]

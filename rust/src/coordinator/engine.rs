@@ -54,6 +54,27 @@
 //! (join/leave), i.e. incrementally at the next dispatch/boundary
 //! rather than per lock-step cycle.
 //!
+//! # Energy: budgets and battery-driven churn
+//!
+//! `ScenarioConfig.energy` threads the authors' sequel (arXiv:
+//! 2012.00143) through the engine in two orthogonal ways:
+//!
+//! * **per-cycle budgets** — with a finite `budget_j`, every re-solve
+//!   runs through [`crate::allocation::allocate_energy_constrained`],
+//!   clipping each learner's `(τ_k, d_k)` onto the energy-feasible
+//!   frontier before the `Σ d_k = D` repair
+//!   ([`Self::energy_clamped_count`] reports the clamps);
+//! * **batteries** — each device draws a capacity from a dedicated RNG
+//!   stream; every dispatched round bills `E_k(τ, d)` against the
+//!   remaining charge ([`Self::battery_covers_round`]). Crossing the
+//!   floor emits a [`Event::Leave`] through the existing churn path
+//!   (energy exhaustion is *correlated* churn: the hungriest devices
+//!   go first) and, when `recharge_s > 0`, a duty-cycled
+//!   [`Event::Rejoin`] brings the node back at full charge. Billing
+//!   happens in the serial plan phase before any shared-RNG draw, so
+//!   energy-free runs are bit-identical to pre-energy builds and
+//!   battery churn stays bit-identical across `--shards`/`--threads`.
+//!
 //! [`Orchestrator::run_from`]: crate::coordinator::Orchestrator::run_from
 
 use std::time::Instant;
@@ -61,17 +82,19 @@ use std::time::Instant;
 use anyhow::{anyhow, bail, ensure, Result};
 
 use crate::aggregation::{aggregate, AggregationRule, AsyncAggregator, ParamSet};
-use crate::allocation::{make_allocator, Allocation, AllocatorKind, TaskAllocator};
+use crate::allocation::{
+    allocate_energy_constrained, make_allocator, Allocation, AllocatorKind, TaskAllocator,
+};
 use crate::channel::fading::FadingProcess;
 use crate::channel::sample_link;
-use crate::config::{ChurnConfig, Scenario, TraceAction};
+use crate::config::{ChurnConfig, EnergyConfig, Scenario, TraceAction};
 use crate::coordinator::checkpoint::{
-    CoreState, EngineCheckpoint, EventCheckpoint, MultiModelCheckpoint,
+    CoreState, EnergyState, EngineCheckpoint, EventCheckpoint, MultiModelCheckpoint,
 };
 use crate::coordinator::faults::{draw_outcomes, update_arrives, FaultModel, FaultOutcome};
 use crate::coordinator::learner::Learner;
 use crate::coordinator::orchestrator::{CycleRecord, TrainOptions};
-use crate::costmodel::{Bounds, LearnerCost};
+use crate::costmodel::{Bounds, EnergyCoeffs, LearnerCost};
 use crate::data::{sample_shards, Dataset};
 use crate::device::{Device, DeviceClass};
 use crate::multimodel::{
@@ -163,6 +186,9 @@ enum Event {
     Join,
     /// Scheduled departure of a learner.
     Leave { slot: usize },
+    /// Duty-cycled return of a battery-depleted learner after its
+    /// recharge window (`EnergyConfig.recharge_s`).
+    Rejoin { slot: usize },
     /// Scripted churn: apply event `idx` of the scenario's
     /// [`crate::config::TraceConfig`] (joins, leaves, capacity
     /// targets, regional outages).
@@ -186,6 +212,7 @@ impl Event {
             Event::Redispatch { slot } => EventCheckpoint::Redispatch { slot },
             Event::Join => EventCheckpoint::Join,
             Event::Leave { slot } => EventCheckpoint::Leave { slot },
+            Event::Rejoin { slot } => EventCheckpoint::Rejoin { slot },
             Event::Trace { idx } => EventCheckpoint::Trace { idx },
         }
     }
@@ -214,6 +241,7 @@ impl Event {
             EventCheckpoint::Redispatch { slot } => Event::Redispatch { slot },
             EventCheckpoint::Join => Event::Join,
             EventCheckpoint::Leave { slot } => Event::Leave { slot },
+            EventCheckpoint::Rejoin { slot } => Event::Rejoin { slot },
             EventCheckpoint::Trace { idx } => Event::Trace { idx },
         }
     }
@@ -357,7 +385,9 @@ impl CoordQueue {
         let k = self.q.shards();
         match ev {
             Event::Arrival(msg) => msg.slot % k,
-            Event::Redispatch { slot } | Event::Leave { slot } => slot % k,
+            Event::Redispatch { slot } | Event::Leave { slot } | Event::Rejoin { slot } => {
+                slot % k
+            }
             Event::Boundary | Event::Join | Event::Trace { .. } => 0,
         }
     }
@@ -388,6 +418,10 @@ enum RoundPlan {
     /// No usable assignment / infeasible τ / dropped: re-arm via a
     /// `Redispatch` event at `at`.
     Retry { slot: usize, at: f64 },
+    /// Battery floor crossed at dispatch: the node leaves instead of
+    /// running the round — a `Leave` event is pushed at `at` (the
+    /// energy-churn path; see [`EventEngine::battery_covers_round`]).
+    Depart { slot: usize, at: f64 },
     /// A round runs; its arrival is pushed at `arrive_at`.
     Run(Box<RunPlan>),
 }
@@ -488,8 +522,25 @@ pub struct EventEngine<'rt> {
     exec: ExecMode<'rt>,
     pub faults: FaultModel,
     churn: ChurnConfig,
+    /// Energy model: per-cycle allocation budget and/or per-device
+    /// batteries driving depletion churn (`ScenarioConfig.energy`;
+    /// disabled by default).
+    energy: EnergyConfig,
     rng: Rng,
     churn_rng: Rng,
+    /// Dedicated battery stream (capacity draws at init and join),
+    /// derived like `churn_rng` — battery-free runs never touch it, so
+    /// enabling batteries cannot perturb any other stream.
+    energy_rng: Rng,
+    /// Remaining charge per slot (J); empty when batteries are disabled.
+    batteries: Vec<f64>,
+    /// Drawn capacity per slot (J) — the recharge target.
+    battery_caps: Vec<f64>,
+    /// Slots whose battery crossed the floor (down until recharged).
+    depleted: Vec<bool>,
+    /// Learners energy-clamped by the most recent budget-constrained
+    /// re-solve (0 whenever `energy.budget_j` is infinite).
+    energy_clamped: usize,
     /// Current allocation over the alive fleet (+ parallel cost/slot
     /// vectors in allocation order).
     alloc: Option<Allocation>,
@@ -599,6 +650,23 @@ impl<'rt> EventEngine<'rt> {
         let mut tmp = scenario.rng.clone();
         let churn_rng = Rng::new(tmp.next_u64() ^ 0xC41C_77AA_D15C_0DEA_u64);
         let churn = scenario.config.churn;
+        // …and one more for batteries, same trick: derived from a fresh
+        // clone, so battery-free runs are bit-identical to pre-energy
+        // builds and batteries never perturb the churn stream.
+        let mut tmp = scenario.rng.clone();
+        let mut energy_rng = Rng::new(tmp.next_u64() ^ 0xE6E6_0B5A_77E1_BA77_u64);
+        let energy = scenario.config.energy;
+        let mut batteries = Vec::new();
+        let mut battery_caps = Vec::new();
+        if energy.has_battery() {
+            for _ in 0..slots.len() {
+                let cap =
+                    energy_rng.uniform_range(energy.battery_lo_j, energy.battery_hi_j);
+                batteries.push(cap);
+                battery_caps.push(cap);
+            }
+        }
+        let depleted = vec![false; batteries.len()];
         let initial_k = scenario.k();
         let fading = scenario.config.fading_rho.map(|rho| make_fading(&scenario, rho));
         let pool = ThreadPool::new(scenario.config.num_threads);
@@ -614,8 +682,14 @@ impl<'rt> EventEngine<'rt> {
             exec,
             faults: FaultModel::none(),
             churn,
+            energy,
             rng,
             churn_rng,
+            energy_rng,
+            batteries,
+            battery_caps,
+            depleted,
+            energy_clamped: 0,
             alloc: None,
             alloc_costs: Vec::new(),
             alloc_slots: Vec::new(),
@@ -693,6 +767,30 @@ impl<'rt> EventEngine<'rt> {
         self
     }
 
+    /// Override the energy model from the scenario config (per-cycle
+    /// allocation budget and/or battery-driven depletion churn).
+    /// Re-derives the battery stream and re-draws every slot's initial
+    /// charge, so like the sibling builders it must run before `run`.
+    pub fn with_energy(mut self, energy: EnergyConfig) -> Self {
+        self.energy = energy;
+        let mut tmp = self.scenario.rng.clone();
+        self.energy_rng = Rng::new(tmp.next_u64() ^ 0xE6E6_0B5A_77E1_BA77_u64);
+        self.batteries.clear();
+        self.battery_caps.clear();
+        if energy.has_battery() {
+            for _ in 0..self.slots.len() {
+                let cap = self
+                    .energy_rng
+                    .uniform_range(energy.battery_lo_j, energy.battery_hi_j);
+                self.batteries.push(cap);
+                self.battery_caps.push(cap);
+            }
+        }
+        self.depleted = vec![false; self.batteries.len()];
+        self.energy_clamped = 0;
+        self
+    }
+
     /// Enable Gauss–Markov block fading (per-cycle link evolution with
     /// coherence `rho`); the fleet is re-solved every cycle as costs
     /// drift. Overrides `ScenarioConfig.fading_rho`.
@@ -725,6 +823,68 @@ impl<'rt> EventEngine<'rt> {
         self.churn.min_learners.max(1)
     }
 
+    /// Learners energy-clamped by the most recent budget-constrained
+    /// re-solve (0 whenever no finite `budget_j` is configured) —
+    /// the [`crate::allocation::AllocationOutcome`] telemetry, surfaced
+    /// without widening [`EngineStats`].
+    pub fn energy_clamped_count(&self) -> usize {
+        self.energy_clamped
+    }
+
+    /// Whether `slot` is parked on a drained battery. Always `false`
+    /// with batteries disabled — the per-slot vectors are empty then,
+    /// so the config check must come first.
+    fn is_depleted(&self, slot: usize) -> bool {
+        self.energy.has_battery() && self.depleted[slot]
+    }
+
+    /// Energy-forecast coefficients of `slot` under the scenario task —
+    /// the [`EnergyCoeffs`] twin of the slot's own [`LearnerCost`].
+    fn energy_coeffs(&self, slot: usize) -> EnergyCoeffs {
+        let cfg = &self.scenario.config;
+        let l = &self.slots[slot].learner;
+        EnergyCoeffs::from_parts(
+            &l.device,
+            &l.link,
+            &cfg.task,
+            cfg.data_scenario,
+            &self.energy.params(),
+        )
+    }
+
+    /// Bill one `(τ, d)` round against `slot`'s battery, or refuse:
+    /// when the round would push the remaining charge below the floor,
+    /// the slot is marked depleted and nothing is billed (the round
+    /// never runs — the caller turns the refusal into a `Leave`).
+    /// Always `true` with batteries disabled.
+    ///
+    /// Multi-model runs bill rounds at the *scenario* task's
+    /// coefficients even under heterogeneous specs — a documented
+    /// approximation: the battery is a device property, and per-spec
+    /// billing would make a node's lifetime depend on scheduler
+    /// routing.
+    fn battery_covers_round(&mut self, slot: usize, tau: u64, d: u64) -> bool {
+        if !self.energy.has_battery() {
+            return true;
+        }
+        let e = self.energy_coeffs(slot).energy(tau as f64, d as f64);
+        if self.batteries[slot] - e < self.energy.battery_floor_j {
+            self.depleted[slot] = true;
+            return false;
+        }
+        self.batteries[slot] -= e;
+        true
+    }
+
+    /// Refill `slot` to its drawn capacity and clear the depletion mark
+    /// (no-op with batteries disabled).
+    fn recharge(&mut self, slot: usize) {
+        if self.energy.has_battery() {
+            self.batteries[slot] = self.battery_caps[slot];
+            self.depleted[slot] = false;
+        }
+    }
+
     /// (Re-)solve the allocation over the currently alive fleet. Called
     /// lazily whenever `dirty` (fleet changed) — the "incremental
     /// per-arrival re-solve" path: existing allocators run unchanged on
@@ -738,9 +898,41 @@ impl<'rt> EventEngine<'rt> {
         let cfg = &self.scenario.config;
         let bounds =
             Bounds::proportional(cfg.total_samples, alive.len(), cfg.d_lo_frac, cfg.d_hi_frac);
-        let alloc =
+        let alloc = if self.energy.has_budget() {
+            // finite per-cycle budget: wrap the base allocator in the
+            // suggest-and-improve energy clip/repair (arXiv:2012.00143)
+            let params = self.energy.params();
+            let coeffs: Vec<EnergyCoeffs> = alive
+                .iter()
+                .map(|&i| {
+                    let l = &self.slots[i].learner;
+                    EnergyCoeffs::from_parts(
+                        &l.device,
+                        &l.link,
+                        &cfg.task,
+                        cfg.data_scenario,
+                        &params,
+                    )
+                })
+                .collect();
+            let budgets = vec![self.energy.budget_j; alive.len()];
+            let out = allocate_energy_constrained(
+                self.allocator.as_ref(),
+                &costs,
+                &coeffs,
+                &budgets,
+                cfg.t_cycle_s,
+                cfg.total_samples,
+                &bounds,
+            )?;
+            self.energy_clamped = out.clamped_count();
+            out.alloc
+        } else {
+            // the pre-energy path, untouched: an infinite budget never
+            // even builds the coefficient vectors
             self.allocator
-                .allocate(&costs, cfg.t_cycle_s, cfg.total_samples, &bounds)?;
+                .allocate(&costs, cfg.t_cycle_s, cfg.total_samples, &bounds)?
+        };
         self.alloc_costs = costs;
         self.alloc_slots = alive;
         // slot→position index: per-arrival lookups are O(1) at 10k+
@@ -804,9 +996,18 @@ impl<'rt> EventEngine<'rt> {
             effective: f64,
         }
         let mut arriving: Vec<Arriving> = Vec::with_capacity(alive.len());
+        let mut departs: Vec<usize> = Vec::new();
         for (pos, &si) in alive.iter().enumerate() {
             let tau = alloc.tau[pos];
             let d = alloc.d[pos];
+            if tau > 0 && !self.battery_covers_round(si, tau, d) {
+                // battery floor crossed: this node leaves instead of
+                // running the cycle. Outcomes were pre-drawn for the
+                // whole fleet above, so skipping here never shifts the
+                // fault stream of its allocation-mates.
+                departs.push(si);
+                continue;
+            }
             let planned = self.slots[si].learner.cost.time(tau as f64, d as f64);
             if !update_arrives(outcomes[pos], planned, t_cycle, &self.faults) {
                 // dropped or deadline-missed: the node burned its cycle
@@ -869,6 +1070,11 @@ impl<'rt> EventEngine<'rt> {
                     train_loss,
                 }),
             );
+        }
+        // battery departures leave at the cycle head: a Leave at `now`
+        // pops before every arrival above (all at now + effective > now)
+        for slot in departs {
+            q.push(now, Event::Leave { slot });
         }
         Ok(())
     }
@@ -933,6 +1139,16 @@ impl<'rt> EventEngine<'rt> {
         if tau == 0 {
             // MEL infeasible for this node right now — idle one cycle.
             return (RoundPlan::Retry { slot, at: now + t_cycle }, None);
+        }
+        if !self.battery_covers_round(slot, tau, d) {
+            // battery floor crossed: the node departs instead of
+            // running — through the normal churn path (and possibly a
+            // duty-cycled Rejoin), at this entry's own timestamp. The
+            // check sits *before* the fault draw: battery-free runs
+            // take the identical code path (bit-identity with
+            // pre-energy builds), and battery runs skip the same draws
+            // in deterministic plan order for every shard/thread count.
+            return (RoundPlan::Depart { slot, at: now }, None);
         }
         self.stats.dispatched += 1;
         let outcome = draw_outcomes(&self.faults, 1, &mut self.rng)[0];
@@ -1051,6 +1267,7 @@ impl<'rt> EventEngine<'rt> {
             match plan {
                 RoundPlan::Skip => {}
                 RoundPlan::Retry { slot, at } => q.push(at, Event::Redispatch { slot }),
+                RoundPlan::Depart { slot, at } => q.push(at, Event::Leave { slot }),
                 RoundPlan::Run(rp) => {
                     let (params, train_loss) = match trained[i].take() {
                         Some((p, loss)) => (Some(p), loss),
@@ -1270,6 +1487,16 @@ impl<'rt> EventEngine<'rt> {
         self.alive_learners += 1;
         self.dirty = true;
         self.stats.joins += 1;
+        if self.energy.has_battery() {
+            // newcomers draw a fresh battery from the dedicated stream
+            // (serial, in join order — deterministic for every --shards)
+            let cap = self
+                .energy_rng
+                .uniform_range(self.energy.battery_lo_j, self.energy.battery_hi_j);
+            self.batteries.push(cap);
+            self.battery_caps.push(cap);
+            self.depleted.push(false);
+        }
         if self.churn.mean_lifetime_s > 0.0 {
             let life = exp_sample(&mut self.churn_rng, self.churn.mean_lifetime_s);
             q.push(now + life, Event::Leave { slot: id });
@@ -1404,6 +1631,16 @@ impl<'rt> EventEngine<'rt> {
             alive_learners: self.alive_learners,
             rng: self.rng.state(),
             churn_rng: self.churn_rng.state(),
+            energy: if self.energy.has_battery() {
+                Some(EnergyState {
+                    batteries: self.batteries.clone(),
+                    caps: self.battery_caps.clone(),
+                    depleted: self.depleted.clone(),
+                    rng: self.energy_rng.state(),
+                })
+            } else {
+                None
+            },
             fading: self.fading.as_ref().map(|fp| fp.state()),
             alloc: self.alloc.as_ref().map(|a| {
                 (a.clone(), self.alloc_costs.clone(), self.alloc_slots.clone())
@@ -1431,6 +1668,29 @@ impl<'rt> EventEngine<'rt> {
         self.alive_learners = core.alive_learners;
         self.rng = Rng::from_state(core.rng);
         self.churn_rng = Rng::from_state(core.churn_rng);
+        match (self.energy.has_battery(), core.energy) {
+            (true, Some(es)) => {
+                ensure!(
+                    es.batteries.len() == self.slots.len()
+                        && es.caps.len() == self.slots.len()
+                        && es.depleted.len() == self.slots.len(),
+                    "battery state tracks {} learners, checkpoint has {} slots",
+                    es.batteries.len(),
+                    self.slots.len()
+                );
+                self.batteries = es.batteries;
+                self.battery_caps = es.caps;
+                self.depleted = es.depleted;
+                self.energy_rng = Rng::from_state(es.rng);
+            }
+            (false, None) => {}
+            (true, None) => {
+                bail!("engine has batteries enabled but the checkpoint has none")
+            }
+            (false, Some(_)) => {
+                bail!("checkpoint has battery state but the engine has none")
+            }
+        }
         let params = self.scenario.config.channel;
         match (self.fading.as_mut(), core.fading) {
             (Some(fp), Some(state)) => {
@@ -1708,6 +1968,43 @@ impl<'rt> EventEngine<'rt> {
                         self.alive_learners -= 1;
                         self.dirty = true;
                         self.stats.leaves += 1;
+                        if self.is_depleted(slot) && self.energy.recharge_s > 0.0 {
+                            // duty cycle: a drained node returns once
+                            // its recharge window elapses
+                            q.push(now + self.energy.recharge_s, Event::Rejoin { slot });
+                        }
+                    } else if self.slots[slot].alive && self.is_depleted(slot) {
+                        // the churn floor blocked a battery departure:
+                        // recharge in place (the fleet must not starve
+                        // below min_learners) and re-arm the slot's
+                        // dispatch chain, which the Depart consumed
+                        self.recharge(slot);
+                        if let EnginePolicy::Async(_) = opts.policy {
+                            let at = if self.energy.recharge_s > 0.0 {
+                                now + self.energy.recharge_s
+                            } else {
+                                now + t_cycle
+                            };
+                            q.push(at, Event::Redispatch { slot });
+                        }
+                        // barrier mode re-dispatches alive slots at the
+                        // next boundary anyway
+                    }
+                }
+                Event::Rejoin { slot } => {
+                    // duty-cycled return from a battery Leave; when the
+                    // capacity cap blocks it, the node is gone for good
+                    // (recharges are not Poisson joins — no new
+                    // lifetime/retry draw)
+                    if !self.slots[slot].alive && self.alive_count() < self.max_learners() {
+                        self.recharge(slot);
+                        self.slots[slot].alive = true;
+                        self.alive_learners += 1;
+                        self.dirty = true;
+                        self.stats.joins += 1;
+                        if let EnginePolicy::Async(_) = opts.policy {
+                            self.dispatch_one(&mut q, now, slot, &global, &opts.train, version)?;
+                        }
                     }
                 }
                 Event::Trace { idx } => {
@@ -2423,6 +2720,46 @@ impl<'rt> EventEngine<'rt> {
                         self.alive_learners -= 1;
                         subs[model_of[slot]].dirty = true;
                         self.stats.leaves += 1;
+                        if self.is_depleted(slot) && self.energy.recharge_s > 0.0 {
+                            // duty cycle — identical to the single-model
+                            // path: the drained node returns after its
+                            // recharge window
+                            q.push(now + self.energy.recharge_s, Event::Rejoin { slot });
+                        }
+                    } else if self.slots[slot].alive && self.is_depleted(slot) {
+                        // churn floor blocked a battery departure:
+                        // recharge in place and re-arm the dispatch
+                        // chain the Depart consumed
+                        self.recharge(slot);
+                        let at = if self.energy.recharge_s > 0.0 {
+                            now + self.energy.recharge_s
+                        } else {
+                            now + t_cycle
+                        };
+                        q.push(at, Event::Redispatch { slot });
+                    }
+                }
+                Event::Rejoin { slot } => {
+                    // duty-cycled return from a battery Leave; blocked
+                    // by the capacity cap = gone for good. The node
+                    // resumes on its current model — scheduler routing
+                    // happens on completed rounds and joins only.
+                    if !self.slots[slot].alive && self.alive_count() < self.max_learners() {
+                        self.recharge(slot);
+                        self.slots[slot].alive = true;
+                        self.alive_learners += 1;
+                        self.stats.joins += 1;
+                        let m = model_of[slot];
+                        subs[m].dirty = true;
+                        let version = registry.models[m].version;
+                        let scheduled = self.dispatch_model(
+                            &mut q, now, slot, m, &model_of, &mut subs[m], &specs[m],
+                            &globals[m], &opts.train, version,
+                        )?;
+                        if let Some(planned) = scheduled {
+                            registry.models[m].record_dispatch(version);
+                            scheduler.observe_dispatch(m, now + planned);
+                        }
                     }
                 }
                 Event::Trace { idx } => {
@@ -2913,6 +3250,125 @@ mod tests {
             per_shard.iter().all(|&n| n > 0),
             "some regional coordinator saw no events: {per_shard:?}"
         );
+    }
+
+    // --- energy: budgets + battery-driven churn -------------------------
+
+    use crate::config::EnergyConfig;
+
+    fn battery_config(lo: f64, hi: f64, floor: f64, recharge: f64) -> EnergyConfig {
+        EnergyConfig {
+            battery_lo_j: lo,
+            battery_hi_j: hi,
+            battery_floor_j: floor,
+            recharge_s: recharge,
+            ..EnergyConfig::disabled()
+        }
+    }
+
+    #[test]
+    fn battery_free_energy_config_is_bit_identical_to_baseline() {
+        // a disabled (or budget-∞) energy config must not perturb any
+        // RNG stream: the run is byte-identical to one that never heard
+        // of energy at all
+        let run = |energy: Option<EnergyConfig>| {
+            let mut engine = phantom_engine(10, ChurnConfig::new(0.2, 60.0));
+            if let Some(e) = energy {
+                engine = engine.with_energy(e);
+            }
+            let records = engine.run(&async_opts(6)).unwrap();
+            (record_digest(&records), engine.stats)
+        };
+        let (base, base_stats) = run(None);
+        for e in [
+            EnergyConfig::disabled(),
+            EnergyConfig { budget_j: f64::INFINITY, ..EnergyConfig::disabled() },
+        ] {
+            let (d, s) = run(Some(e));
+            assert_eq!(d, base, "inert energy config changed the run");
+            assert_eq!(s, base_stats);
+        }
+    }
+
+    #[test]
+    fn battery_depletion_drives_leaves_and_duty_cycled_rejoins() {
+        // paper-default laptops burn ~20 J per async round: 10–30 J
+        // batteries deplete within a cycle or two, leave, recharge for
+        // 20 s and rejoin — all from the dedicated energy stream
+        let energy = battery_config(10.0, 30.0, 0.5, 20.0);
+        let run = || {
+            let mut engine =
+                phantom_engine(8, ChurnConfig::disabled()).with_energy(energy);
+            let records = engine.run(&async_opts(6)).unwrap();
+            (record_digest(&records), engine.stats)
+        };
+        let (da, sa) = run();
+        let (db, sb) = run();
+        assert_eq!(da, db, "battery churn must be deterministic");
+        assert_eq!(sa, sb);
+        assert!(sa.leaves > 0, "batteries never depleted: {sa:?}");
+        assert!(sa.joins > 0, "nobody rejoined after recharging: {sa:?}");
+    }
+
+    #[test]
+    fn barrier_battery_departs_and_recharge_zero_means_no_rejoin() {
+        let energy = battery_config(10.0, 30.0, 0.5, 0.0);
+        let mut engine = phantom_engine(8, ChurnConfig::disabled()).with_energy(energy);
+        let opts = EngineOptions {
+            train: TrainOptions { cycles: 5, ..Default::default() },
+            ..Default::default()
+        };
+        let records = engine.run(&opts).unwrap();
+        assert_eq!(records.len(), 5);
+        assert!(engine.stats.leaves > 0, "no battery departures: {:?}", engine.stats);
+        assert_eq!(engine.stats.joins, 0, "recharge_s = 0 must mean gone for good");
+        assert_eq!(
+            engine.stats.final_alive,
+            8 - engine.stats.leaves,
+            "every battery departure is permanent here"
+        );
+    }
+
+    #[test]
+    fn battery_churn_is_bit_identical_across_shards() {
+        // energy exhaustion is *correlated* churn; the shard topology
+        // must still never show up in the results, even combined with
+        // Poisson churn and duty-cycled rejoins
+        let energy = battery_config(15.0, 45.0, 1.0, 25.0);
+        let run = |shards: usize| {
+            let mut engine = phantom_engine(12, ChurnConfig::new(0.2, 90.0))
+                .with_shards(shards)
+                .with_energy(energy);
+            let records = engine.run(&async_opts(6)).unwrap();
+            (record_digest(&records), engine.stats)
+        };
+        let (flat, flat_stats) = run(1);
+        assert!(flat_stats.leaves > 0, "no departures at all: {flat_stats:?}");
+        for k in [2usize, 8] {
+            let (d, s) = run(k);
+            assert_eq!(d, flat, "battery churn diverged at k={k}");
+            assert_eq!(s, flat_stats, "battery stats diverged at k={k}");
+        }
+    }
+
+    #[test]
+    fn finite_budget_clamps_the_allocation_and_changes_the_run() {
+        let digest = |energy: Option<EnergyConfig>| {
+            let mut engine = phantom_engine(8, ChurnConfig::disabled());
+            if let Some(e) = energy {
+                engine = engine.with_energy(e);
+            }
+            let records = engine.run(&async_opts(4)).unwrap();
+            (record_digest(&records), engine.energy_clamped_count())
+        };
+        let (base, clamped) = digest(None);
+        assert_eq!(clamped, 0);
+        // ~12 J bites the laptops (≈20 J unconstrained rounds) but not
+        // the embedded nodes (≈0.5 J)
+        let tight = EnergyConfig { budget_j: 12.0, ..EnergyConfig::disabled() };
+        let (gated, clamped) = digest(Some(tight));
+        assert!(clamped > 0, "the budget never bit any learner");
+        assert_ne!(gated, base, "clamping must change the record stream");
     }
 
     // --- trace-driven workloads + checkpoint/restore -------------------

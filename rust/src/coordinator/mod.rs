@@ -32,7 +32,9 @@ pub mod faults;
 pub mod learner;
 pub mod orchestrator;
 
-pub use checkpoint::{CoreState, EngineCheckpoint, EventCheckpoint, MultiModelCheckpoint};
+pub use checkpoint::{
+    CoreState, EnergyState, EngineCheckpoint, EventCheckpoint, MultiModelCheckpoint,
+};
 pub use engine::{
     EngineError, EngineOptions, EnginePolicy, EngineStats, EventEngine, ExecMode, MultiRunOutcome,
     RunOutcome,

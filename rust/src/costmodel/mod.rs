@@ -21,10 +21,33 @@
 //! allocation layer needs is derived here: `t_k`, the forced batch size
 //! `d_k(τ_k)` under the full-duration constraint `t_k = T` (eq. 7b), its
 //! inverse, and integer feasibility helpers.
+//!
+//! # Energy forecasts
+//!
+//! The authors' sequel (arXiv:2012.00143) adds per-device energy budgets
+//! `E_k ≤ E_k^max` alongside the deadline. [`EnergyCoeffs`] collapses a
+//! learner's round energy to the same quadratic shape as eq. (5):
+//!
+//! ```text
+//! E_k(τ, d) = e²_k · τ_k · d_k  +  e¹_k · d_k  +  e⁰_k
+//! e²_k = κ · f_k² · C_m                       (compute, E^comp of 2012.00143 §II)
+//! e¹_k = P_k · C¹_k + (r−1) · P_k · down¹_k   (per-sample radio)
+//! e⁰_k = P_k · C⁰_k + (r−1) · P_k · down⁰_k   (fixed model exchange)
+//! ```
+//!
+//! where `r` is the RX/TX power ratio
+//! ([`crate::energy::EnergyParams::rx_power_ratio`], 1.0 = the
+//! conservative Wi-Fi default that folds
+//! receive energy in at TX power) and `down¹/down⁰` are the downlink
+//! shares of `C¹/C⁰`. The allocator uses the same suggest-and-improve
+//! frontier helpers as the deadline: [`EnergyCoeffs::tau_max_energy`]
+//! and [`EnergyCoeffs::d_max_energy_at_tau`] mirror
+//! [`LearnerCost::tau_max_int`] / [`LearnerCost::d_max_int_for_tau`].
 
 
 use crate::channel::Link;
 use crate::device::Device;
+use crate::energy::EnergyParams;
 
 /// Which of the paper's two data scenarios is being run (§I, footnotes 1–3).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
@@ -164,6 +187,120 @@ impl LearnerCost {
     }
 }
 
+/// Per-learner round-energy coefficients — the quadratic energy
+/// analogue of [`LearnerCost`], after arXiv:2012.00143:
+/// `E_k(τ, d) = e²·τ·d + e¹·d + e⁰` joules.
+///
+/// `e²` is the CMOS compute term `κ·f²·C_m` (energy per sample-epoch);
+/// `e¹`/`e⁰` price the radio time of [`LearnerCost::c1`]/
+/// [`LearnerCost::c0`] at the device's TX power, with the downlink
+/// share rescaled by the RX/TX power ratio. At
+/// [`EnergyParams::rx_power_ratio`] = 1.0 the rescaling term is exactly
+/// `0.0`, so `e¹ = P·c1` and `e⁰ = P·c0` bit-for-bit — the audit-era
+/// "fold RX in at TX power" behavior is the default, now explicit.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct EnergyCoeffs {
+    /// `e²_k = κ·f_k²·C_m` — joules per (sample × epoch) of compute.
+    pub e2: f64,
+    /// `e¹_k` — joules per sample of communication.
+    pub e1: f64,
+    /// `e⁰_k` — joules of fixed model exchange.
+    pub e0: f64,
+}
+
+impl EnergyCoeffs {
+    /// Build the coefficients from hardware, link, task constants and
+    /// the energy model knobs — the energy sibling of
+    /// [`LearnerCost::from_parts`] (same inputs split the comm time the
+    /// same way, so the two forecasts always describe the same round).
+    pub fn from_parts(
+        dev: &Device,
+        link: &Link,
+        task: &TaskParams,
+        scenario: DataScenario,
+        params: &EnergyParams,
+    ) -> Self {
+        let rate = link.rate_bps;
+        assert!(rate > 0.0, "link rate must be positive");
+        let e2 = params.kappa * dev.cpu_hz * dev.cpu_hz * task.compute_cycles_per_sample;
+        let data_term = match scenario {
+            DataScenario::TaskParallelization => {
+                (task.features * task.data_precision_bits) as f64
+            }
+            DataScenario::DistributedDataset => 0.0,
+        };
+        // Downlink (t_k^S) carries the batch data plus one model copy;
+        // uplink (t_k^R) carries the other. c1/c0 sum both directions.
+        let c1 = (data_term
+            + 2.0 * (task.model_precision_bits * task.model_size_per_sample) as f64)
+            / rate;
+        let c0 = 2.0 * task.model_bits() as f64 / rate;
+        let down1 = (data_term
+            + (task.model_precision_bits * task.model_size_per_sample) as f64)
+            / rate;
+        let down0 = task.model_bits() as f64 / rate;
+        // (r − 1) is exactly 0.0 at the default ratio, keeping e1/e0
+        // bit-identical to the pre-ratio P·c1 / P·c0 values.
+        let r = params.rx_power_ratio;
+        let p = dev.tx_power_w;
+        let e1 = p * c1 + (r - 1.0) * p * down1;
+        let e0 = p * c0 + (r - 1.0) * p * down0;
+        Self { e2, e1, e0 }
+    }
+
+    /// Exact construction from raw coefficients (tests / synthetic sweeps).
+    pub fn new(e2: f64, e1: f64, e0: f64) -> Self {
+        assert!(e2 > 0.0 && e1 >= 0.0 && e0 >= 0.0);
+        Self { e2, e1, e0 }
+    }
+
+    /// Round energy `E_k(τ, d)` in joules.
+    #[inline]
+    pub fn energy(&self, tau: f64, d: f64) -> f64 {
+        self.e2 * tau * d + self.e1 * d + self.e0
+    }
+
+    /// Max whole updates that keep the round inside `e_max` joules at
+    /// integer batch `d` — the energy analogue of
+    /// [`LearnerCost::tau_max_int`]. `None` when even τ = 0 (the bare
+    /// exchange) busts the budget: the learner cannot afford a round.
+    #[inline]
+    pub fn tau_max_energy(&self, d: u64, e_max: f64) -> Option<u64> {
+        if !e_max.is_finite() {
+            return Some(u64::MAX);
+        }
+        if d == 0 {
+            return None;
+        }
+        let num = e_max - self.e0 - self.e1 * d as f64;
+        if num < 0.0 {
+            return None;
+        }
+        Some((num / (self.e2 * d as f64)).floor() as u64)
+    }
+
+    /// Largest integer batch that keeps `tau` updates inside `e_max`
+    /// joules — the energy analogue of [`LearnerCost::d_max_int_for_tau`].
+    /// `None` when the fixed exchange alone busts the budget;
+    /// `Some(u64::MAX)` when the per-sample terms vanish (τ = 0 on a
+    /// zero-`e¹` link) and any batch fits.
+    #[inline]
+    pub fn d_max_energy_at_tau(&self, tau: u64, e_max: f64) -> Option<u64> {
+        if !e_max.is_finite() {
+            return Some(u64::MAX);
+        }
+        let num = e_max - self.e0;
+        if num < 0.0 {
+            return None;
+        }
+        let denom = self.e2 * tau as f64 + self.e1;
+        if denom <= 0.0 {
+            return Some(u64::MAX);
+        }
+        Some((num / denom).floor() as u64)
+    }
+}
+
 /// Batch-size bounds `d_l ≤ d_k ≤ d_u` (eq. 7f).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct Bounds {
@@ -172,6 +309,7 @@ pub struct Bounds {
 }
 
 impl Bounds {
+    /// Explicit bounds; panics unless `1 ≤ d_lo ≤ d_hi` (eq. 7e/7f).
     pub fn new(d_lo: u64, d_hi: u64) -> Self {
         assert!(d_lo >= 1, "d_l must be >= 1 (integer positivity, eq. 7e)");
         assert!(d_hi >= d_lo, "need d_l <= d_u");
@@ -190,11 +328,13 @@ impl Bounds {
         Self::new(d_lo, d_hi.max(d_lo))
     }
 
+    /// Project `d` onto `[d_lo, d_hi]`.
     #[inline]
     pub fn clamp(&self, d: u64) -> u64 {
         d.clamp(self.d_lo, self.d_hi)
     }
 
+    /// Whether `d` already satisfies the box constraint.
     #[inline]
     pub fn contains(&self, d: u64) -> bool {
         (self.d_lo..=self.d_hi).contains(&d)
@@ -296,5 +436,73 @@ mod tests {
     #[should_panic]
     fn bounds_reject_inverted() {
         Bounds::new(10, 5);
+    }
+
+    #[test]
+    fn energy_coeffs_default_ratio_matches_tx_folding() {
+        // at rx_power_ratio = 1.0 the coefficients must be bit-identical
+        // to pricing the whole comm time (c1·d + c0) at TX power — the
+        // audit-era behavior the default preserves
+        let mut rng = Rng::new(91);
+        let devs = sample_fleet(3, &DeviceRanges::default(), &mut rng);
+        let task = TaskParams::default();
+        let params = EnergyParams::default();
+        assert_eq!(params.rx_power_ratio, 1.0);
+        for dev in &devs {
+            let link = sample_link(&ChannelParams::default(), dev, &mut rng);
+            let cost = LearnerCost::from_parts(dev, &link, &task, DataScenario::default());
+            let e = EnergyCoeffs::from_parts(dev, &link, &task, DataScenario::default(), &params);
+            assert_eq!(e.e1, dev.tx_power_w * cost.c1);
+            assert_eq!(e.e0, dev.tx_power_w * cost.c0);
+            assert_eq!(
+                e.e2,
+                params.kappa * dev.cpu_hz * dev.cpu_hz * task.compute_cycles_per_sample
+            );
+        }
+    }
+
+    #[test]
+    fn energy_coeffs_rx_ratio_scales_only_the_downlink() {
+        let mut rng = Rng::new(92);
+        let devs = sample_fleet(1, &DeviceRanges::default(), &mut rng);
+        let link = sample_link(&ChannelParams::default(), &devs[0], &mut rng);
+        let task = TaskParams::default();
+        let base = EnergyCoeffs::from_parts(
+            &devs[0], &link, &task, DataScenario::default(), &EnergyParams::default(),
+        );
+        let half = EnergyCoeffs::from_parts(
+            &devs[0],
+            &link,
+            &task,
+            DataScenario::default(),
+            &EnergyParams { rx_power_ratio: 0.5, ..EnergyParams::default() },
+        );
+        // cheaper RX never raises energy, and compute is untouched
+        assert!(half.e1 < base.e1 && half.e0 < base.e0);
+        assert_eq!(half.e2, base.e2);
+        // TaskParallelization downlink carries the data: more than half
+        // of c1's energy is downlink, so the drop exceeds 25%
+        assert!(half.e1 < 0.75 * base.e1);
+        // c0 splits evenly: ratio 0.5 removes exactly a quarter
+        assert!((half.e0 - 0.75 * base.e0).abs() < 1e-15 * base.e0);
+    }
+
+    #[test]
+    fn energy_frontier_helpers_are_tight() {
+        let e = EnergyCoeffs::new(2e-4, 5e-5, 0.02);
+        let budget = 1.5f64;
+        let d = 800u64;
+        let tau = e.tau_max_energy(d, budget).unwrap();
+        assert!(e.energy(tau as f64, d as f64) <= budget + 1e-9);
+        assert!(e.energy((tau + 1) as f64, d as f64) > budget);
+        let dm = e.d_max_energy_at_tau(tau.max(1), budget).unwrap();
+        assert!(e.energy(tau.max(1) as f64, dm as f64) <= budget + 1e-9);
+        assert!(e.energy(tau.max(1) as f64, (dm + 1) as f64) > budget);
+        // infinite budget: everything fits
+        assert_eq!(e.tau_max_energy(d, f64::INFINITY), Some(u64::MAX));
+        assert_eq!(e.d_max_energy_at_tau(3, f64::INFINITY), Some(u64::MAX));
+        // a budget below the bare exchange affords no round at all
+        assert_eq!(e.tau_max_energy(d, 0.01), None);
+        assert_eq!(e.d_max_energy_at_tau(1, 0.01), None);
     }
 }

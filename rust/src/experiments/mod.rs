@@ -11,11 +11,15 @@
 //!   ROADMAP's fleet-scale direction);
 //! * [`multi_model`] — FedAST-style multi-tenancy sweep: M ∈ {1…8}
 //!   concurrent models over one shared churny fleet, buffered async
-//!   aggregation, per-model staleness / rounds-to-target / utilization.
+//!   aggregation, per-model staleness / rounds-to-target / utilization;
+//! * [`energy_sweep`] — staleness/utilization/churn vs per-learner
+//!   energy budget `E_k^max` (the sequel arXiv:2012.00143), with the
+//!   unconstrained allocator as a byte-identity oracle at `∞`.
 //!
 //! Benches and examples call these; the CLI exposes them as subcommands.
 
 pub mod ablation;
+pub mod energy_sweep;
 pub mod fig2;
 pub mod fig3;
 pub mod fleet_scale;

@@ -22,8 +22,9 @@
 //! | [`config`] | scenario configuration (incl. engine + churn knobs), presets, JSON I/O |
 //! | [`channel`] | 802.11-like indoor wireless link simulator |
 //! | [`device`] | heterogeneous edge-device profiles |
-//! | [`costmodel`] | eq. (1)–(5): per-learner time coefficients `C²,C¹,C⁰` |
-//! | [`solver`] | numeric substrate: projected gradient, augmented Lagrangian, KKT |
+//! | [`costmodel`] | eq. (1)–(5): per-learner time coefficients `C²,C¹,C⁰` + energy coefficients `e₂,e₁,e₀` |
+//! | [`energy`] | per-cycle energy audits/forecasts (κf²-compute + radio TX/RX, arXiv:2012.00143) |
+//! | [`solver`] | numeric substrate: projected gradient, augmented Lagrangian (incl. energy hinge), KKT |
 //! | [`allocation`] | the paper's algorithms + baselines (relaxed, SAI, exact, ETA, sync) |
 //! | [`staleness`] | staleness metrics (eq. 6, 10, 13) |
 //! | [`aggregation`] | cycle aggregation rules + staleness-weighted async server updates |
@@ -196,6 +197,47 @@
 //! queue, so the same trace replays bit-identically for every
 //! `--shards`/`--threads` setting (`rust/benches/trace_replay.rs`
 //! times a 5000-learner replay).
+//!
+//! ## Energy budgets and battery-driven churn
+//!
+//! The authors' sequel (arXiv:2012.00143) prices each cycle in joules:
+//! `E_k(τ,d) = e₂·τ·d + e₁·d + e₀` — κf²-scaled compute plus radio
+//! TX/RX ([`costmodel::EnergyCoeffs`], audited by [`energy`]). Two
+//! optional knobs build on it ([`config::EnergyConfig`], CLI
+//! `train|fleet --energy-budget J`):
+//!
+//! * **Budget-constrained allocation**
+//!   ([`allocation::energy::allocate_energy_constrained`]): every
+//!   suggested `(τ_k, d_k)` is clipped to the energy-feasible frontier
+//!   `E_k ≤ E_k^max` *before* the `Σ d_k = D` repair, and the repair
+//!   itself is capped by the box ∧ deadline ∧ energy frontiers. The
+//!   typed [`allocation::energy::AllocationOutcome`] reports who was
+//!   clamped and any unplaceable shortfall. With `budget = ∞` the
+//!   wrapper is a verbatim passthrough — **byte-identical** to the
+//!   unconstrained allocator (the differential oracle in
+//!   `rust/tests/energy_path.rs`).
+//! * **Battery-driven churn**: with batteries enabled
+//!   (`battery_hi_j > 0`) the event engine bills each dispatched round
+//!   against the learner's charge; depletion becomes a `Leave` plus a
+//!   duty-cycled `Rejoin` after `recharge_s`, through the existing
+//!   churn machinery. Billing happens in the serial plan phase on a
+//!   dedicated salted RNG stream, so battery runs stay bit-identical
+//!   across `--shards`/`--threads` and across checkpoint/resume
+//!   ([`coordinator::checkpoint::EnergyState`]).
+//!
+//! `asyncmel energy-sweep` sweeps a budget grid over the phantom
+//! engine and hard-fails if the `∞` point diverges from the
+//! unconstrained oracle; `rust/benches/energy_fleet.rs` times both
+//! paths at fleet scale.
+//!
+//! ## Determinism contracts
+//!
+//! Every bit-identity guarantee referenced above — the
+//! `(time, seq, shard_id)` merge order, ε = 0 coalescing, shard/thread
+//! invariance, checkpoint hex-float round-trips, the differential
+//! oracle suite, and the energy→churn event ordering — is consolidated
+//! in one place: `docs/ARCHITECTURE.md` at the repository root, with
+//! pointers to the test that enforces each contract.
 //!
 //! ## In-tree infrastructure substrates
 //!

@@ -28,7 +28,7 @@ use asyncmel::coordinator::{
     EngineOptions, EnginePolicy, EventEngine, ExecMode, Orchestrator, TrainOptions,
 };
 use asyncmel::data::{synth, SynthConfig, SynthDataset};
-use asyncmel::experiments::{ablation, fig2, fig3, fleet_scale, multi_model};
+use asyncmel::experiments::{ablation, energy_sweep, fig2, fig3, fleet_scale, multi_model};
 use asyncmel::metrics::{fmt_f, fmt_opt_u, Table};
 use asyncmel::multimodel::{
     AdaptiveBufferConfig, ModelTaskSpec, MultiModelConfig, MultiModelOptions, SchedulerKind,
@@ -37,7 +37,7 @@ use asyncmel::runtime::{default_artifacts_dir, Runtime};
 use asyncmel::serve::ServeOptions;
 
 const USAGE: &str =
-    "usage: asyncmel <info|solve|fig2|fig3|train|fleet|multi|ablation|serve|trace-gen> [flags]
+    "usage: asyncmel <info|solve|fig2|fig3|train|fleet|multi|ablation|energy-sweep|serve|trace-gen> [flags]
   info                               environment + artifact status
   solve    --k N --t SECS            compare all allocation schemes
   fig2     --seeds N --csv PATH      staleness vs K sweep (paper Fig. 2)
@@ -65,8 +65,13 @@ const USAGE: &str =
                                      FedAST-style adaptive B in [1, BMAX], retuned
                                      from the observed staleness EWMA
            --fading-rho RHO          event engine: per-cycle Gauss-Markov link fading
+           --energy-budget J         event engine: per-learner per-cycle energy cap
+                                     E_k^max in joules ('inf' = unconstrained); the
+                                     allocator clips infeasible (tau, d) to the
+                                     energy-feasible frontier before repair
   fleet    --ks 10,100,1000,5000 --cycles N --scheme S
            --churn-join R --churn-life S --shards K --csv PATH
+           --energy-budget J         per-learner energy cap for the sweep
                                      event-engine scaling sweep (phantom numerics)
            --real [--threads N] [--epsilon-window S]
                                      real-numerics sweep instead (native MLP through
@@ -77,6 +82,10 @@ const USAGE: &str =
            --hetero --adaptive-buffer BMAX [--buffer-target S --buffer-alpha A]
                                      multi-model concurrency sweep (phantom numerics)
   ablation --seeds N --csv PATH      batch-bounds sensitivity (ABL-1)
+  energy-sweep --budgets inf,40,25,18,12 --k N --cycles N --scheme S --csv PATH
+                                     staleness/churn vs energy budget E_k^max;
+                                     the 'inf' point is digest-checked against the
+                                     unconstrained allocator (differential oracle)
   serve    --spool DIR               daemon: watch DIR for submission JSON files
            --once                    drain the queue, then exit (no polling)
            --poll-ms MS              idle poll interval (default 200)
@@ -274,6 +283,23 @@ fn epsilon_from_args(base: &mut ScenarioConfig, args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `--energy-budget J` → per-learner per-cycle allocation budget
+/// `E_k^max` on the scenario's energy config (`inf` = unconstrained,
+/// the default). Returns whether the flag was given: the budget path
+/// lives in the event engine's allocator wrapper, so callers reject
+/// the flag on the lock-step orchestrator.
+fn energy_from_args(base: &mut ScenarioConfig, args: &Args) -> Result<bool> {
+    if args.get("energy-budget").is_none() {
+        return Ok(false);
+    }
+    let budget: f64 = args.require("energy-budget")?;
+    base.energy.budget_j = budget;
+    if let Err(e) = base.energy.validate() {
+        bail!("--energy-budget: {e}");
+    }
+    Ok(true)
+}
+
 /// `--shards K` → scenario override: hierarchical coordinator shard
 /// count (rejects 0, same as the JSON intake path).
 fn shards_from_args(base: &mut ScenarioConfig, args: &Args) -> Result<()> {
@@ -324,6 +350,13 @@ fn cmd_train(mut base: ScenarioConfig, args: &Args) -> Result<()> {
         .any(|k| args.get(k).is_some());
     if churn_flags_given && engine == EngineKind::Lockstep {
         bail!("churn flags require --engine event (the lock-step orchestrator has no churn model)");
+    }
+    let energy_flag_given = energy_from_args(&mut base, args)?;
+    if (energy_flag_given || base.energy.is_enabled()) && engine == EngineKind::Lockstep {
+        bail!(
+            "--energy-budget (and energy config sections) require --engine event \
+             (the budgeted allocator and battery churn live in the event engine)"
+        );
     }
     if args.get("fading-rho").is_some() {
         let rho: f64 = args.require("fading-rho")?;
@@ -544,7 +577,11 @@ fn cmd_fleet(mut base: ScenarioConfig, args: &Args) -> Result<()> {
     base.num_threads = args.get_or("threads", base.num_threads)?;
     epsilon_from_args(&mut base, args)?;
     shards_from_args(&mut base, args)?;
+    energy_from_args(&mut base, args)?;
     if args.has("real") {
+        if args.get("energy-budget").is_some() || base.energy.is_enabled() {
+            bail!("fleet --real has no energy model yet; drop --energy-budget / energy config");
+        }
         return cmd_fleet_real(base, args);
     }
     let ks: Vec<usize> = args.get_list_or("ks", vec![10, 100, 1000, 5000])?;
@@ -613,6 +650,34 @@ fn cmd_fleet_real(base: ScenarioConfig, args: &Args) -> Result<()> {
     println!("async-real sweep (steps/s; coalesce ε = {eps}s):");
     let async_rows = fleet_scale::run_async_real(&params, eps)?;
     println!("{}", fleet_scale::async_real_table(&async_rows).render());
+    Ok(())
+}
+
+/// `asyncmel energy-sweep` — staleness/utilization/churn vs the
+/// per-learner energy budget, with the unconstrained allocator as a
+/// byte-identity oracle at `∞` (see [`energy_sweep`]).
+fn cmd_energy_sweep(base: ScenarioConfig, args: &Args) -> Result<()> {
+    let defaults = energy_sweep::EnergySweepParams::default();
+    let k: usize = args.get_or("k", defaults.k)?;
+    let cycles: usize = args.get_or("cycles", defaults.cycles)?;
+    let scheme: AllocatorKind = args.get_or("scheme", defaults.scheme)?;
+    let budgets: Vec<f64> = args.get_list_or("budgets", defaults.budgets.clone())?;
+    if budgets.is_empty() {
+        bail!("--budgets needs at least one value (joules; 'inf' = unconstrained)");
+    }
+    let churn_base = if base.churn.is_enabled() { base.churn } else { defaults.churn };
+    let churn = churn_from_args(churn_base, args)?;
+    let params = energy_sweep::EnergySweepParams { base, k, cycles, scheme, churn, budgets };
+    let rows = energy_sweep::run(&params)?;
+    let table = energy_sweep::table(&rows);
+    println!("{}", table.render());
+    if rows.iter().any(|r| r.oracle_match == Some(false)) {
+        bail!("budget-∞ run diverged from the unconstrained oracle (determinism bug)");
+    }
+    if let Some(path) = args.get("csv") {
+        table.save_csv(path)?;
+        println!("csv -> {path}");
+    }
     Ok(())
 }
 
@@ -719,6 +784,7 @@ fn main() -> Result<()> {
         Some("fleet") => cmd_fleet(base, &args),
         Some("multi") => cmd_multi(base, &args),
         Some("ablation") => cmd_ablation(base, &args),
+        Some("energy-sweep") => cmd_energy_sweep(base, &args),
         Some("serve") => cmd_serve(&args),
         Some("trace-gen") => cmd_trace_gen(&args),
         Some(other) => bail!("unknown subcommand '{other}'\n{USAGE}"),

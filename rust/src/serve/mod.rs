@@ -110,6 +110,8 @@ pub struct RunSpec {
 }
 
 impl RunSpec {
+    /// Parse the submission's `"run"` object; unknown keys are
+    /// rejected, absent optional keys take the async defaults.
     pub fn from_json(v: &Value) -> Result<Self> {
         reject_unknown_keys(v, &["cycles", "policy", "alpha", "scheme", "eval_every"], "run spec")?;
         let cycles = v.usize_field("cycles").context("run spec")?;
@@ -189,6 +191,8 @@ pub struct Submission {
 }
 
 impl Submission {
+    /// Parse a `{"id", "scenario", "run"}` submission; the scenario is
+    /// any sparse [`ScenarioConfig`] JSON (paper defaults fill gaps).
     pub fn from_json(v: &Value) -> Result<Self> {
         reject_unknown_keys(v, &["id", "scenario", "run"], "submission")?;
         let id = v.str_field("id")?.to_string();
@@ -203,6 +207,7 @@ impl Submission {
         Ok(Self { id, scenario, run })
     }
 
+    /// Parse a submission from JSON text (one spool file / stdin line).
     pub fn parse(text: &str) -> Result<Self> {
         Self::from_json(&json::parse(text).context("parsing submission JSON")?)
     }

@@ -23,8 +23,23 @@
 //! not a certificate — exactly the situation the paper's
 //! suggest-and-improve step exists for.
 
-use crate::costmodel::{Bounds, LearnerCost};
+use crate::costmodel::{Bounds, EnergyCoeffs, LearnerCost};
 use crate::solver::projgrad::{clamp_box, minimize_projected, ProjGradOptions};
+
+/// Per-learner energy budgets for [`solve_relaxed_energy`] — the
+/// sequel's constraint `E_k(τ, d) = e²τd + e¹d + e⁰ ≤ E_k^max`
+/// (arXiv:2012.00143), entering the augmented Lagrangian as a one-sided
+/// (hinge) quadratic penalty `½ρ·max(0, (E_k − E_k^max)/E_k^max)²`.
+/// Learners with an infinite budget contribute nothing — the term (and
+/// its gradient) is skipped entirely, so an all-∞ constraint leaves the
+/// numeric path of [`solve_relaxed`] bit-identical.
+#[derive(Debug, Clone, Copy)]
+pub struct EnergyConstraint<'a> {
+    /// Energy forecast coefficients, one per learner.
+    pub coeffs: &'a [EnergyCoeffs],
+    /// Budgets `E_k^max` in joules; `f64::INFINITY` = unconstrained.
+    pub budgets: &'a [f64],
+}
 
 /// Options for [`solve_relaxed`].
 #[derive(Debug, Clone, Copy)]
@@ -101,7 +116,32 @@ pub fn solve_relaxed(
     bounds: &Bounds,
     opts: &RelaxedOptions,
 ) -> RelaxedSolution {
+    solve_relaxed_energy(costs, t_cycle, d_total, bounds, opts, None)
+}
+
+/// Solve the relaxed problem (8) extended with per-learner energy
+/// budgets (the sequel's problem, arXiv:2012.00143 §III). With
+/// `energy = None` — or every budget infinite — this performs exactly
+/// the arithmetic of [`solve_relaxed`] and returns the same solution
+/// bit-for-bit; finite budgets add a hinge penalty that pushes the
+/// iterate off the `t_k = T` manifold toward the energy-feasible side,
+/// leaving integerization and the frontier clip
+/// ([`crate::allocation::energy`]) to restore exact feasibility.
+pub fn solve_relaxed_energy(
+    costs: &[LearnerCost],
+    t_cycle: f64,
+    d_total: u64,
+    bounds: &Bounds,
+    opts: &RelaxedOptions,
+    energy: Option<&EnergyConstraint<'_>>,
+) -> RelaxedSolution {
     let k = costs.len();
+    if let Some(ec) = energy {
+        assert!(
+            ec.coeffs.len() == k && ec.budgets.len() == k,
+            "energy constraint arity mismatch"
+        );
+    }
     assert!(k >= 1);
     let d_scale = d_total as f64 / k as f64; // equal share, O(1) scaled d
     let d_tot = d_total as f64;
@@ -178,6 +218,25 @@ pub fn solve_relaxed(
             for i in 0..k {
                 g[k + i] += w0 * d_scale / d_tot;
             }
+            // energy hinge: ½ρ·max(0, (E_k − E_max)/E_max)² per learner
+            // (skipped for ∞ budgets, so None/all-∞ is bit-identical)
+            if let Some(ec) = energy {
+                for i in 0..k {
+                    let e_max = ec.budgets[i];
+                    if !e_max.is_finite() {
+                        continue;
+                    }
+                    let d_i = dd[i] * d_scale;
+                    let s = (ec.coeffs[i].energy(tau[i], d_i) - e_max) / e_max;
+                    if s > 0.0 {
+                        val += 0.5 * rho * s * s;
+                        let w = rho * s / e_max;
+                        g[i] += w * ec.coeffs[i].e2 * d_i;
+                        g[k + i] +=
+                            w * (ec.coeffs[i].e2 * tau[i] + ec.coeffs[i].e1) * d_scale;
+                    }
+                }
+            }
             val
         };
         let res = minimize_projected(&x, &opts.inner, f, |xv| clamp_box(xv, &lo, &hi));
@@ -196,6 +255,16 @@ pub fn solve_relaxed(
         let g0 = (sum_d - d_tot) / d_tot;
         omega += rho * g0;
         viol = viol.max(g0.abs());
+        if let Some(ec) = energy {
+            // count the hinge in the ρ schedule so a persistently
+            // over-budget iterate keeps tightening the penalty
+            for i in 0..k {
+                if ec.budgets[i].is_finite() {
+                    let e = ec.coeffs[i].energy(tau[i], dd[i] * d_scale);
+                    viol = viol.max((e - ec.budgets[i]).max(0.0) / ec.budgets[i]);
+                }
+            }
+        }
 
         if viol > 0.5 * prev_viol {
             rho *= opts.rho_growth;
@@ -290,6 +359,53 @@ mod tests {
             sol.objective,
             eta_range
         );
+    }
+
+    #[test]
+    fn all_infinite_budgets_match_the_unconstrained_solve_bitwise() {
+        let costs = het_costs(8);
+        let bounds = Bounds::proportional(40_000, 8, 0.2, 2.5);
+        let coeffs: Vec<EnergyCoeffs> =
+            (0..8).map(|_| EnergyCoeffs::new(3e-4, 2e-5, 0.05)).collect();
+        let budgets = vec![f64::INFINITY; 8];
+        let ec = EnergyConstraint { coeffs: &coeffs, budgets: &budgets };
+        let base = solve_relaxed(&costs, 15.0, 40_000, &bounds, &RelaxedOptions::default());
+        let gated = solve_relaxed_energy(
+            &costs, 15.0, 40_000, &bounds, &RelaxedOptions::default(), Some(&ec),
+        );
+        assert_eq!(base.tau, gated.tau, "∞ budgets must not perturb the iterates");
+        assert_eq!(base.d, gated.d);
+        assert_eq!(base.feasibility, gated.feasibility);
+    }
+
+    #[test]
+    fn energy_penalty_steers_the_iterate_under_budget() {
+        let costs = het_costs(8);
+        let t_cycle = 15.0;
+        let bounds = Bounds::proportional(40_000, 8, 0.2, 2.5);
+        let coeffs: Vec<EnergyCoeffs> =
+            (0..8).map(|_| EnergyCoeffs::new(3e-4, 2e-5, 0.05)).collect();
+        let free = solve_relaxed(&costs, t_cycle, 40_000, &bounds, &RelaxedOptions::default());
+        // cap learner 0 at 60% of its unconstrained spend
+        let e_free = coeffs[0].energy(free.tau[0], free.d[0]);
+        let mut budgets = vec![f64::INFINITY; 8];
+        budgets[0] = 0.6 * e_free;
+        let ec = EnergyConstraint { coeffs: &coeffs, budgets: &budgets };
+        let gated = solve_relaxed_energy(
+            &costs, t_cycle, 40_000, &bounds, &RelaxedOptions::default(), Some(&ec),
+        );
+        let e_gated = coeffs[0].energy(gated.tau[0], gated.d[0]);
+        assert!(
+            e_gated < e_free,
+            "penalty never engaged: {e_gated} !< {e_free}"
+        );
+        assert!(
+            e_gated <= budgets[0] * 1.10,
+            "hinge left learner 0 {e_gated} J vs budget {} J",
+            budgets[0]
+        );
+        // the equality families must stay honest while the hinge pushes
+        assert!(gated.feasibility < 5e-2, "viol={}", gated.feasibility);
     }
 
     #[test]

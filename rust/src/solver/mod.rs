@@ -9,7 +9,11 @@
 //! * [`auglag`] — augmented Lagrangian for problem (8): smooth-max
 //!   staleness objective, quadratic-equality time constraints (8c),
 //!   total-batch equality (8d), box constraints by projection
-//!   (8e/8f) — this plays the role of the paper's "numerical optimizer";
+//!   (8e/8f) — this plays the role of the paper's "numerical optimizer".
+//!   [`solve_relaxed_energy`] extends the program with the sequel's
+//!   per-learner energy budgets `E_k ≤ E_k^max` (arXiv:2012.00143) as a
+//!   hinge penalty; `None`/all-∞ budgets leave the numeric path
+//!   bit-identical to [`solve_relaxed`];
 //! * [`kkt`] — Appendix A/B machinery: the pair-multiplier reductions
 //!   `u`, `u'` (eqs. 19–24) and the Theorem-1 stationarity expressions;
 //! * [`bisect`] — guarded scalar bisection used by the SAI and sync
@@ -20,6 +24,8 @@ pub mod bisect;
 pub mod kkt;
 pub mod projgrad;
 
-pub use auglag::{solve_relaxed, RelaxedOptions, RelaxedSolution};
+pub use auglag::{
+    solve_relaxed, solve_relaxed_energy, EnergyConstraint, RelaxedOptions, RelaxedSolution,
+};
 pub use bisect::bisect_decreasing;
 pub use projgrad::{minimize_projected, ProjGradOptions};

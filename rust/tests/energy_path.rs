@@ -1,0 +1,328 @@
+//! End-to-end contracts for the energy subsystem: budget-constrained
+//! allocation ([`asyncmel::allocation::energy`]) and battery-driven
+//! churn ([`asyncmel::coordinator::engine`]).
+//!
+//! Three layers of guarantee:
+//!
+//! * **budget-∞ oracle** (property) — wrapping any allocator with
+//!   all-infinite budgets returns its allocation *verbatim*, so the
+//!   unconstrained solver stays the differential oracle;
+//! * **two-frontier feasibility** (property) — finite budgets produce
+//!   allocations satisfying the deadline (7b), the box (7f) and
+//!   `E_k(τ_k, d_k) ≤ E_k^max`, with every sample of `D` accounted for
+//!   (`Σ d_k + shortfall = D`);
+//! * **battery determinism** (integration) — battery-driven Leave /
+//!   Rejoin churn is bit-identical across `--shards {1, 8}` ×
+//!   `--threads {1, 8}` under real numerics, and survives the
+//!   checkpoint/restore path bit-identically (battery state travels in
+//!   the checkpoint; restoring it into a battery-free engine is a typed
+//!   error, not silent divergence).
+
+use asyncmel::aggregation::{AggregationRule, AsyncAggregator, ParamSet};
+use asyncmel::allocation::{
+    allocate_energy_constrained, make_allocator, AllocatorKind, Bounds,
+};
+use asyncmel::config::{ChurnConfig, EnergyConfig, Scenario, ScenarioConfig};
+use asyncmel::coordinator::{
+    record_digest, EngineOptions, EnginePolicy, EngineStats, EventEngine, ExecMode, RunOutcome,
+    TrainOptions,
+};
+use asyncmel::costmodel::{EnergyCoeffs, LearnerCost};
+use asyncmel::data::{synth, SynthConfig, SynthDataset};
+use asyncmel::runtime::Runtime;
+use asyncmel::testkit::{forall, Gen};
+
+// ---------------------------------------------------------------------------
+// properties on the allocator wrapper
+// ---------------------------------------------------------------------------
+
+fn gen_cost(g: &mut Gen) -> LearnerCost {
+    LearnerCost::new(g.f64_in(1e-4, 3e-3), g.f64_in(1e-5, 5e-4), g.f64_in(0.05, 1.5))
+}
+
+fn gen_coeffs(g: &mut Gen) -> EnergyCoeffs {
+    EnergyCoeffs::new(g.f64_in(1e-5, 1e-3), g.f64_in(1e-6, 1e-4), g.f64_in(0.01, 0.2))
+}
+
+#[test]
+fn prop_infinite_budgets_are_byte_identical_to_the_unconstrained_solver() {
+    forall("energy-budget-inf-oracle", 48, |g| {
+        let k = g.usize_in(2, 12);
+        let costs = g.vec(k, gen_cost);
+        let coeffs = g.vec(k, gen_coeffs);
+        let t_cycle = g.f64_in(5.0, 20.0);
+        let d_total = g.u64_in(500, 4000) * k as u64;
+        let bounds = Bounds::proportional(d_total, k, 0.2, 2.5);
+        for kind in [AllocatorKind::Eta, AllocatorKind::Sai, AllocatorKind::Relaxed] {
+            let base = make_allocator(kind);
+            let oracle = match base.allocate(&costs, t_cycle, d_total, &bounds) {
+                Ok(a) => a,
+                Err(_) => continue, // infeasible fleet: nothing to compare
+            };
+            let out = allocate_energy_constrained(
+                base.as_ref(),
+                &costs,
+                &coeffs,
+                &vec![f64::INFINITY; k],
+                t_cycle,
+                d_total,
+                &bounds,
+            )
+            .unwrap();
+            assert_eq!(
+                out.alloc,
+                oracle,
+                "{}: budget-∞ result differs from the oracle",
+                kind.name()
+            );
+            assert_eq!(out.clamped_count(), 0, "{}: phantom clamp", kind.name());
+            assert_eq!(out.shortfall, 0, "{}: phantom shortfall", kind.name());
+        }
+    });
+}
+
+#[test]
+fn prop_finite_budgets_satisfy_both_frontiers_and_account_for_d() {
+    forall("energy-two-frontier", 48, |g| {
+        let k = g.usize_in(2, 12);
+        let costs = g.vec(k, gen_cost);
+        let coeffs = g.vec(k, gen_coeffs);
+        let t_cycle = g.f64_in(5.0, 20.0);
+        let d_total = g.u64_in(500, 4000) * k as u64;
+        let bounds = Bounds::proportional(d_total, k, 0.2, 2.5);
+        // mixed budgets: some binding, some loose, some infinite
+        let budgets = g.vec(k, |g| {
+            if g.bool() {
+                g.f64_in(0.5, 30.0)
+            } else {
+                f64::INFINITY
+            }
+        });
+        let base = make_allocator(AllocatorKind::Sai);
+        if base.allocate(&costs, t_cycle, d_total, &bounds).is_err() {
+            return; // infeasible fleet: the wrapper propagates the error
+        }
+        let out = allocate_energy_constrained(
+            base.as_ref(), &costs, &coeffs, &budgets, t_cycle, d_total, &bounds,
+        )
+        .unwrap();
+        assert_eq!(
+            out.alloc.d.iter().sum::<u64>() + out.shortfall,
+            d_total,
+            "repair lost samples"
+        );
+        for i in 0..k {
+            let (tau, d) = (out.alloc.tau[i], out.alloc.d[i]);
+            assert!(bounds.contains(d), "d[{i}] = {d} escaped the box");
+            if tau == 0 {
+                continue; // idled (the paper's infeasibility marker): no round runs
+            }
+            let t = costs[i].time(tau as f64, d as f64);
+            assert!(
+                t <= t_cycle * (1.0 + 1e-9),
+                "learner {i} misses the deadline: t = {t} > {t_cycle}"
+            );
+            let e = coeffs[i].energy(tau as f64, d as f64);
+            assert!(
+                e <= budgets[i] * (1.0 + 1e-9),
+                "learner {i} over budget: E = {e} > {}",
+                budgets[i]
+            );
+        }
+    });
+}
+
+// ---------------------------------------------------------------------------
+// battery-driven churn determinism (real numerics)
+// ---------------------------------------------------------------------------
+
+/// Tiny model so real-numerics runs stay fast in debug builds.
+const DIMS: [usize; 3] = [36, 16, 4];
+const SAMPLES: usize = 360;
+const SEED: u64 = 0x51AD_ED06;
+
+/// Batteries sized against the fleet's ~20 J laptop (and ~0.5 J
+/// embedded) rounds at `compute_cycles_per_sample = 2e7`: the laptop
+/// class depletes within a cycle or two, the embedded class survives.
+fn battery_cfg() -> EnergyConfig {
+    EnergyConfig {
+        battery_lo_j: 15.0,
+        battery_hi_j: 45.0,
+        battery_floor_j: 0.5,
+        recharge_s: 25.0,
+        ..EnergyConfig::disabled()
+    }
+}
+
+fn tiny_world(k: usize, shards: usize, threads: usize) -> (Scenario, SynthDataset) {
+    let mut cfg = ScenarioConfig::paper_default()
+        .with_learners(k)
+        .with_cycle(15.0)
+        .with_total_samples(SAMPLES as u64)
+        .with_churn(ChurnConfig::new(0.1, 90.0))
+        .with_energy(battery_cfg())
+        .unwrap()
+        .with_shards(shards)
+        .with_threads(threads)
+        .with_seed(SEED);
+    cfg.task.features = DIMS[0] as u64;
+    cfg.task.compute_cycles_per_sample = 2.0e7;
+    let ds = synth::generate(&SynthConfig {
+        side: 6,
+        classes: 4,
+        train: SAMPLES,
+        test: 96,
+        noise_std: 0.5,
+        ..SynthConfig::default()
+    });
+    (cfg.build(), ds)
+}
+
+fn run_battery_real(shards: usize, threads: usize) -> (String, Option<ParamSet>, EngineStats) {
+    let rt = Runtime::native(&DIMS, 32, 48);
+    let (scenario, ds) = tiny_world(6, shards, threads);
+    let mut engine = EventEngine::new(
+        scenario,
+        AllocatorKind::Eta,
+        AggregationRule::FedAvg,
+        ExecMode::Real { runtime: &rt, train: ds.train, test: ds.test },
+    )
+    .unwrap();
+    let opts = EngineOptions {
+        train: TrainOptions { cycles: 3, lr: 0.1, eval_every: 1, reallocate_each_cycle: false },
+        policy: EnginePolicy::Async(AsyncAggregator::default()),
+    };
+    let (records, params) = engine.run_with_params(&opts).unwrap();
+    (record_digest(&records), params, engine.stats)
+}
+
+#[test]
+fn battery_churn_is_bit_identical_across_shards_and_threads() {
+    let (digest1, params1, stats1) = run_battery_real(1, 1);
+    assert!(
+        stats1.leaves > 0,
+        "batteries never depleted — the determinism claim would be vacuous"
+    );
+    for (shards, threads) in [(1usize, 8usize), (8, 1), (8, 8)] {
+        let (digest, params, stats) = run_battery_real(shards, threads);
+        assert_eq!(
+            digest1, digest,
+            "records diverged at {shards} shards / {threads} threads"
+        );
+        assert_eq!(
+            params1, params,
+            "params diverged at {shards} shards / {threads} threads"
+        );
+        assert_eq!(
+            stats1, stats,
+            "engine stats diverged at {shards} shards / {threads} threads"
+        );
+    }
+}
+
+// ---------------------------------------------------------------------------
+// checkpoint/restore with battery state
+// ---------------------------------------------------------------------------
+
+#[test]
+fn battery_run_checkpoint_resume_is_bit_identical() {
+    let rt = Runtime::native(&DIMS, 32, 48);
+    let opts = EngineOptions {
+        train: TrainOptions { cycles: 4, lr: 0.1, eval_every: 1, reallocate_each_cycle: false },
+        policy: EnginePolicy::Async(AsyncAggregator::default()),
+    };
+    let fresh = || {
+        let (scenario, ds) = tiny_world(6, 2, 1);
+        EventEngine::new(
+            scenario,
+            AllocatorKind::Eta,
+            AggregationRule::FedAvg,
+            ExecMode::Real { runtime: &rt, train: ds.train, test: ds.test },
+        )
+        .unwrap()
+    };
+
+    let mut oracle = fresh();
+    let (want_digest, want_params) = match oracle.run_to_checkpoint(&opts, None, None).unwrap() {
+        RunOutcome::Finished { records, params } => (record_digest(&records), params),
+        RunOutcome::Suspended(_) => panic!("run suspended without a stop point"),
+    };
+
+    let mut first = fresh();
+    let ck = match first.run_to_checkpoint(&opts, None, Some(2)).unwrap() {
+        RunOutcome::Suspended(ck) => *ck,
+        RunOutcome::Finished { .. } => panic!("run finished before its stop point"),
+    };
+    assert!(
+        ck.core.energy.is_some(),
+        "battery-enabled run must serialize its battery state"
+    );
+    // the exact bytes a killed daemon would leave behind and read back
+    let text = ck.to_json().pretty();
+    let ck = asyncmel::coordinator::EngineCheckpoint::from_json(
+        &asyncmel::json::parse(&text).unwrap(),
+    )
+    .unwrap();
+
+    let mut second = fresh();
+    let (digest, params) = match second.run_to_checkpoint(&opts, Some(ck), None).unwrap() {
+        RunOutcome::Finished { records, params } => (record_digest(&records), params),
+        RunOutcome::Suspended(_) => panic!("resume suspended unexpectedly"),
+    };
+    assert_eq!(want_digest, digest, "records diverged after battery resume");
+    assert_eq!(want_params, params, "params diverged after battery resume");
+    assert_eq!(oracle.stats, second.stats, "stats diverged after battery resume");
+}
+
+#[test]
+fn battery_checkpoint_into_a_battery_free_engine_is_a_typed_error() {
+    let rt = Runtime::native(&DIMS, 32, 48);
+    let opts = EngineOptions {
+        train: TrainOptions { cycles: 4, lr: 0.1, eval_every: 1, reallocate_each_cycle: false },
+        policy: EnginePolicy::Async(AsyncAggregator::default()),
+    };
+    let mut first = {
+        let (scenario, ds) = tiny_world(6, 1, 1);
+        EventEngine::new(
+            scenario,
+            AllocatorKind::Eta,
+            AggregationRule::FedAvg,
+            ExecMode::Real { runtime: &rt, train: ds.train, test: ds.test },
+        )
+        .unwrap()
+    };
+    let ck = match first.run_to_checkpoint(&opts, None, Some(2)).unwrap() {
+        RunOutcome::Suspended(ck) => *ck,
+        RunOutcome::Finished { .. } => panic!("run finished before its stop point"),
+    };
+
+    // same world, but with batteries disabled: the restore must refuse
+    let mut cfg = ScenarioConfig::paper_default()
+        .with_learners(6)
+        .with_cycle(15.0)
+        .with_total_samples(SAMPLES as u64)
+        .with_churn(ChurnConfig::new(0.1, 90.0))
+        .with_seed(SEED);
+    cfg.task.features = DIMS[0] as u64;
+    cfg.task.compute_cycles_per_sample = 2.0e7;
+    let ds = synth::generate(&SynthConfig {
+        side: 6,
+        classes: 4,
+        train: SAMPLES,
+        test: 96,
+        noise_std: 0.5,
+        ..SynthConfig::default()
+    });
+    let mut bare = EventEngine::new(
+        cfg.build(),
+        AllocatorKind::Eta,
+        AggregationRule::FedAvg,
+        ExecMode::Real { runtime: &rt, train: ds.train, test: ds.test },
+    )
+    .unwrap();
+    let err = bare.run_to_checkpoint(&opts, Some(ck), None).unwrap_err();
+    assert!(
+        err.to_string().contains("battery"),
+        "expected a battery-mismatch error, got: {err:#}"
+    );
+}

@@ -21,10 +21,12 @@
 #                          rust/benches/baseline.json via bench_check.sh
 #                          --update (run on the stable CI runner class —
 #                          see the bench-baseline workflow job)
+#   scripts/ci.sh docs     cargo doc --no-deps with RUSTDOCFLAGS="-D warnings"
+#                          (broken intra-doc links and bad doc syntax fail)
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
-BENCHES=(fig2_staleness fig3_accuracy ablation_bounds solver_bench fleet_scale multi_model real_fleet native_hotpath trace_replay)
+BENCHES=(fig2_staleness fig3_accuracy ablation_bounds solver_bench fleet_scale multi_model real_fleet native_hotpath trace_replay energy_fleet)
 
 run_lint() {
   echo "=== lint: cargo fmt --check ==="
@@ -160,6 +162,16 @@ run_bench_full() {
   echo "=== bench-full: refreshed rust/benches/baseline.json ==="
 }
 
+# Rustdoc gate: every public item documented without warnings — broken
+# intra-doc links (e.g. a renamed module in a [`...`] reference) fail
+# the build instead of rotting silently.
+run_docs() {
+  # -p asyncmel: the vendored stand-ins (vendor/anyhow, vendor/xla-stub)
+  # are API shims, not documentation surfaces — only our crate is gated.
+  echo '=== docs: RUSTDOCFLAGS="-D warnings" cargo doc --no-deps -p asyncmel ==='
+  RUSTDOCFLAGS="-D warnings" cargo doc --no-deps -p asyncmel
+}
+
 STAGE="${1:-all}"
 case "$STAGE" in
   lint) run_lint ;;
@@ -168,14 +180,16 @@ case "$STAGE" in
   fast-numerics) run_fast_numerics ;;
   bench) run_bench ;;
   bench-full) run_bench_full ;;
+  docs) run_docs ;;
   all)
     run_lint
     run_test
     run_fast_numerics
     run_bench
+    run_docs
     ;;
   *)
-    echo "usage: scripts/ci.sh [all|lint|test|serve-smoke|fast-numerics|bench|bench-full]" >&2
+    echo "usage: scripts/ci.sh [all|lint|test|serve-smoke|fast-numerics|bench|bench-full|docs]" >&2
     exit 2
     ;;
 esac
