@@ -1,0 +1,112 @@
+//! Bench for the **communication-fault chaos layer**: message loss,
+//! duplication, corruption, and timeout/retry on the event engine.
+//!
+//! `cargo bench --bench chaos_fleet` does two things:
+//! 1. verifies the comm contracts end-to-end (skipped under `--smoke`;
+//!    also asserted in `rust/tests/comm_faults.rs`): a faults-off run
+//!    is byte-identical to a run that never mentions the comm section,
+//!    and a 5%-loss fleet is bit-identical across `--shards {1, 8}`;
+//! 2. times a K = 5000 phantom async fleet under 5% loss (plus light
+//!    duplication/corruption), flat and at 8 shards — every planned
+//!    round draws from the comm stream, lost rounds ride the
+//!    timeout/backoff ladder, and duplicates dedup at the aggregator.
+//!
+//! Passthrough flags: `--smoke` (fast CI config), `--json PATH`
+//! (machine-readable results; see scripts/bench_check.sh).
+
+use asyncmel::aggregation::{AggregationRule, AsyncAggregator};
+use asyncmel::allocation::AllocatorKind;
+use asyncmel::benchkit::{group, BenchConfig, BenchRun};
+use asyncmel::config::{ChurnConfig, CommFaultConfig, ScenarioConfig};
+use asyncmel::coordinator::{
+    record_digest, EngineOptions, EnginePolicy, EventEngine, ExecMode, TrainOptions,
+};
+
+const K: usize = 5000;
+const CYCLES: usize = 6;
+
+fn lossy_cfg() -> CommFaultConfig {
+    CommFaultConfig {
+        downlink_loss_prob: 0.05,
+        uplink_loss_prob: 0.05,
+        duplicate_prob: 0.02,
+        corrupt_prob: 0.01,
+        ..CommFaultConfig::disabled()
+    }
+}
+
+fn engine(comm: Option<CommFaultConfig>, shards: usize) -> EventEngine<'static> {
+    let mut base = ScenarioConfig::paper_default()
+        .with_learners(K)
+        .with_churn(ChurnConfig::new(1.0, 120.0));
+    if let Some(c) = comm {
+        base = base.with_comm(c).unwrap();
+    }
+    EventEngine::new(
+        base.build(),
+        AllocatorKind::Eta,
+        AggregationRule::FedAvg,
+        ExecMode::Phantom,
+    )
+    .unwrap()
+    .with_shards(shards)
+}
+
+fn opts() -> EngineOptions {
+    EngineOptions {
+        train: TrainOptions { cycles: CYCLES, ..Default::default() },
+        policy: EnginePolicy::Async(AsyncAggregator::default()),
+    }
+}
+
+fn verify_contracts() {
+    println!("\n========== CHAOS FLEET — contract checks ==========");
+    // a disabled comm section must be byte-identical to no section
+    let bare = record_digest(&engine(None, 1).run(&opts()).unwrap());
+    let off = record_digest(&engine(Some(CommFaultConfig::disabled()), 1).run(&opts()).unwrap());
+    assert_eq!(bare, off, "a faults-off comm section perturbed the run");
+    println!("faults-off oracle {} — byte-identical", &bare[..16]);
+
+    // a lossy fleet must be bit-identical across shard counts
+    let mut flat = engine(Some(lossy_cfg()), 1);
+    let flat_digest = record_digest(&flat.run(&opts()).unwrap());
+    let flat_stats = flat.stats;
+    let mut sharded = engine(Some(lossy_cfg()), 8);
+    let sharded_digest = record_digest(&sharded.run(&opts()).unwrap());
+    assert_eq!(flat_digest, sharded_digest, "lossy fleet diverged at 8 shards");
+    assert_eq!(flat_stats, sharded.stats, "lossy fleet stats diverged at 8 shards");
+    assert!(flat_stats.timeouts > 0, "no timeouts at 5% loss — dead contract check");
+    assert!(flat_stats.dupes_dropped > 0, "no dupes dropped — dead contract check");
+    println!(
+        "lossy fleet digest {} @ shards {{1, 8}} — bit-identical ({} timeouts, {} retries, {} dupes dropped)",
+        &flat_digest[..16],
+        flat_stats.timeouts,
+        flat_stats.retries,
+        flat_stats.dupes_dropped
+    );
+    println!("===================================================\n");
+}
+
+fn main() {
+    let mut run = BenchRun::from_env("chaos_fleet");
+    if !run.smoke() {
+        verify_contracts();
+    }
+
+    group("chaos fleet @ K=5000, 6 cycles, 5% loss, async (phantom)");
+    let cfg = BenchConfig {
+        measure: std::time::Duration::from_secs(5),
+        max_iters: 20,
+        ..Default::default()
+    };
+    run.bench("async_k5000_loss", &cfg, || {
+        let mut e = engine(Some(lossy_cfg()), 1);
+        e.run(&opts()).unwrap()
+    });
+    run.bench("async_k5000_loss_shard8", &cfg, || {
+        let mut e = engine(Some(lossy_cfg()), 8);
+        e.run(&opts()).unwrap()
+    });
+
+    run.finish().expect("bench json");
+}

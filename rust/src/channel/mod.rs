@@ -96,6 +96,17 @@ pub fn sample_links(p: &ChannelParams, devices: &[Device], rng: &mut Rng) -> Vec
     devices.iter().map(|d| sample_link(p, d, rng)).collect()
 }
 
+/// How much worse (dB) this link is than its distance alone predicts:
+/// the realized loss `-10·log10(h_k)` minus [`pathloss_db`]. Positive
+/// in a shadowing fade, negative on a lucky link; tracks the fading
+/// process because it reads the *current* gain. The comm-fault layer
+/// ([`crate::coordinator::comm`]) uses it to scale message-loss
+/// probabilities, coupling chaos to channel state deterministically.
+#[inline]
+pub fn shadow_excess_db(p: &ChannelParams, link: &Link) -> f64 {
+    -10.0 * link.gain.log10() - pathloss_db(p, link.dist_m)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -154,6 +165,26 @@ mod tests {
         // rate = W·log2(1+SNR) compresses the gain spread; a 50 m cell
         // with 6 dB shadowing still gives a clear best/worst-link gap
         assert!(max / min > 1.5, "expected heterogeneous rates ({max} / {min})");
+    }
+
+    #[test]
+    fn shadow_excess_recovers_the_drawn_shadowing() {
+        // sample_link sets loss = pathloss + shadow, so the excess must
+        // recover exactly the shadowing term (up to fp rounding)
+        let p = ChannelParams::default();
+        let mut rng = Rng::new(77);
+        let d = dev(&mut rng);
+        for _ in 0..200 {
+            let l = sample_link(&p, &d, &mut rng);
+            let excess = shadow_excess_db(&p, &l);
+            assert!(excess.is_finite());
+            assert!(excess.abs() < 8.0 * p.shadowing_std_db, "excess {excess}");
+        }
+        // a link with exactly the predicted gain has zero excess
+        let dist_m = 10.0;
+        let gain = 10f64.powf(-pathloss_db(&p, dist_m) / 10.0);
+        let flat = Link { pos: (dist_m, 0.0), dist_m, gain, rate_bps: 1.0 };
+        assert!(shadow_excess_db(&p, &flat).abs() < 1e-9);
     }
 
     #[test]

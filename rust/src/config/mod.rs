@@ -286,6 +286,118 @@ impl Default for EnergyConfig {
     }
 }
 
+/// Communication-fault chaos layer (event engine only; disabled by
+/// default). Models message-level link failure *under* the channel
+/// model: independent uplink/downlink loss, duplication, and payload
+/// corruption per dispatched round, plus the coordinator-side recovery
+/// machinery — per-dispatch timeouts with capped exponential backoff
+/// and quorum-degraded Barrier boundaries. All draws come from a
+/// dedicated salted RNG stream ([`crate::coordinator::comm`]), so a
+/// faults-off run is byte-identical to the comm-unaware engine.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CommFaultConfig {
+    /// Probability a downlink dispatch (coordinator → learner) is lost.
+    pub downlink_loss_prob: f64,
+    /// Probability an uplink update (learner → coordinator) is lost.
+    pub uplink_loss_prob: f64,
+    /// Probability a surviving uplink update is delivered twice
+    /// (at-least-once delivery; the aggregator dedups to exactly-once).
+    pub duplicate_prob: f64,
+    /// Probability a surviving uplink payload arrives corrupted
+    /// (detected by checksum at the aggregator and dropped; the
+    /// per-dispatch timeout recovers the round).
+    pub corrupt_prob: f64,
+    /// Per-dispatch timeout as a multiple of the cycle clock
+    /// `t_cycle_s`: the coordinator re-dispatches a round whose update
+    /// has not arrived after `timeout_factor * T` virtual seconds.
+    pub timeout_factor: f64,
+    /// First retry backoff in virtual seconds; doubles per attempt.
+    pub backoff_base_s: f64,
+    /// Backoff ceiling in virtual seconds.
+    pub backoff_cap_s: f64,
+    /// Retries before the coordinator gives the round up into the
+    /// ordinary Retry/churn path (with a fresh allocation next cycle).
+    pub max_retries: u32,
+    /// Barrier quorum fraction in (0, 1]: a Boundary may fire once this
+    /// fraction of the cycle's dispatched updates has arrived and the
+    /// straggler deadline has passed. 1.0 still degrades (the deadline
+    /// extension fires regardless) but reports every short boundary.
+    pub quorum_frac: f64,
+    /// Straggler deadline: how long (virtual seconds) a Barrier
+    /// boundary waits past its scheduled time for missing updates
+    /// before firing degraded.
+    pub straggler_wait_s: f64,
+}
+
+impl CommFaultConfig {
+    pub fn disabled() -> Self {
+        Self {
+            downlink_loss_prob: 0.0,
+            uplink_loss_prob: 0.0,
+            duplicate_prob: 0.0,
+            corrupt_prob: 0.0,
+            timeout_factor: 2.0,
+            backoff_base_s: 1.0,
+            backoff_cap_s: 30.0,
+            max_retries: 5,
+            quorum_frac: 0.75,
+            straggler_wait_s: 5.0,
+        }
+    }
+
+    /// Any fault process active? Pure-recovery knobs (timeouts, quorum)
+    /// only engage when at least one fault probability is positive, so
+    /// the disabled config cannot perturb the engine.
+    pub fn is_enabled(&self) -> bool {
+        self.downlink_loss_prob > 0.0
+            || self.uplink_loss_prob > 0.0
+            || self.duplicate_prob > 0.0
+            || self.corrupt_prob > 0.0
+    }
+
+    /// Shared by the builder and the JSON intake path.
+    pub fn validate(&self) -> Result<()> {
+        for (name, p) in [
+            ("downlink_loss_prob", self.downlink_loss_prob),
+            ("uplink_loss_prob", self.uplink_loss_prob),
+            ("duplicate_prob", self.duplicate_prob),
+            ("corrupt_prob", self.corrupt_prob),
+        ] {
+            anyhow::ensure!(
+                p.is_finite() && (0.0..=1.0).contains(&p),
+                "comm.{name} must be in [0, 1]"
+            );
+        }
+        anyhow::ensure!(
+            self.timeout_factor.is_finite() && self.timeout_factor > 0.0,
+            "comm.timeout_factor must be positive and finite"
+        );
+        anyhow::ensure!(
+            self.backoff_base_s.is_finite() && self.backoff_base_s > 0.0,
+            "comm.backoff_base_s must be positive and finite"
+        );
+        anyhow::ensure!(
+            self.backoff_cap_s.is_finite() && self.backoff_cap_s >= self.backoff_base_s,
+            "comm.backoff_cap_s must be finite and >= backoff_base_s"
+        );
+        anyhow::ensure!(
+            self.quorum_frac.is_finite() && self.quorum_frac > 0.0 && self.quorum_frac <= 1.0,
+            "comm.quorum_frac must be in (0, 1]"
+        );
+        anyhow::ensure!(
+            self.straggler_wait_s.is_finite() && self.straggler_wait_s > 0.0,
+            "comm.straggler_wait_s must be positive and finite"
+        );
+        Ok(())
+    }
+}
+
+impl Default for CommFaultConfig {
+    fn default() -> Self {
+        Self::disabled()
+    }
+}
+
 /// Declarative experiment description.
 #[derive(Debug, Clone)]
 pub struct ScenarioConfig {
@@ -312,6 +424,10 @@ pub struct ScenarioConfig {
     /// Energy budgets and batteries (disabled by default; batteries are
     /// event engine only).
     pub energy: EnergyConfig,
+    /// Communication-fault chaos layer: loss/duplication/corruption
+    /// plus timeout-retry and quorum-degraded barriers (disabled by
+    /// default; event engine only).
+    pub comm: CommFaultConfig,
     /// Multi-model concurrency (event engine only; single-tenant by
     /// default — see [`crate::multimodel`]).
     pub multimodel: MultiModelConfig,
@@ -373,6 +489,7 @@ impl ScenarioConfig {
             engine: EngineKind::Lockstep,
             churn: ChurnConfig::disabled(),
             energy: EnergyConfig::disabled(),
+            comm: CommFaultConfig::disabled(),
             multimodel: MultiModelConfig::single(),
             fading_rho: None,
             num_threads: 1,
@@ -417,6 +534,13 @@ impl ScenarioConfig {
     pub fn with_energy(mut self, energy: EnergyConfig) -> Result<Self> {
         energy.validate()?;
         self.energy = energy;
+        Ok(self)
+    }
+    /// Communication faults (validated; rejects the same bad values as
+    /// the JSON intake path).
+    pub fn with_comm(mut self, comm: CommFaultConfig) -> Result<Self> {
+        comm.validate()?;
+        self.comm = comm;
         Ok(self)
     }
     pub fn with_multimodel(mut self, multimodel: MultiModelConfig) -> Self {
@@ -495,6 +619,17 @@ impl ScenarioConfig {
         if self.energy.budget_j.is_finite() {
             energy.set("budget_j", self.energy.budget_j);
         }
+        let mut comm = Value::obj();
+        comm.set("downlink_loss_prob", self.comm.downlink_loss_prob)
+            .set("uplink_loss_prob", self.comm.uplink_loss_prob)
+            .set("duplicate_prob", self.comm.duplicate_prob)
+            .set("corrupt_prob", self.comm.corrupt_prob)
+            .set("timeout_factor", self.comm.timeout_factor)
+            .set("backoff_base_s", self.comm.backoff_base_s)
+            .set("backoff_cap_s", self.comm.backoff_cap_s)
+            .set("max_retries", self.comm.max_retries as u64)
+            .set("quorum_frac", self.comm.quorum_frac)
+            .set("straggler_wait_s", self.comm.straggler_wait_s);
         let mut mm = Value::obj();
         mm.set("num_models", self.multimodel.num_models)
             .set("buffer_size", self.multimodel.buffer_size)
@@ -557,6 +692,7 @@ impl ScenarioConfig {
             .set("task", task)
             .set("churn", churn)
             .set("energy", energy)
+            .set("comm", comm)
             .set("multimodel", mm);
         if let Some(rho) = self.fading_rho {
             v.set("fading_rho", rho);
@@ -583,6 +719,7 @@ impl ScenarioConfig {
                 "engine",
                 "churn",
                 "energy",
+                "comm",
                 "fading_rho",
                 "num_threads",
                 "epsilon_window",
@@ -676,6 +813,57 @@ impl ScenarioConfig {
                 cfg.energy.recharge_s = x.as_f64()?;
             }
             cfg.energy.validate()?;
+        }
+        if let Some(cm) = v.get("comm") {
+            reject_unknown_keys(
+                cm,
+                &[
+                    "downlink_loss_prob",
+                    "uplink_loss_prob",
+                    "duplicate_prob",
+                    "corrupt_prob",
+                    "timeout_factor",
+                    "backoff_base_s",
+                    "backoff_cap_s",
+                    "max_retries",
+                    "quorum_frac",
+                    "straggler_wait_s",
+                ],
+                "comm",
+            )?;
+            if let Some(x) = cm.get("downlink_loss_prob") {
+                cfg.comm.downlink_loss_prob = x.as_f64()?;
+            }
+            if let Some(x) = cm.get("uplink_loss_prob") {
+                cfg.comm.uplink_loss_prob = x.as_f64()?;
+            }
+            if let Some(x) = cm.get("duplicate_prob") {
+                cfg.comm.duplicate_prob = x.as_f64()?;
+            }
+            if let Some(x) = cm.get("corrupt_prob") {
+                cfg.comm.corrupt_prob = x.as_f64()?;
+            }
+            if let Some(x) = cm.get("timeout_factor") {
+                cfg.comm.timeout_factor = x.as_f64()?;
+            }
+            if let Some(x) = cm.get("backoff_base_s") {
+                cfg.comm.backoff_base_s = x.as_f64()?;
+            }
+            if let Some(x) = cm.get("backoff_cap_s") {
+                cfg.comm.backoff_cap_s = x.as_f64()?;
+            }
+            if let Some(x) = cm.get("max_retries") {
+                let n = x.as_u64()?;
+                anyhow::ensure!(n <= u32::MAX as u64, "comm.max_retries out of range");
+                cfg.comm.max_retries = n as u32;
+            }
+            if let Some(x) = cm.get("quorum_frac") {
+                cfg.comm.quorum_frac = x.as_f64()?;
+            }
+            if let Some(x) = cm.get("straggler_wait_s") {
+                cfg.comm.straggler_wait_s = x.as_f64()?;
+            }
+            cfg.comm.validate()?;
         }
         if let Some(x) = v.get("fading_rho") {
             let rho = x.as_f64()?;
@@ -1146,6 +1334,64 @@ mod tests {
     }
 
     #[test]
+    fn comm_round_trip_default_and_validation() {
+        let cfg = ScenarioConfig::paper_default()
+            .with_comm(CommFaultConfig {
+                downlink_loss_prob: 0.02,
+                uplink_loss_prob: 0.05,
+                duplicate_prob: 0.03,
+                corrupt_prob: 0.01,
+                timeout_factor: 1.5,
+                backoff_base_s: 0.5,
+                backoff_cap_s: 12.0,
+                max_retries: 3,
+                quorum_frac: 0.8,
+                straggler_wait_s: 4.0,
+            })
+            .unwrap();
+        let text = cfg.to_json().pretty();
+        let back = ScenarioConfig::from_json(&crate::json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.comm, cfg.comm);
+        assert!(back.comm.is_enabled());
+
+        // sparse configs stay fully disabled
+        let sparse = ScenarioConfig::from_json(&crate::json::parse("{}").unwrap()).unwrap();
+        assert_eq!(sparse.comm, CommFaultConfig::disabled());
+        assert!(!sparse.comm.is_enabled());
+
+        // recovery knobs alone (no fault probability) stay disabled:
+        // they cannot perturb a faults-off engine
+        let knobs_only = ScenarioConfig::from_json(
+            &crate::json::parse(r#"{"comm": {"max_retries": 9, "quorum_frac": 0.5}}"#).unwrap(),
+        )
+        .unwrap();
+        assert!(!knobs_only.comm.is_enabled());
+
+        // invalid knobs are rejected, builder and JSON alike
+        for bad in [
+            r#"{"comm": {"uplink_loss_prob": 1.5}}"#,
+            r#"{"comm": {"downlink_loss_prob": -0.1}}"#,
+            r#"{"comm": {"duplicate_prob": 2.0}}"#,
+            r#"{"comm": {"corrupt_prob": -1.0}}"#,
+            r#"{"comm": {"timeout_factor": 0.0}}"#,
+            r#"{"comm": {"backoff_base_s": 0.0}}"#,
+            r#"{"comm": {"backoff_base_s": 5.0, "backoff_cap_s": 1.0}}"#,
+            r#"{"comm": {"quorum_frac": 0.0}}"#,
+            r#"{"comm": {"quorum_frac": 1.5}}"#,
+            r#"{"comm": {"straggler_wait_s": 0.0}}"#,
+        ] {
+            let v = crate::json::parse(bad).unwrap();
+            assert!(ScenarioConfig::from_json(&v).is_err(), "accepted: {bad}");
+        }
+        assert!(ScenarioConfig::paper_default()
+            .with_comm(CommFaultConfig {
+                uplink_loss_prob: f64::NAN,
+                ..CommFaultConfig::disabled()
+            })
+            .is_err());
+    }
+
+    #[test]
     fn num_threads_round_trip_and_default() {
         let cfg = ScenarioConfig::paper_default().with_threads(8);
         let text = cfg.to_json().pretty();
@@ -1235,6 +1481,7 @@ mod tests {
             (r#"{"multimodel": {"buffer_sizes": 3}}"#, "buffer_sizes"),
             (r#"{"trace": {"eventz": []}}"#, "eventz"),
             (r#"{"energy": {"budget": 5.0}}"#, "budget"),
+            (r#"{"comm": {"uplink_loss": 0.1}}"#, "uplink_loss"),
         ] {
             let v = crate::json::parse(bad).unwrap();
             let err = match ScenarioConfig::from_json(&v) {
@@ -1260,6 +1507,12 @@ mod tests {
                 battery_floor_j: 10.0,
                 recharge_s: 60.0,
                 ..EnergyConfig::disabled()
+            })
+            .unwrap()
+            .with_comm(CommFaultConfig {
+                uplink_loss_prob: 0.05,
+                duplicate_prob: 0.02,
+                ..CommFaultConfig::disabled()
             })
             .unwrap()
             .with_fading_rho(0.9)

@@ -66,6 +66,13 @@ pub enum EventCheckpoint {
         d: u64,
         params: Option<ParamSet>,
         train_loss: f32,
+        /// Comm-fault layer: the payload checksum as sent (`None`
+        /// exactly when comm faults are disabled; both fields are
+        /// omitted from the serialized form then, so comm-free
+        /// checkpoints are byte-identical to pre-comm ones).
+        checksum: Option<u64>,
+        /// Comm-fault layer: the timeout token this delivery answers.
+        comm_token: Option<u64>,
     },
     Redispatch {
         slot: usize,
@@ -81,6 +88,12 @@ pub enum EventCheckpoint {
     },
     Trace {
         idx: usize,
+    },
+    /// Comm-fault layer: a per-dispatch retry timer
+    /// (see [`CommFaultConfig`](crate::config::CommFaultConfig)).
+    Timeout {
+        slot: usize,
+        token: u64,
     },
 }
 
@@ -104,6 +117,38 @@ pub struct EnergyState {
     pub depleted: Vec<bool>,
     /// The battery-draw RNG stream.
     pub rng: RngState,
+}
+
+/// Comm-fault layer state, serialized only when the scenario has comm
+/// faults enabled ([`CommFaultConfig::is_enabled`]).
+///
+/// `pending` is the per-slot in-flight round `(token, model,
+/// version-at-dispatch)`, `attempts` the per-slot retry ladder,
+/// `last_delivered` the exactly-once aggregation key, and `rng` the
+/// dedicated comm-fault stream — all restored verbatim so a resumed
+/// run draws, times out and dedups bit-identically to the
+/// uninterrupted one, including timeouts still in flight at capture.
+///
+/// [`CommFaultConfig::is_enabled`]: crate::config::CommFaultConfig::is_enabled
+#[derive(Debug, Clone)]
+pub struct CommState {
+    /// The comm-fault RNG stream.
+    pub rng: RngState,
+    /// In-flight round per slot: `(timeout token, model, version)`.
+    pub pending: Vec<Option<(u64, usize, u64)>>,
+    /// Timeout-retry attempts per slot (drives the backoff schedule).
+    pub attempts: Vec<u32>,
+    /// Last accepted `(model, version-at-dispatch)` per slot.
+    pub last_delivered: Vec<Option<(usize, u64)>>,
+    /// Monotone timeout-token source.
+    pub next_token: u64,
+    /// Barrier: extensions taken by the current boundary (0..=2).
+    pub boundary_extensions: u8,
+    /// Barrier: updates the current cycle dispatched (quorum
+    /// denominator).
+    pub expected: usize,
+    /// Barrier: dispatch-cycle counter (the version tag).
+    pub cycle: u64,
 }
 
 /// Engine state shared by single- and multi-model runs.
@@ -130,6 +175,9 @@ pub struct CoreState {
     /// Battery state; `None` when the scenario has no batteries.
     /// Absent in pre-energy checkpoints, which restore as `None`.
     pub energy: Option<EnergyState>,
+    /// Comm-fault state; `None` when comm faults are disabled. Absent
+    /// in pre-comm checkpoints, which restore as `None`.
+    pub comm: Option<CommState>,
     pub fading: Option<FadingState>,
     /// Current allocation + the costs/slot map it was solved for
     /// (`alloc_pos` is rebuilt from `alloc_slots` on restore).
@@ -459,6 +507,8 @@ fn event_to_json(ev: &EventCheckpoint) -> Value {
             d,
             params,
             train_loss,
+            checksum,
+            comm_token,
         } => {
             v.set("kind", "arrival");
             v.set("slot", Value::from(*slot));
@@ -468,6 +518,14 @@ fn event_to_json(ev: &EventCheckpoint) -> Value {
             v.set("d", Value::from(*d));
             v.set("params", params_to_json(params));
             v.set("train_loss", hex_f32(*train_loss));
+            // omitted entirely when comm faults are off, keeping
+            // comm-free checkpoints byte-identical to pre-comm ones
+            if let Some(c) = checksum {
+                v.set("checksum", Value::Str(u64_to_hex(*c)));
+            }
+            if let Some(t) = comm_token {
+                v.set("comm_token", Value::Str(u64_to_hex(*t)));
+            }
         }
         EventCheckpoint::Redispatch { slot } => {
             v.set("kind", "redispatch");
@@ -488,6 +546,11 @@ fn event_to_json(ev: &EventCheckpoint) -> Value {
             v.set("kind", "trace");
             v.set("idx", Value::from(*idx));
         }
+        EventCheckpoint::Timeout { slot, token } => {
+            v.set("kind", "timeout");
+            v.set("slot", Value::from(*slot));
+            v.set("token", Value::Str(u64_to_hex(*token)));
+        }
     }
     v
 }
@@ -503,6 +566,15 @@ fn event_from_json(v: &Value) -> Result<EventCheckpoint> {
             d: v.u64_field("d")?,
             params: params_from_json(v.field("params")?)?,
             train_loss: f32_hex_field(v, "train_loss")?,
+            // absent in comm-free / pre-comm checkpoints
+            checksum: match v.get("checksum") {
+                None | Some(Value::Null) => None,
+                Some(c) => Some(u64_from_hex(c.as_str()?)?),
+            },
+            comm_token: match v.get("comm_token") {
+                None | Some(Value::Null) => None,
+                Some(t) => Some(u64_from_hex(t.as_str()?)?),
+            },
         },
         "redispatch" => EventCheckpoint::Redispatch {
             slot: v.usize_field("slot")?,
@@ -516,6 +588,10 @@ fn event_from_json(v: &Value) -> Result<EventCheckpoint> {
         },
         "trace" => EventCheckpoint::Trace {
             idx: v.usize_field("idx")?,
+        },
+        "timeout" => EventCheckpoint::Timeout {
+            slot: v.usize_field("slot")?,
+            token: u64_from_hex(v.field("token")?.as_str()?)?,
         },
         other => bail!("unknown queue event kind '{other}'"),
     })
@@ -548,6 +624,98 @@ fn energy_state_from_json(v: &Value) -> Result<EnergyState> {
     })
 }
 
+fn comm_state_to_json(c: &CommState) -> Value {
+    let mut v = Value::obj();
+    v.set("rng", rng_state_to_json(&c.rng));
+    v.set(
+        "pending",
+        Value::Arr(
+            c.pending
+                .iter()
+                .map(|p| match p {
+                    None => Value::Null,
+                    Some((token, model, version)) => {
+                        let mut e = Value::obj();
+                        // tokens are full-range monotone u64s: hex, not
+                        // plain numbers (exact only below 2^53)
+                        e.set("token", Value::Str(u64_to_hex(*token)));
+                        e.set("model", Value::from(*model));
+                        e.set("version", Value::from(*version));
+                        e
+                    }
+                })
+                .collect(),
+        ),
+    );
+    v.set(
+        "attempts",
+        Value::Arr(c.attempts.iter().map(|&a| Value::from(a as u64)).collect()),
+    );
+    v.set(
+        "last_delivered",
+        Value::Arr(
+            c.last_delivered
+                .iter()
+                .map(|p| match p {
+                    None => Value::Null,
+                    Some((model, version)) => {
+                        let mut e = Value::obj();
+                        e.set("model", Value::from(*model));
+                        e.set("version", Value::from(*version));
+                        e
+                    }
+                })
+                .collect(),
+        ),
+    );
+    v.set("next_token", Value::Str(u64_to_hex(c.next_token)));
+    v.set("boundary_extensions", Value::from(c.boundary_extensions as u64));
+    v.set("expected", Value::from(c.expected));
+    v.set("cycle", Value::from(c.cycle));
+    v
+}
+
+fn comm_state_from_json(v: &Value) -> Result<CommState> {
+    let pending = v
+        .field("pending")?
+        .as_arr()?
+        .iter()
+        .map(|p| match p {
+            Value::Null => Ok(None),
+            e => Ok(Some((
+                u64_from_hex(e.field("token")?.as_str()?)?,
+                e.usize_field("model")?,
+                e.u64_field("version")?,
+            ))),
+        })
+        .collect::<Result<Vec<_>>>()?;
+    let attempts = v
+        .field("attempts")?
+        .as_arr()?
+        .iter()
+        .map(|a| Ok(a.as_u64()? as u32))
+        .collect::<Result<Vec<_>>>()?;
+    let last_delivered = v
+        .field("last_delivered")?
+        .as_arr()?
+        .iter()
+        .map(|p| match p {
+            Value::Null => Ok(None),
+            e => Ok(Some((e.usize_field("model")?, e.u64_field("version")?))),
+        })
+        .collect::<Result<Vec<_>>>()?;
+    Ok(CommState {
+        rng: rng_state_from_json(v.field("rng")?)?,
+        pending,
+        attempts,
+        last_delivered,
+        next_token: u64_from_hex(v.field("next_token")?.as_str()?)?,
+        boundary_extensions: v.u64_field("boundary_extensions")? as u8,
+        expected: v.usize_field("expected")?,
+        cycle: v.u64_field("cycle")?,
+    })
+}
+
 fn stats_to_json(s: &EngineStats) -> Value {
     let mut v = Value::obj();
     v.set("events", Value::from(s.events));
@@ -557,10 +725,22 @@ fn stats_to_json(s: &EngineStats) -> Value {
     v.set("arrivals", Value::from(s.arrivals));
     v.set("resolves", Value::from(s.resolves));
     v.set("final_alive", Value::from(s.final_alive));
+    v.set("retries", Value::from(s.retries));
+    v.set("timeouts", Value::from(s.timeouts));
+    v.set("dupes_dropped", Value::from(s.dupes_dropped));
+    v.set("corrupt_dropped", Value::from(s.corrupt_dropped));
+    v.set("degraded_boundaries", Value::from(s.degraded_boundaries));
     v
 }
 
 fn stats_from_json(v: &Value) -> Result<EngineStats> {
+    // the comm-fault counters are absent in pre-comm checkpoints
+    let opt = |key: &str| -> Result<usize> {
+        match v.get(key) {
+            None => Ok(0),
+            Some(x) => x.as_usize(),
+        }
+    };
     Ok(EngineStats {
         events: v.u64_field("events")?,
         joins: v.usize_field("joins")?,
@@ -569,6 +749,11 @@ fn stats_from_json(v: &Value) -> Result<EngineStats> {
         arrivals: v.usize_field("arrivals")?,
         resolves: v.usize_field("resolves")?,
         final_alive: v.usize_field("final_alive")?,
+        retries: opt("retries")?,
+        timeouts: opt("timeouts")?,
+        dupes_dropped: opt("dupes_dropped")?,
+        corrupt_dropped: opt("corrupt_dropped")?,
+        degraded_boundaries: opt("degraded_boundaries")?,
     })
 }
 
@@ -618,6 +803,13 @@ impl CoreState {
             match &self.energy {
                 None => Value::Null,
                 Some(e) => energy_state_to_json(e),
+            },
+        );
+        v.set(
+            "comm",
+            match &self.comm {
+                None => Value::Null,
+                Some(c) => comm_state_to_json(c),
             },
         );
         v.set(
@@ -684,6 +876,11 @@ impl CoreState {
             None | Some(Value::Null) => None,
             Some(e) => Some(energy_state_from_json(e).context("energy")?),
         };
+        // absent (pre-comm checkpoint) and Null both mean "no comm faults"
+        let comm = match v.get("comm") {
+            None | Some(Value::Null) => None,
+            Some(c) => Some(comm_state_from_json(c).context("comm")?),
+        };
         let fading = match v.field("fading")? {
             Value::Null => None,
             f => Some(FadingState {
@@ -714,6 +911,7 @@ impl CoreState {
             rng: rng_state_from_json(v.field("rng")?)?,
             churn_rng: rng_state_from_json(v.field("churn_rng")?)?,
             energy,
+            comm,
             fading,
             alloc,
             dirty: v.field("dirty")?.as_bool()?,
@@ -904,6 +1102,8 @@ mod tests {
                         d: 150,
                         params: Some(vec![vec![0.25, -1.5], vec![f32::INFINITY]]),
                         train_loss: 0.125,
+                        checksum: None,
+                        comm_token: None,
                     },
                 ),
                 (2.0, 12, EventCheckpoint::Redispatch { slot: 1 }),
@@ -911,6 +1111,24 @@ mod tests {
                 (3.0, 14, EventCheckpoint::Leave { slot: 2 }),
                 (3.2, 15, EventCheckpoint::Rejoin { slot: 2 }),
                 (3.5, 16, EventCheckpoint::Trace { idx: 4 }),
+                (
+                    3.7,
+                    17,
+                    // a comm'd in-flight delivery: full-range u64s must
+                    // survive the text round trip bit-exactly
+                    EventCheckpoint::Arrival {
+                        slot: 0,
+                        model: 0,
+                        version_at_dispatch: 9,
+                        tau: 10,
+                        d: 80,
+                        params: None,
+                        train_loss: 0.5,
+                        checksum: Some(u64::MAX - 7),
+                        comm_token: Some(1u64 << 60),
+                    },
+                ),
+                (4.0, 18, EventCheckpoint::Timeout { slot: 0, token: 1u64 << 60 }),
             ],
             slots: vec![(learner.clone(), true), (learner, false)],
             alive_learners: 1,
@@ -921,6 +1139,16 @@ mod tests {
                 caps: vec![30.0, 45.0],
                 depleted: vec![false, true],
                 rng: rng.state(),
+            }),
+            comm: Some(CommState {
+                rng: rng.state(),
+                pending: vec![Some((1u64 << 60, 0, 9)), None],
+                attempts: vec![2, 0],
+                last_delivered: vec![None, Some((1, 6))],
+                next_token: (1u64 << 60) + 1,
+                boundary_extensions: 1,
+                expected: 2,
+                cycle: 5,
             }),
             fading: Some(FadingState {
                 shadow_db: vec![0.5, f64::NEG_INFINITY],
@@ -949,6 +1177,11 @@ mod tests {
                 arrivals: 48,
                 resolves: 9,
                 final_alive: 0,
+                retries: 4,
+                timeouts: 6,
+                dupes_dropped: 5,
+                corrupt_dropped: 1,
+                degraded_boundaries: 2,
             },
             shard_events: vec![600, 400],
         }
@@ -985,6 +1218,70 @@ mod tests {
         let es = back.core.energy.as_ref().unwrap();
         assert_eq!(es.batteries[1], f64::INFINITY);
         assert_eq!(es.depleted, vec![false, true]);
+        // comm-fault state: full-range u64 tokens/checksums travel as hex
+        let cs = back.core.comm.as_ref().unwrap();
+        assert_eq!(cs.pending[0], Some((1u64 << 60, 0, 9)));
+        assert_eq!(cs.next_token, (1u64 << 60) + 1);
+        assert_eq!(cs.last_delivered[1], Some((1, 6)));
+        assert_eq!(back.core.stats.dupes_dropped, 5);
+        let comm_arrival = back
+            .core
+            .queue
+            .iter()
+            .find_map(|(_, seq, ev)| match ev {
+                EventCheckpoint::Arrival { checksum, comm_token, .. } if *seq == 17 => {
+                    Some((*checksum, *comm_token))
+                }
+                _ => None,
+            })
+            .unwrap();
+        assert_eq!(comm_arrival, (Some(u64::MAX - 7), Some(1u64 << 60)));
+    }
+
+    #[test]
+    fn comm_free_and_pre_comm_checkpoints_restore_as_none() {
+        // Null comm round-trips as None
+        let mut core = sample_core();
+        core.comm = None;
+        let back = CoreState::from_json(&core.to_json()).unwrap();
+        assert!(back.comm.is_none());
+        // a pre-comm checkpoint (comm field and the new stats counters
+        // absent entirely) also parses, with the counters zeroed
+        let mut v = core.to_json();
+        if let Value::Obj(m) = &mut v {
+            m.remove("comm");
+            if let Some(Value::Obj(sm)) = m.get_mut("stats") {
+                for k in ["retries", "timeouts", "dupes_dropped", "corrupt_dropped", "degraded_boundaries"] {
+                    sm.remove(k);
+                }
+            }
+        }
+        let back = CoreState::from_json(&v).unwrap();
+        assert!(back.comm.is_none());
+        assert_eq!(back.stats.retries, 0);
+        assert_eq!(back.stats.degraded_boundaries, 0);
+    }
+
+    #[test]
+    fn comm_free_arrivals_serialize_without_comm_keys() {
+        // the serialized form of a comm-free Arrival must not mention
+        // the comm fields at all (byte-compat with pre-comm checkpoints)
+        let ev = EventCheckpoint::Arrival {
+            slot: 0,
+            model: 0,
+            version_at_dispatch: 1,
+            tau: 2,
+            d: 3,
+            params: None,
+            train_loss: 0.0,
+            checksum: None,
+            comm_token: None,
+        };
+        let v = event_to_json(&ev);
+        assert!(v.get("checksum").is_none());
+        assert!(v.get("comm_token").is_none());
+        let text = v.compact();
+        assert!(!text.contains("checksum") && !text.contains("comm_token"), "{text}");
     }
 
     #[test]

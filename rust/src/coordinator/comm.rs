@@ -1,0 +1,313 @@
+//! Communication-fault chaos layer: message-level link failure under
+//! the channel model, plus the coordinator-side recovery machinery.
+//!
+//! The paper's premise is heterogeneous *unreliable* wireless links,
+//! but the base fault model ([`crate::coordinator::faults`]) is a
+//! single coarse per-dispatch draw. This module models the message
+//! level instead: independent downlink (dispatch) and uplink (update)
+//! loss, duplication of surviving updates (at-least-once delivery),
+//! and payload corruption detected by a checksum at the aggregator.
+//! On top of it the engine layers per-dispatch **timeouts with capped
+//! exponential backoff** and **quorum-degraded Barrier boundaries**
+//! (see `docs/ARCHITECTURE.md` §"Communication faults & degraded
+//! quorum").
+//!
+//! ## Determinism rules
+//!
+//! * All fault draws come from a dedicated stream derived with
+//!   [`crate::sim::Rng::derive_stream`] and [`COMM_STREAM_SALT`]:
+//!   faults-off runs never touch it, so enabling the layer cannot
+//!   shift the engine / churn / energy / fading streams, and a
+//!   comm-disabled run is **byte-identical** to the comm-unaware
+//!   engine.
+//! * Draws happen only in serial engine phases (plan / push loops),
+//!   in slot order, with a **fixed draw count per dispatched round**
+//!   ([`draw_round`]: four uniforms, plus one raw draw only when
+//!   corrupting) — the same schedule for every `--shards` /
+//!   `--threads` setting.
+//! * Duplicated deliveries are deduped at the aggregator by
+//!   `(slot, model, version-at-dispatch)`: delivery is at-least-once,
+//!   aggregation exactly-once.
+
+use crate::aggregation::ParamSet;
+use crate::config::CommFaultConfig;
+use crate::sim::Rng;
+
+/// Salt for the dedicated comm-fault RNG stream (derived from the
+/// scenario stream via [`Rng::derive_stream`], never advancing it).
+pub const COMM_STREAM_SALT: u64 = 0xC0DE_FA17_5EED_0D1E;
+
+/// The message-level fate of one dispatched round.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CommDraw {
+    /// The round's message was lost (downlink or uplink): the learner
+    /// never reports and only the timeout recovers the slot.
+    pub lost: bool,
+    /// The surviving update is delivered twice (same virtual time,
+    /// consecutive queue sequence numbers).
+    pub duplicate: bool,
+    /// The surviving payload arrives corrupted: XOR this mask onto the
+    /// true checksum so verification fails at the aggregator.
+    pub corrupt_mask: Option<u64>,
+}
+
+/// Shadowing-coupled loss multiplier: a link sitting `excess_db`
+/// decibels below its distance-predicted gain
+/// ([`crate::channel::shadow_excess_db`]) loses messages more often,
+/// `10^(excess/20)` clamped to `[1/4, 4]` so the probabilities stay
+/// well-defined and a lucky link never becomes lossless.
+#[inline]
+pub fn loss_multiplier(excess_db: f64) -> f64 {
+    10f64.powf(excess_db / 20.0).clamp(0.25, 4.0)
+}
+
+/// Draw one round's message fate. Exactly four uniforms in fixed order
+/// (downlink, uplink, duplicate, corrupt) so the stream position never
+/// depends on which faults are configured, plus one raw draw for the
+/// corruption mask only when the corrupt gate fires.
+pub fn draw_round(cfg: &CommFaultConfig, rng: &mut Rng, excess_db: f64) -> CommDraw {
+    let u_down = rng.uniform();
+    let u_up = rng.uniform();
+    let u_dup = rng.uniform();
+    let u_corr = rng.uniform();
+    let mult = loss_multiplier(excess_db);
+    let lost = u_down < (cfg.downlink_loss_prob * mult).min(1.0)
+        || u_up < (cfg.uplink_loss_prob * mult).min(1.0);
+    let duplicate = !lost && u_dup < cfg.duplicate_prob;
+    let corrupt_mask = if !lost && u_corr < cfg.corrupt_prob {
+        // a zero mask would leave the checksum valid — force nonzero
+        let m = rng.next_u64();
+        Some(if m == 0 { 1 } else { m })
+    } else {
+        None
+    };
+    CommDraw { lost, duplicate, corrupt_mask }
+}
+
+/// Capped exponential backoff before re-dispatching attempt `attempt`
+/// (1-based): `base · 2^(attempt-1)`, capped at `backoff_cap_s`.
+pub fn backoff_delay(cfg: &CommFaultConfig, attempt: u32) -> f64 {
+    let exp = attempt.saturating_sub(1).min(52);
+    (cfg.backoff_base_s * (1u64 << exp) as f64).min(cfg.backoff_cap_s)
+}
+
+/// FNV-1a checksum over the simulated payload: the round header
+/// (slot, model, version-at-dispatch, τ, d) plus every parameter's
+/// f32 bit pattern. Pure and deterministic — the same update always
+/// checksums identically, so verification at the aggregator detects
+/// exactly the injected corruption and nothing else.
+pub fn payload_checksum(
+    params: Option<&ParamSet>,
+    slot: usize,
+    model: usize,
+    version: u64,
+    tau: u64,
+    d: u64,
+) -> u64 {
+    const PRIME: u64 = 0x0000_0100_0000_01B3;
+    let mut h: u64 = 0xCBF2_9CE4_8422_2325;
+    let mut mix = |x: u64| {
+        for b in x.to_le_bytes() {
+            h = (h ^ b as u64).wrapping_mul(PRIME);
+        }
+    };
+    mix(slot as u64);
+    mix(model as u64);
+    mix(version);
+    mix(tau);
+    mix(d);
+    if let Some(ps) = params {
+        for tensor in ps {
+            mix(tensor.len() as u64);
+            for &w in tensor {
+                mix(w.to_bits() as u64);
+            }
+        }
+    }
+    h
+}
+
+/// Coordinator-side in-flight tracking, one entry per fleet slot.
+/// Checkpointed in full ([`crate::coordinator::checkpoint::CommState`])
+/// so pending timeouts and retry counters round-trip bit-identically.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CommTracker {
+    /// The slot's live in-flight round: `(timeout token, model,
+    /// version-at-dispatch)`. A `Timeout` event fires only while its
+    /// token is still armed here; accepts and give-ups disarm it.
+    pub pending: Vec<Option<(u64, usize, u64)>>,
+    /// Timeout-retry attempts for the slot's current round (drives the
+    /// backoff schedule; reset on accept and give-up).
+    pub attempts: Vec<u32>,
+    /// Last accepted `(model, version-at-dispatch)` per slot — the
+    /// exactly-once aggregation key.
+    pub last_delivered: Vec<Option<(usize, u64)>>,
+    /// Monotone token source; never reused, so a stale timer can never
+    /// collide with a newer round.
+    pub next_token: u64,
+    /// Barrier: deadline extensions taken by the current boundary
+    /// (0 = on schedule, 1 = straggler deadline, 2 = hard cap).
+    pub boundary_extensions: u8,
+    /// Barrier: updates the current cycle dispatched (the quorum
+    /// denominator).
+    pub expected: usize,
+    /// Barrier: dispatch-cycle counter, used as the
+    /// version-at-dispatch tag so stragglers folding into a later
+    /// boundary dedup per cycle, not per slot lifetime.
+    pub cycle: u64,
+}
+
+impl CommTracker {
+    pub fn new(k: usize) -> Self {
+        Self {
+            pending: vec![None; k],
+            attempts: vec![0; k],
+            last_delivered: vec![None; k],
+            next_token: 0,
+            boundary_extensions: 0,
+            expected: 0,
+            cycle: 0,
+        }
+    }
+
+    /// Grow the per-slot vectors when churn adds fleet slots.
+    pub fn grow_to(&mut self, k: usize) {
+        if self.pending.len() < k {
+            self.pending.resize(k, None);
+            self.attempts.resize(k, 0);
+            self.last_delivered.resize(k, None);
+        }
+    }
+
+    /// Arm a fresh in-flight round for `slot`; returns its timeout
+    /// token. Callers never overwrite a live entry (dispatch sites
+    /// guard on it), so every armed round is disarmed exactly once.
+    pub fn arm(&mut self, slot: usize, model: usize, version: u64) -> u64 {
+        let token = self.next_token;
+        self.next_token += 1;
+        self.pending[slot] = Some((token, model, version));
+        token
+    }
+
+    /// Disarm `slot` after an accepted delivery, a give-up, a death,
+    /// or a departure; resets the backoff ladder.
+    pub fn disarm(&mut self, slot: usize) {
+        self.pending[slot] = None;
+        self.attempts[slot] = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn lossy() -> CommFaultConfig {
+        CommFaultConfig {
+            downlink_loss_prob: 0.1,
+            uplink_loss_prob: 0.1,
+            duplicate_prob: 0.1,
+            corrupt_prob: 0.1,
+            ..CommFaultConfig::disabled()
+        }
+    }
+
+    #[test]
+    fn draw_consumes_a_fixed_schedule() {
+        // the stream position after a draw must not depend on which
+        // gates fired, except for the documented corrupt-mask draw
+        let cfg = lossy();
+        let mut a = Rng::new(1);
+        let mut b = Rng::new(1);
+        for _ in 0..200 {
+            let d = draw_round(&cfg, &mut a, 0.0);
+            // replay the schedule by hand on the twin stream
+            for _ in 0..4 {
+                b.uniform();
+            }
+            if d.corrupt_mask.is_some() {
+                b.next_u64();
+            }
+            assert_eq!(a.state(), b.state());
+        }
+    }
+
+    #[test]
+    fn zero_probability_draws_nothing() {
+        let cfg = CommFaultConfig::disabled();
+        let mut rng = Rng::new(7);
+        for _ in 0..100 {
+            let d = draw_round(&cfg, &mut rng, 3.0);
+            assert_eq!(d, CommDraw { lost: false, duplicate: false, corrupt_mask: None });
+        }
+    }
+
+    #[test]
+    fn certain_loss_always_loses() {
+        let cfg = CommFaultConfig { uplink_loss_prob: 1.0, ..CommFaultConfig::disabled() };
+        let mut rng = Rng::new(9);
+        for _ in 0..100 {
+            let d = draw_round(&cfg, &mut rng, -30.0); // even on a lucky link
+            assert!(d.lost);
+            assert!(!d.duplicate && d.corrupt_mask.is_none());
+        }
+    }
+
+    #[test]
+    fn loss_multiplier_tracks_shadowing_and_clamps() {
+        assert_eq!(loss_multiplier(0.0), 1.0);
+        assert!(loss_multiplier(6.0) > 1.9 && loss_multiplier(6.0) < 2.1);
+        assert_eq!(loss_multiplier(100.0), 4.0);
+        assert_eq!(loss_multiplier(-100.0), 0.25);
+    }
+
+    #[test]
+    fn backoff_doubles_and_caps() {
+        let cfg = CommFaultConfig {
+            backoff_base_s: 1.0,
+            backoff_cap_s: 10.0,
+            ..CommFaultConfig::disabled()
+        };
+        assert_eq!(backoff_delay(&cfg, 1), 1.0);
+        assert_eq!(backoff_delay(&cfg, 2), 2.0);
+        assert_eq!(backoff_delay(&cfg, 3), 4.0);
+        assert_eq!(backoff_delay(&cfg, 4), 8.0);
+        assert_eq!(backoff_delay(&cfg, 5), 10.0);
+        assert_eq!(backoff_delay(&cfg, 60), 10.0); // exponent saturates
+    }
+
+    #[test]
+    fn checksum_detects_any_nonzero_mask_and_header_changes() {
+        let params: ParamSet = vec![vec![1.0, -2.5, 0.0], vec![3.25]];
+        let base = payload_checksum(Some(&params), 3, 0, 7, 4, 100);
+        assert_eq!(base, payload_checksum(Some(&params), 3, 0, 7, 4, 100));
+        assert_ne!(base, payload_checksum(Some(&params), 4, 0, 7, 4, 100));
+        assert_ne!(base, payload_checksum(Some(&params), 3, 1, 7, 4, 100));
+        assert_ne!(base, payload_checksum(Some(&params), 3, 0, 8, 4, 100));
+        assert_ne!(base, payload_checksum(None, 3, 0, 7, 4, 100));
+        // ±0.0 carry different bit patterns — the checksum sees bits
+        let mut flipped = params.clone();
+        flipped[0][2] = -0.0;
+        assert_ne!(base, payload_checksum(Some(&flipped), 3, 0, 7, 4, 100));
+        for mask in [1u64, 0xFF, u64::MAX] {
+            assert_ne!(base, base ^ mask);
+        }
+    }
+
+    #[test]
+    fn tracker_tokens_are_monotone_and_disarm_resets_backoff() {
+        let mut t = CommTracker::new(2);
+        let t0 = t.arm(0, 0, 5);
+        let t1 = t.arm(1, 2, 9);
+        assert!(t1 > t0);
+        t.attempts[0] = 3;
+        t.disarm(0);
+        assert_eq!(t.pending[0], None);
+        assert_eq!(t.attempts[0], 0);
+        assert_eq!(t.pending[1], Some((t1, 2, 9)));
+        t.grow_to(4);
+        assert_eq!(t.pending.len(), 4);
+        assert_eq!(t.last_delivered.len(), 4);
+        let t2 = t.arm(3, 0, 0);
+        assert!(t2 > t1);
+    }
+}

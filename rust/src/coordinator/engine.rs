@@ -86,11 +86,12 @@ use crate::allocation::{
     allocate_energy_constrained, make_allocator, Allocation, AllocatorKind, TaskAllocator,
 };
 use crate::channel::fading::FadingProcess;
-use crate::channel::sample_link;
-use crate::config::{ChurnConfig, EnergyConfig, Scenario, TraceAction};
+use crate::channel::{sample_link, shadow_excess_db};
+use crate::config::{ChurnConfig, CommFaultConfig, EnergyConfig, Scenario, TraceAction};
 use crate::coordinator::checkpoint::{
-    CoreState, EnergyState, EngineCheckpoint, EventCheckpoint, MultiModelCheckpoint,
+    CommState, CoreState, EnergyState, EngineCheckpoint, EventCheckpoint, MultiModelCheckpoint,
 };
+use crate::coordinator::comm::{self, CommDraw, CommTracker};
 use crate::coordinator::faults::{draw_outcomes, update_arrives, FaultModel, FaultOutcome};
 use crate::coordinator::learner::Learner;
 use crate::coordinator::orchestrator::{CycleRecord, TrainOptions};
@@ -152,6 +153,18 @@ pub struct EngineStats {
     /// Allocation (re-)solves.
     pub resolves: usize,
     pub final_alive: usize,
+    /// Comm-fault layer: timeout-driven re-dispatches (backoff path).
+    pub retries: usize,
+    /// Comm-fault layer: per-dispatch timeouts that fired.
+    pub timeouts: usize,
+    /// Comm-fault layer: duplicated deliveries dropped at the
+    /// aggregator (at-least-once delivery, exactly-once aggregation).
+    pub dupes_dropped: usize,
+    /// Comm-fault layer: corrupted payloads caught by checksum.
+    pub corrupt_dropped: usize,
+    /// Comm-fault layer: Barrier boundaries that fired short of a full
+    /// report (quorum degradation instead of a stall).
+    pub degraded_boundaries: usize,
 }
 
 #[derive(Debug, Clone)]
@@ -171,6 +184,18 @@ struct ArrivalMsg {
     d: u64,
     params: Option<ParamSet>,
     train_loss: f32,
+    /// Comm-fault layer: checksum over the simulated payload as sent
+    /// (a corrupted delivery carries a mangled value and is dropped at
+    /// verification). `None` exactly when comm faults are disabled.
+    checksum: Option<u64>,
+    /// Comm-fault layer: the timeout token of the dispatch this
+    /// delivery answers. A delivery whose token no longer matches the
+    /// slot's armed round is a late straggler of an abandoned round —
+    /// still aggregated (async absorbs it) but it neither disarms the
+    /// live round nor completes its in-flight record. `None` when comm
+    /// faults are disabled and in Barrier mode (no retry timers there —
+    /// the quorum-degraded boundary recovers from loss instead).
+    comm_token: Option<u64>,
 }
 
 enum Event {
@@ -193,6 +218,11 @@ enum Event {
     /// [`crate::config::TraceConfig`] (joins, leaves, capacity
     /// targets, regional outages).
     Trace { idx: usize },
+    /// Comm-fault layer: the per-dispatch retry timer. Fires only if
+    /// `token` still matches the slot's armed round (stale timers are
+    /// no-ops); expiry re-dispatches on the backoff schedule and gives
+    /// up into the ordinary Retry path after `max_retries`.
+    Timeout { slot: usize, token: u64 },
 }
 
 impl Event {
@@ -208,12 +238,15 @@ impl Event {
                 d: msg.d,
                 params: msg.params,
                 train_loss: msg.train_loss,
+                checksum: msg.checksum,
+                comm_token: msg.comm_token,
             },
             Event::Redispatch { slot } => EventCheckpoint::Redispatch { slot },
             Event::Join => EventCheckpoint::Join,
             Event::Leave { slot } => EventCheckpoint::Leave { slot },
             Event::Rejoin { slot } => EventCheckpoint::Rejoin { slot },
             Event::Trace { idx } => EventCheckpoint::Trace { idx },
+            Event::Timeout { slot, token } => EventCheckpoint::Timeout { slot, token },
         }
     }
 
@@ -229,6 +262,8 @@ impl Event {
                 d,
                 params,
                 train_loss,
+                checksum,
+                comm_token,
             } => Event::Arrival(ArrivalMsg {
                 slot,
                 model,
@@ -237,12 +272,15 @@ impl Event {
                 d,
                 params,
                 train_loss,
+                checksum,
+                comm_token,
             }),
             EventCheckpoint::Redispatch { slot } => Event::Redispatch { slot },
             EventCheckpoint::Join => Event::Join,
             EventCheckpoint::Leave { slot } => Event::Leave { slot },
             EventCheckpoint::Rejoin { slot } => Event::Rejoin { slot },
             EventCheckpoint::Trace { idx } => Event::Trace { idx },
+            EventCheckpoint::Timeout { slot, token } => Event::Timeout { slot, token },
         }
     }
 }
@@ -385,9 +423,10 @@ impl CoordQueue {
         let k = self.q.shards();
         match ev {
             Event::Arrival(msg) => msg.slot % k,
-            Event::Redispatch { slot } | Event::Leave { slot } | Event::Rejoin { slot } => {
-                slot % k
-            }
+            Event::Redispatch { slot }
+            | Event::Leave { slot }
+            | Event::Rejoin { slot }
+            | Event::Timeout { slot, .. } => slot % k,
             Event::Boundary | Event::Join | Event::Trace { .. } => 0,
         }
     }
@@ -424,6 +463,11 @@ enum RoundPlan {
     Depart { slot: usize, at: f64 },
     /// A round runs; its arrival is pushed at `arrive_at`.
     Run(Box<RunPlan>),
+    /// Comm-fault layer: the round was dispatched but its message was
+    /// lost (downlink or uplink). No training runs and no arrival is
+    /// pushed — only the timeout timer (at `timeout_at`), which
+    /// recovers the slot via the retry/backoff schedule.
+    Lost { slot: usize, model: usize, version: u64, timeout_at: f64 },
 }
 
 struct RunPlan {
@@ -442,6 +486,13 @@ struct RunPlan {
     /// current for this plan (no aggregation happened after it was
     /// planned).
     global: Option<ParamSet>,
+    /// Comm-fault layer: the round's drawn message fate (`None`
+    /// exactly when comm faults are disabled).
+    comm: Option<CommDraw>,
+    /// Comm-fault layer: when the round's retry timer fires
+    /// (`dispatch + timeout_factor · t_cycle`; meaningless with
+    /// `comm` unset).
+    timeout_at: f64,
 }
 
 /// The parameters [`EventEngine::flush_plans`] falls back to for plans
@@ -526,12 +577,22 @@ pub struct EventEngine<'rt> {
     /// batteries driving depletion churn (`ScenarioConfig.energy`;
     /// disabled by default).
     energy: EnergyConfig,
+    /// Communication-fault chaos layer (`ScenarioConfig.comm`;
+    /// disabled by default — see [`crate::coordinator::comm`]).
+    comm: CommFaultConfig,
     rng: Rng,
     churn_rng: Rng,
     /// Dedicated battery stream (capacity draws at init and join),
     /// derived like `churn_rng` — battery-free runs never touch it, so
     /// enabling batteries cannot perturb any other stream.
     energy_rng: Rng,
+    /// Dedicated comm-fault stream, same derivation trick: faults-off
+    /// runs never draw from it, so enabling the chaos layer cannot
+    /// perturb the engine / churn / energy / fading streams.
+    comm_rng: Rng,
+    /// In-flight dispatch tracking for the comm layer (timeout tokens,
+    /// retry counters, dedup keys, barrier quorum state).
+    comm_track: CommTracker,
     /// Remaining charge per slot (J); empty when batteries are disabled.
     batteries: Vec<f64>,
     /// Drawn capacity per slot (J) — the recharge target.
@@ -604,8 +665,7 @@ fn exp_sample(rng: &mut Rng, mean: f64) -> f64 {
 /// independent stream derived from the scenario seed (fading-free runs
 /// never touch it — same trick as the churn stream).
 fn make_fading(scenario: &Scenario, rho: f64) -> FadingProcess {
-    let mut tmp = scenario.rng.clone();
-    let rng = Rng::new(tmp.next_u64() ^ 0xFAD1_0C4A_11E0_77AB_u64);
+    let rng = Rng::derive_stream(&scenario.rng, 0xFAD1_0C4A_11E0_77AB_u64);
     FadingProcess::new(scenario.config.channel, &scenario.links, rho, rng)
 }
 
@@ -645,17 +705,17 @@ impl<'rt> EventEngine<'rt> {
         // Same derivation as the lock-step orchestrator…
         let mut rng = scenario.rng.clone();
         let rng = rng.fork(0x0_0C);
-        // …plus an independent stream for churn, derived without
-        // disturbing the shared one (churn-free runs never touch it).
-        let mut tmp = scenario.rng.clone();
-        let churn_rng = Rng::new(tmp.next_u64() ^ 0xC41C_77AA_D15C_0DEA_u64);
+        // …plus independent salted streams for the opt-in subsystems
+        // (churn, batteries, comm faults), each derived from a fresh
+        // clone via [`Rng::derive_stream`] so runs with a feature off
+        // never touch its stream and enabling one feature cannot
+        // perturb another.
+        let churn_rng = Rng::derive_stream(&scenario.rng, 0xC41C_77AA_D15C_0DEA_u64);
         let churn = scenario.config.churn;
-        // …and one more for batteries, same trick: derived from a fresh
-        // clone, so battery-free runs are bit-identical to pre-energy
-        // builds and batteries never perturb the churn stream.
-        let mut tmp = scenario.rng.clone();
-        let mut energy_rng = Rng::new(tmp.next_u64() ^ 0xE6E6_0B5A_77E1_BA77_u64);
+        let mut energy_rng = Rng::derive_stream(&scenario.rng, 0xE6E6_0B5A_77E1_BA77_u64);
         let energy = scenario.config.energy;
+        let comm_rng = Rng::derive_stream(&scenario.rng, comm::COMM_STREAM_SALT);
+        let comm_cfg = scenario.config.comm;
         let mut batteries = Vec::new();
         let mut battery_caps = Vec::new();
         if energy.has_battery() {
@@ -683,9 +743,12 @@ impl<'rt> EventEngine<'rt> {
             faults: FaultModel::none(),
             churn,
             energy,
+            comm: comm_cfg,
             rng,
             churn_rng,
             energy_rng,
+            comm_rng,
+            comm_track: CommTracker::new(initial_k),
             batteries,
             battery_caps,
             depleted,
@@ -773,8 +836,7 @@ impl<'rt> EventEngine<'rt> {
     /// charge, so like the sibling builders it must run before `run`.
     pub fn with_energy(mut self, energy: EnergyConfig) -> Self {
         self.energy = energy;
-        let mut tmp = self.scenario.rng.clone();
-        self.energy_rng = Rng::new(tmp.next_u64() ^ 0xE6E6_0B5A_77E1_BA77_u64);
+        self.energy_rng = Rng::derive_stream(&self.scenario.rng, 0xE6E6_0B5A_77E1_BA77_u64);
         self.batteries.clear();
         self.battery_caps.clear();
         if energy.has_battery() {
@@ -788,6 +850,18 @@ impl<'rt> EventEngine<'rt> {
         }
         self.depleted = vec![false; self.batteries.len()];
         self.energy_clamped = 0;
+        self
+    }
+
+    /// Override the communication-fault model from the scenario config
+    /// (message loss / duplication / corruption plus timeout-retry and
+    /// quorum-degraded barriers). Re-derives the comm stream and resets
+    /// the in-flight tracker, so like the sibling builders it must run
+    /// before `run`.
+    pub fn with_comm_faults(mut self, comm: CommFaultConfig) -> Self {
+        self.comm = comm;
+        self.comm_rng = Rng::derive_stream(&self.scenario.rng, comm::COMM_STREAM_SALT);
+        self.comm_track = CommTracker::new(self.slots.len());
         self
     }
 
@@ -1052,24 +1126,84 @@ impl<'rt> EventEngine<'rt> {
             }
             _ => arriving.iter().map(|_| None).collect(),
         };
+        // Comm-fault layer (Barrier flavor): no retry timers — the
+        // quorum-degraded Boundary recovers from loss instead. Each
+        // cycle's dispatches are tagged with a dispatch-cycle counter
+        // as their version so late stragglers folding into a later
+        // boundary dedup per cycle, and arrival times are *unclamped*
+        // (a straggler past `t_cycle` simply misses its boundary).
+        let comm_on = self.comm.is_enabled();
+        if comm_on {
+            self.comm_track.cycle += 1;
+            self.comm_track.expected = arriving.len();
+            self.comm_track.boundary_extensions = 0;
+        }
         // serial push phase in allocation order (stable queue seq)
         for (a, t) in arriving.iter().zip(trained) {
             let (params, train_loss) = match t {
                 Some((p, loss)) => (Some(p), loss),
                 None => (None, f32::NAN),
             };
-            q.push(
-                now + a.effective.min(t_cycle),
-                Event::Arrival(ArrivalMsg {
-                    slot: a.slot,
-                    model: 0,
-                    version_at_dispatch: 0,
-                    tau: a.tau,
-                    d: a.d,
-                    params,
-                    train_loss,
-                }),
-            );
+            if comm_on {
+                let excess = shadow_excess_db(
+                    &self.scenario.config.channel,
+                    &self.slots[a.slot].learner.link,
+                );
+                let draw = comm::draw_round(&self.comm, &mut self.comm_rng, excess);
+                if draw.lost {
+                    // consumed its draw, but nothing ever arrives
+                    continue;
+                }
+                let version = self.comm_track.cycle;
+                let sum =
+                    comm::payload_checksum(params.as_ref(), a.slot, 0, version, a.tau, a.d);
+                let checksum = Some(sum ^ draw.corrupt_mask.unwrap_or(0));
+                if draw.duplicate {
+                    q.push(
+                        now + a.effective,
+                        Event::Arrival(ArrivalMsg {
+                            slot: a.slot,
+                            model: 0,
+                            version_at_dispatch: version,
+                            tau: a.tau,
+                            d: a.d,
+                            params: params.clone(),
+                            train_loss,
+                            checksum,
+                            comm_token: None,
+                        }),
+                    );
+                }
+                q.push(
+                    now + a.effective,
+                    Event::Arrival(ArrivalMsg {
+                        slot: a.slot,
+                        model: 0,
+                        version_at_dispatch: version,
+                        tau: a.tau,
+                        d: a.d,
+                        params,
+                        train_loss,
+                        checksum,
+                        comm_token: None,
+                    }),
+                );
+            } else {
+                q.push(
+                    now + a.effective.min(t_cycle),
+                    Event::Arrival(ArrivalMsg {
+                        slot: a.slot,
+                        model: 0,
+                        version_at_dispatch: 0,
+                        tau: a.tau,
+                        d: a.d,
+                        params,
+                        train_loss,
+                        checksum: None,
+                        comm_token: None,
+                    }),
+                );
+            }
         }
         // battery departures leave at the cycle head: a Leave at `now`
         // pops before every arrival above (all at now + effective > now)
@@ -1161,6 +1295,23 @@ impl<'rt> EventEngine<'rt> {
             busy *= self.faults.straggle_factor;
         }
         debug_assert!(busy > 0.0);
+        // Comm-fault draw, from the dedicated stream, only for rounds
+        // that got past the legacy fault model (the draw count per
+        // plan order is fixed, so every shard/thread count consumes
+        // the comm stream identically). A lost round schedules nothing
+        // but its timeout: no batch is sampled (the main stream is
+        // untouched) and no train step runs.
+        let comm_draw = if self.comm.is_enabled() {
+            let excess =
+                shadow_excess_db(&self.scenario.config.channel, &self.slots[slot].learner.link);
+            Some(comm::draw_round(&self.comm, &mut self.comm_rng, excess))
+        } else {
+            None
+        };
+        let timeout_at = now + self.comm.timeout_factor * t_cycle;
+        if comm_draw.is_some_and(|c| c.lost) {
+            return (RoundPlan::Lost { slot, model, version, timeout_at }, Some(planned));
+        }
         let shard: Option<Vec<u32>> = match (&self.exec, global) {
             (ExecMode::Real { train, .. }, Some(_)) => {
                 // Async mode samples the learner's batch i.i.d. WITH
@@ -1185,6 +1336,8 @@ impl<'rt> EventEngine<'rt> {
                 arrive_at: now + busy,
                 shard,
                 global: None,
+                comm: comm_draw,
+                timeout_at,
             })),
             Some(planned),
         )
@@ -1268,11 +1421,52 @@ impl<'rt> EventEngine<'rt> {
                 RoundPlan::Skip => {}
                 RoundPlan::Retry { slot, at } => q.push(at, Event::Redispatch { slot }),
                 RoundPlan::Depart { slot, at } => q.push(at, Event::Leave { slot }),
+                RoundPlan::Lost { slot, model, version, timeout_at } => {
+                    // the round is in flight but its message never
+                    // arrives; arm the retry timer so the slot recovers
+                    let token = self.comm_track.arm(slot, model, version);
+                    q.push(timeout_at, Event::Timeout { slot, token });
+                }
                 RoundPlan::Run(rp) => {
                     let (params, train_loss) = match trained[i].take() {
                         Some((p, loss)) => (Some(p), loss),
                         None => (None, f32::NAN),
                     };
+                    let (checksum, comm_token) = match rp.comm {
+                        None => (None, None),
+                        Some(draw) => {
+                            let token = self.comm_track.arm(rp.slot, rp.model, rp.version);
+                            let sum = comm::payload_checksum(
+                                params.as_ref(),
+                                rp.slot,
+                                rp.model,
+                                rp.version,
+                                rp.tau,
+                                rp.d,
+                            );
+                            // a corrupted delivery carries a mangled
+                            // checksum; verification drops it on arrival
+                            (Some(sum ^ draw.corrupt_mask.unwrap_or(0)), Some(token))
+                        }
+                    };
+                    if rp.comm.is_some_and(|c| c.duplicate) {
+                        // at-least-once delivery: the dup lands at the
+                        // same virtual time, consecutive queue seq
+                        q.push(
+                            rp.arrive_at,
+                            Event::Arrival(ArrivalMsg {
+                                slot: rp.slot,
+                                model: rp.model,
+                                version_at_dispatch: rp.version,
+                                tau: rp.tau,
+                                d: rp.d,
+                                params: params.clone(),
+                                train_loss,
+                                checksum,
+                                comm_token,
+                            }),
+                        );
+                    }
                     q.push(
                         rp.arrive_at,
                         Event::Arrival(ArrivalMsg {
@@ -1283,8 +1477,13 @@ impl<'rt> EventEngine<'rt> {
                             d: rp.d,
                             params,
                             train_loss,
+                            checksum,
+                            comm_token,
                         }),
                     );
+                    if let Some(token) = comm_token {
+                        q.push(rp.timeout_at, Event::Timeout { slot: rp.slot, token });
+                    }
                 }
             }
         }
@@ -1412,40 +1611,89 @@ impl<'rt> EventEngine<'rt> {
         for (et, eshard, ev) in batch {
             let slot = match ev {
                 Event::Arrival(msg) => {
+                    // Comm-fault intake: verify the payload, close the
+                    // token-matching round, dedup redundant deliveries.
+                    // `checksum` is `None` exactly when comm faults are
+                    // off, so the disabled path is byte-identical.
+                    let mut aggregate = true;
+                    if let Some(sent) = msg.checksum {
+                        let sum = comm::payload_checksum(
+                            msg.params.as_ref(),
+                            msg.slot,
+                            msg.model,
+                            msg.version_at_dispatch,
+                            msg.tau,
+                            msg.d,
+                        );
+                        if sum != sent {
+                            // corrupted in transit: drop without
+                            // disarming — the retry timer recovers
+                            self.stats.corrupt_dropped += 1;
+                            continue;
+                        }
+                        let matched = msg.comm_token.is_some_and(|tok| {
+                            self.comm_track.pending[msg.slot]
+                                .is_some_and(|(t, _, _)| t == tok)
+                        });
+                        if matched {
+                            self.comm_track.disarm(msg.slot);
+                        }
+                        let key = (msg.model, msg.version_at_dispatch);
+                        if self.comm_track.last_delivered[msg.slot] == Some(key) {
+                            // duplicate delivery: aggregate exactly once
+                            self.stats.dupes_dropped += 1;
+                            if !matched {
+                                continue;
+                            }
+                            // a token-matching redundant delivery still
+                            // ends its round — re-dispatch, don't merge
+                            aggregate = false;
+                        } else {
+                            self.comm_track.last_delivered[msg.slot] = Some(key);
+                        }
+                    }
                     if !self.slots[msg.slot].alive {
                         continue; // left while the upload was in flight
                     }
-                    let s = *version - msg.version_at_dispatch;
-                    if let Some(p) = msg.params.as_ref() {
-                        if global.is_some() {
-                            // dispatches planned earlier in this window
-                            // must not see the post-mix model
-                            freeze_pending(&mut plans, 0, global);
-                            // the owning shard's regional aggregator
-                            // performs the mix (all shards share the
-                            // decay law, so topology never shows up in
-                            // the numerics)
-                            shard_aggs[eshard].mix(
-                                global.as_mut().expect("checked above"),
-                                p,
-                                s,
-                            );
+                    if aggregate {
+                        let s = *version - msg.version_at_dispatch;
+                        if let Some(p) = msg.params.as_ref() {
+                            if global.is_some() {
+                                // dispatches planned earlier in this window
+                                // must not see the post-mix model
+                                freeze_pending(&mut plans, 0, global);
+                                // the owning shard's regional aggregator
+                                // performs the mix (all shards share the
+                                // decay law, so topology never shows up in
+                                // the numerics)
+                                shard_aggs[eshard].mix(
+                                    global.as_mut().expect("checked above"),
+                                    p,
+                                    s,
+                                );
+                            }
                         }
+                        *version += 1;
+                        self.stats.arrivals += 1;
+                        windows[eshard].push(ShardSummary {
+                            time: et,
+                            seq: *arrival_seq,
+                            staleness: s,
+                            loss: msg.train_loss,
+                        });
+                        *arrival_seq += 1;
                     }
-                    *version += 1;
-                    self.stats.arrivals += 1;
-                    windows[eshard].push(ShardSummary {
-                        time: et,
-                        seq: *arrival_seq,
-                        staleness: s,
-                        loss: msg.train_loss,
-                    });
-                    *arrival_seq += 1;
                     msg.slot
                 }
                 Event::Redispatch { slot } => slot,
                 _ => unreachable!("async window drains only arrivals/re-dispatches"),
             };
+            if self.comm.is_enabled() && self.comm_track.pending[slot].is_some() {
+                // an in-flight round already owns this slot (stale
+                // arrival of an abandoned round, or a give-up's
+                // Redispatch racing a retry): never double-dispatch
+                continue;
+            }
             // the dispatch_one serial phase, at this entry's own time
             if self.dirty {
                 self.resolve()?;
@@ -1487,6 +1735,9 @@ impl<'rt> EventEngine<'rt> {
         self.alive_learners += 1;
         self.dirty = true;
         self.stats.joins += 1;
+        // the comm tracker's per-slot vectors follow the fleet (no-op
+        // shrink-side; cheap and RNG-free, so always safe to call)
+        self.comm_track.grow_to(self.slots.len());
         if self.energy.has_battery() {
             // newcomers draw a fresh battery from the dedicated stream
             // (serial, in join order — deterministic for every --shards)
@@ -1641,6 +1892,20 @@ impl<'rt> EventEngine<'rt> {
             } else {
                 None
             },
+            comm: if self.comm.is_enabled() {
+                Some(CommState {
+                    rng: self.comm_rng.state(),
+                    pending: self.comm_track.pending.clone(),
+                    attempts: self.comm_track.attempts.clone(),
+                    last_delivered: self.comm_track.last_delivered.clone(),
+                    next_token: self.comm_track.next_token,
+                    boundary_extensions: self.comm_track.boundary_extensions,
+                    expected: self.comm_track.expected,
+                    cycle: self.comm_track.cycle,
+                })
+            } else {
+                None
+            },
             fading: self.fading.as_ref().map(|fp| fp.state()),
             alloc: self.alloc.as_ref().map(|a| {
                 (a.clone(), self.alloc_costs.clone(), self.alloc_slots.clone())
@@ -1689,6 +1954,35 @@ impl<'rt> EventEngine<'rt> {
             }
             (false, Some(_)) => {
                 bail!("checkpoint has battery state but the engine has none")
+            }
+        }
+        match (self.comm.is_enabled(), core.comm) {
+            (true, Some(cs)) => {
+                ensure!(
+                    cs.pending.len() == self.slots.len()
+                        && cs.attempts.len() == self.slots.len()
+                        && cs.last_delivered.len() == self.slots.len(),
+                    "comm state tracks {} learners, checkpoint has {} slots",
+                    cs.pending.len(),
+                    self.slots.len()
+                );
+                self.comm_rng = Rng::from_state(cs.rng);
+                self.comm_track = CommTracker {
+                    pending: cs.pending,
+                    attempts: cs.attempts,
+                    last_delivered: cs.last_delivered,
+                    next_token: cs.next_token,
+                    boundary_extensions: cs.boundary_extensions,
+                    expected: cs.expected,
+                    cycle: cs.cycle,
+                };
+            }
+            (false, None) => {}
+            (true, None) => {
+                bail!("engine has comm faults enabled but the checkpoint has none")
+            }
+            (false, Some(_)) => {
+                bail!("checkpoint has comm-fault state but the engine has none")
             }
         }
         let params = self.scenario.config.channel;
@@ -1916,7 +2210,32 @@ impl<'rt> EventEngine<'rt> {
                         continue; // left while the upload was in flight
                     }
                     match opts.policy {
-                        EnginePolicy::Barrier => barrier_buf.push(msg),
+                        EnginePolicy::Barrier => {
+                            // comm-fault intake at the buffer door:
+                            // verify and dedup here so the quorum count
+                            // below only ever sees acceptable updates
+                            if let Some(sent) = msg.checksum {
+                                let sum = comm::payload_checksum(
+                                    msg.params.as_ref(),
+                                    msg.slot,
+                                    msg.model,
+                                    msg.version_at_dispatch,
+                                    msg.tau,
+                                    msg.d,
+                                );
+                                if sum != sent {
+                                    self.stats.corrupt_dropped += 1;
+                                    continue;
+                                }
+                                let key = (msg.model, msg.version_at_dispatch);
+                                if self.comm_track.last_delivered[msg.slot] == Some(key) {
+                                    self.stats.dupes_dropped += 1;
+                                    continue;
+                                }
+                                self.comm_track.last_delivered[msg.slot] = Some(key);
+                            }
+                            barrier_buf.push(msg)
+                        }
                         EnginePolicy::Async(_) => {
                             self.async_window(
                                 &mut q,
@@ -1962,12 +2281,48 @@ impl<'rt> EventEngine<'rt> {
                         q.push(now + dt, Event::Join);
                     }
                 }
+                Event::Timeout { slot, token } => {
+                    // per-dispatch retry timer (async + comm faults
+                    // only): fires only while its token is still the
+                    // slot's armed round — everything else is a stale
+                    // timer of a round that already completed
+                    let Some((tok, _m, _v)) = self.comm_track.pending[slot] else {
+                        continue;
+                    };
+                    if tok != token {
+                        continue;
+                    }
+                    self.stats.timeouts += 1;
+                    if !self.slots[slot].alive {
+                        self.comm_track.disarm(slot);
+                        continue; // the round died with its learner
+                    }
+                    self.comm_track.attempts[slot] += 1;
+                    let attempt = self.comm_track.attempts[slot];
+                    if attempt > self.comm.max_retries {
+                        // give up: reset the ladder and fall back into
+                        // the ordinary one-cycle Retry path
+                        self.comm_track.disarm(slot);
+                        q.push(now + t_cycle, Event::Redispatch { slot });
+                    } else {
+                        self.stats.retries += 1;
+                        // abandon the round but keep the attempt count
+                        // (disarm() would reset the backoff ladder)
+                        self.comm_track.pending[slot] = None;
+                        let delay = comm::backoff_delay(&self.comm, attempt);
+                        q.push(now + delay, Event::Redispatch { slot });
+                    }
+                }
                 Event::Leave { slot } => {
                     if self.slots[slot].alive && self.alive_count() > self.min_learners() {
                         self.slots[slot].alive = false;
                         self.alive_learners -= 1;
                         self.dirty = true;
                         self.stats.leaves += 1;
+                        if self.comm.is_enabled() {
+                            // any in-flight round dies with the learner
+                            self.comm_track.disarm(slot);
+                        }
                         if self.is_depleted(slot) && self.energy.recharge_s > 0.0 {
                             // duty cycle: a drained node returns once
                             // its recharge window elapses
@@ -2008,7 +2363,13 @@ impl<'rt> EventEngine<'rt> {
                     }
                 }
                 Event::Trace { idx } => {
-                    let (joined, _left) = self.apply_trace(&mut q, now, idx);
+                    let (joined, left) = self.apply_trace(&mut q, now, idx);
+                    if self.comm.is_enabled() {
+                        for &slot in &left {
+                            // scripted kills bypass the Leave handler
+                            self.comm_track.disarm(slot);
+                        }
+                    }
                     // async: put newcomers to work immediately, exactly
                     // like a Poisson join; barrier folds them in at the
                     // next boundary re-solve. Departures only dirty the
@@ -2020,6 +2381,42 @@ impl<'rt> EventEngine<'rt> {
                     }
                 }
                 Event::Boundary => {
+                    // Quorum-degraded Barrier boundary (comm faults
+                    // only): a boundary short of its full report count
+                    // extends once to the straggler deadline (firing
+                    // there on a quorum) and once more as a hard cap
+                    // (firing regardless — a fully-lost cycle must not
+                    // stall the run). Late arrivals keep buffering and
+                    // fold into whichever boundary fires.
+                    if self.comm.is_enabled() {
+                        if let EnginePolicy::Barrier = opts.policy {
+                            let current = self.comm_track.cycle;
+                            let arrived_now = barrier_buf
+                                .iter()
+                                .filter(|m| {
+                                    m.version_at_dispatch == current
+                                        && self.slots[m.slot].alive
+                                })
+                                .count();
+                            let expected = self.comm_track.expected;
+                            let quorum = ((self.comm.quorum_frac * expected as f64).ceil()
+                                as usize)
+                                .min(expected);
+                            let fire = match self.comm_track.boundary_extensions {
+                                0 => arrived_now >= expected,
+                                1 => arrived_now >= quorum,
+                                _ => true,
+                            };
+                            if !fire {
+                                self.comm_track.boundary_extensions += 1;
+                                q.push(now + self.comm.straggler_wait_s, Event::Boundary);
+                                continue;
+                            }
+                            if arrived_now < expected {
+                                self.stats.degraded_boundaries += 1;
+                            }
+                        }
+                    }
                     let cycle = records.len();
                     let arrived: usize;
                     let train_loss: f32;
@@ -2552,32 +2949,93 @@ impl<'rt> EventEngine<'rt> {
                         match bev {
                             Event::Arrival(msg) => {
                                 let m = msg.model;
-                                registry.models[m].complete_dispatch(msg.version_at_dispatch);
-                                scheduler.observe_arrival(m, et);
+                                // Comm-fault intake — mirrors the
+                                // single-model path, plus exact
+                                // in-flight accounting: a round's
+                                // record_dispatch is completed exactly
+                                // once, by its token-matching delivery
+                                // here or by its timeout fire.
+                                let mut aggregate = true;
+                                if let Some(sent) = msg.checksum {
+                                    let sum = comm::payload_checksum(
+                                        msg.params.as_ref(),
+                                        msg.slot,
+                                        m,
+                                        msg.version_at_dispatch,
+                                        msg.tau,
+                                        msg.d,
+                                    );
+                                    if sum != sent {
+                                        // corrupted: drop without
+                                        // disarming or completing — the
+                                        // retry timer owns the round
+                                        self.stats.corrupt_dropped += 1;
+                                        continue;
+                                    }
+                                    let matched = msg.comm_token.is_some_and(|tok| {
+                                        self.comm_track.pending[msg.slot]
+                                            .is_some_and(|(t, _, _)| t == tok)
+                                    });
+                                    if matched {
+                                        self.comm_track.disarm(msg.slot);
+                                        registry.models[m]
+                                            .complete_dispatch(msg.version_at_dispatch);
+                                        scheduler.observe_arrival(m, et);
+                                    }
+                                    let key = (m, msg.version_at_dispatch);
+                                    if self.comm_track.last_delivered[msg.slot] == Some(key) {
+                                        // duplicate: aggregate once
+                                        self.stats.dupes_dropped += 1;
+                                        if !matched {
+                                            continue;
+                                        }
+                                        // token-matching redundant
+                                        // delivery still ends its round:
+                                        // re-dispatch, don't merge
+                                        aggregate = false;
+                                    } else {
+                                        self.comm_track.last_delivered[msg.slot] = Some(key);
+                                    }
+                                } else {
+                                    registry.models[m]
+                                        .complete_dispatch(msg.version_at_dispatch);
+                                    scheduler.observe_arrival(m, et);
+                                }
                                 if !self.slots[msg.slot].alive {
                                     continue; // left while the upload was in flight
                                 }
-                                self.stats.arrivals += 1;
-                                let s =
-                                    registry.models[m].staleness_of(msg.version_at_dispatch);
-                                // a buffered flush mutates this model's
-                                // parameters: earlier window plans keep
-                                // their pre-flush snapshot
-                                if registry.models[m].next_absorb_flushes() {
-                                    freeze_pending(&mut plans, m, &globals[m]);
+                                if aggregate {
+                                    self.stats.arrivals += 1;
+                                    let s = registry.models[m]
+                                        .staleness_of(msg.version_at_dispatch);
+                                    // a buffered flush mutates this model's
+                                    // parameters: earlier window plans keep
+                                    // their pre-flush snapshot
+                                    if registry.models[m].next_absorb_flushes() {
+                                        freeze_pending(&mut plans, m, &globals[m]);
+                                    }
+                                    registry.models[m].absorb_from(
+                                        &mut globals[m],
+                                        BufferedUpdate {
+                                            params: msg.params,
+                                            staleness: s,
+                                            train_loss: msg.train_loss,
+                                        },
+                                        eshard,
+                                        et,
+                                        arrival_seq,
+                                    );
+                                    arrival_seq += 1;
                                 }
-                                registry.models[m].absorb_from(
-                                    &mut globals[m],
-                                    BufferedUpdate {
-                                        params: msg.params,
-                                        staleness: s,
-                                        train_loss: msg.train_loss,
-                                    },
-                                    eshard,
-                                    et,
-                                    arrival_seq,
-                                );
-                                arrival_seq += 1;
+                                if self.comm.is_enabled()
+                                    && self.comm_track.pending[msg.slot].is_some()
+                                {
+                                    // a stale delivery of an abandoned
+                                    // round was absorbed above; the
+                                    // slot's live round still owns it —
+                                    // never double-dispatch
+                                    continue;
+                                }
                                 // the learner is free again: route it
                                 let active = registry.active_ids();
                                 if active.is_empty() {
@@ -2629,6 +3087,15 @@ impl<'rt> EventEngine<'rt> {
                                 }
                             }
                             Event::Redispatch { slot } => {
+                                if self.comm.is_enabled()
+                                    && self.comm_track.pending[slot].is_some()
+                                {
+                                    // an in-flight round already owns
+                                    // this slot (a give-up's Redispatch
+                                    // racing a retry) — never
+                                    // double-dispatch
+                                    continue;
+                                }
                                 // a failed round retries on its current model (the
                                 // slot was never freed — scheduler routing happens
                                 // on completed rounds and joins only). The alive
@@ -2685,6 +3152,41 @@ impl<'rt> EventEngine<'rt> {
                         &opts.train,
                     )?;
                 }
+                Event::Timeout { slot, token } => {
+                    // per-dispatch retry timer — mirrors the
+                    // single-model arm, plus the exact in-flight
+                    // accounting: the abandoned round's record
+                    // completes here (its late delivery, if any,
+                    // arrives token-stale and never re-completes)
+                    let Some((tok, m, v)) = self.comm_track.pending[slot] else {
+                        continue;
+                    };
+                    if tok != token {
+                        continue;
+                    }
+                    self.stats.timeouts += 1;
+                    registry.models[m].complete_dispatch(v);
+                    if !self.slots[slot].alive {
+                        self.comm_track.disarm(slot);
+                        continue; // the round died with its learner
+                    }
+                    self.comm_track.attempts[slot] += 1;
+                    let attempt = self.comm_track.attempts[slot];
+                    if attempt > self.comm.max_retries {
+                        // give up: reset the ladder and fall back into
+                        // the ordinary one-cycle Retry path, on the
+                        // round's own model deadline
+                        self.comm_track.disarm(slot);
+                        q.push(now + specs[m].t_cycle, Event::Redispatch { slot });
+                    } else {
+                        self.stats.retries += 1;
+                        // abandon the round but keep the attempt count
+                        // (disarm() would reset the backoff ladder)
+                        self.comm_track.pending[slot] = None;
+                        let delay = comm::backoff_delay(&self.comm, attempt);
+                        q.push(now + delay, Event::Redispatch { slot });
+                    }
+                }
                 Event::Join => {
                     if let Some(slot) = self.join(&mut q, now) {
                         let active = registry.active_ids();
@@ -2720,6 +3222,14 @@ impl<'rt> EventEngine<'rt> {
                         self.alive_learners -= 1;
                         subs[model_of[slot]].dirty = true;
                         self.stats.leaves += 1;
+                        if self.comm.is_enabled() {
+                            // any in-flight round dies with the learner;
+                            // its record completes now
+                            if let Some((_, m, v)) = self.comm_track.pending[slot] {
+                                registry.models[m].complete_dispatch(v);
+                            }
+                            self.comm_track.disarm(slot);
+                        }
                         if self.is_depleted(slot) && self.energy.recharge_s > 0.0 {
                             // duty cycle — identical to the single-model
                             // path: the drained node returns after its
@@ -2766,6 +3276,13 @@ impl<'rt> EventEngine<'rt> {
                     let (joined, left) = self.apply_trace(&mut q, now, idx);
                     for slot in left {
                         subs[model_of[slot]].dirty = true;
+                        if self.comm.is_enabled() {
+                            // scripted kills bypass the Leave handler
+                            if let Some((_, m, v)) = self.comm_track.pending[slot] {
+                                registry.models[m].complete_dispatch(v);
+                            }
+                            self.comm_track.disarm(slot);
+                        }
                     }
                     // newcomers route through the scheduler and start
                     // immediately — same treatment as a Poisson join

@@ -27,14 +27,16 @@
 //!   staleness-weighted asynchronous aggregation.
 
 pub mod checkpoint;
+pub mod comm;
 pub mod engine;
 pub mod faults;
 pub mod learner;
 pub mod orchestrator;
 
 pub use checkpoint::{
-    CoreState, EnergyState, EngineCheckpoint, EventCheckpoint, MultiModelCheckpoint,
+    CommState, CoreState, EnergyState, EngineCheckpoint, EventCheckpoint, MultiModelCheckpoint,
 };
+pub use comm::{CommDraw, CommTracker};
 pub use engine::{
     EngineError, EngineOptions, EnginePolicy, EngineStats, EventEngine, ExecMode, MultiRunOutcome,
     RunOutcome,

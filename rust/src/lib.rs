@@ -33,6 +33,7 @@
 //! | [`runtime`] | [`runtime::Executor`] backend seam: native pure-Rust scalar + batched kernels (default) or PJRT (`pjrt` feature) |
 //! | [`runtime::pool`] | deterministic sharded thread pool for real-numerics learner steps |
 //! | [`coordinator`] | lock-step orchestrator **and** the event-driven fleet engine |
+//! | [`coordinator::comm`] | communication-fault layer: loss/duplication/corruption, timeout/retry/backoff, quorum-degraded barriers |
 //! | [`serve`] | `asyncmel serve` daemon: spooled submissions, checkpoint/restore, pluggable result formats |
 //! | [`metrics`] | CSV writers, table printers, run summaries |
 //! | [`experiments`] | paper figures/tables + fleet-scale and multi-model engine sweeps |
@@ -230,12 +231,35 @@
 //! unconstrained oracle; `rust/benches/energy_fleet.rs` times both
 //! paths at fleet scale.
 //!
+//! ## Communication faults and quorum-degraded barriers
+//!
+//! [`coordinator::comm`] makes the network itself unreliable
+//! ([`config::CommFaultConfig`], JSON `comm` section, CLI
+//! `train|fleet --comm-loss/--comm-dup/--comm-corrupt`): each planned
+//! round draws loss (downlink and uplink, scaled up on deep-faded
+//! links), duplication, and a checksum-detectable corruption mask from
+//! a dedicated salted RNG stream in the serial plan phase — a
+//! faults-off run never touches the stream and stays **byte-identical**
+//! to the pre-comm engine. Delivery is at-least-once, aggregation
+//! exactly-once: every dispatch arms a monotone token plus a timeout
+//! event, the coordinator retries lost rounds on a capped exponential
+//! backoff ladder, and duplicated uploads are deduped at the
+//! aggregator. Under the Barrier policy a boundary that cannot collect
+//! every update degrades in stages — wait `straggler_wait_s`, then
+//! fire at `quorum_frac`, then fire unconditionally — so total loss
+//! degrades throughput instead of stalling the run
+//! (`stats.degraded_boundaries` counts the short fires). Every fault
+//! mix is bit-identical across `--shards`/`--threads` and
+//! checkpoint/resume ([`coordinator::checkpoint::CommState`];
+//! `rust/tests/comm_faults.rs`, `rust/benches/chaos_fleet.rs`).
+//!
 //! ## Determinism contracts
 //!
 //! Every bit-identity guarantee referenced above — the
 //! `(time, seq, shard_id)` merge order, ε = 0 coalescing, shard/thread
 //! invariance, checkpoint hex-float round-trips, the differential
-//! oracle suite, and the energy→churn event ordering — is consolidated
+//! oracle suite, the energy→churn event ordering, and the comm-fault
+//! token/dedup rules — is consolidated
 //! in one place: `docs/ARCHITECTURE.md` at the repository root, with
 //! pointers to the test that enforces each contract.
 //!

@@ -69,11 +69,20 @@ const USAGE: &str =
                                      E_k^max in joules ('inf' = unconstrained); the
                                      allocator clips infeasible (tau, d) to the
                                      energy-feasible frontier before repair
+           --comm-loss P             event engine: per-message loss probability
+                                     (both link directions; deliveries time out and
+                                     retry with capped exponential backoff)
+           --comm-dup P --comm-corrupt P
+                                     duplicate / corrupt probabilities (dupes dedup
+                                     at the aggregator, corruption is caught by
+                                     checksum and dropped)
   fleet    --ks 10,100,1000,5000 --cycles N --scheme S
            --churn-join R --churn-life S --shards K --csv PATH
            --energy-budget J         per-learner energy cap for the sweep
+           --comm-loss P --comm-dup P --comm-corrupt P
+                                     comm-fault chaos for the sweep
                                      event-engine scaling sweep (phantom numerics)
-           --real [--threads N] [--epsilon-window S]
+           --real [--threads N] [--epsilon-window S] [--energy-budget J]
                                      real-numerics sweep instead (native MLP through
                                      the sharded executor; default ks 100,500,1000),
                                      plus an async serial/sharded/coalescing sweep
@@ -300,6 +309,31 @@ fn energy_from_args(base: &mut ScenarioConfig, args: &Args) -> Result<bool> {
     Ok(true)
 }
 
+/// `--comm-loss P --comm-dup P --comm-corrupt P` → comm-fault chaos
+/// overrides on the scenario's `comm` section (`--comm-loss` sets both
+/// link directions; use a config file for asymmetric links). Returns
+/// whether any flag was given: the fault layer lives in the event
+/// engine, so callers reject the flags on the lock-step orchestrator.
+fn comm_from_args(base: &mut ScenarioConfig, args: &Args) -> Result<bool> {
+    let given = ["comm-loss", "comm-dup", "comm-corrupt"]
+        .iter()
+        .any(|k| args.get(k).is_some());
+    if !given {
+        return Ok(false);
+    }
+    if args.get("comm-loss").is_some() {
+        let p: f64 = args.require("comm-loss")?;
+        base.comm.downlink_loss_prob = p;
+        base.comm.uplink_loss_prob = p;
+    }
+    base.comm.duplicate_prob = args.get_or("comm-dup", base.comm.duplicate_prob)?;
+    base.comm.corrupt_prob = args.get_or("comm-corrupt", base.comm.corrupt_prob)?;
+    if let Err(e) = base.comm.validate() {
+        bail!("--comm-loss/--comm-dup/--comm-corrupt: {e}");
+    }
+    Ok(true)
+}
+
 /// `--shards K` → scenario override: hierarchical coordinator shard
 /// count (rejects 0, same as the JSON intake path).
 fn shards_from_args(base: &mut ScenarioConfig, args: &Args) -> Result<()> {
@@ -367,6 +401,13 @@ fn cmd_train(mut base: ScenarioConfig, args: &Args) -> Result<()> {
             bail!("--fading-rho requires --engine event (per-cycle link evolution)");
         }
         base.fading_rho = Some(rho);
+    }
+    let comm_flags_given = comm_from_args(&mut base, args)?;
+    if (comm_flags_given || base.comm.is_enabled()) && engine == EngineKind::Lockstep {
+        bail!(
+            "--comm-loss/--comm-dup/--comm-corrupt (and comm config sections) require \
+             --engine event (the fault layer lives in the event engine)"
+        );
     }
     let models: usize = args.get_or("models", base.multimodel.num_models)?;
     let buffer: usize = args.get_or("buffer", base.multimodel.buffer_size)?;
@@ -578,10 +619,8 @@ fn cmd_fleet(mut base: ScenarioConfig, args: &Args) -> Result<()> {
     epsilon_from_args(&mut base, args)?;
     shards_from_args(&mut base, args)?;
     energy_from_args(&mut base, args)?;
+    comm_from_args(&mut base, args)?;
     if args.has("real") {
-        if args.get("energy-budget").is_some() || base.energy.is_enabled() {
-            bail!("fleet --real has no energy model yet; drop --energy-budget / energy config");
-        }
         return cmd_fleet_real(base, args);
     }
     let ks: Vec<usize> = args.get_list_or("ks", vec![10, 100, 1000, 5000])?;

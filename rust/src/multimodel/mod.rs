@@ -490,7 +490,12 @@ impl ModelInstance {
     }
 
     /// Retire an in-flight round (its upload arrived — or was lost to a
-    /// mid-flight departure).
+    /// mid-flight departure). Under communication faults
+    /// ([`crate::coordinator::comm`]) the engine guarantees exactly one
+    /// completion per [`Self::record_dispatch`]: the token-matching
+    /// delivery (accepted *or* deduped as a duplicate), the round's
+    /// `Timeout` expiry, or the slot's death — duplicate and corrupted
+    /// deliveries never decrement twice.
     pub fn complete_dispatch(&mut self, version_at_dispatch: u64) {
         if let Some(n) = self.in_flight.get_mut(&version_at_dispatch) {
             *n -= 1;

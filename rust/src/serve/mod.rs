@@ -285,6 +285,18 @@ impl Spool {
             fs::create_dir_all(dir)
                 .with_context(|| format!("creating spool dir {}", dir.display()))?;
         }
+        // sweep half-written tmp files from a crashed predecessor: a
+        // kill between `write` and `rename` in `write_atomic` leaves a
+        // `*.tmp` behind, and the job that owned it will re-run anyway
+        for dir in [&spool.ckpt, &spool.out, &spool.done] {
+            for entry in fs::read_dir(dir).with_context(|| format!("listing {}", dir.display()))? {
+                let path = entry?.path();
+                if path.is_file() && path.extension().and_then(|e| e.to_str()) == Some("tmp") {
+                    fs::remove_file(&path)
+                        .with_context(|| format!("sweeping stale {}", path.display()))?;
+                }
+            }
+        }
         Ok(spool)
     }
 
@@ -309,8 +321,13 @@ fn sorted_json_files(dir: &Path) -> Result<Vec<PathBuf>> {
 
 /// Crash-safe write: results and digests appear atomically or not at
 /// all (the checkpoint layer has the same tmp+rename discipline).
+/// The tmp name appends `.tmp` to the *full* filename rather than
+/// swapping the extension, so `{id}.digest` and `{id}.error` for the
+/// same job never collide on one tmp path.
 fn write_atomic(path: &Path, text: &str) -> Result<()> {
-    let tmp = path.with_extension("tmp");
+    let mut tmp = path.as_os_str().to_owned();
+    tmp.push(".tmp");
+    let tmp = PathBuf::from(tmp);
     fs::write(&tmp, text).with_context(|| format!("writing {}", tmp.display()))?;
     fs::rename(&tmp, path).with_context(|| format!("renaming into {}", path.display()))?;
     Ok(())
@@ -324,7 +341,12 @@ fn stats_to_json(s: &EngineStats) -> Value {
         .set("dispatched", s.dispatched)
         .set("arrivals", s.arrivals)
         .set("resolves", s.resolves)
-        .set("final_alive", s.final_alive);
+        .set("final_alive", s.final_alive)
+        .set("retries", s.retries)
+        .set("timeouts", s.timeouts)
+        .set("dupes_dropped", s.dupes_dropped)
+        .set("corrupt_dropped", s.corrupt_dropped)
+        .set("degraded_boundaries", s.degraded_boundaries);
     v
 }
 

@@ -50,6 +50,16 @@ impl Rng {
         Rng::new(self.next_u64() ^ tag.wrapping_mul(0x9E37_79B9_7F4A_7C15))
     }
 
+    /// Derive a salted side stream from `base` WITHOUT advancing it:
+    /// the engine's opt-in subsystems (churn, energy, fading, comm)
+    /// each seed from a clone of the scenario stream xor'd with their
+    /// own salt, so enabling one feature can never shift the draws of
+    /// another. Unlike [`Rng::fork`], the base generator is untouched.
+    pub fn derive_stream(base: &Rng, salt: u64) -> Rng {
+        let mut tmp = base.clone();
+        Rng::new(tmp.next_u64() ^ salt)
+    }
+
     /// Snapshot the full generator state for checkpointing.
     pub fn state(&self) -> RngState {
         RngState { s: self.s, spare_normal: self.spare_normal }
@@ -244,6 +254,17 @@ mod tests {
         assert!(snap.spare_normal.is_some());
         let mut b = Rng::from_state(snap);
         assert_eq!(a.normal().to_bits(), b.normal().to_bits());
+    }
+
+    #[test]
+    fn derive_stream_leaves_the_base_untouched() {
+        let base = Rng::new(21);
+        let mut a = Rng::derive_stream(&base, 0xAA);
+        let mut b = Rng::derive_stream(&base, 0xBB);
+        // the base did not advance: deriving again is repeatable
+        assert_eq!(a.state(), Rng::derive_stream(&base, 0xAA).state());
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert!(same < 2);
     }
 
     #[test]

@@ -1,0 +1,370 @@
+//! End-to-end contracts for the communication-fault chaos layer
+//! ([`asyncmel::coordinator::comm`]).
+//!
+//! Four layers of guarantee:
+//!
+//! * **faults-off oracle** — with comm faults disabled the event
+//!   engine is byte-identical to the pre-comm engine; the lock-step
+//!   orchestrator (untouched by the fault layer) is the differential
+//!   witness, and the dedicated comm RNG stream is never drawn from;
+//! * **determinism** — any fault configuration is bit-identical across
+//!   `--shards {1, 8}` × `--threads {1, 8}` and across repeats, under
+//!   both phantom and real numerics;
+//! * **checkpoint/resume** — in-flight timeout/retry state (armed
+//!   tokens, backoff attempt counters, dedup keys, the comm RNG)
+//!   round-trips through JSON bit-identically, and a comm checkpoint
+//!   refuses to restore into a comm-free engine (typed error, not
+//!   silent divergence);
+//! * **degradation semantics** — a Barrier run whose uplinks never
+//!   deliver completes via quorum-degraded boundaries instead of
+//!   stalling, duplicates are deduped exactly-once at the aggregator,
+//!   and corrupted payloads are caught by checksum and retried.
+
+use asyncmel::aggregation::{AggregationRule, AsyncAggregator, ParamSet};
+use asyncmel::allocation::AllocatorKind;
+use asyncmel::config::{ChurnConfig, CommFaultConfig, Scenario, ScenarioConfig};
+use asyncmel::coordinator::{
+    record_digest, EngineCheckpoint, EngineOptions, EnginePolicy, EngineStats, EventEngine,
+    ExecMode, Orchestrator, RunOutcome, TrainOptions,
+};
+use asyncmel::data::{synth, SynthConfig, SynthDataset};
+use asyncmel::runtime::Runtime;
+
+/// Tiny model so real-numerics runs stay fast in debug builds.
+const DIMS: [usize; 3] = [36, 16, 4];
+const SAMPLES: usize = 360;
+const SEED: u64 = 0xC0FF_A17;
+
+/// A fault mix fat enough that every counter moves on any seed.
+fn chaos() -> CommFaultConfig {
+    CommFaultConfig {
+        downlink_loss_prob: 0.15,
+        uplink_loss_prob: 0.15,
+        duplicate_prob: 0.3,
+        corrupt_prob: 0.15,
+        ..CommFaultConfig::disabled()
+    }
+}
+
+fn tiny_config(k: usize, comm: CommFaultConfig) -> ScenarioConfig {
+    let mut cfg = ScenarioConfig::paper_default()
+        .with_learners(k)
+        .with_cycle(15.0)
+        .with_total_samples(SAMPLES as u64)
+        .with_comm(comm)
+        .unwrap()
+        .with_seed(SEED);
+    cfg.task.features = DIMS[0] as u64;
+    cfg.task.compute_cycles_per_sample = 2.0e7;
+    cfg
+}
+
+fn tiny_world(k: usize, comm: CommFaultConfig) -> (Scenario, SynthDataset) {
+    let cfg = tiny_config(k, comm);
+    let ds = synth::generate(&SynthConfig {
+        side: 6,
+        classes: 4,
+        train: SAMPLES,
+        test: 96,
+        noise_std: 0.5,
+        ..SynthConfig::default()
+    });
+    (cfg.build(), ds)
+}
+
+fn opts(policy: EnginePolicy, cycles: usize) -> EngineOptions {
+    EngineOptions {
+        train: TrainOptions { cycles, lr: 0.1, eval_every: 1, reallocate_each_cycle: false },
+        policy,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// faults-off oracle
+// ---------------------------------------------------------------------------
+
+#[test]
+fn comm_disabled_is_byte_identical_to_the_lockstep_oracle() {
+    // the lock-step orchestrator has no comm layer at all, so matching
+    // it byte-for-byte proves a faults-off event engine never draws
+    // from (or is perturbed by) the comm stream — the pre-PR contract
+    let rt = Runtime::native(&DIMS, 32, 48);
+    let run_opts = opts(EnginePolicy::Barrier, 4);
+
+    let (scenario, ds) = tiny_world(5, CommFaultConfig::disabled());
+    let mut orch = Orchestrator::new(
+        scenario,
+        AllocatorKind::Eta,
+        AggregationRule::FedAvg,
+        &rt,
+        ds.train,
+        ds.test,
+    )
+    .unwrap();
+    let lock = orch.run(&run_opts.train).unwrap();
+
+    let (scenario, ds) = tiny_world(5, CommFaultConfig::disabled());
+    let mut engine = EventEngine::new(
+        scenario,
+        AllocatorKind::Eta,
+        AggregationRule::FedAvg,
+        ExecMode::Real { runtime: &rt, train: ds.train, test: ds.test },
+    )
+    .unwrap();
+    let event = engine.run(&run_opts).unwrap();
+
+    assert_eq!(record_digest(&lock), record_digest(&event));
+    // and the comm path really was cold
+    let s = engine.stats;
+    assert_eq!(
+        (s.retries, s.timeouts, s.dupes_dropped, s.corrupt_dropped, s.degraded_boundaries),
+        (0, 0, 0, 0, 0),
+        "comm counters moved on a faults-off run: {s:?}"
+    );
+}
+
+#[test]
+fn enabling_faults_perturbs_the_run_but_stays_reproducible() {
+    let run = |comm: CommFaultConfig| {
+        let cfg = tiny_config(40, comm).with_churn(ChurnConfig::new(0.5, 120.0));
+        let mut engine = EventEngine::new(
+            cfg.build(),
+            AllocatorKind::Eta,
+            AggregationRule::FedAvg,
+            ExecMode::Phantom,
+        )
+        .unwrap();
+        let records = engine
+            .run(&opts(EnginePolicy::Async(AsyncAggregator::default()), 5))
+            .unwrap();
+        (record_digest(&records), engine.stats)
+    };
+    let (clean, _) = run(CommFaultConfig::disabled());
+    let (a, sa) = run(chaos());
+    let (b, sb) = run(chaos());
+    assert_eq!(a, b, "faulty run must be reproducible");
+    assert_eq!(sa, sb);
+    assert_ne!(a, clean, "a 15%-loss fleet cannot match the clean run");
+    assert!(sa.timeouts > 0, "no timeouts fired: {sa:?}");
+    assert!(sa.retries > 0, "no retries: {sa:?}");
+    assert!(sa.dupes_dropped > 0, "no duplicates dropped: {sa:?}");
+    assert!(sa.corrupt_dropped > 0, "no corruption caught: {sa:?}");
+}
+
+// ---------------------------------------------------------------------------
+// shard / thread determinism (real numerics)
+// ---------------------------------------------------------------------------
+
+fn run_chaos_real(shards: usize, threads: usize) -> (String, Option<ParamSet>, EngineStats) {
+    let rt = Runtime::native(&DIMS, 32, 48);
+    let cfg = tiny_config(6, chaos()).with_shards(shards).with_threads(threads);
+    let ds = synth::generate(&SynthConfig {
+        side: 6,
+        classes: 4,
+        train: SAMPLES,
+        test: 96,
+        noise_std: 0.5,
+        ..SynthConfig::default()
+    });
+    let mut engine = EventEngine::new(
+        cfg.build(),
+        AllocatorKind::Eta,
+        AggregationRule::FedAvg,
+        ExecMode::Real { runtime: &rt, train: ds.train, test: ds.test },
+    )
+    .unwrap();
+    let (records, params) = engine
+        .run_with_params(&opts(EnginePolicy::Async(AsyncAggregator::default()), 3))
+        .unwrap();
+    (record_digest(&records), params, engine.stats)
+}
+
+#[test]
+fn comm_faults_are_bit_identical_across_shards_and_threads() {
+    let (digest1, params1, stats1) = run_chaos_real(1, 1);
+    assert!(
+        stats1.timeouts > 0 || stats1.dupes_dropped > 0 || stats1.corrupt_dropped > 0,
+        "chaos had no effect — the determinism claim would be vacuous: {stats1:?}"
+    );
+    for (shards, threads) in [(1usize, 8usize), (8, 1), (8, 8)] {
+        let (digest, params, stats) = run_chaos_real(shards, threads);
+        assert_eq!(
+            digest1, digest,
+            "records diverged at {shards} shards / {threads} threads"
+        );
+        assert_eq!(
+            params1, params,
+            "params diverged at {shards} shards / {threads} threads"
+        );
+        assert_eq!(
+            stats1, stats,
+            "engine stats diverged at {shards} shards / {threads} threads"
+        );
+    }
+}
+
+// ---------------------------------------------------------------------------
+// checkpoint/resume with in-flight timeout state
+// ---------------------------------------------------------------------------
+
+#[test]
+fn comm_run_checkpoint_resume_is_bit_identical() {
+    let rt = Runtime::native(&DIMS, 32, 48);
+    let run_opts = opts(EnginePolicy::Async(AsyncAggregator::default()), 4);
+    let fresh = || {
+        let (scenario, ds) = tiny_world(6, chaos());
+        EventEngine::new(
+            scenario,
+            AllocatorKind::Eta,
+            AggregationRule::FedAvg,
+            ExecMode::Real { runtime: &rt, train: ds.train, test: ds.test },
+        )
+        .unwrap()
+    };
+
+    let mut oracle = fresh();
+    let (want_digest, want_params) = match oracle.run_to_checkpoint(&run_opts, None, None).unwrap()
+    {
+        RunOutcome::Finished { records, params } => (record_digest(&records), params),
+        RunOutcome::Suspended(_) => panic!("run suspended without a stop point"),
+    };
+
+    let mut first = fresh();
+    let ck = match first.run_to_checkpoint(&run_opts, None, Some(2)).unwrap() {
+        RunOutcome::Suspended(ck) => *ck,
+        RunOutcome::Finished { .. } => panic!("run finished before its stop point"),
+    };
+    let cs = ck.core.comm.as_ref().expect("comm-enabled run must serialize its comm state");
+    // a 15%-loss fleet at a mid-run boundary has rounds in flight: the
+    // armed tokens (and their queued Timeout events) must travel
+    assert!(
+        cs.pending.iter().any(|p| p.is_some()),
+        "no in-flight rounds at the checkpoint boundary — the resume claim would be vacuous"
+    );
+    // the exact bytes a killed daemon would leave behind and read back
+    let text = ck.to_json().pretty();
+    let ck = EngineCheckpoint::from_json(&asyncmel::json::parse(&text).unwrap()).unwrap();
+
+    let mut second = fresh();
+    let (digest, params) = match second.run_to_checkpoint(&run_opts, Some(ck), None).unwrap() {
+        RunOutcome::Finished { records, params } => (record_digest(&records), params),
+        RunOutcome::Suspended(_) => panic!("resume suspended unexpectedly"),
+    };
+    assert_eq!(want_digest, digest, "records diverged after comm resume");
+    assert_eq!(want_params, params, "params diverged after comm resume");
+    assert_eq!(oracle.stats, second.stats, "stats diverged after comm resume");
+}
+
+#[test]
+fn comm_checkpoint_into_a_comm_free_engine_is_a_typed_error() {
+    let rt = Runtime::native(&DIMS, 32, 48);
+    let run_opts = opts(EnginePolicy::Async(AsyncAggregator::default()), 4);
+    let mut first = {
+        let (scenario, ds) = tiny_world(6, chaos());
+        EventEngine::new(
+            scenario,
+            AllocatorKind::Eta,
+            AggregationRule::FedAvg,
+            ExecMode::Real { runtime: &rt, train: ds.train, test: ds.test },
+        )
+        .unwrap()
+    };
+    let ck = match first.run_to_checkpoint(&run_opts, None, Some(2)).unwrap() {
+        RunOutcome::Suspended(ck) => *ck,
+        RunOutcome::Finished { .. } => panic!("run finished before its stop point"),
+    };
+
+    let (scenario, ds) = tiny_world(6, CommFaultConfig::disabled());
+    let mut bare = EventEngine::new(
+        scenario,
+        AllocatorKind::Eta,
+        AggregationRule::FedAvg,
+        ExecMode::Real { runtime: &rt, train: ds.train, test: ds.test },
+    )
+    .unwrap();
+    let err = bare.run_to_checkpoint(&run_opts, Some(ck), None).unwrap_err();
+    assert!(
+        err.to_string().contains("comm"),
+        "expected a comm-mismatch error, got: {err:#}"
+    );
+}
+
+// ---------------------------------------------------------------------------
+// degradation semantics
+// ---------------------------------------------------------------------------
+
+#[test]
+fn barrier_completes_under_total_uplink_loss_via_quorum_degradation() {
+    // the synchronous-scheme pathology the paper argues against: a
+    // learner (here: every learner) whose update never arrives. The
+    // boundary must extend to the straggler deadline, then the hard
+    // cap, then fire — degraded, but never stalled.
+    let comm = CommFaultConfig { uplink_loss_prob: 1.0, ..CommFaultConfig::disabled() };
+    let cfg = tiny_config(8, comm);
+    let mut engine = EventEngine::new(
+        cfg.build(),
+        AllocatorKind::Eta,
+        AggregationRule::FedAvg,
+        ExecMode::Phantom,
+    )
+    .unwrap();
+    let records = engine.run(&opts(EnginePolicy::Barrier, 3)).unwrap();
+    assert_eq!(records.len(), 3, "run stalled instead of degrading");
+    assert!(records.iter().all(|r| r.arrived == 0), "a lost update arrived");
+    assert!(
+        engine.stats.degraded_boundaries >= 3,
+        "every boundary fired short, none reported degraded: {:?}",
+        engine.stats
+    );
+    assert_eq!(engine.stats.arrivals, 0);
+}
+
+#[test]
+fn duplicates_are_deduped_exactly_once_at_the_aggregator() {
+    // duplicate_prob = 1 doubles every delivery; at-least-once
+    // delivery, exactly-once aggregation means (almost) every accepted
+    // arrival has exactly one dropped twin — "almost" because the run
+    // may end between a pair's two pops
+    let comm = CommFaultConfig { duplicate_prob: 1.0, ..CommFaultConfig::disabled() };
+    let cfg = tiny_config(20, comm);
+    let mut engine = EventEngine::new(
+        cfg.build(),
+        AllocatorKind::Eta,
+        AggregationRule::FedAvg,
+        ExecMode::Phantom,
+    )
+    .unwrap();
+    engine
+        .run(&opts(EnginePolicy::Async(AsyncAggregator::default()), 4))
+        .unwrap();
+    let s = engine.stats;
+    assert!(s.arrivals > 0, "{s:?}");
+    assert!(
+        s.dupes_dropped >= s.arrivals.saturating_sub(1) && s.dupes_dropped <= s.arrivals,
+        "dedup must drop one twin per accepted arrival: {s:?}"
+    );
+    assert_eq!(s.corrupt_dropped, 0, "{s:?}");
+}
+
+#[test]
+fn corruption_is_caught_by_checksum_and_retried() {
+    let comm = CommFaultConfig { corrupt_prob: 0.5, ..CommFaultConfig::disabled() };
+    let cfg = tiny_config(20, comm);
+    let mut engine = EventEngine::new(
+        cfg.build(),
+        AllocatorKind::Eta,
+        AggregationRule::FedAvg,
+        ExecMode::Phantom,
+    )
+    .unwrap();
+    let records = engine
+        .run(&opts(EnginePolicy::Async(AsyncAggregator::default()), 4))
+        .unwrap();
+    let s = engine.stats;
+    assert!(s.corrupt_dropped > 0, "no corruption caught: {s:?}");
+    // a corrupted round's pending token survives to its timeout, which
+    // re-dispatches it — the slot never starves
+    assert!(s.timeouts > 0, "corrupted rounds never timed out: {s:?}");
+    assert!(s.arrivals > 0, "clean deliveries still flow: {s:?}");
+    assert!(!records.is_empty());
+}

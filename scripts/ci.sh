@@ -11,6 +11,9 @@
 #   scripts/ci.sh fast-numerics
 #                          cargo check --all-targets plus the tolerance +
 #                          determinism suites under --features fast-numerics
+#   scripts/ci.sh chaos    the comm-fault determinism matrix
+#                          (rust/tests/comm_faults.rs) plus a serve
+#                          kill/restore smoke under message loss
 #   scripts/ci.sh bench    every bench target in --smoke config writing
 #                          BENCH_<name>.json, then the regression gate
 #                          (scripts/bench_check.sh vs rust/benches/baseline.json,
@@ -26,7 +29,7 @@
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
-BENCHES=(fig2_staleness fig3_accuracy ablation_bounds solver_bench fleet_scale multi_model real_fleet native_hotpath trace_replay energy_fleet)
+BENCHES=(fig2_staleness fig3_accuracy ablation_bounds solver_bench fleet_scale multi_model real_fleet native_hotpath trace_replay energy_fleet chaos_fleet)
 
 run_lint() {
   echo "=== lint: cargo fmt --check ==="
@@ -109,6 +112,45 @@ run_serve_smoke() {
   echo "serve smoke OK: restored run is bit-identical ($(cat "$work/ref/out/smoke.digest"))"
 }
 
+# Chaos stage: the comm-fault determinism matrix (faults-off oracle,
+# shard/thread bit-identity, checkpoint/resume with in-flight timeouts,
+# quorum-degraded barriers), then the serve kill/restore smoke again —
+# this time under message loss, so the resumed daemon re-arms pending
+# retry timers from the checkpoint and still lands bit-identical.
+run_chaos() {
+  echo "=== chaos: comm-fault determinism matrix ==="
+  cargo test -q --test comm_faults
+
+  echo "=== chaos: serve kill/restore smoke under 10% loss ==="
+  cargo build --release
+  local bin=target/release/asyncmel
+  local work
+  work="$(mktemp -d)"
+  trap 'rm -rf "$work"' RETURN
+
+  local sub='{"id": "lossy", "scenario": {"num_learners": 8, "seed": 42, "comm": {"downlink_loss_prob": 0.1, "uplink_loss_prob": 0.1, "duplicate_prob": 0.1}}, "run": {"cycles": 4, "policy": "async"}}'
+
+  # (a) reference: one uninterrupted pass
+  mkdir -p "$work/ref"
+  printf '%s\n' "$sub" > "$work/ref/lossy.json"
+  "$bin" serve --spool "$work/ref" --once
+
+  # (b) suspend after the first 2-cycle segment (pending timeouts and
+  # retry counters land in the checkpoint), then resume
+  mkdir -p "$work/int"
+  printf '%s\n' "$sub" > "$work/int/lossy.json"
+  "$bin" serve --spool "$work/int" --once --checkpoint-every 2 --stop-after 1
+  test -f "$work/int/ckpt/lossy.ckpt.json" || {
+    echo "chaos smoke: expected a checkpoint after the suspended pass" >&2
+    exit 1
+  }
+  "$bin" serve --spool "$work/int" --once
+
+  cmp "$work/ref/out/lossy.digest" "$work/int/out/lossy.digest"
+  cmp "$work/ref/out/lossy.result.json" "$work/int/out/lossy.result.json"
+  echo "chaos smoke OK: lossy restored run is bit-identical ($(cat "$work/ref/out/lossy.digest"))"
+}
+
 # fast-numerics stage: the relaxed batched kernels must still compile
 # everywhere and hold the tolerance + batch-invariance contract
 # (rust/tests/batched_backend.rs; the bitwise differentials are
@@ -177,6 +219,7 @@ case "$STAGE" in
   lint) run_lint ;;
   test) run_test ;;
   serve-smoke) run_serve_smoke ;;
+  chaos) run_chaos ;;
   fast-numerics) run_fast_numerics ;;
   bench) run_bench ;;
   bench-full) run_bench_full ;;
@@ -184,12 +227,13 @@ case "$STAGE" in
   all)
     run_lint
     run_test
+    run_chaos
     run_fast_numerics
     run_bench
     run_docs
     ;;
   *)
-    echo "usage: scripts/ci.sh [all|lint|test|serve-smoke|fast-numerics|bench|bench-full|docs]" >&2
+    echo "usage: scripts/ci.sh [all|lint|test|serve-smoke|chaos|fast-numerics|bench|bench-full|docs]" >&2
     exit 2
     ;;
 esac
